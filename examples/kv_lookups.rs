@@ -1,0 +1,50 @@
+//! Key-value lookups at rack scale — the paper's core workload (§6.2.1),
+//! on the calibrated cluster simulator.
+//!
+//! Sweeps the three Storm configurations over node counts and prints the
+//! Figure-4-shaped series, plus a NIC-generation comparison showing how
+//! the same dataplane behaves on CX3-class hardware (why the prior-work
+//! designs made the choices they did).
+//!
+//! Run: `cargo run --release --example kv_lookups [nodes]`
+
+use storm::cluster::{SimConfig, StormMode, SystemKind, World};
+use storm::nic::NicGen;
+use storm::sim::MICRO;
+
+fn base(mode: StormMode, nodes: u32) -> SimConfig {
+    let mut cfg = SimConfig::new(SystemKind::Storm(mode), nodes);
+    cfg.threads = 4;
+    cfg.keys_per_node = 10_000;
+    cfg.warmup = 150 * MICRO;
+    cfg.measure = 600 * MICRO;
+    if mode == StormMode::RpcOnly {
+        cfg.occupancy = 1.6;
+    } else {
+        cfg.occupancy = 0.45;
+    }
+    cfg
+}
+
+fn main() {
+    let max_nodes: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    println!("# KV lookups: Storm configurations vs cluster size (CX4, IB EDR)");
+    for mode in [StormMode::RpcOnly, StormMode::OneTwoSided, StormMode::Perfect] {
+        let mut n = 4;
+        while n <= max_nodes {
+            let report = World::new(base(mode, n)).run();
+            println!("{}", report.row());
+            n *= 2;
+        }
+    }
+
+    println!("\n# Same dataplane, older NIC (CX3-class): the hardware the");
+    println!("# prior systems were designed around");
+    for gen in [NicGen::Cx3, NicGen::Cx4, NicGen::Cx5] {
+        let mut cfg = base(StormMode::OneTwoSided, 8);
+        cfg.nic = gen;
+        let mut report = World::new(cfg).run();
+        report.label = format!("Storm(oversub)/{}", gen.params().name);
+        println!("{}", report.row());
+    }
+}

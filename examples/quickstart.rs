@@ -1,0 +1,63 @@
+//! Quickstart: the Storm API on an in-process reference cluster.
+//!
+//! Demonstrates the paper's two API surfaces (Tables 2 and 3):
+//! * transactional: start_tx / add_to_read_set / add_to_write_set / commit
+//! * data structure callbacks: lookup_start / lookup_end / rpc_handler
+//!   (implemented by the MICA hash table)
+//!
+//! Run: `cargo run --example quickstart`
+
+use storm::dataplane::local::LocalCluster;
+use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::ds::api::ObjectId;
+use storm::ds::mica::MicaConfig;
+
+const KV: ObjectId = ObjectId(0);
+
+fn main() {
+    // A 4-node cluster, each node holding a shard of one hash table.
+    let cfg = MicaConfig { buckets: 1 << 14, width: 1, value_len: 112, store_values: false };
+    let mut cluster = LocalCluster::new(4, vec![(KV, cfg)]);
+
+    // Populate 10k items (round-robin to their hash owners).
+    cluster.load(KV, 1..=10_000);
+    println!("loaded 10k items across 4 shards");
+
+    // --- One-two-sided lookups -----------------------------------------
+    let mut client = cluster.client(false);
+    let mut reads = 0;
+    let mut rpcs = 0;
+    for key in [1u64, 42, 999, 5_000, 9_999] {
+        let res = cluster.run_lookup(&mut client, KV, key);
+        assert!(res.found);
+        reads += res.reads;
+        rpcs += res.rpcs;
+        println!(
+            "lookup({key:>5}) -> version {} at node {} ({} read(s), {} rpc(s))",
+            res.version, res.node, res.reads, res.rpcs
+        );
+    }
+    println!("one-two-sided mix: {reads} one-sided reads, {rpcs} rpc fallbacks\n");
+
+    // --- A read-write transaction ---------------------------------------
+    // Read keys 1..3, update key 10, insert key 20_000, all atomically.
+    let outcome = cluster.run_tx(
+        &mut client,
+        vec![TxItem::read(KV, 1), TxItem::read(KV, 2), TxItem::read(KV, 3)],
+        vec![TxItem::update(KV, 10), TxItem::insert(KV, 20_000)],
+    );
+    match outcome {
+        TxOutcome::Committed { write_results } => {
+            println!("transaction committed: {write_results:?}");
+        }
+        TxOutcome::Aborted(reason) => println!("transaction aborted: {reason:?}"),
+    }
+
+    // The update bumped key 10's version; the insert is visible.
+    let v10 = cluster.run_lookup(&mut client, KV, 10);
+    let v20k = cluster.run_lookup(&mut client, KV, 20_000);
+    println!("key 10 now at version {}; key 20000 found = {}", v10.version, v20k.found);
+    assert_eq!(v10.version, 2);
+    assert!(v20k.found);
+    println!("\nquickstart OK");
+}

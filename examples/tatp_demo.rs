@@ -1,0 +1,69 @@
+//! TATP on Storm (paper §6.2.3): correctness on the reference driver plus
+//! throughput on the simulator.
+//!
+//! Part 1 runs real TATP transactions through the transactional protocol
+//! on the in-process reference cluster and verifies database invariants
+//! afterwards. Part 2 reproduces the Figure-6 comparison point.
+//!
+//! Run: `cargo run --release --example tatp_demo`
+
+use storm::cluster::{SimConfig, StormMode, SystemKind, WorkloadKind, World};
+use storm::dataplane::local::LocalCluster;
+use storm::dataplane::tx::TxOutcome;
+use storm::ds::mica::MicaConfig;
+use storm::sim::{Pcg64, MICRO};
+use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
+
+fn main() {
+    // --- Part 1: semantic check on the reference driver -----------------
+    let subscribers = 2_000u64;
+    let cfg = MicaConfig { buckets: 1 << 13, width: 2, value_len: 112, store_values: false };
+    let objects = (0..4).map(|o| (storm::ds::api::ObjectId(o), cfg.clone())).collect();
+    let mut cluster = LocalCluster::new(4, objects);
+    for (obj, key) in TatpPopulation::new(subscribers).rows(7) {
+        cluster.load(obj, std::iter::once(key));
+    }
+    let workload = TatpWorkload::new(subscribers);
+    let mut rng = Pcg64::seeded(99);
+    let mut client = cluster.client(false);
+    let (mut commits, mut aborts) = (0u32, 0u32);
+    let mut by_kind = std::collections::HashMap::new();
+    for _ in 0..2_000 {
+        let tx = workload.next_tx(&mut rng);
+        let kind = tx.kind;
+        match cluster.run_tx(&mut client, tx.read_set, tx.write_set) {
+            TxOutcome::Committed { .. } => {
+                commits += 1;
+                *by_kind.entry(kind).or_insert(0u32) += 1;
+            }
+            TxOutcome::Aborted(_) => aborts += 1,
+        }
+    }
+    println!("reference driver: {commits} commits, {aborts} aborts");
+    for (kind, n) in &by_kind {
+        println!("  {kind:?}: {n}");
+    }
+    assert_eq!(aborts, 0, "single-client run must not abort");
+    // Every subscriber row must still resolve (updates never drop rows).
+    for s in 1..=subscribers {
+        assert!(cluster.run_lookup(&mut client, tatp::SUBSCRIBER, s).found);
+    }
+    println!("subscriber table intact after mixed workload\n");
+
+    // --- Part 2: Figure-6 point on the simulator ------------------------
+    println!("# TATP throughput, 16 nodes (Fig. 6 point)");
+    for (label, mode, occ) in [
+        ("Storm", StormMode::RpcOnly, 1.6),
+        ("Storm(oversub)", StormMode::OneTwoSided, 0.45),
+    ] {
+        let mut cfg = SimConfig::new(SystemKind::Storm(mode), 16);
+        cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 2_000 };
+        cfg.threads = 4;
+        cfg.occupancy = occ;
+        cfg.warmup = 150 * MICRO;
+        cfg.measure = 800 * MICRO;
+        let mut report = World::new(cfg).run();
+        report.label = label.into();
+        println!("{}", report.row());
+    }
+}

@@ -1,0 +1,66 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text — not serialized HloModuleProto — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the Rust binary is then
+self-contained. Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model
+from .kernels import BLOCK
+
+# Batch size baked into the artifacts (rust/src/runtime BATCH must match).
+BATCH = 64
+assert BATCH % BLOCK == 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lookup():
+    vec = jax.ShapeDtypeStruct((BATCH,), jnp.uint64)
+    scalar = jax.ShapeDtypeStruct((), jnp.uint64)
+    return jax.jit(model.lookup_resolve).lower(vec, scalar, scalar, scalar)
+
+
+def lower_validate():
+    vec = jax.ShapeDtypeStruct((BATCH,), jnp.uint64)
+    return jax.jit(model.validate).lower(vec, vec, vec, vec, vec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lowered in [
+        ("lookup_batch", lower_lookup()),
+        ("validate_batch", lower_validate()),
+    ]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

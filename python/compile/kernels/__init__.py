@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for the Storm dataplane (build-time only)."""
+
+from .hash_kernel import BLOCK, hash_batch, mix
+from .validate_kernel import validate_batch
+
+__all__ = ["BLOCK", "hash_batch", "mix", "validate_batch"]

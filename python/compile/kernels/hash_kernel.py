@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: batched Storm key hashing.
+
+Computes the dataplane's key hash — FNV-1a over the key's 8 little-endian
+bytes followed by a murmur3-style ``fmix64`` avalanche — for a block of
+keys at a time. This is the compute hot-spot of Storm's ``lookup_start``
+path: every request needs its owner node, bucket index and byte offset
+derived from this hash, and the live dataplane resolves requests in
+batches (see ``rust/src/runtime``).
+
+Must stay bit-identical to ``rust/src/ds/mica.rs::fnv1a64`` — the pytest
+suite pins golden vectors shared with the Rust unit tests, and
+``storm verify-runtime`` cross-checks the compiled artifact against the
+Rust reference at CI time.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the kernel is integer VPU
+work, not MXU; blocks of ``BLOCK`` keys are sized to stay VMEM-resident
+and the BlockSpec streams the batch dimension HBM->VMEM. ``interpret=True``
+is mandatory on this CPU-only image — real-TPU lowering emits a Mosaic
+custom call the CPU PJRT client cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Keys per kernel block (one VMEM tile of u64 lanes).
+BLOCK = 64
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_FMIX_1 = 0xFF51AFD7ED558CCD
+_FMIX_2 = 0xC4CEB9FE1A85EC53
+
+
+def _u64(x):
+    return jnp.uint64(x)
+
+
+def mix(h):
+    """The hash body on a uint64 vector (shared with ref.py)."""
+    keys = h.astype(jnp.uint64)
+    acc = jnp.full_like(keys, _u64(_FNV_OFFSET))
+    for i in range(8):
+        byte = (keys >> _u64(8 * i)) & _u64(0xFF)
+        acc = (acc ^ byte) * _u64(_FNV_PRIME)
+    # fmix64 avalanche.
+    acc = acc ^ (acc >> _u64(33))
+    acc = acc * _u64(_FMIX_1)
+    acc = acc ^ (acc >> _u64(33))
+    acc = acc * _u64(_FMIX_2)
+    acc = acc ^ (acc >> _u64(33))
+    return acc
+
+
+def _hash_kernel(keys_ref, out_ref):
+    out_ref[...] = mix(keys_ref[...])
+
+
+def hash_batch(keys):
+    """Hash a 1-D uint64 key array (length a multiple of BLOCK)."""
+    n = keys.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    return pl.pallas_call(
+        _hash_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(keys.astype(jnp.uint64))

@@ -1,0 +1,66 @@
+"""Pure-jnp (and pure-python) oracles for the Pallas kernels.
+
+The pytest suite asserts the Pallas kernels against these references over
+hypothesis-generated inputs; the python-int implementation additionally
+pins golden vectors shared with the Rust unit tests
+(``rust/src/ds/mica.rs``), closing the L1 <-> L3 loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+_MASK64 = (1 << 64) - 1
+
+# Golden vectors (also asserted in rust tests vs ds::mica::fnv1a64).
+GOLDEN = {
+    0: 0x7BD3144F29C0CC9E,
+    1: 0x4A3A3A4BA6523826,
+    0xDEADBEEF: 0x757A3F93CBB3BF34,
+}
+
+
+def hash_py(key: int) -> int:
+    """Python-int reference: FNV-1a(8 LE bytes) + fmix64."""
+    h = 0xCBF29CE484222325
+    for i in range(8):
+        h ^= (key >> (8 * i)) & 0xFF
+        h = (h * 0x100000001B3) & _MASK64
+    h ^= h >> 33
+    h = (h * 0xFF51AFD7ED558CCD) & _MASK64
+    h ^= h >> 33
+    h = (h * 0xC4CEB9FE1A85EC53) & _MASK64
+    h ^= h >> 33
+    return h
+
+
+def hash_ref(keys):
+    """Vectorized jnp reference (no pallas)."""
+    keys = jnp.asarray(keys, dtype=jnp.uint64)
+    h = jnp.full_like(keys, jnp.uint64(0xCBF29CE484222325))
+    for i in range(8):
+        b = (keys >> jnp.uint64(8 * i)) & jnp.uint64(0xFF)
+        h = (h ^ b) * jnp.uint64(0x100000001B3)
+    h = h ^ (h >> jnp.uint64(33))
+    h = h * jnp.uint64(0xFF51AFD7ED558CCD)
+    h = h ^ (h >> jnp.uint64(33))
+    h = h * jnp.uint64(0xC4CEB9FE1A85EC53)
+    h = h ^ (h >> jnp.uint64(33))
+    return h
+
+
+def validate_ref(ek, ok, ev, ov, lk):
+    """jnp reference for the validation kernel."""
+    to = lambda a: jnp.asarray(a, dtype=jnp.uint64)
+    good = (to(ek) == to(ok)) & (to(ev) == to(ov)) & (to(lk) == jnp.uint64(0))
+    return good.astype(jnp.uint64)
+
+
+def resolve_ref(keys, nodes: int, bucket_mask: int, bucket_bytes: int):
+    """jnp reference for the full L2 lookup-resolve graph."""
+    h = hash_ref(keys)
+    owner = (h >> jnp.uint64(40)) % jnp.uint64(nodes)
+    bucket = h & jnp.uint64(bucket_mask)
+    offset = bucket * jnp.uint64(bucket_bytes)
+    return owner, bucket, offset

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: batched OCC validation.
+
+Storm's validation phase re-reads each read-set item's inline metadata and
+checks (key unchanged, version unchanged, not write-locked). The live
+dataplane validates whole read sets at once; this kernel does the
+element-wise comparison for a block of items.
+
+All operands are uint64 (versions/lock flags are widened by the caller) so
+a single VMEM tile layout serves every input.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+from .hash_kernel import BLOCK
+
+
+def _validate_kernel(ek_ref, ok_ref, ev_ref, ov_ref, lk_ref, out_ref):
+    good = (
+        (ek_ref[...] == ok_ref[...])
+        & (ev_ref[...] == ov_ref[...])
+        & (lk_ref[...] == jnp.uint64(0))
+    )
+    out_ref[...] = good.astype(jnp.uint64)
+
+
+def validate_batch(expect_keys, observed_keys, expect_vers, observed_vers, locked):
+    """Element-wise OCC check over uint64 arrays; returns 0/1 per item."""
+    n = expect_keys.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    args = [
+        a.astype(jnp.uint64)
+        for a in (expect_keys, observed_keys, expect_vers, observed_vers, locked)
+    ]
+    return pl.pallas_call(
+        _validate_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        grid=(n // BLOCK,),
+        in_specs=[spec] * 5,
+        out_specs=spec,
+        interpret=True,
+    )(*args)

@@ -1,0 +1,39 @@
+"""L2: the JAX compute graphs Storm offloads, calling the L1 kernels.
+
+Storm's per-request compute is address resolution (``lookup_start``) and
+OCC validation — both batchable. These graphs are what ``aot.py`` lowers
+to HLO text; the Rust coordinator executes them via PJRT on its hot path
+(``rust/src/runtime``), so the functions here must take/return only
+fixed-shape uint64 arrays and scalars.
+
+Keeping owner/bucket derivation here (L2, plain jnp) and the hash itself
+in the Pallas kernel (L1) mirrors the intended TPU split: the hash is the
+vectorizable hot loop, the derivation is cheap glue XLA fuses around it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import hash_batch, validate_batch
+
+
+def lookup_resolve(keys, nodes, bucket_mask, bucket_bytes):
+    """Batched ``lookup_start``: (owner, bucket, offset) per key.
+
+    ``keys``: uint64[B]; ``nodes``/``bucket_mask``/``bucket_bytes``:
+    uint64 scalars (runtime cluster geometry — not baked into the
+    artifact, so one artifact serves any cluster size).
+    """
+    h = hash_batch(keys)
+    owner = (h >> jnp.uint64(40)) % nodes
+    bucket = h & bucket_mask
+    offset = bucket * bucket_bytes
+    return owner, bucket, offset
+
+
+def validate(expect_keys, observed_keys, expect_vers, observed_vers, locked):
+    """Batched OCC validation; 1 = read-set entry still valid."""
+    ok = validate_batch(expect_keys, observed_keys, expect_vers, observed_vers, locked)
+    return (ok,)

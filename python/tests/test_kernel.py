@@ -1,0 +1,100 @@
+"""L1 kernel correctness: Pallas vs pure-jnp/pure-python references.
+
+The CORE correctness signal for the compile path: hypothesis sweeps shapes
+and values, golden vectors pin cross-language agreement with the Rust
+implementation (rust/src/ds/mica.rs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import BLOCK, hash_batch, validate_batch
+from compile.kernels.ref import GOLDEN, hash_py, hash_ref, validate_ref
+
+
+def u64s(n):
+    return st.lists(
+        st.integers(min_value=0, max_value=(1 << 64) - 1), min_size=n, max_size=n
+    )
+
+
+class TestHashKernel:
+    def test_golden_vectors(self):
+        keys = np.array(sorted(GOLDEN.keys()), dtype=np.uint64)
+        keys = np.resize(keys, BLOCK)  # pad by repetition
+        out = np.asarray(hash_batch(jnp.asarray(keys)))
+        for k, v in GOLDEN.items():
+            idx = int(np.where(keys == np.uint64(k))[0][0])
+            assert out[idx] == np.uint64(v), hex(int(out[idx]))
+
+    def test_matches_python_reference_exhaustive_small(self):
+        keys = np.arange(BLOCK, dtype=np.uint64)
+        out = np.asarray(hash_batch(jnp.asarray(keys)))
+        for i, k in enumerate(keys):
+            assert int(out[i]) == hash_py(int(k)), f"key {k}"
+
+    @settings(max_examples=30, deadline=None)
+    @given(u64s(BLOCK))
+    def test_matches_jnp_reference(self, vals):
+        keys = jnp.asarray(np.array(vals, dtype=np.uint64))
+        np.testing.assert_array_equal(
+            np.asarray(hash_batch(keys)), np.asarray(hash_ref(keys))
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=4), u64s(BLOCK))
+    def test_multiblock_grids(self, blocks, vals):
+        base = np.array(vals, dtype=np.uint64)
+        keys = np.tile(base, blocks)
+        out = np.asarray(hash_batch(jnp.asarray(keys)))
+        # Every block computes the same function.
+        for b in range(blocks):
+            np.testing.assert_array_equal(out[b * BLOCK : (b + 1) * BLOCK], out[:BLOCK])
+
+    def test_rejects_ragged_batch(self):
+        with pytest.raises(AssertionError):
+            hash_batch(jnp.zeros(BLOCK + 1, dtype=jnp.uint64))
+
+    def test_avalanche(self):
+        keys = np.arange(1, BLOCK + 1, dtype=np.uint64)
+        flipped = keys ^ np.uint64(1)
+        a = np.asarray(hash_batch(jnp.asarray(keys)))
+        b = np.asarray(hash_batch(jnp.asarray(flipped)))
+        bits = np.unpackbits((a ^ b).view(np.uint8)).sum() / BLOCK
+        assert 24 <= bits <= 40, bits
+
+
+class TestValidateKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(u64s(BLOCK), u64s(BLOCK), u64s(BLOCK), u64s(BLOCK))
+    def test_matches_reference(self, ek, ok, ev, ov):
+        lk = [v % 2 for v in ek]
+        args = [jnp.asarray(np.array(a, dtype=np.uint64)) for a in (ek, ok, ev, ov, lk)]
+        np.testing.assert_array_equal(
+            np.asarray(validate_batch(*args)), np.asarray(validate_ref(*args))
+        )
+
+    def test_all_valid_and_each_failure_mode(self):
+        n = BLOCK
+        ek = np.arange(1, n + 1, dtype=np.uint64)
+        base = [ek, ek.copy(), ek * 7, ek * 7, np.zeros(n, dtype=np.uint64)]
+        out = np.asarray(validate_batch(*[jnp.asarray(a) for a in base]))
+        assert out.sum() == n, "clean read set must fully validate"
+        # Key moved.
+        moved = [a.copy() for a in base]
+        moved[1][3] ^= np.uint64(0xFF)
+        out = np.asarray(validate_batch(*[jnp.asarray(a) for a in moved]))
+        assert out[3] == 0 and out.sum() == n - 1
+        # Version bumped.
+        bumped = [a.copy() for a in base]
+        bumped[3][5] += np.uint64(1)
+        out = np.asarray(validate_batch(*[jnp.asarray(a) for a in bumped]))
+        assert out[5] == 0 and out.sum() == n - 1
+        # Locked.
+        locked = [a.copy() for a in base]
+        locked[4][7] = np.uint64(1)
+        out = np.asarray(validate_batch(*[jnp.asarray(a) for a in locked]))
+        assert out[7] == 0 and out.sum() == n - 1

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig1_nic_generations` — regenerates: Figure 1 — NIC generations, read throughput vs connections.
+//!
+//! Pass `--full` for the full-length run recorded in EXPERIMENTS.md
+//! (quick mode is CI-speed and shape-accurate).
+
+use storm::bench::BenchOpts;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = !args.iter().any(|a| a == "--full");
+    let opts = BenchOpts { quick, threads: 8 };
+    storm::bench::fig1(opts.quick);
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig5_comparison` — regenerates: Figure 5 — Storm vs eRPC vs FaRM vs LITE.
+//!
+//! Pass `--full` for the full-length run recorded in EXPERIMENTS.md
+//! (quick mode is CI-speed and shape-accurate).
+
+use storm::bench::BenchOpts;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = !args.iter().any(|a| a == "--full");
+    let opts = BenchOpts { quick, threads: 8 };
+    storm::bench::fig5(opts);
+}

@@ -1,0 +1,96 @@
+//! `cargo bench --bench micro` — component microbenchmarks for the §Perf
+//! pass: hot-path costs of the simulator substrate and dataplane pieces,
+//! measured in ns/op with a simple calibrated-loop harness (criterion is
+//! unavailable in the offline build environment).
+
+use std::time::Instant;
+
+use storm::cluster::{SimConfig, StormMode, SystemKind, World};
+use storm::ds::api::ObjectId;
+use storm::ds::mica::{fnv1a64, MicaConfig, MicaTable};
+use storm::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable};
+use storm::nic::{EntryKey, Nic, NicCache, NicGen, NicOp, NicSide};
+use storm::sim::{EventQueue, Pcg64, MICRO};
+
+/// Run `f` enough times to measure; report ns/op.
+fn bench<F: FnMut(u64) -> u64>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warmup.
+    let mut sink = 0u64;
+    for i in 0..iters / 10 + 1 {
+        sink = sink.wrapping_add(f(i));
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        sink = sink.wrapping_add(f(i));
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<42} {ns:>9.1} ns/op   (sink {sink:x})");
+    ns
+}
+
+fn main() {
+    println!("# micro benchmarks (component hot paths)");
+
+    bench("hash/fnv1a64+fmix", 20_000_000, |i| fnv1a64(i));
+
+    let mut rng = Pcg64::seeded(1);
+    bench("rng/pcg64.next_u64", 50_000_000, |_| rng.next_u64());
+
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng2 = Pcg64::seeded(2);
+    for i in 0..4096 {
+        q.push_at(i * 10, i);
+    }
+    bench("sim/event_queue push+pop (4k resident)", 10_000_000, |i| {
+        let ev = q.pop().unwrap();
+        q.push_at(ev.at + rng2.gen_range(1000), i);
+        ev.at
+    });
+
+    let mut cache = NicCache::new(2 << 20);
+    let mut rng3 = Pcg64::seeded(3);
+    bench("nic/cache access (50% fit)", 10_000_000, |_| {
+        cache.access(EntryKey::Mtt(rng3.gen_range(400_000)), 8) as u64
+    });
+
+    let mut nic = Nic::new(NicGen::Cx4.params());
+    let mut rng4 = Pcg64::seeded(4);
+    bench("nic/process (cost+admit)", 5_000_000, |i| {
+        let op = NicOp::requester(NicSide::ReqTx, rng4.gen_range(256), 128);
+        nic.process(i * 50, &op).0
+    });
+
+    let mut regions = RegionTable::new();
+    let mut alloc = ContiguousAllocator::new(64 << 20, 32, RegionMode::Virtual(PageSize::Huge2M));
+    let cfg = MicaConfig { buckets: 1 << 16, width: 1, value_len: 112, store_values: false };
+    let mut table = MicaTable::new(cfg, &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+    for k in 1..=40_000u64 {
+        table.insert(k, None, &mut alloc, &mut regions);
+    }
+    let mut rng5 = Pcg64::seeded(5);
+    bench("ds/mica get (40k keys, 0.6 occ)", 5_000_000, |_| {
+        let (r, _) = table.get(rng5.gen_range(40_000) + 1);
+        matches!(r, storm::ds::api::RpcResult::Value { .. }) as u64
+    });
+    bench("ds/mica bucket_view", 5_000_000, |_| {
+        table.bucket_view(rng5.gen_range(1 << 16)).slots.len() as u64
+    });
+
+    let _ = ObjectId(0);
+
+    // End-to-end simulator throughput: the number that gates how long the
+    // paper-figure sweeps take (§Perf target: >= 2M events/s).
+    let mut cfg = SimConfig::new(SystemKind::Storm(StormMode::OneTwoSided), 8);
+    cfg.threads = 4;
+    cfg.keys_per_node = 10_000;
+    cfg.warmup = 100 * MICRO;
+    cfg.measure = 2_000 * MICRO;
+    let report = World::new(cfg).run();
+    println!(
+        "{:<42} {:>9.2} M events/s  ({} events in {:.0} ms wall)",
+        "sim/world end-to-end",
+        report.events_per_sec() / 1e6,
+        report.events,
+        report.wall_ns as f64 / 1e6
+    );
+}

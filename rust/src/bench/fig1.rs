@@ -1,0 +1,316 @@
+//! Figure 1 — CX3 vs CX4 vs CX5 read throughput vs. connection count —
+//! and the §3.4 read-vs-UD breakeven study.
+//!
+//! This is the paper's two-machine microbenchmark: one machine issues
+//! random 64-byte one-sided reads over 20 GB of the other's memory (2 MB
+//! pages; plus a CX5 variant with 4 KB pages and 1024 memory regions), with
+//! the number of RC connections swept from 1 to ~10k. It exercises the NIC
+//! model directly — PUs, state cache, connection penalty — without the full
+//! cluster world, exactly like the paper isolates the NIC.
+
+use crate::mem::{PageSize, RegionMode, RegionTable};
+use crate::nic::{Nic, NicGen, NicOp, NicSide};
+use crate::sim::{EventQueue, Nanos, Pcg64, SECOND};
+
+/// One measured point.
+#[derive(Clone, Debug)]
+pub struct Fig1Point {
+    /// Series label (e.g. "CX5", "4KB,1024MR (CX5)").
+    pub series: String,
+    /// Connections used round-robin.
+    pub connections: u32,
+    /// Measured million reads per second.
+    pub mreads_per_sec: f64,
+}
+
+/// 20 GB of registered memory split over `mrs` regions (Fig. 1 setup).
+pub struct MemLayout {
+    regions: RegionTable,
+    region_lens: Vec<u64>,
+}
+
+impl MemLayout {
+    /// 20 GB in `mrs` regions with the given page size.
+    fn new(total: u64, mrs: u32, page: PageSize) -> Self {
+        let mut regions = RegionTable::new();
+        let per = total / mrs as u64;
+        let mut region_lens = Vec::new();
+        for _ in 0..mrs {
+            regions.register(per, RegionMode::Virtual(page));
+            region_lens.push(per);
+        }
+        MemLayout { regions, region_lens }
+    }
+
+    /// Total MTT entries across regions.
+    fn total_mtt_entries(&self) -> u64 {
+        self.regions.mtt_entries()
+    }
+
+    /// Random read target: (mpt id, first mtt entry).
+    fn sample(&self, rng: &mut Pcg64, len: u64) -> (u64, Option<(u64, u32)>) {
+        let mr = rng.gen_index(self.region_lens.len());
+        let off = rng.gen_range(self.region_lens[mr] - len);
+        let key = crate::mem::MrKey(mr as u32);
+        let mut it = self.regions.mtt_entries_for(key, off, len);
+        let first = it.next();
+        (mr as u64, first.map(|f| (f, 1)))
+    }
+}
+
+/// Pipeline stage of an in-flight microbenchmark op.
+#[derive(Clone, Copy, Debug)]
+enum Stage {
+    /// Requester/client transmit.
+    Tx { conn: u64 },
+    /// Remote NIC services the request.
+    Rx { conn: u64 },
+    /// Server transmits the RPC response (UD benchmark only).
+    TxResp { conn: u64 },
+    /// Requester/client receives response / raises CQE.
+    Cqe { conn: u64 },
+}
+
+/// Closed-loop 2-node read microbenchmark: `window` outstanding reads
+/// across `conns` connections; returns Mreads/s. Each pipeline stage is a
+/// separate event so NIC occupancy is charged in true time order.
+pub fn read_microbench(
+    gen: NicGen,
+    conns: u32,
+    layout: &mut MemLayout,
+    read_bytes: u32,
+    duration: Nanos,
+) -> f64 {
+    let params = gen.params();
+    let mut requester = Nic::new(params.clone());
+    let mut responder = Nic::new(params.clone());
+    let wire: Nanos = 400; // fixed RoCE-ish one-way for the microbench
+    // Enough outstanding reads to saturate the PUs; connections are
+    // sampled uniformly so the hot-slot and cache miss rates converge to
+    // their steady state independent of the window size.
+    let window = (params.pus * 16).max(64);
+    let mut rng = Pcg64::seeded(0xF16_1 + conns as u64);
+    // Steady-state: warm QP contexts and memory-translation state the way
+    // seconds of real benchmarking would (LRU keeps what fits).
+    requester.prewarm(0..conns as u64, std::iter::empty(), std::iter::empty());
+    responder.prewarm(
+        0..conns as u64,
+        0..layout.region_lens.len() as u64,
+        0..layout.total_mtt_entries(),
+    );
+    let mut q: EventQueue<Stage> = EventQueue::new();
+    for i in 0..window {
+        let conn = rng.gen_range(conns as u64);
+        q.push_at(i as Nanos % 1024, Stage::Tx { conn });
+    }
+    let warmup = duration / 5;
+    let mut measured: u64 = 0;
+    while let Some(ev) = q.pop() {
+        let now = ev.at;
+        if now >= duration {
+            break;
+        }
+        match ev.event {
+            Stage::Tx { conn } => {
+                let op = NicOp::requester(NicSide::ReqTx, conn, 16);
+                let (f, _) = requester.process(now, &op);
+                q.push_at(f + wire, Stage::Rx { conn });
+            }
+            Stage::Rx { conn } => {
+                let (mpt, mtt) = layout.sample(&mut rng, read_bytes as u64);
+                let op = NicOp {
+                    side: NicSide::RespRead,
+                    qp: conn,
+                    len: read_bytes,
+                    mpt: Some(mpt),
+                    mtt,
+                    extra_ns: 0.0,
+                    extra_hold_ns: 0.0,
+                };
+                let (f, _) = responder.process(now, &op);
+                q.push_at(f + wire, Stage::Cqe { conn });
+            }
+            Stage::Cqe { conn } => {
+                let op = NicOp::requester(NicSide::ReqRxCqe, conn, 0);
+                let (f, _) = requester.process(now, &op);
+                if f >= warmup && f < duration {
+                    measured += 1;
+                }
+                // Reissue on a fresh random connection.
+                let next = rng.gen_range(conns as u64);
+                q.push_at(f, Stage::Tx { conn: next });
+            }
+            Stage::TxResp { .. } => unreachable!("reads have no response tx"),
+        }
+    }
+    measured as f64 * (SECOND as f64 / (duration - warmup) as f64) / 1e6
+}
+
+/// UD send/recv RPC microbenchmark (the §3.4 comparator): request +
+/// response datagrams, one QP per side; returns M RPCs/s.
+pub fn ud_rpc_microbench(gen: NicGen, duration: Nanos) -> f64 {
+    let params = gen.params();
+    let mut client = Nic::new(params.clone());
+    let mut server = Nic::new(params.clone());
+    let wire: Nanos = 400;
+    let window = (params.pus * 16).max(64);
+    let extra = 0.4 * params.pu_service_ns;
+    let mut q: EventQueue<Stage> = EventQueue::new();
+    for i in 0..window {
+        q.push_at(i as Nanos * 7, Stage::Tx { conn: 1 });
+    }
+    let warmup = duration / 5;
+    let mut measured: u64 = 0;
+    while let Some(ev) = q.pop() {
+        let now = ev.at;
+        if now >= duration {
+            break;
+        }
+        match ev.event {
+            Stage::Tx { conn } => {
+                let mut tx = NicOp::requester(NicSide::ReqTx, conn, 64);
+                tx.extra_ns = extra;
+                let (f, _) = client.process(now, &tx);
+                q.push_at(f + wire, Stage::Rx { conn: 2 });
+            }
+            Stage::Rx { conn } => {
+                let rx = NicOp::requester(NicSide::RespRecvUd, conn, 64);
+                let (f, _) = server.process(now, &rx);
+                q.push_at(f, Stage::TxResp { conn });
+            }
+            Stage::TxResp { conn } => {
+                let mut tx = NicOp::requester(NicSide::ReqTx, conn, 128);
+                tx.extra_ns = extra;
+                let (f, _) = server.process(now, &tx);
+                q.push_at(f + wire, Stage::Cqe { conn: 1 });
+            }
+            Stage::Cqe { conn } => {
+                let rx = NicOp::requester(NicSide::RespRecvUd, conn, 128);
+                let (f, _) = client.process(now, &rx);
+                if f >= warmup && f < duration {
+                    measured += 1;
+                }
+                q.push_at(f, Stage::Tx { conn });
+            }
+        }
+    }
+    measured as f64 * (SECOND as f64 / (duration - warmup) as f64) / 1e6
+}
+
+/// One-call probe: read throughput for a (generation, connections, memory
+/// layout) point. Used by tests, the breakeven study and debugging.
+pub fn read_probe(gen: NicGen, conns: u32, mrs: u32, page: PageSize, duration: Nanos) -> f64 {
+    let mut layout = MemLayout::new(20u64 << 30, mrs, page);
+    read_microbench(gen, conns, &mut layout, 64, duration)
+}
+
+/// Run the Figure 1 sweep. `quick` shortens the per-point duration.
+pub fn fig1(quick: bool) -> Vec<Fig1Point> {
+    let duration: Nanos = if quick { 400_000 } else { 2_000_000 };
+    let conn_counts: &[u32] = &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 5000, 10_000];
+    let total = 20u64 << 30;
+    let mut out = Vec::new();
+    println!("# Figure 1: per-machine read throughput (Mreads/s) vs #connections");
+    println!("# 64B random reads over 20GB; 2MB pages unless noted");
+    print!("{:<18}", "series");
+    for c in conn_counts {
+        print!("{c:>9}");
+    }
+    println!();
+    let series: Vec<(String, NicGen, u32, PageSize)> = vec![
+        ("CX3".into(), NicGen::Cx3, 1, PageSize::Huge2M),
+        ("CX4".into(), NicGen::Cx4, 1, PageSize::Huge2M),
+        ("CX5".into(), NicGen::Cx5, 1, PageSize::Huge2M),
+        ("4KB,1024MR(CX5)".into(), NicGen::Cx5, 1024, PageSize::Small4K),
+    ];
+    for (name, gen, mrs, page) in series {
+        print!("{name:<18}");
+        for &c in conn_counts {
+            let mut layout = MemLayout::new(total, mrs, page);
+            let m = read_microbench(gen, c, &mut layout, 64, duration);
+            print!("{m:>9.1}");
+            out.push(Fig1Point { series: name.clone(), connections: c, mreads_per_sec: m });
+        }
+        println!();
+    }
+    out
+}
+
+/// §3.4: how many connections until one-sided reads fall to the UD
+/// send/recv RPC rate on CX5 (paper: 2500–3800).
+pub fn breakeven(quick: bool) -> (f64, u32) {
+    let duration: Nanos = if quick { 400_000 } else { 2_000_000 };
+    let ud = ud_rpc_microbench(NicGen::Cx5, duration);
+    println!("# Breakeven study (CX5): UD send/recv RPC rate = {ud:.1} M/s");
+    let total = 20u64 << 30;
+    let mut crossing = 0;
+    for c in [64u32, 128, 256, 512, 1024, 1536, 2048, 2560, 3072, 3584, 4096, 5120, 8192] {
+        let mut layout = MemLayout::new(total, 1, PageSize::Huge2M);
+        let reads = read_microbench(NicGen::Cx5, c, &mut layout, 64, duration);
+        let marker = if reads < ud && crossing == 0 { " <-- breakeven" } else { "" };
+        if reads < ud && crossing == 0 {
+            crossing = c;
+        }
+        println!("conns={c:>5}  reads={reads:>7.1} M/s  ud_rpc={ud:>6.1} M/s{marker}");
+    }
+    (ud, crossing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cx5_peak_and_floor_match_paper() {
+        let total = 20u64 << 30;
+        let mut layout = MemLayout::new(total, 1, PageSize::Huge2M);
+        let peak = read_microbench(NicGen::Cx5, 8, &mut layout, 64, 400_000);
+        // Paper: close to 40M reads/s at low connection counts...
+        assert!((30.0..50.0).contains(&peak), "CX5 peak {peak}");
+        let mut layout = MemLayout::new(total, 1, PageSize::Huge2M);
+        let floor = read_microbench(NicGen::Cx5, 10_000, &mut layout, 64, 400_000);
+        // ...and ~10 reqs/us once the cache is useless.
+        assert!((6.0..15.0).contains(&floor), "CX5 floor {floor}");
+    }
+
+    #[test]
+    fn fig1_drops_match_paper() {
+        let total = 20u64 << 30;
+        for (gen, want_drop, tol) in [
+            (NicGen::Cx3, 0.83, 0.10),
+            (NicGen::Cx4, 0.42, 0.10),
+            (NicGen::Cx5, 0.32, 0.10),
+        ] {
+            let mut l8 = MemLayout::new(total, 1, PageSize::Huge2M);
+            let at8 = read_microbench(gen, 8, &mut l8, 64, 400_000);
+            let mut l64 = MemLayout::new(total, 1, PageSize::Huge2M);
+            let at64 = read_microbench(gen, 64, &mut l64, 64, 400_000);
+            let drop = 1.0 - at64 / at8;
+            assert!(
+                (drop - want_drop).abs() < tol,
+                "{:?}: drop {drop:.2} want {want_drop}",
+                gen
+            );
+        }
+    }
+
+    #[test]
+    fn small_pages_many_regions_hurt() {
+        let total = 20u64 << 30;
+        let mut good = MemLayout::new(total, 1, PageSize::Huge2M);
+        let mut bad = MemLayout::new(total, 1024, PageSize::Small4K);
+        let g = read_microbench(NicGen::Cx5, 16, &mut good, 64, 400_000);
+        let b = read_microbench(NicGen::Cx5, 16, &mut bad, 64, 400_000);
+        assert!(b < g * 0.8, "4KB/1024MR {b} vs 2MB/1MR {g}");
+    }
+
+    #[test]
+    fn breakeven_in_paper_range() {
+        let (ud, crossing) = breakeven(true);
+        assert!(ud > 5.0, "ud rate {ud}");
+        assert!(
+            (1_000..6_000).contains(&crossing),
+            "breakeven at {crossing} conns (paper: 2500-3800)"
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Figure/table harnesses: one runner per table and figure in the paper's
+//! evaluation (see DESIGN.md §5 for the index).
+//!
+//! Each runner builds the configurations the paper describes, executes the
+//! simulator, prints rows shaped like the paper's plot series, and returns
+//! the reports so tests and `cargo bench` targets can assert on the shapes
+//! (who wins, by roughly what factor, where crossovers fall).
+
+pub mod fig1;
+pub mod figures;
+
+pub use fig1::{fig1, breakeven, Fig1Point};
+pub use figures::{
+    ablations, fig4, fig5, fig6, fig7, physseg, table5, BenchOpts,
+};

@@ -1,0 +1,18 @@
+//! Cluster simulation: the discrete-event world tying every substrate
+//! together.
+//!
+//! [`config`] describes a run (system under test, cluster shape, NIC
+//! generation, fabric, workload, calibrated host CPU costs); [`world`]
+//! executes it — every verb flows host CPU → doorbell → NIC PUs (with
+//! state-cache charging) → wire → remote NIC → host, with Storm and the
+//! three baselines (eRPC, Lockfree_FaRM, Async_LITE) differing exactly
+//! where the paper says they differ; [`report`] summarizes throughput,
+//! latency and resource counters for the figure harnesses.
+
+pub mod config;
+pub mod report;
+pub mod world;
+
+pub use config::{HostParams, SimConfig, StormMode, SystemKind, WorkloadKind};
+pub use report::RunReport;
+pub use world::World;

@@ -1,0 +1,87 @@
+//! Run summaries produced by the simulator, consumed by the figure
+//! harnesses and the CLI.
+
+use crate::sim::Nanos;
+
+/// Aggregated results of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Label (system + config) for tables.
+    pub label: String,
+    /// Machines simulated.
+    pub nodes: u32,
+    /// Completed operations (KV lookups or committed transactions) inside
+    /// the measurement window, cluster-wide.
+    pub ops: u64,
+    /// Throughput per machine, Mops/s.
+    pub per_machine_mops: f64,
+    /// Mean operation latency (ns).
+    pub mean_ns: f64,
+    /// Median latency (ns).
+    pub p50_ns: u64,
+    /// Tail latency (ns).
+    pub p99_ns: u64,
+    /// Transactions aborted (TATP).
+    pub aborts: u64,
+    /// One-sided reads issued per completed op.
+    pub reads_per_op: f64,
+    /// RPCs issued per completed op.
+    pub rpcs_per_op: f64,
+    /// Average NIC state-cache hit rate across machines.
+    pub nic_hit_rate: f64,
+    /// Average NIC PU utilization.
+    pub nic_utilization: f64,
+    /// UD datagrams dropped at receive queues.
+    pub ud_drops: u64,
+    /// UD retransmissions.
+    pub retransmits: u64,
+    /// Events processed (simulator perf accounting).
+    pub events: u64,
+    /// Wall-clock the simulation took (ns, host time).
+    pub wall_ns: u64,
+    /// Simulated time covered (ns).
+    pub sim_ns: Nanos,
+}
+
+impl RunReport {
+    /// Abort rate among attempted transactions.
+    pub fn abort_rate(&self) -> f64 {
+        let attempts = self.ops + self.aborts;
+        if attempts == 0 {
+            0.0
+        } else {
+            self.aborts as f64 / attempts as f64
+        }
+    }
+
+    /// Simulator speed in events per host second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events as f64 * 1e9 / self.wall_ns as f64
+    }
+
+    /// One-line table row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<28} nodes={:<3} {:>8.2} Mops/machine  mean={:>7.0}ns p50={:>7}ns p99={:>8}ns  r/op={:.2} rpc/op={:.2} abort={:.3} nic_hit={:.3}",
+            self.label,
+            self.nodes,
+            self.per_machine_mops,
+            self.mean_ns,
+            self.p50_ns,
+            self.p99_ns,
+            self.reads_per_op,
+            self.rpcs_per_op,
+            self.abort_rate(),
+            self.nic_hit_rate,
+        )
+    }
+}
+
+impl std::fmt::Display for RunReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.row())
+    }
+}

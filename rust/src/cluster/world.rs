@@ -1,0 +1,1399 @@
+//! The discrete-event cluster world.
+//!
+//! Every operation follows the full path the paper reasons about:
+//!
+//! ```text
+//! client CPU (post) → PCIe doorbell → local NIC PU (QP state, penalty)
+//!   → wire → remote NIC PU (QP + MPT + MTT charging, payload DMA)
+//!   [→ remote CPU for RPCs: poll, handler, chain hops, response post]
+//!   → wire → local NIC (CQE) → CQE DMA → client CPU (poll, coroutine)
+//! ```
+//!
+//! The system under test changes exactly what the paper says changes:
+//! Storm issues fine-grained one-sided reads with RPC fallback on RC;
+//! eRPC sends everything over UD with software congestion control,
+//! retransmission timers and receive-pool management; Lockfree_FaRM reads
+//! whole hopscotch neighborhoods (8× larger transfers); Async_LITE funnels
+//! every verb through a kernel with a global lock (but needs no NIC
+//! MTT/MPT state — physical addressing).
+//!
+//! The world is deterministic: one `Pcg64` stream per thread, FIFO event
+//! ties, no host-time dependence.
+
+use std::time::Instant;
+
+use crate::dataplane::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
+use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes, RPC_HEADER_BYTES};
+use crate::dataplane::tx::{TxAction, TxEngine, TxInput};
+use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
+use crate::ds::hopscotch::HopscotchTable;
+use crate::ds::mica::{owner_of, ItemView, MicaClient, MicaConfig, MicaTable};
+use crate::fabric::FabricParams;
+use crate::mem::{ContiguousAllocator, MrKey, RegionMode, RegionTable, RemoteAddr};
+use crate::nic::{Nic, NicOp, NicSide};
+use crate::sim::{EventQueue, Histogram, MeterWindow, Nanos, Pcg64, RateMeter};
+use crate::transport::cc::{AppCc, CcParams};
+use crate::transport::topology::{Channel, ConnId, Topology};
+use crate::transport::ud::RecvPool;
+use crate::workload::tatp::{TatpPopulation, TatpTx, TatpWorkload};
+use crate::workload::KvWorkload;
+
+use super::config::{SimConfig, StormMode, SystemKind, WorkloadKind};
+use super::report::RunReport;
+
+/// Extra NIC TX work factor for UD sends (software-framed datagrams).
+const UD_TX_EXTRA_FACTOR: f64 = 0.4;
+/// Capacity cost of the software congestion controller per paced packet,
+/// as a multiple of the NIC PU service time (calibrated to the paper's
+/// eRPC vs eRPC-noCC gap of ~1.53x at 16 nodes).
+const CC_NIC_HOLD_FACTOR: f64 = 3.0;
+/// Wire overhead bytes for a read request (headers only).
+const READ_REQ_BYTES: u32 = 40;
+/// Wire overhead added to a read response.
+const READ_RESP_HDR: u32 = 30;
+/// Backoff before retrying an aborted transaction.
+const ABORT_BACKOFF: Nanos = 2_000;
+/// CPU cost of a local (same-node) data-structure access.
+const LOCAL_ACCESS_NS: Nanos = 150;
+
+/// How a one-sided read should be served at the responder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReadKind {
+    Bucket,
+    ItemHeader,
+    PerfectItem,
+    Neighborhood,
+}
+
+#[derive(Clone, Debug)]
+enum PktKind {
+    ReadReq { obj: u8, key: u64, addr: RemoteAddr, len: u32, rk: ReadKind },
+    ReadResp { view: ReadView },
+    RpcReq { req: RpcRequest },
+    RpcResp { resp: RpcResponse },
+}
+
+#[derive(Clone, Debug)]
+struct Pkt {
+    from: u16,
+    to: u16,
+    thread: u16,
+    coro: u16,
+    conn: ConnId,
+    size: u32,
+    seq: u16,
+    ud: bool,
+    kind: PktKind,
+}
+
+enum Ev {
+    /// Outbound processing at `at`'s NIC, then the wire.
+    NicTx { at: u16, pkt: Pkt },
+    /// Inbound processing at `pkt.to`'s NIC.
+    NicRx { pkt: Pkt },
+    /// Host-side delivery (CQE) at `pkt.to`.
+    Deliver { pkt: Pkt },
+    /// Kick a coroutine to start its next operation.
+    CoroStart { node: u16, thread: u16, coro: u16 },
+    /// UD retransmission timer.
+    Retrans { node: u16, thread: u16, coro: u16, seq: u16 },
+}
+
+// ---------------------------------------------------------------------------
+// Resolver: the client-side data-structure callbacks per system.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RMode {
+    OneTwo,
+    RpcOnly,
+    Perfect,
+    Farm,
+}
+
+struct FarmGeo {
+    mask: u64,
+    item_size: u32,
+    h: u32,
+    region_of: Vec<MrKey>,
+}
+
+struct Resolver {
+    mode: RMode,
+    clients: Vec<MicaClient>,
+    farm: Option<FarmGeo>,
+    nodes: u32,
+}
+
+impl Resolver {
+    fn dummy() -> Self {
+        Resolver { mode: RMode::RpcOnly, clients: Vec::new(), farm: None, nodes: 1 }
+    }
+}
+
+impl DsCallbacks for Resolver {
+    fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+        match self.mode {
+            RMode::RpcOnly => None,
+            RMode::OneTwo => Some(self.clients[obj.0 as usize].lookup_start(key)),
+            RMode::Perfect => {
+                let mut hint = self.clients[obj.0 as usize].lookup_start(key);
+                // Fully warmed address cache: read exactly one item.
+                hint.len = 128;
+                Some(hint)
+            }
+            RMode::Farm => {
+                let g = self.farm.as_ref().expect("farm geometry");
+                let node = owner_of(key, self.nodes);
+                let home = crate::ds::mica::fnv1a64(key) & g.mask;
+                Some(LookupHint {
+                    node,
+                    addr: RemoteAddr {
+                        region: g.region_of[node as usize],
+                        offset: home * g.item_size as u64,
+                    },
+                    len: g.h * g.item_size,
+                })
+            }
+        }
+    }
+
+    fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+        match (self.mode, view) {
+            (RMode::Perfect, ReadView::Item(Some(v))) if v.key == key => {
+                let addr = self.clients[obj.0 as usize].lookup_start(key).addr;
+                LookupOutcome::Hit { version: v.version, addr, locked: v.locked }
+            }
+            (RMode::Perfect, ReadView::Item(_)) => LookupOutcome::Absent,
+            (RMode::Farm, ReadView::Neighborhood(nv)) => {
+                let g = self.farm.as_ref().unwrap();
+                match HopscotchTable::find_in_view(nv, key) {
+                    Some(version) => {
+                        let node = owner_of(key, self.nodes);
+                        let home = crate::ds::mica::fnv1a64(key) & g.mask;
+                        LookupOutcome::Hit {
+                            version,
+                            addr: RemoteAddr {
+                                region: g.region_of[node as usize],
+                                offset: home * g.item_size as u64,
+                            },
+                            locked: false,
+                        }
+                    }
+                    // Hopscotch invariant: absence in the neighborhood is
+                    // proof of absence.
+                    None => LookupOutcome::Absent,
+                }
+            }
+            (_, ReadView::Bucket(b)) => self.clients[obj.0 as usize].lookup_end_bucket(key, b),
+            (_, ReadView::Item(i)) => self.clients[obj.0 as usize].lookup_end_item(key, *i),
+            (_, ReadView::Neighborhood(_)) => LookupOutcome::NeedRpc,
+        }
+    }
+
+    fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
+        if let RpcResult::Value { addr, .. } = &resp.result {
+            if (obj.0 as usize) < self.clients.len() {
+                self.clients[obj.0 as usize].record_rpc_addr(key, node, *addr);
+            }
+        }
+    }
+
+    fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
+        owner_of(key, self.nodes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-node state.
+
+struct Store {
+    tables: Vec<MicaTable>,
+    hop: Option<HopscotchTable>,
+    alloc: ContiguousAllocator,
+    regions: RegionTable,
+}
+
+impl Store {
+    fn serve_rpc(&mut self, req: &RpcRequest) -> RpcResponse {
+        let table = &mut self.tables[req.obj.0 as usize];
+        match req.op {
+            RpcOp::Read => {
+                let (result, hops) = table.get(req.key);
+                RpcResponse { result, hops }
+            }
+            RpcOp::LockRead => {
+                let (result, hops) = table.lock_read(req.key, req.tx_id);
+                RpcResponse { result, hops }
+            }
+            RpcOp::UpdateUnlock => {
+                RpcResponse::inline(table.update_unlock(req.key, req.tx_id, req.value.as_deref()))
+            }
+            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
+            RpcOp::Insert => RpcResponse::inline(table.insert(
+                req.key,
+                req.value.as_deref(),
+                &mut self.alloc,
+                &mut self.regions,
+            )),
+            RpcOp::Delete => {
+                let (result, hops) = table.delete(req.key, &mut self.alloc);
+                RpcResponse { result, hops }
+            }
+        }
+    }
+}
+
+enum CoroSm {
+    Idle,
+    Kv(LookupSm),
+    Tx(Box<TxEngine>),
+}
+
+struct CoroSim {
+    sm: CoroSm,
+    op_start: Nanos,
+    /// Monotonic per-coro sequence for UD request/dup matching.
+    seq: u16,
+    waiting_seq: Option<u16>,
+    /// Last UD request (retransmission).
+    pending_ud: Option<Pkt>,
+    /// Time the pending request was sent (CC RTT samples).
+    sent_at: Nanos,
+    /// TATP transaction being executed (retried verbatim on abort).
+    pending_tx: Option<TatpTx>,
+}
+
+struct ThreadSim {
+    busy_until: Nanos,
+    resolver: Resolver,
+    coros: Vec<CoroSim>,
+    /// eRPC: per-destination congestion control.
+    cc: Vec<AppCc>,
+    rng: Pcg64,
+    kv: Option<KvWorkload>,
+    tatp: Option<TatpWorkload>,
+}
+
+struct NodeSim {
+    nic: Nic,
+    threads: Vec<ThreadSim>,
+    store: Store,
+    recv_pool: RecvPool,
+    /// LITE: the kernel's global lock (a single serial server).
+    kernel_busy: Nanos,
+    /// FaRM ablation: shared-QP group locks.
+    qp_group_busy: Vec<Nanos>,
+    msg_region: MrKey,
+    msg_region_len: u64,
+}
+
+#[derive(Default)]
+struct Metrics {
+    lat: Histogram,
+    aborts: u64,
+    commits: u64,
+    reads: u64,
+    rpcs: u64,
+    ud_drops: u64,
+    retrans: u64,
+    found: u64,
+    missing: u64,
+}
+
+// ---------------------------------------------------------------------------
+
+/// The simulator.
+pub struct World {
+    /// Run configuration.
+    pub cfg: SimConfig,
+    topo: Topology,
+    wire: FabricParams,
+    q: EventQueue<Ev>,
+    nodes: Vec<NodeSim>,
+    meter: RateMeter,
+    window: MeterWindow,
+    metrics: Metrics,
+    next_tx_id: u64,
+    ud: bool,
+    label: String,
+}
+
+impl World {
+    /// Build a world from a configuration (loads all tables).
+    pub fn new(cfg: SimConfig) -> Self {
+        let topo = Topology {
+            nodes: cfg.nodes,
+            threads: cfg.threads,
+            conn_multiplier: cfg.conn_multiplier,
+        };
+        let wire = cfg.fabric.params();
+        let mode = match cfg.system {
+            SystemKind::Storm(StormMode::RpcOnly) | SystemKind::Erpc { .. } | SystemKind::Lite { .. } => {
+                RMode::RpcOnly
+            }
+            SystemKind::Storm(StormMode::OneTwoSided) => RMode::OneTwo,
+            SystemKind::Storm(StormMode::Perfect) => RMode::Perfect,
+            SystemKind::Farm { .. } => RMode::Farm,
+        };
+        let ud = matches!(cfg.system, SystemKind::Erpc { .. });
+
+        let region_mode = if cfg.physseg {
+            RegionMode::PhysicalSegment
+        } else {
+            RegionMode::Virtual(cfg.page_size)
+        };
+
+        // --- table geometry ---------------------------------------------
+        let table_cfgs: Vec<MicaConfig> = match cfg.workload {
+            WorkloadKind::KvLookups => vec![MicaConfig {
+                buckets: cfg.buckets_per_node(cfg.keys_per_node),
+                width: cfg.bucket_width,
+                value_len: cfg.value_len,
+                store_values: false,
+            }],
+            WorkloadKind::Tatp { subscribers_per_node } => {
+                // Approximate per-node row counts: 1 / 2.5 / 2.5 / 3.75 rows
+                // per subscriber across SUB/AI/SF/CF.
+                let s = subscribers_per_node;
+                [1.0f64, 2.5, 2.5, 3.75]
+                    .iter()
+                    .map(|rows| MicaConfig {
+                        buckets: cfg.buckets_per_node((s as f64 * rows).ceil() as u64),
+                        width: cfg.bucket_width,
+                        value_len: cfg.value_len,
+                        store_values: false,
+                    })
+                    .collect()
+            }
+        };
+
+        // --- nodes: stores, NICs ----------------------------------------
+        let mut nodes: Vec<NodeSim> = Vec::with_capacity(cfg.nodes as usize);
+        for n in 0..cfg.nodes {
+            let mut regions = RegionTable::new();
+            let alloc = ContiguousAllocator::new(64 << 20, 256, region_mode);
+            let tables: Vec<MicaTable> = table_cfgs
+                .iter()
+                .map(|tc| MicaTable::new(tc.clone(), &mut regions, region_mode))
+                .collect();
+            let hop = if mode == RMode::Farm {
+                let buckets = (cfg.keys_per_node as f64 / 0.6).ceil() as u64;
+                Some(HopscotchTable::new(
+                    buckets.max(16).next_power_of_two(),
+                    8,
+                    128,
+                    &mut regions,
+                    region_mode,
+                ))
+            } else {
+                None
+            };
+            // Message rings: per-connection receive buffers (what Fig. 7's
+            // emulation multiplies alongside connections).
+            let msg_len = (topo.rc_conns_per_machine() * 8192).max(1 << 20);
+            let msg_region = regions.register(msg_len, region_mode);
+            let mut nic = Nic::with_host_threads(cfg.nic.params(), cfg.threads);
+            if matches!(cfg.system, SystemKind::Lite { .. }) {
+                // LITE: kernel-managed physical addressing — the NIC holds
+                // no MTT/MPT/QP-context working set worth caching.
+                nic.bypass_state_cache = true;
+            }
+            let _ = n;
+            nodes.push(NodeSim {
+                nic,
+                threads: Vec::new(),
+                store: Store { tables, hop, alloc, regions },
+                recv_pool: RecvPool::new(cfg.host.recv_pool_capacity),
+                kernel_busy: 0,
+                qp_group_busy: vec![0; (cfg.threads / cfg.host.farm_qp_group.max(1) + 1) as usize],
+                msg_region,
+                msg_region_len: msg_len,
+            });
+        }
+
+        // --- load data ----------------------------------------------------
+        match cfg.workload {
+            WorkloadKind::KvLookups => {
+                for key in 1..=cfg.total_keys() {
+                    let owner = owner_of(key, cfg.nodes) as usize;
+                    let nd = &mut nodes[owner];
+                    if let Some(h) = nd.store.hop.as_mut() {
+                        h.insert(key);
+                    } else {
+                        nd.store.tables[0].insert(key, None, &mut nd.store.alloc, &mut nd.store.regions);
+                    }
+                }
+            }
+            WorkloadKind::Tatp { subscribers_per_node } => {
+                let pop = TatpPopulation::new(subscribers_per_node * cfg.nodes as u64);
+                for (obj, key) in pop.rows(cfg.seed) {
+                    let owner = owner_of(key, cfg.nodes) as usize;
+                    let nd = &mut nodes[owner];
+                    nd.store.tables[obj.0 as usize].insert(
+                        key,
+                        None,
+                        &mut nd.store.alloc,
+                        &mut nd.store.regions,
+                    );
+                }
+            }
+        }
+
+        // --- client threads ------------------------------------------------
+        let region_of: Vec<Vec<MrKey>> = (0..table_cfgs.len())
+            .map(|o| nodes.iter().map(|nd| nd.store.tables[o].bucket_region).collect())
+            .collect();
+        let farm_regions: Vec<MrKey> = nodes
+            .iter()
+            .map(|nd| nd.store.hop.as_ref().map(|h| h.region).unwrap_or(MrKey(0)))
+            .collect();
+        let farm_mask = nodes[0]
+            .store
+            .hop
+            .as_ref()
+            .map(|h| (h.len(), h.neighborhood()))
+            .map(|_| {
+                let b = (cfg.keys_per_node as f64 / 0.6).ceil() as u64;
+                b.max(16).next_power_of_two() - 1
+            });
+
+        for n in 0..cfg.nodes {
+            for t in 0..cfg.threads {
+                let clients: Vec<MicaClient> = table_cfgs
+                    .iter()
+                    .enumerate()
+                    .map(|(o, tc)| {
+                        MicaClient::new(ObjectId(o as u32), tc, cfg.nodes, region_of[o].clone())
+                    })
+                    .collect();
+                let farm = farm_mask.map(|mask| FarmGeo {
+                    mask,
+                    item_size: 128,
+                    h: 8,
+                    region_of: farm_regions.clone(),
+                });
+                let resolver = Resolver { mode, clients, farm, nodes: cfg.nodes };
+                let coros = (0..cfg.coros)
+                    .map(|_| CoroSim {
+                        sm: CoroSm::Idle,
+                        op_start: 0,
+                        seq: 0,
+                        waiting_seq: None,
+                        pending_ud: None,
+                        sent_at: 0,
+                        pending_tx: None,
+                    })
+                    .collect();
+                let cc = (0..cfg.nodes).map(|_| AppCc::new(CcParams::default())).collect();
+                let kv = match cfg.workload {
+                    WorkloadKind::KvLookups => {
+                        Some(KvWorkload::uniform(cfg.total_keys(), cfg.nodes))
+                    }
+                    _ => None,
+                };
+                let tatp = match cfg.workload {
+                    WorkloadKind::Tatp { subscribers_per_node } => {
+                        Some(TatpWorkload::new(subscribers_per_node * cfg.nodes as u64))
+                    }
+                    _ => None,
+                };
+                nodes[n as usize].threads.push(ThreadSim {
+                    busy_until: 0,
+                    resolver,
+                    coros,
+                    cc,
+                    rng: Pcg64::new(cfg.seed, (n as u64) << 16 | t as u64),
+                    kv,
+                    tatp,
+                });
+            }
+        }
+
+        let window = MeterWindow::new(cfg.warmup, cfg.warmup + cfg.measure);
+        let label = Self::label_for(&cfg);
+        let mut world = World {
+            topo,
+            wire,
+            q: EventQueue::new(),
+            nodes,
+            meter: RateMeter::new(window),
+            window,
+            metrics: Metrics::default(),
+            next_tx_id: 1,
+            ud,
+            label,
+            cfg,
+        };
+        world.schedule_initial();
+        world
+    }
+
+    fn label_for(cfg: &SimConfig) -> String {
+        match cfg.system {
+            SystemKind::Storm(StormMode::RpcOnly) => "Storm(rpc)".into(),
+            SystemKind::Storm(StormMode::OneTwoSided) => "Storm(oversub)".into(),
+            SystemKind::Storm(StormMode::Perfect) => "Storm(perfect)".into(),
+            SystemKind::Erpc { congestion_control: true } => "eRPC".into(),
+            SystemKind::Erpc { congestion_control: false } => "eRPC(noCC)".into(),
+            SystemKind::Farm { locked_qp_sharing: false } => "Lockfree_FaRM".into(),
+            SystemKind::Farm { locked_qp_sharing: true } => "FaRM(locked)".into(),
+            SystemKind::Lite { async_ops: true } => "Async_LITE".into(),
+            SystemKind::Lite { async_ops: false } => "LITE".into(),
+        }
+    }
+
+    fn schedule_initial(&mut self) {
+        let coros = if matches!(self.cfg.system, SystemKind::Lite { async_ops: false }) {
+            1
+        } else {
+            self.cfg.coros
+        };
+        let mut idx = 0u64;
+        for n in 0..self.cfg.nodes {
+            for t in 0..self.cfg.threads {
+                for c in 0..coros {
+                    // Stagger starts to avoid a synchronized thundering herd.
+                    let at = (idx % 997) * 23;
+                    self.q.push_at(at, Ev::CoroStart { node: n as u16, thread: t as u16, coro: c as u16 });
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    /// Run to completion; consumes the world.
+    pub fn run(mut self) -> RunReport {
+        let end = self.cfg.warmup + self.cfg.measure;
+        let wall = Instant::now();
+        let mut events: u64 = 0;
+        while let Some(ev) = self.q.pop() {
+            if ev.at >= end {
+                break;
+            }
+            events += 1;
+            self.handle(ev.event);
+        }
+        let sim_ns = self.q.now();
+        let nic_hit: f64 = self.nodes.iter().map(|n| n.nic.cache.hit_rate()).sum::<f64>()
+            / self.nodes.len() as f64;
+        let nic_util: f64 =
+            self.nodes.iter().map(|n| n.nic.utilization(sim_ns)).sum::<f64>() / self.nodes.len() as f64;
+        let ops = self.meter.ops();
+        RunReport {
+            label: self.label.clone(),
+            nodes: self.cfg.nodes,
+            ops,
+            per_machine_mops: self.meter.mops() / self.cfg.nodes as f64,
+            mean_ns: self.metrics.lat.mean(),
+            p50_ns: self.metrics.lat.p50(),
+            p99_ns: self.metrics.lat.p99(),
+            aborts: self.metrics.aborts,
+            reads_per_op: self.metrics.reads as f64 / ops.max(1) as f64,
+            rpcs_per_op: self.metrics.rpcs as f64 / ops.max(1) as f64,
+            nic_hit_rate: nic_hit,
+            nic_utilization: nic_util,
+            ud_drops: self.metrics.ud_drops,
+            retransmits: self.metrics.retrans,
+            events,
+            wall_ns: wall.elapsed().as_nanos() as u64,
+            sim_ns,
+        }
+    }
+
+    // -- event dispatch ----------------------------------------------------
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::NicTx { at, pkt } => self.on_nic_tx(at, pkt),
+            Ev::NicRx { pkt } => self.on_nic_rx(pkt),
+            Ev::Deliver { pkt } => self.on_deliver(pkt),
+            Ev::CoroStart { node, thread, coro } => self.start_op(node, thread, coro),
+            Ev::Retrans { node, thread, coro, seq } => self.on_retrans(node, thread, coro, seq),
+        }
+    }
+
+    fn on_nic_tx(&mut self, at: u16, pkt: Pkt) {
+        let now = self.q.now();
+        let psvc = self.nodes[at as usize].nic.params.pu_service_ns;
+        let extra = if pkt.ud { UD_TX_EXTRA_FACTOR * psvc } else { 0.0 };
+        let mut op = NicOp::requester(NicSide::ReqTx, pkt.conn.0, pkt.size);
+        op.extra_ns = extra;
+        if pkt.ud && matches!(self.cfg.system, SystemKind::Erpc { congestion_control: true }) {
+            // Onloaded congestion control: the software rate limiter's
+            // per-packet descriptor work costs NIC issue capacity (the
+            // overhead the paper's eRPC(noCC) variant avoids).
+            op.extra_hold_ns = CC_NIC_HOLD_FACTOR * psvc;
+        }
+        let (finish, _) = self.nodes[at as usize].nic.process(now, &op);
+        let arrive = finish + self.wire.one_way_ns(pkt.size);
+        self.q.push_at(arrive, Ev::NicRx { pkt });
+    }
+
+    fn on_nic_rx(&mut self, pkt: Pkt) {
+        let now = self.q.now();
+        let to = pkt.to as usize;
+        match &pkt.kind {
+            PktKind::ReadReq { obj, key, addr, len, rk } => {
+                // Memory-state touches for the access.
+                let (mpt, mtt) = {
+                    let regions = &self.nodes[to].store.regions;
+                    let mut it = regions.mtt_entries_for(addr.region, addr.offset, *len as u64);
+                    let first = it.next();
+                    let count = 1 + it.count() as u32;
+                    (
+                        Some(addr.region.0 as u64),
+                        first.map(|f| (f, count)),
+                    )
+                };
+                let op = NicOp {
+                    side: NicSide::RespRead,
+                    qp: pkt.conn.0,
+                    len: *len,
+                    mpt,
+                    mtt,
+                    extra_ns: 0.0,
+                    extra_hold_ns: 0.0,
+                };
+                let (finish, _) = self.nodes[to].nic.process(now, &op);
+                // Resolve the view at access time.
+                let view = self.serve_read(to, *obj, *key, *addr, *len, *rk);
+                let resp_size = len + READ_RESP_HDR;
+                let resp = Pkt {
+                    from: pkt.to,
+                    to: pkt.from,
+                    thread: pkt.thread,
+                    coro: pkt.coro,
+                    conn: pkt.conn,
+                    size: resp_size,
+                    seq: pkt.seq,
+                    ud: false,
+                    kind: PktKind::ReadResp { view },
+                };
+                self.q.push_at(finish + self.wire.one_way_ns(resp_size), Ev::NicRx { pkt: resp });
+            }
+            PktKind::ReadResp { .. } => {
+                let op = NicOp::requester(NicSide::ReqRxCqe, pkt.conn.0, pkt.size);
+                let (finish, _) = self.nodes[to].nic.process(now, &op);
+                self.q.push_at(finish + self.cfg.host.cqe_dma as Nanos, Ev::Deliver { pkt });
+            }
+            PktKind::RpcReq { .. } | PktKind::RpcResp { .. } => {
+                if pkt.ud && !self.nodes[to].recv_pool.arrive() {
+                    // No posted receive buffer: the datagram is lost; the
+                    // sender's retransmission timer will recover.
+                    self.metrics.ud_drops += 1;
+                    return;
+                }
+                // send/recv (two-sided) consumes more NIC work per message
+                // than write-with-imm: RQ descriptor fetch + scatter without
+                // the pre-written ring buffer (paper §5.2's argument).
+                let side = if pkt.ud || self.cfg.rpc_via_sendrecv {
+                    NicSide::RespRecvUd
+                } else {
+                    NicSide::RespRecvRc
+                };
+                // Message ring touch: the landing buffer's translation.
+                let (mpt, mtt) = {
+                    let nd = &self.nodes[to];
+                    let off = (pkt.conn.0.wrapping_mul(8192)) % nd.msg_region_len;
+                    let mut it = nd.store.regions.mtt_entries_for(nd.msg_region, off, 64);
+                    (Some(nd.msg_region.0 as u64), it.next().map(|f| (f, 1)))
+                };
+                let op = NicOp { side, qp: pkt.conn.0, len: pkt.size, mpt, mtt, extra_ns: 0.0, extra_hold_ns: 0.0 };
+                let (finish, _) = self.nodes[to].nic.process(now, &op);
+                self.q.push_at(finish + self.cfg.host.cqe_dma as Nanos, Ev::Deliver { pkt });
+            }
+        }
+    }
+
+    fn serve_read(
+        &mut self,
+        node: usize,
+        obj: u8,
+        key: u64,
+        addr: RemoteAddr,
+        len: u32,
+        rk: ReadKind,
+    ) -> ReadView {
+        let store = &self.nodes[node].store;
+        match rk {
+            ReadKind::Neighborhood => {
+                ReadView::Neighborhood(store.hop.as_ref().expect("farm store").neighborhood_view(key))
+            }
+            ReadKind::Bucket => {
+                let table = &store.tables[obj as usize];
+                let bb = table.config().bucket_bytes() as u64;
+                let bucket = addr.offset / bb;
+                ReadView::Bucket(table.bucket_view(bucket))
+            }
+            ReadKind::ItemHeader => {
+                let table = &store.tables[obj as usize];
+                ReadView::Item(table.item_view(addr))
+            }
+            ReadKind::PerfectItem => {
+                // Oracle: what a read of the item's true location returns.
+                let table = &store.tables[obj as usize];
+                let _ = len;
+                match table.get(key).0 {
+                    RpcResult::Value { version, .. } => {
+                        ReadView::Item(Some(ItemView { key, version, locked: false }))
+                    }
+                    _ => ReadView::Item(None),
+                }
+            }
+        }
+    }
+
+    fn on_deliver(&mut self, pkt: Pkt) {
+        match pkt.kind {
+            PktKind::RpcReq { .. } => self.serve_rpc_request(pkt),
+            PktKind::RpcResp { .. } | PktKind::ReadResp { .. } => self.resume_coro(pkt),
+            PktKind::ReadReq { .. } => unreachable!("read requests never reach the host"),
+        }
+    }
+
+    /// Server-side RPC execution on the sibling thread.
+    fn serve_rpc_request(&mut self, pkt: Pkt) {
+        let now = self.q.now();
+        let node = pkt.to as usize;
+        let h = self.cfg.host;
+        let req = match &pkt.kind {
+            PktKind::RpcReq { req } => req.clone(),
+            _ => unreachable!(),
+        };
+        // Execute against the store.
+        let resp = self.nodes[node].store.serve_rpc(&req);
+        let hops = resp.hops;
+        // Host CPU: poll + handler (+ per-system extras).
+        let mut cost = (h.poll + h.handler_base + hops * h.handler_per_hop + h.post_wqe) as Nanos;
+        if pkt.ud {
+            cost += (h.ud_frame_cpu
+                + h.recv_repost_base
+                + h.recv_repost_per_node * self.cfg.nodes) as Nanos;
+            self.nodes[node].recv_pool.repost(1);
+            if let SystemKind::Erpc { congestion_control: true } = self.cfg.system {
+                cost += CcParams::default().cpu_send_ns as Nanos;
+            }
+        } else if self.cfg.rpc_via_sendrecv {
+            // Two-sided RC still burns CPU reposting RQ descriptors.
+            cost += h.recv_repost_base as Nanos;
+        }
+        let lite = matches!(self.cfg.system, SystemKind::Lite { .. });
+        let thread = pkt.thread as usize;
+        let start = self.nodes[node].threads[thread].busy_until.max(now);
+        let mut done = start + cost;
+        if lite {
+            // Kernel mediation on the server side: two syscalls plus locked
+            // kernel work.
+            done += 2 * h.lite_syscall as Nanos;
+            done = self.lite_kernel(node, done, h.lite_kernel_work as Nanos);
+        }
+        self.nodes[node].threads[thread].busy_until = done;
+        // Response goes back as a write-with-imm (or UD send).
+        let value_len = match &resp.result {
+            RpcResult::Value { .. } if matches!(req.op, RpcOp::Read | RpcOp::LockRead) => {
+                self.cfg.value_len
+            }
+            _ => 0,
+        };
+        let size = response_wire_bytes(value_len);
+        let out = Pkt {
+            from: pkt.to,
+            to: pkt.from,
+            thread: pkt.thread,
+            coro: pkt.coro,
+            conn: pkt.conn,
+            size,
+            seq: pkt.seq,
+            ud: pkt.ud,
+            kind: PktKind::RpcResp { resp },
+        };
+        let mut depart = done + h.doorbell_pcie as Nanos;
+        if pkt.ud {
+            if let SystemKind::Erpc { congestion_control: true } = self.cfg.system {
+                let pace = self.nodes[node].threads[thread].cc[pkt.from as usize].on_send(done, size);
+                depart += pace;
+            }
+        }
+        self.q.push_at(depart, Ev::NicTx { at: pkt.to, pkt: out });
+    }
+
+    /// Client-side completion: resume the blocked coroutine.
+    fn resume_coro(&mut self, pkt: Pkt) {
+        let now = self.q.now();
+        let h = self.cfg.host;
+        let (node, thread, coro) = (pkt.to as usize, pkt.thread as usize, pkt.coro as usize);
+        // UD duplicate filtering + receive-buffer replenish + CC ack.
+        if pkt.ud {
+            // The response consumed a posted receive buffer; the client's
+            // completion handler reposts it (same as the server side).
+            self.nodes[node].recv_pool.repost(1);
+            let t = &mut self.nodes[node].threads[thread];
+            t.busy_until = t.busy_until.max(now) + h.recv_repost_base as Nanos;
+            let c = &mut self.nodes[node].threads[thread].coros[coro];
+            if c.waiting_seq != Some(pkt.seq) {
+                return; // stale duplicate after a retransmission
+            }
+            c.waiting_seq = None;
+            c.pending_ud = None;
+            let rtt = now.saturating_sub(c.sent_at);
+            if let SystemKind::Erpc { congestion_control: true } = self.cfg.system {
+                self.nodes[node].threads[thread].cc[pkt.from as usize].on_ack(rtt);
+                let extra = CcParams::default().cpu_ack_ns as Nanos;
+                let t = &mut self.nodes[node].threads[thread];
+                t.busy_until = t.busy_until.max(now) + extra;
+            }
+        }
+        let mut cost = (h.poll + h.coro_switch) as Nanos;
+        if matches!(self.cfg.system, SystemKind::Lite { .. }) {
+            cost += h.lite_syscall as Nanos;
+        }
+        let start = self.nodes[node].threads[thread].busy_until.max(now);
+        let mut ready = start + cost;
+        if matches!(self.cfg.system, SystemKind::Lite { .. }) {
+            ready = self.lite_kernel(node, ready, h.lite_kernel_completion as Nanos);
+        }
+        self.nodes[node].threads[thread].busy_until = ready;
+
+        let input = match pkt.kind {
+            PktKind::ReadResp { view } => CoroInput::Read(view),
+            PktKind::RpcResp { resp } => CoroInput::Rpc(resp),
+            _ => unreachable!(),
+        };
+        self.advance_coro(node, thread, coro, Some(input), ready);
+    }
+
+    /// LITE's global kernel lock: serialize `work` through it.
+    fn lite_kernel(&mut self, node: usize, ready: Nanos, work: Nanos) -> Nanos {
+        let start = self.nodes[node].kernel_busy.max(ready);
+        let done = start + work;
+        self.nodes[node].kernel_busy = done;
+        done
+    }
+
+    // -- coroutine driving ---------------------------------------------------
+
+    fn start_op(&mut self, node: u16, thread: u16, coro: u16) {
+        let now = self.q.now();
+        let (n, t, c) = (node as usize, thread as usize, coro as usize);
+        // Charge a coroutine switch for scheduling the next op.
+        let start = self.nodes[n].threads[t].busy_until.max(now);
+        let ready = start + self.cfg.host.coro_switch as Nanos;
+        self.nodes[n].threads[t].busy_until = ready;
+
+        // Sample the next operation.
+        let th = &mut self.nodes[n].threads[t];
+        let sm = if let Some(kv) = &th.kv {
+            let key = kv.next_key(node as u32, &mut th.rng);
+            CoroSm::Kv(LookupSm::new(ObjectId(0), key))
+        } else {
+            let tatp = th.tatp.as_ref().unwrap();
+            let tx = tatp.next_tx(&mut th.rng);
+            th.coros[c].pending_tx = Some(tx.clone());
+            let id = self.next_tx_id;
+            self.next_tx_id += 1;
+            CoroSm::Tx(Box::new(TxEngine::begin(id, tx.read_set, tx.write_set)))
+        };
+        self.nodes[n].threads[t].coros[c].sm = sm;
+        self.nodes[n].threads[t].coros[c].op_start = ready;
+        self.advance_coro(n, t, c, None, ready);
+    }
+
+    fn advance_coro(
+        &mut self,
+        n: usize,
+        t: usize,
+        c: usize,
+        input: Option<CoroInput>,
+        ready: Nanos,
+    ) {
+        // Take the state machine and resolver out to appease the borrow
+        // checker; both go back before any early return below.
+        let mut sm = std::mem::replace(&mut self.nodes[n].threads[t].coros[c].sm, CoroSm::Idle);
+        let mut resolver =
+            std::mem::replace(&mut self.nodes[n].threads[t].resolver, Resolver::dummy());
+        let action = match &mut sm {
+            CoroSm::Kv(lk) => {
+                let lk_input = input.map(|i| match i {
+                    CoroInput::Read(v) => LkInput::Read(v),
+                    CoroInput::Rpc(r) => LkInput::Rpc(r),
+                });
+                match lk.advance(&mut resolver, lk_input) {
+                    LkAction::Read { obj, key, node, addr, len } => {
+                        CoroAction::Read { obj, key, dest: node, addr, len }
+                    }
+                    LkAction::Rpc { node, req } => CoroAction::Rpc { dest: node, req },
+                    LkAction::Done(res) => CoroAction::KvDone { found: res.found },
+                }
+            }
+            CoroSm::Tx(tx) => {
+                let tx_input = input.map(|i| match i {
+                    CoroInput::Read(v) => TxInput::Read(v),
+                    CoroInput::Rpc(r) => TxInput::Rpc(r),
+                });
+                match tx.advance(&mut resolver, tx_input) {
+                    TxAction::Read { obj, key, node, addr, len } => {
+                        CoroAction::Read { obj, key, dest: node, addr, len }
+                    }
+                    TxAction::Rpc { node, req } => CoroAction::Rpc { dest: node, req },
+                    TxAction::Done(outcome) => CoroAction::TxDone {
+                        committed: matches!(
+                            outcome,
+                            crate::dataplane::tx::TxOutcome::Committed { .. }
+                        ),
+                    },
+                }
+            }
+            CoroSm::Idle => unreachable!("idle coroutine advanced"),
+        };
+        self.nodes[n].threads[t].coros[c].sm = sm;
+        self.nodes[n].threads[t].resolver = resolver;
+
+        let in_window = self.window.contains(ready);
+        match action {
+            CoroAction::Read { obj, key, dest, addr, len } => {
+                if in_window {
+                    self.metrics.reads += 1;
+                }
+                self.post_read(n, t, c, obj, key, dest, addr, len, ready);
+            }
+            CoroAction::Rpc { dest, req } => {
+                if in_window {
+                    self.metrics.rpcs += 1;
+                }
+                self.post_rpc(n, t, c, dest, req, ready);
+            }
+            CoroAction::KvDone { found } => {
+                if found {
+                    self.metrics.found += 1;
+                } else {
+                    self.metrics.missing += 1;
+                }
+                self.finish_op(n, t, c, ready, true);
+            }
+            CoroAction::TxDone { committed } => {
+                if committed {
+                    self.metrics.commits += 1;
+                    self.nodes[n].threads[t].coros[c].pending_tx = None;
+                    self.finish_op(n, t, c, ready, true);
+                } else {
+                    if in_window {
+                        self.metrics.aborts += 1;
+                    }
+                    self.retry_tx(n, t, c, ready);
+                }
+            }
+        }
+    }
+
+    fn finish_op(&mut self, n: usize, t: usize, c: usize, done: Nanos, count: bool) {
+        if count {
+            let started = self.nodes[n].threads[t].coros[c].op_start;
+            if self.window.contains(done) {
+                self.meter.record(done);
+                self.metrics.lat.record(done.saturating_sub(started));
+            }
+        }
+        self.nodes[n].threads[t].coros[c].sm = CoroSm::Idle;
+        self.q.push_at(done, Ev::CoroStart { node: n as u16, thread: t as u16, coro: c as u16 });
+    }
+
+    fn retry_tx(&mut self, n: usize, t: usize, c: usize, ready: Nanos) {
+        let tx = self.nodes[n].threads[t].coros[c]
+            .pending_tx
+            .clone()
+            .expect("aborted tx must be retryable");
+        let id = self.next_tx_id;
+        self.next_tx_id += 1;
+        self.nodes[n].threads[t].coros[c].sm =
+            CoroSm::Tx(Box::new(TxEngine::begin(id, tx.read_set, tx.write_set)));
+        // Keep the original op_start: retries count toward the latency of
+        // the logical transaction.
+        let resume = ready + ABORT_BACKOFF;
+        let (n16, t16, c16) = (n as u16, t as u16, c as u16);
+        // Re-enter via a scheduled event so the backoff is honored.
+        self.q.push_at(resume, Ev::Retrans { node: n16, thread: t16, coro: c16, seq: u16::MAX });
+    }
+
+    // -- posting ---------------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn post_read(
+        &mut self,
+        n: usize,
+        t: usize,
+        c: usize,
+        obj: ObjectId,
+        key: u64,
+        dest: u32,
+        addr: RemoteAddr,
+        len: u32,
+        ready: Nanos,
+    ) {
+        let h = self.cfg.host;
+        let rk = self.classify_read(len);
+        if dest as usize == n {
+            // Local access: no verbs, just a memory read (the hash-table
+            // probe the owner would do).
+            let start = self.nodes[n].threads[t].busy_until.max(ready);
+            let done = start + LOCAL_ACCESS_NS;
+            self.nodes[n].threads[t].busy_until = done;
+            let view = self.serve_read(n, obj.0 as u8, key, addr, len, rk);
+            let pkt = Pkt {
+                from: n as u16,
+                to: n as u16,
+                thread: t as u16,
+                coro: c as u16,
+                conn: ConnId(0),
+                size: 0,
+                seq: 0,
+                ud: false,
+                kind: PktKind::ReadResp { view },
+            };
+            self.q.push_at(done, Ev::Deliver { pkt });
+            return;
+        }
+        let start = self.nodes[n].threads[t].busy_until.max(ready);
+        let mut cpu_done = start + h.post_wqe as Nanos;
+        self.nodes[n].threads[t].busy_until = cpu_done;
+        cpu_done = self.apply_post_gates(n, t, cpu_done);
+        let lane = (c as u32) % self.topo.conn_multiplier;
+        let conn = self.topo.rc_conn(n as u32, dest, t as u32, Channel::ReadPath, lane);
+        let pkt = Pkt {
+            from: n as u16,
+            to: dest as u16,
+            thread: t as u16,
+            coro: c as u16,
+            conn,
+            size: READ_REQ_BYTES.max(len / 16), // request carries no payload
+            seq: 0,
+            ud: false,
+            kind: PktKind::ReadReq { obj: obj.0 as u8, key, addr, len, rk },
+        };
+        self.q.push_at(cpu_done + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt });
+    }
+
+    fn post_rpc(&mut self, n: usize, t: usize, c: usize, dest: u32, req: RpcRequest, ready: Nanos) {
+        let h = self.cfg.host;
+        if dest as usize == n {
+            // Local "RPC": run the handler inline on this thread.
+            let resp = self.nodes[n].store.serve_rpc(&req);
+            let cost = (h.handler_base + resp.hops * h.handler_per_hop) as Nanos;
+            let start = self.nodes[n].threads[t].busy_until.max(ready);
+            let done = start + cost;
+            self.nodes[n].threads[t].busy_until = done;
+            let pkt = Pkt {
+                from: n as u16,
+                to: n as u16,
+                thread: t as u16,
+                coro: c as u16,
+                conn: ConnId(0),
+                size: 0,
+                seq: 0,
+                ud: false,
+                kind: PktKind::RpcResp { resp },
+            };
+            self.q.push_at(done, Ev::Deliver { pkt });
+            return;
+        }
+        let ud = self.ud;
+        let size = request_wire_bytes(&req) + RPC_HEADER_BYTES;
+        let mut cost = h.post_wqe as Nanos;
+        if ud {
+            cost += h.ud_frame_cpu as Nanos;
+            if let SystemKind::Erpc { congestion_control: true } = self.cfg.system {
+                cost += CcParams::default().cpu_send_ns as Nanos;
+            }
+        }
+        let start = self.nodes[n].threads[t].busy_until.max(ready);
+        let mut cpu_done = start + cost;
+        self.nodes[n].threads[t].busy_until = cpu_done;
+        cpu_done = self.apply_post_gates(n, t, cpu_done);
+
+        let mut pace = 0;
+        if ud {
+            if let SystemKind::Erpc { congestion_control: true } = self.cfg.system {
+                pace = self.nodes[n].threads[t].cc[dest as usize].on_send(cpu_done, size);
+            }
+        }
+        let seq = {
+            let coro = &mut self.nodes[n].threads[t].coros[c];
+            coro.seq = coro.seq.wrapping_add(1);
+            coro.seq
+        };
+        let conn = if ud {
+            self.topo.ud_qp(n as u32, t as u32)
+        } else {
+            let lane = (c as u32) % self.topo.conn_multiplier;
+            self.topo.rc_conn(n as u32, dest, t as u32, Channel::RpcPath, lane)
+        };
+        let pkt = Pkt {
+            from: n as u16,
+            to: dest as u16,
+            thread: t as u16,
+            coro: c as u16,
+            conn,
+            size,
+            seq,
+            ud,
+            kind: PktKind::RpcReq { req },
+        };
+        if ud {
+            let coro = &mut self.nodes[n].threads[t].coros[c];
+            coro.waiting_seq = Some(seq);
+            coro.pending_ud = Some(pkt.clone());
+            coro.sent_at = cpu_done + pace;
+            self.q.push_at(
+                cpu_done + pace + h.rto,
+                Ev::Retrans { node: n as u16, thread: t as u16, coro: c as u16, seq },
+            );
+        }
+        self.q
+            .push_at(cpu_done + pace + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt });
+    }
+
+    /// Per-system gates on the post path: LITE's kernel lock, FaRM's shared
+    /// QP locks.
+    fn apply_post_gates(&mut self, n: usize, t: usize, cpu_done: Nanos) -> Nanos {
+        let h = self.cfg.host;
+        match self.cfg.system {
+            SystemKind::Lite { .. } => {
+                let entered = cpu_done + h.lite_syscall as Nanos;
+                self.lite_kernel(n, entered, h.lite_kernel_work as Nanos)
+            }
+            SystemKind::Farm { locked_qp_sharing: true } => {
+                // Original FaRM: the QP-group lock is held across WQE
+                // build + doorbell MMIO, serializing the group's posts.
+                let g = (t as u32 / h.farm_qp_group.max(1)) as usize;
+                let start = self.nodes[n].qp_group_busy[g].max(cpu_done);
+                let done =
+                    start + (h.farm_qp_lock + h.post_wqe + h.doorbell_pcie) as Nanos;
+                self.nodes[n].qp_group_busy[g] = done;
+                done
+            }
+            _ => cpu_done,
+        }
+    }
+
+    fn classify_read(&self, len: u32) -> ReadKind {
+        match self.cfg.system {
+            SystemKind::Farm { .. } => ReadKind::Neighborhood,
+            SystemKind::Storm(StormMode::Perfect) => {
+                if len == crate::ds::mica::ITEM_HEADER {
+                    ReadKind::ItemHeader
+                } else {
+                    ReadKind::PerfectItem
+                }
+            }
+            _ => {
+                if len == crate::ds::mica::ITEM_HEADER {
+                    ReadKind::ItemHeader
+                } else {
+                    ReadKind::Bucket
+                }
+            }
+        }
+    }
+
+    fn on_retrans(&mut self, node: u16, thread: u16, coro: u16, seq: u16) {
+        let now = self.q.now();
+        let (n, t, c) = (node as usize, thread as usize, coro as usize);
+        if seq == u16::MAX {
+            // Abort-retry kick (reuses the timer event).
+            self.advance_coro(n, t, c, None, now);
+            return;
+        }
+        let needs_retry = {
+            let coroo = &self.nodes[n].threads[t].coros[c];
+            coroo.waiting_seq == Some(seq) && coroo.pending_ud.is_some()
+        };
+        if !needs_retry {
+            return;
+        }
+        self.metrics.retrans += 1;
+        let h = self.cfg.host;
+        let pkt = self.nodes[n].threads[t].coros[c].pending_ud.clone().unwrap();
+        self.nodes[n].threads[t].coros[c].sent_at = now;
+        self.q.push_at(now + h.rto, Ev::Retrans { node, thread, coro, seq });
+        self.q.push_at(now + h.doorbell_pcie as Nanos, Ev::NicTx { at: node, pkt });
+    }
+}
+
+enum CoroInput {
+    Read(ReadView),
+    Rpc(RpcResponse),
+}
+
+enum CoroAction {
+    Read { obj: ObjectId, key: u64, dest: u32, addr: RemoteAddr, len: u32 },
+    Rpc { dest: u32, req: RpcRequest },
+    KvDone { found: bool },
+    TxDone { committed: bool },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MICRO, MILLI};
+
+    fn quick_cfg(system: SystemKind, nodes: u32) -> SimConfig {
+        let mut cfg = SimConfig::new(system, nodes);
+        cfg.threads = 2;
+        cfg.coros = 4;
+        cfg.keys_per_node = 4_000;
+        cfg.warmup = 100 * MICRO;
+        cfg.measure = 1 * MILLI;
+        cfg
+    }
+
+    #[test]
+    fn event_size_budget() {
+        // Events move through the binary heap; keep them lean.
+        eprintln!(
+            "Ev={}B Pkt={}B ReadView={}B",
+            std::mem::size_of::<Ev>(),
+            std::mem::size_of::<Pkt>(),
+            std::mem::size_of::<ReadView>()
+        );
+        assert!(std::mem::size_of::<Ev>() <= 160);
+    }
+
+    #[test]
+    fn storm_oversub_runs_and_reports() {
+        let cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+        let r = World::new(cfg).run();
+        assert!(r.ops > 1_000, "ops {}", r.ops);
+        assert!(r.per_machine_mops > 0.1, "mops {}", r.per_machine_mops);
+        assert!(r.mean_ns > 1_000.0, "latency {}", r.mean_ns);
+        // Oversubscribed table: mostly single reads, few RPC fallbacks.
+        assert!(r.reads_per_op >= 0.95, "reads/op {}", r.reads_per_op);
+        assert!(r.rpcs_per_op < 0.5, "rpcs/op {}", r.rpcs_per_op);
+    }
+
+    #[test]
+    fn storm_rpc_only_uses_no_reads() {
+        let cfg = quick_cfg(SystemKind::Storm(StormMode::RpcOnly), 4);
+        let r = World::new(cfg).run();
+        assert!(r.ops > 1_000);
+        assert_eq!(r.reads_per_op, 0.0);
+        assert!(r.rpcs_per_op >= 0.99);
+    }
+
+    #[test]
+    fn storm_perfect_never_rpcs() {
+        let cfg = quick_cfg(SystemKind::Storm(StormMode::Perfect), 4);
+        let r = World::new(cfg).run();
+        assert!(r.ops > 1_000);
+        assert_eq!(r.rpcs_per_op, 0.0, "perfect mode must not RPC");
+        assert!((r.reads_per_op - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn perfect_beats_rpc_only() {
+        let perfect = World::new(quick_cfg(SystemKind::Storm(StormMode::Perfect), 4)).run();
+        let rpc = World::new(quick_cfg(SystemKind::Storm(StormMode::RpcOnly), 4)).run();
+        assert!(
+            perfect.per_machine_mops > rpc.per_machine_mops * 1.3,
+            "perfect {} vs rpc {}",
+            perfect.per_machine_mops,
+            rpc.per_machine_mops
+        );
+    }
+
+    #[test]
+    fn erpc_runs_and_is_slower_than_storm() {
+        let storm = World::new(quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 4)).run();
+        let erpc = World::new(quick_cfg(SystemKind::Erpc { congestion_control: true }, 4)).run();
+        assert!(erpc.ops > 500);
+        assert!(
+            storm.per_machine_mops > erpc.per_machine_mops,
+            "storm {} vs erpc {}",
+            storm.per_machine_mops,
+            erpc.per_machine_mops
+        );
+    }
+
+    #[test]
+    fn erpc_no_cc_beats_cc() {
+        let cc = World::new(quick_cfg(SystemKind::Erpc { congestion_control: true }, 4)).run();
+        let nocc = World::new(quick_cfg(SystemKind::Erpc { congestion_control: false }, 4)).run();
+        assert!(
+            nocc.per_machine_mops > cc.per_machine_mops,
+            "noCC {} vs CC {}",
+            nocc.per_machine_mops,
+            cc.per_machine_mops
+        );
+    }
+
+    #[test]
+    fn farm_reads_whole_neighborhoods() {
+        let r = World::new(quick_cfg(SystemKind::Farm { locked_qp_sharing: false }, 4)).run();
+        assert!(r.ops > 1_000);
+        assert!((r.reads_per_op - 1.0).abs() < 0.05, "farm reads/op {}", r.reads_per_op);
+        assert_eq!(r.rpcs_per_op, 0.0);
+    }
+
+    #[test]
+    fn lite_is_much_slower() {
+        let storm = World::new(quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 4)).run();
+        let lite = World::new(quick_cfg(SystemKind::Lite { async_ops: true }, 4)).run();
+        assert!(lite.ops > 100);
+        assert!(
+            storm.per_machine_mops > lite.per_machine_mops * 4.0,
+            "storm {} vs lite {}",
+            storm.per_machine_mops,
+            lite.per_machine_mops
+        );
+    }
+
+    #[test]
+    fn async_lite_beats_sync_lite_single_thread() {
+        // Paper: the async extension gives ~2x for a single thread.
+        let mut sync_cfg = quick_cfg(SystemKind::Lite { async_ops: false }, 2);
+        sync_cfg.threads = 1;
+        let mut async_cfg = quick_cfg(SystemKind::Lite { async_ops: true }, 2);
+        async_cfg.threads = 1;
+        let sync = World::new(sync_cfg).run();
+        let asyn = World::new(async_cfg).run();
+        assert!(
+            asyn.per_machine_mops > sync.per_machine_mops * 1.5,
+            "async {} vs sync {}",
+            asyn.per_machine_mops,
+            sync.per_machine_mops
+        );
+    }
+
+    #[test]
+    fn tatp_commits_transactions() {
+        let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+        cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 2_000 };
+        let r = World::new(cfg).run();
+        assert!(r.ops > 500, "commits {}", r.ops);
+        assert!(r.abort_rate() < 0.05, "abort rate {}", r.abort_rate());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = World::new(quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3)).run();
+        let b = World::new(quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3)).run();
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.p50_ns, b.p50_ns);
+        assert_eq!(a.aborts, b.aborts);
+    }
+
+    #[test]
+    fn unloaded_latency_storm_read_near_paper() {
+        // Table 5: Storm(RR) on CX4 IB = 1.8 us unloaded.
+        let mut cfg = SimConfig::new(SystemKind::Storm(StormMode::Perfect), 2);
+        cfg.threads = 1;
+        cfg.coros = 1;
+        cfg.keys_per_node = 2_000;
+        cfg.warmup = 50 * MICRO;
+        cfg.measure = 1 * MILLI;
+        let r = World::new(cfg).run();
+        assert!(
+            (1_400.0..2_300.0).contains(&r.mean_ns),
+            "unloaded RR RTT {} ns, want ~1800",
+            r.mean_ns
+        );
+    }
+}

@@ -1,0 +1,444 @@
+//! Reference in-process driver: the Storm dataplane over local shards.
+//!
+//! Executes the sans-io engines ([`LookupSm`], [`TxEngine`]) directly
+//! against in-memory table shards with no fabric at all. This is the
+//! semantic reference: what the simulator and the live loopback driver
+//! must agree with. Used heavily by tests (including step-interleaved
+//! concurrency tests for the OCC protocol) and the quickstart example.
+
+use std::collections::HashMap;
+
+use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
+use crate::ds::mica::{MicaClient, MicaConfig, MicaTable};
+use crate::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable, RemoteAddr};
+
+use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
+use super::tx::{TxAction, TxEngine, TxInput, TxItem, TxOutcome};
+
+/// One simulated host's storage.
+pub struct LocalNode {
+    /// Table shards by object.
+    pub tables: HashMap<ObjectId, MicaTable>,
+    /// Chain-item allocator.
+    pub alloc: ContiguousAllocator,
+    /// Region registry.
+    pub regions: RegionTable,
+}
+
+/// Client-side state: resolvers per object.
+pub struct LocalClient {
+    clients: HashMap<ObjectId, MicaClient>,
+    rpc_only: bool,
+}
+
+impl DsCallbacks for LocalClient {
+    fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+        if self.rpc_only {
+            return None;
+        }
+        Some(self.clients.get(&obj).expect("unknown object").lookup_start(key))
+    }
+    fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+        let c = self.clients.get_mut(&obj).unwrap();
+        match view {
+            ReadView::Bucket(b) => c.lookup_end_bucket(key, b),
+            ReadView::Item(i) => c.lookup_end_item(key, *i),
+            // MICA clients never issue neighborhood reads (FaRM only).
+            ReadView::Neighborhood(_) => LookupOutcome::NeedRpc,
+        }
+    }
+    fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
+        if let RpcResult::Value { addr, .. } = &resp.result {
+            self.clients.get_mut(&obj).unwrap().record_rpc_addr(key, node, *addr);
+        }
+    }
+    fn owner(&self, obj: ObjectId, key: u64) -> u32 {
+        self.clients.get(&obj).unwrap().owner(key)
+    }
+}
+
+/// An in-process "cluster": shards + a way to run engines to completion.
+pub struct LocalCluster {
+    /// Per-node storage.
+    pub nodes: Vec<LocalNode>,
+    configs: HashMap<ObjectId, MicaConfig>,
+    next_tx: u64,
+}
+
+impl LocalCluster {
+    /// Build `n` nodes, each holding a shard of every object.
+    pub fn new(n: u32, objects: Vec<(ObjectId, MicaConfig)>) -> Self {
+        let mut nodes = Vec::new();
+        for _ in 0..n {
+            let mut regions = RegionTable::new();
+            let alloc =
+                ContiguousAllocator::new(64 << 20, 64, RegionMode::Virtual(PageSize::Huge2M));
+            let mut tables = HashMap::new();
+            for (obj, cfg) in &objects {
+                tables.insert(
+                    *obj,
+                    MicaTable::new(cfg.clone(), &mut regions, RegionMode::Virtual(PageSize::Huge2M)),
+                );
+            }
+            nodes.push(LocalNode { tables, alloc, regions });
+        }
+        LocalCluster {
+            nodes,
+            configs: objects.into_iter().collect(),
+            next_tx: 1,
+        }
+    }
+
+    /// Build a client (resolver set) for this cluster.
+    pub fn client(&self, with_cache: bool) -> LocalClient {
+        let mut clients = HashMap::new();
+        let n = self.nodes.len() as u32;
+        for (obj, cfg) in &self.configs {
+            let regions =
+                self.nodes.iter().map(|nd| nd.tables[obj].bucket_region).collect::<Vec<_>>();
+            let mut c = MicaClient::new(*obj, cfg, n, regions);
+            if with_cache {
+                c = c.with_cache();
+            }
+            clients.insert(*obj, c);
+        }
+        LocalClient { clients, rpc_only: false }
+    }
+
+    /// RPC-only client (Storm's RPC configuration / baselines).
+    pub fn rpc_only_client(&self) -> LocalClient {
+        let mut c = self.client(false);
+        c.rpc_only = true;
+        c
+    }
+
+    /// Fresh transaction id.
+    pub fn next_tx_id(&mut self) -> u64 {
+        let id = self.next_tx;
+        self.next_tx += 1;
+        id
+    }
+
+    /// Populate an object with keys (direct inserts on owner shards).
+    pub fn load(&mut self, obj: ObjectId, keys: impl Iterator<Item = u64>) {
+        let n = self.nodes.len() as u32;
+        for key in keys {
+            let owner = crate::ds::mica::owner_of(key, n) as usize;
+            let node = &mut self.nodes[owner];
+            let table = node.tables.get_mut(&obj).unwrap();
+            table.insert(key, None, &mut node.alloc, &mut node.regions);
+        }
+    }
+
+    /// Serve a one-sided read against a node's memory.
+    pub fn serve_read(&self, node: u32, obj_hint: ObjectId, addr: RemoteAddr, len: u32) -> ReadView {
+        let table = &self.nodes[node as usize].tables[&obj_hint];
+        let bb = table.config().bucket_bytes();
+        if len == bb && addr.region == table.bucket_region {
+            ReadView::Bucket(table.bucket_view(addr.offset / bb as u64))
+        } else {
+            ReadView::Item(table.item_view(addr))
+        }
+    }
+
+    /// Serve an RPC on the owner node (the `rpc_handler` callback).
+    pub fn serve_rpc(&mut self, node: u32, req: &RpcRequest) -> RpcResponse {
+        let nd = &mut self.nodes[node as usize];
+        let table = nd.tables.get_mut(&req.obj).expect("unknown object at owner");
+        match req.op {
+            RpcOp::Read => {
+                let (result, hops) = table.get(req.key);
+                RpcResponse { result, hops }
+            }
+            RpcOp::LockRead => {
+                let (result, hops) = table.lock_read(req.key, req.tx_id);
+                RpcResponse { result, hops }
+            }
+            RpcOp::UpdateUnlock => RpcResponse::inline(table.update_unlock(
+                req.key,
+                req.tx_id,
+                req.value.as_deref(),
+            )),
+            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
+            RpcOp::Insert => RpcResponse::inline(table.insert(
+                req.key,
+                req.value.as_deref(),
+                &mut nd.alloc,
+                &mut nd.regions,
+            )),
+            RpcOp::Delete => {
+                let (result, hops) = table.delete(req.key, &mut nd.alloc);
+                RpcResponse { result, hops }
+            }
+        }
+    }
+
+    /// Run a single lookup to completion.
+    pub fn run_lookup(&mut self, client: &mut LocalClient, obj: ObjectId, key: u64) -> LkResult {
+        let mut sm = LookupSm::new(obj, key);
+        let mut action = sm.advance(client, None);
+        loop {
+            match action {
+                LkAction::Read { obj, node, addr, len, key: _ } => {
+                    let view = self.serve_read(node, obj, addr, len);
+                    action = sm.advance(client, Some(LkInput::Read(view)));
+                }
+                LkAction::Rpc { node, req } => {
+                    let resp = self.serve_rpc(node, &req);
+                    action = sm.advance(client, Some(LkInput::Rpc(resp)));
+                }
+                LkAction::Done(res) => return res,
+            }
+        }
+    }
+
+    /// Step a transaction engine by serving one action; returns the next
+    /// action (callers drive interleavings explicitly in tests).
+    pub fn serve_tx_action(
+        &mut self,
+        client: &mut LocalClient,
+        engine: &mut TxEngine,
+        action: TxAction,
+    ) -> TxAction {
+        match action {
+            TxAction::Read { obj, node, addr, len, key: _ } => {
+                let view = self.serve_read(node, obj, addr, len);
+                engine.advance(client, Some(TxInput::Read(view)))
+            }
+            TxAction::Rpc { node, req } => {
+                let resp = self.serve_rpc(node, &req);
+                engine.advance(client, Some(TxInput::Rpc(resp)))
+            }
+            done @ TxAction::Done(_) => done,
+        }
+    }
+
+    /// Run a transaction to completion.
+    pub fn run_tx(
+        &mut self,
+        client: &mut LocalClient,
+        read_set: Vec<TxItem>,
+        write_set: Vec<TxItem>,
+    ) -> TxOutcome {
+        let tx_id = self.next_tx_id();
+        let mut engine = TxEngine::begin(tx_id, read_set, write_set);
+        let mut action = engine.advance(client, None);
+        loop {
+            match action {
+                TxAction::Done(outcome) => return outcome,
+                other => action = self.serve_tx_action(client, &mut engine, other),
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataplane::tx::AbortReason;
+
+    const KV: ObjectId = ObjectId(0);
+
+    fn cluster(nodes: u32, buckets: u64, width: u32) -> LocalCluster {
+        LocalCluster::new(
+            nodes,
+            vec![(KV, MicaConfig { buckets, width, value_len: 112, store_values: false })],
+        )
+    }
+
+    #[test]
+    fn lookup_across_nodes() {
+        let mut c = cluster(4, 1 << 10, 2);
+        c.load(KV, 1..=1000);
+        let mut client = c.client(false);
+        for key in (1..=1000).step_by(97) {
+            let res = c.run_lookup(&mut client, KV, key);
+            assert!(res.found, "key {key}");
+        }
+        assert!(!c.run_lookup(&mut client, KV, 5555).found);
+    }
+
+    #[test]
+    fn read_only_tx_commits() {
+        let mut c = cluster(2, 1 << 10, 2);
+        c.load(KV, 1..=100);
+        let mut client = c.client(false);
+        let outcome = c.run_tx(
+            &mut client,
+            vec![TxItem::read(KV, 1), TxItem::read(KV, 50), TxItem::read(KV, 100)],
+            vec![],
+        );
+        assert!(matches!(outcome, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn update_tx_bumps_version_and_unlocks() {
+        let mut c = cluster(2, 1 << 10, 2);
+        c.load(KV, 1..=10);
+        let mut client = c.client(false);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::update(KV, 5)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        // Version bumped from 1 -> 2 (lock_read) is not a bump; update is.
+        let res = c.run_lookup(&mut client, KV, 5);
+        assert_eq!(res.version, 2);
+        assert!(!res.locked, "commit must release the lock");
+    }
+
+    #[test]
+    fn insert_and_delete_through_tx() {
+        let mut c = cluster(2, 1 << 10, 2);
+        let mut client = c.client(false);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::insert(KV, 777)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert!(c.run_lookup(&mut client, KV, 777).found);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::delete(KV, 777)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert!(!c.run_lookup(&mut client, KV, 777).found);
+    }
+
+    #[test]
+    fn lock_conflict_aborts_and_releases() {
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut client_a = c.client(false);
+        let mut client_b = c.client(false);
+
+        // Tx A locks key 3 (execute phase) and pauses before commit.
+        let mut tx_a = TxEngine::begin(100, vec![], vec![TxItem::update(KV, 3)]);
+        let act_a = tx_a.advance(&mut client_a, None);
+        let act_a = c.serve_tx_action(&mut client_a, &mut tx_a, act_a);
+        // A now holds the lock and wants to commit; don't serve it yet.
+
+        // Tx B tries to lock key 3 too: must abort with LockConflict.
+        let mut tx_b = TxEngine::begin(200, vec![], vec![TxItem::update(KV, 3)]);
+        let mut act_b = tx_b.advance(&mut client_b, None);
+        loop {
+            match act_b {
+                TxAction::Done(outcome) => {
+                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::LockConflict));
+                    break;
+                }
+                other => act_b = c.serve_tx_action(&mut client_b, &mut tx_b, other),
+            }
+        }
+
+        // A finishes its commit.
+        let mut act_a = act_a;
+        loop {
+            match act_a {
+                TxAction::Done(outcome) => {
+                    assert!(matches!(outcome, TxOutcome::Committed { .. }));
+                    break;
+                }
+                other => act_a = c.serve_tx_action(&mut client_a, &mut tx_a, other),
+            }
+        }
+        // Lock released: B can retry successfully.
+        let out = c.run_tx(&mut client_b, vec![], vec![TxItem::update(KV, 3)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn concurrent_write_invalidates_reader() {
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut reader = c.client(false);
+        let mut writer = c.client(false);
+
+        // Reader executes (reads key 7, version 1)...
+        let mut tx_r = TxEngine::begin(300, vec![TxItem::read(KV, 7)], vec![]);
+        let act = tx_r.advance(&mut reader, None);
+        // Serve exactly the execute-phase read, stopping before validation.
+        let act = c.serve_tx_action(&mut reader, &mut tx_r, act);
+        // ...writer commits an update to key 7 in between...
+        let out = c.run_tx(&mut writer, vec![], vec![TxItem::update(KV, 7)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        // ...reader's validation read must now fail.
+        let mut act = act;
+        loop {
+            match act {
+                TxAction::Done(outcome) => {
+                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::ValidationVersion));
+                    break;
+                }
+                other => act = c.serve_tx_action(&mut reader, &mut tx_r, other),
+            }
+        }
+    }
+
+    #[test]
+    fn validation_skips_items_we_wrote() {
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut client = c.client(false);
+        // Read and update the same key: our own lock must not abort us.
+        let out = c.run_tx(
+            &mut client,
+            vec![TxItem::read(KV, 4)],
+            vec![TxItem::update(KV, 4)],
+        );
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn validation_locked_by_other_aborts() {
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut a = c.client(false);
+        let mut b = c.client(false);
+
+        // A reads key 9 (execute).
+        let mut tx_a = TxEngine::begin(400, vec![TxItem::read(KV, 9)], vec![]);
+        let act = tx_a.advance(&mut a, None);
+        let act_after_read = c.serve_tx_action(&mut a, &mut tx_a, act);
+
+        // B acquires the lock on 9 and holds it (no commit yet).
+        let mut tx_b = TxEngine::begin(500, vec![], vec![TxItem::update(KV, 9)]);
+        let act_b = tx_b.advance(&mut b, None);
+        let _pending_b = c.serve_tx_action(&mut b, &mut tx_b, act_b);
+
+        // A validates: sees the foreign lock -> abort.
+        let mut act = act_after_read;
+        loop {
+            match act {
+                TxAction::Done(outcome) => {
+                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::ValidationLocked));
+                    break;
+                }
+                other => act = c.serve_tx_action(&mut a, &mut tx_a, other),
+            }
+        }
+    }
+
+    #[test]
+    fn rpc_only_tx_works() {
+        let mut c = cluster(2, 1 << 8, 2);
+        c.load(KV, 1..=50);
+        let mut client = c.rpc_only_client();
+        let out = c.run_tx(
+            &mut client,
+            vec![TxItem::read(KV, 10)],
+            vec![TxItem::update(KV, 20)],
+        );
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn tx_stats_count_reads_and_rpcs() {
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut client = c.client(false);
+        let mut tx = TxEngine::begin(600, vec![TxItem::read(KV, 2)], vec![TxItem::update(KV, 3)]);
+        let mut act = tx.advance(&mut client, None);
+        loop {
+            match act {
+                TxAction::Done(_) => break,
+                other => act = c.serve_tx_action(&mut client, &mut tx, other),
+            }
+        }
+        // 1 execute read + 1 validation read; 1 lock RPC + 1 commit RPC.
+        assert_eq!(tx.reads_issued, 2);
+        assert_eq!(tx.rpcs_issued, 2);
+    }
+}

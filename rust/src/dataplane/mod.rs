@@ -1,0 +1,28 @@
+//! The Storm dataplane (paper §5).
+//!
+//! Two independent data paths — one-sided remote reads and write-based
+//! RPCs — drive any data structure implementing the callback API
+//! ([`crate::ds::api`]). The core pieces are deliberately *sans-io* state
+//! machines: they emit [`onetwo::LkAction`] / [`tx::TxAction`] values and
+//! consume completions, so the identical protocol logic runs under the
+//! discrete-event simulator (for the paper's figures) and the live
+//! loopback fabric (for the end-to-end examples).
+//!
+//! * [`onetwo`] — the **one-two-sided** lookup: try a fine-grained
+//!   one-sided read first; if it shows pointer chasing is needed, switch
+//!   to a write-based RPC (paper principle #4).
+//! * [`tx`] — the transactional protocol (paper §5.4): optimistic reads
+//!   with execution-phase write locks, validation by one-sided version
+//!   re-reads, commit via RPCs.
+//! * [`rpc`] — write-with-immediate RPC framing: header layout and wire
+//!   sizes (paper §5.2).
+
+pub mod live;
+pub mod local;
+pub mod onetwo;
+pub mod rpc;
+pub mod tx;
+
+pub use onetwo::{DsCallbacks, LkAction, LkResult, LookupSm, ReadView};
+pub use rpc::{RpcHeader, RPC_HEADER_BYTES};
+pub use tx::{TxAction, TxEngine, TxInput, TxItem, TxOutcome, WriteKind};

@@ -1,0 +1,345 @@
+//! One-two-sided lookups (paper design principle #4, Algorithm 1).
+//!
+//! A lookup first asks the data structure for a guessed location
+//! (`lookup_start`) and issues a fine-grained one-sided read. If the read
+//! resolves the item (`lookup_end` succeeds) the operation used zero
+//! remote CPU. If the read shows pointer chasing is needed — the key is on
+//! an overflow chain — the dataplane *switches* to a write-based RPC so the
+//! owner walks the chain locally and replies in one more round trip.
+//!
+//! [`LookupSm`] is the sans-io state machine version of the paper's
+//! Algorithm 1; both the simulator and the live loopback driver run it.
+
+use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version};
+use crate::ds::mica::{BucketView, ItemView};
+use crate::mem::RemoteAddr;
+
+/// What a one-sided read returned (the two read granularities the MICA
+/// client understands).
+#[derive(Clone, Debug)]
+pub enum ReadView {
+    /// Whole-bucket read (the default `lookup_start` guess).
+    Bucket(BucketView),
+    /// Single-item read (cached-address fast path); `None` when the
+    /// address no longer maps to a live item.
+    Item(Option<ItemView>),
+    /// Hopscotch neighborhood read (the FaRM baseline's large read).
+    Neighborhood(crate::ds::hopscotch::NeighborhoodView),
+}
+
+/// The data-structure side of the dataplane (paper Table 3), object-id
+/// multiplexed. Implemented by the simulator's and the live driver's
+/// client state.
+pub trait DsCallbacks {
+    /// `lookup_start`: where should a one-sided read go? `None` = this
+    /// lookup must use an RPC (RPC-only configs, or DS without read
+    /// support).
+    fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint>;
+    /// `lookup_end` over a one-sided read result.
+    fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome;
+    /// `lookup_end` after an RPC (paper: always invoked, so the DS can
+    /// cache the returned address).
+    fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse);
+    /// Owner node of a key.
+    fn owner(&self, obj: ObjectId, key: u64) -> u32;
+}
+
+/// Action the dataplane must perform next for a lookup.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LkAction {
+    /// Issue a one-sided read.
+    Read {
+        /// Data structure the address belongs to (read routing).
+        obj: ObjectId,
+        /// Key the read resolves (drivers may need it: oracle serving in
+        /// the simulator, RPC fallback for unmirrored regions live).
+        key: u64,
+        /// Owner node.
+        node: u32,
+        /// Location.
+        addr: RemoteAddr,
+        /// Bytes.
+        len: u32,
+    },
+    /// Issue a write-based RPC.
+    Rpc {
+        /// Destination node.
+        node: u32,
+        /// Request.
+        req: RpcRequest,
+    },
+    /// Lookup finished.
+    Done(LkResult),
+}
+
+/// Completed lookup.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LkResult {
+    /// Key found?
+    pub found: bool,
+    /// Version when found.
+    pub version: Version,
+    /// Exact item address when known (for OCC validation reads).
+    pub addr: Option<RemoteAddr>,
+    /// Owner node.
+    pub node: u32,
+    /// Item was write-locked when observed.
+    pub locked: bool,
+    /// One-sided reads issued.
+    pub reads: u32,
+    /// RPCs issued.
+    pub rpcs: u32,
+}
+
+enum LkState {
+    Init,
+    WaitRead { reads: u32 },
+    WaitRpc { node: u32, reads: u32 },
+    Done,
+}
+
+/// Sans-io one-two-sided lookup state machine.
+pub struct LookupSm {
+    /// Data structure instance.
+    pub obj: ObjectId,
+    /// Key being looked up.
+    pub key: u64,
+    state: LkState,
+}
+
+/// Input to [`LookupSm::advance`].
+#[derive(Clone, Debug)]
+pub enum LkInput {
+    /// One-sided read completed.
+    Read(ReadView),
+    /// RPC response arrived.
+    Rpc(RpcResponse),
+}
+
+impl LookupSm {
+    /// New lookup for `(obj, key)`.
+    pub fn new(obj: ObjectId, key: u64) -> Self {
+        LookupSm { obj, key, state: LkState::Init }
+    }
+
+    /// Drive the machine: pass `None` initially, then the completion of
+    /// whatever action was returned.
+    pub fn advance(&mut self, cb: &mut impl DsCallbacks, input: Option<LkInput>) -> LkAction {
+        match (&self.state, input) {
+            (LkState::Init, None) => match cb.lookup_start(self.obj, self.key) {
+                Some(hint) => {
+                    self.state = LkState::WaitRead { reads: 1 };
+                    LkAction::Read {
+                        obj: self.obj,
+                        key: self.key,
+                        node: hint.node,
+                        addr: hint.addr,
+                        len: hint.len,
+                    }
+                }
+                None => {
+                    let node = cb.owner(self.obj, self.key);
+                    self.state = LkState::WaitRpc { node, reads: 0 };
+                    LkAction::Rpc { node, req: self.read_rpc() }
+                }
+            },
+            (LkState::WaitRead { reads }, Some(LkInput::Read(view))) => {
+                let reads = *reads;
+                match cb.lookup_end_read(self.obj, self.key, &view) {
+                    LookupOutcome::Hit { version, addr, locked } => {
+                        self.state = LkState::Done;
+                        LkAction::Done(LkResult {
+                            found: true,
+                            version,
+                            addr: Some(addr),
+                            node: cb.owner(self.obj, self.key),
+                            locked,
+                            reads,
+                            rpcs: 0,
+                        })
+                    }
+                    LookupOutcome::Absent => {
+                        self.state = LkState::Done;
+                        LkAction::Done(LkResult {
+                            found: false,
+                            version: 0,
+                            addr: None,
+                            node: cb.owner(self.obj, self.key),
+                            locked: false,
+                            reads,
+                            rpcs: 0,
+                        })
+                    }
+                    LookupOutcome::NeedRpc => {
+                        // The one-sided read revealed pointer chasing:
+                        // switch sides (one-two-sided).
+                        let node = cb.owner(self.obj, self.key);
+                        self.state = LkState::WaitRpc { node, reads };
+                        LkAction::Rpc { node, req: self.read_rpc() }
+                    }
+                }
+            }
+            (LkState::WaitRpc { node, reads }, Some(LkInput::Rpc(resp))) => {
+                let (node, reads) = (*node, *reads);
+                cb.lookup_end_rpc(self.obj, self.key, node, &resp);
+                self.state = LkState::Done;
+                let res = match resp.result {
+                    RpcResult::Value { version, addr, .. } => LkResult {
+                        found: true,
+                        version,
+                        addr: Some(addr),
+                        node,
+                        locked: false,
+                        reads,
+                        rpcs: 1,
+                    },
+                    _ => LkResult {
+                        found: false,
+                        version: 0,
+                        addr: None,
+                        node,
+                        locked: false,
+                        reads,
+                        rpcs: 1,
+                    },
+                };
+                LkAction::Done(res)
+            }
+            _ => panic!("LookupSm driven out of order"),
+        }
+    }
+
+    fn read_rpc(&self) -> RpcRequest {
+        RpcRequest { obj: self.obj, key: self.key, op: RpcOp::Read, tx_id: 0, value: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::mica::{MicaClient, MicaConfig, MicaTable};
+    use crate::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable};
+
+    /// Single-node test harness implementing DsCallbacks over one shard.
+    struct Harness {
+        client: MicaClient,
+        rpc_only: bool,
+    }
+
+    impl DsCallbacks for Harness {
+        fn lookup_start(&mut self, _obj: ObjectId, key: u64) -> Option<LookupHint> {
+            if self.rpc_only {
+                None
+            } else {
+                Some(self.client.lookup_start(key))
+            }
+        }
+        fn lookup_end_read(&mut self, _obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+            match view {
+                ReadView::Bucket(b) => self.client.lookup_end_bucket(key, b),
+                ReadView::Item(i) => self.client.lookup_end_item(key, *i),
+                ReadView::Neighborhood(_) => unreachable!("MICA harness"),
+            }
+        }
+        fn lookup_end_rpc(&mut self, _obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
+            if let RpcResult::Value { addr, .. } = &resp.result {
+                self.client.record_rpc_addr(key, node, *addr);
+            }
+        }
+        fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
+            self.client.owner(key)
+        }
+    }
+
+    fn setup(buckets: u64, width: u32) -> (MicaTable, Harness, ContiguousAllocator, RegionTable) {
+        let mut regions = RegionTable::new();
+        let cfg = MicaConfig { buckets, width, value_len: 112, store_values: false };
+        let table = MicaTable::new(cfg.clone(), &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        let alloc = ContiguousAllocator::new(64 << 20, 16, RegionMode::Virtual(PageSize::Huge2M));
+        let client = MicaClient::new(ObjectId(0), &cfg, 1, vec![table.bucket_region]);
+        (table, Harness { client, rpc_only: false }, alloc, regions)
+    }
+
+    /// Executes a lookup against the table, simulating the fabric inline.
+    fn run_lookup(table: &MicaTable, h: &mut Harness, key: u64) -> LkResult {
+        let mut sm = LookupSm::new(ObjectId(0), key);
+        let mut action = sm.advance(h, None);
+        loop {
+            match action {
+                LkAction::Read { addr, len, .. } => {
+                    let bb = table.config().bucket_bytes();
+                    let view = if len == bb && addr.region == table.bucket_region {
+                        ReadView::Bucket(table.bucket_view(addr.offset / bb as u64))
+                    } else {
+                        ReadView::Item(table.item_view(addr))
+                    };
+                    action = sm.advance(h, Some(LkInput::Read(view)));
+                }
+                LkAction::Rpc { req, .. } => {
+                    let (result, hops) = table.get(req.key);
+                    action = sm.advance(h, Some(LkInput::Rpc(RpcResponse { result, hops })));
+                }
+                LkAction::Done(res) => return res,
+            }
+        }
+    }
+
+    #[test]
+    fn inline_hit_uses_one_read_zero_rpcs() {
+        let (mut t, mut h, mut a, mut r) = setup(256, 2);
+        t.insert(42, None, &mut a, &mut r);
+        let res = run_lookup(&t, &mut h, 42);
+        assert!(res.found);
+        assert_eq!((res.reads, res.rpcs), (1, 0));
+        assert_eq!(res.version, 1);
+        assert!(res.addr.is_some());
+    }
+
+    #[test]
+    fn chained_key_falls_back_to_rpc() {
+        let (mut t, mut h, mut a, mut r) = setup(1, 1);
+        t.insert(1, None, &mut a, &mut r);
+        t.insert(2, None, &mut a, &mut r); // chained behind 1
+        let res = run_lookup(&t, &mut h, 2);
+        assert!(res.found);
+        assert_eq!((res.reads, res.rpcs), (1, 1), "one-two-sided: read then RPC");
+    }
+
+    #[test]
+    fn absent_key_resolved_by_single_read() {
+        let (mut t, mut h, mut a, mut r) = setup(256, 2);
+        t.insert(1, None, &mut a, &mut r);
+        let res = run_lookup(&t, &mut h, 999_999);
+        assert!(!res.found);
+        assert_eq!((res.reads, res.rpcs), (1, 0));
+    }
+
+    #[test]
+    fn rpc_only_mode_skips_reads() {
+        let (mut t, mut h, mut a, mut r) = setup(256, 2);
+        h.rpc_only = true;
+        t.insert(7, None, &mut a, &mut r);
+        let res = run_lookup(&t, &mut h, 7);
+        assert!(res.found);
+        assert_eq!((res.reads, res.rpcs), (0, 1));
+    }
+
+    #[test]
+    fn rpc_result_populates_cache_for_next_lookup() {
+        let (mut t, mut h, mut a, mut r) = setup(1, 1);
+        h.client = MicaClient::new(
+            ObjectId(0),
+            &t.config().clone(),
+            1,
+            vec![t.bucket_region],
+        )
+        .with_cache();
+        t.insert(1, None, &mut a, &mut r);
+        t.insert(2, None, &mut a, &mut r); // chained
+        let first = run_lookup(&t, &mut h, 2);
+        assert_eq!((first.reads, first.rpcs), (1, 1));
+        // Second lookup goes straight to the cached exact address: 1 read.
+        let second = run_lookup(&t, &mut h, 2);
+        assert_eq!((second.reads, second.rpcs), (1, 0), "cached addr avoids the RPC");
+    }
+}

@@ -1,0 +1,407 @@
+//! Storm transactions (paper §5.4, Fig. 3).
+//!
+//! Optimistic concurrency control with execution-phase write locks:
+//!
+//! 1. **Execute** — read-set items are fetched with one-two-sided lookups
+//!    (remote read, RPC fallback); write-set updates are read-for-update
+//!    RPCs that also acquire the item lock. A lock conflict aborts.
+//! 2. **Validate** — each read-set item is re-read with a fine-grained
+//!    one-sided read of its (now known) exact address; a changed version,
+//!    a foreign lock, or a moved item aborts. Items also present in the
+//!    write set are skipped (our own lock pins their version), as are
+//!    items that were absent (no address to validate).
+//! 3. **Commit** — write-set items are applied and unlocked with
+//!    write-based RPCs (updates, inserts, deletes).
+//!
+//! Aborts release all acquired locks via unlock RPCs. The engine is
+//! sans-io and processes one op at a time, matching the paper's blocking
+//! coroutine semantics; the simulator and the live driver feed it
+//! completions.
+
+use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version};
+use crate::ds::mica::ItemView;
+use crate::mem::RemoteAddr;
+
+use super::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
+
+/// Bytes read to validate an item (its inline metadata header).
+pub const VALIDATE_READ_BYTES: u32 = crate::ds::mica::ITEM_HEADER;
+
+/// Kind of write-set operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteKind {
+    /// Read-for-update then overwrite.
+    Update,
+    /// Insert a new item at commit.
+    Insert,
+    /// Delete at commit.
+    Delete,
+}
+
+/// One transaction item.
+#[derive(Clone, Debug)]
+pub struct TxItem {
+    /// Data structure.
+    pub obj: ObjectId,
+    /// Key.
+    pub key: u64,
+    /// Write kind (ignored for read-set items).
+    pub kind: WriteKind,
+    /// New value (live mode).
+    pub value: Option<Vec<u8>>,
+}
+
+impl TxItem {
+    /// Read-set item.
+    pub fn read(obj: ObjectId, key: u64) -> Self {
+        TxItem { obj, key, kind: WriteKind::Update, value: None }
+    }
+    /// Update item.
+    pub fn update(obj: ObjectId, key: u64) -> Self {
+        TxItem { obj, key, kind: WriteKind::Update, value: None }
+    }
+    /// Insert item.
+    pub fn insert(obj: ObjectId, key: u64) -> Self {
+        TxItem { obj, key, kind: WriteKind::Insert, value: None }
+    }
+    /// Delete item.
+    pub fn delete(obj: ObjectId, key: u64) -> Self {
+        TxItem { obj, key, kind: WriteKind::Delete, value: None }
+    }
+    /// Attach a value payload.
+    pub fn with_value(mut self, v: Vec<u8>) -> Self {
+        self.value = Some(v);
+        self
+    }
+}
+
+/// Why a transaction aborted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbortReason {
+    /// Another transaction holds a write lock we need.
+    LockConflict,
+    /// A read-set item changed (version) between execute and validate.
+    ValidationVersion,
+    /// A read-set item was locked by another transaction at validation.
+    ValidationLocked,
+    /// A read-set item moved/disappeared (stale address).
+    ValidationMoved,
+}
+
+/// Final transaction outcome.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TxOutcome {
+    /// Committed; per-write-item results (e.g. Insert may report `Full`).
+    Committed {
+        /// Result for each write-set item, in order.
+        write_results: Vec<RpcResult>,
+    },
+    /// Aborted (caller typically retries).
+    Aborted(AbortReason),
+}
+
+/// Next action the driver must perform.
+#[derive(Clone, Debug)]
+pub enum TxAction {
+    /// One-sided read.
+    Read {
+        /// Data structure the address belongs to (read routing).
+        obj: ObjectId,
+        /// Key being read/validated.
+        key: u64,
+        /// Target node.
+        node: u32,
+        /// Location.
+        addr: RemoteAddr,
+        /// Bytes.
+        len: u32,
+    },
+    /// Write-based RPC.
+    Rpc {
+        /// Destination node.
+        node: u32,
+        /// Request.
+        req: RpcRequest,
+    },
+    /// Transaction finished.
+    Done(TxOutcome),
+}
+
+/// Completion input.
+#[derive(Clone, Debug)]
+pub enum TxInput {
+    /// One-sided read completed.
+    Read(ReadView),
+    /// RPC response.
+    Rpc(RpcResponse),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ReadMeta {
+    version: Version,
+    addr: Option<RemoteAddr>,
+    node: u32,
+    found: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Phase {
+    ExecuteRead(usize),
+    ExecuteWrite(usize),
+    Validate(usize),
+    Commit(usize),
+    AbortUnlock(usize, AbortReason),
+    Done,
+}
+
+/// The sans-io transaction engine.
+pub struct TxEngine {
+    /// Transaction id (lock owner token; nonzero).
+    pub tx_id: u64,
+    read_set: Vec<TxItem>,
+    write_set: Vec<TxItem>,
+    phase: Phase,
+    lookup: Option<LookupSm>,
+    read_meta: Vec<ReadMeta>,
+    /// Indexes into `write_set` whose locks we hold.
+    locks_held: Vec<usize>,
+    write_results: Vec<RpcResult>,
+    /// One-sided reads issued (stats).
+    pub reads_issued: u32,
+    /// RPCs issued (stats).
+    pub rpcs_issued: u32,
+}
+
+impl TxEngine {
+    /// Begin a transaction over the given sets.
+    pub fn begin(tx_id: u64, read_set: Vec<TxItem>, write_set: Vec<TxItem>) -> Self {
+        assert!(tx_id != 0, "tx id 0 is the unlocked marker");
+        TxEngine {
+            tx_id,
+            read_set,
+            write_set,
+            phase: Phase::ExecuteRead(0),
+            lookup: None,
+            read_meta: Vec::new(),
+            locks_held: Vec::new(),
+            write_results: Vec::new(),
+            reads_issued: 0,
+            rpcs_issued: 0,
+        }
+    }
+
+    /// Drive the engine: `None` first, then each completion of the
+    /// previously returned action.
+    pub fn advance(&mut self, cb: &mut impl DsCallbacks, input: Option<TxInput>) -> TxAction {
+        let action = self.step(cb, input);
+        match &action {
+            TxAction::Read { .. } => self.reads_issued += 1,
+            TxAction::Rpc { .. } => self.rpcs_issued += 1,
+            TxAction::Done(_) => {}
+        }
+        action
+    }
+
+    fn step(&mut self, cb: &mut impl DsCallbacks, mut input: Option<TxInput>) -> TxAction {
+        loop {
+            match self.phase {
+                Phase::ExecuteRead(i) => {
+                    if i >= self.read_set.len() {
+                        self.phase = Phase::ExecuteWrite(0);
+                        continue;
+                    }
+                    let lk_input = match input.take() {
+                        Some(TxInput::Read(v)) => Some(LkInput::Read(v)),
+                        Some(TxInput::Rpc(r)) => Some(LkInput::Rpc(r)),
+                        None => None,
+                    };
+                    if self.lookup.is_none() {
+                        debug_assert!(lk_input.is_none(), "input without outstanding lookup");
+                        let item = &self.read_set[i];
+                        self.lookup = Some(LookupSm::new(item.obj, item.key));
+                    }
+                    let sm = self.lookup.as_mut().unwrap();
+                    match sm.advance(cb, lk_input) {
+                        LkAction::Read { obj, key, node, addr, len } => {
+                            return TxAction::Read { obj, key, node, addr, len };
+                        }
+                        LkAction::Rpc { node, req } => return TxAction::Rpc { node, req },
+                        LkAction::Done(res) => {
+                            self.read_meta.push(ReadMeta {
+                                version: res.version,
+                                addr: res.addr,
+                                node: res.node,
+                                found: res.found,
+                            });
+                            self.lookup = None;
+                            self.phase = Phase::ExecuteRead(i + 1);
+                        }
+                    }
+                }
+                Phase::ExecuteWrite(i) => {
+                    if let Some(inp) = input.take() {
+                        // Completion of the LockRead issued for item i.
+                        let resp = match inp {
+                            TxInput::Rpc(r) => r,
+                            TxInput::Read(_) => panic!("unexpected read in execute-write"),
+                        };
+                        match resp.result {
+                            RpcResult::Value { .. } => {
+                                self.locks_held.push(i);
+                                self.phase = Phase::ExecuteWrite(i + 1);
+                            }
+                            RpcResult::LockConflict => {
+                                self.phase = Phase::AbortUnlock(0, AbortReason::LockConflict);
+                            }
+                            RpcResult::NotFound => {
+                                // Missing item: nothing locked; commit will
+                                // surface NotFound for this write.
+                                self.phase = Phase::ExecuteWrite(i + 1);
+                            }
+                            other => panic!("unexpected lock-read result {other:?}"),
+                        }
+                        continue;
+                    }
+                    // Skip items that don't need an execution-phase lock.
+                    let mut j = i;
+                    while j < self.write_set.len() && self.write_set[j].kind != WriteKind::Update
+                    {
+                        j += 1;
+                    }
+                    if j >= self.write_set.len() {
+                        self.phase = Phase::Validate(0);
+                        continue;
+                    }
+                    self.phase = Phase::ExecuteWrite(j);
+                    let item = &self.write_set[j];
+                    let node = cb.owner(item.obj, item.key);
+                    return TxAction::Rpc {
+                        node,
+                        req: RpcRequest {
+                            obj: item.obj,
+                            key: item.key,
+                            op: RpcOp::LockRead,
+                            tx_id: self.tx_id,
+                            value: None,
+                        },
+                    };
+                }
+                Phase::Validate(i) => {
+                    if let Some(inp) = input.take() {
+                        let view = match inp {
+                            TxInput::Read(ReadView::Item(v)) => v,
+                            other => panic!("validation expects item reads, got {other:?}"),
+                        };
+                        let meta = self.read_meta[i];
+                        match Self::check_validation(&self.read_set[i], meta, view) {
+                            Ok(()) => self.phase = Phase::Validate(i + 1),
+                            Err(reason) => self.phase = Phase::AbortUnlock(0, reason),
+                        }
+                        continue;
+                    }
+                    if i >= self.read_set.len() {
+                        self.phase = Phase::Commit(0);
+                        continue;
+                    }
+                    let meta = self.read_meta[i];
+                    let skip = !meta.found
+                        || meta.addr.is_none()
+                        || self.in_write_set(&self.read_set[i]);
+                    if skip {
+                        self.phase = Phase::Validate(i + 1);
+                        continue;
+                    }
+                    return TxAction::Read {
+                        obj: self.read_set[i].obj,
+                        key: self.read_set[i].key,
+                        node: meta.node,
+                        addr: meta.addr.unwrap(),
+                        len: VALIDATE_READ_BYTES,
+                    };
+                }
+                Phase::Commit(i) => {
+                    if let Some(inp) = input.take() {
+                        let resp = match inp {
+                            TxInput::Rpc(r) => r,
+                            TxInput::Read(_) => panic!("unexpected read in commit"),
+                        };
+                        self.write_results.push(resp.result);
+                        self.phase = Phase::Commit(i + 1);
+                        continue;
+                    }
+                    if i >= self.write_set.len() {
+                        self.phase = Phase::Done;
+                        return TxAction::Done(TxOutcome::Committed {
+                            write_results: std::mem::take(&mut self.write_results),
+                        });
+                    }
+                    let item = &self.write_set[i];
+                    let node = cb.owner(item.obj, item.key);
+                    let op = match item.kind {
+                        WriteKind::Update => RpcOp::UpdateUnlock,
+                        WriteKind::Insert => RpcOp::Insert,
+                        WriteKind::Delete => RpcOp::Delete,
+                    };
+                    return TxAction::Rpc {
+                        node,
+                        req: RpcRequest {
+                            obj: item.obj,
+                            key: item.key,
+                            op,
+                            tx_id: self.tx_id,
+                            value: item.value.clone(),
+                        },
+                    };
+                }
+                Phase::AbortUnlock(j, reason) => {
+                    if input.take().is_some() {
+                        self.phase = Phase::AbortUnlock(j + 1, reason);
+                        continue;
+                    }
+                    if j >= self.locks_held.len() {
+                        self.phase = Phase::Done;
+                        return TxAction::Done(TxOutcome::Aborted(reason));
+                    }
+                    let item = &self.write_set[self.locks_held[j]];
+                    let node = cb.owner(item.obj, item.key);
+                    return TxAction::Rpc {
+                        node,
+                        req: RpcRequest {
+                            obj: item.obj,
+                            key: item.key,
+                            op: RpcOp::Unlock,
+                            tx_id: self.tx_id,
+                            value: None,
+                        },
+                    };
+                }
+                Phase::Done => panic!("transaction already finished"),
+            }
+        }
+    }
+
+    fn in_write_set(&self, item: &TxItem) -> bool {
+        self.write_set.iter().any(|w| w.obj == item.obj && w.key == item.key)
+    }
+
+    fn check_validation(
+        item: &TxItem,
+        meta: ReadMeta,
+        view: Option<ItemView>,
+    ) -> Result<(), AbortReason> {
+        match view {
+            Some(v) => {
+                if v.key != item.key {
+                    Err(AbortReason::ValidationMoved)
+                } else if v.version != meta.version {
+                    Err(AbortReason::ValidationVersion)
+                } else if v.locked {
+                    Err(AbortReason::ValidationLocked)
+                } else {
+                    Ok(())
+                }
+            }
+            None => Err(AbortReason::ValidationMoved),
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Types for the Storm data-structure callback API (paper Table 3) and the
+//! RPC opcodes the transactional protocol issues.
+
+use crate::mem::RemoteAddr;
+
+/// Identifies an instance of a remote data structure (paper: "Object ID").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u32);
+
+/// Item version used for optimistic concurrency control.
+pub type Version = u32;
+
+/// What `lookup_start` tells the dataplane to read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LookupHint {
+    /// Node owning the item.
+    pub node: u32,
+    /// Guessed location of the item (or its bucket).
+    pub addr: RemoteAddr,
+    /// Bytes to read.
+    pub len: u32,
+}
+
+/// What `lookup_end` concluded from the returned bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LookupOutcome {
+    /// Item found by the one-sided read.
+    Hit {
+        /// Version observed (for OCC validation).
+        version: Version,
+        /// Exact address of the item (cacheable for later validation reads).
+        addr: RemoteAddr,
+        /// Item was write-locked by some transaction when read.
+        locked: bool,
+    },
+    /// The read proves more pointer chasing is needed: switch to RPC
+    /// (one-two-sided fallback).
+    NeedRpc,
+    /// The read proves the item does not exist.
+    Absent,
+}
+
+/// Data-structure operations carried by write-based RPCs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RpcOp {
+    /// Lookup (server chases the chain).
+    Read,
+    /// Read current version and acquire the write lock (execution phase of
+    /// a Storm transaction, for write-set items).
+    LockRead,
+    /// Install a new value, bump the version, release the lock (commit).
+    UpdateUnlock,
+    /// Release a lock without updating (abort).
+    Unlock,
+    /// Insert a new item.
+    Insert,
+    /// Delete an item.
+    Delete,
+}
+
+/// An RPC request as framed into the write-with-immediate payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RpcRequest {
+    /// Target data structure.
+    pub obj: ObjectId,
+    /// Item key.
+    pub key: u64,
+    /// Operation.
+    pub op: RpcOp,
+    /// Transaction id (lock owner) for lock/commit ops.
+    pub tx_id: u64,
+    /// New value bytes (live mode; `None` in the metadata-only simulator).
+    pub value: Option<Vec<u8>>,
+}
+
+/// Result payload of an RPC.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RpcResult {
+    /// Read/LockRead success.
+    Value {
+        /// Version at the server.
+        version: Version,
+        /// Exact item address (for client-side caching + validation reads).
+        addr: RemoteAddr,
+        /// Value bytes (live mode only).
+        value: Option<Vec<u8>>,
+    },
+    /// Item not present.
+    NotFound,
+    /// Lock already held by another transaction.
+    LockConflict,
+    /// Mutation applied (update/insert/delete/unlock).
+    Ok,
+    /// Insert failed: table full (needs resize).
+    Full,
+}
+
+/// An RPC response, including the serving cost the simulator charges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RpcResponse {
+    /// Operation result.
+    pub result: RpcResult,
+    /// Pointer-chase hops the server performed (drives handler CPU cost
+    /// in the simulator; 0 for an inline hit).
+    pub hops: u32,
+}
+
+impl RpcResponse {
+    /// Response with no chain hops.
+    pub fn inline(result: RpcResult) -> Self {
+        RpcResponse { result, hops: 0 }
+    }
+}

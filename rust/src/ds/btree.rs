@@ -1,0 +1,386 @@
+//! Remote B-link tree (paper §5.5: "For trees, the clients could cache
+//! higher levels of the tree to improve traversals").
+//!
+//! Inner nodes are immutable-ish routing nodes clients cache aggressively;
+//! leaves carry versions. A client traversal consults its cached inner
+//! levels (no network), then issues a single one-sided read for the leaf;
+//! a split detected via the leaf's fence keys invalidates the cached path
+//! and falls back to an RPC traversal — the same one-two-sided pattern.
+//!
+//! This is the "extension" data structure demonstrating that the Storm
+//! callback API is not hash-table specific.
+
+use std::collections::HashMap;
+
+use crate::mem::{MrKey, RegionTable, RemoteAddr};
+
+const LEAF_CAP: usize = 16;
+const INNER_CAP: usize = 16;
+
+/// What a one-sided read of a leaf returns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeafView {
+    /// Low fence key (inclusive).
+    pub low: u64,
+    /// High fence key (exclusive; `u64::MAX` = unbounded).
+    pub high: u64,
+    /// Leaf version (bumped on every mutation incl. splits).
+    pub version: u32,
+    /// Sorted (key, value) pairs.
+    pub entries: Vec<(u64, u64)>,
+}
+
+#[derive(Clone, Debug)]
+struct Leaf {
+    view: LeafView,
+}
+
+#[derive(Clone, Debug)]
+struct Inner {
+    /// Separator keys; child i covers keys < seps[i]; last child the rest.
+    seps: Vec<u64>,
+    children: Vec<NodeId>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum NodeId {
+    Inner(u32),
+    Leaf(u32),
+}
+
+/// Owner-side B-link tree.
+pub struct RemoteBTree {
+    inners: Vec<Inner>,
+    leaves: Vec<Leaf>,
+    root: NodeId,
+    height: u32,
+    /// Region leaves live in (leaf i at offset i * leaf_bytes).
+    pub region: MrKey,
+    leaf_bytes: u32,
+    count: u64,
+}
+
+impl RemoteBTree {
+    /// Empty tree.
+    pub fn new(regions: &mut RegionTable, mode: crate::mem::RegionMode) -> Self {
+        // Reserve space for up to 1M leaves.
+        let leaf_bytes = 512u32;
+        let region = regions.register((1 << 20) * leaf_bytes as u64, mode);
+        RemoteBTree {
+            inners: Vec::new(),
+            leaves: vec![Leaf {
+                view: LeafView { low: 0, high: u64::MAX, version: 1, entries: Vec::new() },
+            }],
+            root: NodeId::Leaf(0),
+            height: 1,
+            region,
+            leaf_bytes,
+            count: 0,
+        }
+    }
+
+    /// Keys stored.
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Tree height (1 = root is a leaf).
+    pub fn height(&self) -> u32 {
+        self.height
+    }
+
+    fn descend(&self, key: u64) -> u32 {
+        let mut node = self.root;
+        loop {
+            match node {
+                NodeId::Leaf(l) => return l,
+                NodeId::Inner(i) => {
+                    let inner = &self.inners[i as usize];
+                    let pos = inner.seps.partition_point(|&s| key >= s);
+                    node = inner.children[pos];
+                }
+            }
+        }
+    }
+
+    /// Address of the leaf currently covering `key`.
+    pub fn leaf_addr(&self, key: u64) -> RemoteAddr {
+        let l = self.descend(key);
+        RemoteAddr { region: self.region, offset: l as u64 * self.leaf_bytes as u64 }
+    }
+
+    /// One-sided read image of the leaf at `addr` (None if out of range).
+    pub fn leaf_view(&self, addr: RemoteAddr) -> Option<LeafView> {
+        if addr.region != self.region {
+            return None;
+        }
+        let idx = (addr.offset / self.leaf_bytes as u64) as usize;
+        self.leaves.get(idx).map(|l| l.view.clone())
+    }
+
+    /// Server-side get.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let l = self.descend(key);
+        let view = &self.leaves[l as usize].view;
+        view.entries.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Insert (owner side; reached via RPC).
+    pub fn insert(&mut self, key: u64, value: u64) {
+        let l = self.descend(key) as usize;
+        let leaf = &mut self.leaves[l].view;
+        match leaf.entries.binary_search_by_key(&key, |&(k, _)| k) {
+            Ok(pos) => {
+                leaf.entries[pos].1 = value;
+                leaf.version += 1;
+                return;
+            }
+            Err(pos) => leaf.entries.insert(pos, (key, value)),
+        }
+        leaf.version += 1;
+        self.count += 1;
+        if self.leaves[l].view.entries.len() > LEAF_CAP {
+            self.split_leaf(l as u32);
+        }
+    }
+
+    fn split_leaf(&mut self, l: u32) {
+        let (mid_key, right_view) = {
+            let leaf = &mut self.leaves[l as usize].view;
+            let mid = leaf.entries.len() / 2;
+            let right_entries = leaf.entries.split_off(mid);
+            let mid_key = right_entries[0].0;
+            let right = LeafView {
+                low: mid_key,
+                high: leaf.high,
+                version: 1,
+                entries: right_entries,
+            };
+            leaf.high = mid_key;
+            leaf.version += 1;
+            (mid_key, right)
+        };
+        let new_leaf = self.leaves.len() as u32;
+        self.leaves.push(Leaf { view: right_view });
+        self.insert_sep(mid_key, NodeId::Leaf(l), NodeId::Leaf(new_leaf));
+    }
+
+    fn insert_sep(&mut self, sep: u64, left: NodeId, right: NodeId) {
+        // Find the parent of `left` (walk from root); if none, grow a root.
+        if self.root == left {
+            let inner = Inner { seps: vec![sep], children: vec![left, right] };
+            self.inners.push(inner);
+            self.root = NodeId::Inner((self.inners.len() - 1) as u32);
+            self.height += 1;
+            return;
+        }
+        let parent = self.find_parent(self.root, left).expect("parent must exist");
+        let inner = &mut self.inners[parent as usize];
+        let pos = inner.seps.partition_point(|&s| sep >= s);
+        inner.seps.insert(pos, sep);
+        inner.children.insert(pos + 1, right);
+        if inner.seps.len() > INNER_CAP {
+            self.split_inner(parent);
+        }
+    }
+
+    fn find_parent(&self, from: NodeId, target: NodeId) -> Option<u32> {
+        if let NodeId::Inner(i) = from {
+            let inner = &self.inners[i as usize];
+            for &c in &inner.children {
+                if c == target {
+                    return Some(i);
+                }
+                if let Some(p) = self.find_parent(c, target) {
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+
+    fn split_inner(&mut self, i: u32) {
+        let (sep, right) = {
+            let inner = &mut self.inners[i as usize];
+            let mid = inner.seps.len() / 2;
+            let sep = inner.seps[mid];
+            let right_seps = inner.seps.split_off(mid + 1);
+            inner.seps.pop(); // the separator moves up
+            let right_children = inner.children.split_off(mid + 1);
+            (sep, Inner { seps: right_seps, children: right_children })
+        };
+        let new_inner = self.inners.len() as u32;
+        self.inners.push(right);
+        self.insert_sep(sep, NodeId::Inner(i), NodeId::Inner(new_inner));
+    }
+
+    /// The routing table a client would cache: separator keys of all inner
+    /// levels flattened to (sep -> leaf addr) boundaries. Clients rebuild
+    /// it via an RPC when stale.
+    pub fn routing_snapshot(&self) -> Vec<(u64, RemoteAddr)> {
+        let mut out = Vec::new();
+        for (i, leaf) in self.leaves.iter().enumerate() {
+            out.push((
+                leaf.view.low,
+                RemoteAddr { region: self.region, offset: i as u64 * self.leaf_bytes as u64 },
+            ));
+        }
+        out.sort_by_key(|&(low, _)| low);
+        out
+    }
+}
+
+/// Client-side cached routing: maps key -> leaf address without network.
+#[derive(Default)]
+pub struct BTreeClientCache {
+    /// Sorted (low fence, leaf addr).
+    route: Vec<(u64, RemoteAddr)>,
+    /// Leaf versions observed (for optimistic validation).
+    pub versions: HashMap<u64, u32>,
+}
+
+/// Client-side outcome of a one-sided leaf read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeLookupOutcome {
+    /// Value found.
+    Hit(u64),
+    /// Key provably absent (leaf covers the key range, key missing).
+    Absent,
+    /// Cached route stale (leaf split/moved): RPC + cache refresh needed.
+    NeedRpc,
+}
+
+impl BTreeClientCache {
+    /// Install a routing snapshot (obtained via RPC).
+    pub fn install(&mut self, snapshot: Vec<(u64, RemoteAddr)>) {
+        self.route = snapshot;
+    }
+
+    /// Leaf address for `key` per the cached route (None when no cache).
+    pub fn route(&self, key: u64) -> Option<RemoteAddr> {
+        if self.route.is_empty() {
+            return None;
+        }
+        let pos = self.route.partition_point(|&(low, _)| low <= key);
+        Some(self.route[pos - 1].1)
+    }
+
+    /// Validate a leaf read against the key (fence check = split detect).
+    pub fn check(key: u64, view: Option<&LeafView>) -> TreeLookupOutcome {
+        match view {
+            Some(v) if key >= v.low && key < v.high => {
+                match v.entries.iter().find(|(k, _)| *k == key) {
+                    Some(&(_, val)) => TreeLookupOutcome::Hit(val),
+                    None => TreeLookupOutcome::Absent,
+                }
+            }
+            _ => TreeLookupOutcome::NeedRpc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{PageSize, RegionMode};
+
+    fn mk() -> RemoteBTree {
+        let mut r = RegionTable::new();
+        RemoteBTree::new(&mut r, RegionMode::Virtual(PageSize::Huge2M))
+    }
+
+    #[test]
+    fn insert_get_many() {
+        let mut t = mk();
+        for k in (1..=2000u64).rev() {
+            t.insert(k, k * 10);
+        }
+        assert_eq!(t.len(), 2000);
+        assert!(t.height() > 1);
+        for k in 1..=2000u64 {
+            assert_eq!(t.get(k), Some(k * 10), "key {k}");
+        }
+        assert_eq!(t.get(5000), None);
+    }
+
+    #[test]
+    fn update_in_place() {
+        let mut t = mk();
+        t.insert(5, 1);
+        t.insert(5, 2);
+        assert_eq!(t.get(5), Some(2));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn leaf_fences_partition_keyspace() {
+        let mut t = mk();
+        for k in 1..=500u64 {
+            t.insert(k, k);
+        }
+        let snap = t.routing_snapshot();
+        assert!(snap.len() > 1);
+        // Every key routes to a leaf whose view covers it.
+        for k in 1..=500u64 {
+            let addr = t.leaf_addr(k);
+            let view = t.leaf_view(addr).unwrap();
+            assert!(k >= view.low && k < view.high, "fences broken for {k}");
+        }
+    }
+
+    #[test]
+    fn client_cached_traversal_one_read() {
+        let mut t = mk();
+        for k in 1..=300u64 {
+            t.insert(k, k + 1000);
+        }
+        let mut cache = BTreeClientCache::default();
+        cache.install(t.routing_snapshot());
+        // Every lookup: route locally, one "read", validate.
+        for k in 1..=300u64 {
+            let addr = cache.route(k).unwrap();
+            let view = t.leaf_view(addr);
+            assert_eq!(BTreeClientCache::check(k, view.as_ref()), TreeLookupOutcome::Hit(k + 1000));
+        }
+        // Absent key inside a covered range.
+        let addr = cache.route(10_000).unwrap();
+        let view = t.leaf_view(addr);
+        assert_eq!(BTreeClientCache::check(10_000, view.as_ref()), TreeLookupOutcome::Absent);
+    }
+
+    #[test]
+    fn stale_route_detected_after_splits() {
+        let mut t = mk();
+        for k in (0..300u64).map(|i| i * 10 + 1) {
+            t.insert(k, k);
+        }
+        let mut cache = BTreeClientCache::default();
+        cache.install(t.routing_snapshot());
+        // Heavy inserts into one region force splits; old route for a key
+        // now maps to a leaf whose fences exclude it.
+        for k in 1000..1400u64 {
+            t.insert(k, k);
+        }
+        let mut saw_stale = false;
+        for k in (1000..1400u64).step_by(7) {
+            let addr = cache.route(k).unwrap();
+            let view = t.leaf_view(addr);
+            if BTreeClientCache::check(k, view.as_ref()) == TreeLookupOutcome::NeedRpc {
+                saw_stale = true;
+            }
+        }
+        assert!(saw_stale, "splits must invalidate some cached routes");
+        // Refresh fixes everything.
+        cache.install(t.routing_snapshot());
+        for k in 1000..1400u64 {
+            let addr = cache.route(k).unwrap();
+            let view = t.leaf_view(addr);
+            assert_eq!(BTreeClientCache::check(k, view.as_ref()), TreeLookupOutcome::Hit(k));
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Hopscotch hash table — the FaRM-style layout (paper §6.1 "FaRM ...
+//! leverages the Hopscotch hashtable algorithm to minimize the number of
+//! round trips").
+//!
+//! Every key lives within a *neighborhood* of `H` consecutive slots
+//! starting at its home bucket, so a single large one-sided read of the
+//! whole neighborhood (H × item size — 8× = 1 KB for the paper's 128-byte
+//! items) finds the key in one round trip. Inserts displace items
+//! hopscotch-style to keep the invariant; when no displacement chain
+//! exists the insert fails (callers resize).
+//!
+//! The Lockfree_FaRM baseline reads `H * item_size` bytes per lookup from
+//! this table, versus Storm's fine-grained single-bucket reads — the
+//! trade-off Fig. 5 quantifies.
+
+use crate::mem::{MrKey, RegionTable, RemoteAddr};
+
+use super::api::{RpcResult, Version};
+use super::mica::fnv1a64;
+
+/// One slot of the hopscotch array.
+#[derive(Clone, Debug, Default)]
+struct Slot {
+    key: u64, // 0 = empty
+    version: Version,
+}
+
+/// Hopscotch table with neighborhood `H`.
+pub struct HopscotchTable {
+    slots: Vec<Slot>,
+    mask: u64,
+    h: u32,
+    item_size: u32,
+    /// Region holding the slot array.
+    pub region: MrKey,
+    count: u64,
+}
+
+/// What a one-sided neighborhood read returns.
+#[derive(Clone, Debug)]
+pub struct NeighborhoodView {
+    /// (key, version) for the H slots starting at the home bucket.
+    pub slots: Vec<(u64, Version)>,
+}
+
+impl HopscotchTable {
+    /// Table with `buckets` slots (power of two), neighborhood `h`.
+    pub fn new(
+        buckets: u64,
+        h: u32,
+        item_size: u32,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) -> Self {
+        assert!(buckets.is_power_of_two() && h >= 1);
+        let region = regions.register(buckets * item_size as u64, mode);
+        HopscotchTable {
+            slots: vec![Slot::default(); buckets as usize],
+            mask: buckets - 1,
+            h,
+            item_size,
+            region,
+            count: 0,
+        }
+    }
+
+    #[inline]
+    fn home(&self, key: u64) -> u64 {
+        fnv1a64(key) & self.mask
+    }
+
+    #[inline]
+    fn idx(&self, base: u64, off: u64) -> usize {
+        ((base + off) & self.mask) as usize
+    }
+
+    /// Items stored.
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Neighborhood size H.
+    pub fn neighborhood(&self) -> u32 {
+        self.h
+    }
+
+    /// Bytes a FaRM-style lookup reads.
+    pub fn read_bytes(&self) -> u32 {
+        self.h * self.item_size
+    }
+
+    /// Address of a key's neighborhood (what FaRM reads).
+    pub fn neighborhood_addr(&self, key: u64) -> RemoteAddr {
+        RemoteAddr { region: self.region, offset: self.home(key) * self.item_size as u64 }
+    }
+
+    /// What the one-sided neighborhood read returns.
+    pub fn neighborhood_view(&self, key: u64) -> NeighborhoodView {
+        let base = self.home(key);
+        let slots = (0..self.h as u64)
+            .map(|off| {
+                let s = &self.slots[self.idx(base, off)];
+                (s.key, s.version)
+            })
+            .collect();
+        NeighborhoodView { slots }
+    }
+
+    /// Client-side check of a neighborhood read (FaRM `lookup_end`).
+    pub fn find_in_view(view: &NeighborhoodView, key: u64) -> Option<Version> {
+        view.slots.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Insert; fails with `Full` when hopscotch displacement cannot bring a
+    /// free slot into the neighborhood.
+    pub fn insert(&mut self, key: u64) -> RpcResult {
+        assert!(key != 0);
+        let base = self.home(key);
+        // Update in place.
+        for off in 0..self.h as u64 {
+            let i = self.idx(base, off);
+            if self.slots[i].key == key {
+                self.slots[i].version = self.slots[i].version.wrapping_add(1);
+                return RpcResult::Ok;
+            }
+        }
+        // Find a free slot within a bounded probe distance.
+        let probe_limit = (self.mask + 1).min(512);
+        let mut free_off = None;
+        for off in 0..probe_limit {
+            if self.slots[self.idx(base, off)].key == 0 {
+                free_off = Some(off);
+                break;
+            }
+        }
+        let mut free_off = match free_off {
+            Some(f) => f,
+            None => return RpcResult::Full,
+        };
+        // Hop the free slot backwards until it's inside the neighborhood.
+        while free_off >= self.h as u64 {
+            // Look for an item in the window [free-H+1, free) that can move
+            // into the free slot while staying in its own neighborhood.
+            let mut moved = false;
+            for cand_off in (free_off.saturating_sub(self.h as u64 - 1))..free_off {
+                let cand_idx = self.idx(base, cand_off);
+                let cand_key = self.slots[cand_idx].key;
+                if cand_key == 0 {
+                    continue;
+                }
+                let cand_home = self.home(cand_key);
+                // Distance from candidate's home to the free slot (cyclic).
+                let free_abs = (base + free_off) & self.mask;
+                let dist = (free_abs.wrapping_sub(cand_home)) & self.mask;
+                if dist < self.h as u64 {
+                    // Move candidate into the free slot.
+                    let free_idx = self.idx(base, free_off);
+                    self.slots[free_idx] = self.slots[cand_idx].clone();
+                    self.slots[free_idx].version = self.slots[free_idx].version.wrapping_add(1);
+                    self.slots[cand_idx] = Slot::default();
+                    free_off = cand_off;
+                    moved = true;
+                    break;
+                }
+            }
+            if !moved {
+                return RpcResult::Full;
+            }
+        }
+        let i = self.idx(base, free_off);
+        self.slots[i] = Slot { key, version: 1 };
+        self.count += 1;
+        RpcResult::Ok
+    }
+
+    /// Server-side get (for when FaRM falls back to messaging).
+    pub fn get(&self, key: u64) -> Option<Version> {
+        let base = self.home(key);
+        for off in 0..self.h as u64 {
+            let s = &self.slots[self.idx(base, off)];
+            if s.key == key {
+                return Some(s.version);
+            }
+        }
+        None
+    }
+
+    /// Delete a key.
+    pub fn delete(&mut self, key: u64) -> RpcResult {
+        let base = self.home(key);
+        for off in 0..self.h as u64 {
+            let i = self.idx(base, off);
+            if self.slots[i].key == key {
+                self.slots[i] = Slot::default();
+                self.count -= 1;
+                return RpcResult::Ok;
+            }
+        }
+        RpcResult::NotFound
+    }
+
+    /// Occupancy.
+    pub fn occupancy(&self) -> f64 {
+        self.count as f64 / self.slots.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{PageSize, RegionMode};
+
+    fn mk(buckets: u64, h: u32) -> HopscotchTable {
+        let mut r = RegionTable::new();
+        HopscotchTable::new(buckets, h, 128, &mut r, RegionMode::Virtual(PageSize::Huge2M))
+    }
+
+    #[test]
+    fn single_read_finds_all_keys() {
+        let mut t = mk(1024, 8);
+        for k in 1..=600u64 {
+            assert_eq!(t.insert(k), RpcResult::Ok, "insert {k} at occ {}", t.occupancy());
+        }
+        // Invariant: every key findable in ONE neighborhood read.
+        for k in 1..=600u64 {
+            let view = t.neighborhood_view(k);
+            assert!(HopscotchTable::find_in_view(&view, k).is_some(), "key {k} escaped");
+        }
+    }
+
+    #[test]
+    fn neighborhood_read_is_8x_item() {
+        let t = mk(64, 8);
+        assert_eq!(t.read_bytes(), 1024); // the paper's 8x128B = 1 KB reads
+    }
+
+    #[test]
+    fn displacement_preserves_reachability() {
+        // Small table forces displacements at high occupancy.
+        let mut t = mk(64, 4);
+        let mut inserted = Vec::new();
+        for k in 1..=1000u64 {
+            if t.insert(k) == RpcResult::Ok {
+                inserted.push(k);
+            }
+            if t.occupancy() > 0.85 {
+                break;
+            }
+        }
+        assert!(inserted.len() > 40);
+        for &k in &inserted {
+            assert!(t.get(k).is_some(), "key {k} lost after displacement");
+            let view = t.neighborhood_view(k);
+            assert!(HopscotchTable::find_in_view(&view, k).is_some());
+        }
+    }
+
+    #[test]
+    fn full_table_rejects() {
+        let mut t = mk(8, 2);
+        let mut fails = 0;
+        for k in 1..=64u64 {
+            if t.insert(k) == RpcResult::Full {
+                fails += 1;
+            }
+        }
+        assert!(fails > 0, "tiny table must eventually reject");
+        assert!(t.len() <= 8);
+    }
+
+    #[test]
+    fn update_bumps_version_delete_removes() {
+        let mut t = mk(64, 8);
+        t.insert(9);
+        t.insert(9);
+        assert_eq!(t.get(9), Some(2));
+        assert_eq!(t.delete(9), RpcResult::Ok);
+        assert_eq!(t.get(9), None);
+        assert_eq!(t.delete(9), RpcResult::NotFound);
+    }
+
+    #[test]
+    fn view_miss_for_absent_key() {
+        let mut t = mk(64, 8);
+        t.insert(1);
+        let view = t.neighborhood_view(555);
+        assert!(HopscotchTable::find_in_view(&view, 555).is_none());
+    }
+}

@@ -1,0 +1,984 @@
+//! MICA-derived distributed hash table (paper §5.5).
+//!
+//! The table Storm evaluates: buckets of `width` inline slots, each slot
+//! carrying the key, OCC version and lock *inline with the value* so a
+//! single one-sided read of a bucket is enough to complete a lookup
+//! (zero-copy; the paper's 128-byte transfers = 16 B metadata + 112 B
+//! value). Colliding items overflow into a linked chain that only the
+//! owner's CPU walks — the case where the dataplane falls back to an RPC
+//! (the *one-two-sided* scheme). Oversubscribing buckets (Storm(oversub))
+//! keeps occupancy low so chains are rare.
+//!
+//! The same implementation backs both modes:
+//! * **live** (`store_values = true`): real value bytes, wire-image
+//!   serialization, used over the loopback fabric;
+//! * **simulated** (`store_values = false`): keys/versions/locks only —
+//!   the discrete-event simulator asks "what would this read return".
+//!
+//! Bucket array and chain items are placed through the contiguous
+//! allocator, so MTT/MPT working sets seen by the NIC model are the real
+//! consequence of the table's layout.
+
+use std::collections::HashMap;
+
+use crate::mem::{ContiguousAllocator, MrKey, RegionTable, RemoteAddr};
+
+use super::api::{LookupHint, LookupOutcome, ObjectId, RpcResult, Version};
+
+const NIL: u32 = u32::MAX;
+
+/// Per-item metadata bytes inlined before the value (key + version + flags).
+pub const ITEM_HEADER: u32 = 16;
+
+/// Hash function shared with the L1 Pallas kernel (`python/compile/kernels/
+/// hash_kernel.py`): FNV-1a over the key's 8 little-endian bytes, followed
+/// by a murmur3-style avalanche finalizer. The finalizer matters: raw
+/// FNV-1a of short inputs leaves high bits (used for owner routing)
+/// correlated with low bits (used for bucket indexing), which skews
+/// per-shard collision rates.
+#[inline]
+pub fn fnv1a64(key: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for i in 0..8 {
+        let b = (key >> (8 * i)) & 0xff;
+        h ^= b;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // fmix64 avalanche.
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Owner node for a key: high hash bits.
+#[inline]
+pub fn owner_of(key: u64, nodes: u32) -> u32 {
+    ((fnv1a64(key) >> 40) % nodes as u64) as u32
+}
+
+/// Bucket index for a key: low hash bits.
+#[inline]
+pub fn bucket_of(key: u64, mask: u64) -> u64 {
+    fnv1a64(key) & mask
+}
+
+/// Table geometry and behavior.
+#[derive(Clone, Debug)]
+pub struct MicaConfig {
+    /// Bucket count (power of two).
+    pub buckets: u64,
+    /// Inline slots per bucket (Storm(oversub) uses width 1).
+    pub width: u32,
+    /// Value bytes per item (112 to make 128-byte transfers).
+    pub value_len: u32,
+    /// Keep actual value bytes (live mode) or metadata only (simulation).
+    pub store_values: bool,
+}
+
+impl MicaConfig {
+    /// Bytes per item on the wire.
+    pub fn item_size(&self) -> u32 {
+        ITEM_HEADER + self.value_len
+    }
+
+    /// Bytes per bucket on the wire.
+    pub fn bucket_bytes(&self) -> u32 {
+        self.width * self.item_size()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct Slot {
+    key: u64, // 0 = empty
+    version: Version,
+    lock_tx: u64, // 0 = unlocked
+    value: Option<Box<[u8]>>,
+}
+
+#[derive(Clone, Debug)]
+struct ChainNode {
+    slot: Slot,
+    addr: RemoteAddr,
+    next: u32,
+}
+
+/// What a one-sided read of a whole bucket returns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketView {
+    /// (key, version, locked) per occupied-or-empty inline slot.
+    pub slots: Vec<(u64, Version, bool)>,
+    /// True when an overflow chain hangs off this bucket (flag bit the
+    /// owner maintains in the bucket image).
+    pub has_chain: bool,
+}
+
+/// What a one-sided read of a single item header returns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ItemView {
+    /// Key stored at that address (0 if the slot is empty).
+    pub key: u64,
+    /// Current version.
+    pub version: Version,
+    /// Write-locked?
+    pub locked: bool,
+}
+
+/// One node's shard of the distributed table (owner side).
+pub struct MicaTable {
+    cfg: MicaConfig,
+    mask: u64,
+    /// Region holding the bucket array.
+    pub bucket_region: MrKey,
+    slots: Vec<Slot>,
+    chain_heads: Vec<u32>,
+    chains: Vec<ChainNode>,
+    free_chain: Vec<u32>,
+    /// Reverse map for one-sided reads of chain items: addr -> chain idx.
+    chain_addr: HashMap<(u32, u64), u32>,
+    count: u64,
+}
+
+impl MicaTable {
+    /// Build an empty shard; registers the bucket array as one region.
+    pub fn new(cfg: MicaConfig, regions: &mut RegionTable, mode: crate::mem::RegionMode) -> Self {
+        assert!(cfg.buckets.is_power_of_two(), "bucket count must be a power of two");
+        assert!(cfg.width >= 1);
+        let total = cfg.buckets * cfg.bucket_bytes() as u64;
+        let bucket_region = regions.register(total.max(1), mode);
+        let n_slots = (cfg.buckets * cfg.width as u64) as usize;
+        MicaTable {
+            mask: cfg.buckets - 1,
+            bucket_region,
+            slots: vec![Slot::default(); n_slots],
+            chain_heads: vec![NIL; cfg.buckets as usize],
+            chains: Vec::new(),
+            free_chain: Vec::new(),
+            chain_addr: HashMap::new(),
+            count: 0,
+            cfg,
+        }
+    }
+
+    /// Geometry.
+    pub fn config(&self) -> &MicaConfig {
+        &self.cfg
+    }
+
+    /// Items stored.
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no items are stored.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Occupancy: items / inline capacity.
+    pub fn occupancy(&self) -> f64 {
+        self.count as f64 / (self.cfg.buckets * self.cfg.width as u64) as f64
+    }
+
+    #[inline]
+    fn bucket_index(&self, key: u64) -> u64 {
+        bucket_of(key, self.mask)
+    }
+
+    #[inline]
+    fn slot_range(&self, bucket: u64) -> std::ops::Range<usize> {
+        let w = self.cfg.width as usize;
+        let start = bucket as usize * w;
+        start..start + w
+    }
+
+    /// Remote address of a bucket.
+    pub fn bucket_addr(&self, bucket: u64) -> RemoteAddr {
+        RemoteAddr {
+            region: self.bucket_region,
+            offset: bucket * self.cfg.bucket_bytes() as u64,
+        }
+    }
+
+    /// Remote address of an inline slot.
+    fn slot_addr(&self, slot_idx: usize) -> RemoteAddr {
+        let w = self.cfg.width as usize;
+        let bucket = (slot_idx / w) as u64;
+        let within = (slot_idx % w) as u64;
+        RemoteAddr {
+            region: self.bucket_region,
+            offset: bucket * self.cfg.bucket_bytes() as u64 + within * self.cfg.item_size() as u64,
+        }
+    }
+
+    fn mk_value(&self, value: Option<&[u8]>) -> Option<Box<[u8]>> {
+        if self.cfg.store_values {
+            Some(value.map(|v| v.into()).unwrap_or_else(|| {
+                vec![0u8; self.cfg.value_len as usize].into_boxed_slice()
+            }))
+        } else {
+            None
+        }
+    }
+
+    /// Insert `key`. Chain items are placed via `alloc`/`regions`.
+    /// Returns `Ok` (with the item's address via get) or `Full`.
+    pub fn insert(
+        &mut self,
+        key: u64,
+        value: Option<&[u8]>,
+        alloc: &mut ContiguousAllocator,
+        regions: &mut RegionTable,
+    ) -> RpcResult {
+        assert!(key != 0, "key 0 is the empty marker");
+        let bucket = self.bucket_index(key);
+        // Update in place if present.
+        let stored = self.mk_value(value);
+        if let Some((r, _)) = self.find_mut(key) {
+            r.version = r.version.wrapping_add(1);
+            r.value = stored;
+            return RpcResult::Ok;
+        }
+        // Free inline slot?
+        for i in self.slot_range(bucket) {
+            if self.slots[i].key == 0 {
+                self.slots[i] =
+                    Slot { key, version: 1, lock_tx: 0, value: stored };
+                self.count += 1;
+                return RpcResult::Ok;
+            }
+        }
+        // Chain.
+        let addr = match alloc.alloc(self.cfg.item_size() as u64, regions) {
+            Ok(a) => a,
+            Err(_) => return RpcResult::Full,
+        };
+        let node = ChainNode {
+            slot: Slot { key, version: 1, lock_tx: 0, value: stored },
+            addr,
+            next: self.chain_heads[bucket as usize],
+        };
+        let idx = if let Some(free) = self.free_chain.pop() {
+            self.chains[free as usize] = node;
+            free
+        } else {
+            self.chains.push(node);
+            (self.chains.len() - 1) as u32
+        };
+        self.chain_addr.insert((addr.region.0, addr.offset), idx);
+        self.chain_heads[bucket as usize] = idx;
+        self.count += 1;
+        RpcResult::Ok
+    }
+
+    /// Find a key: inline slot or chain node, with hop count.
+    fn find(&self, key: u64) -> Option<(&Slot, RemoteAddr, u32)> {
+        let bucket = self.bucket_index(key);
+        for i in self.slot_range(bucket) {
+            if self.slots[i].key == key {
+                return Some((&self.slots[i], self.slot_addr(i), 0));
+            }
+        }
+        let mut hops = 1;
+        let mut cur = self.chain_heads[bucket as usize];
+        while cur != NIL {
+            let node = &self.chains[cur as usize];
+            if node.slot.key == key {
+                return Some((&node.slot, node.addr, hops));
+            }
+            cur = node.next;
+            hops += 1;
+        }
+        None
+    }
+
+    fn find_mut(&mut self, key: u64) -> Option<(&mut Slot, RemoteAddr)> {
+        let bucket = self.bucket_index(key);
+        for i in self.slot_range(bucket) {
+            if self.slots[i].key == key {
+                let addr = self.slot_addr(i);
+                return Some((&mut self.slots[i], addr));
+            }
+        }
+        let mut cur = self.chain_heads[bucket as usize];
+        while cur != NIL {
+            if self.chains[cur as usize].slot.key == key {
+                let addr = self.chains[cur as usize].addr;
+                return Some((&mut self.chains[cur as usize].slot, addr));
+            }
+            cur = self.chains[cur as usize].next;
+        }
+        None
+    }
+
+    /// Server-side lookup (the `rpc_handler` READ path). Returns the result
+    /// and the chain hops performed (simulator charges CPU per hop).
+    pub fn get(&self, key: u64) -> (RpcResult, u32) {
+        match self.find(key) {
+            Some((slot, addr, hops)) => (
+                RpcResult::Value {
+                    version: slot.version,
+                    addr,
+                    value: slot.value.clone().map(|b| b.to_vec()),
+                },
+                hops,
+            ),
+            None => (RpcResult::NotFound, self.chain_len(self.bucket_index(key))),
+        }
+    }
+
+    /// Read version + acquire the write lock for transaction `tx_id`.
+    pub fn lock_read(&mut self, key: u64, tx_id: u64) -> (RpcResult, u32) {
+        assert!(tx_id != 0);
+        let (res, hops) = match self.find_mut(key) {
+            Some((slot, addr)) => {
+                if slot.lock_tx != 0 && slot.lock_tx != tx_id {
+                    (RpcResult::LockConflict, 0)
+                } else {
+                    slot.lock_tx = tx_id;
+                    (
+                        RpcResult::Value {
+                            version: slot.version,
+                            addr,
+                            value: slot.value.clone().map(|b| b.to_vec()),
+                        },
+                        0,
+                    )
+                }
+            }
+            None => (RpcResult::NotFound, 0),
+        };
+        (res, hops)
+    }
+
+    /// Install a new value, bump version, release the lock (commit).
+    pub fn update_unlock(&mut self, key: u64, tx_id: u64, value: Option<&[u8]>) -> RpcResult {
+        let stored = self.mk_value(value);
+        match self.find_mut(key) {
+            Some((slot, _)) => {
+                if slot.lock_tx != tx_id {
+                    return RpcResult::LockConflict;
+                }
+                slot.version = slot.version.wrapping_add(1);
+                slot.value = stored;
+                slot.lock_tx = 0;
+                RpcResult::Ok
+            }
+            None => RpcResult::NotFound,
+        }
+    }
+
+    /// Release a lock without updating (abort path).
+    pub fn unlock(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        match self.find_mut(key) {
+            Some((slot, _)) => {
+                if slot.lock_tx == tx_id {
+                    slot.lock_tx = 0;
+                }
+                RpcResult::Ok
+            }
+            None => RpcResult::NotFound,
+        }
+    }
+
+    /// Delete a key. Chain nodes are unlinked and their memory freed.
+    pub fn delete(
+        &mut self,
+        key: u64,
+        alloc: &mut ContiguousAllocator,
+    ) -> (RpcResult, u32) {
+        let bucket = self.bucket_index(key);
+        for i in self.slot_range(bucket) {
+            if self.slots[i].key == key {
+                self.slots[i] = Slot::default();
+                self.count -= 1;
+                return (RpcResult::Ok, 0);
+            }
+        }
+        let mut prev = NIL;
+        let mut cur = self.chain_heads[bucket as usize];
+        let mut hops = 1;
+        while cur != NIL {
+            if self.chains[cur as usize].slot.key == key {
+                let next = self.chains[cur as usize].next;
+                if prev == NIL {
+                    self.chain_heads[bucket as usize] = next;
+                } else {
+                    self.chains[prev as usize].next = next;
+                }
+                let addr = self.chains[cur as usize].addr;
+                self.chain_addr.remove(&(addr.region.0, addr.offset));
+                alloc.free(addr, self.cfg.item_size() as u64);
+                self.chains[cur as usize].slot = Slot::default();
+                self.free_chain.push(cur);
+                self.count -= 1;
+                return (RpcResult::Ok, hops);
+            }
+            prev = cur;
+            cur = self.chains[cur as usize].next;
+            hops += 1;
+        }
+        (RpcResult::NotFound, hops)
+    }
+
+    fn chain_len(&self, bucket: u64) -> u32 {
+        let mut n = 0;
+        let mut cur = self.chain_heads[bucket as usize];
+        while cur != NIL {
+            n += 1;
+            cur = self.chains[cur as usize].next;
+        }
+        n
+    }
+
+    /// What a one-sided read of bucket `bucket` returns.
+    pub fn bucket_view(&self, bucket: u64) -> BucketView {
+        let slots = self
+            .slot_range(bucket)
+            .map(|i| {
+                let s = &self.slots[i];
+                (s.key, s.version, s.lock_tx != 0)
+            })
+            .collect();
+        BucketView { slots, has_chain: self.chain_heads[bucket as usize] != NIL }
+    }
+
+    /// What a one-sided read of an item header at `addr` returns, or `None`
+    /// if the address maps to nothing this table owns (stale cached addr
+    /// after resize — client must fall back to RPC).
+    pub fn item_view(&self, addr: RemoteAddr) -> Option<ItemView> {
+        if addr.region == self.bucket_region {
+            let bb = self.cfg.bucket_bytes() as u64;
+            let bucket = addr.offset / bb;
+            let within = (addr.offset % bb) / self.cfg.item_size() as u64;
+            if bucket >= self.cfg.buckets || within >= self.cfg.width as u64 {
+                return None;
+            }
+            let idx = (bucket * self.cfg.width as u64 + within) as usize;
+            let s = &self.slots[idx];
+            return Some(ItemView { key: s.key, version: s.version, locked: s.lock_tx != 0 });
+        }
+        let idx = *self.chain_addr.get(&(addr.region.0, addr.offset))?;
+        let s = &self.chains[idx as usize].slot;
+        Some(ItemView { key: s.key, version: s.version, locked: s.lock_tx != 0 })
+    }
+
+    /// Fraction of present keys reachable by a single bucket read
+    /// (inline), vs. needing chain RPCs — drives the one-two-sided mix.
+    pub fn inline_fraction(&self) -> f64 {
+        if self.count == 0 {
+            return 1.0;
+        }
+        let inline = self.slots.iter().filter(|s| s.key != 0).count() as f64;
+        inline / self.count as f64
+    }
+
+    /// Resize to `new_buckets` (power of two), rehashing in place (paper
+    /// principle 5(ii): grow the table when RPC usage becomes excessive).
+    /// Registers a new bucket region; cached client addresses go stale and
+    /// are caught by key/version mismatches on read.
+    pub fn resize(
+        &mut self,
+        new_buckets: u64,
+        alloc: &mut ContiguousAllocator,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) {
+        assert!(new_buckets.is_power_of_two());
+        let mut pairs: Vec<(u64, Version, u64, Option<Box<[u8]>>)> = Vec::new();
+        for s in self.slots.iter_mut() {
+            if s.key != 0 {
+                pairs.push((s.key, s.version, s.lock_tx, s.value.take()));
+            }
+        }
+        for head in self.chain_heads.iter() {
+            let mut cur = *head;
+            while cur != NIL {
+                let node = &mut self.chains[cur as usize];
+                if node.slot.key != 0 {
+                    pairs.push((
+                        node.slot.key,
+                        node.slot.version,
+                        node.slot.lock_tx,
+                        node.slot.value.take(),
+                    ));
+                    alloc.free(node.addr, self.cfg.item_size() as u64);
+                }
+                cur = node.next;
+            }
+        }
+        let cfg = MicaConfig { buckets: new_buckets, ..self.cfg.clone() };
+        *self = MicaTable::new(cfg, regions, mode);
+        for (key, version, lock_tx, value) in pairs {
+            self.insert(key, value.as_deref(), alloc, regions);
+            if let Some((slot, _)) = self.find_mut(key) {
+                slot.version = version.wrapping_add(1);
+                slot.lock_tx = lock_tx;
+            }
+        }
+    }
+}
+
+/// Flags bit: item is write-locked.
+pub const FLAG_LOCKED: u32 = 1;
+/// Flags bit (slot 0 only): bucket has an overflow chain.
+pub const FLAG_HAS_CHAIN: u32 = 2;
+
+/// Serialize one slot into its wire image (live mode).
+fn write_item_image(out: &mut [u8], key: u64, version: Version, flags: u32, value: Option<&[u8]>) {
+    out[0..8].copy_from_slice(&key.to_le_bytes());
+    out[8..12].copy_from_slice(&version.to_le_bytes());
+    out[12..16].copy_from_slice(&flags.to_le_bytes());
+    if let Some(v) = value {
+        let n = v.len().min(out.len() - 16);
+        out[16..16 + n].copy_from_slice(&v[..n]);
+    }
+}
+
+/// Parse a single item header from wire bytes.
+pub fn parse_item_view(bytes: &[u8]) -> Option<ItemView> {
+    if bytes.len() < ITEM_HEADER as usize {
+        return None;
+    }
+    let key = u64::from_le_bytes(bytes[0..8].try_into().ok()?);
+    let version = u32::from_le_bytes(bytes[8..12].try_into().ok()?);
+    let flags = u32::from_le_bytes(bytes[12..16].try_into().ok()?);
+    Some(ItemView { key, version, locked: flags & FLAG_LOCKED != 0 })
+}
+
+/// Parse a whole-bucket read from wire bytes.
+pub fn parse_bucket_view(bytes: &[u8], width: u32, item_size: u32) -> Option<BucketView> {
+    let mut slots = Vec::with_capacity(width as usize);
+    let mut has_chain = false;
+    for i in 0..width {
+        let off = (i * item_size) as usize;
+        let iv = parse_item_view(&bytes[off..off + item_size as usize])?;
+        let flags =
+            u32::from_le_bytes(bytes[off + 12..off + 16].try_into().ok()?);
+        if i == 0 {
+            has_chain = flags & FLAG_HAS_CHAIN != 0;
+        }
+        slots.push((iv.key, iv.version, iv.locked));
+    }
+    Some(BucketView { slots, has_chain })
+}
+
+impl MicaTable {
+    /// Wire image of a bucket (live mode: what a one-sided read returns).
+    pub fn bucket_image(&self, bucket: u64) -> Vec<u8> {
+        let isz = self.cfg.item_size() as usize;
+        let mut out = vec![0u8; self.cfg.bucket_bytes() as usize];
+        let has_chain = self.chain_heads[bucket as usize] != NIL;
+        for (i, si) in self.slot_range(bucket).enumerate() {
+            let s = &self.slots[si];
+            let mut flags = if s.lock_tx != 0 { FLAG_LOCKED } else { 0 };
+            if i == 0 && has_chain {
+                flags |= FLAG_HAS_CHAIN;
+            }
+            write_item_image(
+                &mut out[i * isz..(i + 1) * isz],
+                s.key,
+                s.version,
+                flags,
+                s.value.as_deref(),
+            );
+        }
+        out
+    }
+
+    /// The bucket index a key maps to (for mirroring after mutations).
+    pub fn bucket_index_of(&self, key: u64) -> u64 {
+        self.bucket_index(key)
+    }
+}
+
+/// Client-side resolver for the distributed MICA table: implements
+/// `lookup_start` / `lookup_end` (paper Table 3).
+pub struct MicaClient {
+    /// Data structure id.
+    pub obj: ObjectId,
+    nodes: u32,
+    mask: u64,
+    width: u32,
+    item_size: u32,
+    bucket_bytes: u32,
+    /// Bucket region of each node's shard.
+    region_of: Vec<MrKey>,
+    /// Storm principle 5(i): cache exact item addresses client-side.
+    cache: Option<HashMap<u64, (u32, RemoteAddr)>>,
+}
+
+impl MicaClient {
+    /// Resolver for a table sharded over `nodes` nodes, `region_of[n]`
+    /// being node n's bucket region.
+    pub fn new(obj: ObjectId, cfg: &MicaConfig, nodes: u32, region_of: Vec<MrKey>) -> Self {
+        MicaClient {
+            obj,
+            nodes,
+            mask: cfg.buckets - 1,
+            width: cfg.width,
+            item_size: cfg.item_size(),
+            bucket_bytes: cfg.bucket_bytes(),
+            region_of,
+            cache: None,
+        }
+    }
+
+    /// Enable the client-side address cache.
+    pub fn with_cache(mut self) -> Self {
+        self.cache = Some(HashMap::new());
+        self
+    }
+
+    /// Owner node of `key`.
+    pub fn owner(&self, key: u64) -> u32 {
+        owner_of(key, self.nodes)
+    }
+
+    /// `lookup_start`: guess where a one-sided read should go. Cached exact
+    /// addresses win; otherwise the home bucket.
+    pub fn lookup_start(&self, key: u64) -> LookupHint {
+        if let Some(cache) = &self.cache {
+            if let Some(&(node, addr)) = cache.get(&key) {
+                return LookupHint { node, addr, len: self.item_size };
+            }
+        }
+        let node = self.owner(key);
+        let bucket = bucket_of(key, self.mask);
+        LookupHint {
+            node,
+            addr: RemoteAddr {
+                region: self.region_of[node as usize],
+                offset: bucket * self.bucket_bytes as u64,
+            },
+            len: self.bucket_bytes,
+        }
+    }
+
+    /// `lookup_end` over a whole-bucket read.
+    pub fn lookup_end_bucket(&mut self, key: u64, view: &BucketView) -> LookupOutcome {
+        for (i, &(k, version, locked)) in view.slots.iter().enumerate() {
+            if k == key {
+                let node = self.owner(key);
+                let bucket = bucket_of(key, self.mask);
+                let addr = RemoteAddr {
+                    region: self.region_of[node as usize],
+                    offset: bucket * self.bucket_bytes as u64 + i as u64 * self.item_size as u64,
+                };
+                if let Some(cache) = &mut self.cache {
+                    cache.insert(key, (node, addr));
+                }
+                return LookupOutcome::Hit { version, addr, locked };
+            }
+        }
+        if view.has_chain {
+            LookupOutcome::NeedRpc
+        } else {
+            LookupOutcome::Absent
+        }
+    }
+
+    /// `lookup_end` over a single cached-item read: valid only if the key
+    /// still matches (resize / delete / reuse are caught here).
+    pub fn lookup_end_item(&mut self, key: u64, view: Option<ItemView>) -> LookupOutcome {
+        match view {
+            Some(v) if v.key == key => {
+                let node = self.owner(key);
+                let _ = node;
+                LookupOutcome::Hit {
+                    version: v.version,
+                    addr: self.cached_addr(key).expect("item view implies cached addr").1,
+                    locked: v.locked,
+                }
+            }
+            _ => {
+                // Stale cache entry: drop it and escalate to RPC.
+                if let Some(cache) = &mut self.cache {
+                    cache.remove(&key);
+                }
+                LookupOutcome::NeedRpc
+            }
+        }
+    }
+
+    /// Record the exact address returned by an RPC (paper: `lookup_end` is
+    /// invoked after every RPC lookup "so that the data structure can store
+    /// the returned address for future use").
+    pub fn record_rpc_addr(&mut self, key: u64, node: u32, addr: RemoteAddr) {
+        if let Some(cache) = &mut self.cache {
+            cache.insert(key, (node, addr));
+        }
+    }
+
+    /// Cached (node, addr) for a key, if any.
+    pub fn cached_addr(&self, key: u64) -> Option<(u32, RemoteAddr)> {
+        self.cache.as_ref()?.get(&key).copied()
+    }
+
+    /// Is the hint an exact-item read (cache hit) vs a bucket read?
+    pub fn hint_is_item(&self, hint: &LookupHint) -> bool {
+        hint.len == self.item_size && self.bucket_bytes != self.item_size
+    }
+
+    /// Slots per bucket.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{PageSize, RegionMode};
+
+    fn setup(buckets: u64, width: u32) -> (MicaTable, ContiguousAllocator, RegionTable) {
+        let mut regions = RegionTable::new();
+        let cfg = MicaConfig { buckets, width, value_len: 112, store_values: false };
+        let alloc =
+            ContiguousAllocator::new(64 << 20, 16, RegionMode::Virtual(PageSize::Huge2M));
+        let table = MicaTable::new(cfg, &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        (table, alloc, regions)
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_avalanches() {
+        assert_eq!(fnv1a64(12345), fnv1a64(12345));
+        assert_ne!(fnv1a64(1), fnv1a64(2));
+        // Single-bit input flips should flip ~half the output bits.
+        let mut total = 0;
+        for k in 1..=64u64 {
+            let d = (fnv1a64(k) ^ fnv1a64(k ^ 1)).count_ones();
+            total += d;
+        }
+        let avg = total as f64 / 64.0;
+        assert!((24.0..40.0).contains(&avg), "avalanche avg {avg}");
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let (mut t, mut a, mut r) = setup(16, 2);
+        assert_eq!(t.insert(42, None, &mut a, &mut r), RpcResult::Ok);
+        let (res, hops) = t.get(42);
+        assert_eq!(hops, 0, "inline item needs no chain hops");
+        match res {
+            RpcResult::Value { version, .. } => assert_eq!(version, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(t.get(43).0, RpcResult::NotFound);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn collisions_chain_and_count_hops() {
+        let (mut t, mut a, mut r) = setup(1, 1); // everything collides
+        for k in 1..=4u64 {
+            assert_eq!(t.insert(k, None, &mut a, &mut r), RpcResult::Ok);
+        }
+        assert_eq!(t.len(), 4);
+        // First insert landed inline; the remaining three chained.
+        assert!((t.inline_fraction() - 0.25).abs() < 1e-9);
+        // Deepest chain item needs the most hops.
+        let (_, hops_first_chained) = t.get(2);
+        let (_, hops_last_chained) = t.get(4);
+        assert!(hops_first_chained >= 1);
+        assert!(hops_last_chained <= hops_first_chained);
+    }
+
+    #[test]
+    fn bucket_view_reflects_contents() {
+        let (mut t, mut a, mut r) = setup(1, 2);
+        t.insert(7, None, &mut a, &mut r);
+        let v = t.bucket_view(0);
+        assert_eq!(v.slots.len(), 2);
+        assert_eq!(v.slots[0].0, 7);
+        assert!(!v.has_chain);
+        t.insert(8, None, &mut a, &mut r);
+        t.insert(9, None, &mut a, &mut r); // overflows
+        assert!(t.bucket_view(0).has_chain);
+    }
+
+    #[test]
+    fn lock_protocol() {
+        let (mut t, mut a, mut r) = setup(16, 2);
+        t.insert(5, None, &mut a, &mut r);
+        let (res, _) = t.lock_read(5, 100);
+        assert!(matches!(res, RpcResult::Value { version: 1, .. }));
+        // Second tx conflicts.
+        assert_eq!(t.lock_read(5, 200).0, RpcResult::LockConflict);
+        // Same tx re-locks fine.
+        assert!(matches!(t.lock_read(5, 100).0, RpcResult::Value { .. }));
+        // Commit bumps version and unlocks.
+        assert_eq!(t.update_unlock(5, 100, None), RpcResult::Ok);
+        assert!(matches!(t.lock_read(5, 200).0, RpcResult::Value { version: 2, .. }));
+        // Wrong owner can't commit.
+        assert_eq!(t.update_unlock(5, 999, None), RpcResult::LockConflict);
+        t.unlock(5, 200);
+        assert!(matches!(t.get(5).0, RpcResult::Value { .. }));
+    }
+
+    #[test]
+    fn delete_inline_and_chained() {
+        let (mut t, mut a, mut r) = setup(1, 1);
+        for k in 1..=3u64 {
+            t.insert(k, None, &mut a, &mut r);
+        }
+        assert_eq!(t.delete(2, &mut a).0, RpcResult::Ok); // chained
+        assert_eq!(t.get(2).0, RpcResult::NotFound);
+        assert_eq!(t.delete(1, &mut a).0, RpcResult::Ok); // inline
+        assert_eq!(t.len(), 1);
+        assert!(matches!(t.get(3).0, RpcResult::Value { .. }));
+        assert_eq!(t.delete(99, &mut a).0, RpcResult::NotFound);
+    }
+
+    #[test]
+    fn item_view_inline_and_chain_and_stale() {
+        let (mut t, mut a, mut r) = setup(1, 1);
+        t.insert(1, None, &mut a, &mut r);
+        t.insert(2, None, &mut a, &mut r); // chained
+        let (res, _) = t.get(1);
+        let addr1 = match res {
+            RpcResult::Value { addr, .. } => addr,
+            _ => unreachable!(),
+        };
+        let (res, _) = t.get(2);
+        let addr2 = match res {
+            RpcResult::Value { addr, .. } => addr,
+            _ => unreachable!(),
+        };
+        assert_eq!(t.item_view(addr1).unwrap().key, 1);
+        assert_eq!(t.item_view(addr2).unwrap().key, 2);
+        // Delete 2: its address no longer resolves.
+        t.delete(2, &mut a);
+        assert!(t.item_view(addr2).is_none() || t.item_view(addr2).unwrap().key != 2);
+    }
+
+    #[test]
+    fn values_stored_in_live_mode() {
+        let mut regions = RegionTable::new();
+        let cfg = MicaConfig { buckets: 8, width: 2, value_len: 112, store_values: true };
+        let mut alloc =
+            ContiguousAllocator::new(64 << 20, 4, RegionMode::Virtual(PageSize::Huge2M));
+        let mut t = MicaTable::new(cfg, &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        t.insert(11, Some(b"hello"), &mut alloc, &mut regions);
+        match t.get(11).0 {
+            RpcResult::Value { value: Some(v), .. } => assert_eq!(&v, b"hello"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn update_existing_bumps_version() {
+        let (mut t, mut a, mut r) = setup(16, 2);
+        t.insert(9, None, &mut a, &mut r);
+        t.insert(9, None, &mut a, &mut r);
+        assert!(matches!(t.get(9).0, RpcResult::Value { version: 2, .. }));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn resize_preserves_items_and_bumps_versions() {
+        let (mut t, mut a, mut r) = setup(2, 1);
+        for k in 1..=8u64 {
+            t.insert(k, None, &mut a, &mut r);
+        }
+        assert!(t.occupancy() > 1.0); // oversubscribed the other way: chains
+        t.resize(32, &mut a, &mut r, RegionMode::Virtual(PageSize::Huge2M));
+        assert_eq!(t.len(), 8);
+        assert!(t.occupancy() <= 0.5);
+        for k in 1..=8u64 {
+            assert!(matches!(t.get(k).0, RpcResult::Value { .. }), "key {k} lost");
+        }
+        // Far fewer chains after resize.
+        assert!(t.inline_fraction() > 0.9);
+    }
+
+    #[test]
+    fn client_lookup_flow_bucket_hit() {
+        let (mut t, mut a, mut r) = setup(64, 2);
+        let cfg = t.config().clone();
+        let mut client = MicaClient::new(ObjectId(0), &cfg, 1, vec![t.bucket_region]);
+        t.insert(77, None, &mut a, &mut r);
+        let hint = client.lookup_start(77);
+        assert_eq!(hint.node, 0);
+        assert_eq!(hint.len, cfg.bucket_bytes());
+        let bucket = hint.addr.offset / cfg.bucket_bytes() as u64;
+        let view = t.bucket_view(bucket);
+        match client.lookup_end_bucket(77, &view) {
+            LookupOutcome::Hit { version: 1, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn client_lookup_flow_chain_fallback_and_absent() {
+        let (mut t, mut a, mut r) = setup(1, 1);
+        let cfg = t.config().clone();
+        let mut client = MicaClient::new(ObjectId(0), &cfg, 1, vec![t.bucket_region]);
+        t.insert(1, None, &mut a, &mut r);
+        t.insert(2, None, &mut a, &mut r); // chained
+        let hint = client.lookup_start(2);
+        let view = t.bucket_view(hint.addr.offset / cfg.bucket_bytes() as u64);
+        assert_eq!(client.lookup_end_bucket(2, &view), LookupOutcome::NeedRpc);
+        // Absent is provable only without a chain.
+        let (mut t2, mut a2, mut r2) = setup(64, 2);
+        t2.insert(5, None, &mut a2, &mut r2);
+        let mut c2 = MicaClient::new(ObjectId(0), &t2.config().clone(), 1, vec![t2.bucket_region]);
+        let h2 = c2.lookup_start(1234);
+        let v2 = t2.bucket_view(h2.addr.offset / t2.config().bucket_bytes() as u64);
+        assert_eq!(c2.lookup_end_bucket(1234, &v2), LookupOutcome::Absent);
+    }
+
+    #[test]
+    fn client_address_cache_round_trip() {
+        let (mut t, mut a, mut r) = setup(64, 2);
+        let cfg = t.config().clone();
+        let mut client =
+            MicaClient::new(ObjectId(0), &cfg, 1, vec![t.bucket_region]).with_cache();
+        t.insert(42, None, &mut a, &mut r);
+        // First lookup: bucket read, which populates the cache.
+        let hint = client.lookup_start(42);
+        assert!(!client.hint_is_item(&hint));
+        let view = t.bucket_view(hint.addr.offset / cfg.bucket_bytes() as u64);
+        client.lookup_end_bucket(42, &view);
+        // Second lookup: exact item read.
+        let hint2 = client.lookup_start(42);
+        assert!(client.hint_is_item(&hint2));
+        let iv = t.item_view(hint2.addr);
+        match client.lookup_end_item(42, iv) {
+            LookupOutcome::Hit { version: 1, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_cached_address_escalates_to_rpc_and_evicts() {
+        let (mut t, mut a, mut r) = setup(64, 1);
+        let cfg = t.config().clone();
+        let mut client =
+            MicaClient::new(ObjectId(0), &cfg, 1, vec![t.bucket_region]).with_cache();
+        t.insert(42, None, &mut a, &mut r);
+        let hint = client.lookup_start(42);
+        let view = t.bucket_view(hint.addr.offset / cfg.bucket_bytes() as u64);
+        client.lookup_end_bucket(42, &view);
+        // Table resizes: cached address now points into the old region.
+        t.resize(128, &mut a, &mut r, RegionMode::Virtual(PageSize::Huge2M));
+        let hint2 = client.lookup_start(42);
+        let iv = t.item_view(hint2.addr); // None or mismatched key
+        assert_eq!(client.lookup_end_item(42, iv), LookupOutcome::NeedRpc);
+        assert!(client.cached_addr(42).is_none(), "stale entry must be evicted");
+    }
+
+    #[test]
+    fn owner_distribution_roughly_uniform() {
+        let nodes = 16u32;
+        let mut counts = vec![0u32; nodes as usize];
+        for k in 1..=16_000u64 {
+            counts[owner_of(k, nodes) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "owner skew: {c}");
+        }
+    }
+}

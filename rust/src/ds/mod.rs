@@ -1,0 +1,32 @@
+//! Remote data structures and the Storm data-structure callback API.
+//!
+//! Storm separates the dataplane from the data structure (paper §5, Table
+//! 3): a data structure plugs in three callbacks —
+//!
+//! * `lookup_start` — client side: map a key to a guessed remote location
+//!   (region id + offset) for a one-sided read, or decline (RPC-only).
+//! * `lookup_end`   — client side: inspect the bytes a read returned;
+//!   report success, or ask the dataplane to fall back to an RPC
+//!   (the *one-two-sided* scheme); optionally cache addresses.
+//! * `rpc_handler`  — owner side: execute lookups/locks/commits that need
+//!   server CPU (pointer chasing, inserts, deletes).
+//!
+//! Implementations here: [`mica`] — the MICA-derived hash table Storm
+//! evaluates (inline key/version/lock for zero-copy single-read lookups,
+//! overflow chains, oversubscription); [`hopscotch`] — the FaRM-style
+//! neighborhood table used by the Lockfree_FaRM baseline (one large read
+//! covers the whole neighborhood); [`queue`] and [`btree`] — the paper's
+//! "other data structures" (cached head/tail pointers; cached inner
+//! nodes).
+
+pub mod api;
+pub mod btree;
+pub mod hopscotch;
+pub mod mica;
+pub mod queue;
+
+pub use api::{
+    LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version,
+};
+pub use hopscotch::HopscotchTable;
+pub use mica::{BucketView, MicaClient, MicaConfig, MicaTable};

@@ -1,0 +1,216 @@
+//! Remote FIFO queue (paper §5.5: "for queues the head and tail pointers
+//! may be cached on the client side").
+//!
+//! Layout: a ring of fixed-size cells in one region, plus a header cell
+//! holding (head, tail). A client caches the header; `enqueue`/`dequeue`
+//! are RPCs (they mutate), but `peek` can be a one-sided read using the
+//! cached head — validated by the cell's embedded sequence number, with
+//! RPC fallback when the cached pointer went stale (same one-two-sided
+//! pattern as the hash table).
+
+use crate::mem::{MrKey, RegionTable, RemoteAddr};
+
+/// A queue cell as returned by a one-sided read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellView {
+    /// Sequence number of the element stored (0 = never written).
+    pub seq: u64,
+    /// The element.
+    pub value: u64,
+}
+
+/// Owner-side remote queue.
+pub struct RemoteQueue {
+    cells: Vec<CellView>,
+    capacity: u64,
+    head: u64, // next seq to dequeue
+    tail: u64, // next seq to enqueue
+    /// Region holding header + cells.
+    pub region: MrKey,
+    cell_bytes: u32,
+}
+
+/// Client-side cached pointers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueClientCache {
+    /// Last known head sequence.
+    pub head: u64,
+    /// Last known tail sequence.
+    pub tail: u64,
+}
+
+/// Outcome of a client peek attempt via one-sided read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeekOutcome {
+    /// Front element read successfully.
+    Front(u64),
+    /// Cached head is stale or queue state unknown: fall back to RPC.
+    NeedRpc,
+    /// Queue empty per the cached view (still worth an RPC to confirm).
+    Empty,
+}
+
+impl RemoteQueue {
+    /// Queue of `capacity` cells of `cell_bytes` each.
+    pub fn new(
+        capacity: u64,
+        cell_bytes: u32,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) -> Self {
+        assert!(capacity.is_power_of_two());
+        let region = regions.register((capacity + 1) * cell_bytes as u64, mode);
+        RemoteQueue {
+            cells: vec![CellView { seq: 0, value: 0 }; capacity as usize],
+            capacity,
+            head: 0,
+            tail: 0,
+            region,
+            cell_bytes,
+        }
+    }
+
+    /// Elements queued.
+    pub fn len(&self) -> u64 {
+        self.tail - self.head
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.head == self.tail
+    }
+
+    /// Enqueue (owner-side; reached via RPC). Returns false when full.
+    pub fn enqueue(&mut self, value: u64) -> bool {
+        if self.len() == self.capacity {
+            return false;
+        }
+        let slot = (self.tail % self.capacity) as usize;
+        self.cells[slot] = CellView { seq: self.tail + 1, value };
+        self.tail += 1;
+        true
+    }
+
+    /// Dequeue (owner-side; reached via RPC).
+    pub fn dequeue(&mut self) -> Option<u64> {
+        if self.is_empty() {
+            return None;
+        }
+        let slot = (self.head % self.capacity) as usize;
+        let v = self.cells[slot].value;
+        self.head += 1;
+        Some(v)
+    }
+
+    /// Current (head, tail) — what an RPC reply or header read reports.
+    pub fn pointers(&self) -> (u64, u64) {
+        (self.head, self.tail)
+    }
+
+    /// Address of the cell a `seq` maps to (for client one-sided reads).
+    pub fn cell_addr(&self, seq: u64) -> RemoteAddr {
+        let slot = seq % self.capacity;
+        RemoteAddr { region: self.region, offset: (1 + slot) * self.cell_bytes as u64 }
+    }
+
+    /// What a one-sided read of a cell returns.
+    pub fn cell_view(&self, seq: u64) -> CellView {
+        self.cells[(seq % self.capacity) as usize]
+    }
+
+    /// Client-side peek validation: does the cell image match the cached
+    /// head (seq == head+1 means the element at `head` is still there)?
+    pub fn validate_peek(cache: &QueueClientCache, cell: CellView) -> PeekOutcome {
+        if cache.head == cache.tail {
+            return PeekOutcome::Empty;
+        }
+        if cell.seq == cache.head + 1 {
+            PeekOutcome::Front(cell.value)
+        } else {
+            // Overwritten (wrapped) or not yet written: cache is stale.
+            PeekOutcome::NeedRpc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{PageSize, RegionMode};
+
+    fn mk(cap: u64) -> RemoteQueue {
+        let mut r = RegionTable::new();
+        RemoteQueue::new(cap, 64, &mut r, RegionMode::Virtual(PageSize::Small4K))
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = mk(8);
+        for v in 1..=5u64 {
+            assert!(q.enqueue(v));
+        }
+        for v in 1..=5u64 {
+            assert_eq!(q.dequeue(), Some(v));
+        }
+        assert_eq!(q.dequeue(), None);
+    }
+
+    #[test]
+    fn full_queue_rejects() {
+        let mut q = mk(4);
+        for v in 0..4 {
+            assert!(q.enqueue(v));
+        }
+        assert!(!q.enqueue(99));
+        q.dequeue();
+        assert!(q.enqueue(99));
+    }
+
+    #[test]
+    fn peek_via_cached_head() {
+        let mut q = mk(8);
+        q.enqueue(42);
+        q.enqueue(43);
+        let cache = QueueClientCache { head: q.pointers().0, tail: q.pointers().1 };
+        let cell = q.cell_view(cache.head);
+        assert_eq!(RemoteQueue::validate_peek(&cache, cell), PeekOutcome::Front(42));
+    }
+
+    #[test]
+    fn stale_cache_detected_after_wrap() {
+        let mut q = mk(4);
+        for v in 0..4 {
+            q.enqueue(v);
+        }
+        let cache = QueueClientCache { head: q.pointers().0, tail: q.pointers().1 };
+        // Another client drains and refills, wrapping the ring.
+        for _ in 0..4 {
+            q.dequeue();
+        }
+        for v in 10..14 {
+            q.enqueue(v);
+        }
+        let cell = q.cell_view(cache.head);
+        assert_eq!(RemoteQueue::validate_peek(&cache, cell), PeekOutcome::NeedRpc);
+    }
+
+    #[test]
+    fn empty_cache_view() {
+        let q = mk(4);
+        let cache = QueueClientCache { head: 0, tail: 0 };
+        assert_eq!(RemoteQueue::validate_peek(&cache, q.cell_view(0)), PeekOutcome::Empty);
+    }
+
+    #[test]
+    fn wraparound_preserves_fifo() {
+        let mut q = mk(4);
+        for round in 0..10u64 {
+            for i in 0..3 {
+                assert!(q.enqueue(round * 10 + i));
+            }
+            for i in 0..3 {
+                assert_eq!(q.dequeue(), Some(round * 10 + i));
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Network fabric models.
+//!
+//! [`params`] holds wire-level constants for the paper's two fabrics
+//! (InfiniBand EDR and RoCE) calibrated against Table 5's unloaded RTTs.
+//! [`loopback`] is a *live* in-process fabric over tokio channels used by
+//! the end-to-end examples — same dataplane code, real wall-clock time,
+//! with the PJRT batch engine on the hot path.
+
+pub mod loopback;
+pub mod params;
+
+pub use params::{FabricKind, FabricParams};

@@ -1,0 +1,88 @@
+//! Wire-level fabric parameters.
+//!
+//! Calibrated so that the composed unloaded paths reproduce Table 5 of the
+//! paper (CX4): one-sided read RTT 1.8 µs on IB EDR / 2.8 µs on RoCE, with
+//! the RPC, FaRM and LITE numbers following from the same constants plus
+//! the per-system path differences.
+
+
+
+/// Fabric technology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// InfiniBand EDR, 100 Gbps (the 32-node evaluation cluster).
+    IbEdr,
+    /// RoCE v2 at 100 Gbps (the CX4/CX5 pairs).
+    Roce100,
+    /// RoCE v2 at 40 Gbps (the CX3 pair).
+    Roce40,
+}
+
+/// Wire parameters for one fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricParams {
+    /// One-way propagation + switching latency for a minimal packet (ns).
+    pub base_one_way_ns: u64,
+    /// Link bandwidth in Gbps.
+    pub gbps: f64,
+    /// Per-byte host-DMA/wire overlap factor: fraction of payload
+    /// serialization that is *not* hidden by cut-through pipelining.
+    pub store_and_forward: f64,
+}
+
+impl FabricKind {
+    /// Parameter set for this fabric.
+    pub fn params(self) -> FabricParams {
+        match self {
+            FabricKind::IbEdr => {
+                FabricParams { base_one_way_ns: 410, gbps: 100.0, store_and_forward: 0.5 }
+            }
+            FabricKind::Roce100 => {
+                FabricParams { base_one_way_ns: 910, gbps: 100.0, store_and_forward: 0.5 }
+            }
+            FabricKind::Roce40 => {
+                FabricParams { base_one_way_ns: 1000, gbps: 40.0, store_and_forward: 0.5 }
+            }
+        }
+    }
+}
+
+impl FabricParams {
+    /// One-way wire time for a `bytes`-sized transfer (ns).
+    pub fn one_way_ns(&self, bytes: u32) -> u64 {
+        let ser = bytes as f64 * 8.0 / self.gbps * self.store_and_forward;
+        self.base_one_way_ns + ser.round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ib_faster_than_roce() {
+        let ib = FabricKind::IbEdr.params();
+        let roce = FabricKind::Roce100.params();
+        assert!(ib.one_way_ns(128) < roce.one_way_ns(128));
+        // Table 5: RoCE adds ~1 us to the RR round trip => ~500 ns one-way.
+        let delta = roce.one_way_ns(128) - ib.one_way_ns(128);
+        assert!((400..=600).contains(&delta), "delta {delta}");
+    }
+
+    #[test]
+    fn serialization_grows_with_size() {
+        let ib = FabricKind::IbEdr.params();
+        assert!(ib.one_way_ns(1024) > ib.one_way_ns(64));
+        // 1 KB at 100 Gbps = 82 ns serialization; half visible.
+        assert_eq!(ib.one_way_ns(1024) - ib.base_one_way_ns, 41);
+    }
+
+    #[test]
+    fn forty_gig_serializes_slower() {
+        let r40 = FabricKind::Roce40.params();
+        let r100 = FabricKind::Roce100.params();
+        let d40 = r40.one_way_ns(4096) - r40.base_one_way_ns;
+        let d100 = r100.one_way_ns(4096) - r100.base_one_way_ns;
+        assert!(d40 > 2 * d100);
+    }
+}

@@ -1,0 +1,38 @@
+//! # Storm: a fast transactional dataplane for remote data structures
+//!
+//! Reproduction of *Storm* (Novakovic et al., 2019): a transactional RDMA
+//! dataplane built on one-sided reads and write-based RPCs over reliably
+//! connected (RC) queue pairs, evaluated against eRPC, FaRM, and LITE.
+//!
+//! Because RDMA NICs and an InfiniBand cluster are not available, the
+//! hardware substrate is a calibrated discrete-event model (see
+//! [`nic`], [`fabric`], and DESIGN.md §2). The dataplane itself
+//! ([`dataplane`], [`ds`]) is *sans-io*: the same transaction engine and
+//! data-structure callbacks run on the simulated fabric (for the paper's
+//! figures) and on a live in-process tokio fabric (for the end-to-end
+//! examples, with the AOT-compiled XLA batch engine on the hot path).
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: Storm dataplane, transports, NIC
+//!   model, baselines, workloads, benches.
+//! * **L2 (python/compile/model.py)** — batched lookup-resolve and
+//!   validation graphs in JAX, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT and exposes
+//! them to the L3 hot path; python never runs at request time.
+
+pub mod bench;
+pub mod cluster;
+pub mod dataplane;
+pub mod ds;
+pub mod fabric;
+pub mod mem;
+pub mod nic;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

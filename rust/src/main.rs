@@ -1,0 +1,163 @@
+//! `storm` — CLI for the Storm reproduction.
+//!
+//! ```text
+//! storm bench <fig1|fig4|fig5|fig6|fig7|table5|physseg|breakeven|ablations|all> [--full] [--threads N]
+//! storm run --system <storm-rpc|storm-oversub|storm-perfect|erpc|erpc-nocc|farm|farm-locked|lite|lite-sync>
+//!           [--nodes N] [--threads N] [--coros N] [--tatp] [--full]
+//! storm verify-runtime [artifacts-dir]    # load + execute the AOT artifacts via PJRT
+//! ```
+//!
+//! Argument parsing is hand-rolled: the build environment is offline and
+//! vendored, so the binary depends only on `xla` and `anyhow`.
+
+use anyhow::{bail, Result};
+
+use storm::bench::{ablations, breakeven, fig1, fig4, fig5, fig6, fig7, physseg, table5, BenchOpts};
+use storm::cluster::{SimConfig, StormMode, SystemKind, WorkloadKind, World};
+use storm::sim::{MICRO, MILLI};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("verify-runtime") => cmd_verify_runtime(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "storm — reproduction of 'Storm: a fast transactional dataplane for remote data structures'\n\
+         \n\
+         USAGE:\n\
+           storm bench <fig1|fig4|fig5|fig6|fig7|table5|physseg|breakeven|ablations|all> [--full] [--threads N]\n\
+           storm run --system <name> [--nodes N] [--threads N] [--coros N] [--tatp] [--full]\n\
+           storm verify-runtime [artifacts-dir]\n\
+         \n\
+         systems: storm-rpc storm-oversub storm-perfect erpc erpc-nocc farm farm-locked lite lite-sync"
+    );
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt_u32(args: &[String], name: &str) -> Option<u32> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let opts = BenchOpts {
+        quick: !flag(args, "--full"),
+        threads: opt_u32(args, "--threads").unwrap_or(8),
+    };
+    let run = |name: &str, opts: BenchOpts| {
+        match name {
+            "fig1" => {
+                fig1(opts.quick);
+            }
+            "fig4" => {
+                fig4(opts);
+            }
+            "fig5" => {
+                fig5(opts);
+            }
+            "fig6" => {
+                fig6(opts);
+            }
+            "fig7" => {
+                fig7(opts);
+            }
+            "table5" => {
+                table5(opts);
+            }
+            "physseg" => {
+                physseg(opts);
+            }
+            "breakeven" => {
+                breakeven(opts.quick);
+            }
+            "ablations" => {
+                ablations(opts);
+            }
+            _ => {}
+        }
+        println!();
+    };
+    if which == "all" {
+        for name in
+            ["fig1", "fig4", "fig5", "fig6", "fig7", "table5", "physseg", "breakeven", "ablations"]
+        {
+            run(name, opts);
+        }
+    } else {
+        run(which, opts);
+    }
+    Ok(())
+}
+
+fn parse_system(name: &str) -> Result<SystemKind> {
+    Ok(match name {
+        "storm-rpc" => SystemKind::Storm(StormMode::RpcOnly),
+        "storm-oversub" => SystemKind::Storm(StormMode::OneTwoSided),
+        "storm-perfect" => SystemKind::Storm(StormMode::Perfect),
+        "erpc" => SystemKind::Erpc { congestion_control: true },
+        "erpc-nocc" => SystemKind::Erpc { congestion_control: false },
+        "farm" => SystemKind::Farm { locked_qp_sharing: false },
+        "farm-locked" => SystemKind::Farm { locked_qp_sharing: true },
+        "lite" => SystemKind::Lite { async_ops: true },
+        "lite-sync" => SystemKind::Lite { async_ops: false },
+        other => bail!("unknown system {other:?}"),
+    })
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let system = parse_system(
+        args.iter()
+            .position(|a| a == "--system")
+            .and_then(|i| args.get(i + 1))
+            .map(|s| s.as_str())
+            .unwrap_or("storm-oversub"),
+    )?;
+    let nodes = opt_u32(args, "--nodes").unwrap_or(8);
+    let mut cfg = SimConfig::new(system, nodes);
+    cfg.threads = opt_u32(args, "--threads").unwrap_or(8);
+    cfg.coros = opt_u32(args, "--coros").unwrap_or(8);
+    if flag(args, "--tatp") {
+        cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 5_000 };
+    }
+    if flag(args, "--full") {
+        cfg.warmup = MILLI;
+        cfg.measure = 8 * MILLI;
+        cfg.keys_per_node = 60_000;
+    } else {
+        cfg.warmup = 200 * MICRO;
+        cfg.measure = MILLI;
+        cfg.keys_per_node = 20_000;
+    }
+    let report = World::new(cfg).run();
+    println!("{}", report.row());
+    println!(
+        "events={} ({:.1} M events/s host)  sim_time={:.2} ms  ud_drops={} retrans={}",
+        report.events,
+        report.events_per_sec() / 1e6,
+        report.sim_ns as f64 / 1e6,
+        report.ud_drops,
+        report.retransmits
+    );
+    Ok(())
+}
+
+fn cmd_verify_runtime(args: &[String]) -> Result<()> {
+    let dir = args.first().map(|s| s.as_str()).unwrap_or("artifacts");
+    storm::runtime::verify(dir)
+}

@@ -1,0 +1,239 @@
+//! Contiguous memory allocator (Storm §5.1).
+//!
+//! Requests large chunks from the "kernel" (each chunk becomes exactly one
+//! registered RDMA region) and serves small-object allocations inside them
+//! with segregated size-class free lists. The point, per the paper, is that
+//! the number of registered regions — and therefore the MPT working set on
+//! the NIC — stays tiny no matter how many objects the application
+//! allocates, unlike Memcached-style per-slab registration.
+//!
+//! Used for real placement by the live (loopback) dataplane and for
+//! address/metadata accounting by the simulator.
+
+use super::region::{MrKey, RegionMode, RegionTable};
+
+/// A remote-addressable location: region handle + byte offset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RemoteAddr {
+    /// Region containing the object.
+    pub region: MrKey,
+    /// Byte offset within the region.
+    pub offset: u64,
+}
+
+/// Allocation failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// Request larger than the chunk size.
+    TooLarge,
+    /// Chunk budget exhausted (the configured maximum region count).
+    OutOfChunks,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::TooLarge => write!(f, "allocation exceeds chunk size"),
+            AllocError::OutOfChunks => write!(f, "chunk budget exhausted"),
+        }
+    }
+}
+impl std::error::Error for AllocError {}
+
+/// Size classes: powers of two from 32 B up to 1 MB.
+const MIN_CLASS_SHIFT: u32 = 5;
+const MAX_CLASS_SHIFT: u32 = 20;
+const NUM_CLASSES: usize = (MAX_CLASS_SHIFT - MIN_CLASS_SHIFT + 1) as usize;
+
+fn class_of(size: u64) -> Option<usize> {
+    if size == 0 || size > (1 << MAX_CLASS_SHIFT) {
+        return None;
+    }
+    let shift = 64 - (size - 1).max(1).leading_zeros();
+    Some((shift.max(MIN_CLASS_SHIFT) - MIN_CLASS_SHIFT) as usize)
+}
+
+fn class_size(class: usize) -> u64 {
+    1u64 << (class as u32 + MIN_CLASS_SHIFT)
+}
+
+struct Chunk {
+    region: MrKey,
+    /// Bump pointer for fresh space.
+    brk: u64,
+    len: u64,
+}
+
+/// The allocator. One instance per host process.
+pub struct ContiguousAllocator {
+    chunk_size: u64,
+    max_chunks: usize,
+    mode: RegionMode,
+    chunks: Vec<Chunk>,
+    /// Per-size-class free lists of (chunk idx, offset).
+    free: [Vec<(u32, u64)>; NUM_CLASSES],
+    live_bytes: u64,
+}
+
+impl ContiguousAllocator {
+    /// Allocator drawing `chunk_size`-byte chunks, registering each with
+    /// `regions` using `mode`, up to `max_chunks` chunks.
+    pub fn new(chunk_size: u64, max_chunks: usize, mode: RegionMode) -> Self {
+        assert!(chunk_size >= 1 << MAX_CLASS_SHIFT, "chunk must hold the largest class");
+        ContiguousAllocator {
+            chunk_size,
+            max_chunks,
+            mode,
+            chunks: Vec::new(),
+            free: std::array::from_fn(|_| Vec::new()),
+            live_bytes: 0,
+        }
+    }
+
+    /// Allocate `size` bytes, growing (and registering) chunks on demand.
+    pub fn alloc(&mut self, size: u64, regions: &mut RegionTable) -> Result<RemoteAddr, AllocError> {
+        let class = class_of(size).ok_or(AllocError::TooLarge)?;
+        let csize = class_size(class);
+        if let Some((ci, off)) = self.free[class].pop() {
+            self.live_bytes += csize;
+            return Ok(RemoteAddr { region: self.chunks[ci as usize].region, offset: off });
+        }
+        // Find a chunk with bump space.
+        for chunk in self.chunks.iter_mut() {
+            if chunk.brk + csize <= chunk.len {
+                let off = chunk.brk;
+                chunk.brk += csize;
+                self.live_bytes += csize;
+                return Ok(RemoteAddr { region: chunk.region, offset: off });
+            }
+        }
+        // Grow.
+        if self.chunks.len() >= self.max_chunks {
+            return Err(AllocError::OutOfChunks);
+        }
+        let region = regions.register(self.chunk_size, self.mode);
+        let mut chunk = Chunk { region, brk: 0, len: self.chunk_size };
+        let off = chunk.brk;
+        chunk.brk += csize;
+        self.chunks.push(chunk);
+        self.live_bytes += csize;
+        Ok(RemoteAddr { region, offset: off })
+    }
+
+    /// Return an allocation of `size` bytes at `addr` to the free lists.
+    ///
+    /// The caller must pass the same size it allocated with (as with
+    /// `sized deallocation`); debug builds assert the address belongs to us.
+    pub fn free(&mut self, addr: RemoteAddr, size: u64) {
+        let class = class_of(size).expect("freeing unknown size class");
+        let ci = self
+            .chunks
+            .iter()
+            .position(|c| c.region == addr.region)
+            .expect("freeing address from unknown chunk");
+        debug_assert!(addr.offset + class_size(class) <= self.chunks[ci].len);
+        self.live_bytes -= class_size(class);
+        self.free[class].push((ci as u32, addr.offset));
+    }
+
+    /// Number of chunks (== registered regions) currently held.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Bytes handed out and not yet freed (rounded to size classes).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Total reserved bytes across chunks.
+    pub fn reserved_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::region::PageSize;
+
+    fn mk() -> (ContiguousAllocator, RegionTable) {
+        (
+            ContiguousAllocator::new(64 << 20, 8, RegionMode::Virtual(PageSize::Huge2M)),
+            RegionTable::new(),
+        )
+    }
+
+    #[test]
+    fn allocations_share_one_region() {
+        let (mut a, mut rt) = mk();
+        let mut addrs = Vec::new();
+        for _ in 0..10_000 {
+            addrs.push(a.alloc(128, &mut rt).unwrap());
+        }
+        // 10k x 128 B fits one 64 MB chunk: exactly one registered region.
+        assert_eq!(a.chunk_count(), 1);
+        assert_eq!(rt.mpt_entries(), 1);
+        // No overlaps within the region.
+        let mut offs: Vec<u64> = addrs.iter().map(|x| x.offset).collect();
+        offs.sort_unstable();
+        for w in offs.windows(2) {
+            assert!(w[1] - w[0] >= 128);
+        }
+    }
+
+    #[test]
+    fn grows_by_whole_chunks() {
+        let (mut a, mut rt) = mk();
+        // 70 MB of 1 MB objects doesn't fit in one 64 MB chunk.
+        for _ in 0..70 {
+            a.alloc(1 << 20, &mut rt).unwrap();
+        }
+        assert_eq!(a.chunk_count(), 2);
+        assert_eq!(rt.mpt_entries(), 2);
+    }
+
+    #[test]
+    fn free_then_reuse() {
+        let (mut a, mut rt) = mk();
+        let x = a.alloc(100, &mut rt).unwrap();
+        a.free(x, 100);
+        let y = a.alloc(90, &mut rt).unwrap(); // same 128 B class
+        assert_eq!(x, y, "freed slot should be reused first");
+    }
+
+    #[test]
+    fn distinct_classes_do_not_collide() {
+        let (mut a, mut rt) = mk();
+        let x = a.alloc(32, &mut rt).unwrap();
+        let y = a.alloc(64, &mut rt).unwrap();
+        let z = a.alloc(32, &mut rt).unwrap();
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+        assert_ne!(y, z);
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let (mut a, mut rt) = mk();
+        assert_eq!(a.alloc(2 << 20, &mut rt).unwrap_err(), AllocError::TooLarge);
+        assert_eq!(a.alloc(0, &mut rt).unwrap_err(), AllocError::TooLarge);
+    }
+
+    #[test]
+    fn chunk_budget_enforced() {
+        let mut rt = RegionTable::new();
+        let mut a = ContiguousAllocator::new(1 << 20, 1, RegionMode::PhysicalSegment);
+        a.alloc(1 << 20, &mut rt).unwrap();
+        assert_eq!(a.alloc(1 << 20, &mut rt).unwrap_err(), AllocError::OutOfChunks);
+    }
+
+    #[test]
+    fn live_bytes_tracks_class_sizes() {
+        let (mut a, mut rt) = mk();
+        let x = a.alloc(100, &mut rt).unwrap(); // 128 B class
+        assert_eq!(a.live_bytes(), 128);
+        a.free(x, 100);
+        assert_eq!(a.live_bytes(), 0);
+    }
+}

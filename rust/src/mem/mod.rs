@@ -1,0 +1,23 @@
+//! Memory subsystem: contiguous allocation and RDMA region registration.
+//!
+//! Storm's design principle #3 (*minimize RDMA region metadata*) is
+//! implemented here:
+//!
+//! * [`ContiguousAllocator`] serves small-object allocations out of a few
+//!   large chunks, so the process registers a handful of memory regions
+//!   (small MPT) instead of one per `malloc` (the Memcached anti-pattern
+//!   the paper calls out).
+//! * [`RegionTable`] is the NIC-driver view: every registered region
+//!   contributes one MPT entry and `len / page_size` MTT entries. The NIC
+//!   cache model ([`crate::nic`]) charges lookups against these tables.
+//! * [`PhysSegRegistrar`] models CX4/CX5 physical segments: one MPT entry,
+//!   **zero** MTT entries, registration mediated by the kernel off the data
+//!   path (the paper's security fix for multi-tenant hosts).
+
+pub mod alloc;
+pub mod physseg;
+pub mod region;
+
+pub use alloc::{AllocError, ContiguousAllocator, RemoteAddr};
+pub use physseg::{PhysSegError, PhysSegRegistrar};
+pub use region::{MrKey, PageSize, RegionMode, RegionTable};

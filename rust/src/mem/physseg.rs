@@ -1,0 +1,112 @@
+//! Physical segments (Storm §5.1, evaluation §6.2.5).
+//!
+//! CX4/CX5 NICs can export a physically contiguous range with bounds checks
+//! — one MPT entry and *no* MTT entries, regardless of size. The paper's
+//! twist is the security model: registration must be mediated by the kernel
+//! (unlike LITE, which moves the whole data path into the kernel), which is
+//! fine because registration is off the data path. Physical contiguity comes
+//! from Linux CMA, which handles only a small number of growing regions —
+//! hence the segment-count limit modeled here.
+
+use super::region::{MrKey, RegionMode, RegionTable};
+use crate::sim::Nanos;
+
+/// Registration failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhysSegError {
+    /// CMA cannot maintain more growing physically contiguous regions.
+    CmaExhausted,
+    /// Caller lacks the capability and kernel mediation is enforced.
+    NotPermitted,
+}
+
+impl std::fmt::Display for PhysSegError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PhysSegError::CmaExhausted => write!(f, "Linux CMA cannot grow more segments"),
+            PhysSegError::NotPermitted => write!(f, "physical segment registration denied"),
+        }
+    }
+}
+impl std::error::Error for PhysSegError {}
+
+/// Kernel-mediated physical segment registrar.
+#[derive(Debug)]
+pub struct PhysSegRegistrar {
+    max_segments: usize,
+    registered: Vec<(MrKey, u64)>,
+    /// Cost of the mediated registration syscall (off the data path).
+    pub syscall_cost: Nanos,
+}
+
+impl PhysSegRegistrar {
+    /// Registrar allowing at most `max_segments` CMA-backed segments.
+    pub fn new(max_segments: usize) -> Self {
+        PhysSegRegistrar { max_segments, registered: Vec::new(), syscall_cost: 2_500 }
+    }
+
+    /// Register `len` bytes as a physical segment through the kernel.
+    ///
+    /// `privileged` models the capability check: in a multi-tenant host only
+    /// the kernel path may create physical segments (otherwise a tenant
+    /// could map, e.g., kernel memory via a loopback QP).
+    pub fn register(
+        &mut self,
+        len: u64,
+        privileged: bool,
+        regions: &mut RegionTable,
+    ) -> Result<MrKey, PhysSegError> {
+        if !privileged {
+            return Err(PhysSegError::NotPermitted);
+        }
+        if self.registered.len() >= self.max_segments {
+            return Err(PhysSegError::CmaExhausted);
+        }
+        let key = regions.register(len, RegionMode::PhysicalSegment);
+        self.registered.push((key, len));
+        Ok(key)
+    }
+
+    /// Segments registered so far.
+    pub fn segments(&self) -> usize {
+        self.registered.len()
+    }
+
+    /// Total bytes exported as physical segments.
+    pub fn exported_bytes(&self) -> u64 {
+        self.registered.iter().map(|(_, l)| l).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn petabyte_segment_has_single_mpt_entry() {
+        let mut rt = RegionTable::new();
+        let mut reg = PhysSegRegistrar::new(4);
+        let _k = reg.register(1 << 50, true, &mut rt).unwrap(); // 1 PB
+        assert_eq!(rt.mpt_entries(), 1);
+        assert_eq!(rt.mtt_entries(), 0);
+        assert_eq!(reg.exported_bytes(), 1 << 50);
+    }
+
+    #[test]
+    fn unprivileged_denied() {
+        let mut rt = RegionTable::new();
+        let mut reg = PhysSegRegistrar::new(4);
+        assert_eq!(reg.register(1 << 30, false, &mut rt).unwrap_err(), PhysSegError::NotPermitted);
+        assert_eq!(rt.mpt_entries(), 0);
+    }
+
+    #[test]
+    fn cma_limit_enforced() {
+        let mut rt = RegionTable::new();
+        let mut reg = PhysSegRegistrar::new(2);
+        reg.register(1 << 30, true, &mut rt).unwrap();
+        reg.register(1 << 30, true, &mut rt).unwrap();
+        assert_eq!(reg.register(1 << 30, true, &mut rt).unwrap_err(), PhysSegError::CmaExhausted);
+        assert_eq!(reg.segments(), 2);
+    }
+}

@@ -1,0 +1,243 @@
+//! RDMA memory-region registration bookkeeping (MPT / MTT accounting).
+//!
+//! This mirrors what the NIC driver does at `ibv_reg_mr` time: pin pages,
+//! create one *Memory Protection Table* entry for the region (key, bounds,
+//! permissions) and one *Memory Translation Table* entry per page. The NIC
+//! cache model consumes the entry identifiers produced here.
+
+
+
+/// Page size used to back a registered region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageSize {
+    /// 4 KB base pages.
+    Small4K,
+    /// 2 MB huge pages.
+    Huge2M,
+    /// 1 GB huge pages.
+    Huge1G,
+}
+
+impl PageSize {
+    /// Size in bytes.
+    pub fn bytes(self) -> u64 {
+        match self {
+            PageSize::Small4K => 4 << 10,
+            PageSize::Huge2M => 2 << 20,
+            PageSize::Huge1G => 1 << 30,
+        }
+    }
+}
+
+/// How a region is exposed to the NIC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionMode {
+    /// Ordinary virtual registration: MTT entries per page + 1 MPT entry.
+    Virtual(PageSize),
+    /// Physical segment (CX4/CX5): bounds check only — 1 MPT entry, no MTT.
+    PhysicalSegment,
+}
+
+/// Handle for a registered region (the `lkey`/`rkey` analogue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MrKey(pub u32);
+
+/// One registered memory region.
+#[derive(Clone, Debug)]
+pub struct Region {
+    /// Region handle.
+    pub key: MrKey,
+    /// Length in bytes.
+    pub len: u64,
+    /// Registration mode.
+    pub mode: RegionMode,
+    /// First global MTT entry id owned by this region (virtual mode).
+    pub mtt_base: u64,
+}
+
+/// Registry of all regions on one host; source of truth for NIC-cache
+/// working-set sizes.
+#[derive(Clone, Debug, Default)]
+pub struct RegionTable {
+    regions: Vec<Region>,
+    next_mtt: u64,
+}
+
+/// NIC-visible metadata constants (bytes per cached entry).
+pub mod entry_sizes {
+    /// An MTT entry (physical address of one page).
+    pub const MTT_ENTRY: u64 = 8;
+    /// An MPT entry (key, bounds, permissions).
+    pub const MPT_ENTRY: u64 = 64;
+    /// QP context incl. congestion-control state (paper: ~375 B).
+    pub const QP_CONTEXT: u64 = 375;
+}
+
+impl RegionTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a region of `len` bytes; returns its key.
+    pub fn register(&mut self, len: u64, mode: RegionMode) -> MrKey {
+        assert!(len > 0, "cannot register empty region");
+        let key = MrKey(self.regions.len() as u32);
+        let mtt_entries = match mode {
+            RegionMode::Virtual(ps) => len.div_ceil(ps.bytes()),
+            RegionMode::PhysicalSegment => 0,
+        };
+        let region = Region { key, len, mode, mtt_base: self.next_mtt };
+        self.next_mtt += mtt_entries;
+        self.regions.push(region);
+        key
+    }
+
+    /// Look up a region.
+    pub fn get(&self, key: MrKey) -> Option<&Region> {
+        self.regions.get(key.0 as usize)
+    }
+
+    /// Number of registered regions (== MPT entries).
+    pub fn mpt_entries(&self) -> u64 {
+        self.regions.len() as u64
+    }
+
+    /// Total MTT entries across all regions.
+    pub fn mtt_entries(&self) -> u64 {
+        self.next_mtt
+    }
+
+    /// Total NIC-resident metadata bytes implied by registrations
+    /// (MPT + MTT), excluding QP contexts.
+    pub fn metadata_bytes(&self) -> u64 {
+        self.mpt_entries() * entry_sizes::MPT_ENTRY + self.mtt_entries() * entry_sizes::MTT_ENTRY
+    }
+
+    /// The global MTT entry id an access to `(key, offset)` touches, or
+    /// `None` for physical segments (no translation needed).
+    ///
+    /// Accesses spanning a page boundary touch the first page's entry plus
+    /// successors; callers that care pass each page separately via
+    /// [`RegionTable::mtt_entries_for`].
+    pub fn mtt_entry_for(&self, key: MrKey, offset: u64) -> Option<u64> {
+        let r = self.get(key)?;
+        match r.mode {
+            RegionMode::Virtual(ps) => {
+                debug_assert!(offset < r.len, "offset {} out of region {}", offset, r.len);
+                Some(r.mtt_base + offset / ps.bytes())
+            }
+            RegionMode::PhysicalSegment => None,
+        }
+    }
+
+    /// All MTT entry ids touched by an access of `len` bytes at `offset`.
+    pub fn mtt_entries_for(&self, key: MrKey, offset: u64, len: u64) -> MttRange {
+        let r = match self.get(key) {
+            Some(r) => r,
+            None => return MttRange { next: 0, end: 0 },
+        };
+        match r.mode {
+            RegionMode::Virtual(ps) => {
+                let first = offset / ps.bytes();
+                let last = (offset + len.max(1) - 1) / ps.bytes();
+                MttRange { next: r.mtt_base + first, end: r.mtt_base + last + 1 }
+            }
+            RegionMode::PhysicalSegment => MttRange { next: 0, end: 0 },
+        }
+    }
+
+    /// Validate that an access is in bounds (the MPT check).
+    pub fn check_access(&self, key: MrKey, offset: u64, len: u64) -> bool {
+        match self.get(key) {
+            Some(r) => offset.checked_add(len).is_some_and(|end| end <= r.len),
+            None => false,
+        }
+    }
+}
+
+/// Iterator over touched MTT entry ids.
+pub struct MttRange {
+    next: u64,
+    end: u64,
+}
+
+impl Iterator for MttRange {
+    type Item = u64;
+    fn next(&mut self) -> Option<u64> {
+        if self.next < self.end {
+            let v = self.next;
+            self.next += 1;
+            Some(v)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_region_counts_entries() {
+        let mut t = RegionTable::new();
+        let k = t.register(20 << 30, RegionMode::Virtual(PageSize::Huge2M));
+        assert_eq!(t.mpt_entries(), 1);
+        assert_eq!(t.mtt_entries(), (20 << 30) / (2 << 20)); // 10240
+        assert!(t.get(k).is_some());
+    }
+
+    #[test]
+    fn physseg_has_no_mtt() {
+        let mut t = RegionTable::new();
+        let k = t.register(1 << 40, RegionMode::PhysicalSegment); // 1 TB
+        assert_eq!(t.mpt_entries(), 1);
+        assert_eq!(t.mtt_entries(), 0);
+        assert_eq!(t.mtt_entry_for(k, 123 << 30), None);
+    }
+
+    #[test]
+    fn many_small_regions_blow_up_mpt() {
+        // The Memcached anti-pattern: 64 MB chunks registered separately.
+        let mut t = RegionTable::new();
+        for _ in 0..1024 {
+            t.register(64 << 20, RegionMode::Virtual(PageSize::Small4K));
+        }
+        assert_eq!(t.mpt_entries(), 1024);
+        assert_eq!(t.mtt_entries(), 1024 * (64 << 20) / 4096);
+        // 4 KB pages on 64 GB: 128 MB of MTT >> any NIC cache.
+        assert!(t.metadata_bytes() > 100 << 20);
+    }
+
+    #[test]
+    fn mtt_entry_for_maps_pages() {
+        let mut t = RegionTable::new();
+        let a = t.register(8 << 20, RegionMode::Virtual(PageSize::Huge2M)); // 4 entries
+        let b = t.register(4 << 20, RegionMode::Virtual(PageSize::Huge2M)); // 2 entries
+        assert_eq!(t.mtt_entry_for(a, 0), Some(0));
+        assert_eq!(t.mtt_entry_for(a, (2 << 20) + 5), Some(1));
+        assert_eq!(t.mtt_entry_for(b, 0), Some(4)); // distinct global ids
+    }
+
+    #[test]
+    fn mtt_range_spans_boundary() {
+        let mut t = RegionTable::new();
+        let k = t.register(16 << 10, RegionMode::Virtual(PageSize::Small4K));
+        let ids: Vec<u64> = t.mtt_entries_for(k, 4090, 20).collect();
+        assert_eq!(ids, vec![0, 1]); // crosses the 4 KB boundary
+        let one: Vec<u64> = t.mtt_entries_for(k, 0, 64).collect();
+        assert_eq!(one, vec![0]);
+    }
+
+    #[test]
+    fn bounds_check() {
+        let mut t = RegionTable::new();
+        let k = t.register(4096, RegionMode::Virtual(PageSize::Small4K));
+        assert!(t.check_access(k, 0, 4096));
+        assert!(t.check_access(k, 4000, 96));
+        assert!(!t.check_access(k, 4000, 97));
+        assert!(!t.check_access(MrKey(99), 0, 1));
+        assert!(!t.check_access(k, u64::MAX, 2)); // overflow guarded
+    }
+}

@@ -1,0 +1,317 @@
+//! NIC SRAM cache: a byte-budgeted LRU over typed transport-state entries.
+//!
+//! Keys identify the cached object (QP context, MTT entry, MPT entry); each
+//! key class has a fixed entry size (see [`crate::mem::region::entry_sizes`]).
+//! The implementation is a hash map into a slab of intrusively linked nodes
+//! — O(1) touch/insert/evict, deterministic, no allocation after warmup.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Identifies one cacheable piece of NIC state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EntryKey {
+    /// QP context (metadata + congestion control), keyed globally.
+    Qp(u64),
+    /// Memory translation table entry (one page), keyed globally per host.
+    Mtt(u64),
+    /// Memory protection table entry (one region).
+    Mpt(u64),
+    /// Work queue entry state for an outstanding op.
+    Wqe(u64),
+}
+
+impl EntryKey {
+    /// Pack into a u64 (class tag in the top 2 bits) — the map key.
+    /// Ids comfortably fit 62 bits (page/QP/region counts).
+    #[inline]
+    fn pack(self) -> u64 {
+        match self {
+            EntryKey::Qp(id) => id,
+            EntryKey::Mtt(id) => (1 << 62) | id,
+            EntryKey::Mpt(id) => (2 << 62) | id,
+            EntryKey::Wqe(id) => (3 << 62) | id,
+        }
+    }
+}
+
+/// Fx-style multiply hasher for the packed keys: the state cache is the
+/// hottest structure in the simulator (one lookup per NIC state touch),
+/// and the default SipHash costs ~10x more (see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct FxU64Hasher(u64);
+
+impl Hasher for FxU64Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("only u64 keys are hashed");
+    }
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.0 = n.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(26);
+    }
+}
+
+type FastMap = HashMap<u64, u32, BuildHasherDefault<FxU64Hasher>>;
+
+const NIL: u32 = u32::MAX;
+
+struct Node {
+    key: EntryKey,
+    size: u32,
+    prev: u32,
+    next: u32,
+}
+
+/// Byte-budgeted LRU cache.
+pub struct NicCache {
+    capacity: u64,
+    used: u64,
+    map: FastMap,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    head: u32, // most recent
+    tail: u32, // least recent
+    hits: u64,
+    misses: u64,
+}
+
+impl NicCache {
+    /// Cache with `capacity` bytes of SRAM.
+    pub fn new(capacity: u64) -> Self {
+        NicCache {
+            capacity,
+            used: 0,
+            map: FastMap::default(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access `key` of `size` bytes; returns `true` on a hit. On a miss the
+    /// entry is installed, evicting LRU entries to fit.
+    pub fn access(&mut self, key: EntryKey, size: u64) -> bool {
+        let packed = key.pack();
+        if let Some(&idx) = self.map.get(&packed) {
+            self.unlink(idx);
+            self.push_front(idx);
+            self.hits += 1;
+            return true;
+        }
+        self.misses += 1;
+        if size > self.capacity {
+            // Uncacheable (degenerate config); count as a pure miss.
+            return false;
+        }
+        while self.used + size > self.capacity {
+            self.evict_lru();
+        }
+        let idx = self.alloc_node(key, size as u32);
+        self.push_front(idx);
+        self.map.insert(packed, idx);
+        self.used += size;
+        false
+    }
+
+    /// Remove an entry (e.g., QP destroyed, region deregistered).
+    pub fn invalidate(&mut self, key: EntryKey) {
+        if let Some(idx) = self.map.remove(&key.pack()) {
+            self.unlink(idx);
+            self.used -= self.nodes[idx as usize].size as u64;
+            self.free.push(idx);
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let idx = self.tail;
+        assert_ne!(idx, NIL, "evicting from empty cache");
+        self.unlink(idx);
+        let node = &self.nodes[idx as usize];
+        self.map.remove(&node.key.pack());
+        self.used -= node.size as u64;
+        self.free.push(idx);
+    }
+
+    fn alloc_node(&mut self, key: EntryKey, size: u32) -> u32 {
+        if let Some(idx) = self.free.pop() {
+            let n = &mut self.nodes[idx as usize];
+            n.key = key;
+            n.size = size;
+            n.prev = NIL;
+            n.next = NIL;
+            idx
+        } else {
+            self.nodes.push(Node { key, size, prev: NIL, next: NIL });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.nodes[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        let n = &mut self.nodes[idx as usize];
+        n.prev = NIL;
+        n.next = NIL;
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].next = self.head;
+        self.nodes[idx as usize].prev = NIL;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Bytes currently cached.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Cache capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Number of resident entries.
+    pub fn entries(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Hit count since creation/reset.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Miss count since creation/reset.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hit rate in `[0, 1]` (1.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Reset hit/miss counters (not contents) — used at measurement-window
+    /// boundaries.
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = NicCache::new(1024);
+        assert!(!c.access(EntryKey::Qp(1), 375));
+        assert!(c.access(EntryKey::Qp(1), 375));
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.used(), 375);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = NicCache::new(300);
+        c.access(EntryKey::Mtt(1), 100);
+        c.access(EntryKey::Mtt(2), 100);
+        c.access(EntryKey::Mtt(3), 100);
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.access(EntryKey::Mtt(1), 100));
+        c.access(EntryKey::Mtt(4), 100); // evicts 2
+        assert!(c.access(EntryKey::Mtt(1), 100));
+        assert!(c.access(EntryKey::Mtt(3), 100));
+        assert!(!c.access(EntryKey::Mtt(2), 100), "2 was evicted");
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_capacity() {
+        let mut c = NicCache::new(1000);
+        for i in 0..10_000u64 {
+            c.access(EntryKey::Mtt(i % 57), 64);
+            assert!(c.used() <= c.capacity());
+        }
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_thrashes() {
+        let mut c = NicCache::new(64 * 10); // holds 10 entries
+        // Cyclic scan over 20 entries: classic LRU worst case — ~0% hits.
+        for _ in 0..10 {
+            for i in 0..20u64 {
+                c.access(EntryKey::Mtt(i), 64);
+            }
+        }
+        assert!(c.hit_rate() < 0.05, "hit rate {}", c.hit_rate());
+    }
+
+    #[test]
+    fn working_set_fitting_cache_hits() {
+        let mut c = NicCache::new(64 * 32);
+        for _ in 0..100 {
+            for i in 0..20u64 {
+                c.access(EntryKey::Mtt(i), 64);
+            }
+        }
+        assert!(c.hit_rate() > 0.98, "hit rate {}", c.hit_rate());
+    }
+
+    #[test]
+    fn invalidate_frees_space() {
+        let mut c = NicCache::new(200);
+        c.access(EntryKey::Qp(1), 150);
+        c.invalidate(EntryKey::Qp(1));
+        assert_eq!(c.used(), 0);
+        assert!(!c.access(EntryKey::Qp(1), 150));
+    }
+
+    #[test]
+    fn distinct_classes_do_not_alias() {
+        let mut c = NicCache::new(1 << 20);
+        c.access(EntryKey::Qp(7), 375);
+        assert!(!c.access(EntryKey::Mtt(7), 8));
+        assert!(!c.access(EntryKey::Mpt(7), 64));
+        assert!(!c.access(EntryKey::Wqe(7), 64));
+        assert_eq!(c.entries(), 4);
+    }
+
+    #[test]
+    fn oversized_entry_not_cached() {
+        let mut c = NicCache::new(100);
+        assert!(!c.access(EntryKey::Mpt(1), 500));
+        assert!(!c.access(EntryKey::Mpt(1), 500));
+        assert_eq!(c.used(), 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! RDMA NIC model.
+//!
+//! The paper's whole scalability argument is about what fits in the NIC's
+//! SRAM cache (QP contexts, MTTs, MPTs, WQEs — its Table 1) and how well
+//! the NIC's processing units (PUs) hide PCIe fetches on a miss. This
+//! module models exactly those quantities:
+//!
+//! * [`cache::NicCache`] — a byte-budgeted LRU over typed state entries.
+//! * [`generations`] — CX3 / CX4 / CX5 parameter sets calibrated to the
+//!   paper's Figure 1 observations (83% / 42% / 32% throughput drop from 8
+//!   to 64 connections; ~10 req/µs CX5 floor at zero hit rate; ~40 M
+//!   reads/s CX5 peak).
+//! * [`model::Nic`] — PU scheduling: each verb occupies a PU for a service
+//!   time inflated by cache misses and (per-generation) how much of the
+//!   PCIe miss latency concurrent PUs can hide.
+
+pub mod cache;
+pub mod generations;
+pub mod model;
+
+pub use cache::{EntryKey, NicCache};
+pub use generations::{NicGen, NicGenParams};
+pub use model::{Nic, NicOp, NicSide, OpCost};

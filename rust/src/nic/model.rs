@@ -1,0 +1,502 @@
+//! NIC processing model: PU scheduling, state-cache charging, active-QP
+//! tracking.
+//!
+//! Every verb passing through a NIC occupies one processing unit for a
+//! *work* duration:
+//!
+//! ```text
+//! work = stage_factor(op) * pu_service_ns * conn_penalty(active_qps)
+//!      + payload_bytes * payload_ns_per_byte
+//!      + misses * miss_cost()
+//! ```
+//!
+//! where `misses` counts state-cache misses among the QP context, MPT and
+//! MTT entries the op must consult. PUs are modeled as k identical
+//! non-preemptive servers; an op admitted at time `t` starts at the
+//! earliest PU-free instant and finishes `work` later.
+
+use super::cache::{EntryKey, FxU64Hasher, NicCache};
+use super::generations::NicGenParams;
+use crate::mem::region::entry_sizes;
+use crate::sim::Nanos;
+use std::collections::HashMap;
+use std::hash::BuildHasherDefault;
+
+type FxSet = HashMap<u64, (), BuildHasherDefault<FxU64Hasher>>;
+
+/// Cached send-queue state per connection (doorbell record + WQE
+/// prefetch window), charged against the SRAM cache on slow-path posts.
+const SQ_STATE_BYTES: u64 = 512;
+
+/// Latency-path payload streaming cost (ns per byte at ~12.8 GB/s).
+const PCIE_STREAM_NS_PER_BYTE: f64 = 0.08;
+
+/// Which role the NIC plays for a verb (determines the stage cost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NicSide {
+    /// Requester transmit: WQE fetch + packet build.
+    ReqTx,
+    /// Requester receive of a response / generation of a CQE.
+    ReqRxCqe,
+    /// Responder servicing a one-sided READ (DMA fetch of payload).
+    RespRead,
+    /// Responder servicing a one-sided WRITE (DMA store of payload).
+    RespWrite,
+    /// Responder delivering a WRITE_WITH_IMM / SEND to a consumer:
+    /// consumes an RQ descriptor and raises a CQE.
+    RespRecvRc,
+    /// Responder delivering a UD SEND: RQ descriptor + GRH handling +
+    /// scatter (the paper's "managing receive queues in UD" overhead).
+    RespRecvUd,
+}
+
+impl NicSide {
+    /// Latency-visible stage factor multiplying `pu_service_ns`.
+    fn stage_factor(self) -> f64 {
+        match self {
+            NicSide::ReqTx => 1.2,
+            NicSide::ReqRxCqe => 0.5,
+            NicSide::RespRead => 1.2,
+            NicSide::RespWrite => 1.2,
+            NicSide::RespRecvRc => 1.6,
+            NicSide::RespRecvUd => 2.0,
+        }
+    }
+
+    /// Capacity-only extra stage work (pipeline occupancy that PU
+    /// concurrency hides from the op's own latency): RQ-descriptor
+    /// replenish and scatter bookkeeping on the receive paths.
+    fn hold_extra_factor(self) -> f64 {
+        match self {
+            NicSide::RespRecvRc => 0.9,
+            NicSide::RespRecvUd => 1.6,
+            _ => 0.0,
+        }
+    }
+
+    /// Does this side drive the send pipeline (subject to the hot-QP
+    /// slow-path switch)?
+    fn uses_send_pipeline(self) -> bool {
+        matches!(self, NicSide::ReqTx)
+    }
+
+    /// Does this side move payload through the DMA pipeline?
+    fn moves_payload(self) -> bool {
+        true
+    }
+}
+
+/// A verb as seen by one NIC.
+#[derive(Clone, Copy, Debug)]
+pub struct NicOp {
+    /// Role played by this NIC.
+    pub side: NicSide,
+    /// Global QP id the op runs on.
+    pub qp: u64,
+    /// Payload bytes.
+    pub len: u32,
+    /// Memory state consulted (responder roles): MPT entry id.
+    pub mpt: Option<u64>,
+    /// Memory state consulted (responder roles): first MTT entry id and
+    /// the number of consecutive entries (pages) spanned. `None` for
+    /// physical segments.
+    pub mtt: Option<(u64, u32)>,
+    /// Extra PU work in ns (e.g. UD receive-queue replenish charged to the
+    /// NIC), on both the latency and capacity paths.
+    pub extra_ns: f64,
+    /// Extra PU *hold* in ns: capacity-only costs such as the software
+    /// rate limiter's descriptor processing (hidden from op latency by PU
+    /// concurrency, but it burns issue slots).
+    pub extra_hold_ns: f64,
+}
+
+impl NicOp {
+    /// Op with no memory-state touches (requester side).
+    pub fn requester(side: NicSide, qp: u64, len: u32) -> Self {
+        NicOp { side, qp, len, mpt: None, mtt: None, extra_ns: 0.0, extra_hold_ns: 0.0 }
+    }
+}
+
+/// Cost breakdown for one op (for tests and perf accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCost {
+    /// Latency-visible work in ns (base stage + payload + miss stalls).
+    pub work_ns: f64,
+    /// PU-hold time in ns (`work_ns` inflated by the connection
+    /// scheduling penalty) — throttles throughput, not latency.
+    pub hold_ns: f64,
+    /// State-cache misses charged.
+    pub misses: u32,
+    /// Connection penalty factor applied.
+    pub conn_penalty: f64,
+}
+
+/// Tracks the number of *distinct QPs with recent work* using two epochs.
+///
+/// `active()` reports the max of the previous full epoch and the current
+/// partial one — a deterministic approximation of "QPs busy right now".
+struct ActiveQps {
+    window: Nanos,
+    epoch_start: Nanos,
+    current: FxSet,
+    prev_count: u32,
+}
+
+impl ActiveQps {
+    fn new(window: Nanos) -> Self {
+        ActiveQps { window, epoch_start: 0, current: FxSet::default(), prev_count: 0 }
+    }
+
+    fn touch(&mut self, now: Nanos, qp: u64) {
+        if now >= self.epoch_start + self.window {
+            self.prev_count = self.current.len() as u32;
+            self.current.clear();
+            self.epoch_start = now;
+        }
+        self.current.insert(qp, ());
+    }
+
+    fn active(&self) -> u32 {
+        self.prev_count.max(self.current.len() as u32).max(1)
+    }
+}
+
+/// One NIC instance (per simulated host).
+pub struct Nic {
+    /// Generation parameters.
+    pub params: NicGenParams,
+    /// SRAM state cache.
+    pub cache: NicCache,
+    pu_free: Vec<Nanos>,
+    active: ActiveQps,
+    /// Ops processed (all sides).
+    pub ops_processed: u64,
+    /// Accumulated PU work ns (for utilization reports).
+    pub busy_ns: f64,
+    /// If set, QP/MTT/MPT lookups bypass the cache entirely (LITE-style
+    /// kernel-managed physical addressing: the NIC holds no per-page state).
+    pub bypass_state_cache: bool,
+    /// Send-pipeline fast-path slots (LRU over QP ids).
+    hot_slots: NicCache,
+}
+
+impl Nic {
+    /// New NIC of the given generation parameters.
+    pub fn new(params: NicGenParams) -> Self {
+        Self::with_host_threads(params, 1)
+    }
+
+    /// NIC serving a host with `threads` posting threads: the send
+    /// pipeline's fast-path slots (doorbell pages + WQE prefetch state)
+    /// are provisioned per thread, so sibling-connection traffic from many
+    /// threads stays on the fast path while a single-context sweep over
+    /// the same number of QPs (Fig. 1) does not.
+    pub fn with_host_threads(params: NicGenParams, threads: u32) -> Self {
+        let cache = NicCache::new(params.cache_bytes);
+        let slots = (params.hot_qp_slots as u64 * threads.max(1) as u64).min(512);
+        let hot_slots = NicCache::new(slots);
+        let pus = params.pus as usize;
+        Nic {
+            params,
+            cache,
+            pu_free: vec![0; pus],
+            active: ActiveQps::new(50 * crate::sim::MICRO),
+            ops_processed: 0,
+            busy_ns: 0.0,
+            bypass_state_cache: false,
+            hot_slots,
+        }
+    }
+
+    /// Charge state-cache accesses for `op`; returns miss count.
+    fn charge_cache(&mut self, op: &NicOp) -> u32 {
+        if self.bypass_state_cache {
+            return 0;
+        }
+        let mut misses = 0u32;
+        if !self.cache.access(EntryKey::Qp(op.qp), entry_sizes::QP_CONTEXT) {
+            misses += 1;
+        }
+        if let Some(mpt) = op.mpt {
+            if !self.cache.access(EntryKey::Mpt(mpt), entry_sizes::MPT_ENTRY) {
+                misses += 1;
+            }
+        }
+        if let Some((base, n)) = op.mtt {
+            for i in 0..n as u64 {
+                if !self.cache.access(EntryKey::Mtt(base + i), entry_sizes::MTT_ENTRY) {
+                    misses += 1;
+                }
+            }
+        }
+        misses
+    }
+
+    /// Compute the PU work for `op` at time `now` (also updates the caches
+    /// and active-QP tracker).
+    ///
+    /// Posting on a QP outside the send pipeline's small fast-path LRU
+    /// (`hot_qp_slots`) takes the slow path: `qp_switch_ns` of extra PU
+    /// *hold* time. Capacity is lost, but the op's own latency is not —
+    /// PU concurrency hides the switch when there is slack. This is what
+    /// lets a lightly loaded cluster with thousands of established QPs
+    /// keep its unloaded RTT and throughput (Fig. 7 stability at 64
+    /// nodes) while the saturating Fig. 1 sweep degrades.
+    pub fn op_cost(&mut self, now: Nanos, op: &NicOp) -> OpCost {
+        self.active.touch(now, op.qp);
+        let misses = self.charge_cache(op);
+        let mut switch = 0.0;
+        if op.side.uses_send_pipeline() && !self.hot_slots.access(EntryKey::Wqe(op.qp), 1) {
+            // Slow path: replay the QP's doorbell/SQ state. If that state
+            // has also fallen out of the SRAM cache (thousands of
+            // connections), it must come over PCIe first.
+            switch = self.params.qp_switch_ns;
+            if !self.bypass_state_cache
+                && !self.cache.access(EntryKey::Wqe(op.qp), SQ_STATE_BYTES)
+            {
+                switch += self.params.miss_cost();
+            }
+        }
+        let stage = op.side.stage_factor() * self.params.pu_service_ns;
+        let hold_stage = stage + op.side.hold_extra_factor() * self.params.pu_service_ns;
+        // Payload: the *latency* cost is the raw PCIe/DMA streaming time
+        // (~12.8 GB/s, largely pipelined with the wire); the *capacity*
+        // cost is the full gather/scatter pipeline occupancy.
+        let payload_latency = op.len as f64 * PCIE_STREAM_NS_PER_BYTE;
+        let payload_hold = if op.side.moves_payload() {
+            op.len as f64 * self.params.payload_ns_per_byte
+        } else {
+            0.0
+        };
+        let shared = misses as f64 * self.params.miss_cost() + op.extra_ns;
+        OpCost {
+            work_ns: stage + shared + payload_latency,
+            hold_ns: hold_stage + shared + payload_hold + switch + op.extra_hold_ns,
+            misses,
+            conn_penalty: if switch > 0.0 { 2.0 } else { 1.0 },
+        }
+    }
+
+    /// Admit an op at `now`: occupies the earliest-free PU for `hold_ns`,
+    /// returns the op's completion time (`start + work_ns`).
+    pub fn admit(&mut self, now: Nanos, cost: &OpCost) -> Nanos {
+        // Earliest-free PU (k small: linear scan).
+        let mut best = 0usize;
+        for i in 1..self.pu_free.len() {
+            if self.pu_free[i] < self.pu_free[best] {
+                best = i;
+            }
+        }
+        let start = self.pu_free[best].max(now);
+        self.pu_free[best] = start + cost.hold_ns.round() as Nanos;
+        self.ops_processed += 1;
+        self.busy_ns += cost.hold_ns;
+        start + cost.work_ns.round() as Nanos
+    }
+
+    /// Convenience: cost + admit in one call.
+    pub fn process(&mut self, now: Nanos, op: &NicOp) -> (Nanos, OpCost) {
+        let cost = self.op_cost(now, op);
+        let finish = self.admit(now, &cost);
+        (finish, cost)
+    }
+
+    /// Current active-QP estimate (for tests/reports).
+    pub fn active_qps(&self) -> u32 {
+        self.active.active()
+    }
+
+    /// Pre-warm the state cache (steady-state measurements: the real
+    /// benchmarks run for seconds, so translation/context state is warm).
+    pub fn prewarm(
+        &mut self,
+        qps: impl Iterator<Item = u64>,
+        mpts: impl Iterator<Item = u64>,
+        mtts: impl Iterator<Item = u64>,
+    ) {
+        for q in qps {
+            self.cache.access(EntryKey::Qp(q), entry_sizes::QP_CONTEXT);
+        }
+        for m in mpts {
+            self.cache.access(EntryKey::Mpt(m), entry_sizes::MPT_ENTRY);
+        }
+        for t in mtts {
+            self.cache.access(EntryKey::Mtt(t), entry_sizes::MTT_ENTRY);
+        }
+        self.cache.reset_counters();
+    }
+
+    /// PU utilization over `elapsed` ns of simulated time.
+    pub fn utilization(&self, elapsed: Nanos) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        self.busy_ns / (elapsed as f64 * self.params.pus as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nic::generations::NicGen;
+
+    fn cx5() -> Nic {
+        Nic::new(NicGen::Cx5.params())
+    }
+
+    #[test]
+    fn cost_includes_payload() {
+        let mut nic = cx5();
+        nic.op_cost(0, &NicOp::requester(NicSide::ReqTx, 1, 64)); // warm QP
+        let small = nic.op_cost(0, &NicOp::requester(NicSide::ReqTx, 1, 64));
+        let big = nic.op_cost(1, &NicOp::requester(NicSide::ReqTx, 1, 4096));
+        // Capacity (hold) pays the full gather/scatter pipeline...
+        assert!(big.hold_ns > small.hold_ns + 1000.0);
+        // ...while latency only pays the raw streaming time.
+        assert!(big.work_ns > small.work_ns + 200.0);
+        assert!(big.work_ns < small.work_ns + 600.0);
+    }
+
+    #[test]
+    fn cqe_payload_is_mostly_capacity_cost() {
+        let mut nic = cx5();
+        nic.op_cost(0, &NicOp::requester(NicSide::ReqRxCqe, 1, 64)); // warm QP
+        let a = nic.op_cost(1, &NicOp::requester(NicSide::ReqRxCqe, 1, 64));
+        let b = nic.op_cost(2, &NicOp::requester(NicSide::ReqRxCqe, 1, 65536));
+        let d_work = b.work_ns - a.work_ns;
+        let d_hold = b.hold_ns - a.hold_ns;
+        assert!(d_hold > 5.0 * d_work, "hold {d_hold} vs work {d_work}");
+    }
+
+    #[test]
+    fn misses_increase_cost() {
+        let mut nic = cx5();
+        let op = NicOp {
+            side: NicSide::RespRead,
+            qp: 7,
+            len: 64,
+            mpt: Some(3),
+            mtt: Some((100, 1)),
+            extra_ns: 0.0,
+            extra_hold_ns: 0.0,
+        };
+        let cold = nic.op_cost(0, &op);
+        let warm = nic.op_cost(1, &op);
+        assert_eq!(cold.misses, 3); // QP + MPT + MTT all cold
+        assert_eq!(warm.misses, 0);
+        assert!(cold.work_ns > warm.work_ns);
+    }
+
+    #[test]
+    fn physseg_ops_skip_mtt() {
+        let mut nic = cx5();
+        let op = NicOp { side: NicSide::RespRead, qp: 1, len: 64, mpt: Some(0), mtt: None, extra_ns: 0.0, extra_hold_ns: 0.0 };
+        let cold = nic.op_cost(0, &op);
+        assert_eq!(cold.misses, 2); // QP + MPT only
+    }
+
+    #[test]
+    fn pus_run_in_parallel() {
+        let mut nic = cx5();
+        let pus = nic.params.pus as u64;
+        let cost = OpCost { work_ns: 100.0, hold_ns: 100.0, misses: 0, conn_penalty: 1.0 };
+        // Admit `pus` ops at t=0: all should finish at work, not serially.
+        for _ in 0..pus {
+            let f = nic.admit(0, &cost);
+            assert_eq!(f, 100);
+        }
+        // One more queues behind the earliest.
+        let f = nic.admit(0, &cost);
+        assert_eq!(f, 200);
+    }
+
+    #[test]
+    fn penalty_throttles_capacity_not_latency() {
+        let mut nic = cx5();
+        // Inflated hold: completion still at start + work, but the PU is
+        // held longer, delaying the next admission.
+        let cost = OpCost { work_ns: 100.0, hold_ns: 300.0, misses: 0, conn_penalty: 3.0 };
+        for _ in 0..nic.params.pus {
+            let f = nic.admit(0, &cost);
+            assert_eq!(f, 100, "latency must not include the penalty");
+        }
+        let f = nic.admit(0, &cost);
+        assert_eq!(f, 400, "next op queues behind the inflated hold");
+    }
+
+    #[test]
+    fn hot_qp_slots_gate_the_switch_cost() {
+        let mut nic = cx5();
+        let slots = nic.params.hot_qp_slots as u64;
+        // Round-robin within the slot budget: everything stays hot after
+        // the first pass.
+        for _pass in 0..2 {
+            for qp in 0..slots {
+                nic.op_cost(qp, &NicOp::requester(NicSide::ReqTx, qp, 64));
+            }
+        }
+        let hot = nic.op_cost(100, &NicOp::requester(NicSide::ReqTx, 0, 64));
+        assert_eq!(hot.conn_penalty, 1.0, "hot QP pays no switch");
+        // Spray 4x the slot count: most posts now take the slow path.
+        let mut slow = 0;
+        for qp in 0..4 * slots {
+            let c = nic.op_cost(200, &NicOp::requester(NicSide::ReqTx, qp, 64));
+            if c.conn_penalty > 1.0 {
+                slow += 1;
+            }
+        }
+        assert!(slow as u64 > 2 * slots, "slow-path posts: {slow}");
+        // Receive-side stages never pay the send-pipeline switch.
+        let rx = nic.op_cost(300, &NicOp::requester(NicSide::RespRead, 999_999, 64));
+        assert_eq!(rx.conn_penalty, 1.0);
+    }
+
+    #[test]
+    fn active_qps_decay_after_idle_epochs() {
+        let mut nic = cx5();
+        for qp in 0..256u64 {
+            nic.op_cost(qp, &NicOp::requester(NicSide::ReqTx, qp, 64));
+        }
+        // Two full windows later only one QP is busy.
+        let later = 2 * 50 * crate::sim::MICRO + 1000;
+        nic.op_cost(later, &NicOp::requester(NicSide::ReqTx, 1, 64));
+        let much_later = 2 * later;
+        nic.op_cost(much_later, &NicOp::requester(NicSide::ReqTx, 1, 64));
+        assert!(nic.active_qps() < 8, "active: {}", nic.active_qps());
+    }
+
+    #[test]
+    fn bypass_state_cache_has_no_misses() {
+        let mut nic = cx5();
+        nic.bypass_state_cache = true;
+        let op = NicOp {
+            side: NicSide::RespRead,
+            qp: 9,
+            len: 64,
+            mpt: Some(1),
+            mtt: Some((5, 4)),
+            extra_ns: 0.0,
+            extra_hold_ns: 0.0,
+        };
+        assert_eq!(nic.op_cost(0, &op).misses, 0);
+    }
+
+    #[test]
+    fn utilization_tracks_busy_time() {
+        let mut nic = cx5();
+        let cost = OpCost { work_ns: 1000.0, hold_ns: 1000.0, misses: 0, conn_penalty: 1.0 };
+        nic.admit(0, &cost);
+        let u = nic.utilization(1000);
+        assert!((u - 1.0 / nic.params.pus as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ud_recv_costs_more_than_rc_recv() {
+        let mut nic = cx5();
+        // warm the QP
+        nic.op_cost(0, &NicOp::requester(NicSide::RespRecvRc, 1, 128));
+        let rc = nic.op_cost(1, &NicOp::requester(NicSide::RespRecvRc, 1, 128));
+        let ud = nic.op_cost(2, &NicOp::requester(NicSide::RespRecvUd, 1, 128));
+        assert!(ud.work_ns > rc.work_ns);
+    }
+}

@@ -1,0 +1,203 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! The L2 JAX graphs (`python/compile/model.py`, calling the L1 Pallas
+//! kernels) are lowered **once** at build time to HLO *text* (see
+//! `python/compile/aot.py`; text rather than serialized proto because
+//! jax ≥ 0.5 emits 64-bit instruction ids the bundled xla_extension
+//! rejects). This module compiles them on the PJRT CPU client at startup
+//! and runs them from the Rust hot path — python never executes at
+//! request time.
+//!
+//! Two executables make up Storm's batchable per-request compute:
+//!
+//! * `lookup_batch` — batched `lookup_start` address resolution: FNV-1a
+//!   hash (the Pallas kernel), owner node, bucket index and byte offset
+//!   for a batch of keys.
+//! * `validate_batch` — batched OCC validation: compare observed
+//!   (key, version, lock) triples against expectations.
+//!
+//! The live loopback dataplane calls these on its request path; `verify`
+//! cross-checks them against the in-crate reference implementations
+//! (`ds::mica::fnv1a64` et al.), which is the L1↔L3 correctness bridge.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ds::mica::{bucket_of, fnv1a64, owner_of};
+
+/// Batch size the artifacts were exported with (see python/compile/aot.py).
+pub const BATCH: usize = 64;
+
+/// Result of batched lookup resolution for one key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolved {
+    /// Owner node.
+    pub owner: u32,
+    /// Bucket index within the owner's shard.
+    pub bucket: u64,
+    /// Byte offset of the bucket in the shard's region.
+    pub offset: u64,
+}
+
+/// The loaded executables.
+pub struct Engine {
+    lookup: xla::PjRtLoadedExecutable,
+    validate: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("loading HLO text from {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl Engine {
+    /// Compile the artifacts in `dir` on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()?;
+        let lookup = load_exe(&client, &dir.join("lookup_batch.hlo.txt"))?;
+        let validate = load_exe(&client, &dir.join("validate_batch.hlo.txt"))?;
+        Ok(Engine { lookup, validate })
+    }
+
+    /// Batched `lookup_start`: resolve owners/buckets/offsets for up to
+    /// [`BATCH`] keys (shorter slices are padded internally).
+    pub fn lookup_resolve(
+        &self,
+        keys: &[u64],
+        nodes: u32,
+        bucket_mask: u64,
+        bucket_bytes: u32,
+    ) -> Result<Vec<Resolved>> {
+        if keys.len() > BATCH {
+            bail!("lookup_resolve batch too large: {} > {BATCH}", keys.len());
+        }
+        let mut padded = [0u64; BATCH];
+        padded[..keys.len()].copy_from_slice(keys);
+        let keys_lit = xla::Literal::vec1(&padded[..]);
+        let nodes_lit = xla::Literal::scalar(nodes as u64);
+        let mask_lit = xla::Literal::scalar(bucket_mask);
+        let bb_lit = xla::Literal::scalar(bucket_bytes as u64);
+        let result = self.lookup.execute::<xla::Literal>(&[keys_lit, nodes_lit, mask_lit, bb_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        let (owners, buckets, offsets) = result.to_tuple3()?;
+        let owners = owners.to_vec::<u64>()?;
+        let buckets = buckets.to_vec::<u64>()?;
+        let offsets = offsets.to_vec::<u64>()?;
+        Ok((0..keys.len())
+            .map(|i| Resolved {
+                owner: owners[i] as u32,
+                bucket: buckets[i],
+                offset: offsets[i],
+            })
+            .collect())
+    }
+
+    /// Batched OCC validation: entry i passes when the observed key and
+    /// version match the expectation and the item is unlocked.
+    pub fn validate(
+        &self,
+        expect_keys: &[u64],
+        observed_keys: &[u64],
+        expect_versions: &[u64],
+        observed_versions: &[u64],
+        locked: &[u64],
+    ) -> Result<Vec<bool>> {
+        let n = expect_keys.len();
+        if n > BATCH {
+            bail!("validate batch too large: {n} > {BATCH}");
+        }
+        let pad = |src: &[u64]| {
+            let mut p = [0u64; BATCH];
+            p[..src.len()].copy_from_slice(src);
+            xla::Literal::vec1(&p[..])
+        };
+        let result = self
+            .validate
+            .execute::<xla::Literal>(&[
+                pad(expect_keys),
+                pad(observed_keys),
+                pad(expect_versions),
+                pad(observed_versions),
+                pad(locked),
+            ])?[0][0]
+            .to_literal_sync()?;
+        let ok = result.to_tuple1()?.to_vec::<u64>()?;
+        Ok(ok[..n].iter().map(|&v| v != 0).collect())
+    }
+}
+
+/// Reference (pure-Rust) resolution — must agree with the artifacts.
+pub fn reference_resolve(key: u64, nodes: u32, bucket_mask: u64, bucket_bytes: u32) -> Resolved {
+    let bucket = bucket_of(key, bucket_mask);
+    Resolved {
+        owner: owner_of(key, nodes),
+        bucket,
+        offset: bucket * bucket_bytes as u64,
+    }
+}
+
+/// Load the artifacts and cross-check them against the in-crate reference
+/// implementation on a few thousand keys. This is the CI gate proving the
+/// L1 Pallas kernel, the L2 JAX graph, and the L3 Rust reference all
+/// compute the same function.
+pub fn verify(dir: impl AsRef<Path>) -> Result<()> {
+    let engine = Engine::load(&dir)?;
+    let nodes = 16u32;
+    let mask = (1u64 << 18) - 1;
+    let bb = 128u32;
+    let mut checked = 0usize;
+    for base in (1u64..4096).step_by(BATCH) {
+        let keys: Vec<u64> = (base..base + BATCH as u64)
+            .map(|k| k.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        let got = engine.lookup_resolve(&keys, nodes, mask, bb)?;
+        for (i, &key) in keys.iter().enumerate() {
+            let want = reference_resolve(key, nodes, mask, bb);
+            if got[i] != want {
+                bail!("lookup mismatch for key {key:#x}: got {:?} want {want:?}", got[i]);
+            }
+            checked += 1;
+        }
+    }
+    // Validation cross-check, including hash-derived pseudo versions.
+    let keys: Vec<u64> = (1..=BATCH as u64).collect();
+    let obs_keys: Vec<u64> =
+        keys.iter().map(|&k| if k % 7 == 0 { k + 1 } else { k }).collect();
+    let vers: Vec<u64> = keys.iter().map(|&k| fnv1a64(k) & 0xffff).collect();
+    let obs_vers: Vec<u64> =
+        vers.iter().enumerate().map(|(i, &v)| if i % 5 == 0 { v + 1 } else { v }).collect();
+    let locked: Vec<u64> = keys.iter().map(|&k| (k % 11 == 0) as u64).collect();
+    let ok = engine.validate(&keys, &obs_keys, &vers, &obs_vers, &locked)?;
+    for i in 0..BATCH {
+        let want = obs_keys[i] == keys[i] && obs_vers[i] == vers[i] && locked[i] == 0;
+        if ok[i] != want {
+            bail!("validate mismatch at {i}: got {} want {want}", ok[i]);
+        }
+        checked += 1;
+    }
+    println!("runtime verify OK: {checked} checks against 2 artifacts");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_resolve_matches_table_addressing() {
+        let r = reference_resolve(42, 8, 0xff, 128);
+        assert_eq!(r.owner, owner_of(42, 8));
+        assert_eq!(r.bucket, bucket_of(42, 0xff));
+        assert_eq!(r.offset, r.bucket * 128);
+    }
+
+    // Engine-backed tests live in rust/tests/runtime_artifacts.rs and run
+    // only after `make artifacts` has produced the HLO files.
+}

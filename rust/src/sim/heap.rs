@@ -1,0 +1,168 @@
+//! Event queue: a binary heap keyed by (time, sequence).
+//!
+//! The sequence number gives deterministic FIFO ordering among events
+//! scheduled for the same instant, which keeps whole-cluster simulations
+//! reproducible regardless of heap internals.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Nanos;
+
+/// An event of payload type `E` scheduled at an instant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScheduledEvent<E> {
+    /// Absolute simulated time the event fires.
+    pub at: Nanos,
+    /// Tie-breaking sequence (insertion order).
+    pub seq: u64,
+    /// The payload.
+    pub event: E,
+}
+
+/// Min-heap of events ordered by `(at, seq)`.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<HeapEntry<E>>>,
+    next_seq: u64,
+    now: Nanos,
+}
+
+struct HeapEntry<E> {
+    at: Nanos,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for HeapEntry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for HeapEntry<E> {}
+impl<E> PartialOrd for HeapEntry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for HeapEntry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue at time zero.
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, now: 0 }
+    }
+
+    /// Current simulated time (the fire time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> Nanos {
+        self.now
+    }
+
+    /// Schedule `event` to fire `delay` ns from now.
+    #[inline]
+    pub fn push_in(&mut self, delay: Nanos, event: E) {
+        self.push_at(self.now + delay, event);
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    #[inline]
+    pub fn push_at(&mut self, at: Nanos, event: E) {
+        let at = at.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(HeapEntry { at, seq, event }));
+    }
+
+    /// Pop the next event, advancing the clock to its fire time.
+    pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        let Reverse(e) = self.heap.pop()?;
+        debug_assert!(e.at >= self.now, "time went backwards");
+        self.now = e.at;
+        Some(ScheduledEvent { at: e.at, seq: e.seq, event: e.event })
+    }
+
+    /// Fire time of the next event without popping.
+    pub fn peek_time(&self) -> Option<Nanos> {
+        self.heap.peek().map(|Reverse(e)| e.at)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(30, "c");
+        q.push_at(10, "a");
+        q.push_at(20, "b");
+        assert_eq!(q.pop().unwrap().event, "a");
+        assert_eq!(q.now(), 10);
+        assert_eq!(q.pop().unwrap().event, "b");
+        assert_eq!(q.pop().unwrap().event, "c");
+        assert_eq!(q.now(), 30);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push_at(5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop().unwrap().event, i);
+        }
+    }
+
+    #[test]
+    fn push_in_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(100, 0);
+        q.pop();
+        q.push_in(50, 1);
+        let e = q.pop().unwrap();
+        assert_eq!(e.at, 150);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(100, 0);
+        q.pop();
+        q.push_at(10, 1); // in the past — clamped
+        assert_eq!(q.pop().unwrap().at, 100);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.push_in(1, ());
+        q.push_in(2, ());
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

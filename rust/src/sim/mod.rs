@@ -1,0 +1,28 @@
+//! Discrete-event simulation core.
+//!
+//! A single-threaded engine: a monotonically increasing simulated clock in
+//! nanoseconds, a binary-heap event queue with deterministic FIFO tie
+//! breaking, a seedable PCG-64 random number generator, and measurement
+//! helpers (histograms, windowed throughput counters).
+//!
+//! Everything above this module (NIC model, transports, dataplanes) is
+//! expressed as typed events scheduled on [`EventQueue`]; the world structs
+//! own the state and dispatch on event kind.
+
+pub mod heap;
+pub mod rng;
+pub mod stats;
+
+pub use heap::{EventQueue, ScheduledEvent};
+pub use rng::{Pcg64, Zipf};
+pub use stats::{Histogram, MeterWindow, RateMeter};
+
+/// Simulated time in nanoseconds since simulation start.
+pub type Nanos = u64;
+
+/// One microsecond in [`Nanos`].
+pub const MICRO: Nanos = 1_000;
+/// One millisecond in [`Nanos`].
+pub const MILLI: Nanos = 1_000_000;
+/// One second in [`Nanos`].
+pub const SECOND: Nanos = 1_000_000_000;

@@ -1,0 +1,243 @@
+//! Deterministic PCG-64 (XSL-RR) random number generator.
+//!
+//! The simulator must be bit-for-bit reproducible across runs and platforms
+//! (figure regeneration, proptest shrinking, calibration tests), so we carry
+//! our own small PRNG instead of depending on `rand`.
+
+/// PCG XSL-RR 128/64 generator. 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id. Different streams with
+    /// the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e_39cb_94b9_5bdb) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed-only constructor on the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next uniform `u64`.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift method.
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    #[inline]
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        self.gen_range(bound as u64) as usize
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Exponentially distributed sample with the given mean.
+    #[inline]
+    pub fn gen_exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.gen_f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipfian sampler over `[0, n)` with parameter `theta` (YCSB-style), using
+/// the Gray et al. rejection-free method with precomputed constants.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    /// Build a sampler for `n` items with skew `theta` in `[0, 1)`.
+    /// `theta = 0` degenerates to uniform-ish (use `Pcg64::gen_range` for
+    /// exact uniform).
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta >= 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2: zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact up to 10^6, then continuous approximation: the harmonic tail
+        // integral. Keeps construction O(1)-ish for very large n.
+        let cutoff = n.min(1_000_000);
+        let mut z = 0.0;
+        for i in 1..=cutoff {
+            z += 1.0 / (i as f64).powf(theta);
+        }
+        if n > cutoff {
+            let a = 1.0 - theta;
+            z += ((n as f64).powf(a) - (cutoff as f64).powf(a)) / a;
+        }
+        z
+    }
+
+    /// Sample an item index in `[0, n)`; low indices are hot.
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let _ = self.zeta2;
+        ((self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64 % self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn gen_range_respects_bound() {
+        let mut rng = Pcg64::seeded(1);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(rng.gen_range(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_is_roughly_uniform() {
+        let mut rng = Pcg64::seeded(9);
+        let mut buckets = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            buckets[rng.gen_index(10)] += 1;
+        }
+        for &b in &buckets {
+            let expect = n / 10;
+            assert!(
+                (b as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "bucket {b} far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = rng.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| rng.gen_exp(500.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 500.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut rng = Pcg64::seeded(5);
+        let z = Zipf::new(10_000, 0.99);
+        let mut head = 0usize;
+        let n = 50_000;
+        for _ in 0..n {
+            let s = z.sample(&mut rng);
+            assert!(s < 10_000);
+            if s < 100 {
+                head += 1;
+            }
+        }
+        // With theta=0.99 the top 1% of keys should absorb well over a third
+        // of the accesses.
+        assert!(head > n / 3, "head draws: {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

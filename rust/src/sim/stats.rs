@@ -1,0 +1,294 @@
+//! Measurement: log-bucketed latency histograms and throughput meters.
+
+use super::{Nanos, SECOND};
+
+/// HDR-style histogram with logarithmic buckets and linear sub-buckets.
+///
+/// Records `u64` values (nanoseconds in practice) with ~3% relative error,
+/// constant memory, O(1) record, and quantile queries. Good enough for the
+/// p50/p99 numbers the paper reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// 64 magnitude tiers x 32 linear sub-buckets.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB: usize = 32;
+const SUB_BITS: u32 = 5;
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram { buckets: vec![0; 64 * SUB], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let tier = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        if tier < SUB_BITS as usize {
+            return v as usize; // exact for small values
+        }
+        let shift = tier as u32 - SUB_BITS;
+        let sub = ((v >> shift) as usize) & (SUB - 1);
+        tier * SUB + sub
+    }
+
+    #[inline]
+    fn bucket_low(index: usize) -> u64 {
+        let tier = index / SUB;
+        let sub = index % SUB;
+        if tier < SUB_BITS as usize {
+            return index as u64;
+        }
+        let shift = tier as u32 - SUB_BITS;
+        ((SUB + sub) as u64) << shift
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.buckets[Self::index(value)] += 1;
+        self.count += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_low(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// p50 shorthand.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    /// p99 shorthand.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reset to empty.
+    pub fn clear(&mut self) {
+        self.buckets.iter_mut().for_each(|b| *b = 0);
+        self.count = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Counts events inside a `[start, end)` measurement window of simulated
+/// time, ignoring warmup and drain phases.
+#[derive(Clone, Copy, Debug)]
+pub struct MeterWindow {
+    /// Window start (inclusive).
+    pub start: Nanos,
+    /// Window end (exclusive).
+    pub end: Nanos,
+}
+
+impl MeterWindow {
+    /// Window covering `[start, end)`.
+    pub fn new(start: Nanos, end: Nanos) -> Self {
+        assert!(end > start);
+        MeterWindow { start, end }
+    }
+
+    /// Is `t` inside the window?
+    #[inline]
+    pub fn contains(&self, t: Nanos) -> bool {
+        t >= self.start && t < self.end
+    }
+
+    /// Window length in ns.
+    pub fn len(&self) -> Nanos {
+        self.end - self.start
+    }
+}
+
+/// Windowed throughput meter: completed operations inside the window.
+#[derive(Clone, Debug)]
+pub struct RateMeter {
+    window: MeterWindow,
+    ops: u64,
+}
+
+impl RateMeter {
+    /// Meter over the given window.
+    pub fn new(window: MeterWindow) -> Self {
+        RateMeter { window, ops: 0 }
+    }
+
+    /// Record an operation completed at time `t`.
+    #[inline]
+    pub fn record(&mut self, t: Nanos) {
+        if self.window.contains(t) {
+            self.ops += 1;
+        }
+    }
+
+    /// Record `n` operations completed at time `t`.
+    #[inline]
+    pub fn record_n(&mut self, t: Nanos, n: u64) {
+        if self.window.contains(t) {
+            self.ops += n;
+        }
+    }
+
+    /// Operations counted in the window.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Throughput in operations per second of simulated time.
+    pub fn ops_per_sec(&self) -> f64 {
+        self.ops as f64 * SECOND as f64 / self.window.len() as f64
+    }
+
+    /// Throughput in mega-ops per second.
+    pub fn mops(&self) -> f64 {
+        self.ops_per_sec() / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 5);
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(1.0), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_error() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.05, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 99_000.0).abs() / 99_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean() {
+        let mut h = Histogram::new();
+        h.record(100);
+        h.record(300);
+        assert_eq!(h.mean(), 200.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn rate_meter_counts_only_window() {
+        let mut m = RateMeter::new(MeterWindow::new(100, 1_000_000_100));
+        m.record(50); // before
+        m.record(100); // inside
+        m.record(500); // inside
+        m.record(1_000_000_100); // after (exclusive)
+        assert_eq!(m.ops(), 2);
+        assert!((m.ops_per_sec() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_large_values_bounded_error() {
+        let mut h = Histogram::new();
+        let v = 123_456_789u64;
+        h.record(v);
+        let q = h.quantile(0.5);
+        let rel = (q as f64 - v as f64).abs() / v as f64;
+        assert!(rel < 0.04, "rel err {rel}");
+    }
+}

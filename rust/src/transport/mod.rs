@@ -1,0 +1,22 @@
+//! Transport layer: queue pairs, connection topology, congestion control.
+//!
+//! Storm's design principle #2 is *leverage RC connections*: one RC
+//! connection per **sibling thread pair** and per data path (remote reads
+//! vs. RPCs) — `2·m·t` connections per machine — with retransmission and
+//! congestion control offloaded to the NIC. The UD transport (used by the
+//! eRPC baseline) gets one QP per thread but needs software congestion
+//! control, software retransmission, and receive-queue management.
+//!
+//! This module owns the *identity and policy* side: connection id algebra
+//! ([`topology`]), software congestion control ([`cc`]), and UD receive
+//! pools/retransmission ([`ud`]). The *timing* side (what each verb costs
+//! at each NIC) lives in [`crate::nic`]; the event flow lives in
+//! [`crate::cluster`].
+
+pub mod cc;
+pub mod topology;
+pub mod ud;
+
+pub use cc::AppCc;
+pub use topology::{Channel, ConnId, Topology};
+pub use ud::{RecvPool, RetransmitState};

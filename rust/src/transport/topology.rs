@@ -1,0 +1,164 @@
+//! Connection topology: Storm's sibling-pair RC mesh and UD QPs.
+//!
+//! Global connection ids are deterministic functions of the endpoints so
+//! both NICs charge their caches against the same id, and tests can reason
+//! about the id algebra. The Fig. 7 cluster-emulation trick ("creating
+//! additional connections and allocating additional buffers between each
+//! pair of machines") is the `conn_multiplier`: every (pair, thread,
+//! channel) gets `k` parallel connections and senders stripe across them,
+//! inflating the NIC's QP working set exactly the way the paper's emulation
+//! does.
+
+
+
+/// Global connection (QP) identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ConnId(pub u64);
+
+/// Storm separates one-sided reads and RPC traffic onto distinct QPs
+/// (its "two independent data paths", Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Channel {
+    /// One-sided remote reads (and validation reads).
+    ReadPath = 0,
+    /// Write-based RPCs.
+    RpcPath = 1,
+}
+
+/// Cluster connection topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Physical machines.
+    pub nodes: u32,
+    /// Threads per machine (sibling sets).
+    pub threads: u32,
+    /// Parallel connections per (pair, thread, channel) — 1 normally, >1
+    /// when emulating a larger cluster (Fig. 7).
+    pub conn_multiplier: u32,
+}
+
+impl Topology {
+    /// Standard topology.
+    pub fn new(nodes: u32, threads: u32) -> Self {
+        Topology { nodes, threads, conn_multiplier: 1 }
+    }
+
+    /// Topology emulating `virtual_nodes` on `nodes` physical machines.
+    pub fn emulated(nodes: u32, threads: u32, virtual_nodes: u32) -> Self {
+        assert!(virtual_nodes >= nodes && virtual_nodes % nodes == 0);
+        Topology { nodes, threads, conn_multiplier: virtual_nodes / nodes }
+    }
+
+    /// RC connection between sibling threads `thread` of `a` and `b`, on
+    /// `channel`, stripe `lane < conn_multiplier`.
+    pub fn rc_conn(&self, a: u32, b: u32, thread: u32, channel: Channel, lane: u32) -> ConnId {
+        assert!(a != b, "no self-connections");
+        assert!(thread < self.threads && lane < self.conn_multiplier);
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let n = self.nodes as u64;
+        let pair = lo as u64 * n + hi as u64;
+        let id = ((pair * self.threads as u64 + thread as u64) * 2 + channel as u64)
+            * self.conn_multiplier as u64
+            + lane as u64;
+        ConnId(id)
+    }
+
+    /// UD QP of (`node`, `thread`) — one per thread, distinct id space
+    /// (top bit set).
+    pub fn ud_qp(&self, node: u32, thread: u32) -> ConnId {
+        ConnId((1 << 63) | ((node as u64) * self.threads as u64 + thread as u64))
+    }
+
+    /// RC connections terminating at each machine: the paper's `2·m·t`
+    /// (× multiplier when emulating).
+    pub fn rc_conns_per_machine(&self) -> u64 {
+        2 * (self.nodes as u64 - 1) * self.threads as u64 * self.conn_multiplier as u64
+    }
+
+    /// Bytes of QP context a NIC must cache when all its connections are
+    /// active.
+    pub fn qp_state_bytes_per_machine(&self) -> u64 {
+        self.rc_conns_per_machine() * crate::mem::region::entry_sizes::QP_CONTEXT
+    }
+
+    /// The virtual cluster size this topology emulates.
+    pub fn virtual_nodes(&self) -> u32 {
+        self.nodes * self.conn_multiplier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_ids_symmetric() {
+        let t = Topology::new(8, 4);
+        let ab = t.rc_conn(2, 5, 3, Channel::ReadPath, 0);
+        let ba = t.rc_conn(5, 2, 3, Channel::ReadPath, 0);
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn conn_ids_unique() {
+        let t = Topology::emulated(4, 3, 8);
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..4 {
+            for b in 0..4 {
+                if a == b {
+                    continue;
+                }
+                for th in 0..3 {
+                    for ch in [Channel::ReadPath, Channel::RpcPath] {
+                        for lane in 0..2 {
+                            seen.insert(t.rc_conn(a, b, th, ch, lane));
+                        }
+                    }
+                }
+            }
+        }
+        // pairs = 6, x threads 3 x channels 2 x lanes 2 = 72 distinct.
+        assert_eq!(seen.len(), 72);
+    }
+
+    #[test]
+    fn channels_are_distinct_qps() {
+        let t = Topology::new(4, 2);
+        assert_ne!(
+            t.rc_conn(0, 1, 0, Channel::ReadPath, 0),
+            t.rc_conn(0, 1, 0, Channel::RpcPath, 0)
+        );
+    }
+
+    #[test]
+    fn ud_ids_disjoint_from_rc() {
+        let t = Topology::new(16, 20);
+        let ud = t.ud_qp(3, 7);
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                assert_ne!(t.rc_conn(a, b, 0, Channel::ReadPath, 0), ud);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_connection_count_formula() {
+        // Paper: 2 x m x t connections per machine (m=32, t=20 -> 1280ish).
+        let t = Topology::new(32, 20);
+        assert_eq!(t.rc_conns_per_machine(), 2 * 31 * 20);
+        // QP state: ~465 KB at 32 nodes — comfortably inside a 2 MB cache.
+        assert!(t.qp_state_bytes_per_machine() < 2 << 20);
+        // At an emulated 96 nodes x 20 threads it exceeds half the cache and
+        // starts competing with MTT/MPT/WQE state (the Fig. 7 drop).
+        let big = Topology::emulated(32, 20, 96);
+        assert!(big.qp_state_bytes_per_machine() > 1 << 20);
+        assert_eq!(big.virtual_nodes(), 96);
+    }
+
+    #[test]
+    fn emulation_multiplies_lanes() {
+        let t = Topology::emulated(32, 10, 128);
+        assert_eq!(t.conn_multiplier, 4);
+        assert_eq!(t.rc_conns_per_machine(), 2 * 31 * 10 * 4);
+    }
+}

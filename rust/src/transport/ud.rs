@@ -1,0 +1,160 @@
+//! UD reliability machinery: receive pools and software retransmission.
+//!
+//! UD is unreliable: if a datagram arrives and the receive queue has no
+//! posted buffer, it is silently dropped and the *application* must detect
+//! the loss by timeout and retransmit (RC offloads all of this to the NIC).
+//! eRPC therefore keeps large pools of pre-posted receive buffers — which
+//! is exactly what limited the paper's eRPC deployment to 16 nodes ("our
+//! NICs do not support sufficiently large receive queues", fixable only
+//! with strided RQs they didn't have).
+
+use crate::sim::Nanos;
+
+/// A receive-buffer pool shared by one machine's UD QPs.
+#[derive(Clone, Debug)]
+pub struct RecvPool {
+    capacity: u32,
+    posted: u32,
+    /// Buffers consumed but not yet reposted by the host.
+    pending_repost: u32,
+    drops: u64,
+    delivered: u64,
+}
+
+impl RecvPool {
+    /// Pool with `capacity` posted buffers (the NIC's RQ depth limit).
+    pub fn new(capacity: u32) -> Self {
+        RecvPool { capacity, posted: capacity, pending_repost: 0, drops: 0, delivered: 0 }
+    }
+
+    /// An inbound datagram arrives: consume a buffer, or drop.
+    /// Returns `true` when delivered.
+    pub fn arrive(&mut self) -> bool {
+        if self.posted == 0 {
+            self.drops += 1;
+            return false;
+        }
+        self.posted -= 1;
+        self.pending_repost += 1;
+        self.delivered += 1;
+        true
+    }
+
+    /// Host reposts up to `batch` consumed buffers; returns how many were
+    /// actually reposted (CPU cost is charged by the caller per buffer).
+    pub fn repost(&mut self, batch: u32) -> u32 {
+        let n = batch.min(self.pending_repost);
+        self.pending_repost -= n;
+        self.posted += n;
+        debug_assert!(self.posted <= self.capacity);
+        n
+    }
+
+    /// Buffers currently posted.
+    pub fn posted(&self) -> u32 {
+        self.posted
+    }
+
+    /// Datagrams dropped for lack of buffers.
+    pub fn drops(&self) -> u64 {
+        self.drops
+    }
+
+    /// Datagrams delivered.
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Can this pool provision `peers` remote senders with `window`
+    /// outstanding messages each? (The paper's 16-node eRPC limit.)
+    pub fn can_provision(&self, peers: u32, window: u32) -> bool {
+        peers.saturating_mul(window) <= self.capacity
+    }
+}
+
+/// Software retransmission state for one outstanding UD request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetransmitState {
+    /// Retransmission timeout.
+    pub rto: Nanos,
+    /// Deadline after which the request is considered lost.
+    pub deadline: Nanos,
+    /// Retries so far.
+    pub retries: u32,
+    /// Give up after this many retries.
+    pub max_retries: u32,
+}
+
+impl RetransmitState {
+    /// Arm a timer for a request sent at `now`.
+    pub fn armed(now: Nanos, rto: Nanos, max_retries: u32) -> Self {
+        RetransmitState { rto, deadline: now + rto, retries: 0, max_retries }
+    }
+
+    /// Timer fired at `now` without a response: decide to retry (with
+    /// exponential backoff) or give up.
+    pub fn on_timeout(&mut self, now: Nanos) -> RetransmitDecision {
+        if self.retries >= self.max_retries {
+            return RetransmitDecision::GiveUp;
+        }
+        self.retries += 1;
+        self.rto = self.rto.saturating_mul(2);
+        self.deadline = now + self.rto;
+        RetransmitDecision::Retry
+    }
+}
+
+/// Outcome of a retransmission timeout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetransmitDecision {
+    /// Send the request again; timer re-armed.
+    Retry,
+    /// Too many retries; fail the op upward.
+    GiveUp,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_delivers_until_empty_then_drops() {
+        let mut p = RecvPool::new(2);
+        assert!(p.arrive());
+        assert!(p.arrive());
+        assert!(!p.arrive(), "third datagram must drop");
+        assert_eq!(p.drops(), 1);
+        assert_eq!(p.delivered(), 2);
+    }
+
+    #[test]
+    fn repost_restores_capacity() {
+        let mut p = RecvPool::new(4);
+        for _ in 0..4 {
+            p.arrive();
+        }
+        assert_eq!(p.posted(), 0);
+        assert_eq!(p.repost(8), 4, "only consumed buffers repostable");
+        assert_eq!(p.posted(), 4);
+        assert!(p.arrive());
+    }
+
+    #[test]
+    fn provisioning_check_matches_paper_limit() {
+        // 4096-deep RQ, window 32: supports 128 peers but not 256.
+        let p = RecvPool::new(4096);
+        assert!(p.can_provision(128, 32));
+        assert!(!p.can_provision(256, 32));
+    }
+
+    #[test]
+    fn retransmit_backs_off_and_gives_up() {
+        let mut r = RetransmitState::armed(1000, 500, 2);
+        assert_eq!(r.deadline, 1500);
+        assert_eq!(r.on_timeout(1500), RetransmitDecision::Retry);
+        assert_eq!(r.rto, 1000);
+        assert_eq!(r.deadline, 2500);
+        assert_eq!(r.on_timeout(2500), RetransmitDecision::Retry);
+        assert_eq!(r.on_timeout(4500), RetransmitDecision::GiveUp);
+    }
+}

@@ -1,0 +1,105 @@
+//! Key-value lookup workload (paper §6.1).
+//!
+//! Uniform-random single-key lookups over a keyspace partitioned across
+//! the cluster by the hash owner function. By default only *remote* keys
+//! are sampled (the paper's microbenchmark measures the network dataplane,
+//! not local hash-table reads); optionally a Zipfian skew can be applied
+//! for contention studies beyond the paper.
+
+use crate::ds::mica::owner_of;
+use crate::sim::{Pcg64, Zipf};
+
+/// Key-sampling workload state (one per coroutine or thread).
+#[derive(Clone, Debug)]
+pub struct KvWorkload {
+    /// Total keys across the cluster (keys are `1..=total`).
+    pub total_keys: u64,
+    /// Number of nodes (for owner exclusion).
+    pub nodes: u32,
+    /// Sample keys owned by this node too?
+    pub include_local: bool,
+    /// Optional Zipfian skew (None = uniform).
+    zipf: Option<Zipf>,
+}
+
+impl KvWorkload {
+    /// Uniform workload over `total_keys` keys.
+    pub fn uniform(total_keys: u64, nodes: u32) -> Self {
+        KvWorkload { total_keys, nodes, include_local: false, zipf: None }
+    }
+
+    /// Zipfian-skewed variant.
+    pub fn zipfian(total_keys: u64, nodes: u32, theta: f64) -> Self {
+        KvWorkload {
+            total_keys,
+            nodes,
+            include_local: false,
+            zipf: Some(Zipf::new(total_keys, theta)),
+        }
+    }
+
+    /// Sample the next key for a client on `my_node`.
+    pub fn next_key(&self, my_node: u32, rng: &mut Pcg64) -> u64 {
+        loop {
+            let key = match &self.zipf {
+                Some(z) => z.sample(rng) + 1,
+                None => rng.gen_range(self.total_keys) + 1,
+            };
+            if self.include_local || self.nodes == 1 || owner_of(key, self.nodes) != my_node {
+                return key;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_in_range_and_remote() {
+        let w = KvWorkload::uniform(10_000, 8);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..5_000 {
+            let k = w.next_key(3, &mut rng);
+            assert!((1..=10_000).contains(&k));
+            assert_ne!(owner_of(k, 8), 3);
+        }
+    }
+
+    #[test]
+    fn include_local_allows_own_keys() {
+        let mut w = KvWorkload::uniform(10_000, 4);
+        w.include_local = true;
+        let mut rng = Pcg64::seeded(2);
+        let mut local = 0;
+        for _ in 0..10_000 {
+            if owner_of(w.next_key(0, &mut rng), 4) == 0 {
+                local += 1;
+            }
+        }
+        // Roughly a quarter should be local.
+        assert!((1500..3500).contains(&local), "local {local}");
+    }
+
+    #[test]
+    fn single_node_does_not_spin() {
+        let w = KvWorkload::uniform(100, 1);
+        let mut rng = Pcg64::seeded(3);
+        let k = w.next_key(0, &mut rng);
+        assert!((1..=100).contains(&k));
+    }
+
+    #[test]
+    fn zipf_skews_toward_hot_keys() {
+        let w = KvWorkload::zipfian(100_000, 4, 0.99);
+        let mut rng = Pcg64::seeded(4);
+        let mut head = 0;
+        for _ in 0..20_000 {
+            if w.next_key(0, &mut rng) <= 1_000 {
+                head += 1;
+            }
+        }
+        assert!(head > 5_000, "zipf head {head}");
+    }
+}

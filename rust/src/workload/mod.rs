@@ -1,0 +1,13 @@
+//! Workloads from the paper's evaluation (§6.1).
+//!
+//! * [`kv`] — *Key-value lookups*: random single-key lookups over the
+//!   distributed MICA table, 128-byte transfers.
+//! * [`tatp`] — the Telecom Application Transaction Processing benchmark:
+//!   seven transaction types over four tables, 80% reads / 16% writes /
+//!   4% inserts+deletes, run through Storm transactions.
+
+pub mod kv;
+pub mod tatp;
+
+pub use kv::KvWorkload;
+pub use tatp::{TatpKind, TatpPopulation, TatpTx, TatpWorkload};

@@ -1,0 +1,296 @@
+//! TATP — Telecom Application Transaction Processing (paper §6.1, Fig. 6).
+//!
+//! The standard benchmark simulating a Home Location Register: four tables
+//! keyed by subscriber id, seven transaction types with the canonical mix
+//! (80% reads, 16% writes, 4% inserts/deletes — exactly the fractions the
+//! paper quotes). Tables map to four Storm data-structure objects; every
+//! transaction becomes a read set + write set executed by the Storm
+//! transactional protocol.
+//!
+//! Key encoding (single-u64 keys for the MICA table):
+//! * SUBSCRIBER:        `s_id`
+//! * ACCESS_INFO:       `s_id * 4 + (ai_type - 1)`
+//! * SPECIAL_FACILITY:  `s_id * 4 + (sf_type - 1)`
+//! * CALL_FORWARDING:   `(s_id * 4 + (sf_type - 1)) * 3 + start_time / 8`
+
+use crate::dataplane::tx::TxItem;
+use crate::ds::api::ObjectId;
+use crate::sim::Pcg64;
+
+/// Object ids of the four TATP tables.
+pub const SUBSCRIBER: ObjectId = ObjectId(0);
+/// ACCESS_INFO table.
+pub const ACCESS_INFO: ObjectId = ObjectId(1);
+/// SPECIAL_FACILITY table.
+pub const SPECIAL_FACILITY: ObjectId = ObjectId(2);
+/// CALL_FORWARDING table.
+pub const CALL_FORWARDING: ObjectId = ObjectId(3);
+
+/// Encode an ACCESS_INFO / SPECIAL_FACILITY key.
+pub fn sf_key(s_id: u64, typ: u64) -> u64 {
+    debug_assert!((1..=4).contains(&typ));
+    s_id * 4 + (typ - 1)
+}
+
+/// Encode a CALL_FORWARDING key.
+pub fn cf_key(s_id: u64, sf_type: u64, start_time: u64) -> u64 {
+    debug_assert!(start_time % 8 == 0 && start_time <= 16);
+    sf_key(s_id, sf_type) * 3 + start_time / 8
+}
+
+/// The seven TATP transaction types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TatpKind {
+    /// 35%: read one SUBSCRIBER row.
+    GetSubscriberData,
+    /// 10%: read SPECIAL_FACILITY + CALL_FORWARDING rows.
+    GetNewDestination,
+    /// 35%: read one ACCESS_INFO row.
+    GetAccessData,
+    /// 2%: update SUBSCRIBER bit + SPECIAL_FACILITY data.
+    UpdateSubscriberData,
+    /// 14%: update SUBSCRIBER location.
+    UpdateLocation,
+    /// 2%: read SUBSCRIBER + SPECIAL_FACILITY, insert CALL_FORWARDING.
+    InsertCallForwarding,
+    /// 2%: read SUBSCRIBER, delete CALL_FORWARDING.
+    DeleteCallForwarding,
+}
+
+impl TatpKind {
+    /// Does this transaction type mutate state?
+    pub fn is_write(self) -> bool {
+        !matches!(
+            self,
+            TatpKind::GetSubscriberData | TatpKind::GetNewDestination | TatpKind::GetAccessData
+        )
+    }
+}
+
+/// One generated transaction.
+#[derive(Clone, Debug)]
+pub struct TatpTx {
+    /// Transaction type (for per-type stats).
+    pub kind: TatpKind,
+    /// Read set.
+    pub read_set: Vec<TxItem>,
+    /// Write set.
+    pub write_set: Vec<TxItem>,
+}
+
+/// Workload generator.
+#[derive(Clone, Debug)]
+pub struct TatpWorkload {
+    /// Subscribers in the database.
+    pub subscribers: u64,
+}
+
+impl TatpWorkload {
+    /// Standard-scale generator over `subscribers` subscribers.
+    pub fn new(subscribers: u64) -> Self {
+        TatpWorkload { subscribers }
+    }
+
+    /// TATP's non-uniform subscriber id distribution (NURand-like): the
+    /// spec draws `s_id` with a bitwise-OR skew; we use the standard
+    /// `(A | B) mod P + 1` construction with A = 2^k-1 scaled to P.
+    fn s_id(&self, rng: &mut Pcg64) -> u64 {
+        let p = self.subscribers;
+        let a = (p.next_power_of_two() / 4).max(1) - 1;
+        let x = rng.gen_range(a + 1);
+        let y = rng.gen_range(p);
+        ((x | y) % p) + 1
+    }
+
+    /// Draw the next transaction per the standard mix.
+    pub fn next_tx(&self, rng: &mut Pcg64) -> TatpTx {
+        let roll = rng.gen_range(100);
+        let s = self.s_id(rng);
+        let sf_type = rng.gen_range(4) + 1;
+        let ai_type = rng.gen_range(4) + 1;
+        let start_time = rng.gen_range(3) * 8;
+        match roll {
+            0..=34 => TatpTx {
+                kind: TatpKind::GetSubscriberData,
+                read_set: vec![TxItem::read(SUBSCRIBER, s)],
+                write_set: vec![],
+            },
+            35..=44 => TatpTx {
+                kind: TatpKind::GetNewDestination,
+                read_set: vec![
+                    TxItem::read(SPECIAL_FACILITY, sf_key(s, sf_type)),
+                    TxItem::read(CALL_FORWARDING, cf_key(s, sf_type, start_time)),
+                ],
+                write_set: vec![],
+            },
+            45..=79 => TatpTx {
+                kind: TatpKind::GetAccessData,
+                read_set: vec![TxItem::read(ACCESS_INFO, sf_key(s, ai_type))],
+                write_set: vec![],
+            },
+            80..=81 => TatpTx {
+                kind: TatpKind::UpdateSubscriberData,
+                read_set: vec![],
+                write_set: vec![
+                    TxItem::update(SUBSCRIBER, s),
+                    TxItem::update(SPECIAL_FACILITY, sf_key(s, sf_type)),
+                ],
+            },
+            82..=95 => TatpTx {
+                kind: TatpKind::UpdateLocation,
+                read_set: vec![],
+                write_set: vec![TxItem::update(SUBSCRIBER, s)],
+            },
+            96..=97 => TatpTx {
+                kind: TatpKind::InsertCallForwarding,
+                read_set: vec![
+                    TxItem::read(SUBSCRIBER, s),
+                    TxItem::read(SPECIAL_FACILITY, sf_key(s, sf_type)),
+                ],
+                write_set: vec![TxItem::insert(CALL_FORWARDING, cf_key(s, sf_type, start_time))],
+            },
+            _ => TatpTx {
+                kind: TatpKind::DeleteCallForwarding,
+                read_set: vec![TxItem::read(SUBSCRIBER, s)],
+                write_set: vec![TxItem::delete(CALL_FORWARDING, cf_key(s, sf_type, start_time))],
+            },
+        }
+    }
+}
+
+/// Deterministic initial population (rows per table).
+pub struct TatpPopulation {
+    /// Subscribers.
+    pub subscribers: u64,
+}
+
+impl TatpPopulation {
+    /// Population for `subscribers`.
+    pub fn new(subscribers: u64) -> Self {
+        TatpPopulation { subscribers }
+    }
+
+    /// Iterate all (object, key) rows to load. Deterministic in `seed`.
+    pub fn rows(&self, seed: u64) -> impl Iterator<Item = (ObjectId, u64)> + '_ {
+        let mut rng = Pcg64::new(seed, 0xDB);
+        (1..=self.subscribers).flat_map(move |s| {
+            let mut rows = vec![(SUBSCRIBER, s)];
+            let n_ai = rng.gen_range(4) + 1;
+            for t in 1..=n_ai {
+                rows.push((ACCESS_INFO, sf_key(s, t)));
+            }
+            let n_sf = rng.gen_range(4) + 1;
+            for t in 1..=n_sf {
+                rows.push((SPECIAL_FACILITY, sf_key(s, t)));
+                let n_cf = rng.gen_range(4); // 0..=3
+                for c in 0..n_cf {
+                    rows.push((CALL_FORWARDING, cf_key(s, t, c * 8)));
+                }
+            }
+            rows.into_iter()
+        })
+    }
+
+    /// Expected total row count (rough, for table sizing): 1 + ~2.5 AI +
+    /// ~2.5 SF + ~3.75 CF per subscriber.
+    pub fn approx_rows(&self) -> u64 {
+        self.subscribers * 10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_matches_paper_fractions() {
+        let w = TatpWorkload::new(100_000);
+        let mut rng = Pcg64::seeded(7);
+        let n = 200_000;
+        let mut reads = 0;
+        let mut writes = 0;
+        let mut inserts_deletes = 0;
+        for _ in 0..n {
+            let tx = w.next_tx(&mut rng);
+            match tx.kind {
+                TatpKind::GetSubscriberData | TatpKind::GetNewDestination | TatpKind::GetAccessData => {
+                    reads += 1
+                }
+                TatpKind::UpdateSubscriberData | TatpKind::UpdateLocation => writes += 1,
+                TatpKind::InsertCallForwarding | TatpKind::DeleteCallForwarding => {
+                    inserts_deletes += 1
+                }
+            }
+        }
+        // Paper: "16% of writes and 4% of inserts and deletes".
+        let f = |x: i64| x as f64 / n as f64;
+        assert!((f(reads) - 0.80).abs() < 0.01, "reads {}", f(reads));
+        assert!((f(writes) - 0.16).abs() < 0.01, "writes {}", f(writes));
+        assert!((f(inserts_deletes) - 0.04).abs() < 0.01);
+    }
+
+    #[test]
+    fn subscriber_ids_in_range_and_skewed() {
+        let w = TatpWorkload::new(10_000);
+        let mut rng = Pcg64::seeded(9);
+        let mut low_half = 0;
+        for _ in 0..20_000 {
+            let tx = w.next_tx(&mut rng);
+            for item in tx.read_set.iter().chain(tx.write_set.iter()) {
+                if item.obj == SUBSCRIBER {
+                    assert!((1..=10_000).contains(&item.key));
+                    if item.key <= 5_000 {
+                        low_half += 1;
+                    }
+                }
+            }
+        }
+        assert!(low_half > 0);
+    }
+
+    #[test]
+    fn key_encodings_disjoint_within_table() {
+        // Distinct (s, type) pairs must encode to distinct keys.
+        let mut seen = std::collections::HashSet::new();
+        for s in 1..=100u64 {
+            for t in 1..=4u64 {
+                assert!(seen.insert(sf_key(s, t)));
+            }
+        }
+        let mut cf = std::collections::HashSet::new();
+        for s in 1..=50u64 {
+            for t in 1..=4u64 {
+                for st in [0u64, 8, 16] {
+                    assert!(cf.insert(cf_key(s, t, st)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn population_deterministic_and_sized() {
+        let p = TatpPopulation::new(1000);
+        let rows_a: Vec<_> = p.rows(42).collect();
+        let rows_b: Vec<_> = p.rows(42).collect();
+        assert_eq!(rows_a, rows_b);
+        let n = rows_a.len() as u64;
+        // 1 + avg 2.5 + avg 2.5 + avg(1.5 per SF * 2.5) = ~9.75/subscriber.
+        assert!((6_000..14_000).contains(&n), "rows {n}");
+        // Every subscriber row present.
+        let subs = rows_a.iter().filter(|(o, _)| *o == SUBSCRIBER).count() as u64;
+        assert_eq!(subs, 1000);
+    }
+
+    #[test]
+    fn transactions_reference_populated_tables() {
+        let w = TatpWorkload::new(500);
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..1000 {
+            let tx = w.next_tx(&mut rng);
+            assert!(!tx.read_set.is_empty() || !tx.write_set.is_empty());
+            for item in tx.read_set.iter().chain(tx.write_set.iter()) {
+                assert!(item.obj.0 <= 3);
+            }
+        }
+    }
+}

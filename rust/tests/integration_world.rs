@@ -1,0 +1,113 @@
+//! Cross-cutting integration tests: whole-simulator behaviors that span
+//! modules (determinism, serializability under load, emulation knobs,
+//! failure injection via receive-pool exhaustion).
+
+use storm::cluster::{HostParams, SimConfig, StormMode, SystemKind, WorkloadKind, World};
+use storm::fabric::FabricKind;
+use storm::sim::{MICRO, MILLI};
+
+fn cfg(system: SystemKind, nodes: u32) -> SimConfig {
+    let mut c = SimConfig::new(system, nodes);
+    c.threads = 2;
+    c.coros = 4;
+    c.keys_per_node = 5_000;
+    c.warmup = 100 * MICRO;
+    c.measure = 800 * MICRO;
+    c
+}
+
+#[test]
+fn all_systems_are_deterministic() {
+    for system in [
+        SystemKind::Storm(StormMode::OneTwoSided),
+        SystemKind::Erpc { congestion_control: true },
+        SystemKind::Farm { locked_qp_sharing: false },
+        SystemKind::Lite { async_ops: true },
+    ] {
+        let a = World::new(cfg(system, 4)).run();
+        let b = World::new(cfg(system, 4)).run();
+        assert_eq!(a.ops, b.ops, "{system:?}");
+        assert_eq!(a.p99_ns, b.p99_ns, "{system:?}");
+        assert_eq!((a.aborts, a.ud_drops), (b.aborts, b.ud_drops), "{system:?}");
+    }
+}
+
+#[test]
+fn seeds_change_results_but_not_shape() {
+    let mut a_cfg = cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+    let mut b_cfg = a_cfg.clone();
+    a_cfg.seed = 1;
+    b_cfg.seed = 2;
+    let a = World::new(a_cfg).run();
+    let b = World::new(b_cfg).run();
+    assert_ne!(a.ops, b.ops, "different seeds explore different schedules");
+    let ratio = a.per_machine_mops / b.per_machine_mops;
+    assert!((0.8..1.25).contains(&ratio), "throughput should be seed-stable: {ratio}");
+}
+
+#[test]
+fn tatp_under_contention_stays_consistent() {
+    // Small subscriber pool -> real lock conflicts + validation aborts;
+    // the protocol must keep committing (no deadlock/livelock) and the
+    // abort rate must stay sane.
+    let mut c = cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+    c.workload = WorkloadKind::Tatp { subscribers_per_node: 200 };
+    c.measure = 2 * MILLI;
+    let r = World::new(c).run();
+    assert!(r.ops > 2_000, "commits {}", r.ops);
+    assert!(r.aborts > 0, "tiny keyspace must produce conflicts");
+    assert!(r.abort_rate() < 0.5, "abort rate {}", r.abort_rate());
+}
+
+#[test]
+fn erpc_survives_receive_pool_exhaustion() {
+    // Shrink the receive pool until datagrams drop: retransmission must
+    // recover every op (throughput suffers, nothing hangs or is lost).
+    let mut c = cfg(SystemKind::Erpc { congestion_control: false }, 4);
+    c.host = HostParams { recv_pool_capacity: 8, rto: 50 * MICRO, ..HostParams::default() };
+    let r = World::new(c).run();
+    assert!(r.ud_drops > 0, "pool of 8 must drop under 3 remote nodes x 2 threads x 4 coros");
+    assert!(r.retransmits > 0, "drops must trigger retransmissions");
+    assert!(r.ops > 500, "the system must keep making progress: {}", r.ops);
+}
+
+#[test]
+fn roce_slower_than_ib_same_system() {
+    let ib = World::new(cfg(SystemKind::Storm(StormMode::Perfect), 2)).run();
+    let mut roce_cfg = cfg(SystemKind::Storm(StormMode::Perfect), 2);
+    roce_cfg.fabric = FabricKind::Roce100;
+    let roce = World::new(roce_cfg).run();
+    assert!(roce.mean_ns > ib.mean_ns + 500.0, "RoCE adds ~1us RTT");
+}
+
+#[test]
+fn emulation_multiplier_only_adds_state() {
+    // conn_multiplier must not change workload semantics, only NIC state.
+    let base = World::new(cfg(SystemKind::Storm(StormMode::Perfect), 4)).run();
+    let mut emu_cfg = cfg(SystemKind::Storm(StormMode::Perfect), 4);
+    emu_cfg.conn_multiplier = 8;
+    let emu = World::new(emu_cfg).run();
+    assert!(emu.ops > 0);
+    assert!(
+        emu.nic_hit_rate <= base.nic_hit_rate + 1e-9,
+        "more lanes cannot improve cache behavior"
+    );
+}
+
+#[test]
+fn sendrecv_rpc_ablation_runs() {
+    let mut c = cfg(SystemKind::Storm(StormMode::RpcOnly), 4);
+    c.rpc_via_sendrecv = true;
+    let sr = World::new(c).run();
+    let wi = World::new(cfg(SystemKind::Storm(StormMode::RpcOnly), 4)).run();
+    assert!(wi.per_machine_mops >= sr.per_machine_mops, "write-imm >= send/recv");
+}
+
+#[test]
+fn physical_segments_do_not_change_semantics() {
+    let mut c = cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+    c.physseg = true;
+    let r = World::new(c).run();
+    assert!(r.ops > 1_000);
+    assert!(r.reads_per_op > 0.9, "reads still dominate with physseg");
+}

@@ -1,0 +1,336 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! The offline build environment has no `proptest` crate, so these use the
+//! crate's own deterministic `Pcg64` to generate hundreds of randomized
+//! cases per property (many seeds, many operations each). Failures print
+//! the seed, which reproduces the exact sequence.
+
+use std::collections::HashMap;
+
+use storm::dataplane::local::LocalCluster;
+use storm::dataplane::rpc::{
+    decode_request, decode_response, encode_request, encode_response,
+};
+use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
+use storm::ds::hopscotch::HopscotchTable;
+use storm::ds::mica::{owner_of, MicaConfig, MicaTable};
+use storm::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable, RemoteAddr};
+use storm::nic::{EntryKey, NicCache};
+use storm::sim::{EventQueue, Pcg64};
+use storm::transport::topology::{Channel, Topology};
+
+const KV: ObjectId = ObjectId(0);
+
+// --- Allocator: no overlap, frees reusable, accounting exact -------------
+
+#[test]
+fn prop_allocator_no_overlap_and_reuse() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::new(seed, 1);
+        let mut regions = RegionTable::new();
+        let mut alloc =
+            ContiguousAllocator::new(4 << 20, 32, RegionMode::Virtual(PageSize::Small4K));
+        // live: addr -> (size_class_size covered range)
+        let mut live: Vec<(RemoteAddr, u64)> = Vec::new();
+        for _ in 0..2_000 {
+            if live.is_empty() || rng.gen_bool(0.6) {
+                let size = 1 + rng.gen_range(4096);
+                let addr = alloc.alloc(size, &mut regions).expect("alloc");
+                let class = size.next_power_of_two().max(32);
+                // No overlap with any live allocation in the same region.
+                for (other, osz) in &live {
+                    if other.region == addr.region {
+                        let a = addr.offset..addr.offset + class;
+                        let b = other.offset..other.offset + osz;
+                        assert!(
+                            a.end <= b.start || b.end <= a.start,
+                            "seed {seed}: overlap {addr:?}+{class} vs {other:?}+{osz}"
+                        );
+                    }
+                }
+                live.push((addr, class));
+            } else {
+                let i = rng.gen_index(live.len());
+                let (addr, size) = live.swap_remove(i);
+                alloc.free(addr, size);
+            }
+        }
+        // Everything freed -> live bytes accounted exactly.
+        let total: u64 = live.iter().map(|(_, s)| s).sum();
+        assert_eq!(alloc.live_bytes(), total, "seed {seed}");
+    }
+}
+
+// --- MICA table vs model: equivalence under random op streams ------------
+
+#[test]
+fn prop_mica_matches_hashmap_model() {
+    for seed in 0..15u64 {
+        let mut rng = Pcg64::new(seed, 2);
+        let mut regions = RegionTable::new();
+        let mut alloc =
+            ContiguousAllocator::new(64 << 20, 8, RegionMode::Virtual(PageSize::Huge2M));
+        let cfg = MicaConfig { buckets: 64, width: 2, value_len: 112, store_values: false };
+        let mut table = MicaTable::new(cfg, &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        let mut model: HashMap<u64, u32> = HashMap::new(); // key -> version
+        for _ in 0..3_000 {
+            let key = rng.gen_range(200) + 1;
+            match rng.gen_range(10) {
+                0..=4 => {
+                    // insert/update
+                    let r = table.insert(key, None, &mut alloc, &mut regions);
+                    assert_eq!(r, RpcResult::Ok, "seed {seed}");
+                    *model.entry(key).or_insert(0) += 1;
+                }
+                5..=7 => {
+                    // get
+                    let (res, _) = table.get(key);
+                    match (model.get(&key), res) {
+                        (Some(v), RpcResult::Value { version, .. }) => {
+                            assert_eq!(version, *v, "seed {seed} key {key}")
+                        }
+                        (None, RpcResult::NotFound) => {}
+                        (m, r) => panic!("seed {seed} key {key}: model {m:?} table {r:?}"),
+                    }
+                }
+                _ => {
+                    // delete
+                    let (res, _) = table.delete(key, &mut alloc);
+                    match (model.remove(&key), res) {
+                        (Some(_), RpcResult::Ok) | (None, RpcResult::NotFound) => {}
+                        (m, r) => panic!("seed {seed} key {key}: model {m:?} table {r:?}"),
+                    }
+                }
+            }
+            assert_eq!(table.len(), model.len() as u64, "seed {seed}");
+        }
+    }
+}
+
+// --- Hopscotch: the single-read invariant survives any op stream ---------
+
+#[test]
+fn prop_hopscotch_neighborhood_invariant() {
+    for seed in 0..15u64 {
+        let mut rng = Pcg64::new(seed, 3);
+        let mut regions = RegionTable::new();
+        let mut t =
+            HopscotchTable::new(256, 8, 128, &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        let mut present: Vec<u64> = Vec::new();
+        for _ in 0..2_000 {
+            if present.is_empty() || rng.gen_bool(0.65) {
+                let key = rng.gen_range(100_000) + 1;
+                if t.insert(key) == RpcResult::Ok && !present.contains(&key) {
+                    present.push(key);
+                }
+            } else {
+                let i = rng.gen_index(present.len());
+                let key = present.swap_remove(i);
+                assert_eq!(t.delete(key), RpcResult::Ok, "seed {seed}");
+            }
+            // Invariant: every present key findable in ONE neighborhood read.
+            for &k in present.iter().take(16) {
+                let view = t.neighborhood_view(k);
+                assert!(
+                    HopscotchTable::find_in_view(&view, k).is_some(),
+                    "seed {seed}: key {k} escaped its neighborhood"
+                );
+            }
+        }
+    }
+}
+
+// --- Transactions: locks never leak, versions monotone -------------------
+
+#[test]
+fn prop_tx_locks_never_leak() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed, 4);
+        let cfg = MicaConfig { buckets: 1 << 8, width: 2, value_len: 112, store_values: false };
+        let mut cluster = LocalCluster::new(3, vec![(KV, cfg)]);
+        cluster.load(KV, 1..=100);
+        let mut client = cluster.client(false);
+        let mut commits = 0;
+        for _ in 0..300 {
+            let mut reads = Vec::new();
+            let mut writes = Vec::new();
+            for _ in 0..rng.gen_range(3) {
+                reads.push(TxItem::read(KV, rng.gen_range(100) + 1));
+            }
+            for _ in 0..(1 + rng.gen_range(2)) {
+                let k = rng.gen_range(100) + 1;
+                match rng.gen_range(10) {
+                    0 => writes.push(TxItem::insert(KV, 1000 + rng.gen_range(100))),
+                    1 => writes.push(TxItem::delete(KV, k)),
+                    _ => writes.push(TxItem::update(KV, k)),
+                }
+            }
+            if matches!(
+                cluster.run_tx(&mut client, reads, writes),
+                TxOutcome::Committed { .. }
+            ) {
+                commits += 1;
+            }
+        }
+        assert!(commits > 250, "seed {seed}: only {commits} commits");
+        // No item may remain locked after all transactions completed.
+        for key in 1..=100u64 {
+            let res = cluster.run_lookup(&mut client, KV, key);
+            if res.found {
+                assert!(!res.locked, "seed {seed}: key {key} left locked");
+            }
+        }
+    }
+}
+
+// --- Routing: owner assignment is stable and total -----------------------
+
+#[test]
+fn prop_owner_routing_stable_and_balanced() {
+    let mut rng = Pcg64::new(7, 5);
+    for _ in 0..50 {
+        let nodes = 1 + rng.gen_range(63) as u32;
+        let mut counts = vec![0u32; nodes as usize];
+        for _ in 0..2_000 {
+            let key = rng.next_u64() | 1;
+            let o1 = owner_of(key, nodes);
+            let o2 = owner_of(key, nodes);
+            assert_eq!(o1, o2, "routing must be deterministic");
+            assert!(o1 < nodes);
+            counts[o1 as usize] += 1;
+        }
+        if nodes >= 2 {
+            let max = *counts.iter().max().unwrap() as f64;
+            let mean = 2_000.0 / nodes as f64;
+            assert!(max < mean * 2.5, "nodes={nodes} skew {max} vs mean {mean}");
+        }
+    }
+}
+
+// --- RPC framing: arbitrary messages round-trip ---------------------------
+
+#[test]
+fn prop_rpc_codec_roundtrip() {
+    let mut rng = Pcg64::new(11, 6);
+    let ops = [RpcOp::Read, RpcOp::LockRead, RpcOp::UpdateUnlock, RpcOp::Unlock, RpcOp::Insert, RpcOp::Delete];
+    for _ in 0..500 {
+        let value = if rng.gen_bool(0.5) {
+            Some((0..1 + rng.gen_range(255)).map(|_| rng.next_u64() as u8).collect::<Vec<_>>())
+        } else {
+            None
+        };
+        let req = RpcRequest {
+            obj: ObjectId(rng.next_u64() as u32),
+            key: rng.next_u64(),
+            op: ops[rng.gen_index(ops.len())],
+            tx_id: rng.next_u64(),
+            value,
+        };
+        assert_eq!(decode_request(&encode_request(&req)), Some(req));
+
+        let result = match rng.gen_range(5) {
+            0 => RpcResult::Value {
+                version: rng.next_u64() as u32,
+                addr: RemoteAddr {
+                    region: storm::mem::MrKey(rng.next_u64() as u32),
+                    offset: rng.next_u64() >> 8,
+                },
+                value: Some(vec![rng.next_u64() as u8; 1 + rng.gen_range(63) as usize]),
+            },
+            1 => RpcResult::NotFound,
+            2 => RpcResult::LockConflict,
+            3 => RpcResult::Ok,
+            _ => RpcResult::Full,
+        };
+        let resp = RpcResponse { result, hops: rng.next_u64() as u32 };
+        assert_eq!(decode_response(&encode_response(&resp)), Some(resp));
+    }
+}
+
+// --- Event queue: time ordering under arbitrary schedules -----------------
+
+#[test]
+fn prop_event_queue_time_ordered() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed, 8);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        let mut last = 0;
+        for _ in 0..5_000 {
+            if q.is_empty() || rng.gen_bool(0.55) {
+                q.push_at(q.now() + rng.gen_range(10_000), pushed);
+                pushed += 1;
+            } else {
+                let ev = q.pop().unwrap();
+                assert!(ev.at >= last, "seed {seed}: time went backwards");
+                last = ev.at;
+                popped += 1;
+            }
+        }
+        while let Some(ev) = q.pop() {
+            assert!(ev.at >= last);
+            last = ev.at;
+            popped += 1;
+        }
+        assert_eq!(pushed, popped, "no event lost or duplicated");
+    }
+}
+
+// --- NIC cache: occupancy bound + counter consistency ---------------------
+
+#[test]
+fn prop_nic_cache_occupancy_and_counters() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed, 9);
+        let cap = 1 + rng.gen_range(8192);
+        let mut c = NicCache::new(cap);
+        let mut accesses = 0u64;
+        for _ in 0..5_000 {
+            let key = match rng.gen_range(3) {
+                0 => EntryKey::Qp(rng.gen_range(500)),
+                1 => EntryKey::Mtt(rng.gen_range(5_000)),
+                _ => EntryKey::Mpt(rng.gen_range(100)),
+            };
+            let size = 1 + rng.gen_range(256);
+            c.access(key, size);
+            accesses += 1;
+            assert!(c.used() <= c.capacity(), "seed {seed}");
+            assert_eq!(c.hits() + c.misses(), accesses, "seed {seed}");
+        }
+    }
+}
+
+// --- Topology: batched ids unique, no op lost across lanes ---------------
+
+#[test]
+fn prop_topology_ids_unique() {
+    let mut rng = Pcg64::new(3, 10);
+    for _ in 0..30 {
+        let nodes = 2 + rng.gen_range(30) as u32;
+        let threads = 1 + rng.gen_range(8) as u32;
+        let mult = 1 + rng.gen_range(4) as u32;
+        let topo = Topology { nodes, threads, conn_multiplier: mult };
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..nodes {
+            for b in (a + 1)..nodes {
+                for th in 0..threads {
+                    for ch in [Channel::ReadPath, Channel::RpcPath] {
+                        for lane in 0..mult {
+                            assert!(
+                                seen.insert(topo.rc_conn(a, b, th, ch, lane)),
+                                "duplicate conn id"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        let expect = (nodes as usize * (nodes as usize - 1) / 2)
+            * threads as usize
+            * 2
+            * mult as usize;
+        assert_eq!(seen.len(), expect);
+    }
+}

@@ -1,0 +1,75 @@
+//! PJRT artifact integration: loads the AOT-compiled HLO (produced by
+//! `make artifacts`) and cross-checks it against the in-crate references.
+//! Skipped gracefully when the artifacts have not been built.
+
+use storm::runtime::{reference_resolve, Engine, BATCH};
+use storm::sim::Pcg64;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/lookup_batch.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn lookup_resolve_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seeded(0xA07);
+    for round in 0..8 {
+        let nodes = 1 + (rng.next_u64() % 96) as u32;
+        let mask = (1u64 << (8 + rng.next_u64() % 16)) - 1;
+        let bb = 128u32 * (1 + (rng.next_u64() % 4) as u32);
+        let keys: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+        let got = engine.lookup_resolve(&keys, nodes, mask, bb).unwrap();
+        for (i, &key) in keys.iter().enumerate() {
+            let want = reference_resolve(key, nodes, mask, bb);
+            assert_eq!(got[i], want, "round {round} key {key:#x}");
+        }
+    }
+}
+
+#[test]
+fn lookup_resolve_handles_short_batches() {
+    let Some(engine) = engine() else { return };
+    for n in [1usize, 7, 63] {
+        let keys: Vec<u64> = (1..=n as u64).collect();
+        let got = engine.lookup_resolve(&keys, 8, 0xFFFF, 128).unwrap();
+        assert_eq!(got.len(), n);
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(got[i], reference_resolve(key, 8, 0xFFFF, 128));
+        }
+    }
+}
+
+#[test]
+fn validate_matches_scalar_logic() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Pcg64::seeded(0xB07);
+    for _ in 0..5 {
+        let ek: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+        let ok: Vec<u64> = ek
+            .iter()
+            .map(|&k| if rng.gen_bool(0.3) { k.wrapping_add(1) } else { k })
+            .collect();
+        let ev: Vec<u64> = (0..BATCH).map(|_| rng.next_u64() & 0xffff).collect();
+        let ov: Vec<u64> = ev
+            .iter()
+            .map(|&v| if rng.gen_bool(0.3) { v + 1 } else { v })
+            .collect();
+        let lk: Vec<u64> = (0..BATCH).map(|_| rng.gen_bool(0.2) as u64).collect();
+        let got = engine.validate(&ek, &ok, &ev, &ov, &lk).unwrap();
+        for i in 0..BATCH {
+            let want = ek[i] == ok[i] && ev[i] == ov[i] && lk[i] == 0;
+            assert_eq!(got[i], want, "entry {i}");
+        }
+    }
+}
+
+#[test]
+fn oversized_batches_rejected() {
+    let Some(engine) = engine() else { return };
+    let keys = vec![1u64; BATCH + 1];
+    assert!(engine.lookup_resolve(&keys, 4, 0xff, 128).is_err());
+}
