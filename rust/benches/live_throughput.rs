@@ -1,0 +1,197 @@
+//! `cargo bench --bench live_throughput` — wall-clock throughput of the
+//! live loopback dataplane: batch lookups (pipelined ring-buffer path vs
+//! the sequential one-outstanding baseline) and transaction commits, for
+//! one and four concurrent clients.
+//!
+//! Emits a machine-readable `BENCH_live.json` (override the path with
+//! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
+//! `scripts/bench.sh`.
+
+use std::time::Instant;
+
+use storm::dataplane::live::LiveCluster;
+use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::ds::api::ObjectId;
+use storm::ds::mica::MicaConfig;
+
+const NODES: u32 = 4;
+const KEYS: u64 = 10_000;
+const BATCH: usize = 256;
+const CLIENTS: u32 = 4;
+const TXS_PER_CLIENT: u64 = 2_000;
+
+fn value_of(k: u64) -> Vec<u8> {
+    let mut v = vec![0u8; 112];
+    v[..8].copy_from_slice(&k.to_le_bytes());
+    v
+}
+
+/// ops/sec for one client walking all keys once in `BATCH`-sized chunks.
+fn lookup_pass(cluster: &LiveCluster, client_node: u32, pipelined: bool) -> f64 {
+    let mut client = cluster.client(client_node, None);
+    let keys: Vec<u64> = (1..=KEYS).collect();
+    // Warmup pass.
+    for chunk in keys.chunks(BATCH) {
+        let r = if pipelined {
+            client.lookup_batch(chunk)
+        } else {
+            client.lookup_batch_sequential(chunk)
+        };
+        assert!(r.iter().all(|x| x.found));
+    }
+    let t0 = Instant::now();
+    for chunk in keys.chunks(BATCH) {
+        let r = if pipelined {
+            client.lookup_batch(chunk)
+        } else {
+            client.lookup_batch_sequential(chunk)
+        };
+        assert_eq!(r.len(), chunk.len());
+    }
+    KEYS as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Aggregate ops/sec for `CLIENTS` threads each walking all keys once.
+fn lookup_pass_multi(cluster: &LiveCluster, pipelined: bool) -> f64 {
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for id in 0..CLIENTS {
+        let seed = cluster.client_seed(id % NODES);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let keys: Vec<u64> = (1..=KEYS).collect();
+            for chunk in keys.chunks(BATCH) {
+                let r = if pipelined {
+                    client.lookup_batch(chunk)
+                } else {
+                    client.lookup_batch_sequential(chunk)
+                };
+                assert_eq!(r.len(), chunk.len());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (CLIENTS as u64 * KEYS) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Aggregate committed-tx/sec for `clients` threads of single-key updates.
+fn tx_pass(cluster: &LiveCluster, clients: u32) -> (f64, u64) {
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for id in 0..clients {
+        let seed = cluster.client_seed(id % NODES);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut commits = 0u64;
+            for i in 0..TXS_PER_CLIENT {
+                // Stride client ids apart to keep lock conflicts rare but
+                // present (the paper's TATP-like update mix).
+                let key = (i * clients as u64 + id as u64) % KEYS + 1;
+                let out = client.run_tx(
+                    vec![],
+                    vec![TxItem::update(ObjectId(0), key).with_value(value_of(key))],
+                );
+                if matches!(out, TxOutcome::Committed { .. }) {
+                    commits += 1;
+                }
+            }
+            commits
+        }));
+    }
+    let commits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    (commits as f64 / t0.elapsed().as_secs_f64(), commits)
+}
+
+struct Series {
+    name: &'static str,
+    seq_1c: f64,
+    pipe_1c: f64,
+    seq_4c: f64,
+    pipe_4c: f64,
+}
+
+fn run_series(name: &'static str, cfg: MicaConfig) -> Series {
+    let cluster = LiveCluster::start(NODES, cfg);
+    cluster.load(1..=KEYS, value_of);
+    let seq_1c = lookup_pass(&cluster, 0, false);
+    let pipe_1c = lookup_pass(&cluster, 0, true);
+    let seq_4c = lookup_pass_multi(&cluster, false);
+    let pipe_4c = lookup_pass_multi(&cluster, true);
+    cluster.shutdown();
+    println!("# {name}: lookup_batch over {KEYS} keys, batch {BATCH}");
+    println!("{name}/lookup seq  1 client   {seq_1c:>12.0} ops/s");
+    println!("{name}/lookup pipe 1 client   {pipe_1c:>12.0} ops/s   ({:.2}x)", pipe_1c / seq_1c);
+    println!("{name}/lookup seq  {CLIENTS} clients  {seq_4c:>12.0} ops/s");
+    println!("{name}/lookup pipe {CLIENTS} clients  {pipe_4c:>12.0} ops/s   ({:.2}x)", pipe_4c / seq_4c);
+    Series { name, seq_1c, pipe_1c, seq_4c, pipe_4c }
+}
+
+fn main() {
+    // Inline-dominated geometry: lookups resolve with one one-sided read
+    // (doorbell batching + zero-copy parse are the win).
+    let inline = run_series(
+        "inline",
+        MicaConfig { buckets: 1 << 14, width: 2, value_len: 112, store_values: true },
+    );
+    // Oversubscribed width-1 geometry (Storm(oversub)): overflow chains
+    // force RPC fallbacks (ring pipelining + sharded server loops win).
+    let oversub = run_series(
+        "oversub",
+        MicaConfig { buckets: 1 << 13, width: 1, value_len: 112, store_values: true },
+    );
+
+    // Transactions on the inline geometry.
+    let cluster = LiveCluster::start(
+        NODES,
+        MicaConfig { buckets: 1 << 14, width: 2, value_len: 112, store_values: true },
+    );
+    cluster.load(1..=KEYS, value_of);
+    let (tx_1c, _) = tx_pass(&cluster, 1);
+    let (tx_4c, commits_4c) = tx_pass(&cluster, CLIENTS);
+    cluster.shutdown();
+    println!("# transactions: single-key updates");
+    println!("tx commit 1 client   {tx_1c:>12.0} tx/s");
+    println!("tx commit {CLIENTS} clients  {tx_4c:>12.0} tx/s   ({commits_4c} commits)");
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"live_throughput\",\n",
+            "  \"nodes\": {nodes},\n",
+            "  \"keys\": {keys},\n",
+            "  \"batch\": {batch},\n",
+            "  \"clients\": {clients},\n",
+            "  \"lookup\": {{\n",
+            "    \"{n0}\": {{\"seq_1c_ops\": {a0:.0}, \"pipe_1c_ops\": {b0:.0}, ",
+            "\"seq_4c_ops\": {c0:.0}, \"pipe_4c_ops\": {d0:.0}, \"speedup_4c\": {s0:.3}}},\n",
+            "    \"{n1}\": {{\"seq_1c_ops\": {a1:.0}, \"pipe_1c_ops\": {b1:.0}, ",
+            "\"seq_4c_ops\": {c1:.0}, \"pipe_4c_ops\": {d1:.0}, \"speedup_4c\": {s1:.3}}}\n",
+            "  }},\n",
+            "  \"tx\": {{\"commit_1c_per_s\": {t1:.0}, \"commit_4c_per_s\": {t4:.0}}}\n",
+            "}}\n",
+        ),
+        nodes = NODES,
+        keys = KEYS,
+        batch = BATCH,
+        clients = CLIENTS,
+        n0 = inline.name,
+        a0 = inline.seq_1c,
+        b0 = inline.pipe_1c,
+        c0 = inline.seq_4c,
+        d0 = inline.pipe_4c,
+        s0 = inline.pipe_4c / inline.seq_4c,
+        n1 = oversub.name,
+        a1 = oversub.seq_1c,
+        b1 = oversub.pipe_1c,
+        c1 = oversub.seq_4c,
+        d1 = oversub.pipe_4c,
+        s1 = oversub.pipe_4c / oversub.seq_4c,
+        t1 = tx_1c,
+        t4 = tx_4c,
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("wrote {out}");
+}

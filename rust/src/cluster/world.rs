@@ -23,7 +23,7 @@
 use std::time::Instant;
 
 use crate::dataplane::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
-use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes, RPC_HEADER_BYTES};
+use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes};
 use crate::dataplane::tx::{TxAction, TxEngine, TxInput};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::hopscotch::HopscotchTable;
@@ -1096,7 +1096,8 @@ impl World {
             return;
         }
         let ud = self.ud;
-        let size = request_wire_bytes(&req) + RPC_HEADER_BYTES;
+        // request_wire_bytes already includes the 16-byte RPC header.
+        let size = request_wire_bytes(&req);
         let mut cost = h.post_wqe as Nanos;
         if ud {
             cost += h.ud_frame_cpu as Nanos;

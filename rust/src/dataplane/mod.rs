@@ -15,7 +15,12 @@
 //!   with execution-phase write locks, validation by one-sided version
 //!   re-reads, commit via RPCs.
 //! * [`rpc`] — write-with-immediate RPC framing: header layout and wire
-//!   sizes (paper §5.2).
+//!   sizes (paper §5.2). The `encode_*_into` variants frame straight into
+//!   preallocated ring-slot buffers, so the live hot path never allocates
+//!   while encoding.
+//! * [`live`] — the live composition over the loopback fabric: sharded
+//!   server loops, pipelined batch lookups with doorbell-coalesced reads,
+//!   ring-buffer RPC transport.
 
 pub mod live;
 pub mod local;

@@ -51,6 +51,12 @@ impl RpcHeader {
         b
     }
 
+    /// Append the wire header to `out` (ring-slot framing: no allocation
+    /// when `out` has capacity).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.encode());
+    }
+
     /// Parse from wire bytes.
     pub fn decode(b: &[u8]) -> Option<RpcHeader> {
         if b.len() < RPC_HEADER_BYTES as usize {
@@ -66,11 +72,13 @@ impl RpcHeader {
     }
 }
 
-/// Encode a request body (after the header).
-pub fn encode_request(req: &RpcRequest) -> Vec<u8> {
-    let mut b = Vec::with_capacity(RPC_REQ_BODY_BYTES as usize + 8);
-    b.extend_from_slice(&req.obj.0.to_le_bytes());
-    b.push(match req.op {
+/// Encode a request body (after the header), appending to `out`. This is
+/// the zero-allocation framing path: the live transport calls it with a
+/// preallocated ring-slot buffer, so encoding writes straight into the
+/// slot and never touches the heap.
+pub fn encode_request_into(req: &RpcRequest, out: &mut Vec<u8>) {
+    out.extend_from_slice(&req.obj.0.to_le_bytes());
+    out.push(match req.op {
         RpcOp::Read => 0,
         RpcOp::LockRead => 1,
         RpcOp::UpdateUnlock => 2,
@@ -78,15 +86,25 @@ pub fn encode_request(req: &RpcRequest) -> Vec<u8> {
         RpcOp::Insert => 4,
         RpcOp::Delete => 5,
     });
-    b.extend_from_slice(&[0u8; 3]); // pad
-    b.extend_from_slice(&req.key.to_le_bytes());
-    b.extend_from_slice(&req.tx_id.to_le_bytes());
+    out.extend_from_slice(&[0u8; 3]); // pad
+    out.extend_from_slice(&req.key.to_le_bytes());
+    out.extend_from_slice(&req.tx_id.to_le_bytes());
     if let Some(v) = &req.value {
-        b.extend_from_slice(&(v.len() as u32).to_le_bytes());
-        b.extend_from_slice(v);
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(v);
     } else {
-        b.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
     }
+}
+
+/// Encode a request body into a fresh, exactly-sized buffer. Allocates;
+/// prefer [`encode_request_into`] on hot paths.
+pub fn encode_request(req: &RpcRequest) -> Vec<u8> {
+    let len = RPC_REQ_BODY_BYTES as usize
+        + 4
+        + req.value.as_ref().map(|v| v.len()).unwrap_or(0);
+    let mut b = Vec::with_capacity(len);
+    encode_request_into(req, &mut b);
     b
 }
 
@@ -119,10 +137,10 @@ pub fn decode_request(b: &[u8]) -> Option<RpcRequest> {
     Some(RpcRequest { obj, key, op, tx_id, value })
 }
 
-/// Encode a response body (after the header).
-pub fn encode_response(resp: &crate::ds::api::RpcResponse) -> Vec<u8> {
+/// Encode a response body (after the header), appending to `out` — the
+/// zero-allocation framing path (see [`encode_request_into`]).
+pub fn encode_response_into(resp: &crate::ds::api::RpcResponse, out: &mut Vec<u8>) {
     use crate::ds::api::RpcResult;
-    let mut b = Vec::with_capacity(RPC_RESP_BODY_BYTES as usize + 8);
     let (tag, version, region, offset, value): (u8, u32, u32, u64, Option<&Vec<u8>>) =
         match &resp.result {
             RpcResult::Value { version, addr, value } => {
@@ -133,19 +151,31 @@ pub fn encode_response(resp: &crate::ds::api::RpcResponse) -> Vec<u8> {
             RpcResult::Ok => (3, 0, 0, 0, None),
             RpcResult::Full => (4, 0, 0, 0, None),
         };
-    b.push(tag);
-    b.extend_from_slice(&[0u8; 3]);
-    b.extend_from_slice(&version.to_le_bytes());
-    b.extend_from_slice(&region.to_le_bytes());
-    b.extend_from_slice(&offset.to_le_bytes());
-    b.extend_from_slice(&resp.hops.to_le_bytes());
+    out.push(tag);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&region.to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(&resp.hops.to_le_bytes());
     match value {
         Some(v) => {
-            b.extend_from_slice(&(v.len() as u32).to_le_bytes());
-            b.extend_from_slice(v);
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            out.extend_from_slice(v);
         }
-        None => b.extend_from_slice(&0u32.to_le_bytes()),
+        None => out.extend_from_slice(&0u32.to_le_bytes()),
     }
+}
+
+/// Encode a response body into a fresh, exactly-sized buffer. Allocates;
+/// prefer [`encode_response_into`] on hot paths.
+pub fn encode_response(resp: &crate::ds::api::RpcResponse) -> Vec<u8> {
+    use crate::ds::api::RpcResult;
+    let vlen = match &resp.result {
+        RpcResult::Value { value: Some(v), .. } => v.len(),
+        _ => 0,
+    };
+    let mut b = Vec::with_capacity(RPC_RESP_BODY_BYTES as usize + 4 + vlen);
+    encode_response_into(resp, &mut b);
     b
 }
 
@@ -193,9 +223,11 @@ pub fn request_wire_bytes(req: &RpcRequest) -> u32 {
         + req.value.as_ref().map(|v| v.len() as u32).unwrap_or(0)
 }
 
-/// Wire size of a response carrying `value_len` payload bytes.
+/// Wire size of a response carrying `value_len` payload bytes. Like
+/// requests, responses carry a 4-byte value-length field after the fixed
+/// body, so it is counted here too.
 pub fn response_wire_bytes(value_len: u32) -> u32 {
-    RPC_HEADER_BYTES + RPC_RESP_BODY_BYTES + value_len
+    RPC_HEADER_BYTES + RPC_RESP_BODY_BYTES + 4 + value_len
 }
 
 #[cfg(test)]
@@ -281,9 +313,59 @@ mod tests {
     fn paper_sized_transfers() {
         // Paper: "Each data transfer, including the application-level and
         // RPC-level headers, is 128 bytes" — a response carrying an 84-byte
-        // value plus headers lands at 128; our KV value of 112 B yields a
+        // value plus headers lands at exactly 128 (16 B header + 24 B body
+        // + 4 B value length + 84 B value); our KV value of 112 B yields a
         // 156 B RPC response vs a 128 B one-sided read (the RPC tax).
-        assert_eq!(response_wire_bytes(84), 124);
+        assert_eq!(response_wire_bytes(84), 128);
         assert!(response_wire_bytes(112) > 128);
+        // The accounting matches the actual encoded bytes.
+        use crate::ds::api::{RpcResponse, RpcResult};
+        use crate::mem::{MrKey, RemoteAddr};
+        let resp = RpcResponse {
+            result: RpcResult::Value {
+                version: 1,
+                addr: RemoteAddr { region: MrKey(0), offset: 0 },
+                value: Some(vec![0u8; 84]),
+            },
+            hops: 0,
+        };
+        let body = encode_response(&resp);
+        assert_eq!(body.len() as u32 + RPC_HEADER_BYTES, response_wire_bytes(84));
+    }
+
+    #[test]
+    fn encode_into_matches_alloc_encode_and_stays_in_capacity() {
+        use crate::ds::api::{RpcResponse, RpcResult};
+        use crate::mem::{MrKey, RemoteAddr};
+        let req = RpcRequest {
+            obj: ObjectId(1),
+            key: 0xfeed,
+            op: RpcOp::UpdateUnlock,
+            tx_id: 9,
+            value: Some(vec![7u8; 112]),
+        };
+        let mut buf = Vec::with_capacity(256);
+        let cap = buf.capacity();
+        let hdr =
+            RpcHeader { src_node: 1, src_thread: 0, coro: 0, seq: 3, is_response: false };
+        hdr.encode_into(&mut buf);
+        encode_request_into(&req, &mut buf);
+        // Framing into a preallocated buffer must not reallocate.
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(&buf[..RPC_HEADER_BYTES as usize], &hdr.encode()[..]);
+        assert_eq!(&buf[RPC_HEADER_BYTES as usize..], &encode_request(&req)[..]);
+
+        let resp = RpcResponse {
+            result: RpcResult::Value {
+                version: 4,
+                addr: RemoteAddr { region: MrKey(2), offset: 640 },
+                value: Some(vec![5u8; 112]),
+            },
+            hops: 1,
+        };
+        buf.clear();
+        encode_response_into(&resp, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(&buf[..], &encode_response(&resp)[..]);
     }
 }

@@ -3,18 +3,32 @@
 //!
 //! Used by the end-to-end examples: the same Storm dataplane logic that the
 //! simulator drives (sans-io transaction engine, MICA table, callback API)
-//! runs here against *real* memory and *real* channels, in wall-clock time,
+//! runs here against *real* memory and *real* threads, in wall-clock time,
 //! with the PJRT batch-hash engine on the lookup path.
 //!
 //! Semantics mirror the verbs we model:
-//! * `read` — one-sided: no code runs on the remote node's event loop,
-//!   just a direct memory copy (an RDMA READ against registered memory).
-//! * `rpc` — write-with-immediate style messaging: the payload lands in
-//!   the remote node's receive loop, a registered handler runs, and the
-//!   reply travels back on the caller's completion channel.
+//! * `read` / `read_into` / `read_batch` — one-sided: no code runs on the
+//!   remote node's event loop, just a direct memory copy (an RDMA READ
+//!   against registered memory). `read_batch` is the doorbell-batched
+//!   variant: one region acquisition covers a whole group of reads, the
+//!   way one doorbell ring posts a chain of work requests.
+//! * ring RPCs ([`RingConn`]) — write-with-immediate style messaging into
+//!   **preallocated ring-buffer slots**: `post` frames the request
+//!   directly into a reusable slot buffer (no per-call allocation), the
+//!   remote event loop runs the handler and writes the reply into the
+//!   same slot's reply buffer, and the caller harvests it with
+//!   `poll`/`take_reply`. A client keeps a *window* of outstanding
+//!   requests this way; a full ring blocks the poster (RC backpressure,
+//!   not UD drops).
+//! * `rpc` — legacy blocking convenience over a one-shot channel (tests,
+//!   control paths). The dataplane hot path uses ring slots.
+//!
+//! Each endpoint exposes one receive queue per *lane*; the live cluster
+//! runs one server loop per lane so bucket-range shards drain their own
+//! queues in parallel (the paper's per-thread QP + CQ layout).
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::mem::MrKey;
 
@@ -30,10 +44,28 @@ impl LoopbackRegion {
         LoopbackRegion { bytes: Arc::new(RwLock::new(vec![0; len])) }
     }
 
-    /// One-sided read (no remote CPU).
+    /// One-sided read (no remote CPU). Allocates; prefer [`Self::read_into`]
+    /// on hot paths.
     pub fn read(&self, offset: usize, len: usize) -> Vec<u8> {
         let g = self.bytes.read().unwrap();
         g[offset..offset + len].to_vec()
+    }
+
+    /// One-sided read into a caller-provided buffer (no allocation).
+    pub fn read_into(&self, offset: usize, out: &mut [u8]) {
+        let g = self.bytes.read().unwrap();
+        out.copy_from_slice(&g[offset..offset + out.len()]);
+    }
+
+    /// Doorbell-batched one-sided reads: a single region acquisition
+    /// serves every `(offset, len)` request; `f(i, bytes)` observes the
+    /// bytes of request `i` in place (zero copy).
+    pub fn read_many(&self, reqs: &[(u64, u32)], mut f: impl FnMut(usize, &[u8])) {
+        let g = self.bytes.read().unwrap();
+        for (i, &(offset, len)) in reqs.iter().enumerate() {
+            let offset = offset as usize;
+            f(i, &g[offset..offset + len as usize]);
+        }
     }
 
     /// One-sided write (no remote CPU).
@@ -53,20 +85,204 @@ impl LoopbackRegion {
     }
 }
 
-/// An inbound RPC awaiting a reply.
-pub struct RpcEnvelope {
-    /// Sender node id.
-    pub from: u32,
-    /// Request payload (header + body, see [`crate::dataplane::rpc`]).
-    pub payload: Vec<u8>,
-    /// Reply channel (the "response write" back to the requester).
-    pub reply: Sender<Vec<u8>>,
+/// Where a ring slot is in its post → serve → harvest cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotStage {
+    /// Owned by the client, available for the next `post`.
+    Free,
+    /// Request framed into `req`, awaiting the remote handler.
+    Posted,
+    /// Reply written into `resp`, awaiting `take_reply`.
+    Done,
 }
 
-#[derive(Clone)]
+struct SlotInner {
+    stage: SlotStage,
+    /// Request bytes, framed in place by the poster.
+    req: Vec<u8>,
+    /// Reply bytes, written in place by the server.
+    resp: Vec<u8>,
+}
+
+/// One preallocated ring-buffer slot of a [`RingConn`]: the request and
+/// reply buffers are reused across RPCs, so steady-state messaging does
+/// not allocate.
+pub struct RingSlot {
+    /// Sender node id (constant for the connection).
+    from: u32,
+    inner: Mutex<SlotInner>,
+    done: Condvar,
+}
+
+impl RingSlot {
+    fn complete_empty(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.stage == SlotStage::Posted {
+            g.resp.clear();
+            g.stage = SlotStage::Done;
+            drop(g);
+            self.done.notify_all();
+        }
+    }
+}
+
+/// The server's owning handle to one posted ring slot. Dropping it
+/// unserved (e.g. an event loop exiting with requests still queued)
+/// completes the slot with an **empty reply**, so the posting client
+/// observes a decode failure instead of blocking forever on the slot.
+pub struct SlotHandle(Arc<RingSlot>);
+
+impl SlotHandle {
+    /// Sender node id.
+    pub fn from(&self) -> u32 {
+        self.0.from
+    }
+
+    /// Run `f(request_bytes, reply_buffer)` and complete the slot. The
+    /// reply buffer is cleared first; `f` frames the response directly
+    /// into it. The slot's buffers are swapped out for the duration of
+    /// `f` (no allocation), so the poster's `poll` calls stay cheap while
+    /// the handler runs.
+    pub fn serve(&self, f: impl FnOnce(&[u8], &mut Vec<u8>)) {
+        let slot = &*self.0;
+        let (req, mut resp) = {
+            let mut g = slot.inner.lock().unwrap();
+            (std::mem::take(&mut g.req), std::mem::take(&mut g.resp))
+        };
+        resp.clear();
+        f(&req, &mut resp);
+        {
+            let mut g = slot.inner.lock().unwrap();
+            g.req = req;
+            g.resp = resp;
+            g.stage = SlotStage::Done;
+        }
+        slot.done.notify_all();
+    }
+}
+
+impl Drop for SlotHandle {
+    fn drop(&mut self) {
+        self.0.complete_empty();
+    }
+}
+
+/// Handle to an outstanding ring RPC (an index into the connection's
+/// slot ring).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotToken(usize);
+
+/// A client's ring-buffer connection to one server node: a fixed window
+/// of reusable request/reply slots (the paper's preallocated per-sender
+/// ring at the receiver). Clone-free; share behind an `Arc` if several
+/// threads must post on the same ring.
+pub struct RingConn {
+    fabric: LoopbackFabric,
+    node: u32,
+    slots: Vec<Arc<RingSlot>>,
+    free: Mutex<Vec<usize>>,
+    freed: Condvar,
+}
+
+impl RingConn {
+    /// Number of slots (the maximum outstanding window).
+    pub fn window(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Post a request on `lane`, framing it directly into a free slot's
+    /// request buffer via `fill`. **Blocks while the ring is full** (every
+    /// slot outstanding) until `take_reply` frees one — backpressure, not
+    /// drops. Returns a token to poll/harvest the reply with.
+    pub fn post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
+        let idx = {
+            let mut free = self.free.lock().unwrap();
+            loop {
+                if let Some(i) = free.pop() {
+                    break i;
+                }
+                free = self.freed.wait(free).unwrap();
+            }
+        };
+        self.submit(idx, lane, fill);
+        SlotToken(idx)
+    }
+
+    /// Non-blocking [`Self::post`]: `None` when the ring is full.
+    pub fn try_post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> Option<SlotToken> {
+        let idx = self.free.lock().unwrap().pop()?;
+        self.submit(idx, lane, fill);
+        Some(SlotToken(idx))
+    }
+
+    fn submit(&self, idx: usize, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) {
+        let slot = &self.slots[idx];
+        {
+            let mut g = slot.inner.lock().unwrap();
+            g.req.clear();
+            fill(&mut g.req);
+            g.stage = SlotStage::Posted;
+        }
+        self.fabric.endpoints[self.node as usize].lanes[lane as usize]
+            .send(RpcEnvelope::Slot(SlotHandle(slot.clone())))
+            .expect("loopback endpoint event loop gone");
+    }
+
+    /// Has the reply for `tok` arrived? (Non-blocking completion poll.)
+    pub fn poll(&self, tok: SlotToken) -> bool {
+        self.slots[tok.0].inner.lock().unwrap().stage == SlotStage::Done
+    }
+
+    /// Block until the reply for `tok` has arrived (does not free the
+    /// slot; follow with [`Self::take_reply`]).
+    pub fn wait(&self, tok: SlotToken) {
+        let slot = &self.slots[tok.0];
+        let mut g = slot.inner.lock().unwrap();
+        while g.stage != SlotStage::Done {
+            g = slot.done.wait(g).unwrap();
+        }
+    }
+
+    /// Wait for the reply to `tok`, observe its bytes in place via `f`,
+    /// and return the slot to the free ring.
+    pub fn take_reply<R>(&self, tok: SlotToken, f: impl FnOnce(&[u8]) -> R) -> R {
+        let slot = &self.slots[tok.0];
+        let r = {
+            let mut g = slot.inner.lock().unwrap();
+            while g.stage != SlotStage::Done {
+                g = slot.done.wait(g).unwrap();
+            }
+            let r = f(&g.resp);
+            g.stage = SlotStage::Free;
+            r
+        };
+        self.free.lock().unwrap().push(tok.0);
+        self.freed.notify_one();
+        r
+    }
+}
+
+/// An inbound message on a node's receive queue.
+pub enum RpcEnvelope {
+    /// One-shot message (legacy `rpc`, control traffic). `reply` is `None`
+    /// for fire-and-forget sends — no throwaway channel is allocated.
+    Message {
+        /// Sender node id.
+        from: u32,
+        /// Request payload (header + body, see [`crate::dataplane::rpc`]).
+        payload: Vec<u8>,
+        /// Reply channel, when the sender blocks for a response.
+        reply: Option<Sender<Vec<u8>>>,
+    },
+    /// Ring-slot request: the payload sits in the slot's request buffer
+    /// and the handler writes the reply back into the same slot.
+    Slot(SlotHandle),
+}
+
 struct EndpointShared {
     regions: Vec<LoopbackRegion>,
-    rpc_tx: SyncSender<RpcEnvelope>,
+    /// One receive queue per lane (per-shard server loop).
+    lanes: Vec<SyncSender<RpcEnvelope>>,
 }
 
 /// Handle to all nodes (what a "connected QP mesh" gives you).
@@ -77,9 +293,22 @@ pub struct LoopbackFabric {
 
 impl LoopbackFabric {
     /// Build a fabric of `nodes` endpoints, each with the given region
-    /// sizes registered. Returns the fabric handle plus, per node, the
-    /// RPC receive queue its event loop drains.
+    /// sizes registered and a single receive lane. Returns the fabric
+    /// handle plus, per node, the RPC receive queue its event loop drains.
     pub fn new(nodes: u32, region_sizes: &[usize]) -> (Self, Vec<Receiver<RpcEnvelope>>) {
+        let (fabric, rxs) = Self::new_sharded(nodes, region_sizes, 1);
+        (fabric, rxs.into_iter().map(|mut lanes| lanes.remove(0)).collect())
+    }
+
+    /// Build a fabric whose endpoints each expose `lanes` receive queues,
+    /// so a node can run one server loop per bucket-range shard. Returns
+    /// per node the per-lane receivers.
+    pub fn new_sharded(
+        nodes: u32,
+        region_sizes: &[usize],
+        lanes: u32,
+    ) -> (Self, Vec<Vec<Receiver<RpcEnvelope>>>) {
+        assert!(lanes >= 1, "at least one receive lane per endpoint");
         let mut shared = Vec::new();
         let mut rxs = Vec::new();
         for _ in 0..nodes {
@@ -87,17 +316,43 @@ impl LoopbackFabric {
                 region_sizes.iter().map(|&l| LoopbackRegion::new(l)).collect();
             // Bounded like a receive queue: senders block when the RQ is
             // full (RC write-with-imm backpressure, not UD drops).
-            let (tx, rx) = sync_channel(4096);
-            shared.push(EndpointShared { regions, rpc_tx: tx });
-            rxs.push(rx);
+            let mut txs = Vec::new();
+            let mut node_rxs = Vec::new();
+            for _ in 0..lanes {
+                let (tx, rx) = sync_channel(4096);
+                txs.push(tx);
+                node_rxs.push(rx);
+            }
+            shared.push(EndpointShared { regions, lanes: txs });
+            rxs.push(node_rxs);
         }
         (LoopbackFabric { endpoints: Arc::new(shared) }, rxs)
     }
 
-    /// One-sided read of `(region, offset, len)` on `node`.
+    /// One-sided read of `(region, offset, len)` on `node`. Allocates;
+    /// prefer [`Self::read_into`] / [`Self::read_batch`] on hot paths.
     pub fn read(&self, node: u32, region: MrKey, offset: u64, len: u32) -> Vec<u8> {
         self.endpoints[node as usize].regions[region.0 as usize]
             .read(offset as usize, len as usize)
+    }
+
+    /// One-sided read into a caller-provided buffer (no allocation).
+    pub fn read_into(&self, node: u32, region: MrKey, offset: u64, out: &mut [u8]) {
+        self.endpoints[node as usize].regions[region.0 as usize]
+            .read_into(offset as usize, out);
+    }
+
+    /// Doorbell-batched one-sided reads of `region` on `node`: one region
+    /// acquisition serves all `(offset, len)` requests; `f(i, bytes)` sees
+    /// request `i`'s bytes in place.
+    pub fn read_batch(
+        &self,
+        node: u32,
+        region: MrKey,
+        reqs: &[(u64, u32)],
+        f: impl FnMut(usize, &[u8]),
+    ) {
+        self.endpoints[node as usize].regions[region.0 as usize].read_many(reqs, f);
     }
 
     /// One-sided write to `(region, offset)` on `node`.
@@ -105,24 +360,58 @@ impl LoopbackFabric {
         self.endpoints[node as usize].regions[region.0 as usize].write(offset as usize, data);
     }
 
-    /// Write-based RPC to `node`: delivers `payload`, blocks for the
-    /// handler's reply. Returns `None` when the remote event loop is gone.
+    /// Open a ring-buffer connection from `from` to `node`: `window`
+    /// preallocated slots whose request/reply buffers reserve `slot_bytes`
+    /// each, so steady-state RPC framing never allocates.
+    pub fn connect(&self, from: u32, node: u32, window: usize, slot_bytes: usize) -> RingConn {
+        assert!(window >= 1, "ring needs at least one slot");
+        let slots = (0..window)
+            .map(|_| {
+                Arc::new(RingSlot {
+                    from,
+                    inner: Mutex::new(SlotInner {
+                        stage: SlotStage::Free,
+                        req: Vec::with_capacity(slot_bytes),
+                        resp: Vec::with_capacity(slot_bytes),
+                    }),
+                    done: Condvar::new(),
+                })
+            })
+            .collect();
+        RingConn {
+            fabric: self.clone(),
+            node,
+            slots,
+            free: Mutex::new((0..window).collect()),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Blocking one-shot RPC to `node` (lane 0): delivers `payload`,
+    /// blocks for the handler's reply. Returns `None` when the remote
+    /// event loop is gone. Allocates a channel per call — tests and
+    /// control paths only; the dataplane uses [`RingConn`].
     pub fn rpc(&self, from: u32, node: u32, payload: Vec<u8>) -> Option<Vec<u8>> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        self.endpoints[node as usize]
-            .rpc_tx
-            .send(RpcEnvelope { from, payload, reply: reply_tx })
+        self.endpoints[node as usize].lanes[0]
+            .send(RpcEnvelope::Message { from, payload, reply: Some(reply_tx) })
             .ok()?;
         reply_rx.recv().ok()
     }
 
-    /// Fire-and-forget message to a node's RPC queue (control messages;
-    /// the reply channel is dropped immediately).
+    /// Fire-and-forget message to lane 0 of a node's RPC queue (control
+    /// messages; no reply channel is allocated).
     pub fn send_raw(&self, from: u32, node: u32, payload: Vec<u8>) {
-        let (reply_tx, _reply_rx) = std::sync::mpsc::channel();
-        let _ = self.endpoints[node as usize]
-            .rpc_tx
-            .send(RpcEnvelope { from, payload, reply: reply_tx });
+        self.send_raw_lane(from, node, 0, payload);
+    }
+
+    /// Fire-and-forget message to a specific lane of a node's RPC queue.
+    pub fn send_raw_lane(&self, from: u32, node: u32, lane: u32, payload: Vec<u8>) {
+        let _ = self.endpoints[node as usize].lanes[lane as usize].send(RpcEnvelope::Message {
+            from,
+            payload,
+            reply: None,
+        });
     }
 
     /// Direct handle to a node's region (loading data in place).
@@ -133,6 +422,11 @@ impl LoopbackFabric {
     /// Number of nodes.
     pub fn nodes(&self) -> u32 {
         self.endpoints.len() as u32
+    }
+
+    /// Receive lanes per endpoint.
+    pub fn lanes(&self, node: u32) -> u32 {
+        self.endpoints[node as usize].lanes.len() as u32
     }
 }
 
@@ -151,15 +445,43 @@ mod tests {
     }
 
     #[test]
+    fn read_into_avoids_allocation() {
+        let (fabric, _rxs) = LoopbackFabric::new(1, &[256]);
+        fabric.write(0, MrKey(0), 32, b"ring");
+        let mut buf = [0u8; 4];
+        fabric.read_into(0, MrKey(0), 32, &mut buf);
+        assert_eq!(&buf, b"ring");
+    }
+
+    #[test]
+    fn read_batch_serves_all_requests_in_place() {
+        let (fabric, _rxs) = LoopbackFabric::new(1, &[256]);
+        fabric.write(0, MrKey(0), 0, b"aa");
+        fabric.write(0, MrKey(0), 10, b"bbb");
+        fabric.write(0, MrKey(0), 20, b"c");
+        let reqs = [(0u64, 2u32), (10, 3), (20, 1)];
+        let mut seen: Vec<Vec<u8>> = Vec::new();
+        fabric.read_batch(0, MrKey(0), &reqs, |i, bytes| {
+            assert_eq!(i, seen.len());
+            seen.push(bytes.to_vec());
+        });
+        assert_eq!(seen, vec![b"aa".to_vec(), b"bbb".to_vec(), b"c".to_vec()]);
+    }
+
+    #[test]
     fn rpc_roundtrip_through_handler() {
         let (fabric, mut rxs) = LoopbackFabric::new(2, &[64]);
         let rx = rxs.remove(1);
         let h = thread::spawn(move || {
             // Serve exactly one request, echo reversed.
-            let env = rx.recv().unwrap();
-            let mut reply = env.payload.clone();
-            reply.reverse();
-            env.reply.send(reply).unwrap();
+            match rx.recv().unwrap() {
+                RpcEnvelope::Message { payload, reply, .. } => {
+                    let mut out = payload.clone();
+                    out.reverse();
+                    reply.unwrap().send(out).unwrap();
+                }
+                RpcEnvelope::Slot(_) => panic!("expected one-shot message"),
+            }
         });
         let resp = fabric.rpc(0, 1, vec![1, 2, 3]).unwrap();
         assert_eq!(resp, vec![3, 2, 1]);
@@ -173,8 +495,12 @@ mod tests {
         let server = thread::spawn(move || {
             let mut served = 0;
             while served < 64 {
-                let env = rx.recv().unwrap();
-                env.reply.send(env.payload).unwrap();
+                match rx.recv().unwrap() {
+                    RpcEnvelope::Message { payload, reply, .. } => {
+                        reply.unwrap().send(payload).unwrap();
+                    }
+                    RpcEnvelope::Slot(_) => panic!("expected one-shot message"),
+                }
                 served += 1;
             }
         });
@@ -194,5 +520,73 @@ mod tests {
         let (fabric, rxs) = LoopbackFabric::new(2, &[64]);
         drop(rxs); // no event loops
         assert_eq!(fabric.rpc(0, 1, vec![1]), None);
+    }
+
+    #[test]
+    fn ring_window_of_outstanding_rpcs_completes() {
+        let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let rx = rxs.remove(1).remove(0);
+        let server = thread::spawn(move || {
+            let mut served = 0;
+            while served < 8 {
+                match rx.recv().unwrap() {
+                    RpcEnvelope::Slot(slot) => {
+                        assert_eq!(slot.from(), 0);
+                        slot.serve(|req, out| {
+                            out.extend_from_slice(req);
+                            out.reverse();
+                        });
+                    }
+                    RpcEnvelope::Message { .. } => panic!("expected slot"),
+                }
+                served += 1;
+            }
+        });
+        let conn = fabric.connect(0, 1, 8, 64);
+        // Fill the whole window before harvesting anything.
+        let toks: Vec<SlotToken> =
+            (0..8u8).map(|i| conn.post(0, |buf| buf.extend_from_slice(&[i, i + 1]))).collect();
+        for (i, tok) in toks.into_iter().enumerate() {
+            let i = i as u8;
+            let reply = conn.take_reply(tok, |b| b.to_vec());
+            assert_eq!(reply, vec![i + 1, i]);
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_server_completes_slot_with_empty_reply() {
+        let (fabric, rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let conn = fabric.connect(0, 1, 2, 64);
+        let tok = conn.post(0, |b| b.extend_from_slice(b"hi"));
+        // Server loops exit with the request still queued: the envelope's
+        // slot handle is dropped unserved.
+        drop(rxs);
+        let reply_len = conn.take_reply(tok, |b| b.len());
+        assert_eq!(reply_len, 0, "unserved slot must complete empty, not hang");
+    }
+
+    #[test]
+    fn ring_slot_buffers_are_reused_without_reallocation() {
+        let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let rx = rxs.remove(1).remove(0);
+        let server = thread::spawn(move || {
+            for _ in 0..16 {
+                match rx.recv().unwrap() {
+                    RpcEnvelope::Slot(slot) => slot.serve(|req, out| out.extend_from_slice(req)),
+                    RpcEnvelope::Message { .. } => panic!("expected slot"),
+                }
+            }
+        });
+        // Window of 1: the same slot serves every request.
+        let conn = fabric.connect(0, 1, 1, 128);
+        for round in 0..16u8 {
+            let tok = conn.post(0, |buf| {
+                assert!(buf.capacity() >= 128, "slot buffer must stay preallocated");
+                buf.extend_from_slice(&[round; 32]);
+            });
+            conn.take_reply(tok, |b| assert_eq!(b, &[round; 32][..]));
+        }
+        server.join().unwrap();
     }
 }

@@ -2,9 +2,11 @@
 //!
 //! [`params`] holds wire-level constants for the paper's two fabrics
 //! (InfiniBand EDR and RoCE) calibrated against Table 5's unloaded RTTs.
-//! [`loopback`] is a *live* in-process fabric over tokio channels used by
-//! the end-to-end examples — same dataplane code, real wall-clock time,
-//! with the PJRT batch engine on the hot path.
+//! [`loopback`] is a *live* in-process fabric over shared memory and
+//! threads used by the end-to-end examples — same dataplane code, real
+//! wall-clock time, with ring-buffer RPC slots (zero-allocation framing,
+//! windowed outstanding requests, per-shard receive lanes), doorbell
+//! batched one-sided reads, and the PJRT batch engine on the hot path.
 
 pub mod loopback;
 pub mod params;

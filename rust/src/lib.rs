@@ -9,8 +9,9 @@
 //! [`nic`], [`fabric`], and DESIGN.md §2). The dataplane itself
 //! ([`dataplane`], [`ds`]) is *sans-io*: the same transaction engine and
 //! data-structure callbacks run on the simulated fabric (for the paper's
-//! figures) and on a live in-process tokio fabric (for the end-to-end
-//! examples, with the AOT-compiled XLA batch engine on the hot path).
+//! figures) and on a live in-process thread fabric (for the end-to-end
+//! examples, with ring-buffer RPC slots and the AOT-compiled XLA batch
+//! engine on the hot path).
 //!
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator: Storm dataplane, transports, NIC

@@ -1,0 +1,143 @@
+//! Stress tests for the pipelined live dataplane: concurrent clients
+//! driving windowed batch lookups through the ring-buffer transport, and
+//! the ring's blocking (not dropping) backpressure behavior.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use storm::dataplane::live::{LiveCluster, LOOKUP_WINDOW, RING_SLOTS};
+use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::ds::api::ObjectId;
+use storm::ds::mica::MicaConfig;
+use storm::fabric::loopback::{LoopbackFabric, RpcEnvelope};
+
+const STRESS_KEYS: u64 = 1500;
+
+/// Oversubscribed width-1 table: plenty of overflow chains, so batch
+/// lookups exercise the one-two-sided RPC fallback through the ring.
+fn oversub_cluster(nodes: u32) -> LiveCluster {
+    let cfg = MicaConfig { buckets: 1 << 10, width: 1, value_len: 32, store_values: true };
+    LiveCluster::start(nodes, cfg)
+}
+
+#[test]
+fn pipelined_lookups_stress_four_clients() {
+    assert!(LOOKUP_WINDOW >= 8, "issue requires an outstanding window of at least 8");
+    let c = oversub_cluster(3);
+    c.load(1..=STRESS_KEYS, |k| {
+        let mut v = vec![0u8; 32];
+        v[..8].copy_from_slice(&k.to_le_bytes());
+        v
+    });
+    let mut handles = Vec::new();
+    for id in 0..4u32 {
+        // Distinct client ids: tx ids are derived from them, and two
+        // clients sharing an id would alias each other's locks.
+        let seed = c.client_seed(id);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut found = 0usize;
+            // Odd chunk size so batches straddle window boundaries.
+            let keys: Vec<u64> = (1..=STRESS_KEYS).collect();
+            for chunk in keys.chunks(257) {
+                let results = client.lookup_batch(chunk);
+                assert_eq!(results.len(), chunk.len());
+                for (r, &k) in results.iter().zip(chunk) {
+                    assert!(r.found, "key {k} must resolve under concurrent load");
+                }
+                found += results.len();
+            }
+            // Misses resolve too (never hang a window slot).
+            let miss = client.lookup_batch(&[9_000_001, 9_000_002, 9_000_003]);
+            assert!(miss.iter().all(|r| !r.found));
+            found
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), STRESS_KEYS as usize);
+    }
+    let served = c.shutdown();
+    assert!(served.iter().sum::<u64>() > 0, "chained keys must have exercised RPCs");
+}
+
+#[test]
+fn tx_commits_serialize_under_pipelined_load() {
+    const KEYS: u64 = 64;
+    let c = oversub_cluster(3);
+    c.load(1..=KEYS, |_| vec![0u8; 32]);
+    let mut handles = Vec::new();
+    for id in 0..4u32 {
+        let seed = c.client_seed(id);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut commits = 0u64;
+            for i in 0..40u64 {
+                let key = (i * 7 + id as u64) % KEYS + 1;
+                let out = client.run_tx(
+                    vec![],
+                    vec![TxItem::update(ObjectId(0), key).with_value(vec![id as u8; 32])],
+                );
+                if matches!(out, TxOutcome::Committed { .. }) {
+                    commits += 1;
+                }
+                // Interleave pipelined lookups with the transactions.
+                let res = client.lookup_batch(&[key, (key % KEYS) + 1]);
+                assert_eq!(res.len(), 2);
+            }
+            commits
+        }));
+    }
+    let total_commits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total_commits > 0);
+    // Serialization invariant: every commit bumped exactly one version, so
+    // the version bumps observed across all keys equal the commit count.
+    let mut reader = c.client(0, None);
+    let keys: Vec<u64> = (1..=KEYS).collect();
+    let results = reader.lookup_batch(&keys);
+    let bumps: u64 = results.iter().map(|r| (r.version as u64).saturating_sub(1)).sum();
+    assert_eq!(bumps, total_commits, "each commit must bump exactly one version");
+    c.shutdown();
+}
+
+#[test]
+fn full_ring_blocks_until_slot_freed() {
+    let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+    let conn = Arc::new(fabric.connect(0, 1, 2, 64));
+    assert_eq!(conn.window(), 2);
+    assert!(RING_SLOTS > LOOKUP_WINDOW, "pipeline window must fit in the ring");
+
+    // Fill the ring; a third non-blocking post must be refused, not dropped.
+    let t1 = conn.post(0, |b| b.extend_from_slice(b"one"));
+    let t2 = conn.post(0, |b| b.extend_from_slice(b"two"));
+    assert!(conn.try_post(0, |b| b.extend_from_slice(b"overflow")).is_none());
+
+    // A blocking post parks until take_reply frees a slot.
+    let (posted_tx, posted_rx) = std::sync::mpsc::channel();
+    let c2 = conn.clone();
+    let poster = std::thread::spawn(move || {
+        let t3 = c2.post(0, |b| b.extend_from_slice(b"three"));
+        posted_tx.send(()).unwrap();
+        c2.take_reply(t3, |b| b.to_vec())
+    });
+    assert!(
+        posted_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+        "post on a full ring must block"
+    );
+
+    // Echo server: serves the two queued requests, then the unblocked one.
+    let rx = rxs.remove(1).remove(0);
+    let server = std::thread::spawn(move || {
+        for _ in 0..3 {
+            match rx.recv().unwrap() {
+                RpcEnvelope::Slot(slot) => slot.serve(|req, out| out.extend_from_slice(req)),
+                RpcEnvelope::Message { .. } => panic!("expected ring slot"),
+            }
+        }
+    });
+
+    assert_eq!(conn.take_reply(t1, |b| b.to_vec()), b"one".to_vec());
+    assert_eq!(conn.take_reply(t2, |b| b.to_vec()), b"two".to_vec());
+    posted_rx.recv_timeout(Duration::from_secs(5)).expect("blocked post must resume");
+    assert_eq!(poster.join().unwrap(), b"three".to_vec());
+    server.join().unwrap();
+}

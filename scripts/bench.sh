@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Run the live-dataplane throughput benchmark and emit BENCH_live.json
+# (machine-readable perf trajectory; later PRs compare against it).
+#
+# Usage: scripts/bench.sh [output.json]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="${1:-${BENCH_OUT:-BENCH_live.json}}"
+
+BENCH_OUT="$out" cargo bench --bench live_throughput
+
+echo "--- $out ---"
+cat "$out"
