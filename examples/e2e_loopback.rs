@@ -134,7 +134,8 @@ fn main() {
         lat.p99() as f64 / 1e3
     );
     println!("transactions: {commits} committed, {aborts} aborted");
-    println!("rpc fallbacks served per node: {served:?}");
+    println!("rpc fallbacks served per node: {:?}", served.node_totals());
+    println!("per-lane service counts (shard imbalance {:.2}):\n{served}", served.imbalance());
     assert!(found as f64 / lookups.max(1) as f64 > 0.99, "lookups must find loaded keys");
     assert!(commits > 0, "transactions must commit");
     println!("e2e_loopback OK");

@@ -1,7 +1,9 @@
 //! `cargo bench --bench live_throughput` — wall-clock throughput of the
 //! live loopback dataplane: batch lookups (pipelined ring-buffer path vs
-//! the sequential one-outstanding baseline) and transaction commits, for
-//! one and four concurrent clients.
+//! the sequential one-outstanding baseline), single-key transaction
+//! commits, and a TATP-style mixed transactional workload comparing the
+//! sequential `run_tx` loop against the windowed `run_tx_batch` scheduler
+//! (`TX_WINDOW` concurrent engines per client), with abort rates.
 //!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
@@ -9,16 +11,22 @@
 
 use std::time::Instant;
 
-use storm::dataplane::live::LiveCluster;
+use storm::dataplane::live::{LiveCluster, TX_WINDOW};
 use storm::dataplane::tx::{TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
 use storm::ds::mica::MicaConfig;
+use storm::sim::Pcg64;
+use storm::workload::tatp::{TatpPopulation, TatpWorkload};
 
 const NODES: u32 = 4;
 const KEYS: u64 = 10_000;
 const BATCH: usize = 256;
 const CLIENTS: u32 = 4;
 const TXS_PER_CLIENT: u64 = 2_000;
+
+const TATP_SUBSCRIBERS: u64 = 2_000;
+const TATP_TXS: usize = 4_000;
+const TATP_VALUE_LEN: u32 = 32;
 
 fn value_of(k: u64) -> Vec<u8> {
     let mut v = vec![0u8; 112];
@@ -104,6 +112,81 @@ fn tx_pass(cluster: &LiveCluster, clients: u32) -> (f64, u64) {
     (commits as f64 / t0.elapsed().as_secs_f64(), commits)
 }
 
+/// Pre-generated TATP mix, flattened onto the live single-object keyspace.
+/// Both the sequential and the windowed pass replay the same transactions.
+fn tatp_mix(seed: u64) -> Vec<(Vec<TxItem>, Vec<TxItem>)> {
+    let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
+    let mut rng = Pcg64::seeded(seed);
+    (0..TATP_TXS).map(|_| workload.next_tx(&mut rng).flatten(TATP_VALUE_LEN)).collect()
+}
+
+/// A freshly loaded TATP cluster. Every pass gets its own so the
+/// sequential and windowed numbers start from identical table state
+/// (inserts/deletes of a previous pass would otherwise skew chains,
+/// versions, and abort rates).
+fn tatp_cluster() -> LiveCluster {
+    let cluster = LiveCluster::start(
+        NODES,
+        MicaConfig { buckets: 1 << 13, width: 2, value_len: TATP_VALUE_LEN, store_values: true },
+    );
+    cluster.load(TatpPopulation::new(TATP_SUBSCRIBERS).flat_rows(7), |k| {
+        let mut v = vec![0u8; TATP_VALUE_LEN as usize];
+        v[..8].copy_from_slice(&k.to_le_bytes());
+        v
+    });
+    cluster
+}
+
+/// TATP-style **committed** transactions/sec: `clients` threads, each
+/// replaying its mix either one blocking `run_tx` at a time or through
+/// `run_tx_batch` with `TX_WINDOW` engines in flight. Workload generation
+/// happens before the clock starts, and the rate counts commits (not
+/// attempts), so a mode that finishes faster by aborting more cannot
+/// report a phantom speedup. Returns (committed tx/s, commits, aborts,
+/// per-lane service report).
+fn tatp_pass(
+    clients: u32,
+    windowed: bool,
+) -> (f64, u64, u64, storm::cluster::LiveServed) {
+    let cluster = tatp_cluster();
+    // Same per-client mixes in both modes, generated outside the window.
+    let mixes: Vec<_> = (0..clients).map(|id| tatp_mix(0x7A79 + id as u64)).collect();
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for (id, txs) in mixes.into_iter().enumerate() {
+        let seed = cluster.client_seed(id as u32 % NODES);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut commits = 0u64;
+            let mut aborts = 0u64;
+            let mut count = |out: &TxOutcome| match out {
+                TxOutcome::Committed { .. } => commits += 1,
+                TxOutcome::Aborted(_) => aborts += 1,
+            };
+            if windowed {
+                for out in client.run_tx_batch(txs) {
+                    count(&out);
+                }
+            } else {
+                for (reads, writes) in txs {
+                    let out = client.run_tx(reads, writes);
+                    count(&out);
+                }
+            }
+            (commits, aborts)
+        }));
+    }
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for h in handles {
+        let (c, a) = h.join().unwrap();
+        commits += c;
+        aborts += a;
+    }
+    let rate = commits as f64 / t0.elapsed().as_secs_f64();
+    let served = cluster.shutdown();
+    (rate, commits, aborts, served)
+}
+
 struct Series {
     name: &'static str,
     seq_1c: f64,
@@ -155,6 +238,32 @@ fn main() {
     println!("tx commit 1 client   {tx_1c:>12.0} tx/s");
     println!("tx commit {CLIENTS} clients  {tx_4c:>12.0} tx/s   ({commits_4c} commits)");
 
+    // TATP-style mix: sequential run_tx loop vs the TX_WINDOW scheduler —
+    // identical pre-generated transactions and a fresh, identically loaded
+    // cluster per pass.
+    let (tatp_seq_1c, _, _, _) = tatp_pass(1, false);
+    let (tatp_win_1c, _, _, _) = tatp_pass(1, true);
+    let (tatp_seq_4c, seq_commits, seq_aborts, _) = tatp_pass(CLIENTS, false);
+    let (tatp_win_4c, win_commits, win_aborts, served) = tatp_pass(CLIENTS, true);
+    let abort_rate =
+        |a: u64, c: u64| if a + c == 0 { 0.0 } else { a as f64 / (a + c) as f64 };
+    println!("# TATP-style mix: {TATP_TXS} txs/client, window {TX_WINDOW}, committed tx/s");
+    println!("tatp seq      1 client   {tatp_seq_1c:>12.0} commit/s");
+    println!(
+        "tatp windowed 1 client   {tatp_win_1c:>12.0} commit/s   ({:.2}x)",
+        tatp_win_1c / tatp_seq_1c
+    );
+    println!(
+        "tatp seq      {CLIENTS} clients  {tatp_seq_4c:>12.0} commit/s   (abort rate {:.4})",
+        abort_rate(seq_aborts, seq_commits)
+    );
+    println!(
+        "tatp windowed {CLIENTS} clients  {tatp_win_4c:>12.0} commit/s   ({:.2}x, abort rate {:.4})",
+        tatp_win_4c / tatp_seq_4c,
+        abort_rate(win_aborts, win_commits)
+    );
+    println!("server lane imbalance (max/mean): {:.2}", served.imbalance());
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
     let json = format!(
         concat!(
@@ -164,19 +273,25 @@ fn main() {
             "  \"keys\": {keys},\n",
             "  \"batch\": {batch},\n",
             "  \"clients\": {clients},\n",
+            "  \"tx_window\": {txw},\n",
             "  \"lookup\": {{\n",
             "    \"{n0}\": {{\"seq_1c_ops\": {a0:.0}, \"pipe_1c_ops\": {b0:.0}, ",
             "\"seq_4c_ops\": {c0:.0}, \"pipe_4c_ops\": {d0:.0}, \"speedup_4c\": {s0:.3}}},\n",
             "    \"{n1}\": {{\"seq_1c_ops\": {a1:.0}, \"pipe_1c_ops\": {b1:.0}, ",
             "\"seq_4c_ops\": {c1:.0}, \"pipe_4c_ops\": {d1:.0}, \"speedup_4c\": {s1:.3}}}\n",
             "  }},\n",
-            "  \"tx\": {{\"commit_1c_per_s\": {t1:.0}, \"commit_4c_per_s\": {t4:.0}}}\n",
+            "  \"tx\": {{\"commit_1c_per_s\": {t1:.0}, \"commit_4c_per_s\": {t4:.0}}},\n",
+            "  \"tatp\": {{\"seq_1c_tx\": {ts1:.0}, \"windowed_1c_tx\": {tw1:.0}, ",
+            "\"speedup_1c\": {sp1:.3}, \"seq_4c_tx\": {ts4:.0}, \"windowed_4c_tx\": {tw4:.0}, ",
+            "\"speedup_4c\": {sp4:.3}, \"abort_rate_seq_4c\": {ar_s:.4}, ",
+            "\"abort_rate_windowed_4c\": {ar_w:.4}, \"lane_imbalance\": {imb:.3}}}\n",
             "}}\n",
         ),
         nodes = NODES,
         keys = KEYS,
         batch = BATCH,
         clients = CLIENTS,
+        txw = TX_WINDOW,
         n0 = inline.name,
         a0 = inline.seq_1c,
         b0 = inline.pipe_1c,
@@ -191,6 +306,15 @@ fn main() {
         s1 = oversub.pipe_4c / oversub.seq_4c,
         t1 = tx_1c,
         t4 = tx_4c,
+        ts1 = tatp_seq_1c,
+        tw1 = tatp_win_1c,
+        sp1 = tatp_win_1c / tatp_seq_1c,
+        ts4 = tatp_seq_4c,
+        tw4 = tatp_win_4c,
+        sp4 = tatp_win_4c / tatp_seq_4c,
+        ar_s = abort_rate(seq_aborts, seq_commits),
+        ar_w = abort_rate(win_aborts, win_commits),
+        imb = served.imbalance(),
     );
     std::fs::write(&out, &json).expect("write bench json");
     println!("wrote {out}");

@@ -1,7 +1,54 @@
-//! Run summaries produced by the simulator, consumed by the figure
-//! harnesses and the CLI.
+//! Run summaries: simulator reports (consumed by the figure harnesses and
+//! the CLI) and live-cluster service counters.
 
 use crate::sim::Nanos;
+
+/// Per-lane RPC service counts from a live cluster run:
+/// `per_lane[node][lane]` is the number of requests the given bucket-range
+/// shard's event loop served. Returned by `LiveCluster::shutdown` so shard
+/// imbalance (hot buckets pinning one lane) is visible in reports.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LiveServed {
+    /// Requests served, indexed `[node][lane]`.
+    pub per_lane: Vec<Vec<u64>>,
+}
+
+impl LiveServed {
+    /// Total served per node.
+    pub fn node_totals(&self) -> Vec<u64> {
+        self.per_lane.iter().map(|lanes| lanes.iter().sum()).collect()
+    }
+
+    /// Cluster-wide total.
+    pub fn total(&self) -> u64 {
+        self.per_lane.iter().flatten().sum()
+    }
+
+    /// Busiest-lane to mean-lane ratio across all lanes (1.0 = perfectly
+    /// balanced; 0.0 when no lane served anything).
+    pub fn imbalance(&self) -> f64 {
+        let lanes: Vec<u64> = self.per_lane.iter().flatten().copied().collect();
+        let total: u64 = lanes.iter().sum();
+        if total == 0 || lanes.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / lanes.len() as f64;
+        *lanes.iter().max().unwrap() as f64 / mean
+    }
+}
+
+impl std::fmt::Display for LiveServed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (node, lanes) in self.per_lane.iter().enumerate() {
+            let total: u64 = lanes.iter().sum();
+            write!(f, "node {node}: {total} served, lanes {lanes:?}")?;
+            if node + 1 < self.per_lane.len() {
+                writeln!(f)?;
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Aggregated results of one simulated run.
 #[derive(Clone, Debug)]

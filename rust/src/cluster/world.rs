@@ -20,11 +20,12 @@
 //! The world is deterministic: one `Pcg64` stream per thread, FIFO event
 //! ties, no host-time dependence.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::dataplane::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
 use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes};
-use crate::dataplane::tx::{TxAction, TxEngine, TxInput};
+use crate::dataplane::tx::{TxEngine, TxInput, TxOp, TxPost, TxStep};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::hopscotch::HopscotchTable;
 use crate::ds::mica::{owner_of, ItemView, MicaClient, MicaConfig, MicaTable};
@@ -55,6 +56,13 @@ const READ_RESP_HDR: u32 = 30;
 const ABORT_BACKOFF: Nanos = 2_000;
 /// CPU cost of a local (same-node) data-structure access.
 const LOCAL_ACCESS_NS: Nanos = 150;
+/// Posted-but-incomplete actions a coroutine keeps in flight when driving
+/// the batched transaction engine on RC transports (the paper's intra-tx
+/// parallelism: execute lookups and lock-reads together, validation reads
+/// as one doorbell group, commit volleys). UD (eRPC) and synchronous LITE
+/// drive a window of 1: their per-coroutine retransmit/sequence tracking
+/// assumes a single outstanding request.
+const INTRA_TX_WINDOW: usize = 16;
 
 /// How a one-sided read should be served at the responder.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +90,9 @@ struct Pkt {
     conn: ConnId,
     size: u32,
     seq: u16,
+    /// Batched-engine action tag, echoed on the response so the coroutine
+    /// can feed out-of-order completions back (0 for plain lookups).
+    tag: u32,
     ud: bool,
     kind: PktKind,
 }
@@ -261,6 +272,10 @@ struct CoroSim {
     sent_at: Nanos,
     /// TATP transaction being executed (retried verbatim on abort).
     pending_tx: Option<TatpTx>,
+    /// Batched-engine actions emitted but not yet posted (driver window).
+    posts: VecDeque<TxPost>,
+    /// Posted-but-incomplete actions of this coroutine.
+    outstanding: u32,
 }
 
 struct ThreadSim {
@@ -482,6 +497,8 @@ impl World {
                         pending_ud: None,
                         sent_at: 0,
                         pending_tx: None,
+                        posts: VecDeque::new(),
+                        outstanding: 0,
                     })
                     .collect();
                 let cc = (0..cfg.nodes).map(|_| AppCc::new(CcParams::default())).collect();
@@ -666,6 +683,7 @@ impl World {
                     conn: pkt.conn,
                     size: resp_size,
                     seq: pkt.seq,
+                    tag: pkt.tag,
                     ud: false,
                     kind: PktKind::ReadResp { view },
                 };
@@ -804,6 +822,7 @@ impl World {
             conn: pkt.conn,
             size,
             seq: pkt.seq,
+            tag: pkt.tag,
             ud: pkt.ud,
             kind: PktKind::RpcResp { resp },
         };
@@ -854,12 +873,13 @@ impl World {
         }
         self.nodes[node].threads[thread].busy_until = ready;
 
+        let tag = pkt.tag;
         let input = match pkt.kind {
             PktKind::ReadResp { view } => CoroInput::Read(view),
             PktKind::RpcResp { resp } => CoroInput::Rpc(resp),
             _ => unreachable!(),
         };
-        self.advance_coro(node, thread, coro, Some(input), ready);
+        self.advance_coro(node, thread, coro, Some((tag, input)), ready);
     }
 
     /// LITE's global kernel lock: serialize `work` through it.
@@ -898,12 +918,21 @@ impl World {
         self.advance_coro(n, t, c, None, ready);
     }
 
+    /// Posted-action window for the batched transaction engine.
+    fn tx_post_window(&self) -> usize {
+        if self.ud || matches!(self.cfg.system, SystemKind::Lite { async_ops: false }) {
+            1
+        } else {
+            INTRA_TX_WINDOW
+        }
+    }
+
     fn advance_coro(
         &mut self,
         n: usize,
         t: usize,
         c: usize,
-        input: Option<CoroInput>,
+        input: Option<(u32, CoroInput)>,
         ready: Nanos,
     ) {
         // Take the state machine and resolver out to appease the borrow
@@ -911,31 +940,44 @@ impl World {
         let mut sm = std::mem::replace(&mut self.nodes[n].threads[t].coros[c].sm, CoroSm::Idle);
         let mut resolver =
             std::mem::replace(&mut self.nodes[n].threads[t].resolver, Resolver::dummy());
-        let action = match &mut sm {
+        if input.is_some() && matches!(&sm, CoroSm::Tx(_)) {
+            self.nodes[n].threads[t].coros[c].outstanding -= 1;
+        }
+        let next = match &mut sm {
             CoroSm::Kv(lk) => {
-                let lk_input = input.map(|i| match i {
+                let lk_input = input.map(|(_, i)| match i {
                     CoroInput::Read(v) => LkInput::Read(v),
                     CoroInput::Rpc(r) => LkInput::Rpc(r),
                 });
                 match lk.advance(&mut resolver, lk_input) {
                     LkAction::Read { obj, key, node, addr, len } => {
-                        CoroAction::Read { obj, key, dest: node, addr, len }
+                        CoroNext::Act(CoroAction::Read { obj, key, dest: node, addr, len })
                     }
-                    LkAction::Rpc { node, req } => CoroAction::Rpc { dest: node, req },
-                    LkAction::Done(res) => CoroAction::KvDone { found: res.found },
+                    LkAction::Rpc { node, req } => {
+                        CoroNext::Act(CoroAction::Rpc { dest: node, req })
+                    }
+                    LkAction::Done(res) => {
+                        CoroNext::Act(CoroAction::KvDone { found: res.found })
+                    }
                 }
             }
             CoroSm::Tx(tx) => {
-                let tx_input = input.map(|i| match i {
-                    CoroInput::Read(v) => TxInput::Read(v),
-                    CoroInput::Rpc(r) => TxInput::Rpc(r),
-                });
-                match tx.advance(&mut resolver, tx_input) {
-                    TxAction::Read { obj, key, node, addr, len } => {
-                        CoroAction::Read { obj, key, dest: node, addr, len }
+                // Batched contract: start once, then feed each tagged
+                // completion; every step may emit a batch of independent
+                // actions the post window drains.
+                let step = match input {
+                    None => tx.start(&mut resolver),
+                    Some((tag, i)) => {
+                        let tx_input = match i {
+                            CoroInput::Read(v) => TxInput::Read(v),
+                            CoroInput::Rpc(r) => TxInput::Rpc(r),
+                        };
+                        tx.complete(&mut resolver, tag, tx_input)
                     }
-                    TxAction::Rpc { node, req } => CoroAction::Rpc { dest: node, req },
-                    TxAction::Done(outcome) => CoroAction::TxDone {
+                };
+                match step {
+                    TxStep::Issue(posts) => CoroNext::TxIssue(posts),
+                    TxStep::Done(outcome) => CoroNext::TxDone {
                         committed: matches!(
                             outcome,
                             crate::dataplane::tx::TxOutcome::Committed { .. }
@@ -949,20 +991,20 @@ impl World {
         self.nodes[n].threads[t].resolver = resolver;
 
         let in_window = self.window.contains(ready);
-        match action {
-            CoroAction::Read { obj, key, dest, addr, len } => {
+        match next {
+            CoroNext::Act(CoroAction::Read { obj, key, dest, addr, len }) => {
                 if in_window {
                     self.metrics.reads += 1;
                 }
-                self.post_read(n, t, c, obj, key, dest, addr, len, ready);
+                self.post_read(n, t, c, 0, obj, key, dest, addr, len, ready);
             }
-            CoroAction::Rpc { dest, req } => {
+            CoroNext::Act(CoroAction::Rpc { dest, req }) => {
                 if in_window {
                     self.metrics.rpcs += 1;
                 }
-                self.post_rpc(n, t, c, dest, req, ready);
+                self.post_rpc(n, t, c, 0, dest, req, ready);
             }
-            CoroAction::KvDone { found } => {
+            CoroNext::Act(CoroAction::KvDone { found }) => {
                 if found {
                     self.metrics.found += 1;
                 } else {
@@ -970,7 +1012,13 @@ impl World {
                 }
                 self.finish_op(n, t, c, ready, true);
             }
-            CoroAction::TxDone { committed } => {
+            CoroNext::TxIssue(posts) => {
+                self.nodes[n].threads[t].coros[c].posts.extend(posts);
+                self.pump_tx_posts(n, t, c, ready);
+            }
+            CoroNext::TxDone { committed } => {
+                debug_assert_eq!(self.nodes[n].threads[t].coros[c].outstanding, 0);
+                debug_assert!(self.nodes[n].threads[t].coros[c].posts.is_empty());
                 if committed {
                     self.metrics.commits += 1;
                     self.nodes[n].threads[t].coros[c].pending_tx = None;
@@ -980,6 +1028,34 @@ impl World {
                         self.metrics.aborts += 1;
                     }
                     self.retry_tx(n, t, c, ready);
+                }
+            }
+        }
+    }
+
+    /// Post queued engine actions while the coroutine's window has room.
+    fn pump_tx_posts(&mut self, n: usize, t: usize, c: usize, ready: Nanos) {
+        let window = self.tx_post_window();
+        let in_window = self.window.contains(ready);
+        loop {
+            let coro = &mut self.nodes[n].threads[t].coros[c];
+            if coro.outstanding as usize >= window {
+                return;
+            }
+            let Some(post) = coro.posts.pop_front() else { return };
+            coro.outstanding += 1;
+            match post.op {
+                TxOp::Read { obj, key, node, addr, len } => {
+                    if in_window {
+                        self.metrics.reads += 1;
+                    }
+                    self.post_read(n, t, c, post.tag, obj, key, node, addr, len, ready);
+                }
+                TxOp::Rpc { node, req } => {
+                    if in_window {
+                        self.metrics.rpcs += 1;
+                    }
+                    self.post_rpc(n, t, c, post.tag, node, req, ready);
                 }
             }
         }
@@ -1022,6 +1098,7 @@ impl World {
         n: usize,
         t: usize,
         c: usize,
+        tag: u32,
         obj: ObjectId,
         key: u64,
         dest: u32,
@@ -1046,6 +1123,7 @@ impl World {
                 conn: ConnId(0),
                 size: 0,
                 seq: 0,
+                tag,
                 ud: false,
                 kind: PktKind::ReadResp { view },
             };
@@ -1066,13 +1144,24 @@ impl World {
             conn,
             size: READ_REQ_BYTES.max(len / 16), // request carries no payload
             seq: 0,
+            tag,
             ud: false,
             kind: PktKind::ReadReq { obj: obj.0 as u8, key, addr, len, rk },
         };
         self.q.push_at(cpu_done + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt });
     }
 
-    fn post_rpc(&mut self, n: usize, t: usize, c: usize, dest: u32, req: RpcRequest, ready: Nanos) {
+    #[allow(clippy::too_many_arguments)]
+    fn post_rpc(
+        &mut self,
+        n: usize,
+        t: usize,
+        c: usize,
+        tag: u32,
+        dest: u32,
+        req: RpcRequest,
+        ready: Nanos,
+    ) {
         let h = self.cfg.host;
         if dest as usize == n {
             // Local "RPC": run the handler inline on this thread.
@@ -1089,6 +1178,7 @@ impl World {
                 conn: ConnId(0),
                 size: 0,
                 seq: 0,
+                tag,
                 ud: false,
                 kind: PktKind::RpcResp { resp },
             };
@@ -1135,6 +1225,7 @@ impl World {
             conn,
             size,
             seq,
+            tag,
             ud,
             kind: PktKind::RpcReq { req },
         };
@@ -1228,6 +1319,13 @@ enum CoroAction {
     Read { obj: ObjectId, key: u64, dest: u32, addr: RemoteAddr, len: u32 },
     Rpc { dest: u32, req: RpcRequest },
     KvDone { found: bool },
+}
+
+/// What a coroutine advance decided: a single lookup action, a batch of
+/// transaction-engine posts for the window pump, or a finished tx.
+enum CoroNext {
+    Act(CoroAction),
+    TxIssue(Vec<TxPost>),
     TxDone { committed: bool },
 }
 
@@ -1255,7 +1353,8 @@ mod tests {
             std::mem::size_of::<Pkt>(),
             std::mem::size_of::<ReadView>()
         );
-        assert!(std::mem::size_of::<Ev>() <= 160);
+        // Budget allows the 4-byte completion tag the batched engine needs.
+        assert!(std::mem::size_of::<Ev>() <= 168);
     }
 
     #[test]

@@ -5,15 +5,21 @@
 //! semantic reference: what the simulator and the live loopback driver
 //! must agree with. Used heavily by tests (including step-interleaved
 //! concurrency tests for the OCC protocol) and the quickstart example.
+//!
+//! The batched engine contract is driven here with a window of one:
+//! emitted [`TxPost`]s queue up and are served strictly in order
+//! ([`LocalCluster::run_tx_posts`]), while tests that need explicit
+//! interleavings serve individual posts via
+//! [`LocalCluster::serve_tx_post`] and park the rest.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::mica::{MicaClient, MicaConfig, MicaTable};
 use crate::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable, RemoteAddr};
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
-use super::tx::{TxAction, TxEngine, TxInput, TxItem, TxOutcome};
+use super::tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxPost, TxStep};
 
 /// One simulated host's storage.
 pub struct LocalNode {
@@ -192,24 +198,45 @@ impl LocalCluster {
         }
     }
 
-    /// Step a transaction engine by serving one action; returns the next
-    /// action (callers drive interleavings explicitly in tests).
-    pub fn serve_tx_action(
+    /// Serve one posted action and feed its completion back, returning the
+    /// engine's next step (callers drive interleavings explicitly in
+    /// tests by parking the steps they are not ready to serve yet).
+    pub fn serve_tx_post(
         &mut self,
         client: &mut LocalClient,
         engine: &mut TxEngine,
-        action: TxAction,
-    ) -> TxAction {
-        match action {
-            TxAction::Read { obj, node, addr, len, key: _ } => {
-                let view = self.serve_read(node, obj, addr, len);
-                engine.advance(client, Some(TxInput::Read(view)))
+        post: &TxPost,
+    ) -> TxStep {
+        match &post.op {
+            TxOp::Read { obj, node, addr, len, .. } => {
+                let view = self.serve_read(*node, *obj, *addr, *len);
+                engine.complete(client, post.tag, TxInput::Read(view))
             }
-            TxAction::Rpc { node, req } => {
-                let resp = self.serve_rpc(node, &req);
-                engine.advance(client, Some(TxInput::Rpc(resp)))
+            TxOp::Rpc { node, req } => {
+                let resp = self.serve_rpc(*node, req);
+                engine.complete(client, post.tag, TxInput::Rpc(resp))
             }
-            done @ TxAction::Done(_) => done,
+        }
+    }
+
+    /// Drain a batch of posts (and everything the engine issues in
+    /// response) to completion, serving strictly in order.
+    pub fn run_tx_posts(
+        &mut self,
+        client: &mut LocalClient,
+        engine: &mut TxEngine,
+        posts: Vec<TxPost>,
+    ) -> TxOutcome {
+        let mut queue: VecDeque<TxPost> = posts.into();
+        loop {
+            let post = queue.pop_front().expect("engine stalled without posts");
+            match self.serve_tx_post(client, engine, &post) {
+                TxStep::Issue(more) => queue.extend(more),
+                TxStep::Done(outcome) => {
+                    assert!(queue.is_empty(), "engine finished with posts unserved");
+                    return outcome;
+                }
+            }
         }
     }
 
@@ -222,15 +249,11 @@ impl LocalCluster {
     ) -> TxOutcome {
         let tx_id = self.next_tx_id();
         let mut engine = TxEngine::begin(tx_id, read_set, write_set);
-        let mut action = engine.advance(client, None);
-        loop {
-            match action {
-                TxAction::Done(outcome) => return outcome,
-                other => action = self.serve_tx_action(client, &mut engine, other),
-            }
+        match engine.start(client) {
+            TxStep::Issue(posts) => self.run_tx_posts(client, &mut engine, posts),
+            TxStep::Done(outcome) => outcome,
         }
     }
-
 }
 
 #[cfg(test)]
@@ -297,6 +320,14 @@ mod tests {
         assert!(!c.run_lookup(&mut client, KV, 777).found);
     }
 
+    /// Unwrap a step that must have issued actions.
+    fn posts_of(step: TxStep) -> Vec<TxPost> {
+        match step {
+            TxStep::Issue(p) => p,
+            TxStep::Done(o) => panic!("engine finished early: {o:?}"),
+        }
+    }
+
     #[test]
     fn lock_conflict_aborts_and_releases() {
         let mut c = cluster(1, 1 << 8, 2);
@@ -304,36 +335,23 @@ mod tests {
         let mut client_a = c.client(false);
         let mut client_b = c.client(false);
 
-        // Tx A locks key 3 (execute phase) and pauses before commit.
+        // Tx A locks key 3 (execute phase) and pauses before commit: serve
+        // its lock-read but park the commit batch it issues in response.
         let mut tx_a = TxEngine::begin(100, vec![], vec![TxItem::update(KV, 3)]);
-        let act_a = tx_a.advance(&mut client_a, None);
-        let act_a = c.serve_tx_action(&mut client_a, &mut tx_a, act_a);
-        // A now holds the lock and wants to commit; don't serve it yet.
+        let lock_posts = posts_of(tx_a.start(&mut client_a));
+        assert_eq!(lock_posts.len(), 1);
+        let commit_posts = posts_of(c.serve_tx_post(&mut client_a, &mut tx_a, &lock_posts[0]));
+        assert_eq!(commit_posts.len(), 1, "lock held; commit volley parked");
 
         // Tx B tries to lock key 3 too: must abort with LockConflict.
         let mut tx_b = TxEngine::begin(200, vec![], vec![TxItem::update(KV, 3)]);
-        let mut act_b = tx_b.advance(&mut client_b, None);
-        loop {
-            match act_b {
-                TxAction::Done(outcome) => {
-                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::LockConflict));
-                    break;
-                }
-                other => act_b = c.serve_tx_action(&mut client_b, &mut tx_b, other),
-            }
-        }
+        let posts_b = posts_of(tx_b.start(&mut client_b));
+        let out_b = c.run_tx_posts(&mut client_b, &mut tx_b, posts_b);
+        assert_eq!(out_b, TxOutcome::Aborted(AbortReason::LockConflict));
 
         // A finishes its commit.
-        let mut act_a = act_a;
-        loop {
-            match act_a {
-                TxAction::Done(outcome) => {
-                    assert!(matches!(outcome, TxOutcome::Committed { .. }));
-                    break;
-                }
-                other => act_a = c.serve_tx_action(&mut client_a, &mut tx_a, other),
-            }
-        }
+        let out_a = c.run_tx_posts(&mut client_a, &mut tx_a, commit_posts);
+        assert!(matches!(out_a, TxOutcome::Committed { .. }));
         // Lock released: B can retry successfully.
         let out = c.run_tx(&mut client_b, vec![], vec![TxItem::update(KV, 3)]);
         assert!(matches!(out, TxOutcome::Committed { .. }));
@@ -346,25 +364,19 @@ mod tests {
         let mut reader = c.client(false);
         let mut writer = c.client(false);
 
-        // Reader executes (reads key 7, version 1)...
+        // Reader executes (reads key 7, version 1): serve the execute-phase
+        // read, then park the validation batch the engine issues.
         let mut tx_r = TxEngine::begin(300, vec![TxItem::read(KV, 7)], vec![]);
-        let act = tx_r.advance(&mut reader, None);
-        // Serve exactly the execute-phase read, stopping before validation.
-        let act = c.serve_tx_action(&mut reader, &mut tx_r, act);
+        let exec_posts = posts_of(tx_r.start(&mut reader));
+        assert_eq!(exec_posts.len(), 1);
+        let val_posts = posts_of(c.serve_tx_post(&mut reader, &mut tx_r, &exec_posts[0]));
+        assert_eq!(val_posts.len(), 1, "validation read parked");
         // ...writer commits an update to key 7 in between...
         let out = c.run_tx(&mut writer, vec![], vec![TxItem::update(KV, 7)]);
         assert!(matches!(out, TxOutcome::Committed { .. }));
         // ...reader's validation read must now fail.
-        let mut act = act;
-        loop {
-            match act {
-                TxAction::Done(outcome) => {
-                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::ValidationVersion));
-                    break;
-                }
-                other => act = c.serve_tx_action(&mut reader, &mut tx_r, other),
-            }
-        }
+        let out = c.run_tx_posts(&mut reader, &mut tx_r, val_posts);
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationVersion));
     }
 
     #[test]
@@ -388,27 +400,43 @@ mod tests {
         let mut a = c.client(false);
         let mut b = c.client(false);
 
-        // A reads key 9 (execute).
+        // A reads key 9 (execute) and parks its validation batch.
         let mut tx_a = TxEngine::begin(400, vec![TxItem::read(KV, 9)], vec![]);
-        let act = tx_a.advance(&mut a, None);
-        let act_after_read = c.serve_tx_action(&mut a, &mut tx_a, act);
+        let exec_posts = posts_of(tx_a.start(&mut a));
+        let val_posts = posts_of(c.serve_tx_post(&mut a, &mut tx_a, &exec_posts[0]));
 
-        // B acquires the lock on 9 and holds it (no commit yet).
+        // B acquires the lock on 9 and holds it (commit batch parked).
         let mut tx_b = TxEngine::begin(500, vec![], vec![TxItem::update(KV, 9)]);
-        let act_b = tx_b.advance(&mut b, None);
-        let _pending_b = c.serve_tx_action(&mut b, &mut tx_b, act_b);
+        let lock_posts = posts_of(tx_b.start(&mut b));
+        let _pending_b = posts_of(c.serve_tx_post(&mut b, &mut tx_b, &lock_posts[0]));
 
         // A validates: sees the foreign lock -> abort.
-        let mut act = act_after_read;
-        loop {
-            match act {
-                TxAction::Done(outcome) => {
-                    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::ValidationLocked));
-                    break;
-                }
-                other => act = c.serve_tx_action(&mut a, &mut tx_a, other),
+        let out = c.run_tx_posts(&mut a, &mut tx_a, val_posts);
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationLocked));
+    }
+
+    #[test]
+    fn duplicate_update_keys_commit_once_through_reference_driver() {
+        // Regression: two Updates naming the same key must not self-conflict
+        // on the second lock-read; the lock is taken once and the single
+        // UpdateUnlock bumps the version exactly once.
+        let mut c = cluster(1, 1 << 8, 2);
+        c.load(KV, 1..=10);
+        let mut client = c.client(false);
+        let out = c.run_tx(
+            &mut client,
+            vec![],
+            vec![TxItem::update(KV, 6), TxItem::update(KV, 6)],
+        );
+        match out {
+            TxOutcome::Committed { write_results } => {
+                assert_eq!(write_results, vec![RpcResult::Ok, RpcResult::Ok]);
             }
+            other => panic!("duplicate updates must commit, got {other:?}"),
         }
+        let res = c.run_lookup(&mut client, KV, 6);
+        assert_eq!(res.version, 2, "exactly one version bump");
+        assert!(!res.locked, "lock released by the single commit op");
     }
 
     #[test]
@@ -430,13 +458,9 @@ mod tests {
         c.load(KV, 1..=10);
         let mut client = c.client(false);
         let mut tx = TxEngine::begin(600, vec![TxItem::read(KV, 2)], vec![TxItem::update(KV, 3)]);
-        let mut act = tx.advance(&mut client, None);
-        loop {
-            match act {
-                TxAction::Done(_) => break,
-                other => act = c.serve_tx_action(&mut client, &mut tx, other),
-            }
-        }
+        let posts = posts_of(tx.start(&mut client));
+        let out = c.run_tx_posts(&mut client, &mut tx, posts);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
         // 1 execute read + 1 validation read; 1 lock RPC + 1 commit RPC.
         assert_eq!(tx.reads_issued, 2);
         assert_eq!(tx.rpcs_issued, 2);

@@ -3,24 +3,29 @@
 //! Two independent data paths — one-sided remote reads and write-based
 //! RPCs — drive any data structure implementing the callback API
 //! ([`crate::ds::api`]). The core pieces are deliberately *sans-io* state
-//! machines: they emit [`onetwo::LkAction`] / [`tx::TxAction`] values and
-//! consume completions, so the identical protocol logic runs under the
-//! discrete-event simulator (for the paper's figures) and the live
-//! loopback fabric (for the end-to-end examples).
+//! machines: they emit actions ([`onetwo::LkAction`] for lookups, batches
+//! of tagged [`tx::TxPost`]s for transactions) and consume completions,
+//! so the identical protocol logic runs under the discrete-event
+//! simulator (for the paper's figures) and the live loopback fabric (for
+//! the end-to-end examples).
 //!
 //! * [`onetwo`] — the **one-two-sided** lookup: try a fine-grained
 //!   one-sided read first; if it shows pointer chasing is needed, switch
 //!   to a write-based RPC (paper principle #4).
-//! * [`tx`] — the transactional protocol (paper §5.4): optimistic reads
-//!   with execution-phase write locks, validation by one-sided version
-//!   re-reads, commit via RPCs.
-//! * [`rpc`] — write-with-immediate RPC framing: header layout and wire
-//!   sizes (paper §5.2). The `encode_*_into` variants frame straight into
-//!   preallocated ring-slot buffers, so the live hot path never allocates
-//!   while encoding.
+//! * [`tx`] — the transactional protocol (paper §5.4) as a **batched**
+//!   engine: each phase emits all of its independent actions at once
+//!   (execute lookups + lock-reads, validation reads as one doorbell
+//!   group, commit/unlock volleys) and accepts tagged completions out of
+//!   order — the paper's intra-transaction parallelism.
+//! * [`rpc`] — write-with-immediate RPC framing: header layout (including
+//!   the u32 correlation cookie echoed on replies) and wire sizes (paper
+//!   §5.2). The `encode_*_into` variants frame straight into preallocated
+//!   ring-slot buffers, so the live hot path never allocates while
+//!   encoding.
 //! * [`live`] — the live composition over the loopback fabric: sharded
 //!   server loops, pipelined batch lookups with doorbell-coalesced reads,
-//!   ring-buffer RPC transport.
+//!   ring-buffer RPC transport, and the [`live::TX_WINDOW`]-wide
+//!   transaction scheduler multiplexing concurrent engines per client.
 
 pub mod live;
 pub mod local;
@@ -30,4 +35,4 @@ pub mod tx;
 
 pub use onetwo::{DsCallbacks, LkAction, LkResult, LookupSm, ReadView};
 pub use rpc::{RpcHeader, RPC_HEADER_BYTES};
-pub use tx::{TxAction, TxEngine, TxInput, TxItem, TxOutcome, WriteKind};
+pub use tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxPost, TxStep, WriteKind};

@@ -184,12 +184,12 @@ impl LookupSm {
                 cb.lookup_end_rpc(self.obj, self.key, node, &resp);
                 self.state = LkState::Done;
                 let res = match resp.result {
-                    RpcResult::Value { version, addr, .. } => LkResult {
+                    RpcResult::Value { version, addr, locked, .. } => LkResult {
                         found: true,
                         version,
                         addr: Some(addr),
                         node,
-                        locked: false,
+                        locked,
                         reads,
                         rpcs: 1,
                     },

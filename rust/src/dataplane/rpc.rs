@@ -35,6 +35,12 @@ pub struct RpcHeader {
     /// Request sequence within the coroutine (matches replies; detects
     /// duplicates after UD retransmit in baseline mode).
     pub seq: u16,
+    /// Correlation cookie: opaque to the server, echoed verbatim in the
+    /// reply header. The live transaction scheduler packs its window slot
+    /// and engine tag here to demultiplex concurrent transactions sharing
+    /// one ring connection; it also rides the fabric as the
+    /// write-with-immediate value.
+    pub cookie: u32,
     /// Is this a response?
     pub is_response: bool,
 }
@@ -48,6 +54,7 @@ impl RpcHeader {
         b[4..6].copy_from_slice(&self.coro.to_le_bytes());
         b[6..8].copy_from_slice(&self.seq.to_le_bytes());
         b[8] = self.is_response as u8;
+        b[12..16].copy_from_slice(&self.cookie.to_le_bytes());
         b
     }
 
@@ -67,6 +74,7 @@ impl RpcHeader {
             src_thread: u16::from_le_bytes([b[2], b[3]]),
             coro: u16::from_le_bytes([b[4], b[5]]),
             seq: u16::from_le_bytes([b[6], b[7]]),
+            cookie: u32::from_le_bytes([b[12], b[13], b[14], b[15]]),
             is_response: b[8] != 0,
         })
     }
@@ -141,18 +149,19 @@ pub fn decode_request(b: &[u8]) -> Option<RpcRequest> {
 /// zero-allocation framing path (see [`encode_request_into`]).
 pub fn encode_response_into(resp: &crate::ds::api::RpcResponse, out: &mut Vec<u8>) {
     use crate::ds::api::RpcResult;
-    let (tag, version, region, offset, value): (u8, u32, u32, u64, Option<&Vec<u8>>) =
+    let (tag, locked, version, region, offset, value): (u8, u8, u32, u32, u64, Option<&Vec<u8>>) =
         match &resp.result {
-            RpcResult::Value { version, addr, value } => {
-                (0, *version, addr.region.0, addr.offset, value.as_ref())
+            RpcResult::Value { version, addr, value, locked } => {
+                (0, *locked as u8, *version, addr.region.0, addr.offset, value.as_ref())
             }
-            RpcResult::NotFound => (1, 0, 0, 0, None),
-            RpcResult::LockConflict => (2, 0, 0, 0, None),
-            RpcResult::Ok => (3, 0, 0, 0, None),
-            RpcResult::Full => (4, 0, 0, 0, None),
+            RpcResult::NotFound => (1, 0, 0, 0, 0, None),
+            RpcResult::LockConflict => (2, 0, 0, 0, 0, None),
+            RpcResult::Ok => (3, 0, 0, 0, 0, None),
+            RpcResult::Full => (4, 0, 0, 0, 0, None),
         };
     out.push(tag);
-    out.extend_from_slice(&[0u8; 3]);
+    out.push(locked); // foreign-lock bit of a served Value (OCC validation)
+    out.extend_from_slice(&[0u8; 2]);
     out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&region.to_le_bytes());
     out.extend_from_slice(&offset.to_le_bytes());
@@ -205,6 +214,7 @@ pub fn decode_response(b: &[u8]) -> Option<crate::ds::api::RpcResponse> {
             version,
             addr: RemoteAddr { region: MrKey(region), offset },
             value,
+            locked: b[1] != 0,
         },
         1 => RpcResult::NotFound,
         2 => RpcResult::LockConflict,
@@ -236,8 +246,32 @@ mod tests {
 
     #[test]
     fn header_roundtrip() {
-        let h = RpcHeader { src_node: 31, src_thread: 19, coro: 7, seq: 65535, is_response: true };
+        let h = RpcHeader {
+            src_node: 31,
+            src_thread: 19,
+            coro: 7,
+            seq: 65535,
+            cookie: 0xDEAD_0042,
+            is_response: true,
+        };
         assert_eq!(RpcHeader::decode(&h.encode()), Some(h));
+    }
+
+    #[test]
+    fn header_cookie_survives_in_reply_framing() {
+        // The cookie occupies the previously-padded bytes 12..16, so the
+        // header size (and every wire-size constant) is unchanged.
+        let h = RpcHeader {
+            src_node: 1,
+            src_thread: 0,
+            coro: 0,
+            seq: 9,
+            cookie: (5 << 20) | 0x1_0003,
+            is_response: false,
+        };
+        let bytes = h.encode();
+        assert_eq!(bytes.len() as u32, RPC_HEADER_BYTES);
+        assert_eq!(u32::from_le_bytes(bytes[12..16].try_into().unwrap()), h.cookie);
     }
 
     #[test]
@@ -296,6 +330,7 @@ mod tests {
                     version: 7,
                     addr: RemoteAddr { region: MrKey(3), offset: 4096 },
                     value: Some(vec![1, 2, 3]),
+                    locked: true,
                 },
                 hops: 2,
             },
@@ -326,6 +361,7 @@ mod tests {
                 version: 1,
                 addr: RemoteAddr { region: MrKey(0), offset: 0 },
                 value: Some(vec![0u8; 84]),
+                locked: false,
             },
             hops: 0,
         };
@@ -346,8 +382,14 @@ mod tests {
         };
         let mut buf = Vec::with_capacity(256);
         let cap = buf.capacity();
-        let hdr =
-            RpcHeader { src_node: 1, src_thread: 0, coro: 0, seq: 3, is_response: false };
+        let hdr = RpcHeader {
+            src_node: 1,
+            src_thread: 0,
+            coro: 0,
+            seq: 3,
+            cookie: 7,
+            is_response: false,
+        };
         hdr.encode_into(&mut buf);
         encode_request_into(&req, &mut buf);
         // Framing into a preallocated buffer must not reallocate.
@@ -360,6 +402,7 @@ mod tests {
                 version: 4,
                 addr: RemoteAddr { region: MrKey(2), offset: 640 },
                 value: Some(vec![5u8; 112]),
+                locked: false,
             },
             hops: 1,
         };

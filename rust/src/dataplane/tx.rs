@@ -1,4 +1,4 @@
-//! Storm transactions (paper §5.4, Fig. 3).
+//! Storm transactions (paper §5.4, Fig. 3) — the **batched** engine.
 //!
 //! Optimistic concurrency control with execution-phase write locks:
 //!
@@ -13,10 +13,31 @@
 //! 3. **Commit** — write-set items are applied and unlocked with
 //!    write-based RPCs (updates, inserts, deletes).
 //!
-//! Aborts release all acquired locks via unlock RPCs. The engine is
-//! sans-io and processes one op at a time, matching the paper's blocking
-//! coroutine semantics; the simulator and the live driver feed it
-//! completions.
+//! The engine is sans-io and **batched**: every phase emits *all* of its
+//! independent actions at once as tagged [`TxPost`]s — the execute-phase
+//! lookups and lock-reads together, every validation read in one group
+//! (drivers doorbell-batch them via `read_batch`), all commit or unlock
+//! RPCs posted as one volley. Drivers call [`TxEngine::start`] once, post
+//! the returned actions with whatever concurrency they can afford (all at
+//! once, windowed, or one at a time), and feed completions back through
+//! [`TxEngine::complete`] **in any order**, echoing each action's tag.
+//! A completion may yield follow-up actions for the same tag (a lookup
+//! falling back from read to RPC) or the next phase's batch once the
+//! current phase drains. This is how the paper keeps many one-sided
+//! reads and write-based RPCs in flight per thread: intra-transaction
+//! parallelism inside each phase, with phases as the only barriers.
+//!
+//! Duplicate write-set keys: several `Update` items naming the same
+//! `(obj, key)` acquire the item lock **once** and commit through a
+//! single `UpdateUnlock` carrying the *last* duplicate's value
+//! (last-writer-wins within the transaction); every duplicate's entry in
+//! `write_results` mirrors that one op's result. Without the dedup the
+//! second lock-read would conflict with the transaction's own lock.
+//! Mixed kinds on one key (e.g. `Update` + `Delete`) are not deduped.
+//!
+//! Aborts release all acquired locks via a batch of unlock RPCs — the
+//! engine first absorbs every still-outstanding completion (the driver
+//! keeps feeding them), then emits the unlocks.
 
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version};
 use crate::ds::mica::ItemView;
@@ -26,6 +47,12 @@ use super::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
 
 /// Bytes read to validate an item (its inline metadata header).
 pub const VALIDATE_READ_BYTES: u32 = crate::ds::mica::ITEM_HEADER;
+
+/// Tag bit marking execute-phase lock-read actions (write-set item `j`
+/// posts with tag `LOCK_TAG | j`). All tags stay below `2 * LOCK_TAG`,
+/// leaving the upper 15 bits of a `u32` free for drivers that pack the
+/// tag into a wire correlation cookie.
+pub const LOCK_TAG: u32 = 1 << 16;
 
 /// Kind of write-set operation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,9 +127,9 @@ pub enum TxOutcome {
     Aborted(AbortReason),
 }
 
-/// Next action the driver must perform.
+/// The I/O an action performs.
 #[derive(Clone, Debug)]
-pub enum TxAction {
+pub enum TxOp {
     /// One-sided read.
     Read {
         /// Data structure the address belongs to (read routing).
@@ -123,7 +150,26 @@ pub enum TxAction {
         /// Request.
         req: RpcRequest,
     },
-    /// Transaction finished.
+}
+
+/// One tagged action of a batched step. Actions in a step are mutually
+/// independent; the driver may post them with any concurrency and must
+/// echo `tag` with the completion.
+#[derive(Clone, Debug)]
+pub struct TxPost {
+    /// Correlation tag (see [`LOCK_TAG`] for the tag space layout).
+    pub tag: u32,
+    /// What to do.
+    pub op: TxOp,
+}
+
+/// What the engine wants next.
+#[derive(Clone, Debug)]
+pub enum TxStep {
+    /// Post these actions (possibly empty while earlier actions of the
+    /// phase are still in flight).
+    Issue(Vec<TxPost>),
+    /// Transaction finished; no actions remain outstanding.
     Done(TxOutcome),
 }
 
@@ -146,26 +192,39 @@ struct ReadMeta {
 
 #[derive(Clone, Copy, Debug)]
 enum Phase {
-    ExecuteRead(usize),
-    ExecuteWrite(usize),
-    Validate(usize),
-    Commit(usize),
-    AbortUnlock(usize, AbortReason),
+    Execute,
+    Validate,
+    Commit,
+    Abort(AbortReason),
     Done,
 }
 
-/// The sans-io transaction engine.
+/// The sans-io batched transaction engine.
 pub struct TxEngine {
     /// Transaction id (lock owner token; nonzero).
     pub tx_id: u64,
     read_set: Vec<TxItem>,
     write_set: Vec<TxItem>,
     phase: Phase,
-    lookup: Option<LookupSm>,
-    read_meta: Vec<ReadMeta>,
+    started: bool,
+    /// Per-read-set-item lookup machine (present while in flight).
+    lookups: Vec<Option<LookupSm>>,
+    /// Per-read-set-item execute result.
+    read_meta: Vec<Option<ReadMeta>>,
+    /// Per-write-set-item: does this index issue the lock-read? (first
+    /// `Update` occurrence of each distinct `(obj, key)`).
+    lock_issue: Vec<bool>,
+    /// Per-write-set-item: index whose commit op supplies this item's
+    /// result (last `Update` duplicate; itself for everything else).
+    commit_rep: Vec<usize>,
     /// Indexes into `write_set` whose locks we hold.
     locks_held: Vec<usize>,
-    write_results: Vec<RpcResult>,
+    /// Per-write-set-item commit result (filled for representatives).
+    write_results: Vec<Option<RpcResult>>,
+    /// Emitted-but-uncompleted actions of the current phase.
+    outstanding: u32,
+    /// First failure observed; acted on once the phase drains.
+    fail: Option<AbortReason>,
     /// One-sided reads issued (stats).
     pub reads_issued: u32,
     /// RPCs issued (stats).
@@ -176,208 +235,314 @@ impl TxEngine {
     /// Begin a transaction over the given sets.
     pub fn begin(tx_id: u64, read_set: Vec<TxItem>, write_set: Vec<TxItem>) -> Self {
         assert!(tx_id != 0, "tx id 0 is the unlocked marker");
+        assert!(
+            read_set.len() < LOCK_TAG as usize && write_set.len() < LOCK_TAG as usize,
+            "item sets exceed the tag space"
+        );
+        let is_dup = |a: &TxItem, b: &TxItem| {
+            a.kind == WriteKind::Update
+                && b.kind == WriteKind::Update
+                && a.obj == b.obj
+                && a.key == b.key
+        };
+        let lock_issue: Vec<bool> = (0..write_set.len())
+            .map(|j| {
+                write_set[j].kind == WriteKind::Update
+                    && !write_set[..j].iter().any(|w| is_dup(w, &write_set[j]))
+            })
+            .collect();
+        let commit_rep: Vec<usize> = (0..write_set.len())
+            .map(|j| {
+                if write_set[j].kind != WriteKind::Update {
+                    return j;
+                }
+                (0..write_set.len())
+                    .rev()
+                    .find(|&k| is_dup(&write_set[k], &write_set[j]))
+                    .unwrap_or(j)
+            })
+            .collect();
+        let n_reads = read_set.len();
+        let n_writes = write_set.len();
         TxEngine {
             tx_id,
             read_set,
             write_set,
-            phase: Phase::ExecuteRead(0),
-            lookup: None,
-            read_meta: Vec::new(),
+            phase: Phase::Execute,
+            started: false,
+            lookups: (0..n_reads).map(|_| None).collect(),
+            read_meta: vec![None; n_reads],
+            lock_issue,
+            commit_rep,
             locks_held: Vec::new(),
-            write_results: Vec::new(),
+            write_results: vec![None; n_writes],
+            outstanding: 0,
+            fail: None,
             reads_issued: 0,
             rpcs_issued: 0,
         }
     }
 
-    /// Drive the engine: `None` first, then each completion of the
-    /// previously returned action.
-    pub fn advance(&mut self, cb: &mut impl DsCallbacks, input: Option<TxInput>) -> TxAction {
-        let action = self.step(cb, input);
-        match &action {
-            TxAction::Read { .. } => self.reads_issued += 1,
-            TxAction::Rpc { .. } => self.rpcs_issued += 1,
-            TxAction::Done(_) => {}
+    /// Emit the execute-phase batch: every read-set lookup's first action
+    /// plus one lock-read per distinct update key, all at once. Call once.
+    pub fn start(&mut self, cb: &mut impl DsCallbacks) -> TxStep {
+        assert!(!self.started, "start called twice");
+        self.started = true;
+        let mut posts = Vec::new();
+        for i in 0..self.read_set.len() {
+            let (obj, key) = (self.read_set[i].obj, self.read_set[i].key);
+            let mut sm = LookupSm::new(obj, key);
+            match sm.advance(cb, None) {
+                LkAction::Read { obj, key, node, addr, len } => {
+                    posts.push(self.read_post(i as u32, obj, key, node, addr, len));
+                }
+                LkAction::Rpc { node, req } => posts.push(self.rpc_post(i as u32, node, req)),
+                LkAction::Done(_) => unreachable!("lookup cannot finish without I/O"),
+            }
+            self.lookups[i] = Some(sm);
         }
-        action
+        for j in 0..self.write_set.len() {
+            if !self.lock_issue[j] {
+                continue;
+            }
+            let (obj, key) = (self.write_set[j].obj, self.write_set[j].key);
+            let node = cb.owner(obj, key);
+            let req =
+                RpcRequest { obj, key, op: RpcOp::LockRead, tx_id: self.tx_id, value: None };
+            posts.push(self.rpc_post(LOCK_TAG | j as u32, node, req));
+        }
+        if posts.is_empty() {
+            return self.advance_phase(cb);
+        }
+        self.outstanding = posts.len() as u32;
+        TxStep::Issue(posts)
     }
 
-    fn step(&mut self, cb: &mut impl DsCallbacks, mut input: Option<TxInput>) -> TxAction {
+    /// Feed the completion of the action posted with `tag`. Completions
+    /// may arrive in any order within a phase.
+    pub fn complete(&mut self, cb: &mut impl DsCallbacks, tag: u32, input: TxInput) -> TxStep {
+        assert!(self.outstanding > 0, "completion without outstanding actions");
+        self.outstanding -= 1;
+        let mut posts = Vec::new();
+        match self.phase {
+            Phase::Execute => {
+                if tag & LOCK_TAG != 0 {
+                    let j = (tag & !LOCK_TAG) as usize;
+                    let resp = match input {
+                        TxInput::Rpc(r) => r,
+                        TxInput::Read(_) => panic!("lock-read completions are RPCs"),
+                    };
+                    match resp.result {
+                        RpcResult::Value { .. } => self.locks_held.push(j),
+                        RpcResult::LockConflict => {
+                            self.fail.get_or_insert(AbortReason::LockConflict);
+                        }
+                        // Missing item: nothing locked; commit will surface
+                        // NotFound for this write.
+                        RpcResult::NotFound => {}
+                        other => panic!("unexpected lock-read result {other:?}"),
+                    }
+                } else {
+                    let i = tag as usize;
+                    // Once aborting, absorb the completion but issue no
+                    // follow-up: the lookup's result no longer matters.
+                    if self.fail.is_none() {
+                        let lk_input = match input {
+                            TxInput::Read(v) => LkInput::Read(v),
+                            TxInput::Rpc(r) => LkInput::Rpc(r),
+                        };
+                        let mut sm =
+                            self.lookups[i].take().expect("completion without a lookup machine");
+                        match sm.advance(cb, Some(lk_input)) {
+                            LkAction::Read { obj, key, node, addr, len } => {
+                                posts.push(self.read_post(tag, obj, key, node, addr, len));
+                                self.lookups[i] = Some(sm);
+                            }
+                            LkAction::Rpc { node, req } => {
+                                posts.push(self.rpc_post(tag, node, req));
+                                self.lookups[i] = Some(sm);
+                            }
+                            LkAction::Done(res) => {
+                                self.read_meta[i] = Some(ReadMeta {
+                                    version: res.version,
+                                    addr: res.addr,
+                                    node: res.node,
+                                    found: res.found,
+                                });
+                            }
+                        }
+                    } else {
+                        self.lookups[i] = None;
+                    }
+                }
+            }
+            Phase::Validate => {
+                let i = tag as usize;
+                let view = match input {
+                    TxInput::Read(ReadView::Item(v)) => v,
+                    other => panic!("validation expects item reads, got {other:?}"),
+                };
+                if self.fail.is_none() {
+                    let meta = self.read_meta[i].expect("validated item has execute meta");
+                    if let Err(reason) = Self::check_validation(&self.read_set[i], meta, view) {
+                        self.fail = Some(reason);
+                    }
+                }
+            }
+            Phase::Commit => {
+                let j = tag as usize;
+                let resp = match input {
+                    TxInput::Rpc(r) => r,
+                    TxInput::Read(_) => panic!("unexpected read in commit"),
+                };
+                self.write_results[j] = Some(resp.result);
+            }
+            Phase::Abort(_) => {
+                // Unlock responses carry no decision-relevant payload.
+            }
+            Phase::Done => panic!("transaction already finished"),
+        }
+        self.outstanding += posts.len() as u32;
+        if self.outstanding > 0 {
+            return TxStep::Issue(posts);
+        }
+        debug_assert!(posts.is_empty());
+        self.advance_phase(cb)
+    }
+
+    /// The current phase drained: move to the next one and emit its batch.
+    fn advance_phase(&mut self, cb: &mut impl DsCallbacks) -> TxStep {
         loop {
+            if let Some(reason) = self.fail.take() {
+                self.phase = Phase::Abort(reason);
+                let posts = self.unlock_posts(cb);
+                if posts.is_empty() {
+                    self.phase = Phase::Done;
+                    return TxStep::Done(TxOutcome::Aborted(reason));
+                }
+                self.outstanding = posts.len() as u32;
+                return TxStep::Issue(posts);
+            }
             match self.phase {
-                Phase::ExecuteRead(i) => {
-                    if i >= self.read_set.len() {
-                        self.phase = Phase::ExecuteWrite(0);
-                        continue;
-                    }
-                    let lk_input = match input.take() {
-                        Some(TxInput::Read(v)) => Some(LkInput::Read(v)),
-                        Some(TxInput::Rpc(r)) => Some(LkInput::Rpc(r)),
-                        None => None,
-                    };
-                    if self.lookup.is_none() {
-                        debug_assert!(lk_input.is_none(), "input without outstanding lookup");
-                        let item = &self.read_set[i];
-                        self.lookup = Some(LookupSm::new(item.obj, item.key));
-                    }
-                    let sm = self.lookup.as_mut().unwrap();
-                    match sm.advance(cb, lk_input) {
-                        LkAction::Read { obj, key, node, addr, len } => {
-                            return TxAction::Read { obj, key, node, addr, len };
-                        }
-                        LkAction::Rpc { node, req } => return TxAction::Rpc { node, req },
-                        LkAction::Done(res) => {
-                            self.read_meta.push(ReadMeta {
-                                version: res.version,
-                                addr: res.addr,
-                                node: res.node,
-                                found: res.found,
-                            });
-                            self.lookup = None;
-                            self.phase = Phase::ExecuteRead(i + 1);
-                        }
+                Phase::Execute => {
+                    self.phase = Phase::Validate;
+                    let posts = self.validate_posts();
+                    if !posts.is_empty() {
+                        self.outstanding = posts.len() as u32;
+                        return TxStep::Issue(posts);
                     }
                 }
-                Phase::ExecuteWrite(i) => {
-                    if let Some(inp) = input.take() {
-                        // Completion of the LockRead issued for item i.
-                        let resp = match inp {
-                            TxInput::Rpc(r) => r,
-                            TxInput::Read(_) => panic!("unexpected read in execute-write"),
-                        };
-                        match resp.result {
-                            RpcResult::Value { .. } => {
-                                self.locks_held.push(i);
-                                self.phase = Phase::ExecuteWrite(i + 1);
-                            }
-                            RpcResult::LockConflict => {
-                                self.phase = Phase::AbortUnlock(0, AbortReason::LockConflict);
-                            }
-                            RpcResult::NotFound => {
-                                // Missing item: nothing locked; commit will
-                                // surface NotFound for this write.
-                                self.phase = Phase::ExecuteWrite(i + 1);
-                            }
-                            other => panic!("unexpected lock-read result {other:?}"),
-                        }
-                        continue;
+                Phase::Validate => {
+                    self.phase = Phase::Commit;
+                    let posts = self.commit_posts(cb);
+                    if !posts.is_empty() {
+                        self.outstanding = posts.len() as u32;
+                        return TxStep::Issue(posts);
                     }
-                    // Skip items that don't need an execution-phase lock.
-                    let mut j = i;
-                    while j < self.write_set.len() && self.write_set[j].kind != WriteKind::Update
-                    {
-                        j += 1;
-                    }
-                    if j >= self.write_set.len() {
-                        self.phase = Phase::Validate(0);
-                        continue;
-                    }
-                    self.phase = Phase::ExecuteWrite(j);
-                    let item = &self.write_set[j];
-                    let node = cb.owner(item.obj, item.key);
-                    return TxAction::Rpc {
-                        node,
-                        req: RpcRequest {
-                            obj: item.obj,
-                            key: item.key,
-                            op: RpcOp::LockRead,
-                            tx_id: self.tx_id,
-                            value: None,
-                        },
-                    };
                 }
-                Phase::Validate(i) => {
-                    if let Some(inp) = input.take() {
-                        let view = match inp {
-                            TxInput::Read(ReadView::Item(v)) => v,
-                            other => panic!("validation expects item reads, got {other:?}"),
-                        };
-                        let meta = self.read_meta[i];
-                        match Self::check_validation(&self.read_set[i], meta, view) {
-                            Ok(()) => self.phase = Phase::Validate(i + 1),
-                            Err(reason) => self.phase = Phase::AbortUnlock(0, reason),
-                        }
-                        continue;
-                    }
-                    if i >= self.read_set.len() {
-                        self.phase = Phase::Commit(0);
-                        continue;
-                    }
-                    let meta = self.read_meta[i];
-                    let skip = !meta.found
-                        || meta.addr.is_none()
-                        || self.in_write_set(&self.read_set[i]);
-                    if skip {
-                        self.phase = Phase::Validate(i + 1);
-                        continue;
-                    }
-                    return TxAction::Read {
-                        obj: self.read_set[i].obj,
-                        key: self.read_set[i].key,
-                        node: meta.node,
-                        addr: meta.addr.unwrap(),
-                        len: VALIDATE_READ_BYTES,
-                    };
+                Phase::Commit => {
+                    self.phase = Phase::Done;
+                    return TxStep::Done(self.committed_outcome());
                 }
-                Phase::Commit(i) => {
-                    if let Some(inp) = input.take() {
-                        let resp = match inp {
-                            TxInput::Rpc(r) => r,
-                            TxInput::Read(_) => panic!("unexpected read in commit"),
-                        };
-                        self.write_results.push(resp.result);
-                        self.phase = Phase::Commit(i + 1);
-                        continue;
-                    }
-                    if i >= self.write_set.len() {
-                        self.phase = Phase::Done;
-                        return TxAction::Done(TxOutcome::Committed {
-                            write_results: std::mem::take(&mut self.write_results),
-                        });
-                    }
-                    let item = &self.write_set[i];
-                    let node = cb.owner(item.obj, item.key);
-                    let op = match item.kind {
-                        WriteKind::Update => RpcOp::UpdateUnlock,
-                        WriteKind::Insert => RpcOp::Insert,
-                        WriteKind::Delete => RpcOp::Delete,
-                    };
-                    return TxAction::Rpc {
-                        node,
-                        req: RpcRequest {
-                            obj: item.obj,
-                            key: item.key,
-                            op,
-                            tx_id: self.tx_id,
-                            value: item.value.clone(),
-                        },
-                    };
-                }
-                Phase::AbortUnlock(j, reason) => {
-                    if input.take().is_some() {
-                        self.phase = Phase::AbortUnlock(j + 1, reason);
-                        continue;
-                    }
-                    if j >= self.locks_held.len() {
-                        self.phase = Phase::Done;
-                        return TxAction::Done(TxOutcome::Aborted(reason));
-                    }
-                    let item = &self.write_set[self.locks_held[j]];
-                    let node = cb.owner(item.obj, item.key);
-                    return TxAction::Rpc {
-                        node,
-                        req: RpcRequest {
-                            obj: item.obj,
-                            key: item.key,
-                            op: RpcOp::Unlock,
-                            tx_id: self.tx_id,
-                            value: None,
-                        },
-                    };
+                Phase::Abort(reason) => {
+                    self.phase = Phase::Done;
+                    return TxStep::Done(TxOutcome::Aborted(reason));
                 }
                 Phase::Done => panic!("transaction already finished"),
             }
         }
+    }
+
+    /// All validation reads, one batch (drivers doorbell them per node).
+    fn validate_posts(&mut self) -> Vec<TxPost> {
+        let mut posts = Vec::new();
+        for i in 0..self.read_set.len() {
+            let meta = self.read_meta[i].expect("execute phase resolved every read");
+            let skip =
+                !meta.found || meta.addr.is_none() || self.in_write_set(&self.read_set[i]);
+            if skip {
+                continue;
+            }
+            let (obj, key) = (self.read_set[i].obj, self.read_set[i].key);
+            posts.push(self.read_post(
+                i as u32,
+                obj,
+                key,
+                meta.node,
+                meta.addr.unwrap(),
+                VALIDATE_READ_BYTES,
+            ));
+        }
+        posts
+    }
+
+    /// All commit RPCs, one batch (one per representative write item).
+    fn commit_posts(&mut self, cb: &mut impl DsCallbacks) -> Vec<TxPost> {
+        let mut posts = Vec::new();
+        for j in 0..self.write_set.len() {
+            if self.commit_rep[j] != j {
+                continue;
+            }
+            let (obj, key, kind) =
+                (self.write_set[j].obj, self.write_set[j].key, self.write_set[j].kind);
+            let node = cb.owner(obj, key);
+            let op = match kind {
+                WriteKind::Update => RpcOp::UpdateUnlock,
+                WriteKind::Insert => RpcOp::Insert,
+                WriteKind::Delete => RpcOp::Delete,
+            };
+            let value = self.write_set[j].value.clone();
+            let req = RpcRequest { obj, key, op, tx_id: self.tx_id, value };
+            posts.push(self.rpc_post(j as u32, node, req));
+        }
+        posts
+    }
+
+    /// All unlock RPCs for held locks, one batch.
+    fn unlock_posts(&mut self, cb: &mut impl DsCallbacks) -> Vec<TxPost> {
+        let targets: Vec<(ObjectId, u64)> = self
+            .locks_held
+            .iter()
+            .map(|&j| (self.write_set[j].obj, self.write_set[j].key))
+            .collect();
+        targets
+            .into_iter()
+            .enumerate()
+            .map(|(p, (obj, key))| {
+                let node = cb.owner(obj, key);
+                let req =
+                    RpcRequest { obj, key, op: RpcOp::Unlock, tx_id: self.tx_id, value: None };
+                self.rpc_post(p as u32, node, req)
+            })
+            .collect()
+    }
+
+    fn committed_outcome(&mut self) -> TxOutcome {
+        let write_results = (0..self.write_set.len())
+            .map(|j| {
+                let rep = self.commit_rep[j];
+                self.write_results[rep].clone().expect("representative commit op resolved")
+            })
+            .collect();
+        TxOutcome::Committed { write_results }
+    }
+
+    fn read_post(
+        &mut self,
+        tag: u32,
+        obj: ObjectId,
+        key: u64,
+        node: u32,
+        addr: RemoteAddr,
+        len: u32,
+    ) -> TxPost {
+        self.reads_issued += 1;
+        TxPost { tag, op: TxOp::Read { obj, key, node, addr, len } }
+    }
+
+    fn rpc_post(&mut self, tag: u32, node: u32, req: RpcRequest) -> TxPost {
+        self.rpcs_issued += 1;
+        TxPost { tag, op: TxOp::Rpc { node, req } }
     }
 
     fn in_write_set(&self, item: &TxItem) -> bool {
@@ -403,5 +568,255 @@ impl TxEngine {
             }
             None => Err(AbortReason::ValidationMoved),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ds::api::{LookupHint, LookupOutcome};
+    use crate::ds::mica::ITEM_HEADER;
+    use crate::mem::MrKey;
+
+    /// Single-node mock callbacks: every key lives at `key * 128` and
+    /// lookups read item headers, so the test can synthesize completions.
+    struct MockCb;
+
+    fn addr_of(key: u64) -> RemoteAddr {
+        RemoteAddr { region: MrKey(0), offset: key * 128 }
+    }
+
+    impl DsCallbacks for MockCb {
+        fn lookup_start(&mut self, _obj: ObjectId, key: u64) -> Option<LookupHint> {
+            Some(LookupHint { node: 0, addr: addr_of(key), len: ITEM_HEADER })
+        }
+        fn lookup_end_read(&mut self, _obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+            match view {
+                ReadView::Item(Some(v)) if v.key == key => LookupOutcome::Hit {
+                    version: v.version,
+                    addr: addr_of(key),
+                    locked: v.locked,
+                },
+                ReadView::Item(_) => LookupOutcome::Absent,
+                other => panic!("mock serves item reads only, got {other:?}"),
+            }
+        }
+        fn lookup_end_rpc(&mut self, _obj: ObjectId, _key: u64, _node: u32, _resp: &RpcResponse) {}
+        fn owner(&self, _obj: ObjectId, _key: u64) -> u32 {
+            0
+        }
+    }
+
+    const KV: ObjectId = ObjectId(0);
+
+    fn value_resp(version: Version) -> TxInput {
+        TxInput::Rpc(RpcResponse::inline(RpcResult::Value {
+            version,
+            addr: addr_of(0),
+            value: None,
+            locked: false,
+        }))
+    }
+
+    fn item_read(key: u64, version: Version, locked: bool) -> TxInput {
+        TxInput::Read(ReadView::Item(Some(ItemView { key, version, locked })))
+    }
+
+    fn issued(step: TxStep) -> Vec<TxPost> {
+        match step {
+            TxStep::Issue(p) => p,
+            TxStep::Done(o) => panic!("expected actions, transaction finished: {o:?}"),
+        }
+    }
+
+    fn finished(step: TxStep) -> TxOutcome {
+        match step {
+            TxStep::Done(o) => o,
+            TxStep::Issue(p) => panic!("expected completion, engine issued {p:?}"),
+        }
+    }
+
+    fn is_lock_read(p: &TxPost) -> bool {
+        matches!(&p.op, TxOp::Rpc { req, .. } if req.op == RpcOp::LockRead)
+    }
+
+    #[test]
+    fn write_only_tx_posts_all_locks_then_all_commits() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            1,
+            vec![],
+            vec![TxItem::update(KV, 5), TxItem::update(KV, 6)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 2, "both lock-reads must go out together");
+        assert!(posts.iter().all(is_lock_read));
+        assert_eq!(posts[0].tag, LOCK_TAG);
+        assert_eq!(posts[1].tag, LOCK_TAG | 1);
+        // Complete out of order.
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG | 1, value_resp(1))).is_empty());
+        let commits = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(commits.len(), 2, "commit RPCs post as one volley");
+        assert_eq!((commits[0].tag, commits[1].tag), (0, 1));
+        // Out-of-order commit completions.
+        assert!(issued(tx.complete(&mut cb, 1, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))))
+            .is_empty());
+        let out = finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert_eq!(out, TxOutcome::Committed { write_results: vec![RpcResult::Ok, RpcResult::Ok] });
+        assert_eq!(tx.rpcs_issued, 4);
+        assert_eq!(tx.reads_issued, 0);
+    }
+
+    #[test]
+    fn duplicate_update_keys_lock_once_and_last_value_wins() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            2,
+            vec![],
+            vec![
+                TxItem::update(KV, 5).with_value(vec![1u8; 8]),
+                TxItem::update(KV, 5).with_value(vec![2u8; 8]),
+            ],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 1, "duplicate update keys must lock once");
+        assert_eq!(posts[0].tag, LOCK_TAG);
+        let commits = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(commits.len(), 1, "one UpdateUnlock per distinct key");
+        assert_eq!(commits[0].tag, 1, "the last duplicate carries the commit");
+        match &commits[0].op {
+            TxOp::Rpc { req, .. } => {
+                assert_eq!(req.op, RpcOp::UpdateUnlock);
+                assert_eq!(req.value.as_deref(), Some(&[2u8; 8][..]), "last value wins");
+            }
+            other => panic!("expected RPC, got {other:?}"),
+        }
+        let out =
+            finished(tx.complete(&mut cb, 1, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        match out {
+            TxOutcome::Committed { write_results } => {
+                assert_eq!(write_results, vec![RpcResult::Ok, RpcResult::Ok]);
+            }
+            other => panic!("expected commit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lock_conflict_drains_then_unlocks_held_locks() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            3,
+            vec![],
+            vec![TxItem::update(KV, 1), TxItem::update(KV, 2)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 2);
+        // First lock acquired, second conflicts: the engine must wait for
+        // both completions, then release the one lock it holds.
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        let unlocks = issued(tx.complete(
+            &mut cb,
+            LOCK_TAG | 1,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::LockConflict)),
+        ));
+        assert_eq!(unlocks.len(), 1, "exactly the held lock is released");
+        match &unlocks[0].op {
+            TxOp::Rpc { req, .. } => {
+                assert_eq!(req.op, RpcOp::Unlock);
+                assert_eq!(req.key, 1);
+            }
+            other => panic!("expected unlock RPC, got {other:?}"),
+        }
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::LockConflict));
+    }
+
+    #[test]
+    fn read_write_tx_batches_validation_reads() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            4,
+            vec![TxItem::read(KV, 7), TxItem::read(KV, 8)],
+            vec![TxItem::update(KV, 9)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 3, "two lookups + one lock-read, all together");
+        // Lock lands first, then the reads out of order.
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        assert!(issued(tx.complete(&mut cb, 1, item_read(8, 3, false))).is_empty());
+        let validates = issued(tx.complete(&mut cb, 0, item_read(7, 2, false)));
+        assert_eq!(validates.len(), 2, "all validation reads go out as one batch");
+        for v in &validates {
+            match &v.op {
+                TxOp::Read { len, .. } => assert_eq!(*len, VALIDATE_READ_BYTES),
+                other => panic!("validation must be a read, got {other:?}"),
+            }
+        }
+        // Validate out of order; versions unchanged.
+        assert!(issued(tx.complete(&mut cb, 1, item_read(8, 3, false))).is_empty());
+        let commits = issued(tx.complete(&mut cb, 0, item_read(7, 2, false)));
+        assert_eq!(commits.len(), 1);
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert_eq!(tx.reads_issued, 4, "2 execute reads + 2 validation reads");
+        assert_eq!(tx.rpcs_issued, 2, "1 lock-read + 1 commit");
+    }
+
+    #[test]
+    fn validation_version_change_aborts_after_drain() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            5,
+            vec![TxItem::read(KV, 7), TxItem::read(KV, 8)],
+            vec![TxItem::update(KV, 9)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 3);
+        assert!(issued(tx.complete(&mut cb, 0, item_read(7, 2, false))).is_empty());
+        assert!(issued(tx.complete(&mut cb, 1, item_read(8, 3, false))).is_empty());
+        let validates = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(validates.len(), 2);
+        // Key 7 changed under us; the failure is noted but the engine keeps
+        // absorbing the other outstanding validation read before aborting.
+        assert!(issued(tx.complete(&mut cb, 0, item_read(7, 9, false))).is_empty());
+        let unlocks = issued(tx.complete(&mut cb, 1, item_read(8, 3, false)));
+        assert_eq!(unlocks.len(), 1, "held write lock released on abort");
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationVersion));
+    }
+
+    #[test]
+    fn own_write_set_items_skip_validation() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            6,
+            vec![TxItem::read(KV, 4)],
+            vec![TxItem::update(KV, 4)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 2);
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        // Execute read resolves; item is in our write set, so no validation
+        // read is needed and the engine jumps straight to commit.
+        let commits = issued(tx.complete(&mut cb, 0, item_read(4, 1, true)));
+        assert_eq!(commits.len(), 1);
+        match &commits[0].op {
+            TxOp::Rpc { req, .. } => assert_eq!(req.op, RpcOp::UpdateUnlock),
+            other => panic!("expected commit RPC, got {other:?}"),
+        }
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn empty_tx_commits_immediately() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(7, vec![], vec![]);
+        let out = finished(tx.start(&mut cb));
+        assert_eq!(out, TxOutcome::Committed { write_results: vec![] });
     }
 }

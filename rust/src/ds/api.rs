@@ -84,6 +84,12 @@ pub enum RpcResult {
         addr: RemoteAddr,
         /// Value bytes (live mode only).
         value: Option<Vec<u8>>,
+        /// Item was write-locked by a *foreign* transaction when served.
+        /// Carried on the wire so RPC reads of unmirrored chain items can
+        /// still answer OCC validation (a one-sided read would have seen
+        /// the lock bit in the item header); always `false` on a
+        /// successful LockRead — the lock is ours.
+        locked: bool,
     },
     /// Item not present.
     NotFound,

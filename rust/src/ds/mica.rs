@@ -322,6 +322,7 @@ impl MicaTable {
                     version: slot.version,
                     addr,
                     value: slot.value.clone().map(|b| b.to_vec()),
+                    locked: slot.lock_tx != 0,
                 },
                 hops,
             ),
@@ -343,6 +344,7 @@ impl MicaTable {
                             version: slot.version,
                             addr,
                             value: slot.value.clone().map(|b| b.to_vec()),
+                            locked: false,
                         },
                         0,
                     )
@@ -592,6 +594,34 @@ impl MicaTable {
     pub fn bucket_index_of(&self, key: u64) -> u64 {
         self.bucket_index(key)
     }
+
+    /// Offset (within the bucket region) and wire image of `key`'s inline
+    /// slot — the unit a slot-local mutation (lock/unlock/update) dirties:
+    /// `ITEM_HEADER` plus the value bytes. `None` for chained or absent
+    /// keys; callers then fall back to mirroring the whole bucket image.
+    /// The slot-0 chain flag is preserved, so a partial mirror can never
+    /// hide an overflow chain from one-sided readers.
+    pub fn dirty_slot_image(&self, key: u64) -> Option<(u64, Vec<u8>)> {
+        let bucket = self.bucket_index(key);
+        let has_chain = self.chain_heads[bucket as usize] != NIL;
+        for (i, si) in self.slot_range(bucket).enumerate() {
+            if self.slots[si].key != key {
+                continue;
+            }
+            let isz = self.cfg.item_size() as usize;
+            let s = &self.slots[si];
+            let mut flags = if s.lock_tx != 0 { FLAG_LOCKED } else { 0 };
+            if i == 0 && has_chain {
+                flags |= FLAG_HAS_CHAIN;
+            }
+            let mut out = vec![0u8; isz];
+            write_item_image(&mut out, s.key, s.version, flags, s.value.as_deref());
+            let off =
+                bucket * self.cfg.bucket_bytes() as u64 + i as u64 * self.cfg.item_size() as u64;
+            return Some((off, out));
+        }
+        None
+    }
 }
 
 /// Client-side resolver for the distributed MICA table: implements
@@ -819,6 +849,22 @@ mod tests {
     }
 
     #[test]
+    fn get_reports_foreign_lock_state() {
+        // A plain read (the RPC fallback for chained items) must carry the
+        // lock bit: OCC validation over RPC depends on it.
+        let (mut t, mut a, mut r) = setup(1, 1);
+        t.insert(1, None, &mut a, &mut r);
+        t.insert(2, None, &mut a, &mut r); // chained
+        assert!(matches!(t.get(2).0, RpcResult::Value { locked: false, .. }));
+        let _ = t.lock_read(2, 42);
+        assert!(matches!(t.get(2).0, RpcResult::Value { locked: true, .. }));
+        // The holder's own lock-read never reports a foreign lock.
+        assert!(matches!(t.lock_read(2, 42).0, RpcResult::Value { locked: false, .. }));
+        t.unlock(2, 42);
+        assert!(matches!(t.get(2).0, RpcResult::Value { locked: false, .. }));
+    }
+
+    #[test]
     fn delete_inline_and_chained() {
         let (mut t, mut a, mut r) = setup(1, 1);
         for k in 1..=3u64 {
@@ -892,6 +938,38 @@ mod tests {
         }
         // Far fewer chains after resize.
         assert!(t.inline_fraction() > 0.9);
+    }
+
+    #[test]
+    fn dirty_slot_image_matches_bucket_image_slice() {
+        let mut regions = RegionTable::new();
+        let cfg = MicaConfig { buckets: 4, width: 2, value_len: 16, store_values: true };
+        let mut alloc =
+            ContiguousAllocator::new(64 << 20, 4, RegionMode::Virtual(PageSize::Huge2M));
+        let mut t = MicaTable::new(cfg.clone(), &mut regions, RegionMode::Virtual(PageSize::Huge2M));
+        for k in 1..=6u64 {
+            t.insert(k, Some(&[k as u8; 16]), &mut alloc, &mut regions);
+        }
+        let _ = t.lock_read(3, 77); // lock bit must show up in the slot image
+        let isz = cfg.item_size() as u64;
+        let bb = cfg.bucket_bytes() as u64;
+        for k in 1..=6u64 {
+            let Some((off, image)) = t.dirty_slot_image(k) else {
+                // Chained key: no inline slot to mirror.
+                continue;
+            };
+            assert_eq!(image.len() as u64, isz);
+            let bucket = off / bb;
+            let within = (off % bb) / isz;
+            let full = t.bucket_image(bucket);
+            let lo = (within * isz) as usize;
+            assert_eq!(
+                &full[lo..lo + isz as usize],
+                &image[..],
+                "slot image must be the exact slice of the bucket image for key {k}"
+            );
+        }
+        assert!(t.dirty_slot_image(999).is_none(), "absent key has no slot");
     }
 
     #[test]

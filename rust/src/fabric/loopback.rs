@@ -102,6 +102,10 @@ struct SlotInner {
     req: Vec<u8>,
     /// Reply bytes, written in place by the server.
     resp: Vec<u8>,
+    /// 32-bit immediate attached by the poster (`rdma_write_with_imm`'s
+    /// immediate value): carries the poster's correlation cookie to the
+    /// responder without parsing the payload.
+    imm: u32,
 }
 
 /// One preallocated ring-buffer slot of a [`RingConn`]: the request and
@@ -136,6 +140,11 @@ impl SlotHandle {
     /// Sender node id.
     pub fn from(&self) -> u32 {
         self.0.from
+    }
+
+    /// Immediate value the poster attached (see [`RingConn::post_imm`]).
+    pub fn imm(&self) -> u32 {
+        self.0.inner.lock().unwrap().imm
     }
 
     /// Run `f(request_bytes, reply_buffer)` and complete the slot. The
@@ -195,6 +204,13 @@ impl RingConn {
     /// slot outstanding) until `take_reply` frees one — backpressure, not
     /// drops. Returns a token to poll/harvest the reply with.
     pub fn post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
+        self.post_imm(lane, 0, fill)
+    }
+
+    /// [`Self::post`] with a 32-bit immediate: the write-with-immediate
+    /// value the responder observes alongside the slot (correlation
+    /// cookies for multiplexed posters).
+    pub fn post_imm(&self, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
         let idx = {
             let mut free = self.free.lock().unwrap();
             loop {
@@ -204,23 +220,37 @@ impl RingConn {
                 free = self.freed.wait(free).unwrap();
             }
         };
-        self.submit(idx, lane, fill);
+        self.submit(idx, lane, imm, fill);
         SlotToken(idx)
     }
 
     /// Non-blocking [`Self::post`]: `None` when the ring is full.
     pub fn try_post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> Option<SlotToken> {
+        self.try_post_imm(lane, 0, fill)
+    }
+
+    /// Non-blocking [`Self::post_imm`]: `None` when the ring is full.
+    /// Posters that must never block (a scheduler that also harvests the
+    /// replies on the same thread would deadlock a full ring) queue on
+    /// `None` and retry after harvesting.
+    pub fn try_post_imm(
+        &self,
+        lane: u32,
+        imm: u32,
+        fill: impl FnOnce(&mut Vec<u8>),
+    ) -> Option<SlotToken> {
         let idx = self.free.lock().unwrap().pop()?;
-        self.submit(idx, lane, fill);
+        self.submit(idx, lane, imm, fill);
         Some(SlotToken(idx))
     }
 
-    fn submit(&self, idx: usize, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) {
+    fn submit(&self, idx: usize, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) {
         let slot = &self.slots[idx];
         {
             let mut g = slot.inner.lock().unwrap();
             g.req.clear();
             fill(&mut g.req);
+            g.imm = imm;
             g.stage = SlotStage::Posted;
         }
         self.fabric.endpoints[self.node as usize].lanes[lane as usize]
@@ -373,6 +403,7 @@ impl LoopbackFabric {
                         stage: SlotStage::Free,
                         req: Vec::with_capacity(slot_bytes),
                         resp: Vec::with_capacity(slot_bytes),
+                        imm: 0,
                     }),
                     done: Condvar::new(),
                 })
@@ -552,6 +583,49 @@ mod tests {
             assert_eq!(reply, vec![i + 1, i]);
         }
         server.join().unwrap();
+    }
+
+    #[test]
+    fn ring_immediate_travels_with_the_slot() {
+        let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let rx = rxs.remove(1).remove(0);
+        let server = thread::spawn(move || {
+            let mut imms = Vec::new();
+            for _ in 0..3 {
+                match rx.recv().unwrap() {
+                    RpcEnvelope::Slot(slot) => {
+                        imms.push(slot.imm());
+                        slot.serve(|req, out| out.extend_from_slice(req));
+                    }
+                    RpcEnvelope::Message { .. } => panic!("expected slot"),
+                }
+            }
+            imms
+        });
+        let conn = fabric.connect(0, 1, 4, 64);
+        let toks: Vec<SlotToken> = [0xA0u32, 0xB1, 0xC2]
+            .iter()
+            .map(|&imm| conn.post_imm(0, imm, |b| b.push(imm as u8)))
+            .collect();
+        for tok in toks {
+            conn.take_reply(tok, |_| ());
+        }
+        assert_eq!(server.join().unwrap(), vec![0xA0, 0xB1, 0xC2]);
+        // Plain post carries immediate 0.
+        let (fabric2, mut rxs2) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let rx2 = rxs2.remove(1).remove(0);
+        let h = thread::spawn(move || match rx2.recv().unwrap() {
+            RpcEnvelope::Slot(slot) => {
+                let imm = slot.imm();
+                slot.serve(|_, out| out.push(1));
+                imm
+            }
+            RpcEnvelope::Message { .. } => panic!("expected slot"),
+        });
+        let conn2 = fabric2.connect(0, 1, 1, 64);
+        let tok = conn2.post(0, |b| b.push(9));
+        conn2.take_reply(tok, |_| ());
+        assert_eq!(h.join().unwrap(), 0);
     }
 
     #[test]

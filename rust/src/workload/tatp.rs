@@ -38,6 +38,15 @@ pub fn cf_key(s_id: u64, sf_type: u64, start_time: u64) -> u64 {
     sf_key(s_id, sf_type) * 3 + start_time / 8
 }
 
+/// Flatten a `(table, key)` pair onto a single-object keyspace (the live
+/// loopback cluster serves one MICA table per node): the object id rides
+/// in the low two bits, keeping the four tables disjoint. Every TATP key
+/// is ≥ 1, so flattened keys are nonzero (0 is the empty-slot marker).
+pub fn flat_key(obj: ObjectId, key: u64) -> u64 {
+    debug_assert!(obj.0 < 4 && key >= 1);
+    key * 4 + obj.0 as u64
+}
+
 /// The seven TATP transaction types.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TatpKind {
@@ -76,6 +85,30 @@ pub struct TatpTx {
     pub read_set: Vec<TxItem>,
     /// Write set.
     pub write_set: Vec<TxItem>,
+}
+
+impl TatpTx {
+    /// Project onto the single-object live keyspace: keys flattened via
+    /// [`flat_key`], write/insert items carrying `value_len`-byte values
+    /// (live tables store real bytes; the flattened key is stamped into
+    /// the first 8 bytes so overwrites are observable).
+    pub fn flatten(self, value_len: u32) -> (Vec<TxItem>, Vec<TxItem>) {
+        let flat = |item: TxItem, with_value: bool| {
+            let key = flat_key(item.obj, item.key);
+            let value = if with_value && item.kind != crate::dataplane::tx::WriteKind::Delete {
+                let mut v = vec![0u8; value_len as usize];
+                let n = v.len().min(8);
+                v[..n].copy_from_slice(&key.to_le_bytes()[..n]);
+                Some(v)
+            } else {
+                None
+            };
+            TxItem { obj: ObjectId(0), key, kind: item.kind, value }
+        };
+        let reads = self.read_set.into_iter().map(|i| flat(i, false)).collect();
+        let writes = self.write_set.into_iter().map(|i| flat(i, true)).collect();
+        (reads, writes)
+    }
 }
 
 /// Workload generator.
@@ -196,6 +229,12 @@ impl TatpPopulation {
     pub fn approx_rows(&self) -> u64 {
         self.subscribers * 10
     }
+
+    /// All rows flattened onto the single-object live keyspace (see
+    /// [`flat_key`]). Deterministic in `seed`.
+    pub fn flat_rows(&self, seed: u64) -> impl Iterator<Item = u64> + '_ {
+        self.rows(seed).map(|(obj, key)| flat_key(obj, key))
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +304,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn flat_keys_disjoint_across_tables() {
+        let mut seen = std::collections::HashSet::new();
+        for s in 1..=50u64 {
+            assert!(seen.insert(flat_key(SUBSCRIBER, s)));
+            for t in 1..=4u64 {
+                assert!(seen.insert(flat_key(ACCESS_INFO, sf_key(s, t))));
+                assert!(seen.insert(flat_key(SPECIAL_FACILITY, sf_key(s, t))));
+                for st in [0u64, 8, 16] {
+                    assert!(seen.insert(flat_key(CALL_FORWARDING, cf_key(s, t, st))));
+                }
+            }
+        }
+        assert!(seen.iter().all(|&k| k != 0), "0 is the empty-slot marker");
+    }
+
+    #[test]
+    fn flatten_attaches_values_to_writes_only() {
+        let w = TatpWorkload::new(1_000);
+        let mut rng = Pcg64::seeded(3);
+        let mut saw_write = false;
+        for _ in 0..500 {
+            let tx = w.next_tx(&mut rng);
+            let (reads, writes) = tx.flatten(32);
+            for r in &reads {
+                assert_eq!(r.obj, ObjectId(0));
+                assert!(r.value.is_none(), "read-set items carry no payload");
+            }
+            for wr in &writes {
+                assert_eq!(wr.obj, ObjectId(0));
+                match wr.kind {
+                    crate::dataplane::tx::WriteKind::Delete => assert!(wr.value.is_none()),
+                    _ => {
+                        saw_write = true;
+                        let v = wr.value.as_ref().expect("live writes carry values");
+                        assert_eq!(v.len(), 32);
+                        assert_eq!(u64::from_le_bytes(v[..8].try_into().unwrap()), wr.key);
+                    }
+                }
+            }
+        }
+        assert!(saw_write);
     }
 
     #[test]

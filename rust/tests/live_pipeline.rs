@@ -1,12 +1,14 @@
 //! Stress tests for the pipelined live dataplane: concurrent clients
-//! driving windowed batch lookups through the ring-buffer transport, and
-//! the ring's blocking (not dropping) backpressure behavior.
+//! driving windowed batch lookups and windowed transaction batches
+//! through the ring-buffer transport, interleaved-transaction invariants
+//! (clean outcomes only, no stale locks after drain), and the ring's
+//! blocking (not dropping) backpressure behavior.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use storm::dataplane::live::{LiveCluster, LOOKUP_WINDOW, RING_SLOTS};
-use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::dataplane::live::{LiveCluster, LOOKUP_WINDOW, RING_SLOTS, TX_WINDOW};
+use storm::dataplane::tx::{AbortReason, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
 use storm::ds::mica::MicaConfig;
 use storm::fabric::loopback::{LoopbackFabric, RpcEnvelope};
@@ -57,7 +59,7 @@ fn pipelined_lookups_stress_four_clients() {
         assert_eq!(h.join().unwrap(), STRESS_KEYS as usize);
     }
     let served = c.shutdown();
-    assert!(served.iter().sum::<u64>() > 0, "chained keys must have exercised RPCs");
+    assert!(served.total() > 0, "chained keys must have exercised RPCs");
 }
 
 #[test]
@@ -97,6 +99,92 @@ fn tx_commits_serialize_under_pipelined_load() {
     let bumps: u64 = results.iter().map(|r| (r.version as u64).saturating_sub(1)).sum();
     assert_eq!(bumps, total_commits, "each commit must bump exactly one version");
     c.shutdown();
+}
+
+#[test]
+fn concurrent_tx_batches_clean_outcomes_and_no_stale_locks() {
+    assert!(TX_WINDOW >= 8, "issue requires a transaction window of at least 8");
+    const KEYS: u64 = 48;
+    let c = oversub_cluster(3);
+    c.load(1..=KEYS, |_| vec![0u8; 32]);
+    let mut handles = Vec::new();
+    for id in 0..4u32 {
+        let seed = c.client_seed(id);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut commits = 0u64;
+            for round in 0..10u64 {
+                // Overlapping write sets across clients: lock conflicts and
+                // validation failures are expected, panics and hangs are not.
+                let txs: Vec<_> = (0..16u64)
+                    .map(|i| {
+                        let k1 = (i * 5 + id as u64 + round) % KEYS + 1;
+                        let k2 = (k1 + 7) % KEYS + 1;
+                        (
+                            vec![TxItem::read(ObjectId(0), k2)],
+                            vec![TxItem::update(ObjectId(0), k1).with_value(vec![id as u8; 32])],
+                        )
+                    })
+                    .collect();
+                for out in client.run_tx_batch(txs) {
+                    match out {
+                        TxOutcome::Committed { .. } => commits += 1,
+                        // The only legal aborts for overlapping read/write
+                        // sets of present keys.
+                        TxOutcome::Aborted(
+                            AbortReason::LockConflict
+                            | AbortReason::ValidationVersion
+                            | AbortReason::ValidationLocked,
+                        ) => {}
+                        TxOutcome::Aborted(other) => {
+                            panic!("unexpected abort reason {other:?}")
+                        }
+                    }
+                }
+            }
+            commits
+        }));
+    }
+    let commits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(commits > 0, "some transactions must get through");
+    // After every scheduler drained: no stale locks, and serializability's
+    // bookkeeping invariant — each commit bumped exactly one version.
+    let mut reader = c.client(0, None);
+    let keys: Vec<u64> = (1..=KEYS).collect();
+    let results = reader.lookup_batch(&keys);
+    for (r, k) in results.iter().zip(&keys) {
+        assert!(r.found, "key {k} lost");
+        assert!(!r.locked, "key {k} left locked after drain");
+    }
+    let bumps: u64 = results.iter().map(|r| (r.version as u64).saturating_sub(1)).sum();
+    assert_eq!(bumps, commits, "each commit must bump exactly one version");
+    c.shutdown();
+}
+
+#[test]
+fn tx_batch_pipelines_through_chained_keys() {
+    // Oversubscribed width-1 table: execute-phase lookups regularly fall
+    // back to RPC reads, so the scheduler multiplexes lookups, lock-reads
+    // and commits of many transactions over the same rings at once.
+    let c = oversub_cluster(2);
+    c.load(1..=STRESS_KEYS, |k| {
+        let mut v = vec![0u8; 32];
+        v[..8].copy_from_slice(&k.to_le_bytes());
+        v
+    });
+    let mut client = c.client(0, None);
+    let txs: Vec<_> = (1..=200u64)
+        .map(|k| {
+            (
+                vec![TxItem::read(ObjectId(0), k), TxItem::read(ObjectId(0), k + 300)],
+                vec![TxItem::update(ObjectId(0), k + 600).with_value(vec![9u8; 32])],
+            )
+        })
+        .collect();
+    let outcomes = client.run_tx_batch(txs);
+    assert!(outcomes.iter().all(|o| matches!(o, TxOutcome::Committed { .. })));
+    let served = c.shutdown();
+    assert!(served.total() > 0, "chained keys must have exercised the rings");
 }
 
 #[test]

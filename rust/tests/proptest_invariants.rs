@@ -237,6 +237,7 @@ fn prop_rpc_codec_roundtrip() {
                     offset: rng.next_u64() >> 8,
                 },
                 value: Some(vec![rng.next_u64() as u8; 1 + rng.gen_range(63) as usize]),
+                locked: rng.gen_range(2) == 1,
             },
             1 => RpcResult::NotFound,
             2 => RpcResult::LockConflict,
