@@ -1,9 +1,13 @@
 //! `cargo bench --bench live_throughput` — wall-clock throughput of the
 //! live loopback dataplane: batch lookups (pipelined ring-buffer path vs
 //! the sequential one-outstanding baseline), single-key transaction
-//! commits, and a TATP-style mixed transactional workload comparing the
+//! commits, a TATP-style mixed transactional workload comparing the
 //! sequential `run_tx` loop against the windowed `run_tx_batch` scheduler
-//! (`TX_WINDOW` concurrent engines per client), with abort rates.
+//! (flattened single-table compat mode, with abort rates), plus the
+//! catalog-native runs: **four-table TATP without key flattening** and
+//! **SmallBank** over the multi-object live cluster, with per-table
+//! commit/abort counters and the adaptive transaction windows the
+//! clients settled on.
 //!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
@@ -11,12 +15,15 @@
 
 use std::time::Instant;
 
+use storm::cluster::LiveServed;
 use storm::dataplane::live::{LiveCluster, TX_WINDOW};
-use storm::dataplane::tx::{TxItem, TxOutcome};
+use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
+use storm::ds::catalog::CatalogConfig;
 use storm::ds::mica::MicaConfig;
 use storm::sim::Pcg64;
-use storm::workload::tatp::{TatpPopulation, TatpWorkload};
+use storm::workload::smallbank::{self, SmallBankPopulation, SmallBankWorkload};
+use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
 
 const NODES: u32 = 4;
 const KEYS: u64 = 10_000;
@@ -173,18 +180,120 @@ fn tatp_pass(
                     count(&out);
                 }
             }
-            (commits, aborts)
+            (commits, aborts, client.tx_window() as u32)
         }));
     }
     let (mut commits, mut aborts) = (0u64, 0u64);
+    let mut windows = Vec::new();
     for h in handles {
-        let (c, a) = h.join().unwrap();
+        let (c, a, win) = h.join().unwrap();
         commits += c;
         aborts += a;
+        windows.push(win);
     }
     let rate = commits as f64 / t0.elapsed().as_secs_f64();
-    let served = cluster.shutdown();
+    let mut served = cluster.shutdown();
+    for w in windows {
+        served.record_tx_window(w);
+    }
     (rate, commits, aborts, served)
+}
+
+/// Bitmask of catalog objects a transaction touches (read or write).
+/// Supports catalogs of up to 32 objects — loudly, not by silently
+/// merging higher ids into one bit.
+fn table_mask(tx: &(Vec<TxItem>, Vec<TxItem>)) -> u32 {
+    let mut m = 0u32;
+    for item in tx.0.iter().chain(tx.1.iter()) {
+        assert!(item.obj.0 < 32, "table_mask supports catalogs up to 32 objects");
+        m |= 1u32 << item.obj.0;
+    }
+    m
+}
+
+/// One catalog-native run's results.
+struct CatalogRun {
+    rate: f64,
+    commits: u64,
+    aborts: u64,
+    /// Per object: committed / aborted transactions touching that table.
+    per_table: Vec<(u64, u64)>,
+    served: LiveServed,
+}
+
+/// Run pre-generated per-client transaction mixes over a freshly loaded
+/// catalog cluster through the windowed scheduler; counts commits and
+/// aborts per table an involved transaction touched, and collects each
+/// client's final adaptive window.
+fn catalog_pass(
+    cat: CatalogConfig,
+    rows: Vec<(ObjectId, u64)>,
+    mixes: Vec<Vec<(Vec<TxItem>, Vec<TxItem>)>>,
+    value_len: u32,
+) -> CatalogRun {
+    let ntables = cat.len();
+    let cluster = LiveCluster::start_catalog(NODES, cat);
+    cluster.load_rows(rows.into_iter(), |obj, k| stamped_value(obj, k, value_len));
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for (id, txs) in mixes.into_iter().enumerate() {
+        let seed = cluster.client_seed(id as u32 % NODES);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let masks: Vec<u32> = txs.iter().map(table_mask).collect();
+            let outs = client.run_tx_batch(txs);
+            let mut commits = 0u64;
+            let mut aborts = 0u64;
+            let mut per = vec![(0u64, 0u64); ntables];
+            for (out, mask) in outs.iter().zip(masks) {
+                let committed = matches!(out, TxOutcome::Committed { .. });
+                if committed {
+                    commits += 1;
+                } else {
+                    aborts += 1;
+                }
+                for (o, slot) in per.iter_mut().enumerate() {
+                    if mask & (1 << o) != 0 {
+                        if committed {
+                            slot.0 += 1;
+                        } else {
+                            slot.1 += 1;
+                        }
+                    }
+                }
+            }
+            (commits, aborts, per, client.tx_window() as u32)
+        }));
+    }
+    let mut commits = 0u64;
+    let mut aborts = 0u64;
+    let mut per_table = vec![(0u64, 0u64); ntables];
+    let mut windows = Vec::new();
+    for h in handles {
+        let (c, a, per, win) = h.join().unwrap();
+        commits += c;
+        aborts += a;
+        for (acc, p) in per_table.iter_mut().zip(per) {
+            acc.0 += p.0;
+            acc.1 += p.1;
+        }
+        windows.push(win);
+    }
+    let rate = commits as f64 / t0.elapsed().as_secs_f64();
+    let mut served = cluster.shutdown();
+    for w in windows {
+        served.record_tx_window(w);
+    }
+    CatalogRun { rate, commits, aborts, per_table, served }
+}
+
+fn per_table_json(names: &[&str], per: &[(u64, u64)]) -> String {
+    names
+        .iter()
+        .zip(per)
+        .map(|(n, (c, a))| format!("\"{n}\": {{\"commit_tx\": {c}, \"abort_tx\": {a}}}"))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 struct Series {
@@ -264,8 +373,68 @@ fn main() {
     );
     println!("server lane imbalance (max/mean): {:.2}", served.imbalance());
 
+    // Catalog-native runs: four-table TATP with no key flattening, and
+    // SmallBank — per-client mixes pre-generated, windowed scheduler,
+    // per-table commit/abort counters.
+    let tatp_rows: Vec<(ObjectId, u64)> =
+        TatpPopulation::new(TATP_SUBSCRIBERS).rows(7).collect();
+    let tatp_mixes: Vec<_> = (0..CLIENTS)
+        .map(|id| {
+            let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
+            let mut rng = Pcg64::seeded(0x4A11 + id as u64);
+            (0..TATP_TXS)
+                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let native = catalog_pass(
+        tatp::live_catalog(TATP_SUBSCRIBERS, TATP_VALUE_LEN),
+        tatp_rows,
+        tatp_mixes,
+        TATP_VALUE_LEN,
+    );
+    const TATP_TABLES: [&str; 4] =
+        ["subscriber", "access_info", "special_facility", "call_forwarding"];
+    println!("# TATP native (four catalog tables), {CLIENTS} clients");
+    println!(
+        "tatp native  {CLIENTS} clients  {:>12.0} commit/s   ({} commits, {} aborts)",
+        native.rate, native.commits, native.aborts
+    );
+    for (name, (c, a)) in TATP_TABLES.iter().zip(&native.per_table) {
+        println!("  table {name:<18} commit_tx {c:>7}  abort_tx {a:>5}");
+    }
+    println!("  adaptive tx windows: {:?}", native.served.tx_windows);
+
+    let sb_accounts = TATP_SUBSCRIBERS; // comparable database scale
+    let sb_rows: Vec<(ObjectId, u64)> = SmallBankPopulation::new(sb_accounts).rows().collect();
+    let sb_mixes: Vec<_> = (0..CLIENTS)
+        .map(|id| {
+            let workload = SmallBankWorkload::new(sb_accounts);
+            let mut rng = Pcg64::seeded(0x5B11 + id as u64);
+            (0..TATP_TXS)
+                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let sb = catalog_pass(
+        smallbank::live_catalog(sb_accounts, TATP_VALUE_LEN),
+        sb_rows,
+        sb_mixes,
+        TATP_VALUE_LEN,
+    );
+    const SB_TABLES: [&str; 3] = ["accounts", "savings", "checking"];
+    println!("# SmallBank (three catalog tables), {CLIENTS} clients");
+    println!(
+        "smallbank    {CLIENTS} clients  {:>12.0} commit/s   ({} commits, {} aborts)",
+        sb.rate, sb.commits, sb.aborts
+    );
+    for (name, (c, a)) in SB_TABLES.iter().zip(&sb.per_table) {
+        println!("  table {name:<18} commit_tx {c:>7}  abort_tx {a:>5}");
+    }
+    println!("  adaptive tx windows: {:?}", sb.served.tx_windows);
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
-    let json = format!(
+    let mut json = format!(
         concat!(
             "{{\n",
             "  \"bench\": \"live_throughput\",\n",
@@ -284,8 +453,8 @@ fn main() {
             "  \"tatp\": {{\"seq_1c_tx\": {ts1:.0}, \"windowed_1c_tx\": {tw1:.0}, ",
             "\"speedup_1c\": {sp1:.3}, \"seq_4c_tx\": {ts4:.0}, \"windowed_4c_tx\": {tw4:.0}, ",
             "\"speedup_4c\": {sp4:.3}, \"abort_rate_seq_4c\": {ar_s:.4}, ",
-            "\"abort_rate_windowed_4c\": {ar_w:.4}, \"lane_imbalance\": {imb:.3}}}\n",
-            "}}\n",
+            "\"abort_rate_windowed_4c\": {ar_w:.4}, \"tx_windows_4c\": {txws:?}, ",
+            "\"lane_imbalance\": {imb:.3}}},\n",
         ),
         nodes = NODES,
         keys = KEYS,
@@ -314,8 +483,40 @@ fn main() {
         sp4 = tatp_win_4c / tatp_seq_4c,
         ar_s = abort_rate(seq_aborts, seq_commits),
         ar_w = abort_rate(win_aborts, win_commits),
+        txws = served.tx_windows,
         imb = served.imbalance(),
     );
+    json.push_str(&format!(
+        concat!(
+            "  \"tatp_native\": {{\"clients\": {c}, \"subscribers\": {s}, ",
+            "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
+            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}},\n",
+        ),
+        c = CLIENTS,
+        s = TATP_SUBSCRIBERS,
+        r = native.rate,
+        cm = native.commits,
+        ab = native.aborts,
+        ar = abort_rate(native.aborts, native.commits),
+        w = native.served.tx_windows,
+        pt = per_table_json(&TATP_TABLES, &native.per_table),
+    ));
+    json.push_str(&format!(
+        concat!(
+            "  \"smallbank\": {{\"clients\": {c}, \"accounts\": {s}, ",
+            "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
+            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}}\n",
+        ),
+        c = CLIENTS,
+        s = sb_accounts,
+        r = sb.rate,
+        cm = sb.commits,
+        ab = sb.aborts,
+        ar = abort_rate(sb.aborts, sb.commits),
+        w = sb.served.tx_windows,
+        pt = per_table_json(&SB_TABLES, &sb.per_table),
+    ));
+    json.push_str("}\n");
     std::fs::write(&out, &json).expect("write bench json");
     println!("wrote {out}");
 }

@@ -11,9 +11,21 @@ use crate::sim::Nanos;
 pub struct LiveServed {
     /// Requests served, indexed `[node][lane]`.
     pub per_lane: Vec<Vec<u64>>,
+    /// Final adaptive transaction windows of the run's clients, one entry
+    /// per client that reported via [`LiveServed::record_tx_window`]
+    /// (empty when the run had no transactional clients). The live
+    /// scheduler grows the window while commits stay clean and shrinks it
+    /// on sustained aborts, so these values show where each client's
+    /// concurrency settled.
+    pub tx_windows: Vec<u32>,
 }
 
 impl LiveServed {
+    /// Record one client's final adaptive transaction window.
+    pub fn record_tx_window(&mut self, window: u32) {
+        self.tx_windows.push(window);
+    }
+
     /// Total served per node.
     pub fn node_totals(&self) -> Vec<u64> {
         self.per_lane.iter().map(|lanes| lanes.iter().sum()).collect()

@@ -27,10 +27,11 @@ use crate::dataplane::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadVie
 use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes};
 use crate::dataplane::tx::{TxEngine, TxInput, TxOp, TxPost, TxStep};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
+use crate::ds::catalog::{Catalog, CatalogConfig};
 use crate::ds::hopscotch::HopscotchTable;
-use crate::ds::mica::{owner_of, ItemView, MicaClient, MicaConfig, MicaTable};
+use crate::ds::mica::{owner_of, ItemView, MicaClient, MicaConfig};
 use crate::fabric::FabricParams;
-use crate::mem::{ContiguousAllocator, MrKey, RegionMode, RegionTable, RemoteAddr};
+use crate::mem::{MrKey, RegionMode, RemoteAddr};
 use crate::nic::{Nic, NicOp, NicSide};
 use crate::sim::{EventQueue, Histogram, MeterWindow, Nanos, Pcg64, RateMeter};
 use crate::transport::cc::{AppCc, CcParams};
@@ -217,40 +218,17 @@ impl DsCallbacks for Resolver {
 // ---------------------------------------------------------------------------
 // Per-node state.
 
+/// One simulated node's storage: the shared multi-object [`Catalog`]
+/// (the same dispatcher the reference and live drivers serve RPCs with)
+/// plus the hopscotch table the FaRM baseline reads.
 struct Store {
-    tables: Vec<MicaTable>,
+    cat: Catalog,
     hop: Option<HopscotchTable>,
-    alloc: ContiguousAllocator,
-    regions: RegionTable,
 }
 
 impl Store {
     fn serve_rpc(&mut self, req: &RpcRequest) -> RpcResponse {
-        let table = &mut self.tables[req.obj.0 as usize];
-        match req.op {
-            RpcOp::Read => {
-                let (result, hops) = table.get(req.key);
-                RpcResponse { result, hops }
-            }
-            RpcOp::LockRead => {
-                let (result, hops) = table.lock_read(req.key, req.tx_id);
-                RpcResponse { result, hops }
-            }
-            RpcOp::UpdateUnlock => {
-                RpcResponse::inline(table.update_unlock(req.key, req.tx_id, req.value.as_deref()))
-            }
-            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
-            RpcOp::Insert => RpcResponse::inline(table.insert(
-                req.key,
-                req.value.as_deref(),
-                &mut self.alloc,
-                &mut self.regions,
-            )),
-            RpcOp::Delete => {
-                let (result, hops) = table.delete(req.key, &mut self.alloc);
-                RpcResponse { result, hops }
-            }
-        }
+        self.cat.serve_rpc(req)
     }
 }
 
@@ -367,10 +345,11 @@ impl World {
                 store_values: false,
             }],
             WorkloadKind::Tatp { subscribers_per_node } => {
-                // Approximate per-node row counts: 1 / 2.5 / 2.5 / 3.75 rows
-                // per subscriber across SUB/AI/SF/CF.
+                // Approximate per-node row counts per subscriber across
+                // SUB/AI/SF/CF — the same ratios the live catalog is
+                // sized with (`tatp::live_catalog`).
                 let s = subscribers_per_node;
-                [1.0f64, 2.5, 2.5, 3.75]
+                crate::workload::tatp::ROWS_PER_SUBSCRIBER
                     .iter()
                     .map(|rows| MicaConfig {
                         buckets: cfg.buckets_per_node((s as f64 * rows).ceil() as u64),
@@ -385,19 +364,24 @@ impl World {
         // --- nodes: stores, NICs ----------------------------------------
         let mut nodes: Vec<NodeSim> = Vec::with_capacity(cfg.nodes as usize);
         for n in 0..cfg.nodes {
-            let mut regions = RegionTable::new();
-            let alloc = ContiguousAllocator::new(64 << 20, 256, region_mode);
-            let tables: Vec<MicaTable> = table_cfgs
-                .iter()
-                .map(|tc| MicaTable::new(tc.clone(), &mut regions, region_mode))
-                .collect();
+            // The node's storage catalog: the same multi-object dispatcher
+            // the reference and live drivers use (one RPC-semantics
+            // implementation for all three), with a simulator-sized chain
+            // budget. The hopscotch table and the message rings register
+            // into the catalog's region table afterwards, so NIC MTT/MPT
+            // accounting still sees every region.
+            let mut cat = Catalog::with_chunks(
+                &CatalogConfig::new(table_cfgs.clone()),
+                region_mode,
+                256,
+            );
             let hop = if mode == RMode::Farm {
                 let buckets = (cfg.keys_per_node as f64 / 0.6).ceil() as u64;
                 Some(HopscotchTable::new(
                     buckets.max(16).next_power_of_two(),
                     8,
                     128,
-                    &mut regions,
+                    &mut cat.regions,
                     region_mode,
                 ))
             } else {
@@ -406,7 +390,7 @@ impl World {
             // Message rings: per-connection receive buffers (what Fig. 7's
             // emulation multiplies alongside connections).
             let msg_len = (topo.rc_conns_per_machine() * 8192).max(1 << 20);
-            let msg_region = regions.register(msg_len, region_mode);
+            let msg_region = cat.regions.register(msg_len, region_mode);
             let mut nic = Nic::with_host_threads(cfg.nic.params(), cfg.threads);
             if matches!(cfg.system, SystemKind::Lite { .. }) {
                 // LITE: kernel-managed physical addressing — the NIC holds
@@ -417,7 +401,7 @@ impl World {
             nodes.push(NodeSim {
                 nic,
                 threads: Vec::new(),
-                store: Store { tables, hop, alloc, regions },
+                store: Store { cat, hop },
                 recv_pool: RecvPool::new(cfg.host.recv_pool_capacity),
                 kernel_busy: 0,
                 qp_group_busy: vec![0; (cfg.threads / cfg.host.farm_qp_group.max(1) + 1) as usize],
@@ -435,7 +419,7 @@ impl World {
                     if let Some(h) = nd.store.hop.as_mut() {
                         h.insert(key);
                     } else {
-                        nd.store.tables[0].insert(key, None, &mut nd.store.alloc, &mut nd.store.regions);
+                        nd.store.cat.insert(ObjectId(0), key, None);
                     }
                 }
             }
@@ -444,19 +428,19 @@ impl World {
                 for (obj, key) in pop.rows(cfg.seed) {
                     let owner = owner_of(key, cfg.nodes) as usize;
                     let nd = &mut nodes[owner];
-                    nd.store.tables[obj.0 as usize].insert(
-                        key,
-                        None,
-                        &mut nd.store.alloc,
-                        &mut nd.store.regions,
-                    );
+                    nd.store.cat.insert(obj, key, None);
                 }
             }
         }
 
         // --- client threads ------------------------------------------------
         let region_of: Vec<Vec<MrKey>> = (0..table_cfgs.len())
-            .map(|o| nodes.iter().map(|nd| nd.store.tables[o].bucket_region).collect())
+            .map(|o| {
+                nodes
+                    .iter()
+                    .map(|nd| nd.store.cat.table(ObjectId(o as u32)).bucket_region)
+                    .collect()
+            })
             .collect();
         let farm_regions: Vec<MrKey> = nodes
             .iter()
@@ -653,7 +637,7 @@ impl World {
             PktKind::ReadReq { obj, key, addr, len, rk } => {
                 // Memory-state touches for the access.
                 let (mpt, mtt) = {
-                    let regions = &self.nodes[to].store.regions;
+                    let regions = &self.nodes[to].store.cat.regions;
                     let mut it = regions.mtt_entries_for(addr.region, addr.offset, *len as u64);
                     let first = it.next();
                     let count = 1 + it.count() as u32;
@@ -713,7 +697,7 @@ impl World {
                 let (mpt, mtt) = {
                     let nd = &self.nodes[to];
                     let off = (pkt.conn.0.wrapping_mul(8192)) % nd.msg_region_len;
-                    let mut it = nd.store.regions.mtt_entries_for(nd.msg_region, off, 64);
+                    let mut it = nd.store.cat.regions.mtt_entries_for(nd.msg_region, off, 64);
                     (Some(nd.msg_region.0 as u64), it.next().map(|f| (f, 1)))
                 };
                 let op = NicOp { side, qp: pkt.conn.0, len: pkt.size, mpt, mtt, extra_ns: 0.0, extra_hold_ns: 0.0 };
@@ -738,18 +722,18 @@ impl World {
                 ReadView::Neighborhood(store.hop.as_ref().expect("farm store").neighborhood_view(key))
             }
             ReadKind::Bucket => {
-                let table = &store.tables[obj as usize];
+                let table = store.cat.table(ObjectId(obj as u32));
                 let bb = table.config().bucket_bytes() as u64;
                 let bucket = addr.offset / bb;
                 ReadView::Bucket(table.bucket_view(bucket))
             }
             ReadKind::ItemHeader => {
-                let table = &store.tables[obj as usize];
+                let table = store.cat.table(ObjectId(obj as u32));
                 ReadView::Item(table.item_view(addr))
             }
             ReadKind::PerfectItem => {
                 // Oracle: what a read of the item's true location returns.
-                let table = &store.tables[obj as usize];
+                let table = store.cat.table(ObjectId(obj as u32));
                 let _ = len;
                 match table.get(key).0 {
                     RpcResult::Value { version, .. } => {
@@ -996,13 +980,13 @@ impl World {
                 if in_window {
                     self.metrics.reads += 1;
                 }
-                self.post_read(n, t, c, 0, obj, key, dest, addr, len, ready);
+                self.post_read(n, t, c, 0, obj, key, dest, addr, len, ready, None);
             }
             CoroNext::Act(CoroAction::Rpc { dest, req }) => {
                 if in_window {
                     self.metrics.rpcs += 1;
                 }
-                self.post_rpc(n, t, c, 0, dest, req, ready);
+                self.post_rpc(n, t, c, 0, dest, req, ready, None);
             }
             CoroNext::Act(CoroAction::KvDone { found }) => {
                 if found {
@@ -1034,29 +1018,71 @@ impl World {
     }
 
     /// Post queued engine actions while the coroutine's window has room.
+    ///
+    /// Doorbell coalescing (ROADMAP follow-up): the actions of one pumped
+    /// batch destined to the same `(node, path)` are written back-to-back
+    /// as a WQE chain and ride a **single doorbell, rung after the
+    /// group's last WQE write** — so every chained packet becomes
+    /// NIC-visible together at ring time, exactly the way hardware posts
+    /// a chain (a WQE written after an earlier ring would be invisible
+    /// until the next one).
     fn pump_tx_posts(&mut self, n: usize, t: usize, c: usize, ready: Nanos) {
         let window = self.tx_post_window();
         let in_window = self.window.contains(ready);
+        // Per (dest node, is_rpc_path) group: the chained packets and the
+        // CPU time each WQE write finished at.
+        let mut chains: Vec<((u32, bool), Vec<(Nanos, Pkt)>)> = Vec::new();
+        fn chain_entry(
+            chains: &mut Vec<((u32, bool), Vec<(Nanos, Pkt)>)>,
+            key: (u32, bool),
+        ) -> &mut Vec<(Nanos, Pkt)> {
+            if let Some(i) = chains.iter().position(|(k, _)| *k == key) {
+                return &mut chains[i].1;
+            }
+            chains.push((key, Vec::new()));
+            &mut chains.last_mut().expect("just pushed").1
+        }
         loop {
             let coro = &mut self.nodes[n].threads[t].coros[c];
             if coro.outstanding as usize >= window {
-                return;
+                break;
             }
-            let Some(post) = coro.posts.pop_front() else { return };
+            let Some(post) = coro.posts.pop_front() else { break };
             coro.outstanding += 1;
             match post.op {
                 TxOp::Read { obj, key, node, addr, len } => {
                     if in_window {
                         self.metrics.reads += 1;
                     }
-                    self.post_read(n, t, c, post.tag, obj, key, node, addr, len, ready);
+                    // Local accesses use no verbs and never chain.
+                    let chain = if node as usize != n {
+                        Some(chain_entry(&mut chains, (node, false)))
+                    } else {
+                        None
+                    };
+                    self.post_read(n, t, c, post.tag, obj, key, node, addr, len, ready, chain);
                 }
                 TxOp::Rpc { node, req } => {
                     if in_window {
                         self.metrics.rpcs += 1;
                     }
-                    self.post_rpc(n, t, c, post.tag, node, req, ready);
+                    let chain = if node as usize != n {
+                        Some(chain_entry(&mut chains, (node, true)))
+                    } else {
+                        None
+                    };
+                    self.post_rpc(n, t, c, post.tag, node, req, ready, chain);
                 }
+            }
+        }
+        // Ring each group's doorbell once, after its last WQE write; the
+        // whole chain departs for the NIC together.
+        let doorbell = self.cfg.host.doorbell_pcie as Nanos;
+        for (_, members) in chains {
+            let ring = members.iter().map(|&(wrote, _)| wrote).max().expect("chain non-empty")
+                + doorbell;
+            for (_, pkt) in members {
+                self.q.push_at(ring, Ev::NicTx { at: n as u16, pkt });
             }
         }
     }
@@ -1092,6 +1118,10 @@ impl World {
 
     // -- posting ---------------------------------------------------------
 
+    /// Post a one-sided read. With `chain`, the WQE joins a coalesced
+    /// doorbell group: the packet is handed back (tagged with the time
+    /// its WQE write finished) for the caller to launch when the group's
+    /// single doorbell rings; without it, the post rings its own.
     #[allow(clippy::too_many_arguments)]
     fn post_read(
         &mut self,
@@ -1105,6 +1135,7 @@ impl World {
         addr: RemoteAddr,
         len: u32,
         ready: Nanos,
+        chain: Option<&mut Vec<(Nanos, Pkt)>>,
     ) {
         let h = self.cfg.host;
         let rk = self.classify_read(len);
@@ -1148,9 +1179,18 @@ impl World {
             ud: false,
             kind: PktKind::ReadReq { obj: obj.0 as u8, key, addr, len, rk },
         };
-        self.q.push_at(cpu_done + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt });
+        // A chained WQE waits for the group's single doorbell (rung after
+        // the batch's last write); an unchained post rings its own.
+        match chain {
+            Some(chain) => chain.push((cpu_done, pkt)),
+            None => {
+                self.q.push_at(cpu_done + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt })
+            }
+        }
     }
 
+    /// Post a write-based RPC (see [`World::post_read`] for the `chain`
+    /// contract).
     #[allow(clippy::too_many_arguments)]
     fn post_rpc(
         &mut self,
@@ -1161,6 +1201,7 @@ impl World {
         dest: u32,
         req: RpcRequest,
         ready: Nanos,
+        chain: Option<&mut Vec<(Nanos, Pkt)>>,
     ) {
         let h = self.cfg.host;
         if dest as usize == n {
@@ -1239,8 +1280,14 @@ impl World {
                 Ev::Retrans { node: n as u16, thread: t as u16, coro: c as u16, seq },
             );
         }
-        self.q
-            .push_at(cpu_done + pace + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt });
+        // A chained WQE waits for the group's single doorbell (rung after
+        // the batch's last write); an unchained post rings its own.
+        match chain {
+            Some(chain) => chain.push((cpu_done + pace, pkt)),
+            None => self
+                .q
+                .push_at(cpu_done + pace + h.doorbell_pcie as Nanos, Ev::NicTx { at: n as u16, pkt }),
+        }
     }
 
     /// Per-system gates on the post path: LITE's kernel lock, FaRM's shared

@@ -1,63 +1,69 @@
 //! Live Storm dataplane over the in-process loopback fabric.
 //!
 //! This is the end-to-end composition proof: the *same* sans-io engines
-//! ([`LookupSm`], [`TxEngine`]) and MICA table that the simulator drives
-//! run here against real memory and real threads —
+//! ([`LookupSm`], [`TxEngine`]) and MICA tables that the simulator drives
+//! run here against real memory and real threads — and since PR 3 the
+//! live cluster is a genuine **multi-object dataplane**: every node hosts
+//! a storage [`Catalog`] of independent tables (TATP's four tables,
+//! SmallBank's three), and the cluster-wide [`Placement`] map routes
+//! `(ObjectId, key)` to `(node, shard, packed offset)` —
 //!
-//! * one-sided reads are raw byte reads of the owner's registered region,
-//!   parsed with the wire-image codecs in [`crate::ds::mica`] (the owner
-//!   write-through-mirrors exactly the bytes an op dirtied: slot-local
-//!   mutations mirror just the item slot, structural ops the bucket);
-//!   batched lookups and a transaction's validation reads coalesce
-//!   **doorbell-style** — one region acquisition per owner node serves the
-//!   whole group, and views are parsed zero-copy from the mirrored bytes;
+//! * all of a node's tables share **one registered data region** (paper
+//!   principle #3: one MPT entry, per-table base offsets via
+//!   [`crate::mem::pack_offsets`]), so one-sided reads are raw byte reads
+//!   of that region, parsed with the wire-image codecs in
+//!   [`crate::ds::mica`] against the geometry the packed offset selects;
+//!   the owner write-through-mirrors exactly the bytes an op dirtied
+//!   (slot-local mutations mirror just the item slot, structural ops the
+//!   bucket), and a doorbell-batched `read_batch` group may span tables
+//!   on the same node because they live in the same region;
 //! * RPCs travel as framed messages ([`crate::dataplane::rpc`]) through
-//!   **preallocated ring-buffer slots** ([`crate::fabric::loopback::RingConn`]):
-//!   requests are encoded straight into a reusable slot buffer
-//!   (`encode_*_into`, zero hot-path allocation) and a client keeps a
-//!   window of outstanding requests in flight ([`LOOKUP_WINDOW`]);
+//!   **preallocated ring-buffer slots** ([`crate::fabric::loopback::RingConn`]);
+//!   the request's object id — which the pre-catalog server used to drop —
+//!   now dispatches the owner-side handler to the right table
+//!   ([`Catalog::serve_rpc`]);
 //! * transactions pipeline at two levels: the batched [`TxEngine`] posts
 //!   every independent action of a phase at once (intra-tx), and
-//!   [`LiveClient::run_tx_batch`] multiplexes up to [`TX_WINDOW`]
-//!   concurrent engines over the shared rings (inter-tx), demultiplexing
-//!   replies by the correlation cookie each request carries in its header
-//!   (and as the ring's write-with-immediate value);
-//! * each server node is split into [`SERVER_SHARDS`] bucket-range shards,
-//!   every shard behind its own lock with its own receive lane and event
-//!   loop — clients route requests to the owning shard's lane, so
-//!   independent keys never serialize on one node-wide mutex; per-lane
-//!   `served` counters surface shard imbalance at shutdown;
+//!   [`LiveClient::run_tx_batch`] multiplexes concurrent engines over the
+//!   shared rings (inter-tx), demultiplexed by the correlation cookie in
+//!   each reply header. The window is **adaptive** ([`TxWindow`]): it
+//!   starts at [`TX_WINDOW`], grows while commits stay clean, stops
+//!   growing when the rings push back, and shrinks on sustained aborts;
+//! * each server node is split into up to [`SERVER_SHARDS`] shards, every
+//!   shard owning one bucket range of *every* table behind its own lock
+//!   with its own receive lane and event loop; per-lane `served` counters
+//!   surface shard imbalance at shutdown;
 //! * `lookup_start` address resolution runs through the **AOT-compiled
 //!   XLA artifacts via PJRT** ([`crate::runtime::Engine`]) in batches —
 //!   python never executes, only its compiled output does.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::cluster::report::LiveServed;
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::mica::{
-    bucket_of, owner_of, parse_bucket_view, parse_item_view, ItemView, MicaClient, MicaConfig,
-    MicaTable,
-};
+use crate::ds::catalog::{Catalog, CatalogConfig, Placement};
+use crate::ds::mica::{parse_bucket_view, parse_item_view, ItemView, MicaClient, MicaConfig};
 use crate::fabric::loopback::{LoopbackFabric, RingConn, RpcEnvelope, SlotToken};
-use crate::mem::{ContiguousAllocator, MrKey, PageSize, RegionMode, RegionTable, RemoteAddr};
+use crate::mem::{MrKey, PageSize, RegionMode, RemoteAddr};
 use crate::runtime::Engine;
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
 use super::rpc::{
-    decode_request, decode_response, encode_request_into, encode_response_into, RpcHeader,
-    RPC_HEADER_BYTES, RPC_REQ_BODY_BYTES, RPC_RESP_BODY_BYTES,
+    decode_request, decode_response, encode_request_into, encode_response_into, request_obj,
+    RpcHeader, RPC_HEADER_BYTES, RPC_REQ_BODY_BYTES, RPC_RESP_BODY_BYTES,
 };
 use super::tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxStep};
 
-/// Data region id on every node (region 0 of the loopback endpoint).
+/// The packed data region every node registers (region 0 of the loopback
+/// endpoint): all catalog tables at their [`Placement`] base offsets.
 const DATA_REGION: MrKey = MrKey(0);
 
 /// Bucket-range shards (and receive lanes / server loops) per node.
-/// Clamped to the bucket count for tiny tables.
+/// Clamped to the smallest table's bucket count for tiny catalogs.
 pub const SERVER_SHARDS: u32 = 8;
 
 /// Ring-buffer slots per (client, server) connection.
@@ -67,10 +73,16 @@ pub const RING_SLOTS: usize = 16;
 /// [`RING_SLOTS`] so a nested blocking RPC can never exhaust the ring.
 pub const LOOKUP_WINDOW: usize = 8;
 
-/// Concurrent transactions a client multiplexes over its rings
-/// ([`LiveClient::run_tx_batch`]) — the paper's blocking coroutines per
-/// thread. [`LiveClient::run_tx`] is the window-of-1 special case.
+/// Initial number of concurrent transactions a client multiplexes over
+/// its rings ([`LiveClient::run_tx_batch`]) — the paper's blocking
+/// coroutines per thread. The scheduler adapts from here ([`TxWindow`]).
+/// [`LiveClient::run_tx`] is the window-of-1 special case.
 pub const TX_WINDOW: usize = 8;
+
+/// Ceiling of the adaptive transaction window. Exceeding the ring size
+/// is safe — the scheduler posts with `try_post` and queues on a full
+/// ring — but past this point extra engines only add abort pressure.
+pub const TX_WINDOW_MAX: usize = 32;
 
 /// Correlation-cookie layout for scheduled transactions: the low bits are
 /// the engine's action tag (which stays below `2 * tx::LOCK_TAG`, i.e.
@@ -86,86 +98,124 @@ fn cookie_slot_tag(cookie: u32) -> (usize, u32) {
     ((cookie >> COOKIE_TAG_BITS) as usize, cookie & ((1 << COOKIE_TAG_BITS) - 1))
 }
 
-/// One bucket-range shard of a node: its slice of the MICA table behind
-/// its own lock, with its own chain allocator and region table.
-struct ShardState {
-    table: MicaTable,
-    alloc: ContiguousAllocator,
-    regions: RegionTable,
+/// Process-wide client counter: every built [`LiveClient`] draws a unique
+/// id for its transaction-id stream. Deriving tx ids from `node_id` would
+/// let two clients that share a node id mint the *same* tx ids — and an
+/// equal tx id is exactly what [`crate::ds::mica::MicaTable::lock_read`]
+/// treats as a re-entrant lock, silently merging two foreign
+/// transactions into one lock owner.
+static CLIENT_UID: AtomicU64 = AtomicU64::new(0);
+
+/// Adaptive per-client transaction window (ROADMAP follow-up): grow while
+/// the scheduler commits cleanly, stop growing when ring occupancy pushes
+/// back (a `try_post` found every slot taken), shrink on sustained
+/// aborts. Decisions are made once per [`TxWindow::EPOCH`] outcomes so a
+/// single unlucky conflict cannot collapse the window.
+#[derive(Clone, Debug)]
+pub struct TxWindow {
+    cur: usize,
+    commits: u32,
+    aborts: u32,
+    ring_full: bool,
 }
 
-/// All shards of one node. Global bucket `g` (hash & mask) lives on shard
-/// `g / local_buckets` at local bucket `g % local_buckets`; because both
-/// counts are powers of two, the shard table's own hash-derived bucket
-/// index *is* that local bucket, and the node-global mirror offset is
-/// `(shard * local_buckets + local) * bucket_bytes`.
+impl TxWindow {
+    /// Outcomes per adaptation decision.
+    const EPOCH: u32 = 32;
+
+    fn new() -> Self {
+        TxWindow { cur: TX_WINDOW, commits: 0, aborts: 0, ring_full: false }
+    }
+
+    /// Current admission window.
+    fn current(&self) -> usize {
+        self.cur
+    }
+
+    /// A `try_post` was refused this epoch: the rings are saturated, so
+    /// growing the window would only queue more work client-side.
+    fn on_ring_full(&mut self) {
+        self.ring_full = true;
+    }
+
+    /// Feed one finished transaction; adapt at epoch boundaries.
+    fn on_outcome(&mut self, committed: bool) {
+        if committed {
+            self.commits += 1;
+        } else {
+            self.aborts += 1;
+        }
+        let total = self.commits + self.aborts;
+        if total < Self::EPOCH {
+            return;
+        }
+        if self.aborts * 4 >= total {
+            // Sustained aborts (>= 25%): concurrency is feeding conflicts.
+            self.cur = (self.cur / 2).max(1);
+        } else if self.aborts * 8 < total && !self.ring_full {
+            self.cur = (self.cur + 1).min(TX_WINDOW_MAX);
+        }
+        self.commits = 0;
+        self.aborts = 0;
+        self.ring_full = false;
+    }
+}
+
+/// All server shards of one node: each shard is a [`Catalog`] slice
+/// holding one bucket range of every table, behind its own lock. Global
+/// bucket `g` of object `o` lives on shard `g / local_buckets(o)` at
+/// local bucket `g % local_buckets(o)`; both counts are powers of two,
+/// so the shard table's own hash-derived bucket index *is* that local
+/// bucket, and the node-global mirror offset is
+/// `base(o) + (shard * local_buckets + local) * bucket_bytes(o)`.
 struct NodeShards {
-    shards: Vec<Mutex<ShardState>>,
-    local_buckets: u64,
-    mask: u64,
-    bucket_bytes: u32,
+    shards: Vec<Mutex<Catalog>>,
+    place: Placement,
 }
 
 impl NodeShards {
-    fn new(cfg: &MicaConfig, shard_count: u32) -> Self {
-        assert!(cfg.buckets % shard_count as u64 == 0, "shards must divide buckets");
-        let local_buckets = cfg.buckets / shard_count as u64;
-        let local_cfg = MicaConfig { buckets: local_buckets, ..cfg.clone() };
-        let shards = (0..shard_count)
-            .map(|_| {
-                let mut regions = RegionTable::new();
-                let alloc =
-                    ContiguousAllocator::new(64 << 20, 16, RegionMode::Virtual(PageSize::Huge2M));
-                let table = MicaTable::new(
-                    local_cfg.clone(),
-                    &mut regions,
-                    RegionMode::Virtual(PageSize::Huge2M),
-                );
-                Mutex::new(ShardState { table, alloc, regions })
-            })
+    fn new(cat: &CatalogConfig, place: &Placement) -> Self {
+        let slice = cat.shard_slice(place.shards());
+        let shards = (0..place.shards())
+            .map(|_| Mutex::new(Catalog::new(&slice, RegionMode::Virtual(PageSize::Huge2M))))
             .collect();
-        NodeShards {
-            shards,
-            local_buckets,
-            mask: cfg.buckets - 1,
-            bucket_bytes: cfg.bucket_bytes(),
-        }
-    }
-
-    /// Shard owning `key` (by global bucket range).
-    fn shard_of(&self, key: u64) -> usize {
-        (bucket_of(key, self.mask) / self.local_buckets) as usize
-    }
-
-    /// First global bucket of a shard.
-    fn base_bucket(&self, shard: usize) -> u64 {
-        shard as u64 * self.local_buckets
+        NodeShards { shards, place: place.clone() }
     }
 }
 
 /// A running live cluster: per-shard server threads + shared fabric.
 pub struct LiveCluster {
     fabric: LoopbackFabric,
-    cfg: MicaConfig,
+    cat: CatalogConfig,
+    place: Placement,
     nodes: u32,
-    shards: u32,
     states: Vec<Arc<NodeShards>>,
     servers: Vec<Vec<JoinHandle<u64>>>,
 }
 
 impl LiveCluster {
-    /// Start `nodes` nodes, each running one server event loop per
-    /// bucket-range shard, the shard's slice of the bucket array mirrored
-    /// into the node's loopback region.
+    /// Start `nodes` nodes hosting the single-object catalog `cfg` (the
+    /// pre-catalog cluster shape; see [`Self::start_catalog`]).
     pub fn start(nodes: u32, cfg: MicaConfig) -> Self {
-        assert!(cfg.store_values, "live mode carries real bytes");
-        let shards = cfg.buckets.min(SERVER_SHARDS as u64) as u32;
-        let region_len = (cfg.buckets * cfg.bucket_bytes() as u64) as usize;
+        Self::start_catalog(nodes, CatalogConfig::single(cfg))
+    }
+
+    /// Start `nodes` nodes, each hosting the full catalog: one server
+    /// event loop per bucket-range shard, every table's bucket array
+    /// mirrored at its packed offset into the node's single loopback
+    /// region.
+    pub fn start_catalog(nodes: u32, cat: CatalogConfig) -> Self {
+        for c in &cat.objects {
+            assert!(c.store_values, "live mode carries real bytes");
+        }
+        let shards = cat.shard_count(SERVER_SHARDS);
+        let place = Placement::new(&cat, nodes, shards);
+        let region_len = place.region_len() as usize;
         let (fabric, rxs) = LoopbackFabric::new_sharded(nodes, &[region_len], shards);
         let mut states = Vec::new();
         let mut servers = Vec::new();
         for (node, lane_rxs) in rxs.into_iter().enumerate() {
-            let ns = Arc::new(NodeShards::new(&cfg, shards));
+            let ns = Arc::new(NodeShards::new(&cat, &place));
             states.push(ns.clone());
             let mut handles = Vec::new();
             for rx in lane_rxs {
@@ -175,7 +225,7 @@ impl LiveCluster {
             }
             servers.push(handles);
         }
-        LiveCluster { fabric, cfg, nodes, shards, states, servers }
+        LiveCluster { fabric, cat, place, nodes, states, servers }
     }
 
     /// Fabric handle for clients.
@@ -183,23 +233,52 @@ impl LiveCluster {
         self.fabric.clone()
     }
 
-    /// Load keys (direct inserts on owner shards + region mirroring).
-    pub fn load(&self, keys: impl Iterator<Item = u64>, value_of: impl Fn(u64) -> Vec<u8>) {
-        let bb = self.cfg.bucket_bytes() as u64;
-        for key in keys {
-            let owner = owner_of(key, self.nodes);
+    /// The cluster's placement map.
+    pub fn placement(&self) -> &Placement {
+        &self.place
+    }
+
+    /// Load `(object, key)` rows (direct inserts on owner shards + region
+    /// mirroring at the packed offsets).
+    pub fn load_rows(
+        &self,
+        rows: impl Iterator<Item = (ObjectId, u64)>,
+        value_of: impl Fn(ObjectId, u64) -> Vec<u8>,
+    ) {
+        for (obj, key) in rows {
+            let owner = self.place.node_of(key);
             let ns = &self.states[owner as usize];
-            let sid = ns.shard_of(key);
-            let mut g = ns.shards[sid].lock().unwrap();
-            let v = value_of(key);
-            let ShardState { table, alloc, regions } = &mut *g;
-            let res = table.insert(key, Some(&v), alloc, regions);
+            let sid = self.place.shard_of(obj, key);
+            let mut g = ns.shards[sid as usize].lock().unwrap();
+            let v = value_of(obj, key);
+            let res = g.insert(obj, key, Some(&v));
             assert_eq!(res, RpcResult::Ok);
-            let local = table.bucket_index_of(key);
-            let global = ns.base_bucket(sid) + local;
-            let image = table.bucket_image(local);
-            self.fabric.write(owner, DATA_REGION, global * bb, &image);
+            let geo = self.place.geo(obj);
+            let local = g.table(obj).bucket_index_of(key);
+            let global = self.place.base_bucket(obj, sid) + local;
+            let image = g.table(obj).bucket_image(local);
+            self.fabric.write(
+                owner,
+                DATA_REGION,
+                geo.base + global * geo.bucket_bytes as u64,
+                &image,
+            );
         }
+    }
+
+    /// Load keys into one object.
+    pub fn load_obj(
+        &self,
+        obj: ObjectId,
+        keys: impl Iterator<Item = u64>,
+        value_of: impl Fn(u64) -> Vec<u8>,
+    ) {
+        self.load_rows(keys.map(|k| (obj, k)), |_, k| value_of(k));
+    }
+
+    /// Load keys into object 0 (single-object compatibility path).
+    pub fn load(&self, keys: impl Iterator<Item = u64>, value_of: impl Fn(u64) -> Vec<u8>) {
+        self.load_obj(ObjectId(0), keys, value_of);
     }
 
     /// Build a client for this cluster (optionally with the PJRT engine).
@@ -214,9 +293,8 @@ impl LiveCluster {
     pub fn client_seed(&self, node_id: u32) -> ClientSeed {
         ClientSeed {
             fabric: self.fabric(),
-            cfg: self.cfg.clone(),
-            nodes: self.nodes,
-            shards: self.shards,
+            cat: self.cat.clone(),
+            place: self.place.clone(),
             node_id,
         }
     }
@@ -235,6 +313,7 @@ impl LiveCluster {
                 .into_iter()
                 .map(|handles| handles.into_iter().map(|h| h.join().unwrap()).collect())
                 .collect(),
+            tx_windows: Vec::new(),
         }
     }
 }
@@ -254,9 +333,9 @@ fn reply_header(node: u32, req: &RpcHeader) -> RpcHeader {
 }
 
 /// Per-shard server event loop: drains one receive lane, executes the
-/// `rpc_handler` callbacks against the owning shard, mirrors dirtied
-/// buckets, and writes the reply into the ring slot. Returns the number
-/// of RPCs served.
+/// `rpc_handler` callbacks against the owning shard catalog, mirrors
+/// dirtied bytes, and writes the reply into the ring slot. Returns the
+/// number of RPCs served.
 fn serve_node(
     node: u32,
     rx: Receiver<RpcEnvelope>,
@@ -297,6 +376,14 @@ fn serve_node(
                     let Some(req) = decode_request(&reqb[RPC_HEADER_BYTES as usize..]) else {
                         return;
                     };
+                    // The object id sits at a fixed wire offset so a NIC
+                    // (or a steering layer) could route on it without a
+                    // full decode.
+                    debug_assert_eq!(
+                        request_obj(&reqb[RPC_HEADER_BYTES as usize..]),
+                        Some(req.obj),
+                        "object id must be peekable at its fixed wire offset"
+                    );
                     let resp = handle_request(node, &shards, &fabric, &req);
                     reply_header(node, &hdr).encode_into(out);
                     encode_response_into(&resp, out);
@@ -311,19 +398,30 @@ fn serve_node(
     served
 }
 
-/// Execute one request against its owning shard, mirror exactly what the
-/// op dirtied, and translate shard-local inline addresses to the
-/// node-global mirrored region.
+/// Execute one request against its owning shard catalog (dispatched by
+/// the request's object id), mirror exactly what the op dirtied at the
+/// object's packed offset, and translate shard-local inline addresses to
+/// the node-global mirrored region.
 fn handle_request(
     node: u32,
-    shards: &NodeShards,
+    ns: &NodeShards,
     fabric: &LoopbackFabric,
     req: &RpcRequest,
 ) -> RpcResponse {
-    let sid = shards.shard_of(req.key);
-    let mut g = shards.shards[sid].lock().unwrap();
-    let mut resp = serve_rpc(&mut g, req);
-    let bb = shards.bucket_bytes as u64;
+    let place = &ns.place;
+    if (req.obj.0 as usize) >= place.objects() {
+        // The wire accepts any u32 object id; an unknown one must not
+        // panic the shard's event loop (that would hang every client
+        // routed to this lane). Answer like a miss: the object hosts
+        // nothing here.
+        return RpcResponse::inline(RpcResult::NotFound);
+    }
+    let sid = place.shard_of(req.obj, req.key);
+    let mut g = ns.shards[sid as usize].lock().unwrap();
+    let mut resp = g.serve_rpc(req);
+    let geo = *place.geo(req.obj);
+    let bb = geo.bucket_bytes as u64;
+    let shard_base = geo.base + place.base_bucket(req.obj, sid) * bb;
     // Mirror only what the op actually dirtied: plain reads never touch
     // state, and mutating ops that found nothing to change (NotFound, a
     // lost lock race, a full table) leave the image as-is. A successful
@@ -335,77 +433,59 @@ fn handle_request(
         _ => true,
     };
     if dirty {
-        let shard_base = shards.base_bucket(sid) * bb;
+        let table = g.table(req.obj);
         // Lock/unlock/update mutate one existing item in place: mirror just
         // that slot's bytes (header + value) instead of the whole bucket
         // image. Structural ops (insert/delete) can move slots or flip the
         // chain flag, and chained items have no inline slot — those fall
         // back to the full bucket image.
         let slot_local = matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock);
-        match if slot_local { g.table.dirty_slot_image(req.key) } else { None } {
+        match if slot_local { table.dirty_slot_image(req.key) } else { None } {
             Some((off, image)) => fabric.write(node, DATA_REGION, shard_base + off, &image),
             None => {
-                let local = g.table.bucket_index_of(req.key);
-                let global = shards.base_bucket(sid) + local;
-                let image = g.table.bucket_image(local);
-                fabric.write(node, DATA_REGION, global * bb, &image);
+                let local = table.bucket_index_of(req.key);
+                let image = table.bucket_image(local);
+                fabric.write(node, DATA_REGION, shard_base + local * bb, &image);
             }
         }
     }
-    // Shard tables address their bucket array from offset 0; clients read
-    // the node-global mirror, so rebase inline item addresses.
+    // Shard tables address their bucket array from offset 0 in a private
+    // per-table region; clients read the node-global packed mirror, so
+    // rebase inline item addresses. Chain addresses keep their private
+    // region keys — those are always >= the object count (see
+    // [`Catalog`]), so they can never be mistaken for the data region and
+    // clients fall back to an RPC read for them.
     if let RpcResult::Value { addr, .. } = &mut resp.result {
-        if addr.region == g.table.bucket_region {
-            addr.offset += shards.base_bucket(sid) * bb;
+        if addr.region == g.table(req.obj).bucket_region {
+            *addr = RemoteAddr { region: DATA_REGION, offset: shard_base + addr.offset };
         }
     }
     resp
 }
 
-fn serve_rpc(state: &mut ShardState, req: &RpcRequest) -> RpcResponse {
-    let ShardState { table, alloc, regions } = state;
-    match req.op {
-        RpcOp::Read => {
-            let (result, hops) = table.get(req.key);
-            RpcResponse { result, hops }
-        }
-        RpcOp::LockRead => {
-            let (result, hops) = table.lock_read(req.key, req.tx_id);
-            RpcResponse { result, hops }
-        }
-        RpcOp::UpdateUnlock => {
-            RpcResponse::inline(table.update_unlock(req.key, req.tx_id, req.value.as_deref()))
-        }
-        RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
-        RpcOp::Insert => {
-            RpcResponse::inline(table.insert(req.key, req.value.as_deref(), alloc, regions))
-        }
-        RpcOp::Delete => {
-            let (result, hops) = table.delete(req.key, alloc);
-            RpcResponse { result, hops }
-        }
-    }
-}
-
-/// Client-side resolver: MICA geometry + optional PJRT batch engine with
-/// a resolution cache (addresses resolved by the XLA executable).
+/// Client-side resolver: one MICA resolver per catalog object (each with
+/// its own address cache) + optional PJRT batch engine whose resolved
+/// hints are cached per `(object, key)`.
 struct LiveResolver {
-    client: MicaClient,
+    clients: Vec<MicaClient>,
     engine: Option<Engine>,
-    mask: u64,
+    /// Object 0's bucket mask (the geometry the compiled artifact models).
+    mask0: u64,
     /// Hints resolved by the compiled artifact, consumed by
     /// `lookup_start` instead of re-hashing on the CPU.
-    hint_cache: HashMap<u64, LookupHint>,
+    hint_cache: HashMap<(u32, u64), LookupHint>,
 }
 
 impl LiveResolver {
-    /// Resolve a batch of keys through the compiled artifact, seeding the
-    /// hint cache the subsequent per-op `lookup_start` calls consume.
+    /// Resolve a batch of object-0 keys through the compiled artifact,
+    /// seeding the hint cache the subsequent per-op `lookup_start` calls
+    /// consume. (The artifact models object 0's geometry, whose packed
+    /// base is 0; other objects resolve on the CPU.)
     fn engine_resolve(&mut self, keys: &[u64], nodes: u32, bucket_bytes: u32) {
         let Some(engine) = &self.engine else { return };
         for chunk in keys.chunks(crate::runtime::BATCH) {
             let resolved = engine
-                .lookup_resolve(chunk, nodes, self.mask, bucket_bytes)
+                .lookup_resolve(chunk, nodes, self.mask0, bucket_bytes)
                 .expect("PJRT resolve");
             for (k, r) in chunk.iter().zip(resolved) {
                 let hint = LookupHint {
@@ -416,79 +496,93 @@ impl LiveResolver {
                 debug_assert_eq!(
                     (hint.node, hint.addr),
                     {
-                        let h = self.client.lookup_start(*k);
+                        let h = self.clients[0].lookup_start(*k);
                         (h.node, h.addr)
                     },
                     "artifact and rust resolver must agree"
                 );
-                self.hint_cache.insert(*k, hint);
+                self.hint_cache.insert((0, *k), hint);
             }
         }
     }
 }
 
 impl DsCallbacks for LiveResolver {
-    fn lookup_start(&mut self, _obj: ObjectId, key: u64) -> Option<LookupHint> {
-        if let Some(hint) = self.hint_cache.remove(&key) {
+    fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+        if let Some(hint) = self.hint_cache.remove(&(obj.0, key)) {
             return Some(hint); // resolved by the PJRT executable
         }
-        Some(self.client.lookup_start(key))
+        Some(self.clients[obj.0 as usize].lookup_start(key))
     }
-    fn lookup_end_read(&mut self, _obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+    fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+        let c = &mut self.clients[obj.0 as usize];
         match view {
-            ReadView::Bucket(b) => self.client.lookup_end_bucket(key, b),
-            ReadView::Item(i) => self.client.lookup_end_item(key, *i),
+            ReadView::Bucket(b) => c.lookup_end_bucket(key, b),
+            ReadView::Item(i) => c.lookup_end_item(key, *i),
             ReadView::Neighborhood(_) => LookupOutcome::NeedRpc,
         }
     }
-    fn lookup_end_rpc(&mut self, _obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
+    fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
         if let RpcResult::Value { addr, .. } = &resp.result {
-            self.client.record_rpc_addr(key, node, *addr);
+            self.clients[obj.0 as usize].record_rpc_addr(key, node, *addr);
         }
     }
-    fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
-        self.client.owner(key)
+    fn owner(&self, obj: ObjectId, key: u64) -> u32 {
+        self.clients[obj.0 as usize].owner(key)
     }
 }
 
 /// Thread-portable client constructor (see [`LiveCluster::client_seed`]).
 pub struct ClientSeed {
     fabric: LoopbackFabric,
-    cfg: MicaConfig,
-    nodes: u32,
-    shards: u32,
+    cat: CatalogConfig,
+    place: Placement,
     node_id: u32,
 }
 
 impl ClientSeed {
     /// Materialize the client (call inside the worker thread): opens one
     /// ring-buffer connection per server node, slots sized so request and
-    /// reply framing never allocates.
+    /// reply framing never allocates, and one resolver per catalog
+    /// object, rebased to the object's packed offset.
     pub fn build(self, engine: Option<Engine>) -> LiveClient {
-        let region_of = vec![DATA_REGION; self.nodes as usize];
-        let resolver = MicaClient::new(ObjectId(0), &self.cfg, self.nodes, region_of);
+        let nodes = self.place.nodes();
+        let clients: Vec<MicaClient> = self
+            .cat
+            .objects
+            .iter()
+            .enumerate()
+            .map(|(o, tc)| {
+                let obj = ObjectId(o as u32);
+                MicaClient::new(obj, tc, nodes, vec![DATA_REGION; nodes as usize])
+                    .with_base(self.place.geo(obj).base)
+            })
+            .collect();
+        let max_value = self.cat.objects.iter().map(|c| c.value_len).max().unwrap_or(0);
         let slot_bytes = (RPC_HEADER_BYTES + RPC_REQ_BODY_BYTES.max(RPC_RESP_BODY_BYTES) + 8)
             as usize
-            + self.cfg.value_len as usize;
-        let conns = (0..self.nodes)
+            + max_value as usize;
+        let conns = (0..nodes)
             .map(|n| self.fabric.connect(self.node_id, n, RING_SLOTS, slot_bytes))
             .collect();
         LiveClient {
             fabric: self.fabric,
-            nodes: self.nodes,
+            nodes,
             node_id: self.node_id,
-            local_buckets: self.cfg.buckets / self.shards as u64,
             resolver: LiveResolver {
-                client: resolver,
+                clients,
                 engine,
-                mask: self.cfg.buckets - 1,
+                mask0: self.cat.objects[0].buckets - 1,
                 hint_cache: HashMap::new(),
             },
-            cfg: self.cfg,
+            place: self.place,
             conns,
             readbuf: Vec::new(),
-            next_tx: (self.node_id as u64) << 32 | 1,
+            // Unique per built client (not per node id): tx ids are lock
+            // owner tokens, so two clients must never share a stream.
+            next_tx: (CLIENT_UID.fetch_add(1, Ordering::Relaxed) + 1) << 32 | 1,
             seq: 0,
+            tx_win: TxWindow::new(),
         }
     }
 }
@@ -506,8 +600,8 @@ struct PendingRpc {
     as_read: bool,
 }
 
-fn read_rpc_request(key: u64) -> RpcRequest {
-    RpcRequest { obj: ObjectId(0), key, op: RpcOp::Read, tx_id: 0, value: None }
+fn read_rpc_request(obj: ObjectId, key: u64) -> RpcRequest {
+    RpcRequest { obj, key, op: RpcOp::Read, tx_id: 0, value: None }
 }
 
 /// Convert an RPC response standing in for an unmirrored item read back
@@ -522,11 +616,14 @@ fn item_read_view(key: u64, resp: RpcResponse) -> ReadView {
     ReadView::Item(view)
 }
 
-/// Parse one-sided read bytes into the view the MICA client understands.
-fn parse_read_view(bytes: &[u8], bucket_bytes: u32, width: u32, item_size: u32) -> ReadView {
-    if bytes.len() as u32 == bucket_bytes {
+/// Parse one-sided read bytes into the view the MICA client understands:
+/// the packed offset identifies the table, whose geometry disambiguates
+/// bucket reads from item reads.
+fn parse_view_at(place: &Placement, offset: u64, bytes: &[u8]) -> ReadView {
+    let geo = place.geo(place.object_at(offset));
+    if bytes.len() as u32 == geo.bucket_bytes {
         ReadView::Bucket(
-            parse_bucket_view(bytes, width, item_size).expect("malformed bucket image"),
+            parse_bucket_view(bytes, geo.width, geo.item_size).expect("malformed bucket image"),
         )
     } else {
         ReadView::Item(parse_item_view(bytes).filter(|v| v.key != 0))
@@ -540,14 +637,14 @@ fn decode_reply(b: &[u8]) -> RpcResponse {
     decode_response(&b[RPC_HEADER_BYTES as usize..]).expect("malformed response")
 }
 
-/// A live client: executes lookups and transactions over the fabric.
+/// A live client: executes lookups and transactions over the fabric,
+/// against any catalog object.
 pub struct LiveClient {
     fabric: LoopbackFabric,
-    cfg: MicaConfig,
     nodes: u32,
     node_id: u32,
-    /// Buckets per server shard (client-side lane routing).
-    local_buckets: u64,
+    /// Cluster placement (lane routing + packed read geometry).
+    place: Placement,
     resolver: LiveResolver,
     /// One ring-buffer connection per server node.
     conns: Vec<RingConn>,
@@ -555,12 +652,15 @@ pub struct LiveClient {
     readbuf: Vec<u8>,
     next_tx: u64,
     seq: u16,
+    /// Adaptive transaction window state.
+    tx_win: TxWindow,
 }
 
 impl LiveClient {
-    /// Receive lane (server shard) owning `key` on its owner node.
-    fn lane_of(&self, key: u64) -> u32 {
-        (bucket_of(key, self.cfg.buckets - 1) / self.local_buckets) as u32
+    /// The transaction window the adaptive scheduler currently admits
+    /// (reportable via [`LiveServed::record_tx_window`]).
+    pub fn tx_window(&self) -> usize {
+        self.tx_win.current()
     }
 
     fn req_header(&mut self, cookie: u32) -> RpcHeader {
@@ -576,12 +676,13 @@ impl LiveClient {
     }
 
     /// Frame a request straight into a free ring slot and post it to the
-    /// owning shard's lane, carrying `cookie` as both the header's
-    /// correlation field and the ring's write-with-immediate value.
-    /// Blocks while the ring is full.
+    /// owning shard's lane (derived from the request's object id and
+    /// key), carrying `cookie` as both the header's correlation field and
+    /// the ring's write-with-immediate value. Blocks while the ring is
+    /// full.
     fn post_req(&mut self, node: u32, req: &RpcRequest, cookie: u32) -> SlotToken {
         let hdr = self.req_header(cookie);
-        let lane = self.lane_of(req.key);
+        let lane = self.place.shard_of(req.obj, req.key);
         self.conns[node as usize].post_imm(lane, cookie, |buf| {
             hdr.encode_into(buf);
             encode_request_into(req, buf);
@@ -594,7 +695,7 @@ impl LiveClient {
     /// deadlock against its own unharvested completions.
     fn try_post_req(&mut self, node: u32, req: &RpcRequest, cookie: u32) -> Option<SlotToken> {
         let hdr = self.req_header(cookie);
-        let lane = self.lane_of(req.key);
+        let lane = self.place.shard_of(req.obj, req.key);
         self.conns[node as usize].try_post_imm(lane, cookie, |buf| {
             hdr.encode_into(buf);
             encode_request_into(req, buf);
@@ -607,17 +708,17 @@ impl LiveClient {
         self.conns[node as usize].take_reply(tok, decode_reply)
     }
 
-    fn serve_read(&mut self, key: u64, node: u32, addr: RemoteAddr, len: u32) -> ReadView {
+    fn serve_read(&mut self, obj: ObjectId, key: u64, node: u32, addr: RemoteAddr, len: u32) -> ReadView {
         if addr.region != DATA_REGION {
             // Overflow-chain item: its chunk is not mirrored into the
             // loopback region, so fetch the header via an RPC read (a real
             // RDMA deployment registers the chunks and reads one-sided).
-            let resp = self.send_rpc(node, &read_rpc_request(key));
+            let resp = self.send_rpc(node, &read_rpc_request(obj, key));
             return item_read_view(key, resp);
         }
         self.readbuf.resize(len as usize, 0);
         self.fabric.read_into(node, addr.region, addr.offset, &mut self.readbuf);
-        parse_read_view(&self.readbuf, self.cfg.bucket_bytes(), self.cfg.width, self.cfg.item_size())
+        parse_view_at(&self.place, addr.offset, &self.readbuf)
     }
 
     /// Advance one lookup machine as far as possible: one-sided reads of
@@ -633,17 +734,17 @@ impl LiveClient {
     ) -> bool {
         loop {
             match sm.advance(&mut self.resolver, input.take()) {
-                LkAction::Read { key, node, addr, len, .. } => {
+                LkAction::Read { obj, key, node, addr, len } => {
                     if addr.region != DATA_REGION {
                         rpcq.push_back(PendingRpc {
                             idx,
                             node,
-                            req: read_rpc_request(key),
+                            req: read_rpc_request(obj, key),
                             as_read: true,
                         });
                         return false;
                     }
-                    let view = self.serve_read(key, node, addr, len);
+                    let view = self.serve_read(obj, key, node, addr, len);
                     input = Some(LkInput::Read(view));
                 }
                 LkAction::Rpc { node, req } => {
@@ -658,15 +759,31 @@ impl LiveClient {
         }
     }
 
-    /// One-two-sided lookups for a batch of keys, pipelined: address
-    /// resolution runs through the PJRT engine when present, the batch's
-    /// first one-sided reads are doorbell-coalesced per owner node (one
-    /// region acquisition each, views parsed zero-copy), and RPC
-    /// fallbacks keep up to [`LOOKUP_WINDOW`] requests outstanding in the
-    /// ring while other machines make progress. Returns per-key results.
+    /// One-two-sided lookups for a batch of object-0 keys (see
+    /// [`Self::lookup_batch_obj`]).
     pub fn lookup_batch(&mut self, keys: &[u64]) -> Vec<LkResult> {
-        // Hot path: batch-resolve via the compiled XLA artifact.
-        self.resolver.engine_resolve(keys, self.nodes, self.cfg.bucket_bytes());
+        self.lookup_batch_obj(ObjectId(0), keys)
+    }
+
+    /// One-two-sided lookups for a batch of keys of one catalog object,
+    /// pipelined: address resolution runs through the PJRT engine when
+    /// present (object 0 — the geometry the artifact models), the batch's
+    /// first one-sided reads are doorbell-coalesced per owner node (one
+    /// region acquisition each covers every table, views parsed zero-copy
+    /// against the geometry the packed offset selects), and RPC fallbacks
+    /// keep up to [`LOOKUP_WINDOW`] requests outstanding in the ring
+    /// while other machines make progress. Returns per-key results.
+    pub fn lookup_batch_obj(&mut self, obj: ObjectId, keys: &[u64]) -> Vec<LkResult> {
+        assert!(
+            (obj.0 as usize) < self.place.objects(),
+            "unknown catalog object {obj:?} ({} hosted)",
+            self.place.objects()
+        );
+        if obj == ObjectId(0) {
+            // Hot path: batch-resolve via the compiled XLA artifact.
+            let bb = self.place.geo(obj).bucket_bytes;
+            self.resolver.engine_resolve(keys, self.nodes, bb);
+        }
         let mut results: Vec<Option<LkResult>> = vec![None; keys.len()];
         let mut sms: Vec<Option<LookupSm>> = Vec::with_capacity(keys.len());
         let mut reads: Vec<Vec<(usize, u64, u32)>> = vec![Vec::new(); self.nodes as usize];
@@ -674,16 +791,16 @@ impl LiveClient {
 
         // Phase 1: start every machine; group first reads by owner node.
         for (i, &key) in keys.iter().enumerate() {
-            let mut sm = LookupSm::new(ObjectId(0), key);
+            let mut sm = LookupSm::new(obj, key);
             match sm.advance(&mut self.resolver, None) {
-                LkAction::Read { key, node, addr, len, .. } => {
+                LkAction::Read { obj, key, node, addr, len } => {
                     if addr.region == DATA_REGION {
                         reads[node as usize].push((i, addr.offset, len));
                     } else {
                         rpcq.push_back(PendingRpc {
                             idx: i,
                             node,
-                            req: read_rpc_request(key),
+                            req: read_rpc_request(obj, key),
                             as_read: true,
                         });
                     }
@@ -697,9 +814,9 @@ impl LiveClient {
         }
 
         // Phase 2: doorbell-batched reads — one region acquisition per
-        // node batch; views parse zero-copy from the mirrored bytes.
+        // node batch (spanning tables: they share the packed region);
+        // views parse zero-copy from the mirrored bytes.
         let fabric = self.fabric.clone();
-        let (bb, width, isz) = (self.cfg.bucket_bytes(), self.cfg.width, self.cfg.item_size());
         for node in 0..self.nodes as usize {
             let list = std::mem::take(&mut reads[node]);
             if list.is_empty() {
@@ -707,8 +824,8 @@ impl LiveClient {
             }
             let reqs: Vec<(u64, u32)> = list.iter().map(|&(_, off, len)| (off, len)).collect();
             let mut views: Vec<ReadView> = Vec::with_capacity(list.len());
-            fabric.read_batch(node as u32, DATA_REGION, &reqs, |_, bytes| {
-                views.push(parse_read_view(bytes, bb, width, isz));
+            fabric.read_batch(node as u32, DATA_REGION, &reqs, |i, bytes| {
+                views.push(parse_view_at(&self.place, reqs[i].0, bytes));
             });
             for (&(idx, _, _), view) in list.iter().zip(views) {
                 let mut sm = sms[idx].take().expect("machine parked on read");
@@ -755,19 +872,20 @@ impl LiveClient {
         results.into_iter().map(|r| r.expect("every lookup resolves")).collect()
     }
 
-    /// The unpipelined reference path: one lookup at a time, one
-    /// outstanding request, per-read region acquisition. Kept as the
-    /// benchmark baseline for [`Self::lookup_batch`].
+    /// The unpipelined reference path over object 0: one lookup at a
+    /// time, one outstanding request, per-read region acquisition. Kept
+    /// as the benchmark baseline for [`Self::lookup_batch`].
     pub fn lookup_batch_sequential(&mut self, keys: &[u64]) -> Vec<LkResult> {
-        self.resolver.engine_resolve(keys, self.nodes, self.cfg.bucket_bytes());
+        let bb = self.place.geo(ObjectId(0)).bucket_bytes;
+        self.resolver.engine_resolve(keys, self.nodes, bb);
         keys.iter()
             .map(|&key| {
                 let mut sm = LookupSm::new(ObjectId(0), key);
                 let mut action = sm.advance(&mut self.resolver, None);
                 loop {
                     match action {
-                        LkAction::Read { key, node, addr, len, .. } => {
-                            let view = self.serve_read(key, node, addr, len);
+                        LkAction::Read { obj, key, node, addr, len } => {
+                            let view = self.serve_read(obj, key, node, addr, len);
                             action = sm.advance(&mut self.resolver, Some(LkInput::Read(view)));
                         }
                         LkAction::Rpc { node, req } => {
@@ -787,19 +905,38 @@ impl LiveClient {
         self.run_tx_batch(vec![(read_set, write_set)]).pop().expect("one outcome per tx")
     }
 
-    /// Run a batch of transactions with up to [`TX_WINDOW`] of them in
-    /// flight concurrently over the shared ring connections — the paper's
-    /// coroutine multiplexing, inter-transaction. Each engine's phases
-    /// additionally post all their independent actions at once (intra-tx):
-    /// one-sided reads (execute lookups, validation) are served
-    /// doorbell-batched per owner node, RPCs (lock, commit, unlock
+    /// Run a batch of transactions with up to [`TxWindow`]-many of them
+    /// in flight concurrently over the shared ring connections — the
+    /// paper's coroutine multiplexing, inter-transaction, with the window
+    /// adapting between 1 and [`TX_WINDOW_MAX`] as commits, aborts and
+    /// ring occupancy dictate. Each engine's phases additionally post
+    /// all their independent actions at once (intra-tx): one-sided reads
+    /// (execute lookups, validation) are served doorbell-batched per
+    /// owner node and may span tables, RPCs (lock, commit, unlock
     /// volleys) go out through free ring slots and complete out of order,
     /// demultiplexed by the correlation cookie in the reply header.
-    /// Returns one outcome per input transaction, in input order.
+    /// Transactions may mix objects freely — cross-table read and write
+    /// sets are the catalog's point. Returns one outcome per input
+    /// transaction, in input order.
     pub fn run_tx_batch(
         &mut self,
         txs: Vec<(Vec<TxItem>, Vec<TxItem>)>,
     ) -> Vec<TxOutcome> {
+        // Validate every item's object id before admitting anything: an
+        // indexing panic mid-schedule would unwind with other engines'
+        // server-side locks still held. With nothing in flight yet, a
+        // bad id is a clean caller error.
+        for (reads, writes) in &txs {
+            for item in reads.iter().chain(writes.iter()) {
+                assert!(
+                    (item.obj.0 as usize) < self.place.objects(),
+                    "unknown catalog object {:?} in transaction item (key {}); {} hosted",
+                    item.obj,
+                    item.key,
+                    self.place.objects()
+                );
+            }
+        }
         let total = txs.len();
         let mut outcomes: Vec<Option<TxOutcome>> =
             std::iter::repeat_with(|| None).take(total).collect();
@@ -817,8 +954,8 @@ impl LiveClient {
         let mut reads: Vec<Vec<(u32, u64, u32)>> = vec![Vec::new(); self.nodes as usize];
 
         loop {
-            // Admit transactions while the window has room.
-            while live < TX_WINDOW {
+            // Admit transactions while the adaptive window has room.
+            while live < self.tx_win.current() {
                 let Some((idx, (read_set, write_set))) = inputs.next() else { break };
                 let tx_id = self.next_tx;
                 self.next_tx += 1;
@@ -836,7 +973,8 @@ impl LiveClient {
                 break;
             }
             // Post queued RPCs into free ring slots; a full ring sends the
-            // action to the back of the queue until harvesting frees one.
+            // action to the back of the queue until harvesting frees one
+            // (and tells the adaptive window the rings are saturated).
             for _ in 0..rpcq.len() {
                 let q = rpcq.pop_front().expect("queue length checked");
                 match self.try_post_req(q.node, &q.req, cookie_of(q.slot, q.tag)) {
@@ -848,7 +986,15 @@ impl LiveClient {
                         as_read: q.as_read,
                         key: q.key,
                     }),
-                    None => rpcq.push_back(q),
+                    None => {
+                        // Same gate as outcome feedback: a window-of-1 run
+                        // carries no concurrency signal, so don't let its
+                        // ring pressure veto a later batch's growth.
+                        if total > 1 {
+                            self.tx_win.on_ring_full();
+                        }
+                        rpcq.push_back(q);
+                    }
                 }
             }
             // Live engines only ever park on RPC completions (one-sided
@@ -891,10 +1037,11 @@ impl LiveClient {
     }
 
     /// Drive one scheduled engine as far as it can go without ring I/O:
-    /// record a finished outcome, queue its RPC actions, and serve its
-    /// one-sided reads **doorbell-batched per owner node** (all validation
-    /// reads of a step go out as one `read_batch` per node), looping on
-    /// whatever the engine issues in response.
+    /// record a finished outcome (feeding the adaptive window), queue its
+    /// RPC actions, and serve its one-sided reads **doorbell-batched per
+    /// owner node** (all validation reads of a step go out as one
+    /// `read_batch` per node, spanning tables when the step touches
+    /// several), looping on whatever the engine issues in response.
     #[allow(clippy::too_many_arguments)]
     fn pump_tx(
         &mut self,
@@ -908,11 +1055,17 @@ impl LiveClient {
         reads: &mut [Vec<(u32, u64, u32)>],
     ) {
         let fabric = self.fabric.clone();
-        let (bb, width, isz) = (self.cfg.bucket_bytes(), self.cfg.width, self.cfg.item_size());
         loop {
             let posts = match step {
                 TxStep::Done(outcome) => {
                     let tx = slots[slot].take().expect("finished tx was active");
+                    // Single-transaction batches (run_tx) exercise no
+                    // concurrency, so their outcomes say nothing about
+                    // how wide the window can safely be — don't let a
+                    // stream of trivially-clean singles inflate it.
+                    if outcomes.len() > 1 {
+                        self.tx_win.on_outcome(matches!(outcome, TxOutcome::Committed { .. }));
+                    }
                     outcomes[tx.idx] = Some(outcome);
                     free_slots.push(slot);
                     *live -= 1;
@@ -927,7 +1080,7 @@ impl LiveClient {
             // scratch is empty again on return.
             for p in posts {
                 match p.op {
-                    TxOp::Read { key, node, addr, len, .. } => {
+                    TxOp::Read { obj, key, node, addr, len } => {
                         if addr.region == DATA_REGION {
                             reads[node as usize].push((p.tag, addr.offset, len));
                         } else {
@@ -935,7 +1088,7 @@ impl LiveClient {
                                 slot,
                                 tag: p.tag,
                                 node,
-                                req: read_rpc_request(key),
+                                req: read_rpc_request(obj, key),
                                 as_read: true,
                                 key,
                             });
@@ -960,8 +1113,8 @@ impl LiveClient {
                 let reqs: Vec<(u64, u32)> =
                     reads[node].iter().map(|&(_, off, len)| (off, len)).collect();
                 let mut views: Vec<ReadView> = Vec::with_capacity(reads[node].len());
-                fabric.read_batch(node as u32, DATA_REGION, &reqs, |_, bytes| {
-                    views.push(parse_read_view(bytes, bb, width, isz));
+                fabric.read_batch(node as u32, DATA_REGION, &reqs, |i, bytes| {
+                    views.push(parse_view_at(&self.place, reqs[i].0, bytes));
                 });
                 for (&(tag, _, _), view) in reads[node].iter().zip(views) {
                     match tx.engine.complete(&mut self.resolver, tag, TxInput::Read(view)) {
@@ -1181,17 +1334,53 @@ mod tests {
     }
 
     #[test]
-    fn shard_mapping_reconstructs_global_buckets() {
-        let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 8, store_values: true };
-        let ns = NodeShards::new(&cfg, 8);
-        for key in 1..=5000u64 {
-            let global = bucket_of(key, cfg.buckets - 1);
-            let sid = ns.shard_of(key);
-            assert!(sid < 8);
-            // The shard table hashes to the local bucket; base + local
-            // must reconstruct the global bucket the client reads.
-            let local = bucket_of(key, ns.local_buckets - 1);
-            assert_eq!(ns.base_bucket(sid) + local, global);
-        }
+    fn multi_object_cluster_keeps_tables_independent() {
+        // Two tables with different geometries in one packed region: the
+        // same key resolves independently per table, and a write to one
+        // never shows up in the other.
+        let cat = CatalogConfig::new(vec![
+            MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true },
+            MicaConfig { buckets: 1 << 8, width: 1, value_len: 32, store_values: true },
+        ]);
+        let c = LiveCluster::start_catalog(2, cat);
+        c.load_obj(ObjectId(0), 1..=100, |k| vec![k as u8; 32]);
+        c.load_obj(ObjectId(1), 1..=100, |k| vec![!k as u8; 32]);
+        let mut client = c.client(0, None);
+        let out = client.run_tx(
+            vec![TxItem::read(ObjectId(0), 7)],
+            vec![TxItem::update(ObjectId(1), 7).with_value(vec![0xAB; 32])],
+        );
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        let t0 = client.lookup_batch_obj(ObjectId(0), &[7]);
+        let t1 = client.lookup_batch_obj(ObjectId(1), &[7]);
+        assert_eq!(t0[0].version, 1, "table 0 untouched by the table-1 write");
+        assert_eq!(t1[0].version, 2, "table 1 bumped by the commit");
+        assert!(!t0[0].locked && !t1[0].locked);
+        // Misses stay per-table too.
+        assert!(!client.lookup_batch_obj(ObjectId(1), &[5_000_000]).pop().unwrap().found);
+        c.shutdown();
+    }
+
+    #[test]
+    fn adaptive_window_starts_at_initial_constant() {
+        let c = cluster();
+        let client = c.client(0, None);
+        assert_eq!(client.tx_window(), TX_WINDOW);
+        c.shutdown();
+    }
+
+    #[test]
+    fn packed_placement_region_covers_all_tables() {
+        let cat = CatalogConfig::new(vec![
+            MicaConfig { buckets: 1 << 6, width: 2, value_len: 16, store_values: true },
+            MicaConfig { buckets: 1 << 4, width: 1, value_len: 16, store_values: true },
+        ]);
+        let place = Placement::new(&cat, 2, cat.shard_count(SERVER_SHARDS));
+        let g0 = *place.geo(ObjectId(0));
+        let g1 = *place.geo(ObjectId(1));
+        assert!(g1.base >= g0.base + g0.len);
+        assert!(place.region_len() >= g1.base + g1.len);
+        assert_eq!(place.object_at(g0.base), ObjectId(0));
+        assert_eq!(place.object_at(g1.base + g1.len - 1), ObjectId(1));
     }
 }

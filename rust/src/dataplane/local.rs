@@ -1,10 +1,12 @@
 //! Reference in-process driver: the Storm dataplane over local shards.
 //!
 //! Executes the sans-io engines ([`LookupSm`], [`TxEngine`]) directly
-//! against in-memory table shards with no fabric at all. This is the
-//! semantic reference: what the simulator and the live loopback driver
-//! must agree with. Used heavily by tests (including step-interleaved
-//! concurrency tests for the OCC protocol) and the quickstart example.
+//! against in-memory storage catalogs ([`Catalog`]: one table per object,
+//! so multi-object workloads like four-table TATP run natively) with no
+//! fabric at all. This is the semantic reference: what the simulator and
+//! the live loopback driver must agree with. Used heavily by tests
+//! (including step-interleaved concurrency tests for the OCC protocol)
+//! and the quickstart example.
 //!
 //! The batched engine contract is driven here with a window of one:
 //! emitted [`TxPost`]s queue up and are served strictly in order
@@ -14,22 +16,13 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::mica::{MicaClient, MicaConfig, MicaTable};
-use crate::mem::{ContiguousAllocator, PageSize, RegionMode, RegionTable, RemoteAddr};
+use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcRequest, RpcResponse, RpcResult};
+use crate::ds::catalog::{Catalog, CatalogConfig};
+use crate::ds::mica::{MicaClient, MicaConfig};
+use crate::mem::{PageSize, RegionMode, RemoteAddr};
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
 use super::tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxPost, TxStep};
-
-/// One simulated host's storage.
-pub struct LocalNode {
-    /// Table shards by object.
-    pub tables: HashMap<ObjectId, MicaTable>,
-    /// Chain-item allocator.
-    pub alloc: ContiguousAllocator,
-    /// Region registry.
-    pub regions: RegionTable,
-}
 
 /// Client-side state: resolvers per object.
 pub struct LocalClient {
@@ -63,50 +56,46 @@ impl DsCallbacks for LocalClient {
     }
 }
 
-/// An in-process "cluster": shards + a way to run engines to completion.
+/// An in-process "cluster": per-node storage catalogs + a way to run
+/// engines to completion.
 pub struct LocalCluster {
-    /// Per-node storage.
-    pub nodes: Vec<LocalNode>,
-    configs: HashMap<ObjectId, MicaConfig>,
+    /// Per-node storage: one [`Catalog`] per node, each holding a shard
+    /// of every object.
+    pub nodes: Vec<Catalog>,
+    cat: CatalogConfig,
     next_tx: u64,
 }
 
 impl LocalCluster {
-    /// Build `n` nodes, each holding a shard of every object.
+    /// Build `n` nodes, each holding a shard of every object. Object ids
+    /// must be dense (`ObjectId(0)..ObjectId(len)` in any order) — the
+    /// catalog indexes tables by id.
     pub fn new(n: u32, objects: Vec<(ObjectId, MicaConfig)>) -> Self {
-        let mut nodes = Vec::new();
-        for _ in 0..n {
-            let mut regions = RegionTable::new();
-            let alloc =
-                ContiguousAllocator::new(64 << 20, 64, RegionMode::Virtual(PageSize::Huge2M));
-            let mut tables = HashMap::new();
-            for (obj, cfg) in &objects {
-                tables.insert(
-                    *obj,
-                    MicaTable::new(cfg.clone(), &mut regions, RegionMode::Virtual(PageSize::Huge2M)),
-                );
-            }
-            nodes.push(LocalNode { tables, alloc, regions });
+        let mut objects = objects;
+        objects.sort_by_key(|(o, _)| *o);
+        for (i, (o, _)) in objects.iter().enumerate() {
+            assert_eq!(o.0 as usize, i, "catalog object ids must be dense from 0");
         }
-        LocalCluster {
-            nodes,
-            configs: objects.into_iter().collect(),
-            next_tx: 1,
-        }
+        let cat = CatalogConfig::new(objects.into_iter().map(|(_, c)| c).collect());
+        let nodes = (0..n)
+            .map(|_| Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M)))
+            .collect();
+        LocalCluster { nodes, cat, next_tx: 1 }
     }
 
     /// Build a client (resolver set) for this cluster.
     pub fn client(&self, with_cache: bool) -> LocalClient {
         let mut clients = HashMap::new();
         let n = self.nodes.len() as u32;
-        for (obj, cfg) in &self.configs {
+        for (o, cfg) in self.cat.objects.iter().enumerate() {
+            let obj = ObjectId(o as u32);
             let regions =
-                self.nodes.iter().map(|nd| nd.tables[obj].bucket_region).collect::<Vec<_>>();
-            let mut c = MicaClient::new(*obj, cfg, n, regions);
+                self.nodes.iter().map(|nd| nd.table(obj).bucket_region).collect::<Vec<_>>();
+            let mut c = MicaClient::new(obj, cfg, n, regions);
             if with_cache {
                 c = c.with_cache();
             }
-            clients.insert(*obj, c);
+            clients.insert(obj, c);
         }
         LocalClient { clients, rpc_only: false }
     }
@@ -130,15 +119,13 @@ impl LocalCluster {
         let n = self.nodes.len() as u32;
         for key in keys {
             let owner = crate::ds::mica::owner_of(key, n) as usize;
-            let node = &mut self.nodes[owner];
-            let table = node.tables.get_mut(&obj).unwrap();
-            table.insert(key, None, &mut node.alloc, &mut node.regions);
+            self.nodes[owner].insert(obj, key, None);
         }
     }
 
     /// Serve a one-sided read against a node's memory.
     pub fn serve_read(&self, node: u32, obj_hint: ObjectId, addr: RemoteAddr, len: u32) -> ReadView {
-        let table = &self.nodes[node as usize].tables[&obj_hint];
+        let table = self.nodes[node as usize].table(obj_hint);
         let bb = table.config().bucket_bytes();
         if len == bb && addr.region == table.bucket_region {
             ReadView::Bucket(table.bucket_view(addr.offset / bb as u64))
@@ -147,36 +134,10 @@ impl LocalCluster {
         }
     }
 
-    /// Serve an RPC on the owner node (the `rpc_handler` callback).
+    /// Serve an RPC on the owner node (the catalog's `rpc_handler`,
+    /// dispatched by the request's object id).
     pub fn serve_rpc(&mut self, node: u32, req: &RpcRequest) -> RpcResponse {
-        let nd = &mut self.nodes[node as usize];
-        let table = nd.tables.get_mut(&req.obj).expect("unknown object at owner");
-        match req.op {
-            RpcOp::Read => {
-                let (result, hops) = table.get(req.key);
-                RpcResponse { result, hops }
-            }
-            RpcOp::LockRead => {
-                let (result, hops) = table.lock_read(req.key, req.tx_id);
-                RpcResponse { result, hops }
-            }
-            RpcOp::UpdateUnlock => RpcResponse::inline(table.update_unlock(
-                req.key,
-                req.tx_id,
-                req.value.as_deref(),
-            )),
-            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
-            RpcOp::Insert => RpcResponse::inline(table.insert(
-                req.key,
-                req.value.as_deref(),
-                &mut nd.alloc,
-                &mut nd.regions,
-            )),
-            RpcOp::Delete => {
-                let (result, hops) = table.delete(req.key, &mut nd.alloc);
-                RpcResponse { result, hops }
-            }
-        }
+        self.nodes[node as usize].serve_rpc(req)
     }
 
     /// Run a single lookup to completion.
@@ -437,6 +398,31 @@ mod tests {
         let res = c.run_lookup(&mut client, KV, 6);
         assert_eq!(res.version, 2, "exactly one version bump");
         assert!(!res.locked, "lock released by the single commit op");
+    }
+
+    #[test]
+    fn cross_object_tx_commits_and_tables_stay_independent() {
+        let mica = |buckets| MicaConfig { buckets, width: 2, value_len: 112, store_values: false };
+        let mut c = LocalCluster::new(
+            2,
+            vec![(ObjectId(0), mica(1 << 8)), (ObjectId(1), mica(1 << 6))],
+        );
+        c.load(ObjectId(0), 1..=20);
+        c.load(ObjectId(1), 1..=20);
+        let mut client = c.client(false);
+        // Read table 0, write the same key in table 1: one transaction
+        // spanning objects.
+        let out = c.run_tx(
+            &mut client,
+            vec![TxItem::read(ObjectId(0), 9)],
+            vec![TxItem::update(ObjectId(1), 9)],
+        );
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert_eq!(c.run_lookup(&mut client, ObjectId(0), 9).version, 1);
+        assert_eq!(c.run_lookup(&mut client, ObjectId(1), 9).version, 2);
+        // Same key, different tables: locks are per-table.
+        let res0 = c.run_lookup(&mut client, ObjectId(0), 9);
+        assert!(!res0.locked);
     }
 
     #[test]

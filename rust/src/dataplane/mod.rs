@@ -21,11 +21,22 @@
 //!   the u32 correlation cookie echoed on replies) and wire sizes (paper
 //!   §5.2). The `encode_*_into` variants frame straight into preallocated
 //!   ring-slot buffers, so the live hot path never allocates while
-//!   encoding.
-//! * [`live`] — the live composition over the loopback fabric: sharded
-//!   server loops, pipelined batch lookups with doorbell-coalesced reads,
-//!   ring-buffer RPC transport, and the [`live::TX_WINDOW`]-wide
-//!   transaction scheduler multiplexing concurrent engines per client.
+//!   encoding. The target object id sits at a fixed wire offset
+//!   ([`rpc::request_obj`]) so receive paths can steer multi-object
+//!   traffic without a full decode.
+//! * [`live`] — the live composition over the loopback fabric, a genuine
+//!   **multi-object dataplane** since PR 3: every node hosts a storage
+//!   catalog ([`crate::ds::catalog`]) of independent tables packed into
+//!   one registered region, the cluster-wide placement map routes
+//!   `(ObjectId, key)` to `(node, shard, offset)`, and transactions mix
+//!   objects freely (four-table TATP and SmallBank run natively).
+//!   Sharded server loops own a bucket range of *every* table; pipelined
+//!   batch lookups use doorbell-coalesced reads that may span tables;
+//!   the transaction scheduler multiplexes concurrent engines per client
+//!   behind an **adaptive window** ([`live::TxWindow`]: grow on clean
+//!   commits, hold on ring pressure, shrink on sustained aborts).
+//! * [`local`] — the reference in-process driver over per-node catalogs
+//!   (the semantic baseline the simulator and live driver must match).
 
 pub mod live;
 pub mod local;

@@ -116,6 +116,18 @@ pub fn encode_request(req: &RpcRequest) -> Vec<u8> {
     b
 }
 
+/// Peek the target object id of an encoded request body without decoding
+/// the rest. The id sits at a fixed wire offset (bytes 0..4 of the body,
+/// right after the header) precisely so a receive path can steer the
+/// message to the owning table's lane — the catalog's multi-object
+/// routing — before paying for a full decode.
+pub fn request_obj(b: &[u8]) -> Option<ObjectId> {
+    if b.len() < 4 {
+        return None;
+    }
+    Some(ObjectId(u32::from_le_bytes(b[0..4].try_into().ok()?)))
+}
+
 /// Decode a request body.
 pub fn decode_request(b: &[u8]) -> Option<RpcRequest> {
     if b.len() < RPC_REQ_BODY_BYTES as usize + 4 {
@@ -303,6 +315,21 @@ mod tests {
         let bytes = encode_request(&req);
         assert_eq!(decode_request(&bytes), Some(req.clone()));
         assert_eq!(bytes.len() as u32 + RPC_HEADER_BYTES, request_wire_bytes(&req));
+    }
+
+    #[test]
+    fn object_id_peekable_at_fixed_offset() {
+        // The catalog's server lanes steer on the object id, so it must
+        // stay at bytes 0..4 of every request body regardless of payload.
+        for (obj, value) in [
+            (ObjectId(0), None),
+            (ObjectId(3), Some(vec![7u8; 64])),
+            (ObjectId(u32::MAX), None),
+        ] {
+            let req = RpcRequest { obj, key: 9, op: RpcOp::Read, tx_id: 0, value };
+            assert_eq!(request_obj(&encode_request(&req)), Some(obj));
+        }
+        assert_eq!(request_obj(&[1, 2]), None, "truncated body rejected");
     }
 
     #[test]

@@ -100,6 +100,44 @@ impl TxItem {
         self.value = Some(v);
         self
     }
+
+    /// Attach the canonical [`stamped_value`] payload, so live
+    /// overwrites are observable per `(object, key)`. Deletes carry no
+    /// payload.
+    pub fn with_stamped_value(mut self, value_len: u32) -> Self {
+        if self.kind == WriteKind::Delete {
+            return self;
+        }
+        self.value = Some(stamped_value(self.obj, self.key, value_len));
+        self
+    }
+}
+
+/// The native live `(read set, write set)` conversion the workloads
+/// share: read items carry no payload, write items get the canonical
+/// [`stamped_value`] (deletes excluded).
+pub fn stamped_sets(
+    read_set: Vec<TxItem>,
+    write_set: Vec<TxItem>,
+    value_len: u32,
+) -> (Vec<TxItem>, Vec<TxItem>) {
+    let writes = write_set.into_iter().map(|i| i.with_stamped_value(value_len)).collect();
+    (read_set, writes)
+}
+
+/// The canonical stamped payload layout shared by write sets and
+/// population loaders: key in bytes 0..8, object id in 8..12 (each only
+/// when `value_len` has room), zero elsewhere. Keeping loaders and
+/// [`TxItem::with_stamped_value`] on one encoder is what makes
+/// "overwrites are observable per `(object, key)`" checks meaningful.
+pub fn stamped_value(obj: ObjectId, key: u64, value_len: u32) -> Vec<u8> {
+    let mut v = vec![0u8; value_len as usize];
+    let n = v.len().min(8);
+    v[..n].copy_from_slice(&key.to_le_bytes()[..n]);
+    if v.len() >= 12 {
+        v[8..12].copy_from_slice(&obj.0.to_le_bytes());
+    }
+    v
 }
 
 /// Why a transaction aborted.

@@ -1,0 +1,478 @@
+//! Multi-object storage catalog (paper §4).
+//!
+//! A Storm node serves *many* remote data-structure objects — TATP's four
+//! tables map to four Storm objects, SmallBank's three to three — and the
+//! dataplane must resolve `(ObjectId, key)` to a remote address without
+//! extra round trips ("RDMA vs. RPC for Implementing Distributed Data
+//! Structures": the object-catalog layer is where one-sided designs win
+//! or lose). This module is that layer:
+//!
+//! * [`CatalogConfig`] — the cluster-wide object schema: one
+//!   [`MicaConfig`] per object, object `o` being `ObjectId(o)` (ids are
+//!   dense so servers and clients index tables by id, no hashing).
+//! * [`Catalog`] — one node's (or one server shard's) storage: an
+//!   independent [`MicaTable`] per object plus the shared chain allocator
+//!   and region registry, with the owner-side `rpc_handler` dispatched by
+//!   the request's object id.
+//! * [`Placement`] — the cluster-wide placement map routing
+//!   `(ObjectId, key)` to `(node, shard, packed offset)`. All objects
+//!   share one registered data region per node (paper principle #3:
+//!   minimize region metadata — one MPT entry serves every table);
+//!   each table occupies a fixed offset range computed by
+//!   [`crate::mem::pack_offsets`], so a client hint is
+//!   `base(obj) + bucket(key) * bucket_bytes(obj)` with zero extra
+//!   lookups, and a one-sided `read_batch` doorbell can span tables on
+//!   the same node.
+//!
+//! Keys are partitioned across nodes by the shared hash owner function
+//! (the same for every object), and across a node's server shards by
+//! bucket range within the object's table.
+
+use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
+use crate::ds::mica::{bucket_of, owner_of, MicaConfig, MicaTable};
+use crate::mem::{pack_offsets, ContiguousAllocator, MrKey, RegionMode, RegionTable};
+
+/// Packed tables are aligned to this boundary within the shared region
+/// (keeps every table's MTT working set page-aligned).
+pub const TABLE_ALIGN: u64 = 4096;
+
+/// Bucket count for a table expected to hold `rows` items at ~50% inline
+/// occupancy: power of two, at least 8 so the live server's shard slicing
+/// (a power-of-two shard count) always divides it.
+pub fn buckets_for(rows: u64, width: u32) -> u64 {
+    ((rows * 2).div_ceil(width.max(1) as u64)).max(8).next_power_of_two()
+}
+
+/// The cluster-wide object schema: per-object table geometry. Object `o`
+/// is `ObjectId(o)` — ids are dense `0..objects.len()`.
+#[derive(Clone, Debug)]
+pub struct CatalogConfig {
+    /// One table geometry per object.
+    pub objects: Vec<MicaConfig>,
+}
+
+impl CatalogConfig {
+    /// Schema over the given object geometries.
+    pub fn new(objects: Vec<MicaConfig>) -> Self {
+        assert!(!objects.is_empty(), "catalog needs at least one object");
+        CatalogConfig { objects }
+    }
+
+    /// Single-object schema (the pre-catalog live cluster shape).
+    pub fn single(cfg: MicaConfig) -> Self {
+        Self::new(vec![cfg])
+    }
+
+    /// Number of objects.
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Always false ([`CatalogConfig::new`] rejects empty schemas).
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Server shards usable by every object: `max` clamped to the
+    /// smallest table's bucket count. Both are powers of two, so the
+    /// result divides every object's bucket count.
+    pub fn shard_count(&self, max: u32) -> u32 {
+        let min_buckets = self.objects.iter().map(|c| c.buckets).min().expect("non-empty");
+        min_buckets.min(max as u64) as u32
+    }
+
+    /// Per-shard slice of the schema: every table's bucket count divided
+    /// by `shards` (each server shard owns one bucket range of every
+    /// object).
+    pub fn shard_slice(&self, shards: u32) -> CatalogConfig {
+        CatalogConfig {
+            objects: self
+                .objects
+                .iter()
+                .map(|c| {
+                    assert!(
+                        c.buckets % shards as u64 == 0,
+                        "shards must divide every table's bucket count"
+                    );
+                    MicaConfig { buckets: c.buckets / shards as u64, ..c.clone() }
+                })
+                .collect(),
+        }
+    }
+
+    /// Wire length of each object's bucket array.
+    pub fn table_lens(&self) -> Vec<u64> {
+        self.objects.iter().map(|c| c.buckets * c.bucket_bytes() as u64).collect()
+    }
+}
+
+/// One node's (or one server shard's) storage: an independent
+/// [`MicaTable`] per catalog object plus the shared chain allocator and
+/// region registry.
+///
+/// Construction order pins each table's private bucket region to
+/// `MrKey(object id)`; chain chunks register only afterwards (the
+/// allocator grows lazily), so chain-region keys are always `>= objects`
+/// and can never be mistaken for a table region.
+pub struct Catalog {
+    tables: Vec<MicaTable>,
+    /// Chain-item allocator shared by all tables.
+    pub alloc: ContiguousAllocator,
+    /// Region registry (bucket arrays first, then chain chunks).
+    pub regions: RegionTable,
+}
+
+impl Catalog {
+    /// Build the per-object tables for `cfg` (16-chunk chain budget —
+    /// plenty for a live shard; see [`Catalog::with_chunks`]).
+    pub fn new(cfg: &CatalogConfig, mode: RegionMode) -> Self {
+        Self::with_chunks(cfg, mode, 16)
+    }
+
+    /// [`Catalog::new`] with an explicit chain-chunk budget (the
+    /// simulator loads far larger populations than one live shard).
+    pub fn with_chunks(cfg: &CatalogConfig, mode: RegionMode, max_chunks: usize) -> Self {
+        let mut regions = RegionTable::new();
+        let alloc = ContiguousAllocator::new(64 << 20, max_chunks, mode);
+        let tables: Vec<MicaTable> = cfg
+            .objects
+            .iter()
+            .map(|tc| MicaTable::new(tc.clone(), &mut regions, mode))
+            .collect();
+        for (o, t) in tables.iter().enumerate() {
+            assert_eq!(
+                t.bucket_region,
+                MrKey(o as u32),
+                "table bucket regions must be keyed by object id"
+            );
+        }
+        Catalog { tables, alloc, regions }
+    }
+
+    /// Number of objects hosted.
+    pub fn objects(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// An object's table.
+    pub fn table(&self, obj: ObjectId) -> &MicaTable {
+        &self.tables[obj.0 as usize]
+    }
+
+    /// An object's table, mutably.
+    pub fn table_mut(&mut self, obj: ObjectId) -> &mut MicaTable {
+        &mut self.tables[obj.0 as usize]
+    }
+
+    /// Direct insert into an object's table (population loading).
+    pub fn insert(&mut self, obj: ObjectId, key: u64, value: Option<&[u8]>) -> RpcResult {
+        let Catalog { tables, alloc, regions } = self;
+        tables[obj.0 as usize].insert(key, value, alloc, regions)
+    }
+
+    /// The owner-side `rpc_handler`, dispatched by the request's object
+    /// id (the field the pre-catalog live server used to drop).
+    pub fn serve_rpc(&mut self, req: &RpcRequest) -> RpcResponse {
+        let Catalog { tables, alloc, regions } = self;
+        let table = &mut tables[req.obj.0 as usize];
+        match req.op {
+            RpcOp::Read => {
+                let (result, hops) = table.get(req.key);
+                RpcResponse { result, hops }
+            }
+            RpcOp::LockRead => {
+                let (result, hops) = table.lock_read(req.key, req.tx_id);
+                RpcResponse { result, hops }
+            }
+            RpcOp::UpdateUnlock => {
+                RpcResponse::inline(table.update_unlock(req.key, req.tx_id, req.value.as_deref()))
+            }
+            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
+            RpcOp::Insert => {
+                RpcResponse::inline(table.insert(req.key, req.value.as_deref(), alloc, regions))
+            }
+            RpcOp::Delete => {
+                let (result, hops) = table.delete(req.key, alloc);
+                RpcResponse { result, hops }
+            }
+        }
+    }
+}
+
+/// Geometry of one catalog object as placed on every node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TableGeo {
+    /// Packed base offset of this table's bucket array in the node data
+    /// region.
+    pub base: u64,
+    /// Bucket-array bytes.
+    pub len: u64,
+    /// Bucket mask (`buckets - 1`).
+    pub mask: u64,
+    /// Buckets per server shard.
+    pub local_buckets: u64,
+    /// Bytes per bucket.
+    pub bucket_bytes: u32,
+    /// Inline slots per bucket.
+    pub width: u32,
+    /// Bytes per item.
+    pub item_size: u32,
+}
+
+/// Where `(obj, key)`'s home bucket lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementRef {
+    /// Owner node.
+    pub node: u32,
+    /// Server shard (receive lane) on that node.
+    pub shard: u32,
+    /// Packed offset of the home bucket within the node data region.
+    pub offset: u64,
+}
+
+/// Cluster-wide placement map: routes `(ObjectId, key)` to
+/// `(node, shard, packed offset)` with pure arithmetic — no per-key
+/// state, so every client and server derives identical routing.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    nodes: u32,
+    shards: u32,
+    geo: Vec<TableGeo>,
+    region_len: u64,
+}
+
+impl Placement {
+    /// Placement of `cfg` over `nodes` nodes with `shards` server shards
+    /// per node.
+    pub fn new(cfg: &CatalogConfig, nodes: u32, shards: u32) -> Self {
+        assert!(nodes >= 1 && shards >= 1);
+        let lens = cfg.table_lens();
+        let (bases, region_len) = pack_offsets(&lens, TABLE_ALIGN);
+        let geo = cfg
+            .objects
+            .iter()
+            .zip(bases.iter().zip(&lens))
+            .map(|(c, (&base, &len))| {
+                assert!(
+                    c.buckets % shards as u64 == 0,
+                    "shards must divide every table's bucket count"
+                );
+                TableGeo {
+                    base,
+                    len,
+                    mask: c.buckets - 1,
+                    local_buckets: c.buckets / shards as u64,
+                    bucket_bytes: c.bucket_bytes(),
+                    width: c.width,
+                    item_size: c.item_size(),
+                }
+            })
+            .collect();
+        Placement { nodes, shards, geo, region_len }
+    }
+
+    /// Nodes in the cluster.
+    pub fn nodes(&self) -> u32 {
+        self.nodes
+    }
+
+    /// Server shards (receive lanes) per node.
+    pub fn shards(&self) -> u32 {
+        self.shards
+    }
+
+    /// Catalog objects.
+    pub fn objects(&self) -> usize {
+        self.geo.len()
+    }
+
+    /// An object's placed geometry.
+    pub fn geo(&self, obj: ObjectId) -> &TableGeo {
+        &self.geo[obj.0 as usize]
+    }
+
+    /// Bytes of the packed per-node data region (all tables).
+    pub fn region_len(&self) -> u64 {
+        self.region_len
+    }
+
+    /// Owner node of a key (hash-partitioned, shared by all objects).
+    pub fn node_of(&self, key: u64) -> u32 {
+        owner_of(key, self.nodes)
+    }
+
+    /// Server shard owning `(obj, key)` on its owner node.
+    pub fn shard_of(&self, obj: ObjectId, key: u64) -> u32 {
+        let g = self.geo(obj);
+        (bucket_of(key, g.mask) / g.local_buckets) as u32
+    }
+
+    /// First global bucket of a shard's slice of an object's table.
+    pub fn base_bucket(&self, obj: ObjectId, shard: u32) -> u64 {
+        shard as u64 * self.geo(obj).local_buckets
+    }
+
+    /// Full route for `(obj, key)`: owner node, server shard, and the
+    /// packed offset of the home bucket.
+    pub fn place(&self, obj: ObjectId, key: u64) -> PlacementRef {
+        let g = self.geo(obj);
+        let bucket = bucket_of(key, g.mask);
+        PlacementRef {
+            node: self.node_of(key),
+            shard: (bucket / g.local_buckets) as u32,
+            offset: g.base + bucket * g.bucket_bytes as u64,
+        }
+    }
+
+    /// Object whose packed range covers `offset` (one-sided reads never
+    /// span tables, so the offset alone identifies the table a read
+    /// returned bytes of).
+    pub fn object_at(&self, offset: u64) -> ObjectId {
+        let i = self
+            .geo
+            .iter()
+            .rposition(|g| g.base <= offset)
+            .expect("offset below the first table");
+        debug_assert!(
+            offset < self.geo[i].base + self.geo[i].len,
+            "offset {offset} falls in packing padding"
+        );
+        ObjectId(i as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PageSize;
+
+    fn cfg(buckets: u64, width: u32) -> MicaConfig {
+        MicaConfig { buckets, width, value_len: 16, store_values: true }
+    }
+
+    #[test]
+    fn buckets_for_sizes_tables() {
+        assert!(buckets_for(1000, 2).is_power_of_two());
+        assert!(buckets_for(1000, 2) >= 1000);
+        assert_eq!(buckets_for(0, 2), 8, "floor keeps shard slicing divisible");
+        assert!(buckets_for(1000, 1) >= buckets_for(1000, 2));
+    }
+
+    #[test]
+    fn shard_count_clamps_to_smallest_table() {
+        let cat = CatalogConfig::new(vec![cfg(64, 2), cfg(4, 1), cfg(256, 2)]);
+        assert_eq!(cat.shard_count(8), 4);
+        let slice = cat.shard_slice(4);
+        assert_eq!(
+            slice.objects.iter().map(|c| c.buckets).collect::<Vec<_>>(),
+            vec![16, 1, 64]
+        );
+    }
+
+    #[test]
+    fn placement_routes_consistently() {
+        let cat = CatalogConfig::new(vec![cfg(64, 2), cfg(16, 1)]);
+        let place = Placement::new(&cat, 3, 4);
+        for obj in [ObjectId(0), ObjectId(1)] {
+            for key in 1..=500u64 {
+                let r = place.place(obj, key);
+                assert_eq!(r.node, place.node_of(key));
+                assert_eq!(r.shard, place.shard_of(obj, key));
+                assert!(r.shard < place.shards());
+                // The packed offset falls inside the object's range and
+                // identifies it.
+                let g = place.geo(obj);
+                assert!(r.offset >= g.base && r.offset < g.base + g.len);
+                assert_eq!(place.object_at(r.offset), obj);
+                // base bucket + local bucket reconstructs the global one.
+                let local = bucket_of(key, g.local_buckets - 1);
+                assert_eq!(
+                    place.base_bucket(obj, r.shard) + local,
+                    bucket_of(key, g.mask),
+                    "shard slices must tile the global bucket space"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_tables_are_aligned_and_disjoint() {
+        let cat = CatalogConfig::new(vec![cfg(8, 1), cfg(64, 2), cfg(16, 2)]);
+        let place = Placement::new(&cat, 2, 8);
+        let mut prev_end = 0u64;
+        for o in 0..3u32 {
+            let g = place.geo(ObjectId(o));
+            assert_eq!(g.base % TABLE_ALIGN, 0);
+            assert!(g.base >= prev_end, "tables must not overlap");
+            prev_end = g.base + g.len;
+        }
+        assert!(place.region_len() >= prev_end);
+    }
+
+    #[test]
+    fn catalog_tables_are_independent() {
+        let cat = CatalogConfig::new(vec![cfg(16, 2), cfg(16, 2)]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        assert_eq!(c.objects(), 2);
+        assert_eq!(c.insert(ObjectId(0), 7, Some(b"zero")), RpcResult::Ok);
+        assert_eq!(c.insert(ObjectId(1), 7, Some(b"one")), RpcResult::Ok);
+        c.insert(ObjectId(1), 7, Some(b"one-again")); // version bump in table 1 only
+        match c.table(ObjectId(0)).get(7).0 {
+            RpcResult::Value { version, .. } => assert_eq!(version, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        match c.table(ObjectId(1)).get(7).0 {
+            RpcResult::Value { version, .. } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_rpc_dispatches_by_object() {
+        let cat = CatalogConfig::new(vec![cfg(16, 2), cfg(16, 2)]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        c.insert(ObjectId(1), 42, Some(b"x"));
+        let read = |obj| RpcRequest { obj, key: 42, op: RpcOp::Read, tx_id: 0, value: None };
+        assert!(matches!(c.serve_rpc(&read(ObjectId(1))).result, RpcResult::Value { .. }));
+        assert_eq!(c.serve_rpc(&read(ObjectId(0))).result, RpcResult::NotFound);
+        // Locks are per-table: locking (1, 42) leaves (0, 42) untouched.
+        let lock = RpcRequest {
+            obj: ObjectId(1),
+            key: 42,
+            op: RpcOp::LockRead,
+            tx_id: 9,
+            value: None,
+        };
+        assert!(matches!(c.serve_rpc(&lock).result, RpcResult::Value { .. }));
+        c.insert(ObjectId(0), 42, None);
+        assert!(matches!(
+            c.serve_rpc(&read(ObjectId(0))).result,
+            RpcResult::Value { locked: false, .. }
+        ));
+    }
+
+    #[test]
+    fn chain_regions_never_collide_with_table_regions() {
+        // Width-1 single-bucket tables: every extra insert chains, forcing
+        // chunk registration. Chain addrs must carry region keys >= the
+        // object count.
+        let cat = CatalogConfig::new(vec![cfg(8, 1), cfg(8, 1)]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        for key in 1..=64u64 {
+            assert_eq!(c.insert(ObjectId(0), key, None), RpcResult::Ok);
+            assert_eq!(c.insert(ObjectId(1), key, None), RpcResult::Ok);
+        }
+        let mut chained = 0;
+        for obj in [ObjectId(0), ObjectId(1)] {
+            for key in 1..=64u64 {
+                if let (RpcResult::Value { addr, .. }, _) = c.table(obj).get(key) {
+                    if addr.region != c.table(obj).bucket_region {
+                        assert!(addr.region.0 >= 2, "chain region aliases a table region");
+                        chained += 1;
+                    }
+                }
+            }
+        }
+        assert!(chained > 0, "oversubscribed tables must have chained items");
+    }
+}

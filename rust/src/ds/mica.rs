@@ -636,6 +636,10 @@ pub struct MicaClient {
     bucket_bytes: u32,
     /// Bucket region of each node's shard.
     region_of: Vec<MrKey>,
+    /// Base offset of this object's bucket array within each node's
+    /// region (nonzero under the catalog's packed layout, where all
+    /// tables share one registered region; see [`crate::ds::catalog`]).
+    base: u64,
     /// Storm principle 5(i): cache exact item addresses client-side.
     cache: Option<HashMap<u64, (u32, RemoteAddr)>>,
 }
@@ -652,6 +656,7 @@ impl MicaClient {
             item_size: cfg.item_size(),
             bucket_bytes: cfg.bucket_bytes(),
             region_of,
+            base: 0,
             cache: None,
         }
     }
@@ -659,6 +664,14 @@ impl MicaClient {
     /// Enable the client-side address cache.
     pub fn with_cache(mut self) -> Self {
         self.cache = Some(HashMap::new());
+        self
+    }
+
+    /// Resolve against a packed multi-table layout: bucket offsets are
+    /// rebased by `base`, the table's fixed offset within the shared
+    /// region.
+    pub fn with_base(mut self, base: u64) -> Self {
+        self.base = base;
         self
     }
 
@@ -681,7 +694,7 @@ impl MicaClient {
             node,
             addr: RemoteAddr {
                 region: self.region_of[node as usize],
-                offset: bucket * self.bucket_bytes as u64,
+                offset: self.base + bucket * self.bucket_bytes as u64,
             },
             len: self.bucket_bytes,
         }
@@ -695,7 +708,9 @@ impl MicaClient {
                 let bucket = bucket_of(key, self.mask);
                 let addr = RemoteAddr {
                     region: self.region_of[node as usize],
-                    offset: bucket * self.bucket_bytes as u64 + i as u64 * self.item_size as u64,
+                    offset: self.base
+                        + bucket * self.bucket_bytes as u64
+                        + i as u64 * self.item_size as u64,
                 };
                 if let Some(cache) = &mut self.cache {
                     cache.insert(key, (node, addr));
@@ -1046,6 +1061,34 @@ mod tests {
         let iv = t.item_view(hint2.addr); // None or mismatched key
         assert_eq!(client.lookup_end_item(42, iv), LookupOutcome::NeedRpc);
         assert!(client.cached_addr(42).is_none(), "stale entry must be evicted");
+    }
+
+    #[test]
+    fn client_base_offset_rebases_hints_and_hits() {
+        let (mut t, mut a, mut r) = setup(64, 2);
+        let cfg = t.config().clone();
+        const BASE: u64 = 1 << 20;
+        let mut plain = MicaClient::new(ObjectId(1), &cfg, 1, vec![t.bucket_region]);
+        let mut packed =
+            MicaClient::new(ObjectId(1), &cfg, 1, vec![t.bucket_region]).with_base(BASE);
+        t.insert(77, None, &mut a, &mut r);
+        let h0 = plain.lookup_start(77);
+        let h1 = packed.lookup_start(77);
+        assert_eq!(h1.addr.offset, h0.addr.offset + BASE);
+        assert_eq!((h1.node, h1.len), (h0.node, h0.len));
+        // Hit addresses are rebased the same way.
+        let bucket = h0.addr.offset / cfg.bucket_bytes() as u64;
+        let view = t.bucket_view(bucket);
+        match (plain.lookup_end_bucket(77, &view), packed.lookup_end_bucket(77, &view)) {
+            (
+                LookupOutcome::Hit { addr: a0, version: v0, .. },
+                LookupOutcome::Hit { addr: a1, version: v1, .. },
+            ) => {
+                assert_eq!(v0, v1);
+                assert_eq!(a1.offset, a0.offset + BASE);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

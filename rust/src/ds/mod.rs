@@ -18,9 +18,16 @@
 //! covers the whole neighborhood); [`queue`] and [`btree`] — the paper's
 //! "other data structures" (cached head/tail pointers; cached inner
 //! nodes).
+//!
+//! [`catalog`] sits above the individual tables: a node hosts *many*
+//! objects (paper §4 — TATP's four tables are four Storm objects), and
+//! the catalog's [`catalog::Placement`] map routes `(ObjectId, key)` to
+//! `(node, shard, packed offset)` so lookup hints resolve without extra
+//! round trips.
 
 pub mod api;
 pub mod btree;
+pub mod catalog;
 pub mod hopscotch;
 pub mod mica;
 pub mod queue;
@@ -28,5 +35,6 @@ pub mod queue;
 pub use api::{
     LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version,
 };
+pub use catalog::{buckets_for, Catalog, CatalogConfig, Placement};
 pub use hopscotch::HopscotchTable;
 pub use mica::{BucketView, MicaClient, MicaConfig, MicaTable};

@@ -20,4 +20,4 @@ pub mod region;
 
 pub use alloc::{AllocError, ContiguousAllocator, RemoteAddr};
 pub use physseg::{PhysSegError, PhysSegRegistrar};
-pub use region::{MrKey, PageSize, RegionMode, RegionTable};
+pub use region::{pack_offsets, MrKey, PageSize, RegionMode, RegionTable};

@@ -156,6 +156,25 @@ impl RegionTable {
     }
 }
 
+/// Pack sub-region lengths into one region: returns per-entry base
+/// offsets (each aligned to `align`, a power of two) plus the total
+/// packed length. The storage catalog uses this to give every table a
+/// fixed offset range inside a *single* registered region — one MPT
+/// entry serves N tables (paper principle #3: minimize region metadata),
+/// and a doorbell-batched read group can span tables without extra
+/// region lookups.
+pub fn pack_offsets(lens: &[u64], align: u64) -> (Vec<u64>, u64) {
+    assert!(align.is_power_of_two(), "alignment must be a power of two");
+    let mut bases = Vec::with_capacity(lens.len());
+    let mut cur = 0u64;
+    for &len in lens {
+        cur = (cur + align - 1) & !(align - 1);
+        bases.push(cur);
+        cur += len;
+    }
+    (bases, cur.max(1))
+}
+
 /// Iterator over touched MTT entry ids.
 pub struct MttRange {
     next: u64,
@@ -228,6 +247,19 @@ mod tests {
         assert_eq!(ids, vec![0, 1]); // crosses the 4 KB boundary
         let one: Vec<u64> = t.mtt_entries_for(k, 0, 64).collect();
         assert_eq!(one, vec![0]);
+    }
+
+    #[test]
+    fn pack_offsets_aligns_and_covers() {
+        let (bases, total) = pack_offsets(&[100, 4096, 1], 4096);
+        assert_eq!(bases, vec![0, 4096, 8192]);
+        assert_eq!(total, 8193);
+        // Degenerate cases.
+        let (bases, total) = pack_offsets(&[], 64);
+        assert!(bases.is_empty());
+        assert_eq!(total, 1, "a region must never be zero-length");
+        let (bases, _) = pack_offsets(&[64, 64, 64], 64);
+        assert_eq!(bases, vec![0, 64, 128]);
     }
 
     #[test]

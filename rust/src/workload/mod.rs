@@ -1,13 +1,20 @@
-//! Workloads from the paper's evaluation (§6.1).
+//! Workloads from the paper's evaluation (§6.1) and beyond.
 //!
 //! * [`kv`] — *Key-value lookups*: random single-key lookups over the
 //!   distributed MICA table, 128-byte transfers.
 //! * [`tatp`] — the Telecom Application Transaction Processing benchmark:
-//!   seven transaction types over four tables, 80% reads / 16% writes /
-//!   4% inserts+deletes, run through Storm transactions.
+//!   seven transaction types over four tables (four catalog objects,
+//!   running natively on the live multi-object dataplane), 80% reads /
+//!   16% writes / 4% inserts+deletes, run through Storm transactions.
+//! * [`smallbank`] — the SmallBank banking benchmark: six transaction
+//!   types over three catalog objects with a hot-account skew; much
+//!   write-heavier than TATP, stressing the lock/commit volleys and the
+//!   abort path.
 
 pub mod kv;
+pub mod smallbank;
 pub mod tatp;
 
 pub use kv::KvWorkload;
+pub use smallbank::{SmallBankKind, SmallBankPopulation, SmallBankTx, SmallBankWorkload};
 pub use tatp::{TatpKind, TatpPopulation, TatpTx, TatpWorkload};

@@ -1,0 +1,328 @@
+//! SmallBank — the banking OLTP benchmark (H-Store / Shore-MT lineage),
+//! added for scenario diversity beyond TATP.
+//!
+//! Three tables keyed by customer id, mapped to three catalog objects:
+//! ACCOUNTS (the name→id mapping every transaction consults), SAVINGS
+//! and CHECKING (the balances). Six transaction types with the standard
+//! mix (SendPayment 25%, the other five 15% each):
+//!
+//! | type            | reads                         | writes                          |
+//! |-----------------|-------------------------------|---------------------------------|
+//! | Amalgamate      | ACCOUNTS(a), ACCOUNTS(b)      | SAVINGS(a), CHECKING(a), CHECKING(b) |
+//! | Balance         | ACCOUNTS, SAVINGS, CHECKING   | —                               |
+//! | DepositChecking | ACCOUNTS                      | CHECKING                        |
+//! | SendPayment     | ACCOUNTS(a), ACCOUNTS(b)      | CHECKING(a), CHECKING(b)        |
+//! | TransactSavings | ACCOUNTS                      | SAVINGS                         |
+//! | WriteCheck      | ACCOUNTS, SAVINGS             | CHECKING                        |
+//!
+//! Contention comes from the benchmark's hotspot: a configurable
+//! fraction of account picks lands in a small hot set, so concurrent
+//! clients collide on the hot customers' balance rows — the write-write
+//! conflicts the OCC engine must absorb. Unlike TATP (80% reads), four
+//! of the six types write, so SmallBank stresses the lock/commit RPC
+//! volleys and the abort path much harder.
+
+use crate::dataplane::tx::TxItem;
+use crate::ds::api::ObjectId;
+use crate::ds::catalog::{buckets_for, CatalogConfig};
+use crate::ds::mica::MicaConfig;
+use crate::sim::Pcg64;
+
+/// Object id of the ACCOUNTS table.
+pub const ACCOUNTS: ObjectId = ObjectId(0);
+/// SAVINGS table.
+pub const SAVINGS: ObjectId = ObjectId(1);
+/// CHECKING table.
+pub const CHECKING: ObjectId = ObjectId(2);
+
+/// The six SmallBank transaction types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SmallBankKind {
+    /// 15%: move a customer's savings into their checking, zeroing both
+    /// into one row.
+    Amalgamate,
+    /// 15%: read a customer's total balance.
+    Balance,
+    /// 15%: deposit into checking.
+    DepositChecking,
+    /// 25%: transfer checking→checking between two customers.
+    SendPayment,
+    /// 15%: deposit into savings.
+    TransactSavings,
+    /// 15%: cash a check against savings+checking, writing checking.
+    WriteCheck,
+}
+
+impl SmallBankKind {
+    /// Does this transaction type mutate state?
+    pub fn is_write(self) -> bool {
+        !matches!(self, SmallBankKind::Balance)
+    }
+}
+
+/// One generated transaction.
+#[derive(Clone, Debug)]
+pub struct SmallBankTx {
+    /// Transaction type (for per-type stats).
+    pub kind: SmallBankKind,
+    /// Read set.
+    pub read_set: Vec<TxItem>,
+    /// Write set.
+    pub write_set: Vec<TxItem>,
+}
+
+impl SmallBankTx {
+    /// The `(read set, write set)` pair for the live catalog: write items
+    /// carry `value_len`-byte stamped values (see
+    /// [`crate::dataplane::tx::stamped_sets`]).
+    pub fn sets(self, value_len: u32) -> (Vec<TxItem>, Vec<TxItem>) {
+        crate::dataplane::tx::stamped_sets(self.read_set, self.write_set, value_len)
+    }
+}
+
+/// Workload generator.
+#[derive(Clone, Debug)]
+pub struct SmallBankWorkload {
+    /// Customers in the database (accounts are `1..=accounts`).
+    pub accounts: u64,
+    /// Size of the hot account set (the first `hot_accounts` ids).
+    pub hot_accounts: u64,
+    /// Percent of account picks drawn from the hot set.
+    pub hot_pct: u32,
+}
+
+impl SmallBankWorkload {
+    /// Standard generator: 10% of accounts are hot and receive 50% of
+    /// the picks.
+    pub fn new(accounts: u64) -> Self {
+        assert!(accounts >= 1);
+        SmallBankWorkload { accounts, hot_accounts: (accounts / 10).max(1), hot_pct: 50 }
+    }
+
+    /// Pick one account id per the hotspot distribution.
+    fn account(&self, rng: &mut Pcg64) -> u64 {
+        if rng.gen_range(100) < self.hot_pct as u64 {
+            rng.gen_range(self.hot_accounts) + 1
+        } else {
+            rng.gen_range(self.accounts) + 1
+        }
+    }
+
+    /// Two distinct account ids (sender/receiver pairs).
+    fn account_pair(&self, rng: &mut Pcg64) -> (u64, u64) {
+        let a = self.account(rng);
+        if self.accounts == 1 {
+            return (a, a);
+        }
+        let mut b = self.account(rng);
+        if b == a {
+            b = a % self.accounts + 1;
+        }
+        (a, b)
+    }
+
+    /// Draw the next transaction per the standard mix.
+    pub fn next_tx(&self, rng: &mut Pcg64) -> SmallBankTx {
+        let roll = rng.gen_range(100);
+        match roll {
+            0..=14 => {
+                let (a, b) = self.account_pair(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::Amalgamate,
+                    read_set: vec![TxItem::read(ACCOUNTS, a), TxItem::read(ACCOUNTS, b)],
+                    write_set: vec![
+                        TxItem::update(SAVINGS, a),
+                        TxItem::update(CHECKING, a),
+                        TxItem::update(CHECKING, b),
+                    ],
+                }
+            }
+            15..=29 => {
+                let a = self.account(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::Balance,
+                    read_set: vec![
+                        TxItem::read(ACCOUNTS, a),
+                        TxItem::read(SAVINGS, a),
+                        TxItem::read(CHECKING, a),
+                    ],
+                    write_set: vec![],
+                }
+            }
+            30..=44 => {
+                let a = self.account(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::DepositChecking,
+                    read_set: vec![TxItem::read(ACCOUNTS, a)],
+                    write_set: vec![TxItem::update(CHECKING, a)],
+                }
+            }
+            45..=69 => {
+                let (a, b) = self.account_pair(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::SendPayment,
+                    read_set: vec![TxItem::read(ACCOUNTS, a), TxItem::read(ACCOUNTS, b)],
+                    write_set: vec![TxItem::update(CHECKING, a), TxItem::update(CHECKING, b)],
+                }
+            }
+            70..=84 => {
+                let a = self.account(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::TransactSavings,
+                    read_set: vec![TxItem::read(ACCOUNTS, a)],
+                    write_set: vec![TxItem::update(SAVINGS, a)],
+                }
+            }
+            _ => {
+                let a = self.account(rng);
+                SmallBankTx {
+                    kind: SmallBankKind::WriteCheck,
+                    read_set: vec![TxItem::read(ACCOUNTS, a), TxItem::read(SAVINGS, a)],
+                    write_set: vec![TxItem::update(CHECKING, a)],
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic initial population: one row per customer in each of the
+/// three tables.
+pub struct SmallBankPopulation {
+    /// Customers.
+    pub accounts: u64,
+}
+
+impl SmallBankPopulation {
+    /// Population for `accounts` customers.
+    pub fn new(accounts: u64) -> Self {
+        SmallBankPopulation { accounts }
+    }
+
+    /// Iterate all `(object, key)` rows to load.
+    pub fn rows(&self) -> impl Iterator<Item = (ObjectId, u64)> + '_ {
+        (1..=self.accounts)
+            .flat_map(|c| [(ACCOUNTS, c), (SAVINGS, c), (CHECKING, c)].into_iter())
+    }
+}
+
+/// The three-object live catalog for a SmallBank database of `accounts`
+/// customers (one row per customer per table, ~50% inline occupancy,
+/// width-2 buckets).
+pub fn live_catalog(accounts: u64, value_len: u32) -> CatalogConfig {
+    CatalogConfig::new(
+        (0..3)
+            .map(|_| MicaConfig {
+                buckets: buckets_for(accounts, 2),
+                width: 2,
+                value_len,
+                store_values: true,
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_matches_standard_fractions() {
+        let w = SmallBankWorkload::new(100_000);
+        let mut rng = Pcg64::seeded(3);
+        let n = 100_000;
+        let mut counts: std::collections::HashMap<SmallBankKind, u64> = Default::default();
+        for _ in 0..n {
+            *counts.entry(w.next_tx(&mut rng).kind).or_insert(0) += 1;
+        }
+        let f = |k| *counts.get(&k).unwrap_or(&0) as f64 / n as f64;
+        assert!((f(SmallBankKind::SendPayment) - 0.25).abs() < 0.01);
+        for k in [
+            SmallBankKind::Amalgamate,
+            SmallBankKind::Balance,
+            SmallBankKind::DepositChecking,
+            SmallBankKind::TransactSavings,
+            SmallBankKind::WriteCheck,
+        ] {
+            assert!((f(k) - 0.15).abs() < 0.01, "{k:?} fraction {}", f(k));
+        }
+    }
+
+    #[test]
+    fn hotspot_skews_account_picks() {
+        let w = SmallBankWorkload::new(10_000);
+        let mut rng = Pcg64::seeded(9);
+        let mut hot = 0u64;
+        let mut total = 0u64;
+        for _ in 0..5_000 {
+            let tx = w.next_tx(&mut rng);
+            for item in tx.read_set.iter().chain(tx.write_set.iter()) {
+                assert!((1..=10_000).contains(&item.key));
+                total += 1;
+                if item.key <= w.hot_accounts {
+                    hot += 1;
+                }
+            }
+        }
+        // 50% of picks from the hot 10%: far above the uniform share.
+        assert!(hot * 3 > total, "hot fraction {hot}/{total}");
+    }
+
+    #[test]
+    fn transactions_reference_the_three_tables_consistently() {
+        let w = SmallBankWorkload::new(500);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..2_000 {
+            let tx = w.next_tx(&mut rng);
+            assert!(!tx.read_set.is_empty(), "every type consults ACCOUNTS");
+            assert!(tx.read_set.iter().any(|i| i.obj == ACCOUNTS));
+            for item in tx.read_set.iter().chain(tx.write_set.iter()) {
+                assert!(item.obj.0 <= 2);
+            }
+            // Balance sheets: writes only touch balance tables.
+            for wr in &tx.write_set {
+                assert!(wr.obj == SAVINGS || wr.obj == CHECKING);
+            }
+            assert_eq!(tx.kind.is_write(), !tx.write_set.is_empty());
+            if tx.kind == SmallBankKind::SendPayment {
+                assert_eq!(tx.write_set.len(), 2);
+                if w.accounts > 1 {
+                    assert_ne!(
+                        tx.write_set[0].key, tx.write_set[1].key,
+                        "payments move between distinct accounts"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sets_attach_stamped_values_to_writes_only() {
+        let w = SmallBankWorkload::new(200);
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..200 {
+            let (reads, writes) = w.next_tx(&mut rng).sets(24);
+            for r in &reads {
+                assert!(r.value.is_none());
+            }
+            for wr in &writes {
+                let v = wr.value.as_ref().expect("updates carry values");
+                assert_eq!(v.len(), 24);
+                assert_eq!(u64::from_le_bytes(v[..8].try_into().unwrap()), wr.key);
+                assert_eq!(u32::from_le_bytes(v[8..12].try_into().unwrap()), wr.obj.0);
+            }
+        }
+    }
+
+    #[test]
+    fn population_covers_every_table() {
+        let p = SmallBankPopulation::new(100);
+        let rows: Vec<_> = p.rows().collect();
+        assert_eq!(rows.len(), 300);
+        for obj in [ACCOUNTS, SAVINGS, CHECKING] {
+            assert_eq!(rows.iter().filter(|(o, _)| *o == obj).count(), 100);
+        }
+        let cat = live_catalog(100, 16);
+        assert_eq!(cat.len(), 3);
+        assert!(cat.objects.iter().all(|c| c.buckets * c.width as u64 >= 100));
+    }
+}

@@ -3,11 +3,21 @@
 //! The standard benchmark simulating a Home Location Register: four tables
 //! keyed by subscriber id, seven transaction types with the canonical mix
 //! (80% reads, 16% writes, 4% inserts/deletes — exactly the fractions the
-//! paper quotes). Tables map to four Storm data-structure objects; every
-//! transaction becomes a read set + write set executed by the Storm
-//! transactional protocol.
+//! paper quotes). The four tables map to four Storm objects
+//! ([`SUBSCRIBER`]..[`CALL_FORWARDING`]); every transaction becomes a
+//! read set + write set executed by the Storm transactional protocol.
 //!
-//! Key encoding (single-u64 keys for the MICA table):
+//! Since the storage catalog ([`crate::ds::catalog`]), TATP runs
+//! **natively on four tables** everywhere: the simulator always did, the
+//! reference driver hosts a four-object [`crate::dataplane::local::LocalCluster`],
+//! and the live loopback cluster hosts the four-object catalog built by
+//! [`live_catalog`], with [`TatpTx::sets`] producing the native
+//! `(read set, write set)` pair. [`flat_key`] / [`TatpTx::flatten`] /
+//! [`TatpPopulation::flat_rows`] survive only as **legacy shims** for the
+//! pre-catalog single-table projection (the old bench compat mode and the
+//! flattened-vs-native equivalence tests).
+//!
+//! Key encoding (single-u64 keys for the MICA tables):
 //! * SUBSCRIBER:        `s_id`
 //! * ACCESS_INFO:       `s_id * 4 + (ai_type - 1)`
 //! * SPECIAL_FACILITY:  `s_id * 4 + (sf_type - 1)`
@@ -15,6 +25,8 @@
 
 use crate::dataplane::tx::TxItem;
 use crate::ds::api::ObjectId;
+use crate::ds::catalog::{buckets_for, CatalogConfig};
+use crate::ds::mica::MicaConfig;
 use crate::sim::Pcg64;
 
 /// Object ids of the four TATP tables.
@@ -38,13 +50,39 @@ pub fn cf_key(s_id: u64, sf_type: u64, start_time: u64) -> u64 {
     sf_key(s_id, sf_type) * 3 + start_time / 8
 }
 
-/// Flatten a `(table, key)` pair onto a single-object keyspace (the live
-/// loopback cluster serves one MICA table per node): the object id rides
-/// in the low two bits, keeping the four tables disjoint. Every TATP key
-/// is ≥ 1, so flattened keys are nonzero (0 is the empty-slot marker).
+/// **Legacy shim** (pre-catalog): flatten a `(table, key)` pair onto a
+/// single-object keyspace, the projection the live cluster needed when it
+/// served exactly one MICA table per node. The object id rides in the low
+/// two bits, keeping the four tables disjoint; every TATP key is ≥ 1, so
+/// flattened keys are nonzero (0 is the empty-slot marker). New code
+/// should run natively on the four catalog objects ([`live_catalog`],
+/// [`TatpTx::sets`]); this stays for the bench's compat mode and the
+/// flattened-vs-native equivalence tests.
 pub fn flat_key(obj: ObjectId, key: u64) -> u64 {
     debug_assert!(obj.0 < 4 && key >= 1);
     key * 4 + obj.0 as u64
+}
+
+/// Approximate rows per subscriber in each table (SUB / AI / SF / CF) —
+/// the population averages used to size the four catalog tables (also
+/// the ratios the simulator uses).
+pub const ROWS_PER_SUBSCRIBER: [f64; 4] = [1.0, 2.5, 2.5, 3.75];
+
+/// The four-object live catalog for a TATP database of `subscribers`,
+/// each table sized for its expected row count at ~50% inline occupancy
+/// (width-2 buckets), values `value_len` bytes.
+pub fn live_catalog(subscribers: u64, value_len: u32) -> CatalogConfig {
+    CatalogConfig::new(
+        ROWS_PER_SUBSCRIBER
+            .iter()
+            .map(|rows| MicaConfig {
+                buckets: buckets_for((subscribers as f64 * rows).ceil() as u64, 2),
+                width: 2,
+                value_len,
+                store_values: true,
+            })
+            .collect(),
+    )
 }
 
 /// The seven TATP transaction types.
@@ -88,10 +126,20 @@ pub struct TatpTx {
 }
 
 impl TatpTx {
-    /// Project onto the single-object live keyspace: keys flattened via
-    /// [`flat_key`], write/insert items carrying `value_len`-byte values
-    /// (live tables store real bytes; the flattened key is stamped into
-    /// the first 8 bytes so overwrites are observable).
+    /// The native four-table `(read set, write set)` pair for the live
+    /// catalog: object ids and keys unchanged, write/insert items
+    /// carrying `value_len`-byte stamped values (live tables store real
+    /// bytes; see [`crate::dataplane::tx::stamped_sets`]).
+    pub fn sets(self, value_len: u32) -> (Vec<TxItem>, Vec<TxItem>) {
+        crate::dataplane::tx::stamped_sets(self.read_set, self.write_set, value_len)
+    }
+
+    /// **Legacy shim** (pre-catalog): project onto the single-object live
+    /// keyspace — keys flattened via [`flat_key`], write/insert items
+    /// carrying `value_len`-byte values (the flattened key is stamped
+    /// into the first 8 bytes so overwrites are observable). Kept for the
+    /// bench's compat mode and equivalence tests; native execution uses
+    /// [`TatpTx::sets`].
     pub fn flatten(self, value_len: u32) -> (Vec<TxItem>, Vec<TxItem>) {
         let flat = |item: TxItem, with_value: bool| {
             let key = flat_key(item.obj, item.key);
@@ -230,8 +278,10 @@ impl TatpPopulation {
         self.subscribers * 10
     }
 
-    /// All rows flattened onto the single-object live keyspace (see
-    /// [`flat_key`]). Deterministic in `seed`.
+    /// **Legacy shim** (pre-catalog): all rows flattened onto the
+    /// single-object live keyspace (see [`flat_key`]). Native loading
+    /// feeds [`TatpPopulation::rows`] to `LiveCluster::load_rows`.
+    /// Deterministic in `seed`.
     pub fn flat_rows(&self, seed: u64) -> impl Iterator<Item = u64> + '_ {
         self.rows(seed).map(|(obj, key)| flat_key(obj, key))
     }
@@ -348,6 +398,59 @@ mod tests {
             }
         }
         assert!(saw_write);
+    }
+
+    #[test]
+    fn native_sets_keep_objects_and_stamp_write_values() {
+        let w = TatpWorkload::new(1_000);
+        let mut rng = Pcg64::seeded(5);
+        let mut saw_write = false;
+        for _ in 0..500 {
+            let tx = w.next_tx(&mut rng);
+            let kinds: Vec<_> =
+                tx.write_set.iter().map(|i| (i.obj, i.key, i.kind)).collect();
+            let (reads, writes) = tx.sets(32);
+            for r in &reads {
+                assert!(r.obj.0 <= 3, "native sets keep table object ids");
+                assert!(r.value.is_none(), "read-set items carry no payload");
+            }
+            assert_eq!(writes.len(), kinds.len());
+            for (wr, (obj, key, kind)) in writes.iter().zip(kinds) {
+                assert_eq!((wr.obj, wr.key, wr.kind), (obj, key, kind));
+                match wr.kind {
+                    crate::dataplane::tx::WriteKind::Delete => assert!(wr.value.is_none()),
+                    _ => {
+                        saw_write = true;
+                        let v = wr.value.as_ref().expect("live writes carry values");
+                        assert_eq!(v.len(), 32);
+                        assert_eq!(u64::from_le_bytes(v[..8].try_into().unwrap()), wr.key);
+                        assert_eq!(
+                            u32::from_le_bytes(v[8..12].try_into().unwrap()),
+                            wr.obj.0,
+                            "object id stamped alongside the key"
+                        );
+                    }
+                }
+            }
+        }
+        assert!(saw_write);
+    }
+
+    #[test]
+    fn live_catalog_sizes_four_tables() {
+        let cat = live_catalog(2_000, 32);
+        assert_eq!(cat.len(), 4);
+        for (cfg, rows) in cat.objects.iter().zip(ROWS_PER_SUBSCRIBER) {
+            assert!(cfg.buckets.is_power_of_two());
+            assert!(cfg.store_values);
+            // ~50% occupancy: inline capacity at least the expected rows.
+            let capacity = cfg.buckets * cfg.width as u64;
+            assert!(capacity as f64 >= 2_000.0 * rows, "table undersized");
+        }
+        // CALL_FORWARDING is the biggest table, SUBSCRIBER the smallest.
+        assert!(cat.objects[3].buckets >= cat.objects[0].buckets);
+        // Tiny databases still shard: every table keeps >= 8 buckets.
+        assert!(live_catalog(1, 16).objects.iter().all(|c| c.buckets >= 8));
     }
 
     #[test]

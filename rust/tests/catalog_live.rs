@@ -1,0 +1,283 @@
+//! Live tests for the multi-object storage catalog: four-table TATP over
+//! the loopback fabric without key flattening, cross-table transactions
+//! (no stale locks, per-table version bumps == commits), SmallBank, and
+//! the adaptive per-client transaction window.
+
+use std::collections::HashMap;
+
+use storm::dataplane::live::{LiveCluster, TX_WINDOW, TX_WINDOW_MAX};
+use storm::dataplane::tx::{stamped_value, AbortReason, TxItem, TxOutcome};
+use storm::ds::api::ObjectId;
+use storm::ds::catalog::CatalogConfig;
+use storm::ds::mica::MicaConfig;
+use storm::sim::Pcg64;
+use storm::workload::smallbank::{self, SmallBankPopulation, SmallBankWorkload};
+use storm::workload::tatp::{self, TatpKind, TatpPopulation, TatpWorkload};
+
+fn small_catalog(tables: u32, value_len: u32) -> CatalogConfig {
+    CatalogConfig::new(
+        (0..tables)
+            .map(|_| MicaConfig { buckets: 1 << 8, width: 2, value_len, store_values: true })
+            .collect(),
+    )
+}
+
+#[test]
+fn cross_table_transactions_commit_with_per_table_bumps() {
+    const KEYS: u64 = 40;
+    let c = LiveCluster::start_catalog(3, small_catalog(4, 32));
+    for o in 0..4u32 {
+        c.load_obj(ObjectId(o), 1..=KEYS, |k| stamped_value(ObjectId(o), k, 32));
+    }
+    let mut client = c.client(0, None);
+    // Each transaction reads table 0 and writes the same key in tables
+    // 1..=3 — one commit must bump exactly one version in each written
+    // table and leave no lock behind in any of them.
+    let txs: Vec<_> = (1..=KEYS)
+        .map(|k| {
+            (
+                vec![TxItem::read(ObjectId(0), k)],
+                vec![
+                    TxItem::update(ObjectId(1), k).with_value(stamped_value(ObjectId(1), k, 32)),
+                    TxItem::update(ObjectId(2), k).with_value(stamped_value(ObjectId(2), k, 32)),
+                    TxItem::update(ObjectId(3), k).with_value(stamped_value(ObjectId(3), k, 32)),
+                ],
+            )
+        })
+        .collect();
+    let outs = client.run_tx_batch(txs);
+    let commits = outs.iter().filter(|o| matches!(o, TxOutcome::Committed { .. })).count();
+    assert_eq!(commits, KEYS as usize, "disjoint cross-table txs must all commit");
+    let mut reader = c.client(1, None);
+    let keys: Vec<u64> = (1..=KEYS).collect();
+    for o in 1..4u32 {
+        let res = reader.lookup_batch_obj(ObjectId(o), &keys);
+        let bumps: u64 = res.iter().map(|r| (r.version as u64).saturating_sub(1)).sum();
+        assert_eq!(bumps, KEYS, "table {o}: per-table version bumps == commits");
+        assert!(res.iter().all(|r| r.found && !r.locked), "table {o}: stale lock after drain");
+    }
+    // The read-only table saw no bumps.
+    let res = reader.lookup_batch_obj(ObjectId(0), &keys);
+    assert!(res.iter().all(|r| r.version == 1 && !r.locked));
+    c.shutdown();
+}
+
+#[test]
+fn contended_cross_table_txs_leave_no_stale_locks() {
+    const KEYS: u64 = 16;
+    let c = LiveCluster::start_catalog(3, small_catalog(3, 32));
+    for o in 0..3u32 {
+        c.load_obj(ObjectId(o), 1..=KEYS, |k| stamped_value(ObjectId(o), k, 32));
+    }
+    // Four clients hammer overlapping cross-table write sets: lock
+    // conflicts and validation aborts are expected, stale locks and
+    // cross-table inconsistency are not.
+    let mut handles = Vec::new();
+    for id in 0..4u32 {
+        let seed = c.client_seed(id);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let mut per_table_commit_writes = [0u64; 3];
+            for round in 0..6u64 {
+                let txs: Vec<_> = (0..12u64)
+                    .map(|i| {
+                        let k1 = (i * 5 + id as u64 + round) % KEYS + 1;
+                        let k2 = (k1 + 3) % KEYS + 1;
+                        (
+                            vec![TxItem::read(ObjectId(0), k2)],
+                            vec![
+                                TxItem::update(ObjectId(1), k1)
+                                    .with_value(stamped_value(ObjectId(1), k1, 32)),
+                                TxItem::update(ObjectId(2), k2)
+                                    .with_value(stamped_value(ObjectId(2), k2, 32)),
+                            ],
+                        )
+                    })
+                    .collect();
+                for out in client.run_tx_batch(txs) {
+                    match out {
+                        TxOutcome::Committed { .. } => {
+                            per_table_commit_writes[1] += 1;
+                            per_table_commit_writes[2] += 1;
+                        }
+                        TxOutcome::Aborted(
+                            AbortReason::LockConflict
+                            | AbortReason::ValidationVersion
+                            | AbortReason::ValidationLocked,
+                        ) => {}
+                        TxOutcome::Aborted(other) => panic!("unexpected abort {other:?}"),
+                    }
+                }
+            }
+            per_table_commit_writes
+        }));
+    }
+    let mut per_table = [0u64; 3];
+    for h in handles {
+        let p = h.join().unwrap();
+        for (acc, v) in per_table.iter_mut().zip(p) {
+            *acc += v;
+        }
+    }
+    assert!(per_table[1] > 0, "some transactions must commit");
+    // Per-table version bumps equal the commits that wrote each table;
+    // no key in any table may stay locked.
+    let mut reader = c.client(0, None);
+    let keys: Vec<u64> = (1..=KEYS).collect();
+    for o in 1..3u32 {
+        let res = reader.lookup_batch_obj(ObjectId(o), &keys);
+        assert!(res.iter().all(|r| r.found && !r.locked), "table {o} lock leak");
+        let bumps: u64 = res.iter().map(|r| (r.version as u64).saturating_sub(1)).sum();
+        assert_eq!(bumps, per_table[o as usize], "table {o} bumps != committed writes");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn four_table_tatp_runs_natively_all_seven_kinds_commit() {
+    let subscribers = 400u64;
+    let c = LiveCluster::start_catalog(3, tatp::live_catalog(subscribers, 32));
+    c.load_rows(TatpPopulation::new(subscribers).rows(7), |o, k| stamped_value(o, k, 32));
+    let w = TatpWorkload::new(subscribers);
+    let mut rng = Pcg64::seeded(11);
+    let mut client = c.client(0, None);
+    let mut committed: HashMap<TatpKind, u32> = HashMap::new();
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for _ in 0..12 {
+        let batch: Vec<_> = (0..100).map(|_| w.next_tx(&mut rng)).collect();
+        let kinds: Vec<TatpKind> = batch.iter().map(|t| t.kind).collect();
+        let sets: Vec<_> = batch.into_iter().map(|t| t.sets(32)).collect();
+        for (out, kind) in client.run_tx_batch(sets).iter().zip(kinds) {
+            match out {
+                TxOutcome::Committed { .. } => {
+                    commits += 1;
+                    *committed.entry(kind).or_insert(0) += 1;
+                }
+                TxOutcome::Aborted(_) => aborts += 1,
+            }
+        }
+    }
+    // Windowed engines of one client can self-conflict on a hot
+    // subscriber; that must stay rare against 400 subscribers.
+    assert!(commits > aborts * 3, "commits {commits} vs aborts {aborts}");
+    for kind in [
+        TatpKind::GetSubscriberData,
+        TatpKind::GetNewDestination,
+        TatpKind::GetAccessData,
+        TatpKind::UpdateSubscriberData,
+        TatpKind::UpdateLocation,
+        TatpKind::InsertCallForwarding,
+        TatpKind::DeleteCallForwarding,
+    ] {
+        assert!(
+            committed.get(&kind).copied().unwrap_or(0) > 0,
+            "{kind:?} never committed over the live fabric"
+        );
+    }
+    // No table may keep a stale lock once the scheduler drained.
+    let mut reader = c.client(1, None);
+    let subs: Vec<u64> = (1..=subscribers).collect();
+    let res = reader.lookup_batch_obj(tatp::SUBSCRIBER, &subs);
+    assert!(res.iter().all(|r| r.found && !r.locked), "subscriber row lost or locked");
+    c.shutdown();
+}
+
+#[test]
+fn smallbank_mix_commits_over_the_live_catalog() {
+    let accounts = 300u64;
+    let c = LiveCluster::start_catalog(3, smallbank::live_catalog(accounts, 32));
+    c.load_rows(SmallBankPopulation::new(accounts).rows(), |o, k| stamped_value(o, k, 32));
+    let mut handles = Vec::new();
+    for id in 0..2u32 {
+        let seed = c.client_seed(id);
+        handles.push(std::thread::spawn(move || {
+            let w = SmallBankWorkload::new(accounts);
+            let mut rng = Pcg64::new(17, id as u64);
+            let mut client = seed.build(None);
+            let mut commits = 0u64;
+            for _ in 0..5 {
+                let txs: Vec<_> = (0..60).map(|_| w.next_tx(&mut rng).sets(32)).collect();
+                for out in client.run_tx_batch(txs) {
+                    match out {
+                        TxOutcome::Committed { .. } => commits += 1,
+                        TxOutcome::Aborted(
+                            AbortReason::LockConflict
+                            | AbortReason::ValidationVersion
+                            | AbortReason::ValidationLocked,
+                        ) => {}
+                        TxOutcome::Aborted(other) => panic!("unexpected abort {other:?}"),
+                    }
+                }
+            }
+            commits
+        }));
+    }
+    let commits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(commits > 0, "the write-heavy mix must get transactions through");
+    // All three tables consistent afterwards: rows present, no locks.
+    let mut reader = c.client(2, None);
+    let keys: Vec<u64> = (1..=accounts).collect();
+    for obj in [smallbank::ACCOUNTS, smallbank::SAVINGS, smallbank::CHECKING] {
+        let res = reader.lookup_batch_obj(obj, &keys);
+        assert!(res.iter().all(|r| r.found && !r.locked), "{obj:?} inconsistent");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn adaptive_window_grows_on_clean_disjoint_commits() {
+    let c = LiveCluster::start_catalog(2, small_catalog(1, 32));
+    c.load_obj(ObjectId(0), 1..=200, |k| stamped_value(ObjectId(0), k, 32));
+    let mut client = c.client(0, None);
+    assert_eq!(client.tx_window(), TX_WINDOW);
+    let txs: Vec<_> = (1..=200u64)
+        .map(|k| {
+            (
+                vec![],
+                vec![TxItem::update(ObjectId(0), k).with_value(stamped_value(ObjectId(0), k, 32))],
+            )
+        })
+        .collect();
+    let outs = client.run_tx_batch(txs);
+    assert!(outs.iter().all(|o| matches!(o, TxOutcome::Committed { .. })));
+    assert!(
+        client.tx_window() > TX_WINDOW,
+        "200 clean disjoint commits must grow the window, got {}",
+        client.tx_window()
+    );
+    assert!(client.tx_window() <= TX_WINDOW_MAX);
+    c.shutdown();
+}
+
+#[test]
+fn adaptive_window_shrinks_on_sustained_aborts() {
+    let c = LiveCluster::start_catalog(2, small_catalog(1, 32));
+    c.load_obj(ObjectId(0), 1..=4, |k| stamped_value(ObjectId(0), k, 32));
+    let mut client = c.client(0, None);
+    // Every transaction writes the same key: the engines sharing the
+    // window fight over one lock, so most of each epoch aborts and the
+    // scheduler must back off toward serial execution.
+    let txs: Vec<_> = (0..160u64)
+        .map(|_| {
+            (
+                vec![],
+                vec![TxItem::update(ObjectId(0), 1).with_value(stamped_value(ObjectId(0), 1, 32))],
+            )
+        })
+        .collect();
+    let outs = client.run_tx_batch(txs);
+    let commits =
+        outs.iter().filter(|o| matches!(o, TxOutcome::Committed { .. })).count() as u64;
+    assert!(commits >= 1, "the lock holder always commits");
+    assert!(
+        client.tx_window() < TX_WINDOW,
+        "sustained self-conflicts must shrink the window, got {}",
+        client.tx_window()
+    );
+    // Serializability bookkeeping still holds: version == commits + 1,
+    // and the lock is free.
+    let res = client.lookup_batch_obj(ObjectId(0), &[1]);
+    assert_eq!(res[0].version as u64, commits + 1);
+    assert!(!res[0].locked);
+    c.shutdown();
+}

@@ -33,8 +33,9 @@ fn pipelined_lookups_stress_four_clients() {
     });
     let mut handles = Vec::new();
     for id in 0..4u32 {
-        // Distinct client ids: tx ids are derived from them, and two
-        // clients sharing an id would alias each other's locks.
+        // Client node ids only affect routing; tx-id streams are drawn
+        // from a process-wide counter, so even clients sharing a node id
+        // can never alias each other's locks.
         let seed = c.client_seed(id);
         handles.push(std::thread::spawn(move || {
             let mut client = seed.build(None);

@@ -184,6 +184,65 @@ fn prop_tx_locks_never_leak() {
     }
 }
 
+// --- Catalog: native four-table TATP == flattened single-table TATP ------
+
+/// The storage catalog must be semantically transparent: replaying the
+/// same TATP transaction stream natively (four objects) and through the
+/// legacy single-table flattening must commit the same transactions and
+/// leave equivalent per-row state (presence + version) behind.
+#[test]
+fn prop_tatp_native_matches_flattened_effects() {
+    use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
+
+    for seed in 0..6u64 {
+        let subscribers = 120u64;
+        let cfg = MicaConfig { buckets: 1 << 9, width: 2, value_len: 112, store_values: false };
+        let native_objs: Vec<_> = (0..4).map(|o| (ObjectId(o), cfg.clone())).collect();
+        let mut native = LocalCluster::new(3, native_objs);
+        let mut flat = LocalCluster::new(
+            3,
+            vec![(KV, MicaConfig { buckets: 1 << 11, ..cfg.clone() })],
+        );
+        // Track every (obj, key) the run can have touched.
+        let mut touched: Vec<(ObjectId, u64)> = Vec::new();
+        for (obj, key) in TatpPopulation::new(subscribers).rows(seed) {
+            native.load(obj, std::iter::once(key));
+            flat.load(KV, std::iter::once(tatp::flat_key(obj, key)));
+            touched.push((obj, key));
+        }
+        let w = TatpWorkload::new(subscribers);
+        let mut rng = Pcg64::new(seed, 0x7A7);
+        let mut nc = native.client(false);
+        let mut fc = flat.client(false);
+        for i in 0..400 {
+            let tx = w.next_tx(&mut rng);
+            for item in tx.read_set.iter().chain(tx.write_set.iter()) {
+                touched.push((item.obj, item.key));
+            }
+            let (fr, fw) = tx.clone().flatten(0);
+            let n_out = native.run_tx(&mut nc, tx.read_set, tx.write_set);
+            let f_out = flat.run_tx(&mut fc, fr, fw);
+            assert_eq!(
+                matches!(n_out, TxOutcome::Committed { .. }),
+                matches!(f_out, TxOutcome::Committed { .. }),
+                "seed {seed} tx {i}: outcomes diverge ({n_out:?} vs {f_out:?})"
+            );
+        }
+        touched.sort_unstable_by_key(|(o, k)| (o.0, *k));
+        touched.dedup();
+        for (obj, key) in touched {
+            let n = native.run_lookup(&mut nc, obj, key);
+            let f = flat.run_lookup(&mut fc, KV, tatp::flat_key(obj, key));
+            assert_eq!(
+                (n.found, n.version),
+                (f.found, f.version),
+                "seed {seed}: committed effects diverge at {obj:?} key {key}"
+            );
+            assert!(!n.locked && !f.locked, "seed {seed}: lock leaked at {obj:?} key {key}");
+        }
+    }
+}
+
 // --- Routing: owner assignment is stable and total -----------------------
 
 #[test]

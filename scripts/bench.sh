@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
 # Run the live-dataplane throughput benchmark and emit BENCH_live.json
 # (machine-readable perf trajectory; later PRs compare against it).
+# Rows: pipelined-vs-sequential lookups, single-key tx commits, the
+# flattened TATP compat mix, and the catalog-native runs — four-table
+# TATP (no key flattening) and SmallBank — with per-table commit/abort
+# counters and the adaptive per-client transaction windows.
 #
 # Usage: scripts/bench.sh [output.json]
 set -euo pipefail
