@@ -16,12 +16,15 @@
 use std::time::Instant;
 
 use storm::cluster::LiveServed;
-use storm::dataplane::live::{LiveCluster, TX_WINDOW};
+use storm::dataplane::live::{LiveCluster, SERVER_SHARDS, TX_WINDOW};
 use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
-use storm::ds::catalog::CatalogConfig;
+use storm::ds::btree::BTreeConfig;
+use storm::ds::catalog::{CatalogConfig, ObjectConfig, Placement};
+use storm::ds::hopscotch::HopscotchConfig;
 use storm::ds::mica::MicaConfig;
 use storm::sim::Pcg64;
+use storm::workload::kv::KvWorkload;
 use storm::workload::smallbank::{self, SmallBankPopulation, SmallBankWorkload};
 use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
 
@@ -287,6 +290,152 @@ fn catalog_pass(
     CatalogRun { rate, commits, aborts, per_table, served }
 }
 
+// --- mixed-backend lookups (heterogeneous catalog, PR 4) -----------------
+
+const MIXED_KEYS: u64 = 6_000;
+const MIXED_MICA: ObjectId = ObjectId(0);
+const MIXED_TREE: ObjectId = ObjectId(1);
+const MIXED_HOP: ObjectId = ObjectId(2);
+
+/// One MICA table, one B-link tree, one hopscotch table on the same
+/// cluster: the FaRM-style 1 KB neighborhood read vs Storm's
+/// fine-grained bucket read vs the tree's cached-route leaf read.
+fn mixed_catalog() -> CatalogConfig {
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(MicaConfig {
+            buckets: 1 << 13,
+            width: 2,
+            value_len: 112,
+            store_values: true,
+        }),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 1 << 11 }),
+        ObjectConfig::Hopscotch(HopscotchConfig {
+            slots: (MIXED_KEYS * 2).next_power_of_two(),
+            h: 8,
+            item_size: 128,
+        }),
+    ])
+}
+
+/// Per-kind lookup row: throughput, reads/RPCs issued, wire bytes per
+/// one-sided read.
+struct KindRow {
+    ops: f64,
+    reads: u64,
+    rpcs: u64,
+    read_bytes: u32,
+}
+
+impl KindRow {
+    fn json(&self) -> String {
+        format!(
+            "{{\"ops\": {:.0}, \"reads\": {}, \"rpcs\": {}, \"read_bytes\": {}}}",
+            self.ops, self.reads, self.rpcs, self.read_bytes
+        )
+    }
+}
+
+/// Uniform key stream over the mixed keyspace (local keys included —
+/// the mixed bench measures read granularity, not owner exclusion).
+fn mixed_keystream(seed: u64) -> Vec<u64> {
+    let mut w = KvWorkload::uniform(MIXED_KEYS, NODES);
+    w.include_local = true;
+    let mut rng = Pcg64::seeded(seed);
+    (0..MIXED_KEYS).map(|_| w.next_key(0, &mut rng)).collect()
+}
+
+/// A shuffled permutation of every key, each exactly once (the cold
+/// B-link row must not resample keys — with-replacement repeats would
+/// re-measure lookups that are trivially warm). Note the row is still a
+/// cold *scan*, not N independent cold clients: one RPC re-traversal
+/// repairs a whole leaf's fence range, so expect ~one RPC per leaf
+/// touched, with the leaf's other keys riding the just-installed route —
+/// exactly what a cold client pays to warm up.
+fn mixed_keyperm(seed: u64) -> Vec<u64> {
+    let mut keys: Vec<u64> = (1..=MIXED_KEYS).collect();
+    let mut rng = Pcg64::seeded(seed);
+    for i in (1..keys.len()).rev() {
+        keys.swap(i, rng.gen_index(i + 1));
+    }
+    keys
+}
+
+/// One measured pass of `keys` against one object (after `warm` warmup
+/// passes), counting reads and RPC fallbacks.
+fn mixed_kind_pass(
+    cluster: &LiveCluster,
+    obj: ObjectId,
+    keys: &[u64],
+    read_bytes: u32,
+    warm: usize,
+) -> KindRow {
+    let mut client = cluster.client(0, None);
+    for _ in 0..warm {
+        for chunk in keys.chunks(BATCH) {
+            let r = client.lookup_batch_obj(obj, chunk);
+            assert!(r.iter().all(|x| x.found));
+        }
+    }
+    let (mut reads, mut rpcs) = (0u64, 0u64);
+    let t0 = Instant::now();
+    for chunk in keys.chunks(BATCH) {
+        for r in client.lookup_batch_obj(obj, chunk) {
+            assert!(r.found);
+            reads += r.reads as u64;
+            rpcs += r.rpcs as u64;
+        }
+    }
+    KindRow { ops: keys.len() as f64 / t0.elapsed().as_secs_f64(), reads, rpcs, read_bytes }
+}
+
+/// The mixed-backend benchmark: per-kind lookup rows (+ a cold-route
+/// B-link row and an interleaved all-kinds doorbell row).
+fn mixed_backend_rows() -> (KindRow, KindRow, KindRow, KindRow, f64) {
+    let cat = mixed_catalog();
+    let place = Placement::new(&cat, NODES, cat.shard_count(SERVER_SHARDS));
+    let (mica_bytes, tree_bytes, hop_geo) = (
+        place.geo(MIXED_MICA).bucket_bytes,
+        place.geo(MIXED_TREE).bucket_bytes,
+        *place.geo(MIXED_HOP),
+    );
+    let hop_bytes = hop_geo.width * hop_geo.item_size;
+
+    let cluster = LiveCluster::start_catalog(NODES, cat);
+    for obj in [MIXED_MICA, MIXED_TREE, MIXED_HOP] {
+        cluster.load_rows((1..=MIXED_KEYS).map(|k| (obj, k)), |obj, k| {
+            stamped_value(obj, k, 112)
+        });
+    }
+    let keys = mixed_keystream(0x717);
+
+    let mica = mixed_kind_pass(&cluster, MIXED_MICA, &keys, mica_bytes, 1);
+    // Cold-start scan: a fresh client's first pass pays one RPC
+    // re-traversal per leaf it touches (see `mixed_keyperm`)...
+    let tree_cold = mixed_kind_pass(&cluster, MIXED_TREE, &mixed_keyperm(0x7C01), tree_bytes, 0);
+    // ...warm routes are pure cached-path leaf reads.
+    let tree_warm = mixed_kind_pass(&cluster, MIXED_TREE, &keys, tree_bytes, 1);
+    let hop = mixed_kind_pass(&cluster, MIXED_HOP, &keys, hop_bytes, 1);
+
+    // All three kinds interleaved in the same batches: one doorbell group
+    // per node spans a bucket read, a leaf read, and a neighborhood read.
+    let mut client = cluster.client(0, None);
+    let items: Vec<(ObjectId, u64)> = keys
+        .iter()
+        .flat_map(|&k| [(MIXED_MICA, k), (MIXED_TREE, k), (MIXED_HOP, k)])
+        .collect();
+    for chunk in items.chunks(BATCH) {
+        assert!(client.lookup_batch_items(chunk).iter().all(|r| r.found)); // warm
+    }
+    let t0 = Instant::now();
+    for chunk in items.chunks(BATCH) {
+        client.lookup_batch_items(chunk);
+    }
+    let mixed_ops = items.len() as f64 / t0.elapsed().as_secs_f64();
+
+    cluster.shutdown();
+    (mica, tree_cold, tree_warm, hop, mixed_ops)
+}
+
 fn per_table_json(names: &[&str], per: &[(u64, u64)]) -> String {
     names
         .iter()
@@ -433,6 +582,30 @@ fn main() {
     }
     println!("  adaptive tx windows: {:?}", sb.served.tx_windows);
 
+    // Mixed-backend lookups: one object of each kind on one cluster —
+    // the heterogeneous catalog's measured trade-off (fine-grained MICA
+    // bucket reads vs B-link cached-route leaf reads vs FaRM-style 1 KB
+    // hopscotch neighborhood reads), uniform keys via workload/kv.
+    let (mx_mica, mx_tree_cold, mx_tree_warm, mx_hop, mx_mixed_ops) = mixed_backend_rows();
+    println!("# mixed-backend lookups: {MIXED_KEYS} uniform keys, 1 client");
+    println!(
+        "mixed mica        {:>12.0} ops/s   ({} B reads, {} rpcs)",
+        mx_mica.ops, mx_mica.read_bytes, mx_mica.rpcs
+    );
+    println!(
+        "mixed btree cold  {:>12.0} ops/s   ({} B reads, {} rpcs — route warm-up)",
+        mx_tree_cold.ops, mx_tree_cold.read_bytes, mx_tree_cold.rpcs
+    );
+    println!(
+        "mixed btree warm  {:>12.0} ops/s   ({} B reads, {} rpcs — cached path)",
+        mx_tree_warm.ops, mx_tree_warm.read_bytes, mx_tree_warm.rpcs
+    );
+    println!(
+        "mixed hopscotch   {:>12.0} ops/s   ({} B reads, {} rpcs — FaRM-style)",
+        mx_hop.ops, mx_hop.read_bytes, mx_hop.rpcs
+    );
+    println!("mixed interleave  {mx_mixed_ops:>12.0} ops/s   (all kinds, shared doorbells)");
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
     let mut json = format!(
         concat!(
@@ -505,7 +678,7 @@ fn main() {
         concat!(
             "  \"smallbank\": {{\"clients\": {c}, \"accounts\": {s}, ",
             "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
-            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}}\n",
+            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}},\n",
         ),
         c = CLIENTS,
         s = sb_accounts,
@@ -515,6 +688,19 @@ fn main() {
         ar = abort_rate(sb.aborts, sb.commits),
         w = sb.served.tx_windows,
         pt = per_table_json(&SB_TABLES, &sb.per_table),
+    ));
+    json.push_str(&format!(
+        concat!(
+            "  \"mixed_backend\": {{\"keys\": {k}, ",
+            "\"mica\": {m}, \"btree_cold\": {tc}, \"btree_warm\": {tw}, ",
+            "\"hopscotch\": {h}, \"interleaved_ops\": {mx:.0}}}\n",
+        ),
+        k = MIXED_KEYS,
+        m = mx_mica.json(),
+        tc = mx_tree_cold.json(),
+        tw = mx_tree_warm.json(),
+        h = mx_hop.json(),
+        mx = mx_mixed_ops,
     ));
     json.push_str("}\n");
     std::fs::write(&out, &json).expect("write bench json");

@@ -58,6 +58,13 @@ pub enum WorkloadKind {
         /// Subscribers per node.
         subscribers_per_node: u64,
     },
+    /// SmallBank transactions (three tables, write-heavy banking mix
+    /// with a hot-account skew); accounts scaled per node. Runs on every
+    /// transport path the simulator models (RC, UD, sync/async LITE).
+    SmallBank {
+        /// Customer accounts per node.
+        accounts_per_node: u64,
+    },
 }
 
 /// Calibrated host-side costs (ns unless noted).

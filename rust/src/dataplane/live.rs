@@ -1,12 +1,18 @@
 //! Live Storm dataplane over the in-process loopback fabric.
 //!
 //! This is the end-to-end composition proof: the *same* sans-io engines
-//! ([`LookupSm`], [`TxEngine`]) and MICA tables that the simulator drives
-//! run here against real memory and real threads — and since PR 3 the
-//! live cluster is a genuine **multi-object dataplane**: every node hosts
-//! a storage [`Catalog`] of independent tables (TATP's four tables,
-//! SmallBank's three), and the cluster-wide [`Placement`] map routes
-//! `(ObjectId, key)` to `(node, shard, packed offset)` —
+//! ([`LookupSm`], [`TxEngine`]) and storage backends that the simulator
+//! drives run here against real memory and real threads — and since PR 4
+//! the live cluster is a genuine **heterogeneous multi-object
+//! dataplane**: every node hosts a storage [`Catalog`] of independent
+//! objects that need not be MICA tables — B-link trees resolve through
+//! client-cached leaf routes (one doorbell leaf read, RPC re-traversal +
+//! route repair on a fence miss) and hopscotch objects through one
+//! `H × item_size` neighborhood read (the FaRM-style coarse read) — and
+//! the cluster-wide [`Placement`] map routes `(ObjectId, key)` to
+//! `(node, shard, packed offset)` by backend kind (MICA objects shard by
+//! bucket range across every lane; tree/hopscotch objects live whole on
+//! a per-object home shard) —
 //!
 //! * all of a node's tables share **one registered data region** (paper
 //!   principle #3: one MPT entry, per-table base offsets via
@@ -45,8 +51,12 @@ use std::thread::JoinHandle;
 
 use crate::cluster::report::LiveServed;
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::catalog::{Catalog, CatalogConfig, Placement};
-use crate::ds::mica::{parse_bucket_view, parse_item_view, ItemView, MicaClient, MicaConfig};
+use crate::ds::btree::{parse_leaf_view, BTreeClientCache, TreeLookupOutcome};
+use crate::ds::catalog::{Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement, TableGeo};
+use crate::ds::hopscotch::{parse_neighborhood_view, HopscotchTable};
+use crate::ds::mica::{
+    fnv1a64, owner_of, parse_bucket_view, parse_item_view, ItemView, MicaClient, MicaConfig,
+};
 use crate::fabric::loopback::{LoopbackFabric, RingConn, RpcEnvelope, SlotToken};
 use crate::mem::{MrKey, PageSize, RegionMode, RemoteAddr};
 use crate::runtime::Engine;
@@ -175,9 +185,16 @@ struct NodeShards {
 
 impl NodeShards {
     fn new(cat: &CatalogConfig, place: &Placement) -> Self {
-        let slice = cat.shard_slice(place.shards());
         let shards = (0..place.shards())
-            .map(|_| Mutex::new(Catalog::new(&slice, RegionMode::Virtual(PageSize::Huge2M))))
+            .map(|s| {
+                Mutex::new(Catalog::for_shard(
+                    cat,
+                    s,
+                    place.shards(),
+                    RegionMode::Virtual(PageSize::Huge2M),
+                    16,
+                ))
+            })
             .collect();
         NodeShards { shards, place: place.clone() }
     }
@@ -206,7 +223,9 @@ impl LiveCluster {
     /// region.
     pub fn start_catalog(nodes: u32, cat: CatalogConfig) -> Self {
         for c in &cat.objects {
-            assert!(c.store_values, "live mode carries real bytes");
+            if let Some(m) = c.as_mica() {
+                assert!(m.store_values, "live mode carries real bytes");
+            }
         }
         let shards = cat.shard_count(SERVER_SHARDS);
         let place = Placement::new(&cat, nodes, shards);
@@ -239,12 +258,34 @@ impl LiveCluster {
     }
 
     /// Load `(object, key)` rows (direct inserts on owner shards + region
-    /// mirroring at the packed offsets).
+    /// mirroring at the packed offsets). Panics — loudly, naming the
+    /// refused row — when the storage rejects an insert; population paths
+    /// that want to handle capacity instead use [`Self::try_load_rows`].
     pub fn load_rows(
         &self,
         rows: impl Iterator<Item = (ObjectId, u64)>,
         value_of: impl Fn(ObjectId, u64) -> Vec<u8>,
     ) {
+        if let Err(e) = self.try_load_rows(rows, value_of) {
+            panic!(
+                "population insert refused: {:?} key {} -> {:?} \
+                 (grow the object or shrink the population)",
+                e.obj, e.key, e.result
+            );
+        }
+    }
+
+    /// [`Self::load_rows`] that propagates the first refused insert as a
+    /// typed [`PopulateError`] instead of panicking. Rows before the
+    /// refusal are loaded and mirrored; nothing after it is attempted —
+    /// a refused row is never silently dropped (PR 4 satellite: a full
+    /// hopscotch neighborhood used to vanish rows on the live population
+    /// path).
+    pub fn try_load_rows(
+        &self,
+        rows: impl Iterator<Item = (ObjectId, u64)>,
+        value_of: impl Fn(ObjectId, u64) -> Vec<u8>,
+    ) -> Result<(), PopulateError> {
         for (obj, key) in rows {
             let owner = self.place.node_of(key);
             let ns = &self.states[owner as usize];
@@ -252,18 +293,29 @@ impl LiveCluster {
             let mut g = ns.shards[sid as usize].lock().unwrap();
             let v = value_of(obj, key);
             let res = g.insert(obj, key, Some(&v));
-            assert_eq!(res, RpcResult::Ok);
-            let geo = self.place.geo(obj);
-            let local = g.table(obj).bucket_index_of(key);
-            let global = self.place.base_bucket(obj, sid) + local;
-            let image = g.table(obj).bucket_image(local);
-            self.fabric.write(
-                owner,
-                DATA_REGION,
-                geo.base + global * geo.bucket_bytes as u64,
-                &image,
-            );
+            if res != RpcResult::Ok {
+                return Err(PopulateError { obj, key, result: res });
+            }
+            let geo = *self.place.geo(obj);
+            match geo.kind {
+                ObjectKind::Mica => {
+                    let local = g.table(obj).bucket_index_of(key);
+                    let global = self.place.base_bucket(obj, sid) + local;
+                    let image = g.table(obj).bucket_image(local);
+                    self.fabric.write(
+                        owner,
+                        DATA_REGION,
+                        geo.base + global * geo.bucket_bytes as u64,
+                        &image,
+                    );
+                }
+                ObjectKind::BTree => mirror_btree_dirty(&self.fabric, owner, &geo, &mut g, obj),
+                ObjectKind::Hopscotch => {
+                    mirror_hop_dirty(&self.fabric, owner, &geo, &mut g, obj)
+                }
+            }
         }
+        Ok(())
     }
 
     /// Load keys into one object.
@@ -398,10 +450,64 @@ fn serve_node(
     served
 }
 
+/// A population-path insert the storage refused (e.g. the typed
+/// [`RpcResult::Full`] from a hopscotch neighborhood with no displacement
+/// chain, or a B-link leaf array at capacity).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PopulateError {
+    /// Object the row was destined for.
+    pub obj: ObjectId,
+    /// Row key.
+    pub key: u64,
+    /// The backend's typed refusal.
+    pub result: RpcResult,
+}
+
+/// Mirror the leaves the last B-link mutation dirtied into the packed
+/// data region (leaf `l` at `base + l * LEAF_BYTES`). A split dirties
+/// both halves, so stale-route readers see consistent fences.
+fn mirror_btree_dirty(
+    fabric: &LoopbackFabric,
+    node: u32,
+    geo: &TableGeo,
+    cat: &mut Catalog,
+    obj: ObjectId,
+) {
+    for l in cat.btree_mut(obj).take_dirty() {
+        let image = cat.btree(obj).leaf_image(l);
+        fabric.write(
+            node,
+            DATA_REGION,
+            geo.base + l as u64 * geo.bucket_bytes as u64,
+            &image,
+        );
+    }
+}
+
+/// Mirror the slots the last hopscotch mutation dirtied, including the
+/// wrap-tail copies of the first `H - 1` slots (neighborhood reads are
+/// contiguous; the tail keeps wrapped neighborhoods readable in one go).
+fn mirror_hop_dirty(
+    fabric: &LoopbackFabric,
+    node: u32,
+    geo: &TableGeo,
+    cat: &mut Catalog,
+    obj: ObjectId,
+) {
+    let stride = geo.bucket_bytes as u64;
+    for s in cat.hopscotch_mut(obj).take_dirty() {
+        let image = cat.hopscotch(obj).slot_image(s);
+        fabric.write(node, DATA_REGION, geo.base + s * stride, &image);
+        if s < geo.width as u64 - 1 {
+            fabric.write(node, DATA_REGION, geo.base + (geo.mask + 1 + s) * stride, &image);
+        }
+    }
+}
+
 /// Execute one request against its owning shard catalog (dispatched by
-/// the request's object id), mirror exactly what the op dirtied at the
-/// object's packed offset, and translate shard-local inline addresses to
-/// the node-global mirrored region.
+/// the request's object id and the backend's kind), mirror exactly what
+/// the op dirtied at the object's packed offset, and translate
+/// backend-local addresses to the node-global mirrored region.
 fn handle_request(
     node: u32,
     ns: &NodeShards,
@@ -412,65 +518,140 @@ fn handle_request(
     if (req.obj.0 as usize) >= place.objects() {
         // The wire accepts any u32 object id; an unknown one must not
         // panic the shard's event loop (that would hang every client
-        // routed to this lane). Answer like a miss: the object hosts
-        // nothing here.
-        return RpcResponse::inline(RpcResult::NotFound);
+        // routed to this lane). Typed dispatch error.
+        return RpcResponse::inline(RpcResult::Unsupported);
     }
     let sid = place.shard_of(req.obj, req.key);
     let mut g = ns.shards[sid as usize].lock().unwrap();
     let mut resp = g.serve_rpc(req);
     let geo = *place.geo(req.obj);
-    let bb = geo.bucket_bytes as u64;
-    let shard_base = geo.base + place.base_bucket(req.obj, sid) * bb;
-    // Mirror only what the op actually dirtied: plain reads never touch
-    // state, and mutating ops that found nothing to change (NotFound, a
-    // lost lock race, a full table) leave the image as-is. A successful
-    // LockRead *does* dirty state — the lock bit must be visible to other
-    // clients' one-sided validation reads.
-    let dirty = match (req.op, &resp.result) {
-        (RpcOp::Read, _) => false,
-        (_, RpcResult::NotFound) | (_, RpcResult::LockConflict) | (_, RpcResult::Full) => false,
-        _ => true,
-    };
-    if dirty {
-        let table = g.table(req.obj);
-        // Lock/unlock/update mutate one existing item in place: mirror just
-        // that slot's bytes (header + value) instead of the whole bucket
-        // image. Structural ops (insert/delete) can move slots or flip the
-        // chain flag, and chained items have no inline slot — those fall
-        // back to the full bucket image.
-        let slot_local = matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock);
-        match if slot_local { table.dirty_slot_image(req.key) } else { None } {
-            Some((off, image)) => fabric.write(node, DATA_REGION, shard_base + off, &image),
-            None => {
-                let local = table.bucket_index_of(req.key);
-                let image = table.bucket_image(local);
-                fabric.write(node, DATA_REGION, shard_base + local * bb, &image);
+    match geo.kind {
+        ObjectKind::Mica => {
+            let bb = geo.bucket_bytes as u64;
+            let shard_base = geo.base + place.base_bucket(req.obj, sid) * bb;
+            // Mirror only what the op actually dirtied: plain reads never
+            // touch state, and mutating ops that found nothing to change
+            // (NotFound, a lost lock race, a full table, a dispatch
+            // error) leave the image as-is. A successful LockRead *does*
+            // dirty state — the lock bit must be visible to other
+            // clients' one-sided validation reads.
+            let dirty = match (req.op, &resp.result) {
+                (RpcOp::Read, _) => false,
+                (_, RpcResult::NotFound)
+                | (_, RpcResult::LockConflict)
+                | (_, RpcResult::Full)
+                | (_, RpcResult::Unsupported) => false,
+                _ => true,
+            };
+            if dirty {
+                let table = g.table(req.obj);
+                // Lock/unlock/update mutate one existing item in place:
+                // mirror just that slot's bytes (header + value) instead
+                // of the whole bucket image. Structural ops
+                // (insert/delete) can move slots or flip the chain flag,
+                // and chained items have no inline slot — those fall back
+                // to the full bucket image.
+                let slot_local =
+                    matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock);
+                match if slot_local { table.dirty_slot_image(req.key) } else { None } {
+                    Some((off, image)) => {
+                        fabric.write(node, DATA_REGION, shard_base + off, &image)
+                    }
+                    None => {
+                        let local = table.bucket_index_of(req.key);
+                        let image = table.bucket_image(local);
+                        fabric.write(node, DATA_REGION, shard_base + local * bb, &image);
+                    }
+                }
+            }
+            // Shard tables address their bucket array from offset 0 in a
+            // private per-table region; clients read the node-global
+            // packed mirror, so rebase inline item addresses. Chain
+            // addresses keep their private region keys — those are always
+            // >= the object count (see [`Catalog`]), so they can never be
+            // mistaken for the data region and clients fall back to an
+            // RPC read for them.
+            if let RpcResult::Value { addr, .. } = &mut resp.result {
+                if addr.region == g.table(req.obj).bucket_region {
+                    *addr = RemoteAddr { region: DATA_REGION, offset: shard_base + addr.offset };
+                }
             }
         }
-    }
-    // Shard tables address their bucket array from offset 0 in a private
-    // per-table region; clients read the node-global packed mirror, so
-    // rebase inline item addresses. Chain addresses keep their private
-    // region keys — those are always >= the object count (see
-    // [`Catalog`]), so they can never be mistaken for the data region and
-    // clients fall back to an RPC read for them.
-    if let RpcResult::Value { addr, .. } = &mut resp.result {
-        if addr.region == g.table(req.obj).bucket_region {
-            *addr = RemoteAddr { region: DATA_REGION, offset: shard_base + addr.offset };
+        ObjectKind::BTree => {
+            // The whole tree lives on this (home) shard, so leaf indices
+            // are node-global already; only successful inserts dirty it.
+            if req.op == RpcOp::Insert && resp.result == RpcResult::Ok {
+                mirror_btree_dirty(fabric, node, &geo, &mut g, req.obj);
+            }
+            if let RpcResult::Value { addr, .. } = &mut resp.result {
+                if addr.region == g.btree(req.obj).region {
+                    *addr = RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
+                }
+            }
+        }
+        ObjectKind::Hopscotch => {
+            if matches!(req.op, RpcOp::Insert | RpcOp::Delete) && resp.result == RpcResult::Ok
+            {
+                mirror_hop_dirty(fabric, node, &geo, &mut g, req.obj);
+            }
+            if let RpcResult::Value { addr, .. } = &mut resp.result {
+                if addr.region == g.hopscotch(req.obj).region {
+                    *addr = RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
+                }
+            }
         }
     }
     resp
 }
 
-/// Client-side resolver: one MICA resolver per catalog object (each with
-/// its own address cache) + optional PJRT batch engine whose resolved
-/// hints are cached per `(object, key)`.
+/// Per-owner-node fence-keyed leaf route caches for one B-link object
+/// (each node hosts its own tree over its key partition, so a cached
+/// leaf address is only meaningful on its node).
+struct BTreeResolver {
+    routes: Vec<BTreeClientCache>,
+    /// Leaf wire bytes (the one-sided read size).
+    leaf_bytes: u32,
+    /// Leaf address each in-flight read was actually issued to, keyed by
+    /// key: `lookup_start` records it, `lookup_end_read` consumes it.
+    /// The route cache may be repaired by *other* keys' completions
+    /// while a read is in flight, so re-querying `route(key)` at
+    /// completion could name a different leaf than the bytes in hand —
+    /// hits and fence-miss repairs must bind to the read's own address.
+    pending: HashMap<u64, RemoteAddr>,
+}
+
+/// Pure-arithmetic geometry of one hopscotch object (no client state:
+/// the home slot is a hash, the neighborhood read is authoritative).
+struct HopGeo {
+    base: u64,
+    mask: u64,
+    h: u32,
+    item_size: u32,
+}
+
+/// Per-object client-side resolver, kind-dispatched: the `lookup_start`
+/// / `lookup_end` callbacks of whichever backend the object is.
+enum ObjResolver {
+    /// MICA: home-bucket hints + cached exact item addresses.
+    Mica(MicaClient),
+    /// B-link tree: cached-inner-level traversal — route locally, read
+    /// one leaf, repair the route from RPC replies on fence miss.
+    BTree(BTreeResolver),
+    /// Hopscotch: one `H * item_size` neighborhood read, always.
+    Hop(HopGeo),
+}
+
+/// Client-side resolver: one kind-dispatched resolver per catalog object
+/// + optional PJRT batch engine whose resolved hints are cached per
+/// `(object, key)`.
 struct LiveResolver {
-    clients: Vec<MicaClient>,
+    objs: Vec<ObjResolver>,
+    nodes: u32,
     engine: Option<Engine>,
-    /// Object 0's bucket mask (the geometry the compiled artifact models).
-    mask0: u64,
+    /// Object 0's bucket mask when object 0 is a MICA table (the
+    /// geometry the compiled artifact models); `None` disables the
+    /// artifact path.
+    mask0: Option<u64>,
     /// Hints resolved by the compiled artifact, consumed by
     /// `lookup_start` instead of re-hashing on the CPU.
     hint_cache: HashMap<(u32, u64), LookupHint>,
@@ -479,13 +660,15 @@ struct LiveResolver {
 impl LiveResolver {
     /// Resolve a batch of object-0 keys through the compiled artifact,
     /// seeding the hint cache the subsequent per-op `lookup_start` calls
-    /// consume. (The artifact models object 0's geometry, whose packed
-    /// base is 0; other objects resolve on the CPU.)
+    /// consume. (The artifact models object 0's MICA geometry, whose
+    /// packed base is 0; other objects — and non-MICA object 0s —
+    /// resolve on the CPU.)
     fn engine_resolve(&mut self, keys: &[u64], nodes: u32, bucket_bytes: u32) {
+        let Some(mask0) = self.mask0 else { return };
         let Some(engine) = &self.engine else { return };
         for chunk in keys.chunks(crate::runtime::BATCH) {
             let resolved = engine
-                .lookup_resolve(chunk, nodes, self.mask0, bucket_bytes)
+                .lookup_resolve(chunk, nodes, mask0, bucket_bytes)
                 .expect("PJRT resolve");
             for (k, r) in chunk.iter().zip(resolved) {
                 let hint = LookupHint {
@@ -496,7 +679,10 @@ impl LiveResolver {
                 debug_assert_eq!(
                     (hint.node, hint.addr),
                     {
-                        let h = self.clients[0].lookup_start(*k);
+                        let ObjResolver::Mica(c) = &self.objs[0] else {
+                            unreachable!("mask0 set for a non-MICA object 0")
+                        };
+                        let h = c.lookup_start(*k);
                         (h.node, h.addr)
                     },
                     "artifact and rust resolver must agree"
@@ -512,23 +698,133 @@ impl DsCallbacks for LiveResolver {
         if let Some(hint) = self.hint_cache.remove(&(obj.0, key)) {
             return Some(hint); // resolved by the PJRT executable
         }
-        Some(self.clients[obj.0 as usize].lookup_start(key))
+        let nodes = self.nodes;
+        match &mut self.objs[obj.0 as usize] {
+            ObjResolver::Mica(c) => Some(c.lookup_start(key)),
+            // Cached-inner-level traversal: a warm route answers with one
+            // leaf read; a cold (or invalidated) one declines, and the
+            // lookup starts with the RPC re-traversal that warms it.
+            ObjResolver::BTree(b) => {
+                let node = owner_of(key, nodes);
+                b.routes[node as usize].route(key).map(|addr| {
+                    b.pending.insert(key, addr);
+                    LookupHint { node, addr, len: b.leaf_bytes }
+                })
+            }
+            ObjResolver::Hop(g) => {
+                let node = owner_of(key, nodes);
+                let home = fnv1a64(key) & g.mask;
+                Some(LookupHint {
+                    node,
+                    addr: RemoteAddr {
+                        region: DATA_REGION,
+                        offset: g.base + home * g.item_size as u64,
+                    },
+                    len: g.h * g.item_size,
+                })
+            }
+        }
     }
     fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
-        let c = &mut self.clients[obj.0 as usize];
-        match view {
-            ReadView::Bucket(b) => c.lookup_end_bucket(key, b),
-            ReadView::Item(i) => c.lookup_end_item(key, *i),
-            ReadView::Neighborhood(_) => LookupOutcome::NeedRpc,
+        let nodes = self.nodes;
+        match (&mut self.objs[obj.0 as usize], view) {
+            (ObjResolver::Mica(c), ReadView::Bucket(b)) => c.lookup_end_bucket(key, b),
+            (ObjResolver::Mica(c), ReadView::Item(i)) => c.lookup_end_item(key, *i),
+            (ObjResolver::BTree(b), ReadView::Leaf(leaf)) => {
+                let node = owner_of(key, nodes) as usize;
+                // The address this read was issued to (NOT a fresh
+                // route(key): same-batch repairs may have rebound the
+                // range to a different leaf since the read went out).
+                let read_addr = b.pending.remove(&key);
+                match BTreeClientCache::check(key, leaf.as_ref()) {
+                    TreeLookupOutcome::Hit(_) => {
+                        let v = leaf.as_ref().expect("hit implies a parsed leaf");
+                        match read_addr {
+                            Some(addr) => LookupOutcome::Hit {
+                                version: v.version,
+                                addr,
+                                locked: false,
+                            },
+                            // Untracked read (duplicate key in one
+                            // batch): let the owner resolve it.
+                            None => LookupOutcome::NeedRpc,
+                        }
+                    }
+                    TreeLookupOutcome::Absent => LookupOutcome::Absent,
+                    TreeLookupOutcome::NeedRpc => {
+                        // Fence miss: a split moved the key past this
+                        // leaf. The read still returned the leaf's TRUE
+                        // fences, so narrow the stale entry to them —
+                        // bound to the address actually read — and let
+                        // the RPC reply install the range the key moved
+                        // to. Keys that stayed in the left half keep
+                        // their one-read path, and the retry budget is
+                        // one by construction (read → RPC → done; a
+                        // lookup never loops back to another read).
+                        match (leaf.as_ref(), read_addr) {
+                            (Some(v), Some(addr)) => {
+                                b.routes[node].install_leaf(v.low, v.high, addr)
+                            }
+                            _ => b.routes[node].invalidate(key),
+                        }
+                        LookupOutcome::NeedRpc
+                    }
+                }
+            }
+            (ObjResolver::Hop(g), ReadView::Neighborhood(nv)) => {
+                match HopscotchTable::find_in_view(nv, key) {
+                    Some(version) => {
+                        let off = nv
+                            .slots
+                            .iter()
+                            .position(|(k, _)| *k == key)
+                            .expect("find_in_view found the key")
+                            as u64;
+                        // Canonical slot index: the read may have hit the
+                        // wrap-tail copy of a wrapped neighborhood.
+                        let slot = ((fnv1a64(key) & g.mask) + off) & g.mask;
+                        LookupOutcome::Hit {
+                            version,
+                            addr: RemoteAddr {
+                                region: DATA_REGION,
+                                offset: g.base + slot * g.item_size as u64,
+                            },
+                            locked: false,
+                        }
+                    }
+                    // Hopscotch invariant: absence in the neighborhood is
+                    // proof of absence — no RPC needed.
+                    None => LookupOutcome::Absent,
+                }
+            }
+            // Kind/view mismatch: unreachable through `parse_view_at`,
+            // but a robust resolver lets the owner decide.
+            _ => LookupOutcome::NeedRpc,
         }
     }
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
-        if let RpcResult::Value { addr, .. } = &resp.result {
-            self.clients[obj.0 as usize].record_rpc_addr(key, node, *addr);
+        match &mut self.objs[obj.0 as usize] {
+            ObjResolver::Mica(c) => {
+                if let RpcResult::Value { addr, .. } = &resp.result {
+                    c.record_rpc_addr(key, node, *addr);
+                }
+            }
+            // Route repair: the reply's value payload is the covering
+            // leaf's wire image — its fence keys install the fresh route,
+            // so the next lookup in this range is one-sided again.
+            ObjResolver::BTree(b) => {
+                if let RpcResult::Value { addr, value: Some(bytes), .. } = &resp.result {
+                    if let Some(view) = parse_leaf_view(bytes) {
+                        b.routes[node as usize].install_leaf(view.low, view.high, *addr);
+                    }
+                }
+            }
+            // Hopscotch lookups are stateless (the home slot is a hash).
+            ObjResolver::Hop(_) => {}
         }
     }
-    fn owner(&self, obj: ObjectId, key: u64) -> u32 {
-        self.clients[obj.0 as usize].owner(key)
+    fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
+        owner_of(key, self.nodes)
     }
 }
 
@@ -547,18 +843,37 @@ impl ClientSeed {
     /// object, rebased to the object's packed offset.
     pub fn build(self, engine: Option<Engine>) -> LiveClient {
         let nodes = self.place.nodes();
-        let clients: Vec<MicaClient> = self
+        let objs: Vec<ObjResolver> = self
             .cat
             .objects
             .iter()
             .enumerate()
-            .map(|(o, tc)| {
+            .map(|(o, oc)| {
                 let obj = ObjectId(o as u32);
-                MicaClient::new(obj, tc, nodes, vec![DATA_REGION; nodes as usize])
-                    .with_base(self.place.geo(obj).base)
+                let geo = self.place.geo(obj);
+                match oc {
+                    ObjectConfig::Mica(tc) => ObjResolver::Mica(
+                        MicaClient::new(obj, tc, nodes, vec![DATA_REGION; nodes as usize])
+                            .with_base(geo.base),
+                    ),
+                    ObjectConfig::BTree(_) => ObjResolver::BTree(BTreeResolver {
+                        routes: (0..nodes).map(|_| BTreeClientCache::default()).collect(),
+                        leaf_bytes: geo.bucket_bytes,
+                        pending: HashMap::new(),
+                    }),
+                    ObjectConfig::Hopscotch(_) => ObjResolver::Hop(HopGeo {
+                        base: geo.base,
+                        mask: geo.mask,
+                        h: geo.width,
+                        item_size: geo.item_size,
+                    }),
+                }
             })
             .collect();
-        let max_value = self.cat.objects.iter().map(|c| c.value_len).max().unwrap_or(0);
+        // Ring slots must hold the largest RPC payload any object's reply
+        // carries: a MICA value, or a B-link leaf image (route repair).
+        let max_value =
+            self.cat.objects.iter().map(|c| c.rpc_value_capacity()).max().unwrap_or(0);
         let slot_bytes = (RPC_HEADER_BYTES + RPC_REQ_BODY_BYTES.max(RPC_RESP_BODY_BYTES) + 8)
             as usize
             + max_value as usize;
@@ -570,9 +885,10 @@ impl ClientSeed {
             nodes,
             node_id: self.node_id,
             resolver: LiveResolver {
-                clients,
+                objs,
+                nodes,
                 engine,
-                mask0: self.cat.objects[0].buckets - 1,
+                mask0: self.cat.objects[0].as_mica().map(|c| c.buckets - 1),
                 hint_cache: HashMap::new(),
             },
             place: self.place,
@@ -616,17 +932,27 @@ fn item_read_view(key: u64, resp: RpcResponse) -> ReadView {
     ReadView::Item(view)
 }
 
-/// Parse one-sided read bytes into the view the MICA client understands:
-/// the packed offset identifies the table, whose geometry disambiguates
-/// bucket reads from item reads.
+/// Parse one-sided read bytes into the view the resolver understands:
+/// the packed offset identifies the object, whose kind selects the wire
+/// codec — MICA bucket/item images, B-link leaf images, or hopscotch
+/// neighborhoods — and whose geometry disambiguates read granularities.
 fn parse_view_at(place: &Placement, offset: u64, bytes: &[u8]) -> ReadView {
     let geo = place.geo(place.object_at(offset));
-    if bytes.len() as u32 == geo.bucket_bytes {
-        ReadView::Bucket(
-            parse_bucket_view(bytes, geo.width, geo.item_size).expect("malformed bucket image"),
-        )
-    } else {
-        ReadView::Item(parse_item_view(bytes).filter(|v| v.key != 0))
+    match geo.kind {
+        ObjectKind::Mica => {
+            if bytes.len() as u32 == geo.bucket_bytes {
+                ReadView::Bucket(
+                    parse_bucket_view(bytes, geo.width, geo.item_size)
+                        .expect("malformed bucket image"),
+                )
+            } else {
+                ReadView::Item(parse_item_view(bytes).filter(|v| v.key != 0))
+            }
+        }
+        ObjectKind::BTree => ReadView::Leaf(parse_leaf_view(bytes)),
+        ObjectKind::Hopscotch => {
+            ReadView::Neighborhood(parse_neighborhood_view(bytes, geo.item_size))
+        }
     }
 }
 
@@ -767,30 +1093,49 @@ impl LiveClient {
 
     /// One-two-sided lookups for a batch of keys of one catalog object,
     /// pipelined: address resolution runs through the PJRT engine when
-    /// present (object 0 — the geometry the artifact models), the batch's
-    /// first one-sided reads are doorbell-coalesced per owner node (one
-    /// region acquisition each covers every table, views parsed zero-copy
-    /// against the geometry the packed offset selects), and RPC fallbacks
-    /// keep up to [`LOOKUP_WINDOW`] requests outstanding in the ring
-    /// while other machines make progress. Returns per-key results.
+    /// present (a MICA object 0 — the geometry the artifact models), the
+    /// batch's first one-sided reads are doorbell-coalesced per owner
+    /// node, and RPC fallbacks keep up to [`LOOKUP_WINDOW`] requests
+    /// outstanding in the ring while other machines make progress.
+    /// Returns per-key results. (The general form is
+    /// [`Self::lookup_batch_items`], which mixes objects — and backend
+    /// kinds — inside one batch.)
     pub fn lookup_batch_obj(&mut self, obj: ObjectId, keys: &[u64]) -> Vec<LkResult> {
-        assert!(
-            (obj.0 as usize) < self.place.objects(),
-            "unknown catalog object {obj:?} ({} hosted)",
-            self.place.objects()
-        );
-        if obj == ObjectId(0) {
-            // Hot path: batch-resolve via the compiled XLA artifact.
+        if obj == ObjectId(0)
+            && (obj.0 as usize) < self.place.objects()
+            && self.place.geo(obj).kind == ObjectKind::Mica
+        {
+            // Hot path: batch-resolve via the compiled XLA artifact (it
+            // models object 0's MICA geometry).
             let bb = self.place.geo(obj).bucket_bytes;
             self.resolver.engine_resolve(keys, self.nodes, bb);
         }
-        let mut results: Vec<Option<LkResult>> = vec![None; keys.len()];
-        let mut sms: Vec<Option<LookupSm>> = Vec::with_capacity(keys.len());
+        let items: Vec<(ObjectId, u64)> = keys.iter().map(|&k| (obj, k)).collect();
+        self.lookup_batch_items(&items)
+    }
+
+    /// One-two-sided lookups for a batch of `(object, key)` items that
+    /// may span catalog objects — and backend kinds — freely: a MICA
+    /// bucket read, a B-link leaf read, and a hopscotch neighborhood
+    /// read of the same owner node ride the **same** `read_batch`
+    /// doorbell group (all objects share the node's packed data region),
+    /// and RPC fallbacks of all kinds share the pipelined ring window.
+    /// Returns per-item results, in input order.
+    pub fn lookup_batch_items(&mut self, items: &[(ObjectId, u64)]) -> Vec<LkResult> {
+        for &(obj, _) in items {
+            assert!(
+                (obj.0 as usize) < self.place.objects(),
+                "unknown catalog object {obj:?} ({} hosted)",
+                self.place.objects()
+            );
+        }
+        let mut results: Vec<Option<LkResult>> = vec![None; items.len()];
+        let mut sms: Vec<Option<LookupSm>> = Vec::with_capacity(items.len());
         let mut reads: Vec<Vec<(usize, u64, u32)>> = vec![Vec::new(); self.nodes as usize];
         let mut rpcq: VecDeque<PendingRpc> = VecDeque::new();
 
         // Phase 1: start every machine; group first reads by owner node.
-        for (i, &key) in keys.iter().enumerate() {
+        for (i, &(obj, key)) in items.iter().enumerate() {
             let mut sm = LookupSm::new(obj, key);
             match sm.advance(&mut self.resolver, None) {
                 LkAction::Read { obj, key, node, addr, len } => {
@@ -899,6 +1244,31 @@ impl LiveClient {
             .collect()
     }
 
+    /// Issue one typed data-structure RPC to the owner of `(obj, key)` —
+    /// the write-based half of the dataplane without a transaction
+    /// engine around it. This is how live clients mutate tree and
+    /// hopscotch objects (which live outside the transactional opcode
+    /// set): the request travels the ring, dispatches through
+    /// [`Catalog::serve_rpc`] by object id and kind, and the owner
+    /// mirrors whatever the op dirtied. Opcodes the backend cannot serve
+    /// come back as the typed [`RpcResult::Unsupported`].
+    pub fn ds_rpc(
+        &mut self,
+        obj: ObjectId,
+        key: u64,
+        op: RpcOp,
+        value: Option<Vec<u8>>,
+    ) -> RpcResult {
+        assert!(
+            (obj.0 as usize) < self.place.objects(),
+            "unknown catalog object {obj:?} ({} hosted)",
+            self.place.objects()
+        );
+        let node = self.place.node_of(key);
+        let req = RpcRequest { obj, key, op, tx_id: 0, value };
+        self.send_rpc(node, &req).result
+    }
+
     /// Run one Storm transaction to completion over the fabric — the
     /// window-of-1 special case of [`Self::run_tx_batch`].
     pub fn run_tx(&mut self, read_set: Vec<TxItem>, write_set: Vec<TxItem>) -> TxOutcome {
@@ -934,6 +1304,20 @@ impl LiveClient {
                     item.obj,
                     item.key,
                     self.place.objects()
+                );
+                // Only MICA backends implement the transactional opcode
+                // set (item-granularity locks + validation reads); tree
+                // and hopscotch objects serve the lookup path. Reject at
+                // admission — a kind mismatch discovered mid-schedule
+                // would otherwise surface as an engine panic with other
+                // transactions' locks still held.
+                assert_eq!(
+                    self.place.geo(item.obj).kind,
+                    ObjectKind::Mica,
+                    "transactions require MICA-backed objects; {:?} (key {}) is {:?}",
+                    item.obj,
+                    item.key,
+                    self.place.geo(item.obj).kind
                 );
             }
         }

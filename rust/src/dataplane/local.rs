@@ -42,8 +42,9 @@ impl DsCallbacks for LocalClient {
         match view {
             ReadView::Bucket(b) => c.lookup_end_bucket(key, b),
             ReadView::Item(i) => c.lookup_end_item(key, *i),
-            // MICA clients never issue neighborhood reads (FaRM only).
-            ReadView::Neighborhood(_) => LookupOutcome::NeedRpc,
+            // MICA clients never issue neighborhood or leaf reads (those
+            // views belong to the hopscotch/btree resolvers).
+            ReadView::Neighborhood(_) | ReadView::Leaf(_) => LookupOutcome::NeedRpc,
         }
     }
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
@@ -91,7 +92,9 @@ impl LocalCluster {
             let obj = ObjectId(o as u32);
             let regions =
                 self.nodes.iter().map(|nd| nd.table(obj).bucket_region).collect::<Vec<_>>();
-            let mut c = MicaClient::new(obj, cfg, n, regions);
+            // The reference driver is MICA-only (`Self::new` takes
+            // `MicaConfig`s); heterogeneous catalogs live on the live path.
+            let mut c = MicaClient::new(obj, cfg.mica(), n, regions);
             if with_cache {
                 c = c.with_cache();
             }

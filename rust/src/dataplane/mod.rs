@@ -24,17 +24,23 @@
 //!   encoding. The target object id sits at a fixed wire offset
 //!   ([`rpc::request_obj`]) so receive paths can steer multi-object
 //!   traffic without a full decode.
-//! * [`live`] — the live composition over the loopback fabric, a genuine
-//!   **multi-object dataplane** since PR 3: every node hosts a storage
-//!   catalog ([`crate::ds::catalog`]) of independent tables packed into
-//!   one registered region, the cluster-wide placement map routes
-//!   `(ObjectId, key)` to `(node, shard, offset)`, and transactions mix
-//!   objects freely (four-table TATP and SmallBank run natively).
-//!   Sharded server loops own a bucket range of *every* table; pipelined
-//!   batch lookups use doorbell-coalesced reads that may span tables;
-//!   the transaction scheduler multiplexes concurrent engines per client
-//!   behind an **adaptive window** ([`live::TxWindow`]: grow on clean
-//!   commits, hold on ring pressure, shrink on sustained aborts).
+//! * [`live`] — the live composition over the loopback fabric, a
+//!   genuine **heterogeneous multi-object dataplane**: every node hosts
+//!   a storage catalog ([`crate::ds::catalog`]) of independent objects —
+//!   MICA tables, B-link trees, hopscotch tables — packed into one
+//!   registered region, and the cluster-wide placement map routes
+//!   `(ObjectId, key)` to `(node, shard, offset)` by backend kind (MICA
+//!   shards by bucket range across every lane; tree/hopscotch objects
+//!   live whole on a per-object home shard). Lookups dispatch per kind —
+//!   fine-grained bucket reads, client-cached-route leaf reads with RPC
+//!   re-traversal + route repair on a split, one-shot `H × item_size`
+//!   neighborhood reads — and a `read_batch` doorbell group may span
+//!   kinds ([`live::LiveClient::lookup_batch_items`]). Transactions mix
+//!   MICA objects freely (four-table TATP and SmallBank run natively)
+//!   behind an **adaptive window** ([`live::TxWindow`]); opcodes a
+//!   backend cannot serve answer with the typed
+//!   [`crate::ds::api::RpcResult::Unsupported`] instead of panicking a
+//!   server lane.
 //! * [`local`] — the reference in-process driver over per-node catalogs
 //!   (the semantic baseline the simulator and live driver must match).
 

@@ -23,8 +23,12 @@ pub enum ReadView {
     /// Single-item read (cached-address fast path); `None` when the
     /// address no longer maps to a live item.
     Item(Option<ItemView>),
-    /// Hopscotch neighborhood read (the FaRM baseline's large read).
+    /// Hopscotch neighborhood read (one `H * item_size` coarse read —
+    /// the FaRM-style catalog objects and the Lockfree_FaRM baseline).
     Neighborhood(crate::ds::hopscotch::NeighborhoodView),
+    /// B-link leaf read (client-cached-route traversal); `None` when the
+    /// bytes are not a live leaf (e.g. a never-written mirror slot).
+    Leaf(Option<crate::ds::btree::LeafView>),
 }
 
 /// The data-structure side of the dataplane (paper Table 3), object-id
@@ -238,7 +242,7 @@ mod tests {
             match view {
                 ReadView::Bucket(b) => self.client.lookup_end_bucket(key, b),
                 ReadView::Item(i) => self.client.lookup_end_item(key, *i),
-                ReadView::Neighborhood(_) => unreachable!("MICA harness"),
+                ReadView::Neighborhood(_) | ReadView::Leaf(_) => unreachable!("MICA harness"),
             }
         }
         fn lookup_end_rpc(&mut self, _obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {

@@ -170,6 +170,7 @@ pub fn encode_response_into(resp: &crate::ds::api::RpcResponse, out: &mut Vec<u8
             RpcResult::LockConflict => (2, 0, 0, 0, 0, None),
             RpcResult::Ok => (3, 0, 0, 0, 0, None),
             RpcResult::Full => (4, 0, 0, 0, 0, None),
+            RpcResult::Unsupported => (5, 0, 0, 0, 0, None),
         };
     out.push(tag);
     out.push(locked); // foreign-lock bit of a served Value (OCC validation)
@@ -232,6 +233,7 @@ pub fn decode_response(b: &[u8]) -> Option<crate::ds::api::RpcResponse> {
         2 => RpcResult::LockConflict,
         3 => RpcResult::Ok,
         4 => RpcResult::Full,
+        5 => RpcResult::Unsupported,
         _ => return None,
     };
     Some(RpcResponse { result, hops })
@@ -365,6 +367,7 @@ mod tests {
             RpcResponse::inline(RpcResult::LockConflict),
             RpcResponse::inline(RpcResult::Ok),
             RpcResponse::inline(RpcResult::Full),
+            RpcResponse::inline(RpcResult::Unsupported),
         ];
         for r in variants {
             assert_eq!(decode_response(&encode_response(&r)), Some(r));

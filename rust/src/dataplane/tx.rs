@@ -151,6 +151,12 @@ pub enum AbortReason {
     ValidationLocked,
     /// A read-set item moved/disappeared (stale address).
     ValidationMoved,
+    /// The server answered a lock/commit opcode with a typed dispatch
+    /// error ([`RpcResult::Unsupported`]) — e.g. a write aimed at a
+    /// backend kind without the transactional opcode set. The engine
+    /// aborts cleanly (releasing any locks it holds) instead of
+    /// panicking mid-schedule.
+    Unsupported,
 }
 
 /// Final transaction outcome.
@@ -378,6 +384,13 @@ impl TxEngine {
                         // Missing item: nothing locked; commit will surface
                         // NotFound for this write.
                         RpcResult::NotFound => {}
+                        // Typed dispatch error: abort cleanly; the phase
+                        // drain releases locks already held.
+                        RpcResult::Unsupported => {
+                            self.fail.get_or_insert(AbortReason::Unsupported);
+                        }
+                        // Ok/Full can never answer a LockRead — keep the
+                        // loud failure for genuine protocol violations.
                         other => panic!("unexpected lock-read result {other:?}"),
                     }
                 } else {

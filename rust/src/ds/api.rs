@@ -99,6 +99,11 @@ pub enum RpcResult {
     Ok,
     /// Insert failed: table full (needs resize).
     Full,
+    /// The target object (or the shard the frame reached) cannot serve
+    /// this opcode — e.g. a `LockRead` aimed at a hopscotch object, or an
+    /// object id no catalog entry answers to. A typed dispatch error:
+    /// servers return it instead of panicking on garbage frames.
+    Unsupported,
 }
 
 /// An RPC response, including the serving cost the simulator charges.

@@ -1,21 +1,56 @@
 //! Remote B-link tree (paper §5.5: "For trees, the clients could cache
 //! higher levels of the tree to improve traversals").
 //!
-//! Inner nodes are immutable-ish routing nodes clients cache aggressively;
-//! leaves carry versions. A client traversal consults its cached inner
-//! levels (no network), then issues a single one-sided read for the leaf;
-//! a split detected via the leaf's fence keys invalidates the cached path
-//! and falls back to an RPC traversal — the same one-two-sided pattern.
+//! Inner nodes are routing-only and live on the owner; clients cache a
+//! flattened view of them — a fence-keyed map from key ranges to **leaf
+//! addresses** — and a traversal is then: consult the cached route (no
+//! network), issue one one-sided read of the leaf, and validate the
+//! fence keys in the returned image. A split moves keys to a sibling
+//! leaf, so a stale route is *detected by the read itself* (the fences
+//! no longer cover the key) and the lookup switches to a write-based RPC
+//! that re-traverses on the owner — the same one-two-sided pattern as
+//! the hash table. The RPC reply carries the current leaf image, so the
+//! client repairs exactly the stale range and the next lookup is
+//! one-sided again; retries are bounded by construction (read → RPC →
+//! done, never read → read).
 //!
-//! This is the "extension" data structure demonstrating that the Storm
-//! callback API is not hash-table specific.
+//! Leaves serialize to fixed [`LEAF_BYTES`]-byte wire images
+//! ([`RemoteBTree::leaf_image`] / [`parse_leaf_view`]) so the live
+//! catalog can mirror leaf `i` at `base + i * LEAF_BYTES` inside the
+//! node's packed data region, exactly like a MICA bucket array.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
+use crate::ds::api::{RpcResponse, RpcResult};
 use crate::mem::{MrKey, RegionTable, RemoteAddr};
 
 const LEAF_CAP: usize = 16;
 const INNER_CAP: usize = 16;
+
+/// Wire bytes of one serialized leaf: low(8) + high(8) + version(4) +
+/// count(4) + [`LEAF_CAP`] (key, value) pairs, padded to a power of two.
+pub const LEAF_BYTES: u32 = 512;
+
+/// Default leaf capacity of [`RemoteBTree::new`] (the pre-catalog
+/// constructor; catalog-hosted trees size themselves via
+/// [`RemoteBTree::with_capacity`]).
+pub const DEFAULT_MAX_LEAVES: u64 = 1 << 20;
+
+/// Geometry of a catalog-hosted B-link tree object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BTreeConfig {
+    /// Leaves the mirrored leaf array can hold (wire footprint:
+    /// `max_leaves * LEAF_BYTES`). Splits past this fail with the typed
+    /// [`RpcResult::Full`].
+    pub max_leaves: u64,
+}
+
+impl BTreeConfig {
+    /// Wire bytes of the mirrored leaf array.
+    pub fn table_len(&self) -> u64 {
+        self.max_leaves * LEAF_BYTES as u64
+    }
+}
 
 /// What a one-sided read of a leaf returns.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -54,18 +89,32 @@ pub struct RemoteBTree {
     leaves: Vec<Leaf>,
     root: NodeId,
     height: u32,
-    /// Region leaves live in (leaf i at offset i * leaf_bytes).
+    /// Region leaves live in (leaf i at offset i * [`LEAF_BYTES`]).
     pub region: MrKey,
-    leaf_bytes: u32,
+    /// Leaves the region can hold; splits past this fail with `Full`.
+    max_leaves: u64,
     count: u64,
+    /// Leaves dirtied by the last mutating op (live mirror journal;
+    /// cleared at the start of every mutation).
+    dirty: Vec<u32>,
 }
 
 impl RemoteBTree {
-    /// Empty tree.
+    /// Empty tree with the default leaf budget.
     pub fn new(regions: &mut RegionTable, mode: crate::mem::RegionMode) -> Self {
-        // Reserve space for up to 1M leaves.
-        let leaf_bytes = 512u32;
-        let region = regions.register((1 << 20) * leaf_bytes as u64, mode);
+        Self::with_capacity(DEFAULT_MAX_LEAVES, regions, mode)
+    }
+
+    /// Empty tree whose leaf array holds at most `max_leaves` leaves —
+    /// the region registered here is exactly the wire footprint the
+    /// catalog packs.
+    pub fn with_capacity(
+        max_leaves: u64,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) -> Self {
+        assert!(max_leaves >= 1);
+        let region = regions.register(max_leaves * LEAF_BYTES as u64, mode);
         RemoteBTree {
             inners: Vec::new(),
             leaves: vec![Leaf {
@@ -74,8 +123,9 @@ impl RemoteBTree {
             root: NodeId::Leaf(0),
             height: 1,
             region,
-            leaf_bytes,
+            max_leaves,
             count: 0,
+            dirty: vec![0],
         }
     }
 
@@ -92,6 +142,17 @@ impl RemoteBTree {
     /// Tree height (1 = root is a leaf).
     pub fn height(&self) -> u32 {
         self.height
+    }
+
+    /// Leaves currently allocated.
+    pub fn leaf_count(&self) -> u64 {
+        self.leaves.len() as u64
+    }
+
+    /// Drain the leaves dirtied by the last mutating op (the live server
+    /// mirrors their images into the packed data region).
+    pub fn take_dirty(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.dirty)
     }
 
     fn descend(&self, key: u64) -> u32 {
@@ -111,7 +172,7 @@ impl RemoteBTree {
     /// Address of the leaf currently covering `key`.
     pub fn leaf_addr(&self, key: u64) -> RemoteAddr {
         let l = self.descend(key);
-        RemoteAddr { region: self.region, offset: l as u64 * self.leaf_bytes as u64 }
+        RemoteAddr { region: self.region, offset: l as u64 * LEAF_BYTES as u64 }
     }
 
     /// One-sided read image of the leaf at `addr` (None if out of range).
@@ -119,7 +180,7 @@ impl RemoteBTree {
         if addr.region != self.region {
             return None;
         }
-        let idx = (addr.offset / self.leaf_bytes as u64) as usize;
+        let idx = (addr.offset / LEAF_BYTES as u64) as usize;
         self.leaves.get(idx).map(|l| l.view.clone())
     }
 
@@ -130,23 +191,63 @@ impl RemoteBTree {
         view.entries.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
     }
 
-    /// Insert (owner side; reached via RPC).
-    pub fn insert(&mut self, key: u64, value: u64) {
+    /// The owner-side `rpc_handler` read: re-traverse, and answer with the
+    /// covering leaf's **wire image as the value payload** so the client
+    /// can repair its cached route from the reply (the fences ride along).
+    /// `hops` charges the descent the server CPU performed.
+    pub fn read_rpc(&self, key: u64) -> RpcResponse {
+        let l = self.descend(key);
+        let view = &self.leaves[l as usize].view;
+        let hops = self.height;
+        if view.entries.iter().any(|(k, _)| *k == key) {
+            RpcResponse {
+                result: RpcResult::Value {
+                    version: view.version,
+                    addr: RemoteAddr { region: self.region, offset: l as u64 * LEAF_BYTES as u64 },
+                    value: Some(self.leaf_image(l)),
+                    locked: false,
+                },
+                hops,
+            }
+        } else {
+            RpcResponse { result: RpcResult::NotFound, hops }
+        }
+    }
+
+    /// Insert (owner side; reached via RPC). `Full` when the leaf array
+    /// is at capacity and the insert would split — nothing is mutated in
+    /// that case, so callers can propagate the typed error.
+    pub fn try_insert(&mut self, key: u64, value: u64) -> RpcResult {
+        self.dirty.clear();
         let l = self.descend(key) as usize;
+        let must_split = self.leaves[l].view.entries.len() >= LEAF_CAP
+            && !self.leaves[l].view.entries.iter().any(|(k, _)| *k == key);
+        if must_split && self.leaves.len() as u64 >= self.max_leaves {
+            return RpcResult::Full;
+        }
         let leaf = &mut self.leaves[l].view;
         match leaf.entries.binary_search_by_key(&key, |&(k, _)| k) {
             Ok(pos) => {
                 leaf.entries[pos].1 = value;
                 leaf.version += 1;
-                return;
+                self.dirty.push(l as u32);
+                return RpcResult::Ok;
             }
             Err(pos) => leaf.entries.insert(pos, (key, value)),
         }
         leaf.version += 1;
         self.count += 1;
+        self.dirty.push(l as u32);
         if self.leaves[l].view.entries.len() > LEAF_CAP {
             self.split_leaf(l as u32);
         }
+        RpcResult::Ok
+    }
+
+    /// Insert that must succeed (tests, in-memory population).
+    pub fn insert(&mut self, key: u64, value: u64) {
+        let r = self.try_insert(key, value);
+        assert_eq!(r, RpcResult::Ok, "btree insert failed: {r:?}");
     }
 
     fn split_leaf(&mut self, l: u32) {
@@ -167,6 +268,7 @@ impl RemoteBTree {
         };
         let new_leaf = self.leaves.len() as u32;
         self.leaves.push(Leaf { view: right_view });
+        self.dirty.push(new_leaf);
         self.insert_sep(mid_key, NodeId::Leaf(l), NodeId::Leaf(new_leaf));
     }
 
@@ -219,15 +321,31 @@ impl RemoteBTree {
         self.insert_sep(sep, NodeId::Inner(i), NodeId::Inner(new_inner));
     }
 
-    /// The routing table a client would cache: separator keys of all inner
-    /// levels flattened to (sep -> leaf addr) boundaries. Clients rebuild
-    /// it via an RPC when stale.
+    /// Serialize leaf `l` to its [`LEAF_BYTES`]-byte wire image (what a
+    /// one-sided read of the mirrored leaf array returns).
+    pub fn leaf_image(&self, l: u32) -> Vec<u8> {
+        let view = &self.leaves[l as usize].view;
+        let mut out = vec![0u8; LEAF_BYTES as usize];
+        out[0..8].copy_from_slice(&view.low.to_le_bytes());
+        out[8..16].copy_from_slice(&view.high.to_le_bytes());
+        out[16..20].copy_from_slice(&view.version.to_le_bytes());
+        out[20..24].copy_from_slice(&(view.entries.len() as u32).to_le_bytes());
+        for (i, &(k, v)) in view.entries.iter().enumerate() {
+            let at = 24 + i * 16;
+            out[at..at + 8].copy_from_slice(&k.to_le_bytes());
+            out[at + 8..at + 16].copy_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// The routing table a client would cache: (low fence -> leaf addr)
+    /// for every leaf. Clients rebuild it via an RPC when stale.
     pub fn routing_snapshot(&self) -> Vec<(u64, RemoteAddr)> {
         let mut out = Vec::new();
         for (i, leaf) in self.leaves.iter().enumerate() {
             out.push((
                 leaf.view.low,
-                RemoteAddr { region: self.region, offset: i as u64 * self.leaf_bytes as u64 },
+                RemoteAddr { region: self.region, offset: i as u64 * LEAF_BYTES as u64 },
             ));
         }
         out.sort_by_key(|&(low, _)| low);
@@ -235,13 +353,40 @@ impl RemoteBTree {
     }
 }
 
-/// Client-side cached routing: maps key -> leaf address without network.
+/// Parse a leaf wire image. `None` for bytes that are not a live leaf —
+/// including the all-zero image of a never-written mirror slot (a valid
+/// leaf always has `high > low`) and truncated or corrupt frames.
+pub fn parse_leaf_view(bytes: &[u8]) -> Option<LeafView> {
+    if bytes.len() < 24 {
+        return None;
+    }
+    let low = u64::from_le_bytes(bytes[0..8].try_into().ok()?);
+    let high = u64::from_le_bytes(bytes[8..16].try_into().ok()?);
+    let version = u32::from_le_bytes(bytes[16..20].try_into().ok()?);
+    let count = u32::from_le_bytes(bytes[20..24].try_into().ok()?) as usize;
+    if high <= low || count * 16 + 24 > bytes.len() {
+        return None;
+    }
+    let entries = (0..count)
+        .map(|i| {
+            let at = 24 + i * 16;
+            (
+                u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()),
+                u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap()),
+            )
+        })
+        .collect();
+    Some(LeafView { low, high, version, entries })
+}
+
+/// Client-side cached routing: fence-keyed map from key ranges to leaf
+/// addresses, maintained without network — installed wholesale from a
+/// routing snapshot, repaired one leaf at a time from RPC replies, and
+/// invalidated when a read's fence check exposes a stale entry.
 #[derive(Default)]
 pub struct BTreeClientCache {
-    /// Sorted (low fence, leaf addr).
-    route: Vec<(u64, RemoteAddr)>,
-    /// Leaf versions observed (for optimistic validation).
-    pub versions: HashMap<u64, u32>,
+    /// low fence -> (high fence, leaf addr).
+    route: BTreeMap<u64, (u64, RemoteAddr)>,
 }
 
 /// Client-side outcome of a one-sided leaf read.
@@ -251,23 +396,78 @@ pub enum TreeLookupOutcome {
     Hit(u64),
     /// Key provably absent (leaf covers the key range, key missing).
     Absent,
-    /// Cached route stale (leaf split/moved): RPC + cache refresh needed.
+    /// Cached route stale (leaf split/moved): RPC + cache repair needed.
     NeedRpc,
 }
 
 impl BTreeClientCache {
-    /// Install a routing snapshot (obtained via RPC).
-    pub fn install(&mut self, snapshot: Vec<(u64, RemoteAddr)>) {
-        self.route = snapshot;
+    /// Install a full routing snapshot (obtained via RPC), replacing any
+    /// cached state; each leaf's high fence is the next leaf's low.
+    pub fn install(&mut self, mut snapshot: Vec<(u64, RemoteAddr)>) {
+        self.route.clear();
+        snapshot.sort_by_key(|&(low, _)| low);
+        for i in 0..snapshot.len() {
+            let (low, addr) = snapshot[i];
+            let high = snapshot.get(i + 1).map(|&(l, _)| l).unwrap_or(u64::MAX);
+            if high > low {
+                self.route.insert(low, (high, addr));
+            }
+        }
     }
 
-    /// Leaf address for `key` per the cached route (None when no cache).
-    pub fn route(&self, key: u64) -> Option<RemoteAddr> {
-        if self.route.is_empty() {
-            return None;
+    /// Repair a single leaf route from fences learned off the wire (an
+    /// RPC reply's leaf image). Overlapping stale entries are evicted so
+    /// at most one entry ever claims a key.
+    pub fn install_leaf(&mut self, low: u64, high: u64, addr: RemoteAddr) {
+        if high <= low {
+            return;
         }
-        let pos = self.route.partition_point(|&(low, _)| low <= key);
-        Some(self.route[pos - 1].1)
+        // Truncate a predecessor whose range spills into [low, high).
+        // (Copy the entry out first: the range iterator's borrow must end
+        // before the map is mutated.)
+        let pred = self.route.range(..low).next_back().map(|(&l, &v)| (l, v));
+        if let Some((plow, (phigh, paddr))) = pred {
+            if phigh > low {
+                self.route.insert(plow, (low, paddr));
+            }
+        }
+        // Evict entries starting inside the new range.
+        let stale: Vec<u64> = self.route.range(low..high).map(|(&l, _)| l).collect();
+        for l in stale {
+            self.route.remove(&l);
+        }
+        self.route.insert(low, (high, addr));
+    }
+
+    /// Drop the cached entry covering `key` (fence-miss invalidation).
+    pub fn invalidate(&mut self, key: u64) {
+        let covering = self
+            .route
+            .range(..=key)
+            .next_back()
+            .map(|(&low, &(high, _))| (low, high));
+        if let Some((low, high)) = covering {
+            if key < high {
+                self.route.remove(&low);
+            }
+        }
+    }
+
+    /// Leaf address for `key` per the cached route (`None` when no cached
+    /// range covers the key — the lookup then starts with an RPC).
+    pub fn route(&self, key: u64) -> Option<RemoteAddr> {
+        let (&_low, &(high, addr)) = self.route.range(..=key).next_back()?;
+        (key < high).then_some(addr)
+    }
+
+    /// Cached leaf ranges.
+    pub fn len(&self) -> usize {
+        self.route.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.route.is_empty()
     }
 
     /// Validate a leaf read against the key (fence check = split detect).
@@ -381,6 +581,144 @@ mod tests {
             let addr = cache.route(k).unwrap();
             let view = t.leaf_view(addr);
             assert_eq!(BTreeClientCache::check(k, view.as_ref()), TreeLookupOutcome::Hit(k));
+        }
+    }
+
+    #[test]
+    fn leaf_image_roundtrips_and_zero_image_is_invalid() {
+        let mut t = mk();
+        for k in 1..=200u64 {
+            t.insert(k, k * 3);
+        }
+        for l in 0..t.leaf_count() as u32 {
+            let img = t.leaf_image(l);
+            assert_eq!(img.len() as u32, LEAF_BYTES);
+            let view = parse_leaf_view(&img).expect("live leaf parses");
+            let direct = t
+                .leaf_view(RemoteAddr { region: t.region, offset: l as u64 * LEAF_BYTES as u64 })
+                .unwrap();
+            assert_eq!(view, direct, "leaf {l} image diverges");
+        }
+        // A never-written mirror slot reads as all zeros: not a leaf.
+        assert_eq!(parse_leaf_view(&vec![0u8; LEAF_BYTES as usize]), None);
+        assert_eq!(parse_leaf_view(&[1, 2, 3]), None, "truncated");
+        // Corrupt count larger than the frame: rejected.
+        let mut img = t.leaf_image(0);
+        img[20..24].copy_from_slice(&10_000u32.to_le_bytes());
+        assert_eq!(parse_leaf_view(&img), None);
+    }
+
+    #[test]
+    fn capacity_exhaustion_returns_full_without_mutation() {
+        let mut r = RegionTable::new();
+        let mut t = RemoteBTree::with_capacity(2, &mut r, RegionMode::Virtual(PageSize::Huge2M));
+        let mut inserted = 0u64;
+        let mut full_at = None;
+        for k in 1..=200u64 {
+            match t.try_insert(k, k) {
+                RpcResult::Ok => inserted += 1,
+                RpcResult::Full => {
+                    full_at = Some(k);
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let full_at = full_at.expect("2-leaf tree must fill up");
+        assert_eq!(t.len(), inserted);
+        assert_eq!(t.leaf_count(), 2);
+        // The failed insert mutated nothing: the key is absent, updates of
+        // present keys still work.
+        assert_eq!(t.get(full_at), None);
+        assert_eq!(t.try_insert(1, 99), RpcResult::Ok);
+        assert_eq!(t.get(1), Some(99));
+    }
+
+    #[test]
+    fn dirty_journal_names_touched_leaves() {
+        let mut t = mk();
+        t.insert(1, 1);
+        assert_eq!(t.take_dirty(), vec![0]);
+        // Fill leaf 0 until it splits: the split dirties old + new leaf.
+        let mut split_dirty = Vec::new();
+        for k in 2..=40u64 {
+            t.insert(k, k);
+            let d = t.take_dirty();
+            if d.len() > 1 {
+                split_dirty = d;
+                break;
+            }
+        }
+        assert!(split_dirty.len() >= 2, "a split must dirty both leaves");
+        for &l in &split_dirty {
+            assert!((l as u64) < t.leaf_count());
+        }
+    }
+
+    #[test]
+    fn read_rpc_carries_leaf_image_for_route_repair() {
+        let mut t = mk();
+        for k in 1..=300u64 {
+            t.insert(k, k + 7);
+        }
+        match t.read_rpc(42).result {
+            RpcResult::Value { version, addr, value, locked } => {
+                assert!(!locked);
+                let img = value.expect("reply carries the leaf image");
+                let view = parse_leaf_view(&img).expect("image parses");
+                assert_eq!(view.version, version);
+                assert!(42 >= view.low && 42 < view.high);
+                assert!(view.entries.iter().any(|&(k, v)| (k, v) == (42, 49)));
+                assert_eq!(t.leaf_addr(42), addr);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(t.read_rpc(999_999).result, RpcResult::NotFound));
+    }
+
+    #[test]
+    fn install_leaf_repairs_exactly_the_stale_range() {
+        let mut t = mk();
+        for k in (0..300u64).map(|i| i * 10 + 1) {
+            t.insert(k, k);
+        }
+        let mut cache = BTreeClientCache::default();
+        cache.install(t.routing_snapshot());
+        for k in 1000..1400u64 {
+            t.insert(k, k);
+        }
+        // Find a stale key, repair via the RPC reply's image, and verify
+        // the repaired route serves a one-read hit while other ranges
+        // stay cached.
+        let mut repaired = 0;
+        for k in 1000..1400u64 {
+            let addr = cache.route(k).expect("old snapshot covered everything");
+            if BTreeClientCache::check(k, t.leaf_view(addr).as_ref()) == TreeLookupOutcome::NeedRpc
+            {
+                cache.invalidate(k);
+                let resp = t.read_rpc(k);
+                if let RpcResult::Value { addr, value: Some(img), .. } = resp.result {
+                    let view = parse_leaf_view(&img).unwrap();
+                    cache.install_leaf(view.low, view.high, addr);
+                }
+                let fresh = cache.route(k).expect("repaired route covers the key");
+                assert_eq!(
+                    BTreeClientCache::check(k, t.leaf_view(fresh).as_ref()),
+                    TreeLookupOutcome::Hit(k),
+                    "repaired route must hit key {k}"
+                );
+                repaired += 1;
+            }
+        }
+        assert!(repaired > 0, "splits must have staled some routes");
+        // After the repairs every key resolves with one read again.
+        for k in 1000..1400u64 {
+            if let Some(addr) = cache.route(k) {
+                assert_eq!(
+                    BTreeClientCache::check(k, t.leaf_view(addr).as_ref()),
+                    TreeLookupOutcome::Hit(k)
+                );
+            }
         }
     }
 }

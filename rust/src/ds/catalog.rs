@@ -1,4 +1,6 @@
-//! Multi-object storage catalog (paper §4).
+//! Multi-object storage catalog (paper §4) — **heterogeneous** since
+//! PR 4: a node hosts many remote data-structure objects, and an object
+//! is no longer necessarily a MICA hash table.
 //!
 //! A Storm node serves *many* remote data-structure objects — TATP's four
 //! tables map to four Storm objects, SmallBank's three to three — and the
@@ -7,29 +9,37 @@
 //! Structures": the object-catalog layer is where one-sided designs win
 //! or lose). This module is that layer:
 //!
-//! * [`CatalogConfig`] — the cluster-wide object schema: one
-//!   [`MicaConfig`] per object, object `o` being `ObjectId(o)` (ids are
-//!   dense so servers and clients index tables by id, no hashing).
+//! * [`ObjectKind`] / [`ObjectConfig`] — the per-object schema entry:
+//!   a MICA table ([`MicaConfig`]), a client-cached B-link tree
+//!   ([`BTreeConfig`], paper §5.5), or a FaRM-style hopscotch table
+//!   ([`HopscotchConfig`], paper §6.1). Object `o` is `ObjectId(o)` (ids
+//!   are dense so servers and clients index backends by id, no hashing).
 //! * [`Catalog`] — one node's (or one server shard's) storage: an
-//!   independent [`MicaTable`] per object plus the shared chain allocator
-//!   and region registry, with the owner-side `rpc_handler` dispatched by
-//!   the request's object id.
+//!   independent [`Backend`] per object plus the shared chain allocator
+//!   and region registry, with the owner-side `rpc_handler` dispatched
+//!   by the request's object id **and the backend's kind** — an opcode a
+//!   kind cannot serve (e.g. `LockRead` at a hopscotch object) answers
+//!   with the typed [`RpcResult::Unsupported`] instead of panicking.
 //! * [`Placement`] — the cluster-wide placement map routing
 //!   `(ObjectId, key)` to `(node, shard, packed offset)`. All objects
 //!   share one registered data region per node (paper principle #3:
-//!   minimize region metadata — one MPT entry serves every table);
-//!   each table occupies a fixed offset range computed by
-//!   [`crate::mem::pack_offsets`], so a client hint is
-//!   `base(obj) + bucket(key) * bucket_bytes(obj)` with zero extra
-//!   lookups, and a one-sided `read_batch` doorbell can span tables on
-//!   the same node.
+//!   minimize region metadata — one MPT entry serves every object);
+//!   each object's wire array (bucket array, leaf array, or slot array)
+//!   occupies a fixed offset range computed by
+//!   [`crate::mem::pack_offsets`], so a one-sided `read_batch` doorbell
+//!   can span objects of different kinds on the same node.
 //!
 //! Keys are partitioned across nodes by the shared hash owner function
-//! (the same for every object), and across a node's server shards by
-//! bucket range within the object's table.
+//! (the same for every object). Within a node, MICA objects shard by
+//! bucket range across every server lane; tree and hopscotch objects are
+//! not range-sliceable the same way, so each lives whole on a single
+//! **home shard** (`object id mod shards`) — per-object shard policy on
+//! top of the same lane routing.
 
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::mica::{bucket_of, owner_of, MicaConfig, MicaTable};
+use crate::ds::btree::{BTreeConfig, RemoteBTree, LEAF_BYTES};
+use crate::ds::hopscotch::{HopscotchConfig, HopscotchTable};
+use crate::ds::mica::{bucket_of, fnv1a64, owner_of, MicaConfig, MicaTable};
 use crate::mem::{pack_offsets, ContiguousAllocator, MrKey, RegionMode, RegionTable};
 
 /// Packed tables are aligned to this boundary within the shared region
@@ -43,17 +53,100 @@ pub fn buckets_for(rows: u64, width: u32) -> u64 {
     ((rows * 2).div_ceil(width.max(1) as u64)).max(8).next_power_of_two()
 }
 
-/// The cluster-wide object schema: per-object table geometry. Object `o`
-/// is `ObjectId(o)` — ids are dense `0..objects.len()`.
+/// The data-structure kind backing a catalog object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ObjectKind {
+    /// MICA hash table: fine-grained bucket reads, overflow chains,
+    /// full transactional opcode set.
+    Mica,
+    /// B-link tree: client-cached inner levels, one leaf read per
+    /// lookup, RPC re-traversal on fence miss. Read/Insert only.
+    BTree,
+    /// Hopscotch table: one `H * item_size` neighborhood read per lookup
+    /// (the FaRM baseline's coarse read). Read/Insert/Delete only.
+    Hopscotch,
+}
+
+/// Per-object schema entry: kind + geometry.
+#[derive(Clone, Debug)]
+pub enum ObjectConfig {
+    /// A MICA hash table.
+    Mica(MicaConfig),
+    /// A client-cached B-link tree.
+    BTree(BTreeConfig),
+    /// A FaRM-style hopscotch table.
+    Hopscotch(HopscotchConfig),
+}
+
+impl ObjectConfig {
+    /// The backend kind.
+    pub fn kind(&self) -> ObjectKind {
+        match self {
+            ObjectConfig::Mica(_) => ObjectKind::Mica,
+            ObjectConfig::BTree(_) => ObjectKind::BTree,
+            ObjectConfig::Hopscotch(_) => ObjectKind::Hopscotch,
+        }
+    }
+
+    /// Wire bytes of the object's mirrored array (bucket / leaf / slot
+    /// array — the range [`Placement`] packs into the node data region).
+    pub fn table_len(&self) -> u64 {
+        match self {
+            ObjectConfig::Mica(c) => c.buckets * c.bucket_bytes() as u64,
+            ObjectConfig::BTree(c) => c.table_len(),
+            ObjectConfig::Hopscotch(c) => c.table_len(),
+        }
+    }
+
+    /// The MICA geometry, when this object is one.
+    pub fn as_mica(&self) -> Option<&MicaConfig> {
+        match self {
+            ObjectConfig::Mica(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// The MICA geometry; panics for other kinds (callers on mica-only
+    /// paths).
+    pub fn mica(&self) -> &MicaConfig {
+        self.as_mica().unwrap_or_else(|| panic!("object is {:?}, not Mica", self.kind()))
+    }
+
+    /// Largest value payload an RPC reply for this object carries (ring
+    /// slots must hold it): MICA replies carry the stored value, B-link
+    /// replies the covering leaf image, hopscotch replies no payload.
+    pub fn rpc_value_capacity(&self) -> u32 {
+        match self {
+            ObjectConfig::Mica(c) => c.value_len,
+            ObjectConfig::BTree(_) => LEAF_BYTES,
+            ObjectConfig::Hopscotch(_) => 0,
+        }
+    }
+}
+
+impl From<MicaConfig> for ObjectConfig {
+    fn from(c: MicaConfig) -> Self {
+        ObjectConfig::Mica(c)
+    }
+}
+
+/// The cluster-wide object schema: per-object kind + geometry. Object
+/// `o` is `ObjectId(o)` — ids are dense `0..objects.len()`.
 #[derive(Clone, Debug)]
 pub struct CatalogConfig {
-    /// One table geometry per object.
-    pub objects: Vec<MicaConfig>,
+    /// One entry per object.
+    pub objects: Vec<ObjectConfig>,
 }
 
 impl CatalogConfig {
-    /// Schema over the given object geometries.
+    /// Schema over MICA-only object geometries (the common case; every
+    /// pre-PR4 catalog).
     pub fn new(objects: Vec<MicaConfig>) -> Self {
+        Self::heterogeneous(objects.into_iter().map(ObjectConfig::Mica).collect())
+    }
+
+    /// Schema over arbitrary backend kinds.
+    pub fn heterogeneous(objects: Vec<ObjectConfig>) -> Self {
         assert!(!objects.is_empty(), "catalog needs at least one object");
         CatalogConfig { objects }
     }
@@ -68,165 +161,337 @@ impl CatalogConfig {
         self.objects.len()
     }
 
-    /// Always false ([`CatalogConfig::new`] rejects empty schemas).
+    /// Always false ([`CatalogConfig::heterogeneous`] rejects empty
+    /// schemas).
     pub fn is_empty(&self) -> bool {
         self.objects.is_empty()
     }
 
     /// Server shards usable by every object: `max` clamped to the
-    /// smallest table's bucket count. Both are powers of two, so the
-    /// result divides every object's bucket count.
+    /// smallest MICA table's bucket count (both are powers of two, so
+    /// the result divides every MICA object's bucket count). Tree and
+    /// hopscotch objects don't constrain the shard count — they live
+    /// whole on one home shard each.
     pub fn shard_count(&self, max: u32) -> u32 {
-        let min_buckets = self.objects.iter().map(|c| c.buckets).min().expect("non-empty");
-        min_buckets.min(max as u64) as u32
+        self.objects
+            .iter()
+            .filter_map(|c| c.as_mica())
+            .map(|c| c.buckets)
+            .min()
+            .unwrap_or(max as u64)
+            .min(max as u64) as u32
     }
 
-    /// Per-shard slice of the schema: every table's bucket count divided
-    /// by `shards` (each server shard owns one bucket range of every
-    /// object).
-    pub fn shard_slice(&self, shards: u32) -> CatalogConfig {
-        CatalogConfig {
-            objects: self
-                .objects
-                .iter()
-                .map(|c| {
-                    assert!(
-                        c.buckets % shards as u64 == 0,
-                        "shards must divide every table's bucket count"
-                    );
-                    MicaConfig { buckets: c.buckets / shards as u64, ..c.clone() }
-                })
-                .collect(),
-        }
-    }
-
-    /// Wire length of each object's bucket array.
+    /// Wire length of each object's mirrored array.
     pub fn table_lens(&self) -> Vec<u64> {
-        self.objects.iter().map(|c| c.buckets * c.bucket_bytes() as u64).collect()
+        self.objects.iter().map(|c| c.table_len()).collect()
     }
 }
 
-/// One node's (or one server shard's) storage: an independent
-/// [`MicaTable`] per catalog object plus the shared chain allocator and
-/// region registry.
+/// One object's storage on one shard.
+pub enum Backend {
+    /// A bucket-range slice of a MICA table (every shard holds one).
+    Mica(MicaTable),
+    /// The whole B-link tree (home shard only).
+    BTree(RemoteBTree),
+    /// The whole hopscotch table (home shard only).
+    Hopscotch(HopscotchTable),
+    /// A tree/hopscotch object homed on a *different* shard of this
+    /// node; requests that reach this shard answer `Unsupported`.
+    Absent,
+}
+
+impl Backend {
+    /// Printable kind name (diagnostics).
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Backend::Mica(_) => "Mica",
+            Backend::BTree(_) => "BTree",
+            Backend::Hopscotch(_) => "Hopscotch",
+            Backend::Absent => "Absent",
+        }
+    }
+}
+
+/// One node's (or one server shard's) storage: an independent backend
+/// per catalog object plus the shared chain allocator and region
+/// registry.
 ///
-/// Construction order pins each table's private bucket region to
-/// `MrKey(object id)`; chain chunks register only afterwards (the
-/// allocator grows lazily), so chain-region keys are always `>= objects`
-/// and can never be mistaken for a table region.
+/// Construction order pins each backend's private wire region to
+/// `MrKey(object id)` (absent backends register a zero-length
+/// placeholder so keys stay dense); chain chunks register only
+/// afterwards (the allocator grows lazily), so chain-region keys are
+/// always `>= objects` and can never be mistaken for an object region.
 pub struct Catalog {
-    tables: Vec<MicaTable>,
-    /// Chain-item allocator shared by all tables.
+    backends: Vec<Backend>,
+    /// Chain-item allocator shared by all MICA tables.
     pub alloc: ContiguousAllocator,
-    /// Region registry (bucket arrays first, then chain chunks).
+    /// Region registry (object wire arrays first, then chain chunks).
     pub regions: RegionTable,
 }
 
 impl Catalog {
-    /// Build the per-object tables for `cfg` (16-chunk chain budget —
-    /// plenty for a live shard; see [`Catalog::with_chunks`]).
+    /// Build the full per-object backends for `cfg` on a single shard
+    /// (16-chunk chain budget — plenty for a live shard; see
+    /// [`Catalog::with_chunks`]).
     pub fn new(cfg: &CatalogConfig, mode: RegionMode) -> Self {
-        Self::with_chunks(cfg, mode, 16)
+        Self::for_shard(cfg, 0, 1, mode, 16)
     }
 
     /// [`Catalog::new`] with an explicit chain-chunk budget (the
     /// simulator loads far larger populations than one live shard).
     pub fn with_chunks(cfg: &CatalogConfig, mode: RegionMode, max_chunks: usize) -> Self {
+        Self::for_shard(cfg, 0, 1, mode, max_chunks)
+    }
+
+    /// The storage of server shard `shard` of `shards`: a bucket-range
+    /// slice of every MICA object, the whole backend for tree/hopscotch
+    /// objects homed here (`object id mod shards`), and an [`Backend::
+    /// Absent`] placeholder for ones homed elsewhere.
+    pub fn for_shard(
+        cfg: &CatalogConfig,
+        shard: u32,
+        shards: u32,
+        mode: RegionMode,
+        max_chunks: usize,
+    ) -> Self {
+        assert!(shards >= 1 && shard < shards);
         let mut regions = RegionTable::new();
         let alloc = ContiguousAllocator::new(64 << 20, max_chunks, mode);
-        let tables: Vec<MicaTable> = cfg
+        let backends: Vec<Backend> = cfg
             .objects
             .iter()
-            .map(|tc| MicaTable::new(tc.clone(), &mut regions, mode))
+            .enumerate()
+            .map(|(o, oc)| {
+                let home = o as u32 % shards;
+                let (backend, region) = match oc {
+                    ObjectConfig::Mica(c) => {
+                        assert!(
+                            c.buckets % shards as u64 == 0,
+                            "shards must divide every MICA table's bucket count"
+                        );
+                        let slice =
+                            MicaConfig { buckets: c.buckets / shards as u64, ..c.clone() };
+                        let t = MicaTable::new(slice, &mut regions, mode);
+                        let r = t.bucket_region;
+                        (Backend::Mica(t), r)
+                    }
+                    ObjectConfig::BTree(c) if home == shard => {
+                        let t = RemoteBTree::with_capacity(c.max_leaves, &mut regions, mode);
+                        let r = t.region;
+                        (Backend::BTree(t), r)
+                    }
+                    ObjectConfig::Hopscotch(c) if home == shard => {
+                        let t = HopscotchTable::from_config(c, &mut regions, mode);
+                        let r = t.region;
+                        (Backend::Hopscotch(t), r)
+                    }
+                    // Homed on another shard: burn the region key (the
+                    // registry rejects empty regions, so one placeholder
+                    // byte) so chain regions stay >= the object count on
+                    // every shard.
+                    _ => (Backend::Absent, regions.register(1, mode)),
+                };
+                assert_eq!(
+                    region,
+                    MrKey(o as u32),
+                    "object wire regions must be keyed by object id"
+                );
+                backend
+            })
             .collect();
-        for (o, t) in tables.iter().enumerate() {
-            assert_eq!(
-                t.bucket_region,
-                MrKey(o as u32),
-                "table bucket regions must be keyed by object id"
-            );
-        }
-        Catalog { tables, alloc, regions }
+        Catalog { backends, alloc, regions }
     }
 
-    /// Number of objects hosted.
+    /// Number of objects hosted (including absent placeholders).
     pub fn objects(&self) -> usize {
-        self.tables.len()
+        self.backends.len()
     }
 
-    /// An object's table.
+    /// An object's backend.
+    pub fn backend(&self, obj: ObjectId) -> &Backend {
+        &self.backends[obj.0 as usize]
+    }
+
+    /// An object's MICA table; panics for other kinds (callers on
+    /// mica-only paths — the kind-dispatched paths use [`Self::backend`]).
     pub fn table(&self, obj: ObjectId) -> &MicaTable {
-        &self.tables[obj.0 as usize]
+        match &self.backends[obj.0 as usize] {
+            Backend::Mica(t) => t,
+            other => panic!("object {obj:?} is {}, not a MICA table", other.kind_name()),
+        }
     }
 
-    /// An object's table, mutably.
+    /// An object's MICA table, mutably.
     pub fn table_mut(&mut self, obj: ObjectId) -> &mut MicaTable {
-        &mut self.tables[obj.0 as usize]
+        match &mut self.backends[obj.0 as usize] {
+            Backend::Mica(t) => t,
+            other => panic!("object {obj:?} is {}, not a MICA table", other.kind_name()),
+        }
     }
 
-    /// Direct insert into an object's table (population loading).
+    /// An object's B-link tree; panics for other kinds.
+    pub fn btree(&self, obj: ObjectId) -> &RemoteBTree {
+        match &self.backends[obj.0 as usize] {
+            Backend::BTree(t) => t,
+            other => panic!("object {obj:?} is {}, not a B-link tree", other.kind_name()),
+        }
+    }
+
+    /// An object's B-link tree, mutably.
+    pub fn btree_mut(&mut self, obj: ObjectId) -> &mut RemoteBTree {
+        match &mut self.backends[obj.0 as usize] {
+            Backend::BTree(t) => t,
+            other => panic!("object {obj:?} is {}, not a B-link tree", other.kind_name()),
+        }
+    }
+
+    /// An object's hopscotch table; panics for other kinds.
+    pub fn hopscotch(&self, obj: ObjectId) -> &HopscotchTable {
+        match &self.backends[obj.0 as usize] {
+            Backend::Hopscotch(t) => t,
+            other => panic!("object {obj:?} is {}, not hopscotch", other.kind_name()),
+        }
+    }
+
+    /// An object's hopscotch table, mutably.
+    pub fn hopscotch_mut(&mut self, obj: ObjectId) -> &mut HopscotchTable {
+        match &mut self.backends[obj.0 as usize] {
+            Backend::Hopscotch(t) => t,
+            other => panic!("object {obj:?} is {}, not hopscotch", other.kind_name()),
+        }
+    }
+
+    /// Direct insert into an object (population loading), dispatched by
+    /// backend kind. B-link trees store the value's first 8 bytes as the
+    /// u64 payload (the key itself when no value is given); hopscotch
+    /// stores key + version only. Returns the backend's typed result —
+    /// notably [`RpcResult::Full`] from a hopscotch neighborhood or a
+    /// B-link leaf array at capacity, which population paths must
+    /// propagate rather than drop.
     pub fn insert(&mut self, obj: ObjectId, key: u64, value: Option<&[u8]>) -> RpcResult {
-        let Catalog { tables, alloc, regions } = self;
-        tables[obj.0 as usize].insert(key, value, alloc, regions)
+        let Catalog { backends, alloc, regions } = self;
+        match &mut backends[obj.0 as usize] {
+            Backend::Mica(t) => t.insert(key, value, alloc, regions),
+            Backend::BTree(t) => t.try_insert(key, value_u64(key, value)),
+            Backend::Hopscotch(t) => t.insert(key),
+            Backend::Absent => RpcResult::Unsupported,
+        }
     }
 
     /// The owner-side `rpc_handler`, dispatched by the request's object
-    /// id (the field the pre-catalog live server used to drop).
+    /// id and the backend's kind. Unknown object ids, objects homed on a
+    /// different shard, and opcodes a kind cannot serve all answer with
+    /// the typed [`RpcResult::Unsupported`] — a garbage frame must never
+    /// panic the server event loop.
     pub fn serve_rpc(&mut self, req: &RpcRequest) -> RpcResponse {
-        let Catalog { tables, alloc, regions } = self;
-        let table = &mut tables[req.obj.0 as usize];
-        match req.op {
-            RpcOp::Read => {
-                let (result, hops) = table.get(req.key);
-                RpcResponse { result, hops }
-            }
-            RpcOp::LockRead => {
-                let (result, hops) = table.lock_read(req.key, req.tx_id);
-                RpcResponse { result, hops }
-            }
-            RpcOp::UpdateUnlock => {
-                RpcResponse::inline(table.update_unlock(req.key, req.tx_id, req.value.as_deref()))
-            }
-            RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
-            RpcOp::Insert => {
-                RpcResponse::inline(table.insert(req.key, req.value.as_deref(), alloc, regions))
-            }
-            RpcOp::Delete => {
-                let (result, hops) = table.delete(req.key, alloc);
-                RpcResponse { result, hops }
-            }
+        let Catalog { backends, alloc, regions } = self;
+        let Some(backend) = backends.get_mut(req.obj.0 as usize) else {
+            return RpcResponse::inline(RpcResult::Unsupported);
+        };
+        match backend {
+            Backend::Mica(table) => match req.op {
+                RpcOp::Read => {
+                    let (result, hops) = table.get(req.key);
+                    RpcResponse { result, hops }
+                }
+                RpcOp::LockRead => {
+                    let (result, hops) = table.lock_read(req.key, req.tx_id);
+                    RpcResponse { result, hops }
+                }
+                RpcOp::UpdateUnlock => RpcResponse::inline(table.update_unlock(
+                    req.key,
+                    req.tx_id,
+                    req.value.as_deref(),
+                )),
+                RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
+                RpcOp::Insert => RpcResponse::inline(table.insert(
+                    req.key,
+                    req.value.as_deref(),
+                    alloc,
+                    regions,
+                )),
+                RpcOp::Delete => {
+                    let (result, hops) = table.delete(req.key, alloc);
+                    RpcResponse { result, hops }
+                }
+            },
+            Backend::BTree(tree) => match req.op {
+                RpcOp::Read => tree.read_rpc(req.key),
+                RpcOp::Insert => RpcResponse::inline(
+                    tree.try_insert(req.key, value_u64(req.key, req.value.as_deref())),
+                ),
+                // No locks, no in-place update/unlock, no delete: the
+                // tree serves the lookup path (paper §5.5), not the
+                // transactional opcode set.
+                _ => RpcResponse::inline(RpcResult::Unsupported),
+            },
+            Backend::Hopscotch(table) => match req.op {
+                RpcOp::Read => match table.find(req.key) {
+                    Some((slot, version)) => RpcResponse::inline(RpcResult::Value {
+                        version,
+                        addr: crate::mem::RemoteAddr {
+                            region: table.region,
+                            offset: slot * table.item_size() as u64,
+                        },
+                        value: None,
+                        locked: false,
+                    }),
+                    None => RpcResponse::inline(RpcResult::NotFound),
+                },
+                RpcOp::Insert => RpcResponse::inline(table.insert(req.key)),
+                RpcOp::Delete => RpcResponse::inline(table.delete(req.key)),
+                _ => RpcResponse::inline(RpcResult::Unsupported),
+            },
+            Backend::Absent => RpcResponse::inline(RpcResult::Unsupported),
         }
+    }
+}
+
+/// A B-link tree value payload: the first 8 value bytes, else the key.
+fn value_u64(key: u64, value: Option<&[u8]>) -> u64 {
+    match value {
+        Some(v) if v.len() >= 8 => u64::from_le_bytes(v[0..8].try_into().expect("8 bytes")),
+        _ => key,
     }
 }
 
 /// Geometry of one catalog object as placed on every node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TableGeo {
-    /// Packed base offset of this table's bucket array in the node data
+    /// Backend kind (read parsing + routing dispatch).
+    pub kind: ObjectKind,
+    /// Packed base offset of this object's wire array in the node data
     /// region.
     pub base: u64,
-    /// Bucket-array bytes.
+    /// Wire-array bytes (hopscotch: including the wrap tail).
     pub len: u64,
-    /// Bucket mask (`buckets - 1`).
+    /// Index mask: bucket mask (MICA), slot mask (hopscotch), 0 (btree).
     pub mask: u64,
-    /// Buckets per server shard.
+    /// Buckets per server shard (MICA); full unit count otherwise.
     pub local_buckets: u64,
-    /// Bytes per bucket.
+    /// Bytes per wire unit: bucket (MICA), leaf (btree), slot
+    /// (hopscotch).
     pub bucket_bytes: u32,
-    /// Inline slots per bucket.
+    /// Inline slots per bucket (MICA) / neighborhood H (hopscotch) / 0.
     pub width: u32,
-    /// Bytes per item.
+    /// Bytes per item (MICA, hopscotch); 0 for btree.
     pub item_size: u32,
+    /// Owning server shard on every node (tree/hopscotch objects live
+    /// whole on one lane; MICA objects shard by bucket range — 0 here).
+    pub home_shard: u32,
 }
 
-/// Where `(obj, key)`'s home bucket lives.
+/// Where `(obj, key)`'s home unit lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlacementRef {
     /// Owner node.
     pub node: u32,
     /// Server shard (receive lane) on that node.
     pub shard: u32,
-    /// Packed offset of the home bucket within the node data region.
+    /// Packed offset of the home unit within the node data region (for
+    /// b-link objects: the leaf-array base — the covering leaf is only
+    /// known to the owner and to clients with a warm route cache).
     pub offset: u64,
 }
 
@@ -251,21 +516,48 @@ impl Placement {
         let geo = cfg
             .objects
             .iter()
+            .enumerate()
             .zip(bases.iter().zip(&lens))
-            .map(|(c, (&base, &len))| {
-                assert!(
-                    c.buckets % shards as u64 == 0,
-                    "shards must divide every table's bucket count"
-                );
-                TableGeo {
+            .map(|((o, oc), (&base, &len))| match oc {
+                ObjectConfig::Mica(c) => {
+                    assert!(
+                        c.buckets % shards as u64 == 0,
+                        "shards must divide every MICA table's bucket count"
+                    );
+                    TableGeo {
+                        kind: ObjectKind::Mica,
+                        base,
+                        len,
+                        mask: c.buckets - 1,
+                        local_buckets: c.buckets / shards as u64,
+                        bucket_bytes: c.bucket_bytes(),
+                        width: c.width,
+                        item_size: c.item_size(),
+                        home_shard: 0,
+                    }
+                }
+                ObjectConfig::BTree(c) => TableGeo {
+                    kind: ObjectKind::BTree,
                     base,
                     len,
-                    mask: c.buckets - 1,
-                    local_buckets: c.buckets / shards as u64,
-                    bucket_bytes: c.bucket_bytes(),
-                    width: c.width,
-                    item_size: c.item_size(),
-                }
+                    mask: 0,
+                    local_buckets: c.max_leaves,
+                    bucket_bytes: LEAF_BYTES,
+                    width: 0,
+                    item_size: 0,
+                    home_shard: o as u32 % shards,
+                },
+                ObjectConfig::Hopscotch(c) => TableGeo {
+                    kind: ObjectKind::Hopscotch,
+                    base,
+                    len,
+                    mask: c.slots - 1,
+                    local_buckets: c.slots,
+                    bucket_bytes: c.item_size,
+                    width: c.h,
+                    item_size: c.item_size,
+                    home_shard: o as u32 % shards,
+                },
             })
             .collect();
         Placement { nodes, shards, geo, region_len }
@@ -291,7 +583,7 @@ impl Placement {
         &self.geo[obj.0 as usize]
     }
 
-    /// Bytes of the packed per-node data region (all tables).
+    /// Bytes of the packed per-node data region (all objects).
     pub fn region_len(&self) -> u64 {
         self.region_len
     }
@@ -301,31 +593,54 @@ impl Placement {
         owner_of(key, self.nodes)
     }
 
-    /// Server shard owning `(obj, key)` on its owner node.
+    /// Server shard owning `(obj, key)` on its owner node: the bucket
+    /// range's shard for MICA objects, the object's home shard for tree
+    /// and hopscotch objects.
     pub fn shard_of(&self, obj: ObjectId, key: u64) -> u32 {
         let g = self.geo(obj);
-        (bucket_of(key, g.mask) / g.local_buckets) as u32
+        match g.kind {
+            ObjectKind::Mica => (bucket_of(key, g.mask) / g.local_buckets) as u32,
+            ObjectKind::BTree | ObjectKind::Hopscotch => g.home_shard,
+        }
     }
 
-    /// First global bucket of a shard's slice of an object's table.
+    /// First global bucket of a shard's slice of a MICA object's table.
     pub fn base_bucket(&self, obj: ObjectId, shard: u32) -> u64 {
+        debug_assert_eq!(self.geo(obj).kind, ObjectKind::Mica);
         shard as u64 * self.geo(obj).local_buckets
     }
 
     /// Full route for `(obj, key)`: owner node, server shard, and the
-    /// packed offset of the home bucket.
+    /// packed offset of the home unit — the home bucket (MICA), the home
+    /// slot (hopscotch; one `H * item_size` read starting there covers
+    /// the whole neighborhood thanks to the wrap tail), or the leaf-array
+    /// base (btree; the covering leaf is route-cache state, not
+    /// arithmetic).
     pub fn place(&self, obj: ObjectId, key: u64) -> PlacementRef {
         let g = self.geo(obj);
-        let bucket = bucket_of(key, g.mask);
-        PlacementRef {
-            node: self.node_of(key),
-            shard: (bucket / g.local_buckets) as u32,
-            offset: g.base + bucket * g.bucket_bytes as u64,
+        let node = self.node_of(key);
+        match g.kind {
+            ObjectKind::Mica => {
+                let bucket = bucket_of(key, g.mask);
+                PlacementRef {
+                    node,
+                    shard: (bucket / g.local_buckets) as u32,
+                    offset: g.base + bucket * g.bucket_bytes as u64,
+                }
+            }
+            ObjectKind::Hopscotch => PlacementRef {
+                node,
+                shard: g.home_shard,
+                offset: g.base + (fnv1a64(key) & g.mask) * g.bucket_bytes as u64,
+            },
+            ObjectKind::BTree => {
+                PlacementRef { node, shard: g.home_shard, offset: g.base }
+            }
         }
     }
 
     /// Object whose packed range covers `offset` (one-sided reads never
-    /// span tables, so the offset alone identifies the table a read
+    /// span objects, so the offset alone identifies the object a read
     /// returned bytes of).
     pub fn object_at(&self, offset: u64) -> ObjectId {
         let i = self
@@ -350,6 +665,14 @@ mod tests {
         MicaConfig { buckets, width, value_len: 16, store_values: true }
     }
 
+    fn hetero() -> CatalogConfig {
+        CatalogConfig::heterogeneous(vec![
+            ObjectConfig::Mica(cfg(64, 2)),
+            ObjectConfig::BTree(BTreeConfig { max_leaves: 32 }),
+            ObjectConfig::Hopscotch(HopscotchConfig { slots: 128, h: 8, item_size: 128 }),
+        ])
+    }
+
     #[test]
     fn buckets_for_sizes_tables() {
         assert!(buckets_for(1000, 2).is_power_of_two());
@@ -359,14 +682,20 @@ mod tests {
     }
 
     #[test]
-    fn shard_count_clamps_to_smallest_table() {
+    fn shard_count_clamps_to_smallest_mica_table() {
         let cat = CatalogConfig::new(vec![cfg(64, 2), cfg(4, 1), cfg(256, 2)]);
         assert_eq!(cat.shard_count(8), 4);
-        let slice = cat.shard_slice(4);
-        assert_eq!(
-            slice.objects.iter().map(|c| c.buckets).collect::<Vec<_>>(),
-            vec![16, 1, 64]
-        );
+        // Tree/hopscotch objects never constrain the shard count.
+        let mixed = CatalogConfig::heterogeneous(vec![
+            ObjectConfig::Mica(cfg(64, 2)),
+            ObjectConfig::BTree(BTreeConfig { max_leaves: 2 }),
+            ObjectConfig::Hopscotch(HopscotchConfig { slots: 16, h: 4, item_size: 64 }),
+        ]);
+        assert_eq!(mixed.shard_count(8), 8);
+        let no_mica = CatalogConfig::heterogeneous(vec![ObjectConfig::BTree(BTreeConfig {
+            max_leaves: 2,
+        })]);
+        assert_eq!(no_mica.shard_count(8), 8);
     }
 
     #[test]
@@ -396,14 +725,43 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_placement_routes_by_kind() {
+        let place = Placement::new(&hetero(), 3, 4);
+        let (mica, tree, hop) = (ObjectId(0), ObjectId(1), ObjectId(2));
+        assert_eq!(place.geo(mica).kind, ObjectKind::Mica);
+        assert_eq!(place.geo(tree).kind, ObjectKind::BTree);
+        assert_eq!(place.geo(hop).kind, ObjectKind::Hopscotch);
+        for key in 1..=300u64 {
+            // Tree and hopscotch keys go to the object's home shard on the
+            // key's owner node; offsets stay inside the object's range.
+            for obj in [tree, hop] {
+                let r = place.place(obj, key);
+                assert_eq!(r.node, place.node_of(key));
+                assert_eq!(r.shard, place.geo(obj).home_shard);
+                assert_eq!(r.shard, obj.0 % place.shards());
+                let g = place.geo(obj);
+                assert!(r.offset >= g.base && r.offset < g.base + g.len);
+                assert_eq!(place.object_at(r.offset), obj);
+            }
+            // A hopscotch neighborhood read from the home slot stays in
+            // range thanks to the wrap tail.
+            let g = place.geo(hop);
+            let r = place.place(hop, key);
+            let read_end = r.offset + (g.width * g.item_size) as u64;
+            assert!(read_end <= g.base + g.len, "neighborhood read escapes the object");
+        }
+    }
+
+    #[test]
     fn packed_tables_are_aligned_and_disjoint() {
-        let cat = CatalogConfig::new(vec![cfg(8, 1), cfg(64, 2), cfg(16, 2)]);
+        let cat = hetero();
         let place = Placement::new(&cat, 2, 8);
         let mut prev_end = 0u64;
         for o in 0..3u32 {
             let g = place.geo(ObjectId(o));
             assert_eq!(g.base % TABLE_ALIGN, 0);
-            assert!(g.base >= prev_end, "tables must not overlap");
+            assert!(g.base >= prev_end, "objects must not overlap");
+            assert_eq!(g.len, cat.objects[o as usize].table_len());
             prev_end = g.base + g.len;
         }
         assert!(place.region_len() >= prev_end);
@@ -452,27 +810,139 @@ mod tests {
     }
 
     #[test]
-    fn chain_regions_never_collide_with_table_regions() {
+    fn heterogeneous_serve_rpc_dispatches_and_rejects_by_kind() {
+        let mut c = Catalog::new(&hetero(), RegionMode::Virtual(PageSize::Huge2M));
+        let (mica, tree, hop) = (ObjectId(0), ObjectId(1), ObjectId(2));
+        for obj in [mica, tree, hop] {
+            assert_eq!(c.insert(obj, 9, Some(&9u64.to_le_bytes())), RpcResult::Ok);
+        }
+        let req = |obj, op| RpcRequest { obj, key: 9, op, tx_id: 7, value: None };
+        // Reads work on every kind.
+        for obj in [mica, tree, hop] {
+            assert!(
+                matches!(c.serve_rpc(&req(obj, RpcOp::Read)).result, RpcResult::Value { .. }),
+                "read must serve on {obj:?}"
+            );
+        }
+        // The transactional opcodes only exist on MICA objects.
+        for op in [RpcOp::LockRead, RpcOp::UpdateUnlock, RpcOp::Unlock] {
+            for obj in [tree, hop] {
+                assert_eq!(
+                    c.serve_rpc(&req(obj, op)).result,
+                    RpcResult::Unsupported,
+                    "{op:?} on {obj:?} must be a typed dispatch error"
+                );
+            }
+        }
+        // Delete: hopscotch yes, btree no.
+        assert_eq!(c.serve_rpc(&req(hop, RpcOp::Delete)).result, RpcResult::Ok);
+        assert_eq!(c.serve_rpc(&req(tree, RpcOp::Delete)).result, RpcResult::Unsupported);
+        // Unknown object id: typed error, no panic.
+        assert_eq!(
+            c.serve_rpc(&req(ObjectId(777), RpcOp::Read)).result,
+            RpcResult::Unsupported
+        );
+    }
+
+    #[test]
+    fn absent_backends_answer_unsupported_and_keep_region_keys_dense() {
+        // 4 shards: the tree (object 1) homes on shard 1, the hopscotch
+        // (object 2) on shard 2. Every other shard holds placeholders.
+        let cat = hetero();
+        for shard in 0..4u32 {
+            let mut c = Catalog::for_shard(&cat, shard, 4, RegionMode::Virtual(PageSize::Huge2M), 4);
+            assert_eq!(c.objects(), 3);
+            let tree_here = shard == 1;
+            let hop_here = shard == 2;
+            assert_eq!(
+                matches!(c.backend(ObjectId(1)), Backend::BTree(_)),
+                tree_here,
+                "shard {shard}"
+            );
+            assert_eq!(
+                matches!(c.backend(ObjectId(2)), Backend::Hopscotch(_)),
+                hop_here,
+                "shard {shard}"
+            );
+            let read =
+                |obj| RpcRequest { obj, key: 5, op: RpcOp::Read, tx_id: 0, value: None };
+            if !tree_here {
+                assert_eq!(c.serve_rpc(&read(ObjectId(1))).result, RpcResult::Unsupported);
+            }
+            if !hop_here {
+                assert_eq!(c.serve_rpc(&read(ObjectId(2))).result, RpcResult::Unsupported);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_regions_never_collide_with_object_regions() {
         // Width-1 single-bucket tables: every extra insert chains, forcing
         // chunk registration. Chain addrs must carry region keys >= the
-        // object count.
-        let cat = CatalogConfig::new(vec![cfg(8, 1), cfg(8, 1)]);
+        // object count — also with tree/hopscotch objects interleaved.
+        let cat = CatalogConfig::heterogeneous(vec![
+            ObjectConfig::Mica(cfg(8, 1)),
+            ObjectConfig::BTree(BTreeConfig { max_leaves: 16 }),
+            ObjectConfig::Mica(cfg(8, 1)),
+            ObjectConfig::Hopscotch(HopscotchConfig { slots: 256, h: 8, item_size: 128 }),
+        ]);
         let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
         for key in 1..=64u64 {
             assert_eq!(c.insert(ObjectId(0), key, None), RpcResult::Ok);
             assert_eq!(c.insert(ObjectId(1), key, None), RpcResult::Ok);
+            assert_eq!(c.insert(ObjectId(2), key, None), RpcResult::Ok);
+            assert_eq!(c.insert(ObjectId(3), key, None), RpcResult::Ok);
         }
         let mut chained = 0;
-        for obj in [ObjectId(0), ObjectId(1)] {
+        for obj in [ObjectId(0), ObjectId(2)] {
             for key in 1..=64u64 {
                 if let (RpcResult::Value { addr, .. }, _) = c.table(obj).get(key) {
                     if addr.region != c.table(obj).bucket_region {
-                        assert!(addr.region.0 >= 2, "chain region aliases a table region");
+                        assert!(addr.region.0 >= 4, "chain region aliases an object region");
                         chained += 1;
                     }
                 }
             }
         }
         assert!(chained > 0, "oversubscribed tables must have chained items");
+        // Backend regions keyed by object id.
+        assert_eq!(c.btree(ObjectId(1)).region, MrKey(1));
+        assert_eq!(c.hopscotch(ObjectId(3)).region, MrKey(3));
+    }
+
+    #[test]
+    fn population_overflow_propagates_typed_full() {
+        // Regression (PR 4 satellite): filling a hopscotch neighborhood
+        // past capacity must surface `Full`, not silently drop or panic.
+        let cat = CatalogConfig::heterogeneous(vec![ObjectConfig::Hopscotch(
+            HopscotchConfig { slots: 8, h: 2, item_size: 64 },
+        )]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        let mut full = 0;
+        for key in 1..=64u64 {
+            match c.insert(ObjectId(0), key, None) {
+                RpcResult::Ok => {}
+                RpcResult::Full => full += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(full > 0, "tiny neighborhood must overflow");
+        // Same through a B-link leaf array at capacity.
+        let cat = CatalogConfig::heterogeneous(vec![ObjectConfig::BTree(BTreeConfig {
+            max_leaves: 2,
+        })]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        let mut full = 0;
+        for key in 1..=200u64 {
+            match c.insert(ObjectId(0), key, None) {
+                RpcResult::Ok => {}
+                RpcResult::Full => {
+                    full += 1;
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(full, 1, "2-leaf tree must hit capacity");
     }
 }

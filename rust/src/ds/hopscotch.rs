@@ -7,16 +7,53 @@
 //! whole neighborhood (H × item size — 8× = 1 KB for the paper's 128-byte
 //! items) finds the key in one round trip. Inserts displace items
 //! hopscotch-style to keep the invariant; when no displacement chain
-//! exists the insert fails (callers resize).
+//! exists the insert fails with the typed [`RpcResult::Full`] — callers
+//! must resize or propagate (the live population path surfaces it as a
+//! [`crate::dataplane::live::PopulateError`] instead of dropping rows).
+//!
+//! Slots serialize to fixed `item_size`-byte wire images
+//! ([`HopscotchTable::slot_image`] / [`parse_neighborhood_view`]) so the
+//! catalog can mirror slot `i` at `base + i * item_size` in the packed
+//! data region. Neighborhoods are cyclic but one-sided reads are
+//! contiguous, so the mirrored array carries a **wrap tail**: the first
+//! `H - 1` slots are mirrored again past the end of the array
+//! ([`HopscotchConfig::table_len`]), making every neighborhood a single
+//! contiguous `H * item_size`-byte read.
 //!
 //! The Lockfree_FaRM baseline reads `H * item_size` bytes per lookup from
 //! this table, versus Storm's fine-grained single-bucket reads — the
-//! trade-off Fig. 5 quantifies.
+//! trade-off Fig. 5 quantifies (and the live mixed-backend benchmark now
+//! measures).
 
 use crate::mem::{MrKey, RegionTable, RemoteAddr};
 
 use super::api::{RpcResult, Version};
 use super::mica::fnv1a64;
+
+/// Geometry of a catalog-hosted hopscotch object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HopscotchConfig {
+    /// Slots (power of two).
+    pub slots: u64,
+    /// Neighborhood size H.
+    pub h: u32,
+    /// Bytes per slot on the wire (the paper's 128).
+    pub item_size: u32,
+}
+
+impl HopscotchConfig {
+    /// Wire bytes of the mirrored slot array **including the wrap tail**
+    /// (the first `h - 1` slots repeated past the end so a neighborhood
+    /// read never wraps).
+    pub fn table_len(&self) -> u64 {
+        (self.slots + self.h as u64 - 1) * self.item_size as u64
+    }
+
+    /// Bytes one FaRM-style neighborhood read transfers.
+    pub fn read_bytes(&self) -> u32 {
+        self.h * self.item_size
+    }
+}
 
 /// One slot of the hopscotch array.
 #[derive(Clone, Debug, Default)]
@@ -31,9 +68,12 @@ pub struct HopscotchTable {
     mask: u64,
     h: u32,
     item_size: u32,
-    /// Region holding the slot array.
+    /// Region holding the slot array (incl. the wrap tail).
     pub region: MrKey,
     count: u64,
+    /// Slot indices dirtied by the last mutating op (live mirror
+    /// journal; cleared at the start of every mutation).
+    dirty: Vec<u64>,
 }
 
 /// What a one-sided neighborhood read returns.
@@ -41,6 +81,22 @@ pub struct HopscotchTable {
 pub struct NeighborhoodView {
     /// (key, version) for the H slots starting at the home bucket.
     pub slots: Vec<(u64, Version)>,
+}
+
+/// Parse the contiguous bytes of a neighborhood read into per-slot
+/// (key, version) pairs: each `item_size` chunk carries key(8) +
+/// version(4) at its head (the rest is value payload / padding).
+pub fn parse_neighborhood_view(bytes: &[u8], item_size: u32) -> NeighborhoodView {
+    let slots = bytes
+        .chunks_exact(item_size as usize)
+        .map(|c| {
+            (
+                u64::from_le_bytes(c[0..8].try_into().expect("8-byte key")),
+                u32::from_le_bytes(c[8..12].try_into().expect("4-byte version")),
+            )
+        })
+        .collect();
+    NeighborhoodView { slots }
 }
 
 impl HopscotchTable {
@@ -52,8 +108,9 @@ impl HopscotchTable {
         regions: &mut RegionTable,
         mode: crate::mem::RegionMode,
     ) -> Self {
-        assert!(buckets.is_power_of_two() && h >= 1);
-        let region = regions.register(buckets * item_size as u64, mode);
+        assert!(buckets.is_power_of_two() && h >= 1 && item_size >= 16);
+        let cfg = HopscotchConfig { slots: buckets, h, item_size };
+        let region = regions.register(cfg.table_len(), mode);
         HopscotchTable {
             slots: vec![Slot::default(); buckets as usize],
             mask: buckets - 1,
@@ -61,7 +118,17 @@ impl HopscotchTable {
             item_size,
             region,
             count: 0,
+            dirty: Vec::new(),
         }
+    }
+
+    /// Table from a catalog object config.
+    pub fn from_config(
+        cfg: &HopscotchConfig,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) -> Self {
+        Self::new(cfg.slots, cfg.h, cfg.item_size, regions, mode)
     }
 
     #[inline]
@@ -84,9 +151,19 @@ impl HopscotchTable {
         self.count == 0
     }
 
+    /// Slots in the table.
+    pub fn slot_count(&self) -> u64 {
+        self.mask + 1
+    }
+
     /// Neighborhood size H.
     pub fn neighborhood(&self) -> u32 {
         self.h
+    }
+
+    /// Bytes per slot on the wire.
+    pub fn item_size(&self) -> u32 {
+        self.item_size
     }
 
     /// Bytes a FaRM-style lookup reads.
@@ -94,7 +171,25 @@ impl HopscotchTable {
         self.h * self.item_size
     }
 
-    /// Address of a key's neighborhood (what FaRM reads).
+    /// Drain the slots dirtied by the last mutating op (the live server
+    /// mirrors their images — and their wrap-tail copies — into the
+    /// packed data region).
+    pub fn take_dirty(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Serialize slot `i` to its `item_size`-byte wire image.
+    pub fn slot_image(&self, i: u64) -> Vec<u8> {
+        let s = &self.slots[i as usize];
+        let mut out = vec![0u8; self.item_size as usize];
+        out[0..8].copy_from_slice(&s.key.to_le_bytes());
+        out[8..12].copy_from_slice(&s.version.to_le_bytes());
+        out
+    }
+
+    /// Address of a key's neighborhood (what FaRM reads). Thanks to the
+    /// wrap tail the read is contiguous even when the neighborhood wraps
+    /// the slot array.
     pub fn neighborhood_addr(&self, key: u64) -> RemoteAddr {
         RemoteAddr { region: self.region, offset: self.home(key) * self.item_size as u64 }
     }
@@ -117,15 +212,18 @@ impl HopscotchTable {
     }
 
     /// Insert; fails with `Full` when hopscotch displacement cannot bring a
-    /// free slot into the neighborhood.
+    /// free slot into the neighborhood (nothing is mutated in that case —
+    /// callers resize or propagate the typed error).
     pub fn insert(&mut self, key: u64) -> RpcResult {
         assert!(key != 0);
+        self.dirty.clear();
         let base = self.home(key);
         // Update in place.
         for off in 0..self.h as u64 {
             let i = self.idx(base, off);
             if self.slots[i].key == key {
                 self.slots[i].version = self.slots[i].version.wrapping_add(1);
+                self.dirty.push(i as u64);
                 return RpcResult::Ok;
             }
         }
@@ -142,13 +240,19 @@ impl HopscotchTable {
             Some(f) => f,
             None => return RpcResult::Full,
         };
-        // Hop the free slot backwards until it's inside the neighborhood.
+        // Plan the displacement chain first (no mutation yet), so a chain
+        // that dead-ends leaves the table untouched.
+        let mut moves: Vec<(u64, u64)> = Vec::new(); // (from_off, to_off)
         while free_off >= self.h as u64 {
             // Look for an item in the window [free-H+1, free) that can move
             // into the free slot while staying in its own neighborhood.
             let mut moved = false;
             for cand_off in (free_off.saturating_sub(self.h as u64 - 1))..free_off {
                 let cand_idx = self.idx(base, cand_off);
+                // Reading the live table is sound while only *planning*:
+                // every window sits strictly below the current free slot,
+                // and planned sources/targets are all at or above it, so
+                // no slot a previous plan step touched is ever rescanned.
                 let cand_key = self.slots[cand_idx].key;
                 if cand_key == 0 {
                     continue;
@@ -158,11 +262,7 @@ impl HopscotchTable {
                 let free_abs = (base + free_off) & self.mask;
                 let dist = (free_abs.wrapping_sub(cand_home)) & self.mask;
                 if dist < self.h as u64 {
-                    // Move candidate into the free slot.
-                    let free_idx = self.idx(base, free_off);
-                    self.slots[free_idx] = self.slots[cand_idx].clone();
-                    self.slots[free_idx].version = self.slots[free_idx].version.wrapping_add(1);
-                    self.slots[cand_idx] = Slot::default();
+                    moves.push((cand_off, free_off));
                     free_off = cand_off;
                     moved = true;
                     break;
@@ -172,31 +272,52 @@ impl HopscotchTable {
                 return RpcResult::Full;
             }
         }
+        // Execute the planned moves in plan order: each move's target was
+        // freed by the move before it (or was the originally free slot).
+        for &(from_off, to_off) in moves.iter() {
+            let from_idx = self.idx(base, from_off);
+            let to_idx = self.idx(base, to_off);
+            self.slots[to_idx] = self.slots[from_idx].clone();
+            self.slots[to_idx].version = self.slots[to_idx].version.wrapping_add(1);
+            self.slots[from_idx] = Slot::default();
+            self.dirty.push(to_idx as u64);
+            self.dirty.push(from_idx as u64);
+        }
         let i = self.idx(base, free_off);
         self.slots[i] = Slot { key, version: 1 };
+        self.dirty.push(i as u64);
         self.count += 1;
         RpcResult::Ok
     }
 
-    /// Server-side get (for when FaRM falls back to messaging).
-    pub fn get(&self, key: u64) -> Option<Version> {
+    /// Server-side find: canonical slot index + version (for when FaRM
+    /// falls back to messaging, and for the catalog's RPC read path).
+    pub fn find(&self, key: u64) -> Option<(u64, Version)> {
         let base = self.home(key);
         for off in 0..self.h as u64 {
-            let s = &self.slots[self.idx(base, off)];
+            let i = self.idx(base, off);
+            let s = &self.slots[i];
             if s.key == key {
-                return Some(s.version);
+                return Some((i as u64, s.version));
             }
         }
         None
     }
 
+    /// Server-side get.
+    pub fn get(&self, key: u64) -> Option<Version> {
+        self.find(key).map(|(_, v)| v)
+    }
+
     /// Delete a key.
     pub fn delete(&mut self, key: u64) -> RpcResult {
+        self.dirty.clear();
         let base = self.home(key);
         for off in 0..self.h as u64 {
             let i = self.idx(base, off);
             if self.slots[i].key == key {
                 self.slots[i] = Slot::default();
+                self.dirty.push(i as u64);
                 self.count -= 1;
                 return RpcResult::Ok;
             }
@@ -237,6 +358,10 @@ mod tests {
     fn neighborhood_read_is_8x_item() {
         let t = mk(64, 8);
         assert_eq!(t.read_bytes(), 1024); // the paper's 8x128B = 1 KB reads
+        let cfg = HopscotchConfig { slots: 64, h: 8, item_size: 128 };
+        assert_eq!(cfg.read_bytes(), 1024);
+        // The mirrored array carries the 7-slot wrap tail.
+        assert_eq!(cfg.table_len(), (64 + 7) * 128);
     }
 
     #[test]
@@ -261,16 +386,24 @@ mod tests {
     }
 
     #[test]
-    fn full_table_rejects() {
+    fn full_table_rejects_without_mutation() {
         let mut t = mk(8, 2);
         let mut fails = 0;
+        let mut present: Vec<u64> = Vec::new();
         for k in 1..=64u64 {
-            if t.insert(k) == RpcResult::Full {
-                fails += 1;
+            match t.insert(k) {
+                RpcResult::Ok => present.push(k),
+                RpcResult::Full => fails += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+            // A failed insert must not have disturbed present keys.
+            for &p in &present {
+                assert!(t.get(p).is_some(), "key {p} lost after rejected insert of {k}");
             }
         }
         assert!(fails > 0, "tiny table must eventually reject");
         assert!(t.len() <= 8);
+        assert_eq!(t.len(), present.len() as u64);
     }
 
     #[test]
@@ -290,5 +423,73 @@ mod tests {
         t.insert(1);
         let view = t.neighborhood_view(555);
         assert!(HopscotchTable::find_in_view(&view, 555).is_none());
+    }
+
+    #[test]
+    fn slot_images_reconstruct_neighborhood_views() {
+        let mut t = mk(256, 8);
+        for k in 1..=150u64 {
+            assert_eq!(t.insert(k), RpcResult::Ok);
+        }
+        for k in [1u64, 7, 42, 150, 999_999] {
+            // Rebuild the contiguous neighborhood bytes from slot images
+            // the way the mirror does (cyclic indices), then parse.
+            let base = fnv1a64(k) & (t.slot_count() - 1);
+            let mut bytes = Vec::new();
+            for off in 0..t.neighborhood() as u64 {
+                bytes.extend_from_slice(&t.slot_image((base + off) & (t.slot_count() - 1)));
+            }
+            let parsed = parse_neighborhood_view(&bytes, 128);
+            let direct = t.neighborhood_view(k);
+            assert_eq!(parsed.slots, direct.slots, "key {k}");
+            assert_eq!(
+                HopscotchTable::find_in_view(&parsed, k),
+                t.get(k),
+                "wire view diverges for key {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirty_journal_covers_every_write() {
+        let mut t = mk(64, 4);
+        let mut mirror: Vec<Option<(u64, Version)>> = vec![None; 64];
+        for k in 1..=200u64 {
+            let r = t.insert(k);
+            for i in t.take_dirty() {
+                let img = t.slot_image(i);
+                let key = u64::from_le_bytes(img[0..8].try_into().unwrap());
+                let ver = u32::from_le_bytes(img[8..12].try_into().unwrap());
+                mirror[i as usize] = Some((key, ver));
+            }
+            let _ = r;
+            if t.occupancy() > 0.8 {
+                break;
+            }
+        }
+        // The journal-driven mirror matches the table slot for slot.
+        for i in 0..64u64 {
+            let img = t.slot_image(i);
+            let key = u64::from_le_bytes(img[0..8].try_into().unwrap());
+            let ver = u32::from_le_bytes(img[8..12].try_into().unwrap());
+            let expect = if key == 0 { None } else { Some((key, ver)) };
+            let got = mirror[i as usize].filter(|&(k, _)| k != 0);
+            assert_eq!(got, expect, "mirror diverges at slot {i}");
+        }
+    }
+
+    #[test]
+    fn find_returns_canonical_slot_index() {
+        let mut t = mk(128, 8);
+        for k in 1..=80u64 {
+            t.insert(k);
+        }
+        for k in 1..=80u64 {
+            let (slot, ver) = t.find(k).expect("present");
+            assert!(slot < t.slot_count());
+            let img = t.slot_image(slot);
+            assert_eq!(u64::from_le_bytes(img[0..8].try_into().unwrap()), k);
+            assert_eq!(u32::from_le_bytes(img[8..12].try_into().unwrap()), ver);
+        }
     }
 }

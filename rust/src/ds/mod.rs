@@ -13,17 +13,24 @@
 //!
 //! Implementations here: [`mica`] — the MICA-derived hash table Storm
 //! evaluates (inline key/version/lock for zero-copy single-read lookups,
-//! overflow chains, oversubscription); [`hopscotch`] — the FaRM-style
-//! neighborhood table used by the Lockfree_FaRM baseline (one large read
-//! covers the whole neighborhood); [`queue`] and [`btree`] — the paper's
-//! "other data structures" (cached head/tail pointers; cached inner
-//! nodes).
+//! overflow chains, oversubscription); [`btree`] — the paper's §5.5
+//! B-link tree (clients cache the inner levels as a fence-keyed leaf
+//! route; one leaf read per lookup, RPC re-traversal on a split);
+//! [`hopscotch`] — the FaRM-style neighborhood table (one large read
+//! covers the whole neighborhood — both the Lockfree_FaRM baseline and
+//! a first-class catalog object); [`queue`] — cached head/tail pointers.
 //!
-//! [`catalog`] sits above the individual tables: a node hosts *many*
-//! objects (paper §4 — TATP's four tables are four Storm objects), and
-//! the catalog's [`catalog::Placement`] map routes `(ObjectId, key)` to
-//! `(node, shard, packed offset)` so lookup hints resolve without extra
-//! round trips.
+//! [`catalog`] sits above the individual backends and is
+//! **heterogeneous**: a node hosts *many* objects (paper §4 — TATP's
+//! four tables are four Storm objects) of *any* kind
+//! ([`catalog::ObjectKind`]: `Mica` | `BTree` | `Hopscotch`), all packed
+//! into one registered region per node. The catalog's
+//! [`catalog::Placement`] map routes `(ObjectId, key)` to
+//! `(node, shard, packed offset)` by backend kind so lookup hints
+//! resolve without extra round trips, and [`catalog::Catalog::serve_rpc`]
+//! dispatches the owner-side handler by object id *and* kind — opcodes a
+//! kind cannot serve answer with the typed [`RpcResult::Unsupported`]
+//! instead of panicking the server loop.
 
 pub mod api;
 pub mod btree;
@@ -35,6 +42,9 @@ pub mod queue;
 pub use api::{
     LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version,
 };
-pub use catalog::{buckets_for, Catalog, CatalogConfig, Placement};
-pub use hopscotch::HopscotchTable;
+pub use btree::{BTreeConfig, RemoteBTree};
+pub use catalog::{
+    buckets_for, Backend, Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement,
+};
+pub use hopscotch::{HopscotchConfig, HopscotchTable};
 pub use mica::{BucketView, MicaClient, MicaConfig, MicaTable};

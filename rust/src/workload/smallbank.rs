@@ -323,6 +323,9 @@ mod tests {
         }
         let cat = live_catalog(100, 16);
         assert_eq!(cat.len(), 3);
-        assert!(cat.objects.iter().all(|c| c.buckets * c.width as u64 >= 100));
+        assert!(cat.objects.iter().all(|c| {
+            let m = c.mica();
+            m.buckets * m.width as u64 >= 100
+        }));
     }
 }

@@ -441,6 +441,7 @@ mod tests {
         let cat = live_catalog(2_000, 32);
         assert_eq!(cat.len(), 4);
         for (cfg, rows) in cat.objects.iter().zip(ROWS_PER_SUBSCRIBER) {
+            let cfg = cfg.mica();
             assert!(cfg.buckets.is_power_of_two());
             assert!(cfg.store_values);
             // ~50% occupancy: inline capacity at least the expected rows.
@@ -448,9 +449,9 @@ mod tests {
             assert!(capacity as f64 >= 2_000.0 * rows, "table undersized");
         }
         // CALL_FORWARDING is the biggest table, SUBSCRIBER the smallest.
-        assert!(cat.objects[3].buckets >= cat.objects[0].buckets);
+        assert!(cat.objects[3].mica().buckets >= cat.objects[0].mica().buckets);
         // Tiny databases still shard: every table keeps >= 8 buckets.
-        assert!(live_catalog(1, 16).objects.iter().all(|c| c.buckets >= 8));
+        assert!(live_catalog(1, 16).objects.iter().all(|c| c.mica().buckets >= 8));
     }
 
     #[test]

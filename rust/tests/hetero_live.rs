@@ -1,0 +1,421 @@
+//! Heterogeneous-catalog live tests (PR 4): one MICA table, one B-link
+//! tree, and one hopscotch table hosted by the *same* live cluster —
+//! every backend packed into the per-node data region, dispatched by
+//! `Catalog::serve_rpc`, and resolved through `lookup_batch_obj` /
+//! `lookup_batch_items` — plus the backend edge cases the mix surfaces:
+//! population overflow propagation, stale-route split fallback, and
+//! garbage-frame / wrong-opcode dispatch hardening.
+
+use storm::dataplane::live::{LiveCluster, SERVER_SHARDS};
+use storm::dataplane::onetwo::{DsCallbacks, ReadView};
+use storm::dataplane::rpc::{decode_request, encode_request, RpcHeader, RPC_HEADER_BYTES};
+use storm::dataplane::tx::{AbortReason, TxEngine, TxInput, TxItem, TxOutcome, TxStep, LOCK_TAG};
+use storm::ds::api::{
+    LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult,
+};
+use storm::ds::btree::BTreeConfig;
+use storm::ds::catalog::{CatalogConfig, ObjectConfig, ObjectKind};
+use storm::ds::hopscotch::HopscotchConfig;
+use storm::ds::mica::MicaConfig;
+
+const MICA: ObjectId = ObjectId(0);
+const TREE: ObjectId = ObjectId(1);
+const HOP: ObjectId = ObjectId(2);
+
+const VALUE_LEN: u32 = 32;
+
+fn mixed_catalog() -> CatalogConfig {
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(MicaConfig {
+            buckets: 1 << 10,
+            width: 2,
+            value_len: VALUE_LEN,
+            store_values: true,
+        }),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 1 << 10 }),
+        ObjectConfig::Hopscotch(HopscotchConfig { slots: 1 << 10, h: 8, item_size: 128 }),
+    ])
+}
+
+fn value_of(obj: ObjectId, k: u64) -> Vec<u8> {
+    let mut v = vec![obj.0 as u8; VALUE_LEN as usize];
+    v[..8].copy_from_slice(&k.to_le_bytes());
+    v
+}
+
+/// The acceptance-path test: all three kinds live on one cluster, each
+/// resolving end-to-end — MICA bucket reads, hopscotch neighborhood
+/// reads (pure one-sided, absence included), and B-link cached-route
+/// leaf reads after an RPC warm-up.
+#[test]
+fn mixed_backends_resolve_end_to_end() {
+    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_rows((1..=300u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    let keys: Vec<u64> = (1..=300).collect();
+
+    // MICA: inline-dominated one-sided reads.
+    let mica = client.lookup_batch_obj(MICA, &keys);
+    assert!(mica.iter().all(|r| r.found), "mica keys must resolve");
+    assert!(mica.iter().map(|r| r.rpcs).sum::<u32>() <= 10, "mica mostly one-sided");
+
+    // Hopscotch: ONE neighborhood read per lookup, hit or provable miss,
+    // never an RPC (the FaRM-style coarse read).
+    let hop = client.lookup_batch_obj(HOP, &keys);
+    assert!(hop.iter().all(|r| r.found));
+    assert!(
+        hop.iter().all(|r| (r.reads, r.rpcs) == (1, 0)),
+        "hopscotch lookups are exactly one one-sided read"
+    );
+    let miss = client.lookup_batch_obj(HOP, &[900_001, 900_002]);
+    assert!(miss.iter().all(|r| !r.found && (r.reads, r.rpcs) == (1, 0)));
+
+    // B-link tree: cold routes pay one RPC re-traversal (which installs
+    // the leaf route); the second pass is pure cached-path — one
+    // doorbell leaf read, zero RPCs, zero server CPU.
+    let cold = client.lookup_batch_obj(TREE, &keys);
+    assert!(cold.iter().all(|r| r.found), "tree keys must resolve");
+    assert!(cold.iter().all(|r| r.rpcs <= 1), "fallback is bounded at one RPC");
+    assert!(cold.iter().any(|r| r.rpcs == 1), "cold routes must warm via RPC");
+    let warm = client.lookup_batch_obj(TREE, &keys);
+    assert!(warm.iter().all(|r| r.found));
+    assert!(
+        warm.iter().all(|r| (r.reads, r.rpcs) == (1, 0)),
+        "warm routes are one leaf read, no RPC"
+    );
+    // Provable absence inside a covered leaf range: still one read.
+    let absent = client.lookup_batch_obj(TREE, &[150_000]);
+    assert!(!absent[0].found);
+
+    c.shutdown();
+}
+
+/// All three kinds inside ONE batch: the per-node first reads — a MICA
+/// bucket, a B-link leaf, a hopscotch neighborhood — share the same
+/// `read_batch` doorbell group because every object lives in the same
+/// packed region.
+#[test]
+fn mixed_kinds_share_one_doorbell_batch() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_rows((1..=120u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    // Warm the tree routes first so the mixed batch is all one-sided.
+    client.lookup_batch_obj(TREE, &(1..=120).collect::<Vec<_>>());
+    let items: Vec<(ObjectId, u64)> = (1..=120u64)
+        .flat_map(|k| [(MICA, k), (TREE, k), (HOP, k)])
+        .collect();
+    let res = client.lookup_batch_items(&items);
+    assert_eq!(res.len(), items.len());
+    for ((obj, key), r) in items.iter().zip(&res) {
+        assert!(r.found, "{obj:?} key {key} must resolve in the mixed batch");
+    }
+    // The tree + hopscotch lookups stayed one-sided inside the mix.
+    for ((obj, _), r) in items.iter().zip(&res) {
+        if *obj != MICA {
+            assert_eq!((r.reads, r.rpcs), (1, 0), "{obj:?} lookup regressed to RPC");
+        }
+    }
+    c.shutdown();
+}
+
+/// Satellite: a lookup racing a split that moves the key to a sibling
+/// leaf. The stale cached route is detected by the fence check, falls
+/// back to exactly one RPC (bounded retries), repairs the route from the
+/// reply's leaf image, and the next lookup is one-sided again.
+#[test]
+fn btree_lookup_races_split_to_sibling_leaf() {
+    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    let evens: Vec<u64> = (1..=300u64).map(|i| i * 2).collect();
+    c.load_rows(evens.iter().map(|&k| (TREE, k)), value_of);
+    let mut client = c.client(0, None);
+
+    // Warm every route.
+    let pass1 = client.lookup_batch_obj(TREE, &evens);
+    assert!(pass1.iter().all(|r| r.found));
+
+    // Another client's inserts split leaves all over the key range —
+    // through the real RPC path (`Catalog::serve_rpc` + leaf mirroring),
+    // not the population loader.
+    let mut writer = c.client(1, None);
+    for k in (1..=599u64).step_by(2) {
+        let res = writer.ds_rpc(TREE, k, RpcOp::Insert, Some(k.to_le_bytes().to_vec()));
+        assert_eq!(res, RpcResult::Ok, "insert {k}");
+    }
+
+    // The reader's cached paths now include stale routes: every lookup
+    // must still resolve, paying at most ONE fallback RPC (read → RPC →
+    // done; a stale route can never loop).
+    let pass2 = client.lookup_batch_obj(TREE, &evens);
+    assert!(pass2.iter().all(|r| r.found), "splits must not lose keys");
+    assert!(pass2.iter().all(|r| r.rpcs <= 1), "fallback bounded at one RPC");
+    let stale = pass2.iter().filter(|r| r.rpcs == 1).count();
+    assert!(stale > 0, "600 interleaved inserts must stale some cached routes");
+
+    // Every fallback repaired its route: the third pass is pure
+    // cached-path again.
+    let pass3 = client.lookup_batch_obj(TREE, &evens);
+    assert!(
+        pass3.iter().all(|r| r.found && (r.reads, r.rpcs) == (1, 0)),
+        "repaired routes must serve one-read lookups"
+    );
+    // And the writer sees its own odd keys.
+    let odds: Vec<u64> = (1..=599u64).step_by(2).collect();
+    assert!(writer.lookup_batch_obj(TREE, &odds).iter().all(|r| r.found));
+    c.shutdown();
+}
+
+/// Satellite regression: filling a hopscotch neighborhood past capacity
+/// on the live population path must surface the typed `Full` — loaded
+/// rows stay readable, nothing is silently dropped, and the same
+/// refusal travels the wire as a typed RPC result.
+#[test]
+fn hopscotch_population_overflow_propagates() {
+    let tiny = CatalogConfig::heterogeneous(vec![ObjectConfig::Hopscotch(HopscotchConfig {
+        slots: 8,
+        h: 2,
+        item_size: 64,
+    })]);
+    let c = LiveCluster::start_catalog(1, tiny);
+    let err = c
+        .try_load_rows((1..=64u64).map(|k| (ObjectId(0), k)), value_of)
+        .expect_err("a 2-slot neighborhood cannot hold 64 keys");
+    assert_eq!(err.result, RpcResult::Full, "typed refusal, not a drop");
+    assert_eq!(err.obj, ObjectId(0));
+    let failed_key = err.key;
+
+    // Every row loaded before the refusal still resolves one-sided.
+    let mut client = c.client(0, None);
+    let loaded: Vec<u64> = (1..failed_key).collect();
+    if !loaded.is_empty() {
+        let res = client.lookup_batch_obj(ObjectId(0), &loaded);
+        assert!(res.iter().all(|r| r.found), "pre-refusal rows must survive");
+    }
+    // The failed key was not half-inserted.
+    assert!(!client.lookup_batch_obj(ObjectId(0), &[failed_key])[0].found);
+    // The same overflow surfaces over the wire as the typed result.
+    assert_eq!(client.ds_rpc(ObjectId(0), failed_key, RpcOp::Insert, None), RpcResult::Full);
+    c.shutdown();
+}
+
+/// Hopscotch mutations through the real RPC path: inserts (with
+/// displacement) and deletes mirror their dirtied slots, so other
+/// clients' neighborhood reads observe them.
+#[test]
+fn hopscotch_rpc_mutations_visible_to_one_sided_readers() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    c.load_rows((1..=200u64).map(|k| (HOP, k)), value_of);
+    let mut writer = c.client(0, None);
+    let mut reader = c.client(1, None);
+    for k in 201..=400u64 {
+        assert_eq!(writer.ds_rpc(HOP, k, RpcOp::Insert, None), RpcResult::Ok);
+    }
+    let res = reader.lookup_batch_obj(HOP, &(1..=400).collect::<Vec<_>>());
+    assert!(res.iter().all(|r| r.found && (r.reads, r.rpcs) == (1, 0)));
+    // Deletes disappear from neighborhood reads too.
+    for k in [5u64, 250, 399] {
+        assert_eq!(writer.ds_rpc(HOP, k, RpcOp::Delete, None), RpcResult::Ok);
+    }
+    let gone = reader.lookup_batch_obj(HOP, &[5, 250, 399]);
+    assert!(gone.iter().all(|r| !r.found && (r.reads, r.rpcs) == (1, 0)));
+    c.shutdown();
+}
+
+/// Satellite: opcodes a backend kind cannot serve come back as the typed
+/// `Unsupported` over the wire — for every opcode — and the shard event
+/// loop survives to serve the next request.
+#[test]
+fn wrong_opcode_per_kind_is_a_typed_error_per_opcode() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    let unsupported: &[(ObjectId, RpcOp)] = &[
+        (TREE, RpcOp::LockRead),
+        (TREE, RpcOp::UpdateUnlock),
+        (TREE, RpcOp::Unlock),
+        (TREE, RpcOp::Delete),
+        (HOP, RpcOp::LockRead),
+        (HOP, RpcOp::UpdateUnlock),
+        (HOP, RpcOp::Unlock),
+    ];
+    for &(obj, op) in unsupported {
+        assert_eq!(
+            client.ds_rpc(obj, 7, op, None),
+            RpcResult::Unsupported,
+            "{op:?} at {obj:?} must be a typed dispatch error"
+        );
+        // The server did not panic: the very next lookup is served.
+        assert!(client.lookup_batch_obj(obj, &[7])[0].found, "server died after {op:?}");
+    }
+    // Supported opcodes still work on every kind.
+    for obj in [MICA, TREE, HOP] {
+        assert!(matches!(
+            client.ds_rpc(obj, 1, RpcOp::Read, None),
+            RpcResult::Value { .. }
+        ));
+    }
+    c.shutdown();
+}
+
+/// Garbage frames: truncated bodies fail decode for every opcode, an
+/// unknown-object frame fired straight at a server lane answers without
+/// killing the event loop, and an unknown object id over the client path
+/// is a typed error.
+#[test]
+fn garbage_frames_never_panic_the_server() {
+    // Codec level: for each opcode, every truncation of a valid frame is
+    // rejected (None), never a panic.
+    for op in [
+        RpcOp::Read,
+        RpcOp::LockRead,
+        RpcOp::UpdateUnlock,
+        RpcOp::Unlock,
+        RpcOp::Insert,
+        RpcOp::Delete,
+    ] {
+        let req = RpcRequest { obj: ObjectId(3), key: 9, op, tx_id: 4, value: Some(vec![7; 16]) };
+        let bytes = encode_request(&req);
+        assert_eq!(decode_request(&bytes), Some(req));
+        for cut in 0..bytes.len() {
+            // Truncations shorter than the fixed body must fail; the
+            // value-carrying tail may parse as a shorter valid frame but
+            // must never panic.
+            let _ = decode_request(&bytes[..cut]);
+        }
+        assert_eq!(decode_request(&bytes[..4]), None, "{op:?} header-only frame");
+    }
+    // Unknown opcode byte.
+    let mut bytes = encode_request(&RpcRequest {
+        obj: ObjectId(0),
+        key: 1,
+        op: RpcOp::Read,
+        tx_id: 0,
+        value: None,
+    });
+    bytes[4] = 200;
+    assert_eq!(decode_request(&bytes), None);
+
+    // Live level: a raw frame naming an object no catalog entry answers
+    // to reaches the shard loop and is answered (Unsupported) without
+    // panicking it.
+    let c = LiveCluster::start_catalog(1, mixed_catalog());
+    c.load_rows((1..=10u64).map(|k| (MICA, k)), value_of);
+    let fabric = c.fabric();
+    let hdr = RpcHeader {
+        src_node: 0,
+        src_thread: 0,
+        coro: 0,
+        seq: 1,
+        cookie: 0,
+        is_response: false,
+    };
+    let mut payload = Vec::with_capacity(64);
+    hdr.encode_into(&mut payload);
+    storm::dataplane::rpc::encode_request_into(
+        &RpcRequest { obj: ObjectId(9999), key: 5, op: RpcOp::Read, tx_id: 0, value: None },
+        &mut payload,
+    );
+    for lane in 0..SERVER_SHARDS {
+        fabric.send_raw_lane(0, 0, lane, payload.clone());
+        // Pure garbage bytes too (header decodes, body does not).
+        fabric.send_raw_lane(0, 0, lane, vec![0xAB; (RPC_HEADER_BYTES + 3) as usize]);
+    }
+    // Every lane survived: lookups (which fan across lanes by bucket
+    // range) still resolve.
+    let mut client = c.client(0, None);
+    let res = client.lookup_batch_obj(MICA, &(1..=10).collect::<Vec<_>>());
+    assert!(res.iter().all(|r| r.found), "a garbage frame killed a server lane");
+    c.shutdown();
+}
+
+/// Transactions in a mixed catalog: MICA items commit exactly as in a
+/// homogeneous catalog; naming a non-transactional backend is rejected
+/// at admission (clean caller error, no locks in flight).
+#[test]
+fn transactions_stay_mica_scoped_in_mixed_catalogs() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    let out = client.run_tx(
+        vec![TxItem::read(MICA, 7)],
+        vec![TxItem::update(MICA, 8).with_value(value_of(MICA, 8))],
+    );
+    assert!(matches!(out, TxOutcome::Committed { .. }));
+    let res = client.lookup_batch_obj(MICA, &[8]);
+    assert_eq!(res[0].version, 2);
+    assert!(!res[0].locked);
+    // The tree + hopscotch rows are untouched by the MICA commit.
+    assert!(client.lookup_batch_obj(TREE, &[8])[0].found);
+    assert!(client.lookup_batch_obj(HOP, &[8])[0].found);
+    c.shutdown();
+}
+
+#[test]
+#[should_panic(expected = "transactions require MICA-backed objects")]
+fn transactions_on_tree_objects_are_rejected_at_admission() {
+    let c = LiveCluster::start_catalog(1, mixed_catalog());
+    c.load_rows((1..=10u64).map(|k| (TREE, k)), value_of);
+    let mut client = c.client(0, None);
+    let _ = client.run_tx(vec![], vec![TxItem::update(TREE, 5)]);
+}
+
+/// RPC-only callback stub: every lookup goes through the owner.
+struct RpcOnlyCb;
+
+impl DsCallbacks for RpcOnlyCb {
+    fn lookup_start(&mut self, _obj: ObjectId, _key: u64) -> Option<LookupHint> {
+        None
+    }
+    fn lookup_end_read(&mut self, _obj: ObjectId, _key: u64, _view: &ReadView) -> LookupOutcome {
+        LookupOutcome::NeedRpc
+    }
+    fn lookup_end_rpc(&mut self, _obj: ObjectId, _key: u64, _node: u32, _resp: &RpcResponse) {}
+    fn owner(&self, _obj: ObjectId, _key: u64) -> u32 {
+        0
+    }
+}
+
+/// Engine-level hardening: a server answering a lock-read with the typed
+/// `Unsupported` aborts the transaction cleanly (releasing held locks)
+/// instead of panicking the scheduler.
+#[test]
+fn tx_engine_aborts_cleanly_on_unsupported_lock_read() {
+    let mut cb = RpcOnlyCb;
+    let mut tx = TxEngine::begin(1, vec![], vec![TxItem::update(ObjectId(0), 5)]);
+    let posts = match tx.start(&mut cb) {
+        TxStep::Issue(p) => p,
+        TxStep::Done(o) => panic!("engine finished early: {o:?}"),
+    };
+    assert_eq!(posts.len(), 1, "one lock-read for one update");
+    let step = tx.complete(
+        &mut cb,
+        LOCK_TAG,
+        TxInput::Rpc(RpcResponse::inline(RpcResult::Unsupported)),
+    );
+    match step {
+        TxStep::Done(TxOutcome::Aborted(AbortReason::Unsupported)) => {}
+        other => panic!("expected a clean Unsupported abort, got {other:?}"),
+    }
+}
+
+/// The mixed geometry is the measured trade-off: a hopscotch lookup
+/// reads H × item_size = 1 KB (FaRM-style), a MICA lookup reads one
+/// fine-grained bucket.
+#[test]
+fn read_granularity_matches_the_paper_tradeoff() {
+    let cat = mixed_catalog();
+    let place = storm::ds::catalog::Placement::new(&cat, 2, cat.shard_count(SERVER_SHARDS));
+    let hop = place.geo(HOP);
+    assert_eq!(hop.kind, ObjectKind::Hopscotch);
+    assert_eq!(hop.width * hop.item_size, 1024, "the paper's 8 x 128 B neighborhood");
+    let mica = place.geo(MICA);
+    assert_eq!(mica.kind, ObjectKind::Mica);
+    assert!(mica.bucket_bytes < 1024, "MICA reads stay fine-grained");
+}

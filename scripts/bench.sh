@@ -2,9 +2,12 @@
 # Run the live-dataplane throughput benchmark and emit BENCH_live.json
 # (machine-readable perf trajectory; later PRs compare against it).
 # Rows: pipelined-vs-sequential lookups, single-key tx commits, the
-# flattened TATP compat mix, and the catalog-native runs — four-table
+# flattened TATP compat mix, the catalog-native runs — four-table
 # TATP (no key flattening) and SmallBank — with per-table commit/abort
-# counters and the adaptive per-client transaction windows.
+# counters and the adaptive per-client transaction windows, and the
+# mixed-backend per-kind lookup rows ("mixed_backend": MICA bucket reads
+# vs B-link cached-route leaf reads (cold + warm) vs FaRM-style 1 KB
+# hopscotch neighborhood reads, plus the interleaved all-kinds row).
 #
 # Usage: scripts/bench.sh [output.json]
 set -euo pipefail
