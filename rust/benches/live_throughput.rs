@@ -4,10 +4,12 @@
 //! commits, a TATP-style mixed transactional workload comparing the
 //! sequential `run_tx` loop against the windowed `run_tx_batch` scheduler
 //! (flattened single-table compat mode, with abort rates), plus the
-//! catalog-native runs: **four-table TATP without key flattening** and
-//! **SmallBank** over the multi-object live cluster, with per-table
-//! commit/abort counters and the adaptive transaction windows the
-//! clients settled on.
+//! catalog-native runs: **four-table TATP without key flattening**,
+//! **heterogeneous TATP** (CALL_FORWARDING backed by a B-link tree, so
+//! transactions exercise leaf-granularity OCC), and **SmallBank** over
+//! the multi-object live cluster, with per-table commit/abort counters,
+//! per-reason abort tallies (`abort_reasons`), and the adaptive
+//! transaction windows the clients settled on.
 //!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
@@ -15,7 +17,7 @@
 
 use std::time::Instant;
 
-use storm::cluster::LiveServed;
+use storm::cluster::{AbortCounts, LiveServed};
 use storm::dataplane::live::{LiveCluster, SERVER_SHARDS, TX_WINDOW};
 use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
@@ -224,6 +226,35 @@ struct CatalogRun {
     served: LiveServed,
 }
 
+impl CatalogRun {
+    /// The common JSON row body the catalog-native runs share (per-table
+    /// commit/abort counters + per-reason abort tallies).
+    fn json_row(&self, names: &[&str], scale_key: &str, scale: u64) -> String {
+        format!(
+            concat!(
+                "{{\"clients\": {c}, \"{sk}\": {s}, ",
+                "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
+                "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, ",
+                "\"abort_reasons\": {rs}, \"per_table\": {{{pt}}}}}",
+            ),
+            c = CLIENTS,
+            sk = scale_key,
+            s = scale,
+            r = self.rate,
+            cm = self.commits,
+            ab = self.aborts,
+            ar = if self.commits + self.aborts == 0 {
+                0.0
+            } else {
+                self.aborts as f64 / (self.commits + self.aborts) as f64
+            },
+            w = self.served.tx_windows,
+            rs = self.served.aborts.json(),
+            pt = per_table_json(names, &self.per_table),
+        )
+    }
+}
+
 /// Run pre-generated per-client transaction mixes over a freshly loaded
 /// catalog cluster through the windowed scheduler; counts commits and
 /// aborts per table an involved transaction touched, and collects each
@@ -265,15 +296,16 @@ fn catalog_pass(
                     }
                 }
             }
-            (commits, aborts, per, client.tx_window() as u32)
+            (commits, aborts, per, client.tx_window() as u32, client.abort_counts())
         }));
     }
     let mut commits = 0u64;
     let mut aborts = 0u64;
     let mut per_table = vec![(0u64, 0u64); ntables];
     let mut windows = Vec::new();
+    let mut reasons = AbortCounts::default();
     for h in handles {
-        let (c, a, per, win) = h.join().unwrap();
+        let (c, a, per, win, counts) = h.join().unwrap();
         commits += c;
         aborts += a;
         for (acc, p) in per_table.iter_mut().zip(per) {
@@ -281,12 +313,14 @@ fn catalog_pass(
             acc.1 += p.1;
         }
         windows.push(win);
+        reasons.merge(&counts);
     }
     let rate = commits as f64 / t0.elapsed().as_secs_f64();
     let mut served = cluster.shutdown();
     for w in windows {
         served.record_tx_window(w);
     }
+    served.record_aborts(&reasons);
     CatalogRun { rate, commits, aborts, per_table, served }
 }
 
@@ -553,6 +587,45 @@ fn main() {
         println!("  table {name:<18} commit_tx {c:>7}  abort_tx {a:>5}");
     }
     println!("  adaptive tx windows: {:?}", native.served.tx_windows);
+    println!("  abort reasons: {}", native.served.aborts.json());
+
+    // Heterogeneous TATP (PR 5): the same transaction mixes over a
+    // catalog whose CALL_FORWARDING table is a B-link tree — per-kind
+    // commit/abort rows show what leaf-granularity OCC costs against the
+    // all-MICA run above (leaf locks conflate neighboring CF keys, and
+    // CF inserts splitting leaves surface as ValidationMoved aborts in
+    // the per-reason tallies).
+    let hetero_rows: Vec<(ObjectId, u64)> =
+        TatpPopulation::new(TATP_SUBSCRIBERS).rows(7).collect();
+    let hetero_mixes: Vec<_> = (0..CLIENTS)
+        .map(|id| {
+            let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
+            let mut rng = Pcg64::seeded(0x4A11 + id as u64);
+            (0..TATP_TXS)
+                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let hetero = catalog_pass(
+        tatp::live_catalog_btree_cf(TATP_SUBSCRIBERS, TATP_VALUE_LEN),
+        hetero_rows,
+        hetero_mixes,
+        TATP_VALUE_LEN,
+    );
+    const HETERO_TABLES: [&str; 4] =
+        ["subscriber", "access_info", "special_facility", "call_forwarding_btree"];
+    println!("# TATP heterogeneous (CALL_FORWARDING on a B-link tree), {CLIENTS} clients");
+    println!(
+        "tatp btree-cf {CLIENTS} clients {:>12.0} commit/s   ({} commits, {} aborts, {:.2}x native)",
+        hetero.rate,
+        hetero.commits,
+        hetero.aborts,
+        hetero.rate / native.rate.max(1.0)
+    );
+    for (name, (c, a)) in HETERO_TABLES.iter().zip(&hetero.per_table) {
+        println!("  table {name:<22} commit_tx {c:>7}  abort_tx {a:>5}");
+    }
+    println!("  abort reasons: {}", hetero.served.aborts.json());
 
     let sb_accounts = TATP_SUBSCRIBERS; // comparable database scale
     let sb_rows: Vec<(ObjectId, u64)> = SmallBankPopulation::new(sb_accounts).rows().collect();
@@ -660,34 +733,16 @@ fn main() {
         imb = served.imbalance(),
     );
     json.push_str(&format!(
-        concat!(
-            "  \"tatp_native\": {{\"clients\": {c}, \"subscribers\": {s}, ",
-            "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
-            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}},\n",
-        ),
-        c = CLIENTS,
-        s = TATP_SUBSCRIBERS,
-        r = native.rate,
-        cm = native.commits,
-        ab = native.aborts,
-        ar = abort_rate(native.aborts, native.commits),
-        w = native.served.tx_windows,
-        pt = per_table_json(&TATP_TABLES, &native.per_table),
+        "  \"tatp_native\": {},\n",
+        native.json_row(&TATP_TABLES, "subscribers", TATP_SUBSCRIBERS)
     ));
     json.push_str(&format!(
-        concat!(
-            "  \"smallbank\": {{\"clients\": {c}, \"accounts\": {s}, ",
-            "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
-            "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, \"per_table\": {{{pt}}}}},\n",
-        ),
-        c = CLIENTS,
-        s = sb_accounts,
-        r = sb.rate,
-        cm = sb.commits,
-        ab = sb.aborts,
-        ar = abort_rate(sb.aborts, sb.commits),
-        w = sb.served.tx_windows,
-        pt = per_table_json(&SB_TABLES, &sb.per_table),
+        "  \"tatp_btree_cf\": {},\n",
+        hetero.json_row(&HETERO_TABLES, "subscribers", TATP_SUBSCRIBERS)
+    ));
+    json.push_str(&format!(
+        "  \"smallbank\": {},\n",
+        sb.json_row(&SB_TABLES, "accounts", sb_accounts)
     ));
     json.push_str(&format!(
         concat!(

@@ -172,6 +172,10 @@ pub struct SimConfig {
     /// Ablation: carry Storm RPCs over two-sided send/recv instead of
     /// `rdma_write_with_imm` (paper §5.2 argues write-imm is superior).
     pub rpc_via_sendrecv: bool,
+    /// Heterogeneous TATP (PR 5): back the CALL_FORWARDING table with a
+    /// B-link tree instead of a MICA table, so simulated transactions
+    /// mix item-granularity and leaf-granularity OCC. TATP workload only.
+    pub tatp_cf_btree: bool,
     /// Host cost knobs.
     pub host: HostParams,
 }
@@ -198,6 +202,7 @@ impl SimConfig {
             seed: 0x5701_2019,
             conn_multiplier: 1,
             rpc_via_sendrecv: false,
+            tatp_cf_btree: false,
             host: HostParams::default(),
         }
     }

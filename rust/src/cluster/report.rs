@@ -1,7 +1,83 @@
 //! Run summaries: simulator reports (consumed by the figure harnesses and
 //! the CLI) and live-cluster service counters.
 
+use crate::dataplane::tx::{AbortReason, TxOutcome};
 use crate::sim::Nanos;
+
+/// Per-[`AbortReason`] abort tallies of a transactional run. An abort
+/// *storm* (a retry loop melting throughput) is only diagnosable when the
+/// reasons are visible: a wall of `LockConflict` means write contention,
+/// `ValidationVersion`/`ValidationLocked` mean read-write interleaving,
+/// `ValidationMoved` means structural churn (B-link splits racing
+/// readers), and `Unsupported` means a client is aiming transactions at
+/// a backend kind outside the opcode set.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AbortCounts {
+    /// Execution-phase write-lock conflicts.
+    pub lock_conflict: u64,
+    /// Read-set item version changed between execute and validate.
+    pub validation_version: u64,
+    /// Read-set item was foreign-locked at validation.
+    pub validation_locked: u64,
+    /// Read-set item moved (stale address / a split relocated the key).
+    pub validation_moved: u64,
+    /// A lock/commit opcode answered with the typed dispatch error.
+    pub unsupported: u64,
+}
+
+impl AbortCounts {
+    /// Tally one abort.
+    pub fn record(&mut self, reason: AbortReason) {
+        match reason {
+            AbortReason::LockConflict => self.lock_conflict += 1,
+            AbortReason::ValidationVersion => self.validation_version += 1,
+            AbortReason::ValidationLocked => self.validation_locked += 1,
+            AbortReason::ValidationMoved => self.validation_moved += 1,
+            AbortReason::Unsupported => self.unsupported += 1,
+        }
+    }
+
+    /// Tally a transaction outcome (commits are ignored).
+    pub fn record_outcome(&mut self, outcome: &TxOutcome) {
+        if let TxOutcome::Aborted(reason) = outcome {
+            self.record(*reason);
+        }
+    }
+
+    /// Merge another tally in (per-client tallies roll up per run).
+    pub fn merge(&mut self, other: &AbortCounts) {
+        self.lock_conflict += other.lock_conflict;
+        self.validation_version += other.validation_version;
+        self.validation_locked += other.validation_locked;
+        self.validation_moved += other.validation_moved;
+        self.unsupported += other.unsupported;
+    }
+
+    /// Total aborts across all reasons.
+    pub fn total(&self) -> u64 {
+        self.lock_conflict
+            + self.validation_version
+            + self.validation_locked
+            + self.validation_moved
+            + self.unsupported
+    }
+
+    /// The JSON object benches embed in `BENCH_live.json`.
+    pub fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"lock_conflict\": {}, \"validation_version\": {}, ",
+                "\"validation_locked\": {}, \"validation_moved\": {}, ",
+                "\"unsupported\": {}}}"
+            ),
+            self.lock_conflict,
+            self.validation_version,
+            self.validation_locked,
+            self.validation_moved,
+            self.unsupported,
+        )
+    }
+}
 
 /// Per-lane RPC service counts from a live cluster run:
 /// `per_lane[node][lane]` is the number of requests the given bucket-range
@@ -18,12 +94,21 @@ pub struct LiveServed {
     /// on sustained aborts, so these values show where each client's
     /// concurrency settled.
     pub tx_windows: Vec<u32>,
+    /// Per-reason abort tallies rolled up from the run's clients via
+    /// [`LiveServed::record_aborts`] (each `LiveClient` counts its own;
+    /// see `LiveClient::abort_counts`).
+    pub aborts: AbortCounts,
 }
 
 impl LiveServed {
     /// Record one client's final adaptive transaction window.
     pub fn record_tx_window(&mut self, window: u32) {
         self.tx_windows.push(window);
+    }
+
+    /// Roll one client's per-reason abort tallies into the run's.
+    pub fn record_aborts(&mut self, counts: &AbortCounts) {
+        self.aborts.merge(counts);
     }
 
     /// Total served per node.

@@ -27,7 +27,8 @@ use crate::dataplane::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadVie
 use crate::dataplane::rpc::{request_wire_bytes, response_wire_bytes};
 use crate::dataplane::tx::{TxEngine, TxInput, TxItem, TxOp, TxPost, TxStep};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::catalog::{Catalog, CatalogConfig};
+use crate::ds::btree::{BTreeConfig, BTreeRouteResolver, LEAF_BYTES};
+use crate::ds::catalog::{Backend, Catalog, CatalogConfig, ObjectConfig, ObjectKind};
 use crate::ds::hopscotch::HopscotchTable;
 use crate::ds::mica::{owner_of, ItemView, MicaClient, MicaConfig};
 use crate::fabric::FabricParams;
@@ -130,26 +131,49 @@ struct FarmGeo {
     region_of: Vec<MrKey>,
 }
 
+/// One catalog object's client-side resolver in the simulator,
+/// kind-dispatched (the simulated TATP variant with a B-link-backed
+/// CALL_FORWARDING table mixes both kinds in one transaction).
+enum SimObj {
+    Mica(MicaClient),
+    BTree(BTreeRouteResolver),
+}
+
 struct Resolver {
     mode: RMode,
-    clients: Vec<MicaClient>,
+    objs: Vec<SimObj>,
     farm: Option<FarmGeo>,
     nodes: u32,
 }
 
 impl Resolver {
     fn dummy() -> Self {
-        Resolver { mode: RMode::RpcOnly, clients: Vec::new(), farm: None, nodes: 1 }
+        Resolver { mode: RMode::RpcOnly, objs: Vec::new(), farm: None, nodes: 1 }
+    }
+
+    /// The object's MICA client (modes that predate the heterogeneous
+    /// catalog — Perfect/Farm KV — only ever see MICA objects).
+    fn mica(&mut self, obj: ObjectId) -> &mut MicaClient {
+        match &mut self.objs[obj.0 as usize] {
+            SimObj::Mica(c) => c,
+            SimObj::BTree(_) => panic!("object {obj:?} is a B-link tree, not MICA"),
+        }
     }
 }
 
 impl DsCallbacks for Resolver {
     fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+        let nodes = self.nodes;
         match self.mode {
             RMode::RpcOnly => None,
-            RMode::OneTwo => Some(self.clients[obj.0 as usize].lookup_start(key)),
+            RMode::OneTwo => match &mut self.objs[obj.0 as usize] {
+                SimObj::Mica(c) => Some(c.lookup_start(key)),
+                // Cached-route traversal; cold routes decline and the
+                // lookup's RPC re-traversal warms them.
+                SimObj::BTree(b) => b.start(owner_of(key, nodes), key),
+            },
             RMode::Perfect => {
-                let mut hint = self.clients[obj.0 as usize].lookup_start(key);
+                let mut hint = self.mica(obj).lookup_start(key);
                 // Fully warmed address cache: read exactly one item.
                 hint.len = 128;
                 Some(hint)
@@ -171,9 +195,10 @@ impl DsCallbacks for Resolver {
     }
 
     fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+        let nodes = self.nodes;
         match (self.mode, view) {
             (RMode::Perfect, ReadView::Item(Some(v))) if v.key == key => {
-                let addr = self.clients[obj.0 as usize].lookup_start(key).addr;
+                let addr = self.mica(obj).lookup_start(key).addr;
                 LookupOutcome::Hit { version: v.version, addr, locked: v.locked }
             }
             (RMode::Perfect, ReadView::Item(_)) => LookupOutcome::Absent,
@@ -197,25 +222,42 @@ impl DsCallbacks for Resolver {
                     None => LookupOutcome::Absent,
                 }
             }
-            (_, ReadView::Bucket(b)) => self.clients[obj.0 as usize].lookup_end_bucket(key, b),
-            (_, ReadView::Item(i)) => self.clients[obj.0 as usize].lookup_end_item(key, *i),
-            // Coarse-read views outside their mode (and B-link leaves,
-            // which the simulator's MICA workloads never issue): let the
-            // owner resolve.
-            (_, ReadView::Neighborhood(_)) | (_, ReadView::Leaf(_)) => LookupOutcome::NeedRpc,
+            (_, ReadView::Bucket(b)) => self.mica(obj).lookup_end_bucket(key, b),
+            (_, ReadView::Item(i)) => self.mica(obj).lookup_end_item(key, *i),
+            (_, ReadView::Leaf(leaf)) => match &mut self.objs[obj.0 as usize] {
+                SimObj::BTree(b) => b.end_read(owner_of(key, nodes), key, leaf.as_ref()),
+                SimObj::Mica(_) => LookupOutcome::NeedRpc,
+            },
+            // Coarse-read views outside their mode: let the owner
+            // resolve. (Leaf headers are validation reads; the engine —
+            // not the lookup machine — consumes them.)
+            (_, ReadView::Neighborhood(_)) | (_, ReadView::LeafHeader(_)) => {
+                LookupOutcome::NeedRpc
+            }
         }
     }
 
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
-        if let RpcResult::Value { addr, .. } = &resp.result {
-            if (obj.0 as usize) < self.clients.len() {
-                self.clients[obj.0 as usize].record_rpc_addr(key, node, *addr);
+        match self.objs.get_mut(obj.0 as usize) {
+            Some(SimObj::Mica(c)) => {
+                if let RpcResult::Value { addr, .. } = &resp.result {
+                    c.record_rpc_addr(key, node, *addr);
+                }
             }
+            Some(SimObj::BTree(b)) => b.end_rpc(node, resp),
+            None => {}
         }
     }
 
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
         owner_of(key, self.nodes)
+    }
+
+    fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
+        match self.objs.get(obj.0 as usize) {
+            Some(SimObj::BTree(_)) => ObjectKind::BTree,
+            _ => ObjectKind::Mica,
+        }
     }
 }
 
@@ -343,13 +385,13 @@ impl World {
         };
 
         // --- table geometry ---------------------------------------------
-        let table_cfgs: Vec<MicaConfig> = match cfg.workload {
-            WorkloadKind::KvLookups => vec![MicaConfig {
+        let mut table_cfgs: Vec<ObjectConfig> = match cfg.workload {
+            WorkloadKind::KvLookups => vec![ObjectConfig::Mica(MicaConfig {
                 buckets: cfg.buckets_per_node(cfg.keys_per_node),
                 width: cfg.bucket_width,
                 value_len: cfg.value_len,
                 store_values: false,
-            }],
+            })],
             WorkloadKind::Tatp { subscribers_per_node } => {
                 // Approximate per-node row counts per subscriber across
                 // SUB/AI/SF/CF — the same ratios the live catalog is
@@ -357,26 +399,46 @@ impl World {
                 let s = subscribers_per_node;
                 crate::workload::tatp::ROWS_PER_SUBSCRIBER
                     .iter()
-                    .map(|rows| MicaConfig {
-                        buckets: cfg.buckets_per_node((s as f64 * rows).ceil() as u64),
-                        width: cfg.bucket_width,
-                        value_len: cfg.value_len,
-                        store_values: false,
+                    .map(|rows| {
+                        ObjectConfig::Mica(MicaConfig {
+                            buckets: cfg.buckets_per_node((s as f64 * rows).ceil() as u64),
+                            width: cfg.bucket_width,
+                            value_len: cfg.value_len,
+                            store_values: false,
+                        })
                     })
                     .collect()
             }
             WorkloadKind::SmallBank { accounts_per_node } => {
                 // One row per customer in each of ACCOUNTS/SAVINGS/CHECKING.
                 (0..3)
-                    .map(|_| MicaConfig {
-                        buckets: cfg.buckets_per_node(accounts_per_node),
-                        width: cfg.bucket_width,
-                        value_len: cfg.value_len,
-                        store_values: false,
+                    .map(|_| {
+                        ObjectConfig::Mica(MicaConfig {
+                            buckets: cfg.buckets_per_node(accounts_per_node),
+                            width: cfg.bucket_width,
+                            value_len: cfg.value_len,
+                            store_values: false,
+                        })
                     })
                     .collect()
             }
         };
+        if cfg.tatp_cf_btree {
+            // Heterogeneous TATP (PR 5): CALL_FORWARDING lives in a
+            // B-link tree, so GetNewDestination validates leaf headers
+            // and Insert/DeleteCallForwarding write through the tree —
+            // leaf-granularity OCC on the simulated path. Sized with
+            // ample split headroom (leaves hold up to 16 entries).
+            let WorkloadKind::Tatp { subscribers_per_node } = cfg.workload else {
+                panic!("tatp_cf_btree requires the TATP workload");
+            };
+            let cf_rows = (subscribers_per_node as f64
+                * crate::workload::tatp::ROWS_PER_SUBSCRIBER[3])
+                .ceil() as u64;
+            let max_leaves = (cf_rows / 2).max(64);
+            table_cfgs[3] = ObjectConfig::BTree(BTreeConfig { max_leaves });
+        }
+        let cat_cfg = CatalogConfig::heterogeneous(table_cfgs.clone());
 
         // --- nodes: stores, NICs ----------------------------------------
         let mut nodes: Vec<NodeSim> = Vec::with_capacity(cfg.nodes as usize);
@@ -387,11 +449,7 @@ impl World {
             // budget. The hopscotch table and the message rings register
             // into the catalog's region table afterwards, so NIC MTT/MPT
             // accounting still sees every region.
-            let mut cat = Catalog::with_chunks(
-                &CatalogConfig::new(table_cfgs.clone()),
-                region_mode,
-                256,
-            );
+            let mut cat = Catalog::with_chunks(&cat_cfg, region_mode, 256);
             let hop = if mode == RMode::Farm {
                 let buckets = (cfg.keys_per_node as f64 / 0.6).ceil() as u64;
                 Some(HopscotchTable::new(
@@ -434,7 +492,7 @@ impl World {
                     let owner = owner_of(key, cfg.nodes) as usize;
                     let nd = &mut nodes[owner];
                     if let Some(h) = nd.store.hop.as_mut() {
-                        h.insert(key);
+                        h.insert(key, None);
                     } else {
                         nd.store.cat.insert(ObjectId(0), key, None);
                     }
@@ -463,7 +521,11 @@ impl World {
             .map(|o| {
                 nodes
                     .iter()
-                    .map(|nd| nd.store.cat.table(ObjectId(o as u32)).bucket_region)
+                    .map(|nd| match nd.store.cat.backend(ObjectId(o as u32)) {
+                        Backend::Mica(t) => t.bucket_region,
+                        Backend::BTree(t) => t.region,
+                        other => panic!("unexpected {} backend in the simulator", other.kind_name()),
+                    })
                     .collect()
             })
             .collect();
@@ -483,11 +545,22 @@ impl World {
 
         for n in 0..cfg.nodes {
             for t in 0..cfg.threads {
-                let clients: Vec<MicaClient> = table_cfgs
+                let objs: Vec<SimObj> = table_cfgs
                     .iter()
                     .enumerate()
-                    .map(|(o, tc)| {
-                        MicaClient::new(ObjectId(o as u32), tc, cfg.nodes, region_of[o].clone())
+                    .map(|(o, oc)| match oc {
+                        ObjectConfig::Mica(tc) => SimObj::Mica(MicaClient::new(
+                            ObjectId(o as u32),
+                            tc,
+                            cfg.nodes,
+                            region_of[o].clone(),
+                        )),
+                        ObjectConfig::BTree(_) => {
+                            SimObj::BTree(BTreeRouteResolver::new(cfg.nodes, LEAF_BYTES))
+                        }
+                        ObjectConfig::Hopscotch(_) => {
+                            panic!("the simulator's catalogs host MICA/BTree objects")
+                        }
                     })
                     .collect();
                 let farm = farm_mask.map(|mask| FarmGeo {
@@ -496,7 +569,7 @@ impl World {
                     h: 8,
                     region_of: farm_regions.clone(),
                 });
-                let resolver = Resolver { mode, clients, farm, nodes: cfg.nodes };
+                let resolver = Resolver { mode, objs, farm, nodes: cfg.nodes };
                 let coros = (0..cfg.coros)
                     .map(|_| CoroSim {
                         sm: CoroSm::Idle,
@@ -749,6 +822,19 @@ impl World {
         rk: ReadKind,
     ) -> ReadView {
         let store = &self.nodes[node].store;
+        // Kind dispatch precedes the MICA read-granularity split: a read
+        // aimed at a B-link object is a leaf read (full image for
+        // lookups, bare OCC header for validation), whatever its length
+        // classified as.
+        if rk != ReadKind::Neighborhood {
+            if let Backend::BTree(tree) = store.cat.backend(ObjectId(obj as u32)) {
+                return if len >= LEAF_BYTES {
+                    ReadView::Leaf(tree.leaf_view(addr))
+                } else {
+                    ReadView::LeafHeader(tree.leaf_header(addr))
+                };
+            }
+        }
         match rk {
             ReadKind::Neighborhood => {
                 ReadView::Neighborhood(store.hop.as_ref().expect("farm store").neighborhood_view(key))
@@ -824,6 +910,10 @@ impl World {
         self.nodes[node].threads[thread].busy_until = done;
         // Response goes back as a write-with-imm (or UD send).
         let value_len = match &resp.result {
+            // A reply that actually carries bytes (a B-link leaf image
+            // riding a read re-traversal) is charged its real size; the
+            // metadata-only MICA store charges the configured value.
+            RpcResult::Value { value: Some(v), .. } => v.len() as u32,
             RpcResult::Value { .. } if matches!(req.op, RpcOp::Read | RpcOp::LockRead) => {
                 self.cfg.value_len
             }
@@ -1556,6 +1646,35 @@ mod tests {
         let r = World::new(cfg).run();
         assert!(r.ops > 500, "commits {}", r.ops);
         assert!(r.abort_rate() < 0.05, "abort rate {}", r.abort_rate());
+    }
+
+    #[test]
+    fn tatp_with_btree_call_forwarding_commits() {
+        // PR 5: CALL_FORWARDING backed by a B-link tree — simulated
+        // transactions mix item-granularity (MICA) and leaf-granularity
+        // (tree) OCC, including inserts/deletes that write through the
+        // tree and GetNewDestination reads validating leaf headers.
+        let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 4);
+        cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 2_000 };
+        cfg.tatp_cf_btree = true;
+        let r = World::new(cfg).run();
+        assert!(r.ops > 500, "commits {}", r.ops);
+        // Leaf-granularity locking raises false conflicts (neighboring
+        // CF keys share leaves), but the mix must still commit the bulk.
+        assert!(r.abort_rate() < 0.2, "abort rate {}", r.abort_rate());
+    }
+
+    #[test]
+    fn tatp_btree_cf_deterministic_across_runs() {
+        let mk = || {
+            let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3);
+            cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 1_000 };
+            cfg.tatp_cf_btree = true;
+            World::new(cfg).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.aborts, b.aborts);
     }
 
     #[test]

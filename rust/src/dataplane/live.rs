@@ -34,7 +34,13 @@
 //!   shared rings (inter-tx), demultiplexed by the correlation cookie in
 //!   each reply header. The window is **adaptive** ([`TxWindow`]): it
 //!   starts at [`TX_WINDOW`], grows while commits stay clean, stops
-//!   growing when the rings push back, and shrinks on sustained aborts;
+//!   growing when the rings push back, and shrinks on sustained aborts.
+//!   Since PR 5 transactions span backend *kinds*: B-link items lock,
+//!   validate (one-sided leaf-header reads in the same per-node
+//!   `read_batch` doorbell volley as MICA item headers) and commit at
+//!   leaf granularity, so a transaction may read a MICA table and write
+//!   through a tree in one atomic step; only hopscotch objects stay
+//!   outside the transactional opcode set (admission-checked);
 //! * each server node is split into up to [`SERVER_SHARDS`] shards, every
 //!   shard owning one bucket range of *every* table behind its own lock
 //!   with its own receive lane and event loop; per-lane `served` counters
@@ -49,9 +55,9 @@ use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::cluster::report::LiveServed;
+use crate::cluster::report::{AbortCounts, LiveServed};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::btree::{parse_leaf_view, BTreeClientCache, TreeLookupOutcome};
+use crate::ds::btree::{parse_leaf_header, parse_leaf_view, BTreeRouteResolver};
 use crate::ds::catalog::{Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement, TableGeo};
 use crate::ds::hopscotch::{parse_neighborhood_view, HopscotchTable};
 use crate::ds::mica::{
@@ -366,6 +372,7 @@ impl LiveCluster {
                 .map(|handles| handles.into_iter().map(|h| h.join().unwrap()).collect())
                 .collect(),
             tx_windows: Vec::new(),
+            aborts: AbortCounts::default(),
         }
     }
 }
@@ -579,10 +586,15 @@ fn handle_request(
         }
         ObjectKind::BTree => {
             // The whole tree lives on this (home) shard, so leaf indices
-            // are node-global already; only successful inserts dirty it.
-            if req.op == RpcOp::Insert && resp.result == RpcResult::Ok {
-                mirror_btree_dirty(fabric, node, &geo, &mut g, req.obj);
-            }
+            // are node-global already. Mirroring is driven by the tree's
+            // own dirty journal, not by the result code: an op can
+            // mutate the wire image while answering NotFound (an
+            // UpdateUnlock whose entry a same-volley delete already
+            // removed still clears the leaf lock word), and a stale
+            // mirrored lock word would wedge every other client's
+            // one-sided leaf-header validation on ValidationLocked.
+            // Refused ops push nothing, so this is a no-op for them.
+            mirror_btree_dirty(fabric, node, &geo, &mut g, req.obj);
             if let RpcResult::Value { addr, .. } = &mut resp.result {
                 if addr.region == g.btree(req.obj).region {
                     *addr = RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
@@ -604,22 +616,6 @@ fn handle_request(
     resp
 }
 
-/// Per-owner-node fence-keyed leaf route caches for one B-link object
-/// (each node hosts its own tree over its key partition, so a cached
-/// leaf address is only meaningful on its node).
-struct BTreeResolver {
-    routes: Vec<BTreeClientCache>,
-    /// Leaf wire bytes (the one-sided read size).
-    leaf_bytes: u32,
-    /// Leaf address each in-flight read was actually issued to, keyed by
-    /// key: `lookup_start` records it, `lookup_end_read` consumes it.
-    /// The route cache may be repaired by *other* keys' completions
-    /// while a read is in flight, so re-querying `route(key)` at
-    /// completion could name a different leaf than the bytes in hand —
-    /// hits and fence-miss repairs must bind to the read's own address.
-    pending: HashMap<u64, RemoteAddr>,
-}
-
 /// Pure-arithmetic geometry of one hopscotch object (no client state:
 /// the home slot is a hash, the neighborhood read is authoritative).
 struct HopGeo {
@@ -635,8 +631,9 @@ enum ObjResolver {
     /// MICA: home-bucket hints + cached exact item addresses.
     Mica(MicaClient),
     /// B-link tree: cached-inner-level traversal — route locally, read
-    /// one leaf, repair the route from RPC replies on fence miss.
-    BTree(BTreeResolver),
+    /// one leaf, repair the route from RPC replies on fence miss (the
+    /// shared per-node route resolver every driver uses).
+    BTree(BTreeRouteResolver),
     /// Hopscotch: one `H * item_size` neighborhood read, always.
     Hop(HopGeo),
 }
@@ -704,13 +701,7 @@ impl DsCallbacks for LiveResolver {
             // Cached-inner-level traversal: a warm route answers with one
             // leaf read; a cold (or invalidated) one declines, and the
             // lookup starts with the RPC re-traversal that warms it.
-            ObjResolver::BTree(b) => {
-                let node = owner_of(key, nodes);
-                b.routes[node as usize].route(key).map(|addr| {
-                    b.pending.insert(key, addr);
-                    LookupHint { node, addr, len: b.leaf_bytes }
-                })
-            }
+            ObjResolver::BTree(b) => b.start(owner_of(key, nodes), key),
             ObjResolver::Hop(g) => {
                 let node = owner_of(key, nodes);
                 let home = fnv1a64(key) & g.mask;
@@ -730,46 +721,11 @@ impl DsCallbacks for LiveResolver {
         match (&mut self.objs[obj.0 as usize], view) {
             (ObjResolver::Mica(c), ReadView::Bucket(b)) => c.lookup_end_bucket(key, b),
             (ObjResolver::Mica(c), ReadView::Item(i)) => c.lookup_end_item(key, *i),
+            // Fence check, pending-address binding, and stale-route
+            // narrowing all live in the shared resolver (read → RPC →
+            // done, never read → read).
             (ObjResolver::BTree(b), ReadView::Leaf(leaf)) => {
-                let node = owner_of(key, nodes) as usize;
-                // The address this read was issued to (NOT a fresh
-                // route(key): same-batch repairs may have rebound the
-                // range to a different leaf since the read went out).
-                let read_addr = b.pending.remove(&key);
-                match BTreeClientCache::check(key, leaf.as_ref()) {
-                    TreeLookupOutcome::Hit(_) => {
-                        let v = leaf.as_ref().expect("hit implies a parsed leaf");
-                        match read_addr {
-                            Some(addr) => LookupOutcome::Hit {
-                                version: v.version,
-                                addr,
-                                locked: false,
-                            },
-                            // Untracked read (duplicate key in one
-                            // batch): let the owner resolve it.
-                            None => LookupOutcome::NeedRpc,
-                        }
-                    }
-                    TreeLookupOutcome::Absent => LookupOutcome::Absent,
-                    TreeLookupOutcome::NeedRpc => {
-                        // Fence miss: a split moved the key past this
-                        // leaf. The read still returned the leaf's TRUE
-                        // fences, so narrow the stale entry to them —
-                        // bound to the address actually read — and let
-                        // the RPC reply install the range the key moved
-                        // to. Keys that stayed in the left half keep
-                        // their one-read path, and the retry budget is
-                        // one by construction (read → RPC → done; a
-                        // lookup never loops back to another read).
-                        match (leaf.as_ref(), read_addr) {
-                            (Some(v), Some(addr)) => {
-                                b.routes[node].install_leaf(v.low, v.high, addr)
-                            }
-                            _ => b.routes[node].invalidate(key),
-                        }
-                        LookupOutcome::NeedRpc
-                    }
-                }
+                b.end_read(owner_of(key, nodes), key, leaf.as_ref())
             }
             (ObjResolver::Hop(g), ReadView::Neighborhood(nv)) => {
                 match HopscotchTable::find_in_view(nv, key) {
@@ -812,19 +768,20 @@ impl DsCallbacks for LiveResolver {
             // Route repair: the reply's value payload is the covering
             // leaf's wire image — its fence keys install the fresh route,
             // so the next lookup in this range is one-sided again.
-            ObjResolver::BTree(b) => {
-                if let RpcResult::Value { addr, value: Some(bytes), .. } = &resp.result {
-                    if let Some(view) = parse_leaf_view(bytes) {
-                        b.routes[node as usize].install_leaf(view.low, view.high, *addr);
-                    }
-                }
-            }
+            ObjResolver::BTree(b) => b.end_rpc(node, resp),
             // Hopscotch lookups are stateless (the home slot is a hash).
             ObjResolver::Hop(_) => {}
         }
     }
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
         owner_of(key, self.nodes)
+    }
+    fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
+        match &self.objs[obj.0 as usize] {
+            ObjResolver::Mica(_) => ObjectKind::Mica,
+            ObjResolver::BTree(_) => ObjectKind::BTree,
+            ObjResolver::Hop(_) => ObjectKind::Hopscotch,
+        }
     }
 }
 
@@ -856,11 +813,9 @@ impl ClientSeed {
                         MicaClient::new(obj, tc, nodes, vec![DATA_REGION; nodes as usize])
                             .with_base(geo.base),
                     ),
-                    ObjectConfig::BTree(_) => ObjResolver::BTree(BTreeResolver {
-                        routes: (0..nodes).map(|_| BTreeClientCache::default()).collect(),
-                        leaf_bytes: geo.bucket_bytes,
-                        pending: HashMap::new(),
-                    }),
+                    ObjectConfig::BTree(_) => {
+                        ObjResolver::BTree(BTreeRouteResolver::new(nodes, geo.bucket_bytes))
+                    }
                     ObjectConfig::Hopscotch(_) => ObjResolver::Hop(HopGeo {
                         base: geo.base,
                         mask: geo.mask,
@@ -899,6 +854,7 @@ impl ClientSeed {
             next_tx: (CLIENT_UID.fetch_add(1, Ordering::Relaxed) + 1) << 32 | 1,
             seq: 0,
             tx_win: TxWindow::new(),
+            aborts: AbortCounts::default(),
         }
     }
 }
@@ -949,7 +905,15 @@ fn parse_view_at(place: &Placement, offset: u64, bytes: &[u8]) -> ReadView {
                 ReadView::Item(parse_item_view(bytes).filter(|v| v.key != 0))
             }
         }
-        ObjectKind::BTree => ReadView::Leaf(parse_leaf_view(bytes)),
+        ObjectKind::BTree => {
+            // Two read granularities: full leaves (lookups) vs the bare
+            // OCC header (transaction validation reads).
+            if bytes.len() as u32 >= geo.bucket_bytes {
+                ReadView::Leaf(parse_leaf_view(bytes))
+            } else {
+                ReadView::LeafHeader(parse_leaf_header(bytes))
+            }
+        }
         ObjectKind::Hopscotch => {
             ReadView::Neighborhood(parse_neighborhood_view(bytes, geo.item_size))
         }
@@ -980,6 +944,8 @@ pub struct LiveClient {
     seq: u16,
     /// Adaptive transaction window state.
     tx_win: TxWindow,
+    /// Per-reason abort tallies of this client's transactions.
+    aborts: AbortCounts,
 }
 
 impl LiveClient {
@@ -987,6 +953,14 @@ impl LiveClient {
     /// (reportable via [`LiveServed::record_tx_window`]).
     pub fn tx_window(&self) -> usize {
         self.tx_win.current()
+    }
+
+    /// Per-[`crate::dataplane::tx::AbortReason`] tallies of every
+    /// transaction this client ran (reportable via
+    /// [`LiveServed::record_aborts`] — abort storms are only diagnosable
+    /// when the reasons are visible).
+    pub fn abort_counts(&self) -> AbortCounts {
+        self.aborts
     }
 
     fn req_header(&mut self, cookie: u32) -> RpcHeader {
@@ -1305,16 +1279,18 @@ impl LiveClient {
                     item.key,
                     self.place.objects()
                 );
-                // Only MICA backends implement the transactional opcode
-                // set (item-granularity locks + validation reads); tree
-                // and hopscotch objects serve the lookup path. Reject at
+                // MICA backends join transactions at item granularity,
+                // B-link trees at leaf granularity (PR 5); hopscotch
+                // objects serve only the lookup path. Reject those at
                 // admission — a kind mismatch discovered mid-schedule
                 // would otherwise surface as an engine panic with other
                 // transactions' locks still held.
-                assert_eq!(
-                    self.place.geo(item.obj).kind,
-                    ObjectKind::Mica,
-                    "transactions require MICA-backed objects; {:?} (key {}) is {:?}",
+                assert!(
+                    matches!(
+                        self.place.geo(item.obj).kind,
+                        ObjectKind::Mica | ObjectKind::BTree
+                    ),
+                    "transactions require MICA- or BTree-backed objects; {:?} (key {}) is {:?}",
                     item.obj,
                     item.key,
                     self.place.geo(item.obj).kind
@@ -1450,6 +1426,7 @@ impl LiveClient {
                     if outcomes.len() > 1 {
                         self.tx_win.on_outcome(matches!(outcome, TxOutcome::Committed { .. }));
                     }
+                    self.aborts.record_outcome(&outcome);
                     outcomes[tx.idx] = Some(outcome);
                     free_slots.push(slot);
                     *live -= 1;

@@ -1,12 +1,20 @@
 //! Reference in-process driver: the Storm dataplane over local shards.
 //!
 //! Executes the sans-io engines ([`LookupSm`], [`TxEngine`]) directly
-//! against in-memory storage catalogs ([`Catalog`]: one table per object,
-//! so multi-object workloads like four-table TATP run natively) with no
-//! fabric at all. This is the semantic reference: what the simulator and
-//! the live loopback driver must agree with. Used heavily by tests
-//! (including step-interleaved concurrency tests for the OCC protocol)
-//! and the quickstart example.
+//! against in-memory storage catalogs ([`Catalog`]: one backend per
+//! object, so multi-object workloads like four-table TATP run natively)
+//! with no fabric at all. This is the semantic reference: what the
+//! simulator and the live loopback driver must agree with. Used heavily
+//! by tests (including step-interleaved concurrency tests for the OCC
+//! protocol) and the quickstart example.
+//!
+//! Since PR 5 the reference driver hosts **heterogeneous catalogs**
+//! ([`LocalCluster::new_hetero`]): B-link objects resolve through the
+//! shared [`BTreeRouteResolver`] (cached-route leaf reads, RPC
+//! re-traversal + repair on fence miss) and join transactions at leaf
+//! granularity; hopscotch objects resolve via owner RPCs and stay
+//! outside the transactional opcode set (a write-set item naming one
+//! aborts with the typed `Unsupported`).
 //!
 //! The batched engine contract is driven here with a window of one:
 //! emitted [`TxPost`]s queue up and are served strictly in order
@@ -14,19 +22,34 @@
 //! interleavings serve individual posts via
 //! [`LocalCluster::serve_tx_post`] and park the rest.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::catalog::{Catalog, CatalogConfig};
+use crate::ds::btree::{BTreeRouteResolver, LEAF_BYTES};
+use crate::ds::catalog::{Backend, Catalog, CatalogConfig, ObjectConfig, ObjectKind};
 use crate::ds::mica::{MicaClient, MicaConfig};
 use crate::mem::{PageSize, RegionMode, RemoteAddr};
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
 use super::tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxPost, TxStep};
 
-/// Client-side state: resolvers per object.
+/// One object's client-side resolver, kind-dispatched.
+enum LocalObj {
+    /// MICA: home-bucket hints + cached exact item addresses.
+    Mica(MicaClient),
+    /// B-link tree: the shared cached-route resolver.
+    BTree(BTreeRouteResolver),
+    /// Hopscotch: the reference driver resolves these via owner RPCs
+    /// (the live path's arithmetic neighborhood reads need the packed
+    /// mirror, which the fabric-less driver does not build).
+    Rpc,
+}
+
+/// Client-side state: one kind-dispatched resolver per catalog object.
 pub struct LocalClient {
-    clients: HashMap<ObjectId, MicaClient>,
+    objs: Vec<LocalObj>,
+    kinds: Vec<ObjectKind>,
+    nodes: u32,
     rpc_only: bool,
 }
 
@@ -35,25 +58,39 @@ impl DsCallbacks for LocalClient {
         if self.rpc_only {
             return None;
         }
-        Some(self.clients.get(&obj).expect("unknown object").lookup_start(key))
+        let node = crate::ds::mica::owner_of(key, self.nodes);
+        match &mut self.objs[obj.0 as usize] {
+            LocalObj::Mica(c) => Some(c.lookup_start(key)),
+            LocalObj::BTree(b) => b.start(node, key),
+            LocalObj::Rpc => None,
+        }
     }
     fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
-        let c = self.clients.get_mut(&obj).unwrap();
-        match view {
-            ReadView::Bucket(b) => c.lookup_end_bucket(key, b),
-            ReadView::Item(i) => c.lookup_end_item(key, *i),
-            // MICA clients never issue neighborhood or leaf reads (those
-            // views belong to the hopscotch/btree resolvers).
-            ReadView::Neighborhood(_) | ReadView::Leaf(_) => LookupOutcome::NeedRpc,
+        let node = crate::ds::mica::owner_of(key, self.nodes);
+        match (&mut self.objs[obj.0 as usize], view) {
+            (LocalObj::Mica(c), ReadView::Bucket(b)) => c.lookup_end_bucket(key, b),
+            (LocalObj::Mica(c), ReadView::Item(i)) => c.lookup_end_item(key, *i),
+            (LocalObj::BTree(b), ReadView::Leaf(leaf)) => b.end_read(node, key, leaf.as_ref()),
+            // Kind/view mismatch: let the owner decide.
+            _ => LookupOutcome::NeedRpc,
         }
     }
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {
-        if let RpcResult::Value { addr, .. } = &resp.result {
-            self.clients.get_mut(&obj).unwrap().record_rpc_addr(key, node, *addr);
+        match &mut self.objs[obj.0 as usize] {
+            LocalObj::Mica(c) => {
+                if let RpcResult::Value { addr, .. } = &resp.result {
+                    c.record_rpc_addr(key, node, *addr);
+                }
+            }
+            LocalObj::BTree(b) => b.end_rpc(node, resp),
+            LocalObj::Rpc => {}
         }
     }
-    fn owner(&self, obj: ObjectId, key: u64) -> u32 {
-        self.clients.get(&obj).unwrap().owner(key)
+    fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
+        crate::ds::mica::owner_of(key, self.nodes)
+    }
+    fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
+        self.kinds[obj.0 as usize]
     }
 }
 
@@ -77,7 +114,15 @@ impl LocalCluster {
         for (i, (o, _)) in objects.iter().enumerate() {
             assert_eq!(o.0 as usize, i, "catalog object ids must be dense from 0");
         }
-        let cat = CatalogConfig::new(objects.into_iter().map(|(_, c)| c).collect());
+        Self::new_hetero(
+            n,
+            CatalogConfig::new(objects.into_iter().map(|(_, c)| c).collect()),
+        )
+    }
+
+    /// Build `n` nodes hosting an arbitrary (possibly heterogeneous)
+    /// catalog: MICA tables, B-link trees, and hopscotch objects.
+    pub fn new_hetero(n: u32, cat: CatalogConfig) -> Self {
         let nodes = (0..n)
             .map(|_| Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M)))
             .collect();
@@ -86,21 +131,41 @@ impl LocalCluster {
 
     /// Build a client (resolver set) for this cluster.
     pub fn client(&self, with_cache: bool) -> LocalClient {
-        let mut clients = HashMap::new();
         let n = self.nodes.len() as u32;
-        for (o, cfg) in self.cat.objects.iter().enumerate() {
-            let obj = ObjectId(o as u32);
-            let regions =
-                self.nodes.iter().map(|nd| nd.table(obj).bucket_region).collect::<Vec<_>>();
-            // The reference driver is MICA-only (`Self::new` takes
-            // `MicaConfig`s); heterogeneous catalogs live on the live path.
-            let mut c = MicaClient::new(obj, cfg.mica(), n, regions);
-            if with_cache {
-                c = c.with_cache();
-            }
-            clients.insert(obj, c);
-        }
-        LocalClient { clients, rpc_only: false }
+        let objs = self
+            .cat
+            .objects
+            .iter()
+            .enumerate()
+            .map(|(o, cfg)| {
+                let obj = ObjectId(o as u32);
+                match cfg {
+                    ObjectConfig::Mica(mc) => {
+                        let regions = self
+                            .nodes
+                            .iter()
+                            .map(|nd| nd.table(obj).bucket_region)
+                            .collect::<Vec<_>>();
+                        let mut c = MicaClient::new(obj, mc, n, regions);
+                        if with_cache {
+                            c = c.with_cache();
+                        }
+                        LocalObj::Mica(c)
+                    }
+                    // Route caches start cold; the first lookup's RPC
+                    // re-traversal warms them (exactly like a live
+                    // client). Each node's catalog registers the tree
+                    // region under the same key, so cached addresses are
+                    // served against the right node's tree.
+                    ObjectConfig::BTree(_) => {
+                        LocalObj::BTree(BTreeRouteResolver::new(n, LEAF_BYTES))
+                    }
+                    ObjectConfig::Hopscotch(_) => LocalObj::Rpc,
+                }
+            })
+            .collect();
+        let kinds = self.cat.objects.iter().map(|c| c.kind()).collect();
+        LocalClient { objs, kinds, nodes: n, rpc_only: false }
     }
 
     /// RPC-only client (Storm's RPC configuration / baselines).
@@ -126,14 +191,33 @@ impl LocalCluster {
         }
     }
 
-    /// Serve a one-sided read against a node's memory.
+    /// Serve a one-sided read against a node's memory, dispatched by the
+    /// target object's backend kind (B-link reads come in two
+    /// granularities: full leaves for lookups, bare headers for OCC
+    /// validation).
     pub fn serve_read(&self, node: u32, obj_hint: ObjectId, addr: RemoteAddr, len: u32) -> ReadView {
-        let table = self.nodes[node as usize].table(obj_hint);
-        let bb = table.config().bucket_bytes();
-        if len == bb && addr.region == table.bucket_region {
-            ReadView::Bucket(table.bucket_view(addr.offset / bb as u64))
-        } else {
-            ReadView::Item(table.item_view(addr))
+        match self.nodes[node as usize].backend(obj_hint) {
+            Backend::BTree(tree) => {
+                if len >= LEAF_BYTES {
+                    ReadView::Leaf(tree.leaf_view(addr))
+                } else {
+                    ReadView::LeafHeader(tree.leaf_header(addr))
+                }
+            }
+            Backend::Mica(table) => {
+                let bb = table.config().bucket_bytes();
+                if len == bb && addr.region == table.bucket_region {
+                    ReadView::Bucket(table.bucket_view(addr.offset / bb as u64))
+                } else {
+                    ReadView::Item(table.item_view(addr))
+                }
+            }
+            // The reference driver's hopscotch resolver is RPC-only: no
+            // resolver ever issues a one-sided read against one.
+            other => panic!(
+                "one-sided read against a {} backend in the reference driver",
+                other.kind_name()
+            ),
         }
     }
 

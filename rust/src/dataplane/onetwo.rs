@@ -29,6 +29,10 @@ pub enum ReadView {
     /// B-link leaf read (client-cached-route traversal); `None` when the
     /// bytes are not a live leaf (e.g. a never-written mirror slot).
     Leaf(Option<crate::ds::btree::LeafView>),
+    /// Fine-grained B-link leaf *header* read (OCC validation of a
+    /// tree-backed read-set item: fences + version + lock word); `None`
+    /// when the bytes are not a live leaf header.
+    LeafHeader(Option<crate::ds::btree::LeafHeader>),
 }
 
 /// The data-structure side of the dataplane (paper Table 3), object-id
@@ -46,6 +50,13 @@ pub trait DsCallbacks {
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse);
     /// Owner node of a key.
     fn owner(&self, obj: ObjectId, key: u64) -> u32;
+    /// Backend kind of an object — the transaction engine routes its
+    /// lock/validate/commit actions per item on it (MICA: item locks +
+    /// item-header validation reads; BTree: leaf locks + leaf-header
+    /// validation reads). MICA-only resolvers keep the default.
+    fn backend_kind(&self, _obj: ObjectId) -> crate::ds::catalog::ObjectKind {
+        crate::ds::catalog::ObjectKind::Mica
+    }
 }
 
 /// Action the dataplane must perform next for a lookup.
@@ -242,7 +253,9 @@ mod tests {
             match view {
                 ReadView::Bucket(b) => self.client.lookup_end_bucket(key, b),
                 ReadView::Item(i) => self.client.lookup_end_item(key, *i),
-                ReadView::Neighborhood(_) | ReadView::Leaf(_) => unreachable!("MICA harness"),
+                ReadView::Neighborhood(_) | ReadView::Leaf(_) | ReadView::LeafHeader(_) => {
+                    unreachable!("MICA harness")
+                }
             }
         }
         fn lookup_end_rpc(&mut self, _obj: ObjectId, key: u64, node: u32, resp: &RpcResponse) {

@@ -1,4 +1,5 @@
-//! Storm transactions (paper §5.4, Fig. 3) — the **batched** engine.
+//! Storm transactions (paper §5.4, Fig. 3) — the **batched** engine,
+//! spanning **heterogeneous backends** since PR 5.
 //!
 //! Optimistic concurrency control with execution-phase write locks:
 //!
@@ -12,6 +13,37 @@
 //!    items that were absent (no address to validate).
 //! 3. **Commit** — write-set items are applied and unlocked with
 //!    write-based RPCs (updates, inserts, deletes).
+//!
+//! **Per-item backend kind.** Transactions are no longer MICA-only: the
+//! engine asks [`DsCallbacks::backend_kind`] per object and routes each
+//! item's actions to the granularity its backend implements.
+//!
+//! * MICA items lock, validate ([`VALIDATE_READ_BYTES`]-byte item-header
+//!   reads) and commit at **item** granularity, exactly as before.
+//! * B-link tree items operate at **leaf** granularity: the lock-read
+//!   locks the covering leaf, validation is a one-sided
+//!   [`LEAF_VALIDATE_BYTES`]-byte read of the cached leaf address
+//!   checking the fences (a key outside them means a concurrent split
+//!   relocated it — [`AbortReason::ValidationMoved`]), the leaf version,
+//!   and the lock word (the engine's own tx id does not abort — a
+//!   transaction reading and writing different keys of one leaf sees its
+//!   own leaf lock); commit installs the value and bumps the leaf
+//!   version. Both kinds' validation reads share the same per-node
+//!   doorbell `read_batch` volley — a transaction spanning a MICA table
+//!   and a tree validates in one round.
+//! * Hopscotch objects stay outside the opcode set; drivers reject them
+//!   at admission and a server answering [`RpcResult::Unsupported`]
+//!   aborts cleanly ([`AbortReason::Unsupported`]).
+//!
+//! Commit-phase `Insert`/`Delete` items acquire no execution-phase lock,
+//! so their server result is a typed **per-item** outcome inside a
+//! `Committed` transaction (`write_results[j]`), never an abort: `Full`
+//! from a MICA table at capacity — and, for tree items, `LockConflict`
+//! when a concurrent transaction's leaf lock froze the target leaf's
+//! membership. Callers that need those structural writes applied must
+//! inspect `write_results` and retry the refused item (promoting the
+//! refusal to a commit-phase abort needs post-validation failure
+//! handling — a ROADMAP follow-up).
 //!
 //! The engine is sans-io and **batched**: every phase emits *all* of its
 //! independent actions at once as tagged [`TxPost`]s — the execute-phase
@@ -40,13 +72,19 @@
 //! keeps feeding them), then emits the unlocks.
 
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult, Version};
+use crate::ds::btree::LeafHeader;
+use crate::ds::catalog::ObjectKind;
 use crate::ds::mica::ItemView;
 use crate::mem::RemoteAddr;
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LookupSm, ReadView};
 
-/// Bytes read to validate an item (its inline metadata header).
+/// Bytes read to validate a MICA item (its inline metadata header).
 pub const VALIDATE_READ_BYTES: u32 = crate::ds::mica::ITEM_HEADER;
+
+/// Bytes read to validate a B-link read-set item (the covering leaf's
+/// OCC header: fences + version + lock word).
+pub const LEAF_VALIDATE_BYTES: u32 = crate::ds::btree::LEAF_HEADER_BYTES;
 
 /// Tag bit marking execute-phase lock-read actions (write-set item `j`
 /// posts with tag `LOCK_TAG | j`). All tags stay below `2 * LOCK_TAG`,
@@ -429,13 +467,27 @@ impl TxEngine {
             }
             Phase::Validate => {
                 let i = tag as usize;
+                // Per-item backend kind: MICA items validate via item
+                // headers, B-link items via leaf headers. Both variants
+                // are absorbed even when already aborting.
+                enum Validated {
+                    Item(Option<ItemView>),
+                    Leaf(Option<LeafHeader>),
+                }
                 let view = match input {
-                    TxInput::Read(ReadView::Item(v)) => v,
-                    other => panic!("validation expects item reads, got {other:?}"),
+                    TxInput::Read(ReadView::Item(v)) => Validated::Item(v),
+                    TxInput::Read(ReadView::LeafHeader(h)) => Validated::Leaf(h),
+                    other => panic!("validation expects item or leaf-header reads, got {other:?}"),
                 };
                 if self.fail.is_none() {
                     let meta = self.read_meta[i].expect("validated item has execute meta");
-                    if let Err(reason) = Self::check_validation(&self.read_set[i], meta, view) {
+                    let checked = match view {
+                        Validated::Item(v) => Self::check_validation(&self.read_set[i], meta, v),
+                        Validated::Leaf(h) => {
+                            Self::check_leaf_validation(self.tx_id, &self.read_set[i], meta, h)
+                        }
+                    };
+                    if let Err(reason) = checked {
                         self.fail = Some(reason);
                     }
                 }
@@ -477,7 +529,7 @@ impl TxEngine {
             match self.phase {
                 Phase::Execute => {
                     self.phase = Phase::Validate;
-                    let posts = self.validate_posts();
+                    let posts = self.validate_posts(cb);
                     if !posts.is_empty() {
                         self.outstanding = posts.len() as u32;
                         return TxStep::Issue(posts);
@@ -505,7 +557,9 @@ impl TxEngine {
     }
 
     /// All validation reads, one batch (drivers doorbell them per node).
-    fn validate_posts(&mut self) -> Vec<TxPost> {
+    /// The read size follows the item's backend kind: MICA item headers
+    /// vs B-link leaf headers.
+    fn validate_posts(&mut self, cb: &mut impl DsCallbacks) -> Vec<TxPost> {
         let mut posts = Vec::new();
         for i in 0..self.read_set.len() {
             let meta = self.read_meta[i].expect("execute phase resolved every read");
@@ -515,14 +569,11 @@ impl TxEngine {
                 continue;
             }
             let (obj, key) = (self.read_set[i].obj, self.read_set[i].key);
-            posts.push(self.read_post(
-                i as u32,
-                obj,
-                key,
-                meta.node,
-                meta.addr.unwrap(),
-                VALIDATE_READ_BYTES,
-            ));
+            let len = match cb.backend_kind(obj) {
+                ObjectKind::BTree => LEAF_VALIDATE_BYTES,
+                _ => VALIDATE_READ_BYTES,
+            };
+            posts.push(self.read_post(i as u32, obj, key, meta.node, meta.addr.unwrap(), len));
         }
         posts
     }
@@ -612,6 +663,34 @@ impl TxEngine {
                 } else if v.version != meta.version {
                     Err(AbortReason::ValidationVersion)
                 } else if v.locked {
+                    Err(AbortReason::ValidationLocked)
+                } else {
+                    Ok(())
+                }
+            }
+            None => Err(AbortReason::ValidationMoved),
+        }
+    }
+
+    /// Leaf-granularity OCC validation of a B-link read-set item: the
+    /// cached leaf must still cover the key (a concurrent split that
+    /// relocated it shows up as a fence miss — `ValidationMoved`), carry
+    /// the version the execute phase observed, and not be locked by a
+    /// *foreign* transaction (our own leaf lock — taken for a different
+    /// write-set key of the same leaf — pins the leaf and is safe).
+    fn check_leaf_validation(
+        tx_id: u64,
+        item: &TxItem,
+        meta: ReadMeta,
+        header: Option<LeafHeader>,
+    ) -> Result<(), AbortReason> {
+        match header {
+            Some(h) => {
+                if item.key < h.low || item.key >= h.high {
+                    Err(AbortReason::ValidationMoved)
+                } else if h.version != meta.version {
+                    Err(AbortReason::ValidationVersion)
+                } else if h.lock_tx != 0 && h.lock_tx != tx_id {
                     Err(AbortReason::ValidationLocked)
                 } else {
                     Ok(())
@@ -869,5 +948,174 @@ mod tests {
         let mut tx = TxEngine::begin(7, vec![], vec![]);
         let out = finished(tx.start(&mut cb));
         assert_eq!(out, TxOutcome::Committed { write_results: vec![] });
+    }
+
+    /// Mixed-kind mock: object 0 is MICA (as in [`MockCb`]), object 1 is
+    /// a B-link tree whose every key lives in a leaf at `key * 1024`.
+    struct HeteroCb;
+
+    const TREE: ObjectId = ObjectId(1);
+
+    fn leaf_addr_of(key: u64) -> RemoteAddr {
+        RemoteAddr { region: MrKey(0), offset: key * 1024 }
+    }
+
+    impl DsCallbacks for HeteroCb {
+        fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+            if obj == TREE {
+                Some(LookupHint { node: 0, addr: leaf_addr_of(key), len: 512 })
+            } else {
+                Some(LookupHint { node: 0, addr: addr_of(key), len: ITEM_HEADER })
+            }
+        }
+        fn lookup_end_read(&mut self, _obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+            match view {
+                ReadView::Leaf(Some(v)) if v.entries.iter().any(|&(k, _)| k == key) => {
+                    LookupOutcome::Hit {
+                        version: v.version,
+                        addr: leaf_addr_of(key),
+                        locked: v.lock_tx != 0,
+                    }
+                }
+                ReadView::Leaf(_) => LookupOutcome::Absent,
+                ReadView::Item(Some(v)) if v.key == key => LookupOutcome::Hit {
+                    version: v.version,
+                    addr: addr_of(key),
+                    locked: v.locked,
+                },
+                ReadView::Item(_) => LookupOutcome::Absent,
+                other => panic!("unexpected view {other:?}"),
+            }
+        }
+        fn lookup_end_rpc(&mut self, _obj: ObjectId, _key: u64, _node: u32, _resp: &RpcResponse) {}
+        fn owner(&self, _obj: ObjectId, _key: u64) -> u32 {
+            0
+        }
+        fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
+            if obj == TREE {
+                ObjectKind::BTree
+            } else {
+                ObjectKind::Mica
+            }
+        }
+    }
+
+    fn leaf_read(key: u64, version: Version, lock_tx: u64) -> TxInput {
+        TxInput::Read(ReadView::Leaf(Some(crate::ds::btree::LeafView {
+            low: key,
+            high: key + 1,
+            version,
+            lock_tx,
+            entries: vec![(key, key)],
+        })))
+    }
+
+    fn leaf_header(low: u64, high: u64, version: Version, lock_tx: u64) -> TxInput {
+        TxInput::Read(ReadView::LeafHeader(Some(crate::ds::btree::LeafHeader {
+            low,
+            high,
+            version,
+            lock_tx,
+        })))
+    }
+
+    /// Drive a mixed MICA+BTree read pair to its validation batch and
+    /// return the engine (validation posts issued, none completed).
+    fn mixed_tx_at_validation(tx_id: u64) -> (TxEngine, Vec<TxPost>) {
+        let mut cb = HeteroCb;
+        let mut tx = TxEngine::begin(
+            tx_id,
+            vec![TxItem::read(KV, 3), TxItem::read(TREE, 5)],
+            vec![TxItem::update(KV, 9)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 3, "two lookups + one lock-read");
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+        let validates = issued(tx.complete(&mut cb, 1, leaf_read(5, 7, 0)));
+        assert_eq!(validates.len(), 2, "both kinds validate in one batch");
+        // Per-kind validation read sizes ride the same volley.
+        let lens: Vec<u32> = validates
+            .iter()
+            .map(|p| match &p.op {
+                TxOp::Read { len, .. } => *len,
+                other => panic!("validation must be a read, got {other:?}"),
+            })
+            .collect();
+        assert!(lens.contains(&VALIDATE_READ_BYTES), "MICA item-header read");
+        assert!(lens.contains(&LEAF_VALIDATE_BYTES), "B-link leaf-header read");
+        (tx, validates)
+    }
+
+    #[test]
+    fn mixed_kind_tx_validates_leaf_headers_and_commits() {
+        let mut cb = HeteroCb;
+        let (mut tx, _) = mixed_tx_at_validation(21);
+        assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+        // Leaf unchanged (same fences, same version, unlocked): passes.
+        let commits = issued(tx.complete(&mut cb, 1, leaf_header(5, 6, 7, 0)));
+        assert_eq!(commits.len(), 1);
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn leaf_fence_miss_aborts_with_validation_moved() {
+        let mut cb = HeteroCb;
+        let (mut tx, _) = mixed_tx_at_validation(22);
+        assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+        // A concurrent split narrowed the leaf: key 5 >= high fence 5.
+        let unlocks = issued(tx.complete(&mut cb, 1, leaf_header(0, 5, 8, 0)));
+        assert_eq!(unlocks.len(), 1, "held MICA lock released on abort");
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationMoved));
+    }
+
+    #[test]
+    fn leaf_version_change_and_foreign_lock_abort() {
+        for (header, reason) in [
+            (leaf_header(5, 6, 8, 0), AbortReason::ValidationVersion),
+            (leaf_header(5, 6, 7, 999), AbortReason::ValidationLocked),
+        ] {
+            let mut cb = HeteroCb;
+            let (mut tx, _) = mixed_tx_at_validation(23);
+            assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+            let unlocks = issued(tx.complete(&mut cb, 1, header));
+            assert_eq!(unlocks.len(), 1);
+            let out = finished(tx.complete(
+                &mut cb,
+                0,
+                TxInput::Rpc(RpcResponse::inline(RpcResult::Ok)),
+            ));
+            assert_eq!(out, TxOutcome::Aborted(reason));
+        }
+    }
+
+    #[test]
+    fn own_leaf_lock_does_not_abort_validation() {
+        // The engine's own tx id in the leaf lock word (a write-set key
+        // sharing the read key's leaf) must not read as a foreign lock.
+        let mut cb = HeteroCb;
+        let (mut tx, _) = mixed_tx_at_validation(24);
+        assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+        let commits = issued(tx.complete(&mut cb, 1, leaf_header(5, 6, 7, 24)));
+        assert_eq!(commits.len(), 1, "own leaf lock passes validation");
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn dead_leaf_header_aborts_moved() {
+        let mut cb = HeteroCb;
+        let (mut tx, _) = mixed_tx_at_validation(25);
+        assert!(issued(tx.complete(&mut cb, 0, item_read(3, 2, false))).is_empty());
+        let unlocks = issued(tx.complete(&mut cb, 1, TxInput::Read(ReadView::LeafHeader(None))));
+        assert_eq!(unlocks.len(), 1);
+        let out =
+            finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationMoved));
     }
 }

@@ -1,5 +1,8 @@
 //! Remote B-link tree (paper §5.5: "For trees, the clients could cache
-//! higher levels of the tree to improve traversals").
+//! higher levels of the tree to improve traversals") — **transactional**
+//! since PR 5: leaves carry an OCC version+lock header word, so the
+//! FaRM-style protocol (lock → validate versions → commit) extends to
+//! tree-shaped objects at leaf granularity.
 //!
 //! Inner nodes are routing-only and live on the owner; clients cache a
 //! flattened view of them — a fence-keyed map from key ranges to **leaf
@@ -14,22 +17,49 @@
 //! one-sided again; retries are bounded by construction (read → RPC →
 //! done, never read → read).
 //!
+//! **Leaf-granularity OCC.** Each leaf's wire image starts with a
+//! [`LEAF_HEADER_BYTES`]-byte header — fences, version, and a lock word
+//! naming the owning transaction — so:
+//!
+//! * a write-set item locks the *leaf* covering its key
+//!   ([`RemoteBTree::lock_read`]); concurrent inserts and deletes into a
+//!   locked leaf are refused with `LockConflict`, which freezes the
+//!   leaf's membership (no split can relocate keys out from under a
+//!   held lock);
+//! * a read-set item validates with a one-sided
+//!   [`LEAF_HEADER_BYTES`]-byte read of its cached leaf address
+//!   ([`parse_leaf_header`]): fences that no longer cover the key mean a
+//!   concurrent split relocated it (`ValidationMoved`), a changed
+//!   version means the leaf mutated, a foreign lock word means a writer
+//!   holds it;
+//! * commit installs the new value and bumps the leaf version
+//!   ([`RemoteBTree::update_unlock`]). Several keys of one transaction
+//!   may share a leaf: the owner tracks which keys acquired the lock
+//!   (`locked_keys`) and releases the lock word only when the last one
+//!   commits or unlocks, so intra-transaction commit volleys cannot
+//!   drop the lock early.
+//!
 //! Leaves serialize to fixed [`LEAF_BYTES`]-byte wire images
 //! ([`RemoteBTree::leaf_image`] / [`parse_leaf_view`]) so the live
 //! catalog can mirror leaf `i` at `base + i * LEAF_BYTES` inside the
 //! node's packed data region, exactly like a MICA bucket array.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::ds::api::{RpcResponse, RpcResult};
+use crate::ds::api::{LookupHint, LookupOutcome, RpcResponse, RpcResult};
 use crate::mem::{MrKey, RegionTable, RemoteAddr};
 
 const LEAF_CAP: usize = 16;
 const INNER_CAP: usize = 16;
 
-/// Wire bytes of one serialized leaf: low(8) + high(8) + version(4) +
-/// count(4) + [`LEAF_CAP`] (key, value) pairs, padded to a power of two.
+/// Wire bytes of one serialized leaf: the [`LEAF_HEADER_BYTES`] header
+/// (low(8) + high(8) + version(4) + count(4) + lock_tx(8)) followed by
+/// [`LEAF_CAP`] (key, value) pairs, padded to a power of two.
 pub const LEAF_BYTES: u32 = 512;
+
+/// Wire bytes of the leaf header an OCC validation read fetches: the two
+/// fence keys, the version word, the entry count, and the lock word.
+pub const LEAF_HEADER_BYTES: u32 = 32;
 
 /// Default leaf capacity of [`RemoteBTree::new`] (the pre-catalog
 /// constructor; catalog-hosted trees size themselves via
@@ -59,15 +89,39 @@ pub struct LeafView {
     pub low: u64,
     /// High fence key (exclusive; `u64::MAX` = unbounded).
     pub high: u64,
-    /// Leaf version (bumped on every mutation incl. splits).
+    /// Leaf version (bumped on every mutation incl. splits; never by
+    /// lock/unlock alone).
     pub version: u32,
+    /// OCC lock word: the transaction id holding the leaf write lock
+    /// (0 = unlocked).
+    pub lock_tx: u64,
     /// Sorted (key, value) pairs.
     pub entries: Vec<(u64, u64)>,
+}
+
+/// What a fine-grained [`LEAF_HEADER_BYTES`]-byte validation read of a
+/// leaf returns: everything OCC needs (fences for the moved check,
+/// version, lock word) without the entry payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeafHeader {
+    /// Low fence key (inclusive).
+    pub low: u64,
+    /// High fence key (exclusive).
+    pub high: u64,
+    /// Leaf version.
+    pub version: u32,
+    /// Lock word (owning transaction id; 0 = unlocked).
+    pub lock_tx: u64,
 }
 
 #[derive(Clone, Debug)]
 struct Leaf {
     view: LeafView,
+    /// Keys whose `lock_read` acquired the leaf lock (server-side only;
+    /// the wire carries just the owner word). The lock word clears when
+    /// the last of them commits or unlocks, so one transaction locking
+    /// several keys of one leaf cannot release it early.
+    locked_keys: Vec<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -118,7 +172,14 @@ impl RemoteBTree {
         RemoteBTree {
             inners: Vec::new(),
             leaves: vec![Leaf {
-                view: LeafView { low: 0, high: u64::MAX, version: 1, entries: Vec::new() },
+                view: LeafView {
+                    low: 0,
+                    high: u64::MAX,
+                    version: 1,
+                    lock_tx: 0,
+                    entries: Vec::new(),
+                },
+                locked_keys: Vec::new(),
             }],
             root: NodeId::Leaf(0),
             height: 1,
@@ -184,6 +245,24 @@ impl RemoteBTree {
         self.leaves.get(idx).map(|l| l.view.clone())
     }
 
+    /// What a fine-grained [`LEAF_HEADER_BYTES`]-byte validation read of
+    /// the leaf at `addr` returns (None if out of range). Built straight
+    /// from the leaf fields — this sits on the per-transaction
+    /// validation hot path, so it must not clone the entry payload the
+    /// way a full leaf view does.
+    pub fn leaf_header(&self, addr: RemoteAddr) -> Option<LeafHeader> {
+        if addr.region != self.region {
+            return None;
+        }
+        let idx = (addr.offset / LEAF_BYTES as u64) as usize;
+        self.leaves.get(idx).map(|l| LeafHeader {
+            low: l.view.low,
+            high: l.view.high,
+            version: l.view.version,
+            lock_tx: l.view.lock_tx,
+        })
+    }
+
     /// Server-side get.
     pub fn get(&self, key: u64) -> Option<u64> {
         let l = self.descend(key);
@@ -205,7 +284,7 @@ impl RemoteBTree {
                     version: view.version,
                     addr: RemoteAddr { region: self.region, offset: l as u64 * LEAF_BYTES as u64 },
                     value: Some(self.leaf_image(l)),
-                    locked: false,
+                    locked: view.lock_tx != 0,
                 },
                 hops,
             }
@@ -214,12 +293,139 @@ impl RemoteBTree {
         }
     }
 
+    /// OCC execute phase for a write-set key: lock the covering **leaf**
+    /// for transaction `tx_id` and report the leaf version the commit
+    /// will validate against. `LockConflict` when another transaction
+    /// holds the leaf; re-entrant for the same transaction (several
+    /// write-set keys may share a leaf — each records its own hold).
+    /// `NotFound` (nothing locked) when the key is absent.
+    pub fn lock_read(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        assert!(tx_id != 0, "tx id 0 is the unlocked marker");
+        self.dirty.clear();
+        let l = self.descend(key) as usize;
+        let leaf = &mut self.leaves[l];
+        if !leaf.view.entries.iter().any(|(k, _)| *k == key) {
+            return RpcResult::NotFound;
+        }
+        if leaf.view.lock_tx != 0 && leaf.view.lock_tx != tx_id {
+            return RpcResult::LockConflict;
+        }
+        leaf.view.lock_tx = tx_id;
+        if !leaf.locked_keys.contains(&key) {
+            leaf.locked_keys.push(key);
+        }
+        // The lock word changed on the wire image (version did not).
+        self.dirty.push(l as u32);
+        RpcResult::Value {
+            version: self.leaves[l].view.version,
+            addr: RemoteAddr { region: self.region, offset: l as u64 * LEAF_BYTES as u64 },
+            value: None,
+            locked: false,
+        }
+    }
+
+    /// OCC commit for a write-set key: install the new value, bump the
+    /// leaf version, and drop this key's hold on the leaf lock (the lock
+    /// word clears when the last held key commits or unlocks).
+    /// `NotFound` when the key has no entry — matching the MICA
+    /// update_unlock, and regardless of the leaf's lock state (a
+    /// lock-read that found nothing also locked nothing, though a
+    /// same-volley delete may have removed the entry after its hold was
+    /// taken — that hold still drops). `LockConflict` when the entry
+    /// exists but the leaf is not locked by `tx_id`.
+    pub fn update_unlock(&mut self, key: u64, tx_id: u64, value: u64) -> RpcResult {
+        self.dirty.clear();
+        let l = self.descend(key) as usize;
+        let leaf = &mut self.leaves[l];
+        let owned = leaf.view.lock_tx == tx_id;
+        let mut dirtied = false;
+        // Drop this key's hold first (only the owner can hold one): a
+        // delete in the same commit volley may already have removed the
+        // entry, but the hold from its lock-read must still drop or the
+        // leaf stays locked forever.
+        if owned {
+            if let Some(p) = leaf.locked_keys.iter().position(|&k| k == key) {
+                leaf.locked_keys.swap_remove(p);
+                if leaf.locked_keys.is_empty() {
+                    leaf.view.lock_tx = 0;
+                }
+                dirtied = true;
+            }
+        }
+        let res = match leaf.view.entries.binary_search_by_key(&key, |&(k, _)| k) {
+            Ok(pos) if owned => {
+                leaf.view.entries[pos].1 = value;
+                leaf.view.version += 1;
+                dirtied = true;
+                RpcResult::Ok
+            }
+            // Present but the leaf is not ours (foreign lock, or never
+            // locked because the key was absent at lock-read time and
+            // appeared since): refuse, exactly like the MICA slot check.
+            Ok(_) => RpcResult::LockConflict,
+            Err(_) => RpcResult::NotFound,
+        };
+        if dirtied {
+            self.dirty.push(l as u32);
+        }
+        res
+    }
+
+    /// OCC abort path: drop `key`'s hold on its leaf lock (clearing the
+    /// lock word with the last hold). Lenient like the MICA unlock —
+    /// foreign or absent locks are left untouched and still answer `Ok`.
+    pub fn unlock(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        self.dirty.clear();
+        let l = self.descend(key) as usize;
+        let leaf = &mut self.leaves[l];
+        if leaf.view.lock_tx == tx_id {
+            if let Some(p) = leaf.locked_keys.iter().position(|&k| k == key) {
+                leaf.locked_keys.swap_remove(p);
+            }
+            if leaf.locked_keys.is_empty() {
+                leaf.view.lock_tx = 0;
+            }
+            self.dirty.push(l as u32);
+        }
+        RpcResult::Ok
+    }
+
+    /// Delete a key (no leaf merging — emptied leaves keep their fences,
+    /// so cached routes stay valid). Refused with `LockConflict` when the
+    /// covering leaf is write-locked by a *different* transaction;
+    /// `tx_id` 0 is the non-transactional caller.
+    pub fn try_delete(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        self.dirty.clear();
+        let l = self.descend(key) as usize;
+        let leaf = &mut self.leaves[l];
+        if leaf.view.lock_tx != 0 && leaf.view.lock_tx != tx_id {
+            return RpcResult::LockConflict;
+        }
+        match leaf.view.entries.binary_search_by_key(&key, |&(k, _)| k) {
+            Ok(pos) => {
+                leaf.view.entries.remove(pos);
+                leaf.view.version += 1;
+                self.count -= 1;
+                self.dirty.push(l as u32);
+                RpcResult::Ok
+            }
+            Err(_) => RpcResult::NotFound,
+        }
+    }
+
     /// Insert (owner side; reached via RPC). `Full` when the leaf array
     /// is at capacity and the insert would split — nothing is mutated in
-    /// that case, so callers can propagate the typed error.
+    /// that case, so callers can propagate the typed error. Inserts into
+    /// a write-locked leaf are refused with `LockConflict` — **including
+    /// the lock holder's own** — so a held leaf can never split and its
+    /// membership is frozen for the lock's lifetime (what makes
+    /// leaf-version validation and update-after-lock sound).
     pub fn try_insert(&mut self, key: u64, value: u64) -> RpcResult {
         self.dirty.clear();
         let l = self.descend(key) as usize;
+        if self.leaves[l].view.lock_tx != 0 {
+            return RpcResult::LockConflict;
+        }
         let must_split = self.leaves[l].view.entries.len() >= LEAF_CAP
             && !self.leaves[l].view.entries.iter().any(|(k, _)| *k == key);
         if must_split && self.leaves.len() as u64 >= self.max_leaves {
@@ -253,6 +459,9 @@ impl RemoteBTree {
     fn split_leaf(&mut self, l: u32) {
         let (mid_key, right_view) = {
             let leaf = &mut self.leaves[l as usize].view;
+            // Inserts into a locked leaf are refused, so a splitting leaf
+            // is always unlocked and membership never moves under a lock.
+            debug_assert_eq!(leaf.lock_tx, 0, "a locked leaf must never split");
             let mid = leaf.entries.len() / 2;
             let right_entries = leaf.entries.split_off(mid);
             let mid_key = right_entries[0].0;
@@ -260,6 +469,7 @@ impl RemoteBTree {
                 low: mid_key,
                 high: leaf.high,
                 version: 1,
+                lock_tx: 0,
                 entries: right_entries,
             };
             leaf.high = mid_key;
@@ -267,7 +477,7 @@ impl RemoteBTree {
             (mid_key, right)
         };
         let new_leaf = self.leaves.len() as u32;
-        self.leaves.push(Leaf { view: right_view });
+        self.leaves.push(Leaf { view: right_view, locked_keys: Vec::new() });
         self.dirty.push(new_leaf);
         self.insert_sep(mid_key, NodeId::Leaf(l), NodeId::Leaf(new_leaf));
     }
@@ -322,7 +532,8 @@ impl RemoteBTree {
     }
 
     /// Serialize leaf `l` to its [`LEAF_BYTES`]-byte wire image (what a
-    /// one-sided read of the mirrored leaf array returns).
+    /// one-sided read of the mirrored leaf array returns): the
+    /// [`LEAF_HEADER_BYTES`] OCC header followed by the entries.
     pub fn leaf_image(&self, l: u32) -> Vec<u8> {
         let view = &self.leaves[l as usize].view;
         let mut out = vec![0u8; LEAF_BYTES as usize];
@@ -330,8 +541,9 @@ impl RemoteBTree {
         out[8..16].copy_from_slice(&view.high.to_le_bytes());
         out[16..20].copy_from_slice(&view.version.to_le_bytes());
         out[20..24].copy_from_slice(&(view.entries.len() as u32).to_le_bytes());
+        out[24..32].copy_from_slice(&view.lock_tx.to_le_bytes());
         for (i, &(k, v)) in view.entries.iter().enumerate() {
-            let at = 24 + i * 16;
+            let at = LEAF_HEADER_BYTES as usize + i * 16;
             out[at..at + 8].copy_from_slice(&k.to_le_bytes());
             out[at + 8..at + 16].copy_from_slice(&v.to_le_bytes());
         }
@@ -357,26 +569,45 @@ impl RemoteBTree {
 /// including the all-zero image of a never-written mirror slot (a valid
 /// leaf always has `high > low`) and truncated or corrupt frames.
 pub fn parse_leaf_view(bytes: &[u8]) -> Option<LeafView> {
-    if bytes.len() < 24 {
-        return None;
-    }
-    let low = u64::from_le_bytes(bytes[0..8].try_into().ok()?);
-    let high = u64::from_le_bytes(bytes[8..16].try_into().ok()?);
-    let version = u32::from_le_bytes(bytes[16..20].try_into().ok()?);
+    let hdr = parse_leaf_header(bytes)?;
     let count = u32::from_le_bytes(bytes[20..24].try_into().ok()?) as usize;
-    if high <= low || count * 16 + 24 > bytes.len() {
+    if count * 16 + LEAF_HEADER_BYTES as usize > bytes.len() {
         return None;
     }
     let entries = (0..count)
         .map(|i| {
-            let at = 24 + i * 16;
+            let at = LEAF_HEADER_BYTES as usize + i * 16;
             (
                 u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()),
                 u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap()),
             )
         })
         .collect();
-    Some(LeafView { low, high, version, entries })
+    Some(LeafView {
+        low: hdr.low,
+        high: hdr.high,
+        version: hdr.version,
+        lock_tx: hdr.lock_tx,
+        entries,
+    })
+}
+
+/// Parse the [`LEAF_HEADER_BYTES`]-byte OCC header of a leaf wire image
+/// (what a validation read fetches). `None` for bytes that are not a
+/// live leaf header — the all-zero image of a never-written mirror slot
+/// fails the `high > low` check, which validation treats as "moved".
+pub fn parse_leaf_header(bytes: &[u8]) -> Option<LeafHeader> {
+    if bytes.len() < LEAF_HEADER_BYTES as usize {
+        return None;
+    }
+    let low = u64::from_le_bytes(bytes[0..8].try_into().ok()?);
+    let high = u64::from_le_bytes(bytes[8..16].try_into().ok()?);
+    let version = u32::from_le_bytes(bytes[16..20].try_into().ok()?);
+    let lock_tx = u64::from_le_bytes(bytes[24..32].try_into().ok()?);
+    if high <= low {
+        return None;
+    }
+    Some(LeafHeader { low, high, version, lock_tx })
 }
 
 /// Client-side cached routing: fence-keyed map from key ranges to leaf
@@ -481,6 +712,101 @@ impl BTreeClientCache {
             }
             _ => TreeLookupOutcome::NeedRpc,
         }
+    }
+}
+
+/// The full client-side B-link lookup resolver every driver shares (the
+/// reference driver, the simulator, and the live loopback path): one
+/// fence-keyed route cache per owner node (each node hosts its own tree
+/// over its key partition, so a cached leaf address is only meaningful on
+/// its node), driving the cached-route traversal — route locally, read
+/// one leaf, fall back to an RPC re-traversal on a fence miss and repair
+/// the route from the reply's leaf image.
+pub struct BTreeRouteResolver {
+    routes: Vec<BTreeClientCache>,
+    /// Leaf wire bytes (the one-sided read size).
+    leaf_bytes: u32,
+    /// Leaf address each in-flight read was actually issued to, keyed by
+    /// key: `start` records it, `end_read` consumes it. The route cache
+    /// may be repaired by *other* keys' completions while a read is in
+    /// flight, so re-querying `route(key)` at completion could name a
+    /// different leaf than the bytes in hand — hits and fence-miss
+    /// repairs must bind to the read's own address.
+    pending: HashMap<u64, RemoteAddr>,
+}
+
+impl BTreeRouteResolver {
+    /// Resolver over `nodes` per-node route caches, issuing
+    /// `leaf_bytes`-sized one-sided leaf reads.
+    pub fn new(nodes: u32, leaf_bytes: u32) -> Self {
+        BTreeRouteResolver {
+            routes: (0..nodes).map(|_| BTreeClientCache::default()).collect(),
+            leaf_bytes,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// `lookup_start`: a warm route answers with one leaf read; a cold
+    /// (or invalidated) one declines, and the lookup starts with the RPC
+    /// re-traversal that warms it.
+    pub fn start(&mut self, node: u32, key: u64) -> Option<LookupHint> {
+        self.routes[node as usize].route(key).map(|addr| {
+            self.pending.insert(key, addr);
+            LookupHint { node, addr, len: self.leaf_bytes }
+        })
+    }
+
+    /// `lookup_end` over a one-sided leaf read: hit / provable absence /
+    /// fence miss. On a miss the stale entry is narrowed to the fences
+    /// the read returned — bound to the address actually read — and the
+    /// RPC reply installs the range the key moved to; the retry budget
+    /// is one by construction (read → RPC → done, never read → read).
+    pub fn end_read(&mut self, node: u32, key: u64, leaf: Option<&LeafView>) -> LookupOutcome {
+        // The address this read was issued to (NOT a fresh route(key):
+        // same-batch repairs may have rebound the range to a different
+        // leaf since the read went out).
+        let read_addr = self.pending.remove(&key);
+        match BTreeClientCache::check(key, leaf) {
+            TreeLookupOutcome::Hit(_) => {
+                let v = leaf.as_ref().expect("hit implies a parsed leaf");
+                match read_addr {
+                    Some(addr) => LookupOutcome::Hit {
+                        version: v.version,
+                        addr,
+                        locked: v.lock_tx != 0,
+                    },
+                    // Untracked read (duplicate key in one batch): let
+                    // the owner resolve it.
+                    None => LookupOutcome::NeedRpc,
+                }
+            }
+            TreeLookupOutcome::Absent => LookupOutcome::Absent,
+            TreeLookupOutcome::NeedRpc => {
+                match (leaf, read_addr) {
+                    (Some(v), Some(addr)) => {
+                        self.routes[node as usize].install_leaf(v.low, v.high, addr)
+                    }
+                    _ => self.routes[node as usize].invalidate(key),
+                }
+                LookupOutcome::NeedRpc
+            }
+        }
+    }
+
+    /// `lookup_end` after an RPC: the reply's value payload is the
+    /// covering leaf's wire image — its fence keys install the fresh
+    /// route, so the next lookup in this range is one-sided again.
+    pub fn end_rpc(&mut self, node: u32, resp: &RpcResponse) {
+        if let RpcResult::Value { addr, value: Some(bytes), .. } = &resp.result {
+            if let Some(view) = parse_leaf_view(bytes) {
+                self.routes[node as usize].install_leaf(view.low, view.high, *addr);
+            }
+        }
+    }
+
+    /// Install a full routing snapshot for one node's tree.
+    pub fn install(&mut self, node: u32, snapshot: Vec<(u64, RemoteAddr)>) {
+        self.routes[node as usize].install(snapshot);
     }
 }
 
@@ -674,6 +1000,175 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert!(matches!(t.read_rpc(999_999).result, RpcResult::NotFound));
+    }
+
+    #[test]
+    fn leaf_header_parses_and_matches_full_image() {
+        let mut t = mk();
+        for k in 1..=200u64 {
+            t.insert(k, k);
+        }
+        t.lock_read(1, 42);
+        for l in 0..t.leaf_count() as u32 {
+            let img = t.leaf_image(l);
+            let hdr = parse_leaf_header(&img[..LEAF_HEADER_BYTES as usize])
+                .expect("live leaf header parses");
+            let view = parse_leaf_view(&img).unwrap();
+            assert_eq!(
+                (hdr.low, hdr.high, hdr.version, hdr.lock_tx),
+                (view.low, view.high, view.version, view.lock_tx),
+                "leaf {l} header diverges from its image"
+            );
+        }
+        // The lock word of key 1's leaf is visible in the header read.
+        let addr = t.leaf_addr(1);
+        assert_eq!(t.leaf_header(addr).unwrap().lock_tx, 42);
+        // A never-written slot is not a header; truncation is rejected.
+        assert_eq!(parse_leaf_header(&[0u8; LEAF_HEADER_BYTES as usize]), None);
+        assert_eq!(parse_leaf_header(&[1, 2, 3]), None);
+    }
+
+    #[test]
+    fn leaf_lock_protocol_locks_validate_and_commit() {
+        let mut t = mk();
+        for k in 1..=10u64 {
+            t.insert(k, k);
+        }
+        let v0 = t.leaf_view(t.leaf_addr(5)).unwrap().version;
+        // Lock: version reported, lock word set, version NOT bumped.
+        match t.lock_read(5, 100) {
+            RpcResult::Value { version, .. } => assert_eq!(version, v0),
+            other => panic!("unexpected {other:?}"),
+        }
+        let view = t.leaf_view(t.leaf_addr(5)).unwrap();
+        assert_eq!((view.version, view.lock_tx), (v0, 100));
+        // Foreign lock conflicts; re-entrant same-tx lock is fine.
+        assert_eq!(t.lock_read(5, 200), RpcResult::LockConflict);
+        assert!(matches!(t.lock_read(5, 100), RpcResult::Value { .. }));
+        // Wrong owner cannot commit.
+        assert_eq!(t.update_unlock(5, 999, 55), RpcResult::LockConflict);
+        // Commit: value installed, version bumped, lock released.
+        assert_eq!(t.update_unlock(5, 100, 55), RpcResult::Ok);
+        let view = t.leaf_view(t.leaf_addr(5)).unwrap();
+        assert_eq!((view.version, view.lock_tx), (v0 + 1, 0));
+        assert_eq!(t.get(5), Some(55));
+        // Absent key: nothing locked, nothing to validate against.
+        assert_eq!(t.lock_read(999_999, 100), RpcResult::NotFound);
+        assert_eq!(t.leaf_view(t.leaf_addr(999_999)).unwrap().lock_tx, 0);
+    }
+
+    #[test]
+    fn several_keys_of_one_leaf_release_the_lock_last() {
+        let mut t = mk();
+        // A fresh tree is a single leaf: both keys share it.
+        t.insert(3, 3);
+        t.insert(7, 7);
+        assert!(matches!(t.lock_read(3, 9), RpcResult::Value { .. }));
+        assert!(matches!(t.lock_read(7, 9), RpcResult::Value { .. }));
+        assert_eq!(t.update_unlock(3, 9, 30), RpcResult::Ok);
+        // One hold remains: still locked against foreign transactions.
+        assert_eq!(t.leaf_view(t.leaf_addr(7)).unwrap().lock_tx, 9);
+        assert_eq!(t.lock_read(7, 10), RpcResult::LockConflict);
+        assert_eq!(t.update_unlock(7, 9, 70), RpcResult::Ok);
+        assert_eq!(t.leaf_view(t.leaf_addr(7)).unwrap().lock_tx, 0);
+        assert_eq!((t.get(3), t.get(7)), (Some(30), Some(70)));
+        // Abort path: unlock drops holds the same way.
+        assert!(matches!(t.lock_read(3, 11), RpcResult::Value { .. }));
+        assert!(matches!(t.lock_read(7, 11), RpcResult::Value { .. }));
+        assert_eq!(t.unlock(3, 11), RpcResult::Ok);
+        assert_eq!(t.leaf_view(t.leaf_addr(3)).unwrap().lock_tx, 11);
+        assert_eq!(t.unlock(7, 11), RpcResult::Ok);
+        let after = t.leaf_view(t.leaf_addr(3)).unwrap();
+        assert_eq!(after.lock_tx, 0);
+        // 2 inserts + 2 commits bumped the version; locks/unlocks never.
+        assert_eq!(after.version, 1 + 2 + 2);
+    }
+
+    #[test]
+    fn locked_leaf_refuses_inserts_and_foreign_deletes() {
+        let mut t = mk();
+        for k in 1..=10u64 {
+            t.insert(k, k);
+        }
+        assert!(matches!(t.lock_read(5, 77), RpcResult::Value { .. }));
+        // Membership frozen: inserts (even the holder's own) and foreign
+        // deletes are refused, so no split can relocate a locked key.
+        assert_eq!(t.try_insert(500, 500), RpcResult::LockConflict);
+        assert_eq!(t.try_delete(4, 0), RpcResult::LockConflict);
+        assert_eq!(t.try_delete(4, 99), RpcResult::LockConflict);
+        // The holder itself may delete within its lock.
+        assert_eq!(t.try_delete(4, 77), RpcResult::Ok);
+        assert_eq!(t.get(4), None);
+        assert_eq!(t.update_unlock(5, 77, 50), RpcResult::Ok);
+        // Unlocked again: plain inserts and deletes work.
+        assert_eq!(t.try_insert(500, 500), RpcResult::Ok);
+        assert_eq!(t.try_delete(500, 0), RpcResult::Ok);
+    }
+
+    #[test]
+    fn delete_then_update_of_same_key_still_releases_the_lock() {
+        // The engine does not dedup mixed write kinds on one key, so a
+        // commit volley may delete an entry and then run its UpdateUnlock.
+        // The update must answer NotFound AND drop the key's lock hold —
+        // a leaked hold would lock the leaf forever.
+        let mut t = mk();
+        t.insert(2, 2);
+        assert!(matches!(t.lock_read(2, 5), RpcResult::Value { .. }));
+        assert_eq!(t.try_delete(2, 5), RpcResult::Ok);
+        assert_eq!(t.update_unlock(2, 5, 9), RpcResult::NotFound);
+        assert_eq!(t.leaf_view(t.leaf_addr(2)).unwrap().lock_tx, 0, "hold leaked");
+        // And the inverse: an update of a key that was absent at lock
+        // time (no hold) must not release holds it never took.
+        t.insert(3, 3);
+        assert!(matches!(t.lock_read(3, 6), RpcResult::Value { .. }));
+        assert_eq!(t.lock_read(4, 6), RpcResult::NotFound);
+        assert_eq!(t.update_unlock(4, 6, 9), RpcResult::NotFound);
+        assert_eq!(t.leaf_view(t.leaf_addr(3)).unwrap().lock_tx, 6, "hold dropped early");
+        assert_eq!(t.update_unlock(3, 6, 9), RpcResult::Ok);
+        assert_eq!(t.leaf_view(t.leaf_addr(3)).unwrap().lock_tx, 0);
+    }
+
+    #[test]
+    fn route_resolver_traverses_and_repairs() {
+        let mut t = mk();
+        for k in (0..300u64).map(|i| i * 10 + 1) {
+            t.insert(k, k);
+        }
+        let mut r = BTreeRouteResolver::new(1, LEAF_BYTES);
+        // Cold: no route — the lookup starts with an RPC that warms it.
+        assert!(r.start(0, 11).is_none());
+        r.end_rpc(0, &t.read_rpc(11));
+        let hint = r.start(0, 11).expect("route installed by the RPC reply");
+        assert_eq!(hint.len, LEAF_BYTES);
+        let view = t.leaf_view(hint.addr);
+        match r.end_read(0, 11, view.as_ref()) {
+            LookupOutcome::Hit { version, addr, .. } => {
+                assert_eq!(addr, hint.addr);
+                assert_eq!(version, view.unwrap().version);
+            }
+            other => panic!("warm route must hit, got {other:?}"),
+        }
+        // Split the covering range; the stale route fence-misses, narrows
+        // itself, and the repair makes the next lookup one-sided again.
+        for k in 2..=200u64 {
+            t.insert(k, k);
+        }
+        let mut repaired = false;
+        for k in (0..200u64).map(|i| i * 10 + 1) {
+            let Some(h) = r.start(0, k) else { continue };
+            let v = t.leaf_view(h.addr);
+            if matches!(r.end_read(0, k, v.as_ref()), LookupOutcome::NeedRpc) {
+                r.end_rpc(0, &t.read_rpc(k));
+                let h2 = r.start(0, k).expect("repair must reinstall the route");
+                let v2 = t.leaf_view(h2.addr);
+                assert!(
+                    matches!(r.end_read(0, k, v2.as_ref()), LookupOutcome::Hit { .. }),
+                    "repaired route must hit key {k}"
+                );
+                repaired = true;
+            }
+        }
+        assert!(repaired, "splits must have staled some routes");
     }
 
     #[test]

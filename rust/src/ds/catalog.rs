@@ -57,13 +57,16 @@ pub fn buckets_for(rows: u64, width: u32) -> u64 {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ObjectKind {
     /// MICA hash table: fine-grained bucket reads, overflow chains,
-    /// full transactional opcode set.
+    /// full transactional opcode set at item granularity.
     Mica,
     /// B-link tree: client-cached inner levels, one leaf read per
-    /// lookup, RPC re-traversal on fence miss. Read/Insert only.
+    /// lookup, RPC re-traversal on fence miss. Serves the full
+    /// transactional opcode set at **leaf** granularity since PR 5
+    /// (leaf version+lock header word; see [`crate::ds::btree`]).
     BTree,
     /// Hopscotch table: one `H * item_size` neighborhood read per lookup
-    /// (the FaRM baseline's coarse read). Read/Insert/Delete only.
+    /// (the FaRM baseline's coarse read). Read/Insert/Delete only — the
+    /// one kind still outside the transactional opcode set.
     Hopscotch,
 }
 
@@ -203,7 +206,7 @@ pub enum Backend {
 
 impl Backend {
     /// Printable kind name (diagnostics).
-    fn kind_name(&self) -> &'static str {
+    pub fn kind_name(&self) -> &'static str {
         match self {
             Backend::Mica(_) => "Mica",
             Backend::BTree(_) => "BTree",
@@ -374,7 +377,7 @@ impl Catalog {
         match &mut backends[obj.0 as usize] {
             Backend::Mica(t) => t.insert(key, value, alloc, regions),
             Backend::BTree(t) => t.try_insert(key, value_u64(key, value)),
-            Backend::Hopscotch(t) => t.insert(key),
+            Backend::Hopscotch(t) => t.insert(key, value),
             Backend::Absent => RpcResult::Unsupported,
         }
     }
@@ -389,6 +392,16 @@ impl Catalog {
         let Some(backend) = backends.get_mut(req.obj.0 as usize) else {
             return RpcResponse::inline(RpcResult::Unsupported);
         };
+        // Transactional opcodes require a nonzero lock-owner token: 0 is
+        // the unlocked marker, so a frame carrying it could acquire or
+        // release nothing meaningful — worse, an UpdateUnlock with owner
+        // 0 would bypass the lock check on an unlocked item. Typed
+        // dispatch error, never a panic (the wire accepts any tx id).
+        if req.tx_id == 0
+            && matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock)
+        {
+            return RpcResponse::inline(RpcResult::Unsupported);
+        }
         match backend {
             Backend::Mica(table) => match req.op {
                 RpcOp::Read => {
@@ -416,16 +429,28 @@ impl Catalog {
                     RpcResponse { result, hops }
                 }
             },
-            Backend::BTree(tree) => match req.op {
-                RpcOp::Read => tree.read_rpc(req.key),
-                RpcOp::Insert => RpcResponse::inline(
-                    tree.try_insert(req.key, value_u64(req.key, req.value.as_deref())),
-                ),
-                // No locks, no in-place update/unlock, no delete: the
-                // tree serves the lookup path (paper §5.5), not the
-                // transactional opcode set.
-                _ => RpcResponse::inline(RpcResult::Unsupported),
-            },
+            Backend::BTree(tree) => {
+                // The full transactional opcode set at leaf granularity
+                // (PR 5): locks, commits and unlocks address the leaf
+                // covering the key, and every op charges the descent the
+                // owner CPU performed.
+                let hops = tree.height();
+                let result = match req.op {
+                    RpcOp::Read => return tree.read_rpc(req.key),
+                    RpcOp::LockRead => tree.lock_read(req.key, req.tx_id),
+                    RpcOp::UpdateUnlock => tree.update_unlock(
+                        req.key,
+                        req.tx_id,
+                        value_u64(req.key, req.value.as_deref()),
+                    ),
+                    RpcOp::Unlock => tree.unlock(req.key, req.tx_id),
+                    RpcOp::Insert => {
+                        tree.try_insert(req.key, value_u64(req.key, req.value.as_deref()))
+                    }
+                    RpcOp::Delete => tree.try_delete(req.key, req.tx_id),
+                };
+                RpcResponse { result, hops }
+            }
             Backend::Hopscotch(table) => match req.op {
                 RpcOp::Read => match table.find(req.key) {
                     Some((slot, version)) => RpcResponse::inline(RpcResult::Value {
@@ -439,7 +464,7 @@ impl Catalog {
                     }),
                     None => RpcResponse::inline(RpcResult::NotFound),
                 },
-                RpcOp::Insert => RpcResponse::inline(table.insert(req.key)),
+                RpcOp::Insert => RpcResponse::inline(table.insert(req.key, req.value.as_deref())),
                 RpcOp::Delete => RpcResponse::inline(table.delete(req.key)),
                 _ => RpcResponse::inline(RpcResult::Unsupported),
             },
@@ -824,19 +849,24 @@ mod tests {
                 "read must serve on {obj:?}"
             );
         }
-        // The transactional opcodes only exist on MICA objects.
+        // The transactional opcodes exist on MICA (item locks) and — since
+        // PR 5 — on B-link trees (leaf locks); hopscotch stays outside.
         for op in [RpcOp::LockRead, RpcOp::UpdateUnlock, RpcOp::Unlock] {
-            for obj in [tree, hop] {
-                assert_eq!(
-                    c.serve_rpc(&req(obj, op)).result,
-                    RpcResult::Unsupported,
-                    "{op:?} on {obj:?} must be a typed dispatch error"
-                );
-            }
+            assert_eq!(
+                c.serve_rpc(&req(hop, op)).result,
+                RpcResult::Unsupported,
+                "{op:?} on {hop:?} must be a typed dispatch error"
+            );
         }
-        // Delete: hopscotch yes, btree no.
+        assert!(
+            matches!(c.serve_rpc(&req(tree, RpcOp::LockRead)).result, RpcResult::Value { .. }),
+            "leaf-OCC lock-read must serve on the tree"
+        );
+        assert_eq!(c.serve_rpc(&req(tree, RpcOp::UpdateUnlock)).result, RpcResult::Ok);
+        assert_eq!(c.serve_rpc(&req(tree, RpcOp::Unlock)).result, RpcResult::Ok);
+        // Delete now serves on both non-MICA kinds.
         assert_eq!(c.serve_rpc(&req(hop, RpcOp::Delete)).result, RpcResult::Ok);
-        assert_eq!(c.serve_rpc(&req(tree, RpcOp::Delete)).result, RpcResult::Unsupported);
+        assert_eq!(c.serve_rpc(&req(tree, RpcOp::Delete)).result, RpcResult::Ok);
         // Unknown object id: typed error, no panic.
         assert_eq!(
             c.serve_rpc(&req(ObjectId(777), RpcOp::Read)).result,

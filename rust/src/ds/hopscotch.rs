@@ -14,11 +14,16 @@
 //! Slots serialize to fixed `item_size`-byte wire images
 //! ([`HopscotchTable::slot_image`] / [`parse_neighborhood_view`]) so the
 //! catalog can mirror slot `i` at `base + i * item_size` in the packed
-//! data region. Neighborhoods are cyclic but one-sided reads are
-//! contiguous, so the mirrored array carries a **wrap tail**: the first
-//! `H - 1` slots are mirrored again past the end of the array
-//! ([`HopscotchConfig::table_len`]), making every neighborhood a single
-//! contiguous `H * item_size`-byte read.
+//! data region: key(8) + version(4) + padding to [`SLOT_HEADER`], then
+//! the **value payload** in the remaining `item_size - SLOT_HEADER`
+//! bytes (PR 5 — slots used to carry key+version only, wasting the
+//! reserved bytes the paper's 128-byte items exist for; a FaRM-style
+//! neighborhood read now returns the values it paid the bandwidth for,
+//! extractable via [`slot_value`]). Neighborhoods are cyclic but
+//! one-sided reads are contiguous, so the mirrored array carries a
+//! **wrap tail**: the first `H - 1` slots are mirrored again past the
+//! end of the array ([`HopscotchConfig::table_len`]), making every
+//! neighborhood a single contiguous `H * item_size`-byte read.
 //!
 //! The Lockfree_FaRM baseline reads `H * item_size` bytes per lookup from
 //! this table, versus Storm's fine-grained single-bucket reads — the
@@ -55,11 +60,26 @@ impl HopscotchConfig {
     }
 }
 
+/// Wire bytes of a slot's metadata header: key(8) + version(4) + 4 pad
+/// (value payload starts 8-byte aligned). The rest of the `item_size`
+/// bytes carry the value.
+pub const SLOT_HEADER: u32 = 16;
+
+/// Extract the value payload of one `item_size`-byte slot image (the
+/// bytes after [`SLOT_HEADER`]). What a client slices out of a
+/// neighborhood read once [`HopscotchTable::find_in_view`] located the
+/// key's slot.
+pub fn slot_value(slot_bytes: &[u8]) -> &[u8] {
+    &slot_bytes[SLOT_HEADER as usize..]
+}
+
 /// One slot of the hopscotch array.
 #[derive(Clone, Debug, Default)]
 struct Slot {
     key: u64, // 0 = empty
     version: Version,
+    /// Value payload (capped at `item_size - SLOT_HEADER` wire bytes).
+    value: Option<Box<[u8]>>,
 }
 
 /// Hopscotch table with neighborhood `H`.
@@ -178,13 +198,26 @@ impl HopscotchTable {
         std::mem::take(&mut self.dirty)
     }
 
-    /// Serialize slot `i` to its `item_size`-byte wire image.
+    /// Serialize slot `i` to its `item_size`-byte wire image: the
+    /// [`SLOT_HEADER`] metadata followed by the value payload in the
+    /// reserved bytes.
     pub fn slot_image(&self, i: u64) -> Vec<u8> {
         let s = &self.slots[i as usize];
         let mut out = vec![0u8; self.item_size as usize];
         out[0..8].copy_from_slice(&s.key.to_le_bytes());
         out[8..12].copy_from_slice(&s.version.to_le_bytes());
+        if let Some(v) = &s.value {
+            let cap = out.len() - SLOT_HEADER as usize;
+            let n = v.len().min(cap);
+            out[SLOT_HEADER as usize..SLOT_HEADER as usize + n].copy_from_slice(&v[..n]);
+        }
         out
+    }
+
+    /// The stored value payload of `key`, if present.
+    pub fn value_of(&self, key: u64) -> Option<&[u8]> {
+        let (slot, _) = self.find(key)?;
+        self.slots[slot as usize].value.as_deref()
     }
 
     /// Address of a key's neighborhood (what FaRM reads). Thanks to the
@@ -211,18 +244,22 @@ impl HopscotchTable {
         view.slots.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
     }
 
-    /// Insert; fails with `Full` when hopscotch displacement cannot bring a
-    /// free slot into the neighborhood (nothing is mutated in that case —
-    /// callers resize or propagate the typed error).
-    pub fn insert(&mut self, key: u64) -> RpcResult {
+    /// Insert with an optional value payload (serialized into the slot
+    /// image's reserved bytes); fails with `Full` when hopscotch
+    /// displacement cannot bring a free slot into the neighborhood
+    /// (nothing is mutated in that case — callers resize or propagate
+    /// the typed error).
+    pub fn insert(&mut self, key: u64, value: Option<&[u8]>) -> RpcResult {
         assert!(key != 0);
         self.dirty.clear();
+        let stored: Option<Box<[u8]>> = value.map(|v| v.into());
         let base = self.home(key);
         // Update in place.
         for off in 0..self.h as u64 {
             let i = self.idx(base, off);
             if self.slots[i].key == key {
                 self.slots[i].version = self.slots[i].version.wrapping_add(1);
+                self.slots[i].value = stored;
                 self.dirty.push(i as u64);
                 return RpcResult::Ok;
             }
@@ -284,7 +321,7 @@ impl HopscotchTable {
             self.dirty.push(from_idx as u64);
         }
         let i = self.idx(base, free_off);
-        self.slots[i] = Slot { key, version: 1 };
+        self.slots[i] = Slot { key, version: 1, value: stored };
         self.dirty.push(i as u64);
         self.count += 1;
         RpcResult::Ok
@@ -345,7 +382,7 @@ mod tests {
     fn single_read_finds_all_keys() {
         let mut t = mk(1024, 8);
         for k in 1..=600u64 {
-            assert_eq!(t.insert(k), RpcResult::Ok, "insert {k} at occ {}", t.occupancy());
+            assert_eq!(t.insert(k, None), RpcResult::Ok, "insert {k} at occ {}", t.occupancy());
         }
         // Invariant: every key findable in ONE neighborhood read.
         for k in 1..=600u64 {
@@ -370,7 +407,7 @@ mod tests {
         let mut t = mk(64, 4);
         let mut inserted = Vec::new();
         for k in 1..=1000u64 {
-            if t.insert(k) == RpcResult::Ok {
+            if t.insert(k, None) == RpcResult::Ok {
                 inserted.push(k);
             }
             if t.occupancy() > 0.85 {
@@ -391,7 +428,7 @@ mod tests {
         let mut fails = 0;
         let mut present: Vec<u64> = Vec::new();
         for k in 1..=64u64 {
-            match t.insert(k) {
+            match t.insert(k, None) {
                 RpcResult::Ok => present.push(k),
                 RpcResult::Full => fails += 1,
                 other => panic!("unexpected {other:?}"),
@@ -409,8 +446,8 @@ mod tests {
     #[test]
     fn update_bumps_version_delete_removes() {
         let mut t = mk(64, 8);
-        t.insert(9);
-        t.insert(9);
+        t.insert(9, None);
+        t.insert(9, None);
         assert_eq!(t.get(9), Some(2));
         assert_eq!(t.delete(9), RpcResult::Ok);
         assert_eq!(t.get(9), None);
@@ -420,7 +457,7 @@ mod tests {
     #[test]
     fn view_miss_for_absent_key() {
         let mut t = mk(64, 8);
-        t.insert(1);
+        t.insert(1, None);
         let view = t.neighborhood_view(555);
         assert!(HopscotchTable::find_in_view(&view, 555).is_none());
     }
@@ -429,7 +466,7 @@ mod tests {
     fn slot_images_reconstruct_neighborhood_views() {
         let mut t = mk(256, 8);
         for k in 1..=150u64 {
-            assert_eq!(t.insert(k), RpcResult::Ok);
+            assert_eq!(t.insert(k, None), RpcResult::Ok);
         }
         for k in [1u64, 7, 42, 150, 999_999] {
             // Rebuild the contiguous neighborhood bytes from slot images
@@ -455,7 +492,7 @@ mod tests {
         let mut t = mk(64, 4);
         let mut mirror: Vec<Option<(u64, Version)>> = vec![None; 64];
         for k in 1..=200u64 {
-            let r = t.insert(k);
+            let r = t.insert(k, None);
             for i in t.take_dirty() {
                 let img = t.slot_image(i);
                 let key = u64::from_le_bytes(img[0..8].try_into().unwrap());
@@ -479,10 +516,65 @@ mod tests {
     }
 
     #[test]
+    fn slot_images_round_trip_value_payloads() {
+        // PR 5 satellite: the reserved `item_size` bytes carry the value.
+        let mut t = mk(256, 8);
+        let stamp = |k: u64| {
+            let mut v = vec![0u8; 112];
+            v[..8].copy_from_slice(&k.to_le_bytes());
+            v[8] = 0xA5;
+            v
+        };
+        for k in 1..=100u64 {
+            assert_eq!(t.insert(k, Some(&stamp(k))), RpcResult::Ok);
+        }
+        for k in [1u64, 7, 42, 100] {
+            let (slot, _) = t.find(k).expect("present");
+            let img = t.slot_image(slot);
+            assert_eq!(img.len() as u32, t.item_size());
+            // Header intact, payload in the reserved bytes.
+            assert_eq!(u64::from_le_bytes(img[0..8].try_into().unwrap()), k);
+            let want = stamp(k);
+            assert_eq!(slot_value(&img)[..want.len()], want[..], "key {k} payload");
+            assert_eq!(t.value_of(k), Some(&want[..]));
+        }
+        // Updates replace the payload; displacement carries it along.
+        let nv = vec![9u8; 40];
+        assert_eq!(t.insert(7, Some(&nv)), RpcResult::Ok);
+        assert_eq!(t.value_of(7).unwrap()[..40], nv[..]);
+        let mut small = mk(64, 4);
+        let mut moved = Vec::new();
+        for k in 1..=400u64 {
+            if small.insert(k, Some(&stamp(k))) == RpcResult::Ok {
+                moved.push(k);
+            }
+            if small.occupancy() > 0.8 {
+                break;
+            }
+        }
+        for &k in &moved {
+            let (slot, _) = small.find(k).expect("survived displacement");
+            assert_eq!(
+                slot_value(&small.slot_image(slot))[..8],
+                k.to_le_bytes()[..],
+                "displacement dropped key {k}'s payload"
+            );
+        }
+        // An oversized payload is truncated to the reserved bytes, never
+        // a panic; deleted slots zero their payload in the image.
+        let big = [1u8; 4096];
+        assert_eq!(t.insert(3, Some(&big[..])), RpcResult::Ok);
+        let (slot3, _) = t.find(3).unwrap();
+        assert_eq!(t.slot_image(slot3).len() as u32, t.item_size());
+        t.delete(42);
+        assert_eq!(t.value_of(42), None, "deleted key keeps no payload");
+    }
+
+    #[test]
     fn find_returns_canonical_slot_index() {
         let mut t = mk(128, 8);
         for k in 1..=80u64 {
-            t.insert(k);
+            t.insert(k, None);
         }
         for k in 1..=80u64 {
             let (slot, ver) = t.find(k).expect("present");

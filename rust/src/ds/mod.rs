@@ -15,10 +15,13 @@
 //! evaluates (inline key/version/lock for zero-copy single-read lookups,
 //! overflow chains, oversubscription); [`btree`] — the paper's §5.5
 //! B-link tree (clients cache the inner levels as a fence-keyed leaf
-//! route; one leaf read per lookup, RPC re-traversal on a split);
+//! route; one leaf read per lookup, RPC re-traversal on a split; since
+//! PR 5 its leaves carry an OCC version+lock header word, so
+//! transactions lock, validate and commit at leaf granularity);
 //! [`hopscotch`] — the FaRM-style neighborhood table (one large read
 //! covers the whole neighborhood — both the Lockfree_FaRM baseline and
-//! a first-class catalog object); [`queue`] — cached head/tail pointers.
+//! a first-class catalog object, with value payloads in the slots'
+//! reserved bytes); [`queue`] — cached head/tail pointers.
 //!
 //! [`catalog`] sits above the individual backends and is
 //! **heterogeneous**: a node hosts *many* objects (paper §4 — TATP's

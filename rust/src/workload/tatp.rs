@@ -25,7 +25,8 @@
 
 use crate::dataplane::tx::TxItem;
 use crate::ds::api::ObjectId;
-use crate::ds::catalog::{buckets_for, CatalogConfig};
+use crate::ds::btree::BTreeConfig;
+use crate::ds::catalog::{buckets_for, CatalogConfig, ObjectConfig};
 use crate::ds::mica::MicaConfig;
 use crate::sim::Pcg64;
 
@@ -83,6 +84,32 @@ pub fn live_catalog(subscribers: u64, value_len: u32) -> CatalogConfig {
             })
             .collect(),
     )
+}
+
+/// The heterogeneous TATP catalog (PR 5): SUBSCRIBER / ACCESS_INFO /
+/// SPECIAL_FACILITY stay MICA tables, but CALL_FORWARDING — the one
+/// table the mix inserts into and deletes from — is backed by a B-link
+/// tree. Its transactions exercise leaf-granularity OCC live:
+/// `GetNewDestination` validates a leaf header alongside a MICA item
+/// header in one doorbell volley, and `Insert`/`DeleteCallForwarding`
+/// write through the tree (inserts split leaves under load, which is
+/// exactly the `ValidationMoved` race the test battery pins down). The
+/// leaf budget leaves generous split headroom.
+pub fn live_catalog_btree_cf(subscribers: u64, value_len: u32) -> CatalogConfig {
+    let mut objects: Vec<ObjectConfig> = ROWS_PER_SUBSCRIBER[..3]
+        .iter()
+        .map(|rows| {
+            ObjectConfig::Mica(MicaConfig {
+                buckets: buckets_for((subscribers as f64 * rows).ceil() as u64, 2),
+                width: 2,
+                value_len,
+                store_values: true,
+            })
+        })
+        .collect();
+    let cf_rows = (subscribers as f64 * ROWS_PER_SUBSCRIBER[3]).ceil() as u64;
+    objects.push(ObjectConfig::BTree(BTreeConfig { max_leaves: (cf_rows / 2).max(64) }));
+    CatalogConfig::heterogeneous(objects)
 }
 
 /// The seven TATP transaction types.
@@ -452,6 +479,29 @@ mod tests {
         assert!(cat.objects[3].mica().buckets >= cat.objects[0].mica().buckets);
         // Tiny databases still shard: every table keeps >= 8 buckets.
         assert!(live_catalog(1, 16).objects.iter().all(|c| c.mica().buckets >= 8));
+    }
+
+    #[test]
+    fn btree_cf_catalog_shapes_and_sizes() {
+        use crate::ds::catalog::ObjectKind;
+        let cat = live_catalog_btree_cf(2_000, 32);
+        assert_eq!(cat.len(), 4);
+        for o in 0..3 {
+            assert_eq!(cat.objects[o].kind(), ObjectKind::Mica, "table {o}");
+        }
+        assert_eq!(cat.objects[3].kind(), ObjectKind::BTree);
+        // Leaf budget comfortably exceeds the expected CF rows / leaf cap.
+        let crate::ds::catalog::ObjectConfig::BTree(b) = &cat.objects[3] else {
+            unreachable!()
+        };
+        let cf_rows = (2_000.0 * ROWS_PER_SUBSCRIBER[3]).ceil() as u64;
+        assert!(b.max_leaves * 8 >= cf_rows, "leaf budget too tight for splits");
+        // Tiny databases keep a sane floor.
+        let tiny = live_catalog_btree_cf(1, 16);
+        let crate::ds::catalog::ObjectConfig::BTree(b) = &tiny.objects[3] else {
+            unreachable!()
+        };
+        assert!(b.max_leaves >= 64);
     }
 
     #[test]

@@ -234,14 +234,20 @@ fn wrong_opcode_per_kind_is_a_typed_error_per_opcode() {
         c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
     }
     let mut client = c.client(0, None);
+    // Hopscotch is the one kind outside the transactional opcode set
+    // (B-link trees serve it at leaf granularity since PR 5); and the
+    // non-transactional `ds_rpc` path carries lock-owner token 0, which
+    // every kind must refuse for lock opcodes — an UpdateUnlock with
+    // owner 0 would otherwise bypass the lock check (tx_hetero.rs
+    // exercises the real leaf-lock path through the engine).
     let unsupported: &[(ObjectId, RpcOp)] = &[
-        (TREE, RpcOp::LockRead),
-        (TREE, RpcOp::UpdateUnlock),
-        (TREE, RpcOp::Unlock),
-        (TREE, RpcOp::Delete),
         (HOP, RpcOp::LockRead),
         (HOP, RpcOp::UpdateUnlock),
         (HOP, RpcOp::Unlock),
+        (TREE, RpcOp::LockRead),
+        (TREE, RpcOp::UpdateUnlock),
+        (TREE, RpcOp::Unlock),
+        (MICA, RpcOp::UpdateUnlock),
     ];
     for &(obj, op) in unsupported {
         assert_eq!(
@@ -252,6 +258,9 @@ fn wrong_opcode_per_kind_is_a_typed_error_per_opcode() {
         // The server did not panic: the very next lookup is served.
         assert!(client.lookup_batch_obj(obj, &[7])[0].found, "server died after {op:?}");
     }
+    // Tree deletes are real now (leaf-granularity write path).
+    assert_eq!(client.ds_rpc(TREE, 7, RpcOp::Delete, None), RpcResult::Ok);
+    assert!(!client.lookup_batch_obj(TREE, &[7])[0].found);
     // Supported opcodes still work on every kind.
     for obj in [MICA, TREE, HOP] {
         assert!(matches!(
@@ -358,12 +367,12 @@ fn transactions_stay_mica_scoped_in_mixed_catalogs() {
 }
 
 #[test]
-#[should_panic(expected = "transactions require MICA-backed objects")]
-fn transactions_on_tree_objects_are_rejected_at_admission() {
+#[should_panic(expected = "transactions require MICA- or BTree-backed objects")]
+fn transactions_on_hopscotch_objects_are_rejected_at_admission() {
     let c = LiveCluster::start_catalog(1, mixed_catalog());
-    c.load_rows((1..=10u64).map(|k| (TREE, k)), value_of);
+    c.load_rows((1..=10u64).map(|k| (HOP, k)), value_of);
     let mut client = c.client(0, None);
-    let _ = client.run_tx(vec![], vec![TxItem::update(TREE, 5)]);
+    let _ = client.run_tx(vec![], vec![TxItem::update(HOP, 5)]);
 }
 
 /// RPC-only callback stub: every lookup goes through the owner.

@@ -121,7 +121,7 @@ fn prop_hopscotch_neighborhood_invariant() {
         for _ in 0..2_000 {
             if present.is_empty() || rng.gen_bool(0.65) {
                 let key = rng.gen_range(100_000) + 1;
-                if t.insert(key) == RpcResult::Ok && !present.contains(&key) {
+                if t.insert(key, None) == RpcResult::Ok && !present.contains(&key) {
                     present.push(key);
                 }
             } else {
@@ -337,6 +337,296 @@ fn prop_hetero_catalog_regions_disjoint() {
                     }
                 }
             }
+        }
+    }
+}
+
+// --- PR 5: mixed-kind transaction histories are serializable -------------
+
+/// Random interleaved MICA+BTree transaction histories on the reference
+/// driver are effect-equivalent to a sequential execution: replaying the
+/// committed transactions alone, in commit-start order (the order their
+/// commit volleys were issued — which respects every per-item/per-leaf
+/// lock order), on an identically populated cluster reproduces the exact
+/// per-key (presence, version) state in both objects.
+///
+/// The write mix keeps lock-free structural ops where they are
+/// order-commutative: MICA inserts target a fresh disjoint key range
+/// (per-key version = insert count, any order), MICA deletes never race
+/// a re-insert (absence is absorbing), and the B-link object sees only
+/// leaf-lock-serialized updates (no inserts/deletes, so its leaf
+/// structure — and hence leaf versions — are comparable across runs).
+#[test]
+fn prop_mixed_tx_histories_serializable() {
+    use std::collections::VecDeque;
+    use storm::dataplane::local::LocalClient;
+    use storm::dataplane::tx::{TxEngine, TxOp, TxPost, TxStep};
+    use storm::ds::btree::BTreeConfig;
+    use storm::ds::catalog::{CatalogConfig, ObjectConfig};
+
+    const TREE: ObjectId = ObjectId(1);
+    const KEYS: u64 = 40;
+    const FRESH: u64 = 1_000;
+    const WINDOW: usize = 5;
+
+    let catalog = || {
+        CatalogConfig::heterogeneous(vec![
+            ObjectConfig::Mica(MicaConfig {
+                buckets: 1 << 8,
+                width: 2,
+                value_len: 112,
+                store_values: false,
+            }),
+            ObjectConfig::BTree(BTreeConfig { max_leaves: 256 }),
+        ])
+    };
+    let populate = |cluster: &mut LocalCluster| {
+        cluster.load(KV, 1..=KEYS);
+        cluster.load(TREE, 1..=KEYS);
+    };
+    let is_commit_post = |p: &TxPost| {
+        matches!(
+            &p.op,
+            TxOp::Rpc { req, .. }
+                if matches!(req.op, RpcOp::UpdateUnlock | RpcOp::Insert | RpcOp::Delete)
+        )
+    };
+
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(seed, 21);
+        let mut cluster = LocalCluster::new_hetero(2, catalog());
+        populate(&mut cluster);
+        let txs: Vec<(Vec<TxItem>, Vec<TxItem>)> = (0..60)
+            .map(|_| {
+                let mut reads = Vec::new();
+                let mut writes = Vec::new();
+                for _ in 0..rng.gen_range(3) {
+                    let obj = if rng.gen_bool(0.5) { KV } else { TREE };
+                    reads.push(TxItem::read(obj, rng.gen_range(KEYS) + 1));
+                }
+                for _ in 0..(1 + rng.gen_range(2)) {
+                    let k = rng.gen_range(KEYS) + 1;
+                    match rng.gen_range(8) {
+                        0 => writes.push(TxItem::insert(KV, FRESH + rng.gen_range(KEYS))),
+                        1 => writes.push(TxItem::delete(KV, k)),
+                        _ => {
+                            let obj = if rng.gen_bool(0.5) { KV } else { TREE };
+                            writes.push(TxItem::update(obj, k));
+                        }
+                    }
+                }
+                (reads, writes)
+            })
+            .collect();
+
+        struct Run {
+            engine: TxEngine,
+            client: LocalClient,
+            queue: VecDeque<TxPost>,
+            idx: usize,
+            commit_seq: Option<u64>,
+        }
+        let mut active: Vec<Run> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut committed: Vec<(u64, usize)> = Vec::new();
+        let mut pending = txs.iter().cloned().enumerate();
+        let mut tx_id = 1u64;
+        loop {
+            // Keep a window of concurrent engines in flight.
+            while active.len() < WINDOW {
+                let Some((idx, (reads, writes))) = pending.next() else { break };
+                let mut client = cluster.client(false);
+                let mut engine = TxEngine::begin(tx_id, reads, writes);
+                tx_id += 1;
+                match engine.start(&mut client) {
+                    TxStep::Issue(posts) => {
+                        // Lock-free write-only txs issue their commit
+                        // volley straight from start().
+                        let commit_seq = posts.iter().any(is_commit_post).then(|| {
+                            next_seq += 1;
+                            next_seq
+                        });
+                        active.push(Run { engine, client, queue: posts.into(), idx, commit_seq });
+                    }
+                    TxStep::Done(out) => {
+                        assert!(matches!(out, TxOutcome::Committed { .. }));
+                    }
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            // Serve one random in-flight engine's next action.
+            let at = rng.gen_index(active.len());
+            let run = &mut active[at];
+            let post = run.queue.pop_front().expect("active engine has queued posts");
+            match cluster.serve_tx_post(&mut run.client, &mut run.engine, &post) {
+                TxStep::Issue(more) => {
+                    if run.commit_seq.is_none() && more.iter().any(is_commit_post) {
+                        next_seq += 1;
+                        run.commit_seq = Some(next_seq);
+                    }
+                    run.queue.extend(more);
+                }
+                TxStep::Done(out) => {
+                    assert!(run.queue.is_empty(), "seed {seed}: posts left after completion");
+                    if matches!(out, TxOutcome::Committed { .. }) {
+                        // Read-only commits have no effects to replay.
+                        if let Some(seq) = run.commit_seq {
+                            committed.push((seq, run.idx));
+                        }
+                    }
+                    active.swap_remove(at);
+                }
+            }
+        }
+
+        // Sequential replay of exactly the committed transactions, in
+        // commit-start order, on an identically populated cluster. With
+        // no concurrency, every replayed transaction must commit.
+        committed.sort_unstable();
+        let mut replay = LocalCluster::new_hetero(2, catalog());
+        populate(&mut replay);
+        let mut rc = replay.client(false);
+        for &(_, idx) in &committed {
+            let (reads, writes) = txs[idx].clone();
+            let out = replay.run_tx(&mut rc, reads, writes);
+            assert!(
+                matches!(out, TxOutcome::Committed { .. }),
+                "seed {seed}: serial replay of tx {idx} aborted ({out:?})"
+            );
+        }
+        // Effect equivalence across both backends, and no leaked lock.
+        let mut ic = cluster.client(false);
+        for obj in [KV, TREE] {
+            for key in (1..=KEYS).chain(FRESH + 1..=FRESH + KEYS) {
+                let i = cluster.run_lookup(&mut ic, obj, key);
+                let r = replay.run_lookup(&mut rc, obj, key);
+                assert_eq!(
+                    (i.found, i.version),
+                    (r.found, r.version),
+                    "seed {seed}: {obj:?} key {key} diverges from sequential execution"
+                );
+                assert!(!i.locked && !r.locked, "seed {seed}: lock leaked at {obj:?} {key}");
+            }
+        }
+    }
+}
+
+// --- PR 5: leaf header words never regress --------------------------------
+
+/// Under random interleaved mixed histories — now *including* B-link
+/// inserts (splits) and deletes — every leaf's version word is monotone
+/// non-decreasing at every observable step, and every leaf lock word is
+/// clear once the history drains. (Monotone versions are what OCC
+/// validation leans on: a reverted version could validate a stale read.)
+#[test]
+fn prop_leaf_header_words_never_regress() {
+    use std::collections::VecDeque;
+    use storm::dataplane::local::LocalClient;
+    use storm::dataplane::tx::{TxEngine, TxPost, TxStep};
+    use storm::ds::btree::{BTreeConfig, LEAF_BYTES};
+    use storm::ds::catalog::{CatalogConfig, ObjectConfig};
+
+    const TREE: ObjectId = ObjectId(1);
+    const KEYS: u64 = 30;
+
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(seed, 23);
+        let mut cluster = LocalCluster::new_hetero(
+            1,
+            CatalogConfig::heterogeneous(vec![
+                ObjectConfig::Mica(MicaConfig {
+                    buckets: 1 << 8,
+                    width: 2,
+                    value_len: 112,
+                    store_values: false,
+                }),
+                ObjectConfig::BTree(BTreeConfig { max_leaves: 128 }),
+            ]),
+        );
+        cluster.load(KV, 1..=KEYS);
+        cluster.load(TREE, (1..=KEYS).map(|i| i * 7));
+        let mut seen: HashMap<u64, u32> = HashMap::new();
+        let mut check_leaves = |cluster: &LocalCluster, step: &str| {
+            let tree = cluster.nodes[0].btree(TREE);
+            for l in 0..tree.leaf_count() {
+                let addr = RemoteAddr { region: tree.region, offset: l * LEAF_BYTES as u64 };
+                let v = tree.leaf_view(addr).expect("allocated leaf parses");
+                let last = seen.entry(l).or_insert(0);
+                assert!(
+                    v.version >= *last,
+                    "seed {seed} {step}: leaf {l} version regressed {} -> {}",
+                    last,
+                    v.version
+                );
+                *last = v.version;
+            }
+        };
+
+        struct Run {
+            engine: TxEngine,
+            client: LocalClient,
+            queue: VecDeque<TxPost>,
+        }
+        let mut active: Vec<Run> = Vec::new();
+        let mut fresh = 10_000u64;
+        let mut tx_id = 1u64;
+        let mut remaining = 80u32;
+        loop {
+            while active.len() < 5 && remaining > 0 {
+                remaining -= 1;
+                let mut reads = Vec::new();
+                let mut writes = Vec::new();
+                for _ in 0..rng.gen_range(2) {
+                    reads.push(TxItem::read(TREE, (rng.gen_range(KEYS) + 1) * 7));
+                }
+                for _ in 0..(1 + rng.gen_range(2)) {
+                    match rng.gen_range(6) {
+                        0 => {
+                            fresh += 1;
+                            writes.push(TxItem::insert(TREE, fresh));
+                        }
+                        1 => writes.push(TxItem::delete(TREE, (rng.gen_range(KEYS) + 1) * 7)),
+                        2 => writes.push(TxItem::update(KV, rng.gen_range(KEYS) + 1)),
+                        _ => writes.push(TxItem::update(TREE, (rng.gen_range(KEYS) + 1) * 7)),
+                    }
+                }
+                let mut client = cluster.client(false);
+                let mut engine = TxEngine::begin(tx_id, reads, writes);
+                tx_id += 1;
+                match engine.start(&mut client) {
+                    TxStep::Issue(posts) => {
+                        active.push(Run { engine, client, queue: posts.into() })
+                    }
+                    TxStep::Done(_) => {}
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            let at = rng.gen_index(active.len());
+            let run = &mut active[at];
+            let post = run.queue.pop_front().expect("active engine has queued posts");
+            match cluster.serve_tx_post(&mut run.client, &mut run.engine, &post) {
+                TxStep::Issue(more) => run.queue.extend(more),
+                TxStep::Done(_) => {
+                    active.swap_remove(at);
+                }
+            }
+            check_leaves(&cluster, "mid-history");
+        }
+        // Drained: every leaf lock word is clear and lookups still work.
+        let tree = cluster.nodes[0].btree(TREE);
+        for l in 0..tree.leaf_count() {
+            let addr = RemoteAddr { region: tree.region, offset: l * LEAF_BYTES as u64 };
+            let v = tree.leaf_view(addr).unwrap();
+            assert_eq!(v.lock_tx, 0, "seed {seed}: leaf {l} left locked");
+        }
+        let mut client = cluster.client(false);
+        for k in (1..=KEYS).map(|i| i * 7) {
+            // Present or cleanly deleted — either way the lookup resolves.
+            let _ = cluster.run_lookup(&mut client, TREE, k);
         }
     }
 }

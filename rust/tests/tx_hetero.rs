@@ -1,0 +1,427 @@
+//! Heterogeneous-transaction battery (PR 5): OCC over B-link leaves.
+//!
+//! Mixed MICA+BTree transactions live end-to-end over the loopback
+//! fabric (clean commits, leaf-version bumps == commit counts, no stale
+//! leaf locks after aborts), the split-races-a-transaction scenario that
+//! must abort with `ValidationMoved` (driven step-by-step on the
+//! reference driver, where the race can be parked deterministically),
+//! per-`AbortReason` counters forced through every reason, and the
+//! hopscotch slot-value round trip over the live mirror.
+
+use std::collections::HashMap;
+
+use storm::cluster::AbortCounts;
+use storm::dataplane::live::LiveCluster;
+use storm::dataplane::local::LocalCluster;
+use storm::dataplane::tx::{
+    stamped_value, AbortReason, TxEngine, TxItem, TxOutcome, TxPost, TxStep,
+};
+use storm::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResult};
+use storm::ds::btree::BTreeConfig;
+use storm::ds::catalog::{CatalogConfig, ObjectConfig};
+use storm::ds::hopscotch::{slot_value, HopscotchConfig, SLOT_HEADER};
+use storm::ds::mica::{fnv1a64, owner_of, MicaConfig};
+use storm::mem::MrKey;
+use storm::sim::Pcg64;
+use storm::workload::tatp::{self, TatpKind, TatpPopulation, TatpWorkload};
+
+const MICA: ObjectId = ObjectId(0);
+const TREE: ObjectId = ObjectId(1);
+
+const VALUE_LEN: u32 = 32;
+
+fn mica_cfg(store_values: bool) -> MicaConfig {
+    MicaConfig { buckets: 1 << 10, width: 2, value_len: VALUE_LEN, store_values }
+}
+
+/// One MICA table + one B-link tree (live clusters carry real bytes).
+fn mixed_catalog() -> CatalogConfig {
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(true)),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 1 << 10 }),
+    ])
+}
+
+fn value_of(obj: ObjectId, k: u64) -> Vec<u8> {
+    stamped_value(obj, k, VALUE_LEN)
+}
+
+/// The acceptance-path test: a transaction spanning a MICA table and a
+/// BTree object commits live under `run_tx_batch`, in both directions,
+/// with the write visible to other clients and exactly one leaf-version
+/// bump per committed tree write.
+#[test]
+fn mixed_tx_spans_mica_and_btree_live() {
+    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    for obj in [MICA, TREE] {
+        c.load_rows((1..=200u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    // Warm the tree routes so execute-phase reads are one-sided.
+    client.lookup_batch_obj(TREE, &(1..=200).collect::<Vec<_>>());
+    // Disjoint mixed transactions, half reading MICA and writing the
+    // tree, half the other way around — all through the windowed
+    // scheduler.
+    let txs: Vec<_> = (1..=64u64)
+        .map(|k| {
+            if k % 2 == 0 {
+                (
+                    vec![TxItem::read(MICA, k + 100)],
+                    vec![TxItem::update(TREE, k).with_value(value_of(TREE, k))],
+                )
+            } else {
+                (
+                    vec![TxItem::read(TREE, k + 100)],
+                    vec![TxItem::update(MICA, k).with_value(value_of(MICA, k))],
+                )
+            }
+        })
+        .collect();
+    // Keys are disjoint but *leaves* are not: neighboring tree keys
+    // share a leaf, so windowed engines can legitimately collide on a
+    // leaf lock. Every abort must be a typed conflict, and every
+    // transaction must commit exactly once within a bounded retry loop.
+    let mut pending = txs;
+    let mut rounds = 0;
+    while !pending.is_empty() {
+        rounds += 1;
+        assert!(rounds <= 20, "mixed transactions failed to converge");
+        let outs = client.run_tx_batch(pending.clone());
+        pending = outs
+            .iter()
+            .zip(pending)
+            .filter_map(|(out, tx)| match out {
+                TxOutcome::Committed { .. } => None,
+                TxOutcome::Aborted(
+                    AbortReason::LockConflict
+                    | AbortReason::ValidationVersion
+                    | AbortReason::ValidationLocked,
+                ) => Some(tx),
+                TxOutcome::Aborted(other) => panic!("unexpected abort {other:?}"),
+            })
+            .collect();
+    }
+    // Every write visible from another client; no lock left anywhere.
+    // (Aborted attempts had no effect, so each logical transaction
+    // committed exactly once — versions are exact.)
+    let mut other = c.client(1, None);
+    let evens: Vec<u64> = (1..=64).filter(|k| k % 2 == 0).collect();
+    let tree_res = other.lookup_batch_obj(TREE, &evens);
+    assert!(tree_res.iter().all(|r| r.found && !r.locked), "tree rows lost or locked");
+    let odds: Vec<u64> = (1..=64).filter(|k| k % 2 == 1).collect();
+    let mica_res = other.lookup_batch_obj(MICA, &odds);
+    assert!(mica_res.iter().all(|r| r.found && r.version == 2 && !r.locked));
+    c.shutdown();
+}
+
+/// Leaf-version bookkeeping: N committed updates of one tree key bump
+/// its leaf version by exactly N (lock/unlock traffic bumps nothing).
+#[test]
+fn leaf_version_bumps_equal_commit_count() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE] {
+        c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    let v0 = client.lookup_batch_obj(TREE, &[7])[0].version;
+    const N: u64 = 10;
+    for _ in 0..N {
+        let out = client.run_tx(
+            vec![TxItem::read(MICA, 7)],
+            vec![TxItem::update(TREE, 7).with_value(value_of(TREE, 7))],
+        );
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+    let after = client.lookup_batch_obj(TREE, &[7]).pop().unwrap();
+    assert_eq!(after.version as u64, v0 as u64 + N, "leaf version bump != commit count");
+    assert!(!after.locked, "stale leaf lock after the last commit");
+    c.shutdown();
+}
+
+/// Contending engines on one leaf: the lock holder commits, the rest
+/// abort with `LockConflict` — and once the scheduler drains, the leaf
+/// lock word is clear and the version equals commits exactly.
+#[test]
+fn no_stale_leaf_locks_after_aborts() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE] {
+        c.load_rows((1..=20u64).map(|k| (obj, k)), value_of);
+    }
+    let mut client = c.client(0, None);
+    let v0 = client.lookup_batch_obj(TREE, &[1])[0].version;
+    // Every windowed engine updates the same tree key: they fight over
+    // one leaf lock.
+    let txs: Vec<_> = (0..120u64)
+        .map(|_| (vec![], vec![TxItem::update(TREE, 1).with_value(value_of(TREE, 1))]))
+        .collect();
+    let outs = client.run_tx_batch(txs);
+    let mut commits = 0u64;
+    for out in &outs {
+        match out {
+            TxOutcome::Committed { .. } => commits += 1,
+            TxOutcome::Aborted(AbortReason::LockConflict) => {}
+            TxOutcome::Aborted(other) => panic!("unexpected abort {other:?}"),
+        }
+    }
+    assert!(commits >= 1, "the leaf-lock holder always commits");
+    assert!(commits < outs.len() as u64, "self-conflicts must abort some engines");
+    let counts = client.abort_counts();
+    assert_eq!(counts.lock_conflict, outs.len() as u64 - commits);
+    assert_eq!(counts.total(), counts.lock_conflict, "only leaf-lock conflicts expected");
+    // Drained: version bookkeeping exact, lock word clear — from a
+    // different client (through the mirrored bytes, not client state).
+    let mut reader = c.client(1, None);
+    let res = reader.lookup_batch_obj(TREE, &[1]).pop().unwrap();
+    assert_eq!(res.version as u64, v0 as u64 + commits);
+    assert!(!res.locked, "stale leaf lock after abort storm");
+    c.shutdown();
+}
+
+fn posts_of(step: TxStep) -> Vec<TxPost> {
+    match step {
+        TxStep::Issue(p) => p,
+        TxStep::Done(o) => panic!("engine finished early: {o:?}"),
+    }
+}
+
+/// The split race, pinned deterministically on the reference driver: a
+/// transaction reads a tree key, parks between execute and validation,
+/// a concurrent insert storm splits the key's leaf (relocating the key
+/// to the new sibling), and the parked validation read must abort with
+/// `ValidationMoved` — no corruption, no hang, and the MICA lock the
+/// transaction already held is released.
+#[test]
+fn split_race_aborts_with_validation_moved() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(false)),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 64 }),
+    ]);
+    let mut cluster = LocalCluster::new_hetero(1, cat);
+    // Ten spread-out tree keys: one leaf covering all of them.
+    cluster.load(TREE, (1..=10u64).map(|i| i * 10));
+    cluster.load(MICA, 1..=10);
+    let mut client = cluster.client(false);
+
+    let mut engine = TxEngine::begin(
+        77,
+        vec![TxItem::read(TREE, 100)],
+        vec![TxItem::update(MICA, 5)],
+    );
+    let posts = posts_of(engine.start(&mut client));
+    assert_eq!(posts.len(), 2, "tree lookup + MICA lock-read");
+    // Serve the execute phase; park the validation batch it produces.
+    let mut val_posts = Vec::new();
+    for p in &posts {
+        match cluster.serve_tx_post(&mut client, &mut engine, p) {
+            TxStep::Issue(more) => val_posts.extend(more),
+            TxStep::Done(o) => panic!("engine finished early: {o:?}"),
+        }
+    }
+    assert_eq!(val_posts.len(), 1, "one leaf-header validation read parked");
+
+    // A concurrent writer splits the leaf: key 100 is the largest, so
+    // the upper half — including it — relocates to the new sibling and
+    // the old leaf's high fence drops below 100.
+    for k in 1..=8u64 {
+        let resp = cluster.serve_rpc(
+            0,
+            &RpcRequest { obj: TREE, key: k, op: RpcOp::Insert, tx_id: 0, value: None },
+        );
+        assert_eq!(resp.result, RpcResult::Ok, "insert {k}");
+    }
+
+    // The parked validation read now sees fences that exclude the key.
+    let step = cluster.serve_tx_post(&mut client, &mut engine, &val_posts[0]);
+    let outcome = match step {
+        TxStep::Issue(unlocks) => {
+            assert_eq!(unlocks.len(), 1, "held MICA lock released on abort");
+            cluster.run_tx_posts(&mut client, &mut engine, unlocks)
+        }
+        TxStep::Done(o) => o,
+    };
+    assert_eq!(outcome, TxOutcome::Aborted(AbortReason::ValidationMoved));
+    // Nothing corrupted or left locked: the tree still serves every key,
+    // the MICA lock is free, and a retry of the same transaction commits.
+    for k in (1..=10u64).map(|i| i * 10).chain(1..=8) {
+        assert!(cluster.run_lookup(&mut client, TREE, k).found, "key {k} lost in the split");
+    }
+    assert!(!cluster.run_lookup(&mut client, MICA, 5).locked, "MICA lock leaked");
+    let retry = cluster.run_tx(
+        &mut client,
+        vec![TxItem::read(TREE, 100)],
+        vec![TxItem::update(MICA, 5)],
+    );
+    assert!(matches!(retry, TxOutcome::Committed { .. }), "retry after Moved must commit");
+}
+
+/// Per-reason abort counters: force every `AbortReason` at least once on
+/// the reference driver and tally them through `AbortCounts` (the same
+/// type `BENCH_live.json` surfaces).
+#[test]
+fn abort_reason_counters_tally_every_reason() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(false)),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 64 }),
+        ObjectConfig::Hopscotch(HopscotchConfig { slots: 1 << 8, h: 8, item_size: 128 }),
+    ]);
+    let hop = ObjectId(2);
+    let mut cluster = LocalCluster::new_hetero(1, cat);
+    cluster.load(MICA, 1..=20);
+    cluster.load(TREE, (1..=10u64).map(|i| i * 10));
+    cluster.load(hop, 1..=10);
+    let mut counts = AbortCounts::default();
+
+    // LockConflict: A holds the item lock, B collides.
+    let mut a = cluster.client(false);
+    let mut b = cluster.client(false);
+    let mut tx_a = TxEngine::begin(100, vec![], vec![TxItem::update(MICA, 3)]);
+    let lock_posts = posts_of(tx_a.start(&mut a));
+    let commit_posts = posts_of(cluster.serve_tx_post(&mut a, &mut tx_a, &lock_posts[0]));
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::update(MICA, 3)]);
+    counts.record_outcome(&out);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::LockConflict));
+
+    // ValidationLocked: a reader validates while A still holds the lock.
+    let mut r = cluster.client(false);
+    let mut tx_r = TxEngine::begin(200, vec![TxItem::read(MICA, 3)], vec![]);
+    let exec = posts_of(tx_r.start(&mut r));
+    let val = posts_of(cluster.serve_tx_post(&mut r, &mut tx_r, &exec[0]));
+    let out = cluster.run_tx_posts(&mut r, &mut tx_r, val);
+    counts.record_outcome(&out);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationLocked));
+    // A finishes cleanly (not counted: commits are not aborts).
+    let out_a = cluster.run_tx_posts(&mut a, &mut tx_a, commit_posts);
+    counts.record_outcome(&out_a);
+    assert!(matches!(out_a, TxOutcome::Committed { .. }));
+
+    // ValidationVersion: a writer commits between execute and validate.
+    let mut tx_r = TxEngine::begin(300, vec![TxItem::read(MICA, 7)], vec![]);
+    let exec = posts_of(tx_r.start(&mut r));
+    let val = posts_of(cluster.serve_tx_post(&mut r, &mut tx_r, &exec[0]));
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::update(MICA, 7)]);
+    assert!(matches!(out, TxOutcome::Committed { .. }));
+    let out = cluster.run_tx_posts(&mut r, &mut tx_r, val);
+    counts.record_outcome(&out);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationVersion));
+
+    // ValidationMoved: the item vanishes between execute and validate.
+    let mut tx_r = TxEngine::begin(400, vec![TxItem::read(MICA, 9)], vec![]);
+    let exec = posts_of(tx_r.start(&mut r));
+    let val = posts_of(cluster.serve_tx_post(&mut r, &mut tx_r, &exec[0]));
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::delete(MICA, 9)]);
+    assert!(matches!(out, TxOutcome::Committed { .. }));
+    let out = cluster.run_tx_posts(&mut r, &mut tx_r, val);
+    counts.record_outcome(&out);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationMoved));
+
+    // Unsupported: a write aimed at the hopscotch backend.
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::update(hop, 5)]);
+    counts.record_outcome(&out);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::Unsupported));
+
+    assert!(counts.lock_conflict >= 1, "{counts:?}");
+    assert!(counts.validation_version >= 1, "{counts:?}");
+    assert!(counts.validation_locked >= 1, "{counts:?}");
+    assert!(counts.validation_moved >= 1, "{counts:?}");
+    assert!(counts.unsupported >= 1, "{counts:?}");
+    assert_eq!(counts.total(), 5, "exactly the five forced aborts: {counts:?}");
+    // The tallies roll into the run report the bench writes out.
+    let mut served = storm::cluster::LiveServed::default();
+    served.record_aborts(&counts);
+    assert_eq!(served.aborts.total(), 5);
+    assert!(served.aborts.json().contains("\"validation_moved\": 1"));
+}
+
+/// Heterogeneous TATP live: with CALL_FORWARDING on a B-link tree, all
+/// seven transaction kinds — including the tree-writing insert/delete
+/// classes — commit through the windowed scheduler, and no table keeps
+/// a stale lock afterwards.
+#[test]
+fn tatp_with_btree_call_forwarding_commits_live() {
+    let subscribers = 400u64;
+    let c = LiveCluster::start_catalog(3, tatp::live_catalog_btree_cf(subscribers, VALUE_LEN));
+    c.load_rows(TatpPopulation::new(subscribers).rows(7), |o, k| stamped_value(o, k, VALUE_LEN));
+    let w = TatpWorkload::new(subscribers);
+    let mut rng = Pcg64::seeded(13);
+    let mut client = c.client(0, None);
+    let mut committed: HashMap<TatpKind, u32> = HashMap::new();
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for _ in 0..12 {
+        let batch: Vec<_> = (0..100).map(|_| w.next_tx(&mut rng)).collect();
+        let kinds: Vec<TatpKind> = batch.iter().map(|t| t.kind).collect();
+        let sets: Vec<_> = batch.into_iter().map(|t| t.sets(VALUE_LEN)).collect();
+        for (out, kind) in client.run_tx_batch(sets).iter().zip(kinds) {
+            match out {
+                TxOutcome::Committed { .. } => {
+                    commits += 1;
+                    *committed.entry(kind).or_insert(0) += 1;
+                }
+                TxOutcome::Aborted(_) => aborts += 1,
+            }
+        }
+    }
+    assert!(commits > aborts, "commits {commits} vs aborts {aborts}");
+    for kind in [
+        TatpKind::GetSubscriberData,
+        TatpKind::GetNewDestination,
+        TatpKind::GetAccessData,
+        TatpKind::UpdateSubscriberData,
+        TatpKind::UpdateLocation,
+        TatpKind::InsertCallForwarding,
+        TatpKind::DeleteCallForwarding,
+    ] {
+        assert!(
+            committed.get(&kind).copied().unwrap_or(0) > 0,
+            "{kind:?} never committed over the heterogeneous catalog"
+        );
+    }
+    // Every abort carries a typed reason the counters understand.
+    assert_eq!(client.abort_counts().total(), aborts);
+    // No stale locks anywhere once the scheduler drained.
+    let mut reader = c.client(1, None);
+    let subs: Vec<u64> = (1..=subscribers).collect();
+    let res = reader.lookup_batch_obj(tatp::SUBSCRIBER, &subs);
+    assert!(res.iter().all(|r| r.found && !r.locked), "subscriber row lost or locked");
+    let cf_probe: Vec<u64> = (1..=subscribers).map(|s| s * 12 + 1).collect();
+    for r in reader.lookup_batch_obj(tatp::CALL_FORWARDING, &cf_probe) {
+        assert!(!r.locked, "stale leaf lock on CALL_FORWARDING");
+    }
+    c.shutdown();
+}
+
+/// Satellite round trip: hopscotch slot images on the live mirror carry
+/// the value payload in their reserved bytes — a raw one-sided read of
+/// the packed region returns the loaded value.
+#[test]
+fn hopscotch_slot_values_round_trip_live() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(true)),
+        ObjectConfig::Hopscotch(HopscotchConfig { slots: 1 << 10, h: 8, item_size: 128 }),
+    ]);
+    let hop = ObjectId(1);
+    let c = LiveCluster::start_catalog(2, cat);
+    c.load_rows((1..=100u64).map(|k| (hop, k)), value_of);
+    let geo = *c.placement().geo(hop);
+    let fabric = c.fabric();
+    for key in [1u64, 7, 42, 99] {
+        let node = owner_of(key, 2);
+        let home = fnv1a64(key) & geo.mask;
+        // One contiguous neighborhood read from the home slot (the wrap
+        // tail keeps it contiguous), exactly what a FaRM-style lookup
+        // transfers.
+        let mut buf = vec![0u8; (geo.width * geo.item_size) as usize];
+        fabric.read_into(node, MrKey(0), geo.base + home * geo.item_size as u64, &mut buf);
+        let slot_bytes = buf
+            .chunks_exact(geo.item_size as usize)
+            .find(|ch| u64::from_le_bytes(ch[0..8].try_into().unwrap()) == key)
+            .unwrap_or_else(|| panic!("key {key} escaped its neighborhood"));
+        let want = value_of(hop, key);
+        assert_eq!(
+            &slot_value(slot_bytes)[..want.len()],
+            &want[..],
+            "key {key}: slot image dropped its value payload"
+        );
+        assert!(slot_bytes.len() as u32 >= SLOT_HEADER + VALUE_LEN);
+    }
+    c.shutdown();
+}
