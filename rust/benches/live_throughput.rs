@@ -8,17 +8,23 @@
 //! **heterogeneous TATP** (CALL_FORWARDING backed by a B-link tree, so
 //! transactions exercise leaf-granularity OCC), and **SmallBank** over
 //! the multi-object live cluster, with per-table commit/abort counters,
-//! per-reason abort tallies (`abort_reasons`), and the adaptive
-//! transaction windows the clients settled on.
+//! per-reason abort tallies (`abort_reasons`), per-transaction-class
+//! tallies (`class_aborts`, keyed `tatp/<Kind>` / `smallbank/<Kind>`),
+//! and the adaptive transaction windows the clients settled on. A
+//! failover drill (`tatp_failover`) runs TATP over a replication-2
+//! catalog, kills a node mid-run and recovers it, so the artifact
+//! tracks commit throughput across a fault and the `primary_fenced`
+//! abort counters the failover produces.
 //!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
 //! `scripts/bench.sh`.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use storm::cluster::{AbortCounts, LiveServed};
-use storm::dataplane::live::{LiveCluster, SERVER_SHARDS, TX_WINDOW};
+use storm::dataplane::live::{LiveClient, LiveCluster, SERVER_SHARDS, TX_WINDOW};
 use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
 use storm::ds::btree::BTreeConfig;
@@ -218,6 +224,7 @@ fn table_mask(tx: &(Vec<TxItem>, Vec<TxItem>)) -> u32 {
 
 /// One catalog-native run's results.
 struct CatalogRun {
+    clients: usize,
     rate: f64,
     commits: u64,
     aborts: u64,
@@ -235,9 +242,10 @@ impl CatalogRun {
                 "{{\"clients\": {c}, \"{sk}\": {s}, ",
                 "\"committed_tx_per_s\": {r:.0}, \"commit_tx\": {cm}, \"abort_tx\": {ab}, ",
                 "\"abort_rate\": {ar:.4}, \"tx_windows\": {w:?}, ",
-                "\"abort_reasons\": {rs}, \"per_table\": {{{pt}}}}}",
+                "\"abort_reasons\": {rs}, \"class_aborts\": {ca}, ",
+                "\"per_table\": {{{pt}}}}}",
             ),
-            c = CLIENTS,
+            c = self.clients,
             sk = scale_key,
             s = scale,
             r = self.rate,
@@ -250,19 +258,24 @@ impl CatalogRun {
             },
             w = self.served.tx_windows,
             rs = self.served.aborts.json(),
+            ca = self.served.class_json(),
             pt = per_table_json(names, &self.per_table),
         )
     }
 }
 
+/// A transaction labeled with its class (`tatp/<Kind>` /
+/// `smallbank/<Kind>`), so aborts tally per class.
+type LabeledTx = (String, (Vec<TxItem>, Vec<TxItem>));
+
 /// Run pre-generated per-client transaction mixes over a freshly loaded
 /// catalog cluster through the windowed scheduler; counts commits and
-/// aborts per table an involved transaction touched, and collects each
-/// client's final adaptive window.
+/// aborts per table an involved transaction touched, tallies aborts per
+/// transaction class, and collects each client's final adaptive window.
 fn catalog_pass(
     cat: CatalogConfig,
     rows: Vec<(ObjectId, u64)>,
-    mixes: Vec<Vec<(Vec<TxItem>, Vec<TxItem>)>>,
+    mixes: Vec<Vec<LabeledTx>>,
     value_len: u32,
 ) -> CatalogRun {
     let ntables = cat.len();
@@ -270,21 +283,24 @@ fn catalog_pass(
     cluster.load_rows(rows.into_iter(), |obj, k| stamped_value(obj, k, value_len));
     let mut handles = Vec::new();
     let t0 = Instant::now();
-    for (id, txs) in mixes.into_iter().enumerate() {
+    for (id, labeled) in mixes.into_iter().enumerate() {
         let seed = cluster.client_seed(id as u32 % NODES);
         handles.push(std::thread::spawn(move || {
             let mut client = seed.build(None);
+            let (classes, txs): (Vec<String>, Vec<_>) = labeled.into_iter().unzip();
             let masks: Vec<u32> = txs.iter().map(table_mask).collect();
             let outs = client.run_tx_batch(txs);
             let mut commits = 0u64;
             let mut aborts = 0u64;
             let mut per = vec![(0u64, 0u64); ntables];
-            for (out, mask) in outs.iter().zip(masks) {
+            let mut tallies: HashMap<String, AbortCounts> = HashMap::new();
+            for ((out, mask), class) in outs.iter().zip(masks).zip(classes) {
                 let committed = matches!(out, TxOutcome::Committed { .. });
                 if committed {
                     commits += 1;
                 } else {
                     aborts += 1;
+                    tallies.entry(class).or_default().record_outcome(out);
                 }
                 for (o, slot) in per.iter_mut().enumerate() {
                     if mask & (1 << o) != 0 {
@@ -296,7 +312,7 @@ fn catalog_pass(
                     }
                 }
             }
-            (commits, aborts, per, client.tx_window() as u32, client.abort_counts())
+            (commits, aborts, per, client.tx_window() as u32, client.abort_counts(), tallies)
         }));
     }
     let mut commits = 0u64;
@@ -304,8 +320,9 @@ fn catalog_pass(
     let mut per_table = vec![(0u64, 0u64); ntables];
     let mut windows = Vec::new();
     let mut reasons = AbortCounts::default();
+    let mut class_tallies: Vec<(String, AbortCounts)> = Vec::new();
     for h in handles {
-        let (c, a, per, win, counts) = h.join().unwrap();
+        let (c, a, per, win, counts, tallies) = h.join().unwrap();
         commits += c;
         aborts += a;
         for (acc, p) in per_table.iter_mut().zip(per) {
@@ -314,6 +331,7 @@ fn catalog_pass(
         }
         windows.push(win);
         reasons.merge(&counts);
+        class_tallies.extend(tallies);
     }
     let rate = commits as f64 / t0.elapsed().as_secs_f64();
     let mut served = cluster.shutdown();
@@ -321,7 +339,106 @@ fn catalog_pass(
         served.record_tx_window(w);
     }
     served.record_aborts(&reasons);
-    CatalogRun { rate, commits, aborts, per_table, served }
+    // Deterministic class order in the artifact regardless of which
+    // client thread finished first.
+    class_tallies.sort_by(|(a, _), (b, _)| a.cmp(b));
+    for (class, tally) in &class_tallies {
+        served.record_class_aborts(class, tally);
+    }
+    CatalogRun { clients: CLIENTS as usize, rate, commits, aborts, per_table, served }
+}
+
+/// One windowed chunk of the failover drill: runs `n` fresh TATP
+/// transactions, tallying commits/aborts per table and aborts per class.
+fn failover_chunk(
+    client: &mut LiveClient,
+    workload: &TatpWorkload,
+    rng: &mut Pcg64,
+    n: usize,
+    per: &mut [(u64, u64)],
+    tallies: &mut HashMap<String, AbortCounts>,
+) -> (u64, u64) {
+    let batch: Vec<_> = (0..n).map(|_| workload.next_tx(rng)).collect();
+    let classes: Vec<String> = batch.iter().map(|t| format!("tatp/{:?}", t.kind)).collect();
+    let sets: Vec<_> = batch.into_iter().map(|t| t.sets(TATP_VALUE_LEN)).collect();
+    let masks: Vec<u32> = sets.iter().map(table_mask).collect();
+    let outs = client.run_tx_batch(sets);
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for ((out, class), mask) in outs.iter().zip(classes).zip(masks) {
+        let committed = matches!(out, TxOutcome::Committed { .. });
+        if committed {
+            commits += 1;
+        } else {
+            aborts += 1;
+            tallies.entry(class).or_default().record_outcome(out);
+        }
+        for (o, slot) in per.iter_mut().enumerate() {
+            if mask & (1 << o) != 0 {
+                if committed {
+                    slot.0 += 1;
+                } else {
+                    slot.1 += 1;
+                }
+            }
+        }
+    }
+    (commits, aborts)
+}
+
+/// Failover drill for the bench artifact: TATP over a replication-2
+/// catalog, one node killed mid-run (between doorbell volleys) and
+/// recovered from its peers before the final chunks. The commit rate
+/// spans the whole fault window, and the fenced refusals the crash
+/// produces land in `abort_reasons`/`class_aborts` as `primary_fenced`.
+fn failover_pass(ntables: usize) -> CatalogRun {
+    const VICTIM: u32 = 1;
+    const CHUNK: usize = 400;
+    let cat = tatp::live_catalog(TATP_SUBSCRIBERS, TATP_VALUE_LEN).with_replication(2);
+    let cluster = LiveCluster::start_catalog(NODES, cat);
+    cluster.load_rows(TatpPopulation::new(TATP_SUBSCRIBERS).rows(7), |obj, k| {
+        stamped_value(obj, k, TATP_VALUE_LEN)
+    });
+    let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
+    let mut rng = Pcg64::seeded(0xFA17);
+    let mut client = cluster.client(0, None);
+    let mut per = vec![(0u64, 0u64); ntables];
+    let mut tallies: HashMap<String, AbortCounts> = HashMap::new();
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    let t0 = Instant::now();
+    // Healthy, then crash: the first degraded chunk eats the fenced
+    // burst while the client's lease expires, the rest fail over.
+    for _ in 0..3 {
+        let (c, a) =
+            failover_chunk(&mut client, &workload, &mut rng, CHUNK, &mut per, &mut tallies);
+        commits += c;
+        aborts += a;
+    }
+    cluster.kill_node(VICTIM);
+    for _ in 0..3 {
+        let (c, a) =
+            failover_chunk(&mut client, &workload, &mut rng, CHUNK, &mut per, &mut tallies);
+        commits += c;
+        aborts += a;
+    }
+    // Rebuild the victim from its peers and fail back.
+    cluster.recover_node(VICTIM);
+    client.renew_lease(VICTIM);
+    for _ in 0..2 {
+        let (c, a) =
+            failover_chunk(&mut client, &workload, &mut rng, CHUNK, &mut per, &mut tallies);
+        commits += c;
+        aborts += a;
+    }
+    let rate = commits as f64 / t0.elapsed().as_secs_f64();
+    let mut served = cluster.shutdown();
+    served.record_tx_window(client.tx_window() as u32);
+    served.record_aborts(&client.abort_counts());
+    let mut class_tallies: Vec<_> = tallies.into_iter().collect();
+    class_tallies.sort_by(|(a, _), (b, _)| a.cmp(b));
+    for (class, tally) in &class_tallies {
+        served.record_class_aborts(class, tally);
+    }
+    CatalogRun { clients: 1, rate, commits, aborts, per_table: per, served }
 }
 
 // --- mixed-backend lookups (heterogeneous catalog, PR 4) -----------------
@@ -566,7 +683,10 @@ fn main() {
             let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
             let mut rng = Pcg64::seeded(0x4A11 + id as u64);
             (0..TATP_TXS)
-                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .map(|_| {
+                    let tx = workload.next_tx(&mut rng);
+                    (format!("tatp/{:?}", tx.kind), tx.sets(TATP_VALUE_LEN))
+                })
                 .collect::<Vec<_>>()
         })
         .collect();
@@ -602,7 +722,10 @@ fn main() {
             let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
             let mut rng = Pcg64::seeded(0x4A11 + id as u64);
             (0..TATP_TXS)
-                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .map(|_| {
+                    let tx = workload.next_tx(&mut rng);
+                    (format!("tatp/{:?}", tx.kind), tx.sets(TATP_VALUE_LEN))
+                })
                 .collect::<Vec<_>>()
         })
         .collect();
@@ -634,7 +757,10 @@ fn main() {
             let workload = SmallBankWorkload::new(sb_accounts);
             let mut rng = Pcg64::seeded(0x5B11 + id as u64);
             (0..TATP_TXS)
-                .map(|_| workload.next_tx(&mut rng).sets(TATP_VALUE_LEN))
+                .map(|_| {
+                    let tx = workload.next_tx(&mut rng);
+                    (format!("smallbank/{:?}", tx.kind), tx.sets(TATP_VALUE_LEN))
+                })
                 .collect::<Vec<_>>()
         })
         .collect();
@@ -654,6 +780,21 @@ fn main() {
         println!("  table {name:<18} commit_tx {c:>7}  abort_tx {a:>5}");
     }
     println!("  adaptive tx windows: {:?}", sb.served.tx_windows);
+
+    // Failover drill: the four-table TATP catalog again, replication 2,
+    // node 1 killed between doorbell volleys and rebuilt from its peers —
+    // the crash surfaces as primary_fenced in the per-class tallies and
+    // the commit rate spans the whole fault window.
+    let failover = failover_pass(TATP_TABLES.len());
+    println!("# TATP failover drill (replication 2, node 1 killed + recovered), 1 client");
+    println!(
+        "tatp failover 1 client   {:>12.0} commit/s   ({} commits, {} aborts, {} fenced)",
+        failover.rate,
+        failover.commits,
+        failover.aborts,
+        failover.served.aborts.primary_fenced
+    );
+    println!("  class aborts: {}", failover.served.class_json());
 
     // Mixed-backend lookups: one object of each kind on one cluster —
     // the heterogeneous catalog's measured trade-off (fine-grained MICA
@@ -743,6 +884,10 @@ fn main() {
     json.push_str(&format!(
         "  \"smallbank\": {},\n",
         sb.json_row(&SB_TABLES, "accounts", sb_accounts)
+    ));
+    json.push_str(&format!(
+        "  \"tatp_failover\": {},\n",
+        failover.json_row(&TATP_TABLES, "subscribers", TATP_SUBSCRIBERS)
     ));
     json.push_str(&format!(
         concat!(

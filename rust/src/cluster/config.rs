@@ -176,6 +176,13 @@ pub struct SimConfig {
     /// B-link tree instead of a MICA table, so simulated transactions
     /// mix item-granularity and leaf-granularity OCC. TATP workload only.
     pub tatp_cf_btree: bool,
+    /// Copies of every row (primary-backup replication). 1 = unreplicated.
+    /// With `r > 1` each committed write also ships `r - 1` backup-apply
+    /// RPCs in the commit volley; the simulator charges their modeled
+    /// wire bytes (request framing plus the committed value image) so the
+    /// replication bandwidth tax shows up in throughput, clamped to the
+    /// cluster size at load time.
+    pub replication: u32,
     /// Host cost knobs.
     pub host: HostParams,
 }
@@ -203,6 +210,7 @@ impl SimConfig {
             conn_multiplier: 1,
             rpc_via_sendrecv: false,
             tatp_cf_btree: false,
+            replication: 1,
             host: HostParams::default(),
         }
     }

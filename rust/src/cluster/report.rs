@@ -9,8 +9,10 @@ use crate::sim::Nanos;
 /// reasons are visible: a wall of `LockConflict` means write contention,
 /// `ValidationVersion`/`ValidationLocked` mean read-write interleaving,
 /// `ValidationMoved` means structural churn (B-link splits racing
-/// readers), and `Unsupported` means a client is aiming transactions at
-/// a backend kind outside the opcode set.
+/// readers), `Unsupported` means a client is aiming transactions at
+/// a backend kind outside the opcode set, and `PrimaryFenced` means the
+/// run hit a failover window (a deposed primary refusing writes while
+/// clients re-routed to the promoted backup).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct AbortCounts {
     /// Execution-phase write-lock conflicts.
@@ -23,6 +25,9 @@ pub struct AbortCounts {
     pub validation_moved: u64,
     /// A lock/commit opcode answered with the typed dispatch error.
     pub unsupported: u64,
+    /// A lock/replication opcode hit a fenced (deposed or unrecovered)
+    /// node; the retry routes to the promoted backup.
+    pub primary_fenced: u64,
 }
 
 impl AbortCounts {
@@ -34,6 +39,7 @@ impl AbortCounts {
             AbortReason::ValidationLocked => self.validation_locked += 1,
             AbortReason::ValidationMoved => self.validation_moved += 1,
             AbortReason::Unsupported => self.unsupported += 1,
+            AbortReason::PrimaryFenced => self.primary_fenced += 1,
         }
     }
 
@@ -51,6 +57,7 @@ impl AbortCounts {
         self.validation_locked += other.validation_locked;
         self.validation_moved += other.validation_moved;
         self.unsupported += other.unsupported;
+        self.primary_fenced += other.primary_fenced;
     }
 
     /// Total aborts across all reasons.
@@ -60,6 +67,7 @@ impl AbortCounts {
             + self.validation_locked
             + self.validation_moved
             + self.unsupported
+            + self.primary_fenced
     }
 
     /// The JSON object benches embed in `BENCH_live.json`.
@@ -68,13 +76,14 @@ impl AbortCounts {
             concat!(
                 "{{\"lock_conflict\": {}, \"validation_version\": {}, ",
                 "\"validation_locked\": {}, \"validation_moved\": {}, ",
-                "\"unsupported\": {}}}"
+                "\"unsupported\": {}, \"primary_fenced\": {}}}"
             ),
             self.lock_conflict,
             self.validation_version,
             self.validation_locked,
             self.validation_moved,
             self.unsupported,
+            self.primary_fenced,
         )
     }
 }
@@ -98,6 +107,12 @@ pub struct LiveServed {
     /// [`LiveServed::record_aborts`] (each `LiveClient` counts its own;
     /// see `LiveClient::abort_counts`).
     pub aborts: AbortCounts,
+    /// Per-transaction-class abort tallies (`("tatp/GetSubscriberData",
+    /// counts)`, `("smallbank/WriteCheck", counts)`, …) recorded via
+    /// [`LiveServed::record_class_aborts`]. Per-client tallies say *who*
+    /// aborted; these say *which workload shape* did — a failover window
+    /// shows up as `primary_fenced` concentrated in the write classes.
+    pub class_aborts: Vec<(String, AbortCounts)>,
 }
 
 impl LiveServed {
@@ -109,6 +124,33 @@ impl LiveServed {
     /// Roll one client's per-reason abort tallies into the run's.
     pub fn record_aborts(&mut self, counts: &AbortCounts) {
         self.aborts.merge(counts);
+    }
+
+    /// Roll a per-transaction-class tally into the run's (merging with
+    /// an existing class of the same name, so multiple clients running
+    /// the same mix aggregate).
+    pub fn record_class_aborts(&mut self, class: &str, counts: &AbortCounts) {
+        match self.class_aborts.iter_mut().find(|(name, _)| name == class) {
+            Some((_, existing)) => existing.merge(counts),
+            None => self.class_aborts.push((class.to_string(), *counts)),
+        }
+    }
+
+    /// A class's rolled-up tally, if any client recorded it.
+    pub fn class_aborts(&self, class: &str) -> Option<&AbortCounts> {
+        self.class_aborts.iter().find(|(name, _)| name == class).map(|(_, c)| c)
+    }
+
+    /// The per-class JSON object benches embed in `BENCH_live.json`
+    /// (`{"tatp/UpdateLocation": {...}, ...}`; classes in recording
+    /// order).
+    pub fn class_json(&self) -> String {
+        let rows: Vec<String> = self
+            .class_aborts
+            .iter()
+            .map(|(name, counts)| format!("\"{}\": {}", name, counts.json()))
+            .collect();
+        format!("{{{}}}", rows.join(", "))
     }
 
     /// Total served per node.

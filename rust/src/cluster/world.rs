@@ -144,11 +144,14 @@ struct Resolver {
     objs: Vec<SimObj>,
     farm: Option<FarmGeo>,
     nodes: u32,
+    /// Copies per row; with `> 1` the engine's commit volley also ships
+    /// backup applies to the chain's tail (see [`SimConfig::replication`]).
+    replication: u32,
 }
 
 impl Resolver {
     fn dummy() -> Self {
-        Resolver { mode: RMode::RpcOnly, objs: Vec::new(), farm: None, nodes: 1 }
+        Resolver { mode: RMode::RpcOnly, objs: Vec::new(), farm: None, nodes: 1, replication: 1 }
     }
 
     /// The object's MICA client (modes that predate the heterogeneous
@@ -251,6 +254,11 @@ impl DsCallbacks for Resolver {
 
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
         owner_of(key, self.nodes)
+    }
+
+    fn replicas(&self, obj: ObjectId, key: u64) -> Vec<u32> {
+        let primary = self.owner(obj, key);
+        (0..self.replication).map(|i| (primary + i) % self.nodes).collect()
     }
 
     fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
@@ -438,7 +446,8 @@ impl World {
             let max_leaves = (cf_rows / 2).max(64);
             table_cfgs[3] = ObjectConfig::BTree(BTreeConfig { max_leaves });
         }
-        let cat_cfg = CatalogConfig::heterogeneous(table_cfgs.clone());
+        let repl = cfg.replication.clamp(1, cfg.nodes);
+        let cat_cfg = CatalogConfig::heterogeneous(table_cfgs.clone()).with_replication(repl);
 
         // --- nodes: stores, NICs ----------------------------------------
         let mut nodes: Vec<NodeSim> = Vec::with_capacity(cfg.nodes as usize);
@@ -486,32 +495,39 @@ impl World {
         }
 
         // --- load data ----------------------------------------------------
+        // Each row lands on its whole replica chain (primary + the next
+        // `repl - 1` nodes); the FaRM hopscotch baseline stays
+        // unreplicated — it predates the replicated catalog.
+        let nnodes = cfg.nodes;
+        let chain_of =
+            move |key: u64| (0..repl).map(move |i| (owner_of(key, nnodes) + i) % nnodes);
         match cfg.workload {
             WorkloadKind::KvLookups => {
                 for key in 1..=cfg.total_keys() {
-                    let owner = owner_of(key, cfg.nodes) as usize;
-                    let nd = &mut nodes[owner];
-                    if let Some(h) = nd.store.hop.as_mut() {
-                        h.insert(key, None);
+                    if nodes[0].store.hop.is_some() {
+                        let owner = owner_of(key, cfg.nodes) as usize;
+                        nodes[owner].store.hop.as_mut().expect("farm store").insert(key, None);
                     } else {
-                        nd.store.cat.insert(ObjectId(0), key, None);
+                        for nd in chain_of(key) {
+                            nodes[nd as usize].store.cat.insert(ObjectId(0), key, None);
+                        }
                     }
                 }
             }
             WorkloadKind::Tatp { subscribers_per_node } => {
                 let pop = TatpPopulation::new(subscribers_per_node * cfg.nodes as u64);
                 for (obj, key) in pop.rows(cfg.seed) {
-                    let owner = owner_of(key, cfg.nodes) as usize;
-                    let nd = &mut nodes[owner];
-                    nd.store.cat.insert(obj, key, None);
+                    for nd in chain_of(key) {
+                        nodes[nd as usize].store.cat.insert(obj, key, None);
+                    }
                 }
             }
             WorkloadKind::SmallBank { accounts_per_node } => {
                 let pop = SmallBankPopulation::new(accounts_per_node * cfg.nodes as u64);
                 for (obj, key) in pop.rows() {
-                    let owner = owner_of(key, cfg.nodes) as usize;
-                    let nd = &mut nodes[owner];
-                    nd.store.cat.insert(obj, key, None);
+                    for nd in chain_of(key) {
+                        nodes[nd as usize].store.cat.insert(obj, key, None);
+                    }
                 }
             }
         }
@@ -569,7 +585,7 @@ impl World {
                     h: 8,
                     region_of: farm_regions.clone(),
                 });
-                let resolver = Resolver { mode, objs, farm, nodes: cfg.nodes };
+                let resolver = Resolver { mode, objs, farm, nodes: cfg.nodes, replication: repl };
                 let coros = (0..cfg.coros)
                     .map(|_| CoroSim {
                         sm: CoroSm::Idle,
@@ -1358,7 +1374,14 @@ impl World {
         }
         let ud = self.ud;
         // request_wire_bytes already includes the 16-byte RPC header.
-        let size = request_wire_bytes(&req);
+        let mut size = request_wire_bytes(&req);
+        if matches!(req.op, RpcOp::ReplicaUpsert) && req.value.is_none() {
+            // The metadata-only simulator carries no value bytes, but a
+            // backup apply ships the committed image on the wire — charge
+            // the configured value size so replication's bandwidth tax is
+            // modeled.
+            size += self.cfg.value_len;
+        }
         let mut cost = h.post_wqe as Nanos;
         if ud {
             cost += h.ud_frame_cpu as Nanos;
@@ -1717,6 +1740,55 @@ mod tests {
         let (a, b) = (mk(), mk());
         assert_eq!(a.ops, b.ops);
         assert_eq!(a.aborts, b.aborts);
+    }
+
+    #[test]
+    fn replicated_tatp_ships_backup_applies() {
+        // Primary-backup replication in the simulator: every committed
+        // write ships `r - 1` extra backup-apply RPCs in the commit
+        // volley, so rpcs/op must rise against the unreplicated run (the
+        // modeled replication wire+CPU tax), while the mix still commits.
+        let base_cfg = || {
+            let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3);
+            cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 1_000 };
+            cfg
+        };
+        let base = World::new(base_cfg()).run();
+        let mut repl_cfg = base_cfg();
+        repl_cfg.replication = 2;
+        let repl = World::new(repl_cfg).run();
+        assert!(repl.ops > 500, "replicated commits {}", repl.ops);
+        assert!(repl.abort_rate() < 0.1, "abort rate {}", repl.abort_rate());
+        assert!(
+            repl.rpcs_per_op > base.rpcs_per_op,
+            "replication must ship extra RPCs: {} vs {}",
+            repl.rpcs_per_op,
+            base.rpcs_per_op
+        );
+    }
+
+    #[test]
+    fn replicated_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3);
+            cfg.workload = WorkloadKind::SmallBank { accounts_per_node: 1_000 };
+            cfg.replication = 2;
+            World::new(cfg).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.aborts, b.aborts);
+        assert_eq!(a.p50_ns, b.p50_ns);
+    }
+
+    #[test]
+    fn replication_clamps_to_cluster_size() {
+        // r = 8 over 3 nodes degrades to full replication, not a panic.
+        let mut cfg = quick_cfg(SystemKind::Storm(StormMode::OneTwoSided), 3);
+        cfg.workload = WorkloadKind::Tatp { subscribers_per_node: 500 };
+        cfg.replication = 8;
+        let r = World::new(cfg).run();
+        assert!(r.ops > 100, "commits {}", r.ops);
     }
 
     #[test]

@@ -47,10 +47,22 @@
 //!   surface shard imbalance at shutdown;
 //! * `lookup_start` address resolution runs through the **AOT-compiled
 //!   XLA artifacts via PJRT** ([`crate::runtime::Engine`]) in batches —
-//!   python never executes, only its compiled output does.
+//!   python never executes, only its compiled output does;
+//! * since PR 6 the dataplane **replicates**: every `(object, key)` has
+//!   a placement-derived replica chain ([`Placement::replicas`]),
+//!   committed writes ship backup applies as one extra doorbell group of
+//!   the commit volley (acked before any item lock releases), clients
+//!   track logical per-node leases and route to the first live replica,
+//!   a fenced node refuses write-class opcodes with
+//!   [`RpcResult::PrimaryFenced`], and a crashed node rebuilds its
+//!   tables from its peers — bulk one-sided bucket sweeps plus one
+//!   [`RpcOp::ChainScan`] per shard — before regaining write authority
+//!   ([`LiveCluster::recover_node`]). Fault injection (kill / stall /
+//!   fence per node) drives the failover test battery; see
+//!   [`crate::dataplane`] docs for the protocol and lease invariants.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -61,7 +73,8 @@ use crate::ds::btree::{parse_leaf_header, parse_leaf_view, BTreeRouteResolver};
 use crate::ds::catalog::{Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement, TableGeo};
 use crate::ds::hopscotch::{parse_neighborhood_view, HopscotchTable};
 use crate::ds::mica::{
-    fnv1a64, owner_of, parse_bucket_view, parse_item_view, ItemView, MicaClient, MicaConfig,
+    fnv1a64, owner_of, parse_bucket_items, parse_bucket_view, parse_item_view, ItemView,
+    MicaClient, MicaConfig,
 };
 use crate::fabric::loopback::{LoopbackFabric, RingConn, RpcEnvelope, SlotToken};
 use crate::mem::{MrKey, PageSize, RegionMode, RemoteAddr};
@@ -69,8 +82,9 @@ use crate::runtime::Engine;
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
 use super::rpc::{
-    decode_request, decode_response, encode_request_into, encode_response_into, request_obj,
-    RpcHeader, RPC_HEADER_BYTES, RPC_REQ_BODY_BYTES, RPC_RESP_BODY_BYTES,
+    decode_chain_items, decode_request, decode_response, decode_routing_snapshot,
+    encode_request_into, encode_response_into, request_obj, RpcHeader, RPC_HEADER_BYTES,
+    RPC_REQ_BODY_BYTES, RPC_RESP_BODY_BYTES,
 };
 use super::tx::{TxEngine, TxInput, TxItem, TxOp, TxOutcome, TxStep};
 
@@ -101,8 +115,9 @@ pub const TX_WINDOW: usize = 8;
 pub const TX_WINDOW_MAX: usize = 32;
 
 /// Correlation-cookie layout for scheduled transactions: the low bits are
-/// the engine's action tag (which stays below `2 * tx::LOCK_TAG`, i.e.
-/// 17 bits), the high bits the scheduler's window slot.
+/// the engine's action tag (which stays below `2 * tx::REPL_TAG`, i.e.
+/// 18 bits — replication acks included), the high bits the scheduler's
+/// window slot.
 const COOKIE_TAG_BITS: u32 = 20;
 
 fn cookie_of(slot: usize, tag: u32) -> u32 {
@@ -206,6 +221,27 @@ impl NodeShards {
     }
 }
 
+/// Per-node fault-injection and fencing switches, shared by every server
+/// lane of the node and the cluster handle that flips them. The
+/// deterministic harness the failover battery drives: flipping a switch
+/// between client operations produces the same observable schedule every
+/// run (the loopback fabric has no timers).
+#[derive(Default)]
+struct NodeCtl {
+    /// Crashed: lanes drop every envelope unserved, so ring slots
+    /// complete **empty** — the loopback analog of flushed work requests
+    /// on a torn-down QP. Clients treat the empty completion as the
+    /// failure-detector signal and expire the node's lease.
+    killed: AtomicBool,
+    /// Write authority revoked (lease fenced during failover, or a
+    /// restarted node that has not finished recovery): write-class
+    /// opcodes answer [`RpcResult::PrimaryFenced`], reads keep serving.
+    fenced: AtomicBool,
+    /// Stalled (a GC pause / partition model): lanes spin without
+    /// serving until resumed — requests queue rather than fail.
+    stalled: AtomicBool,
+}
+
 /// A running live cluster: per-shard server threads + shared fabric.
 pub struct LiveCluster {
     fabric: LoopbackFabric,
@@ -213,6 +249,7 @@ pub struct LiveCluster {
     place: Placement,
     nodes: u32,
     states: Vec<Arc<NodeShards>>,
+    ctls: Vec<Arc<NodeCtl>>,
     servers: Vec<Vec<JoinHandle<u64>>>,
 }
 
@@ -238,19 +275,24 @@ impl LiveCluster {
         let region_len = place.region_len() as usize;
         let (fabric, rxs) = LoopbackFabric::new_sharded(nodes, &[region_len], shards);
         let mut states = Vec::new();
+        let mut ctls = Vec::new();
         let mut servers = Vec::new();
         for (node, lane_rxs) in rxs.into_iter().enumerate() {
             let ns = Arc::new(NodeShards::new(&cat, &place));
             states.push(ns.clone());
+            let ctl = Arc::new(NodeCtl::default());
+            ctls.push(ctl.clone());
             let mut handles = Vec::new();
             for rx in lane_rxs {
                 let ns = ns.clone();
                 let fab = fabric.clone();
-                handles.push(std::thread::spawn(move || serve_node(node as u32, rx, ns, fab)));
+                let ctl = ctl.clone();
+                handles
+                    .push(std::thread::spawn(move || serve_node(node as u32, rx, ns, fab, ctl)));
             }
             servers.push(handles);
         }
-        LiveCluster { fabric, cat, place, nodes, states, servers }
+        LiveCluster { fabric, cat, place, nodes, states, ctls, servers }
     }
 
     /// Fabric handle for clients.
@@ -293,35 +335,224 @@ impl LiveCluster {
         value_of: impl Fn(ObjectId, u64) -> Vec<u8>,
     ) -> Result<(), PopulateError> {
         for (obj, key) in rows {
-            let owner = self.place.node_of(key);
-            let ns = &self.states[owner as usize];
-            let sid = self.place.shard_of(obj, key);
-            let mut g = ns.shards[sid as usize].lock().unwrap();
             let v = value_of(obj, key);
-            let res = g.insert(obj, key, Some(&v));
-            if res != RpcResult::Ok {
-                return Err(PopulateError { obj, key, result: res });
-            }
-            let geo = *self.place.geo(obj);
-            match geo.kind {
-                ObjectKind::Mica => {
-                    let local = g.table(obj).bucket_index_of(key);
-                    let global = self.place.base_bucket(obj, sid) + local;
-                    let image = g.table(obj).bucket_image(local);
-                    self.fabric.write(
-                        owner,
-                        DATA_REGION,
-                        geo.base + global * geo.bucket_bytes as u64,
-                        &image,
-                    );
+            // Chain-replicated population: the row lands on its primary
+            // and every backup of its placement-derived replica set, so
+            // a failover finds the data already on the promoted node.
+            for owner in self.place.replicas(obj, key) {
+                let ns = &self.states[owner as usize];
+                let sid = self.place.shard_of(obj, key);
+                let mut g = ns.shards[sid as usize].lock().unwrap();
+                let res = g.insert(obj, key, Some(&v));
+                if res != RpcResult::Ok {
+                    return Err(PopulateError { obj, key, result: res });
                 }
-                ObjectKind::BTree => mirror_btree_dirty(&self.fabric, owner, &geo, &mut g, obj),
-                ObjectKind::Hopscotch => {
-                    mirror_hop_dirty(&self.fabric, owner, &geo, &mut g, obj)
-                }
+                self.mirror_row(owner, obj, key, &mut g);
             }
         }
         Ok(())
+    }
+
+    /// Mirror the bytes the last mutation of `(obj, key)` in `g` dirtied
+    /// into `owner`'s packed data region, kind-dispatched: MICA mirrors
+    /// the key's bucket image, tree and hopscotch objects their own
+    /// dirty journals.
+    fn mirror_row(&self, owner: u32, obj: ObjectId, key: u64, g: &mut Catalog) {
+        let geo = *self.place.geo(obj);
+        match geo.kind {
+            ObjectKind::Mica => {
+                let sid = self.place.shard_of(obj, key);
+                let local = g.table(obj).bucket_index_of(key);
+                let global = self.place.base_bucket(obj, sid) + local;
+                let image = g.table(obj).bucket_image(local);
+                self.fabric.write(
+                    owner,
+                    DATA_REGION,
+                    geo.base + global * geo.bucket_bytes as u64,
+                    &image,
+                );
+            }
+            ObjectKind::BTree => mirror_btree_dirty(&self.fabric, owner, &geo, g, obj),
+            ObjectKind::Hopscotch => mirror_hop_dirty(&self.fabric, owner, &geo, g, obj),
+        }
+    }
+
+    /// Crash `node`: its lanes drop every queued and future request
+    /// unserved (ring slots complete empty, so clients observe the crash
+    /// instead of hanging — see [`NodeCtl`]), its shard catalogs are
+    /// replaced with empty ones and its mirrored region is zeroed:
+    /// volatile memory is gone. The node revives **fenced** —
+    /// [`Self::recover_node`] rebuilds it from its peers before write
+    /// authority returns. Deterministic when flipped between client
+    /// operations (nothing in flight), which is how the failover battery
+    /// drives it.
+    pub fn kill_node(&self, node: u32) {
+        let ctl = &self.ctls[node as usize];
+        ctl.fenced.store(true, Ordering::Release);
+        ctl.killed.store(true, Ordering::Release);
+        // Wipe storage after the switches flip; the per-shard locks
+        // order the wipe against any request already mid-service.
+        let ns = &self.states[node as usize];
+        for sid in 0..self.place.shards() {
+            let mut g = ns.shards[sid as usize].lock().unwrap();
+            *g = Catalog::for_shard(
+                &self.cat,
+                sid,
+                self.place.shards(),
+                RegionMode::Virtual(PageSize::Huge2M),
+                16,
+            );
+        }
+        self.fabric.write(node, DATA_REGION, 0, &vec![0u8; self.place.region_len() as usize]);
+    }
+
+    /// Stall `node`'s lanes (a GC pause / partition model): requests
+    /// queue — ring slots stay posted — and nothing fails;
+    /// [`Self::resume_node`] lets the backlog drain in order.
+    pub fn stall_node(&self, node: u32) {
+        self.ctls[node as usize].stalled.store(true, Ordering::Release);
+    }
+
+    /// Release a [`Self::stall_node`].
+    pub fn resume_node(&self, node: u32) {
+        self.ctls[node as usize].stalled.store(false, Ordering::Release);
+    }
+
+    /// Revoke `node`'s write authority without killing it: write-class
+    /// opcodes answer [`RpcResult::PrimaryFenced`] (clients expire the
+    /// lease and fail over to the next replica), reads keep serving —
+    /// fencing revokes authority, not data.
+    pub fn fence_node(&self, node: u32) {
+        self.ctls[node as usize].fenced.store(true, Ordering::Release);
+    }
+
+    /// Restore a fenced (never killed) node's write authority.
+    pub fn unfence_node(&self, node: u32) {
+        self.ctls[node as usize].fenced.store(false, Ordering::Release);
+    }
+
+    /// Rebuild a crashed node from its surviving peers and rejoin it.
+    ///
+    /// The recovery read path is the one-two-sided scheme writ large:
+    /// for every MICA object, a **bulk one-sided read** sweeps each
+    /// survivor's mirrored bucket array (parsed with the same wire-image
+    /// codec lookups use), and one [`RpcOp::ChainScan`] per shard picks
+    /// up the overflow-chain tail a bucket sweep cannot see. Tree and
+    /// hopscotch objects rebuild value-preserving from the peer catalogs
+    /// (their wire images carry no restorable OCC state; see
+    /// [`Catalog::install`]). Rows keep the **maximum version** observed
+    /// across peers and only rows whose replica chain contains `node`
+    /// install — the node re-hosts exactly what placement assigns it,
+    /// in sorted key order, so a rebuilt MICA shard is byte-identical to
+    /// a survivor's replica of it.
+    ///
+    /// Ordering is the lease invariant: lanes revive first (they serve
+    /// reads of the rebuilt state as installs mirror it) but stay
+    /// **fenced** until the rebuild completes — a recovering node can
+    /// never accept a write it would then lose again.
+    pub fn recover_node(&self, node: u32) {
+        use std::collections::hash_map::Entry;
+        let ctl = &self.ctls[node as usize];
+        assert!(ctl.killed.load(Ordering::Acquire), "recover_node targets a killed node");
+        ctl.killed.store(false, Ordering::Release);
+        // Harvest every surviving replica's rows, deduplicated by
+        // maximum version (a peer that saw a later commit wins).
+        let mut best: HashMap<(u32, u64), (u32, Option<Vec<u8>>)> = HashMap::new();
+        let mut absorb = |obj: ObjectId, key: u64, version: u32, value: Option<Vec<u8>>| {
+            if !self.place.replicas(obj, key).contains(&node) {
+                return; // placement assigns this row elsewhere
+            }
+            match best.entry((obj.0, key)) {
+                Entry::Occupied(mut o) => {
+                    if version > o.get().0 {
+                        o.insert((version, value));
+                    }
+                }
+                Entry::Vacant(v) => {
+                    v.insert((version, value));
+                }
+            }
+        };
+        for peer in 0..self.nodes {
+            if peer == node || self.ctls[peer as usize].killed.load(Ordering::Acquire) {
+                continue;
+            }
+            for o in 0..self.place.objects() {
+                let obj = ObjectId(o as u32);
+                let geo = *self.place.geo(obj);
+                match geo.kind {
+                    ObjectKind::Mica => {
+                        let mut buf = vec![0u8; geo.len as usize];
+                        self.fabric.read_into(peer, DATA_REGION, geo.base, &mut buf);
+                        for chunk in buf.chunks_exact(geo.bucket_bytes as usize) {
+                            let items = parse_bucket_items(chunk, geo.width, geo.item_size)
+                                .expect("malformed mirrored bucket image");
+                            for (key, version, value) in items {
+                                absorb(obj, key, version, Some(value));
+                            }
+                        }
+                        for sid in 0..self.place.shards() {
+                            let req = RpcRequest {
+                                obj,
+                                // ChainScan's key field selects the shard
+                                // (see `handle_request`).
+                                key: sid as u64,
+                                op: RpcOp::ChainScan,
+                                tx_id: 0,
+                                value: None,
+                            };
+                            let hdr = RpcHeader {
+                                src_node: node as u16,
+                                src_thread: 0,
+                                coro: 0,
+                                seq: 0,
+                                cookie: 0,
+                                is_response: false,
+                            };
+                            let mut payload = Vec::new();
+                            hdr.encode_into(&mut payload);
+                            encode_request_into(&req, &mut payload);
+                            let reply = self
+                                .fabric
+                                .rpc(node, peer, payload)
+                                .expect("surviving peer's event loop alive");
+                            let resp = decode_response(&reply[RPC_HEADER_BYTES as usize..])
+                                .expect("malformed chain-scan reply");
+                            if let RpcResult::Value { value: Some(bytes), .. } = resp.result {
+                                let items = decode_chain_items(&bytes)
+                                    .expect("malformed chain-scan payload");
+                                for (key, version, value) in items {
+                                    absorb(obj, key, version, value);
+                                }
+                            }
+                        }
+                    }
+                    ObjectKind::BTree | ObjectKind::Hopscotch => {
+                        let sid = self.place.shard_of(obj, 0); // home shard
+                        let g = self.states[peer as usize].shards[sid as usize].lock().unwrap();
+                        for (key, version, value) in g.items(obj) {
+                            absorb(obj, key, version, value);
+                        }
+                    }
+                }
+            }
+        }
+        // Install in sorted (object, key) order: the population loader
+        // iterates sorted key ranges, so a rebuilt table replays the
+        // survivor's insertion sequence — identical bucket slot and
+        // chain layout, hence byte-identical MICA wire images.
+        let mut rows: Vec<((u32, u64), (u32, Option<Vec<u8>>))> = best.into_iter().collect();
+        rows.sort_unstable_by_key(|&((o, k), _)| (o, k));
+        let ns = &self.states[node as usize];
+        for ((o, key), (version, value)) in rows {
+            let obj = ObjectId(o);
+            let sid = self.place.shard_of(obj, key);
+            let mut g = ns.shards[sid as usize].lock().unwrap();
+            let res = g.install(obj, key, version, value.as_deref());
+            assert_eq!(res, RpcResult::Ok, "recovery install refused: {obj:?} key {key}");
+            self.mirror_row(node, obj, key, &mut g);
+        }
+        ctl.fenced.store(false, Ordering::Release);
     }
 
     /// Load keys into one object.
@@ -373,6 +604,7 @@ impl LiveCluster {
                 .collect(),
             tx_windows: Vec::new(),
             aborts: AbortCounts::default(),
+            class_aborts: Vec::new(),
         }
     }
 }
@@ -400,19 +632,36 @@ fn serve_node(
     rx: Receiver<RpcEnvelope>,
     shards: Arc<NodeShards>,
     fabric: LoopbackFabric,
+    ctl: Arc<NodeCtl>,
 ) -> u64 {
     let mut served = 0u64;
     while let Ok(env) = rx.recv() {
+        // Shutdown poison (an empty message) outranks every fault
+        // switch: a stalled or crashed node must still join at shutdown.
+        if matches!(&env, RpcEnvelope::Message { payload, .. } if payload.is_empty()) {
+            break;
+        }
+        // Stalled lane (GC pause / partition model): the request waits —
+        // its ring slot stays posted — until resumed or the node dies.
+        while ctl.stalled.load(Ordering::Acquire) && !ctl.killed.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        if ctl.killed.load(Ordering::Acquire) {
+            // Crashed node: drop the envelope unserved. A ring slot
+            // completes empty — the loopback analog of a flushed work
+            // request on a torn-down QP — so the client observes the
+            // crash instead of hanging; a message's reply channel just
+            // closes. The lane itself stays parked on its receive
+            // channel, ready for `recover_node` to revive the node.
+            continue;
+        }
         match env {
             RpcEnvelope::Message { payload, reply, .. } => {
-                if payload.is_empty() {
-                    break; // shutdown poison message
-                }
                 let Some(hdr) = RpcHeader::decode(&payload) else { continue };
                 let Some(req) = decode_request(&payload[RPC_HEADER_BYTES as usize..]) else {
                     continue;
                 };
-                let resp = handle_request(node, &shards, &fabric, &req);
+                let resp = handle_request(node, &shards, &fabric, &ctl, &req);
                 served += 1;
                 if let Some(reply) = reply {
                     let mut out = Vec::with_capacity(
@@ -443,7 +692,7 @@ fn serve_node(
                         Some(req.obj),
                         "object id must be peekable at its fixed wire offset"
                     );
-                    let resp = handle_request(node, &shards, &fabric, &req);
+                    let resp = handle_request(node, &shards, &fabric, &ctl, &req);
                     reply_header(node, &hdr).encode_into(out);
                     encode_response_into(&resp, out);
                     ok = true;
@@ -519,6 +768,7 @@ fn handle_request(
     node: u32,
     ns: &NodeShards,
     fabric: &LoopbackFabric,
+    ctl: &NodeCtl,
     req: &RpcRequest,
 ) -> RpcResponse {
     let place = &ns.place;
@@ -528,7 +778,22 @@ fn handle_request(
         // routed to this lane). Typed dispatch error.
         return RpcResponse::inline(RpcResult::Unsupported);
     }
-    let sid = place.shard_of(req.obj, req.key);
+    if ctl.fenced.load(Ordering::Acquire) && req.op.is_write_class() {
+        // Write authority revoked (deposed primary / unrecovered
+        // restart): refuse before touching storage, so a stale lease
+        // holder can never commit through this node. Reads, `Unlock`
+        // and the recovery bulk-read opcodes keep serving — fencing
+        // revokes authority, not data.
+        return RpcResponse::inline(RpcResult::PrimaryFenced);
+    }
+    // ChainScan addresses a *shard*, not a key: its key field selects
+    // which shard's overflow chains to scan (hash placement cannot be
+    // inverted to aim a real key at a chosen shard).
+    let sid = if req.op == RpcOp::ChainScan {
+        (req.key % place.shards() as u64) as u32
+    } else {
+        place.shard_of(req.obj, req.key)
+    };
     let mut g = ns.shards[sid as usize].lock().unwrap();
     let mut resp = g.serve_rpc(req);
     let geo = *place.geo(req.obj);
@@ -644,6 +909,16 @@ enum ObjResolver {
 struct LiveResolver {
     objs: Vec<ObjResolver>,
     nodes: u32,
+    /// Replica-chain length every key is stored at (placement-derived).
+    replication: u32,
+    /// Client-side lease table: `alive[n]` is this client's belief that
+    /// node `n` holds a valid write lease. Routing consults it (first
+    /// live replica of the key's chain); an observed
+    /// [`RpcResult::PrimaryFenced`] or an empty ring completion expires
+    /// it. Leases are logical and deterministic — no wall clock — per
+    /// the live driver's contract; `renew_lease` re-admits a recovered
+    /// node.
+    alive: Vec<bool>,
     engine: Option<Engine>,
     /// Object 0's bucket mask when object 0 is a MICA table (the
     /// geometry the compiled artifact models); `None` disables the
@@ -655,6 +930,18 @@ struct LiveResolver {
 }
 
 impl LiveResolver {
+    /// First live replica of `key`'s chain — the node a lease-tracking
+    /// client routes reads and writes to. With every replica's lease
+    /// expired the hash primary is returned: posts to it fail fast with
+    /// empty completions instead of silently misrouting.
+    fn live_owner(&self, key: u64) -> u32 {
+        let primary = owner_of(key, self.nodes);
+        (0..self.replication)
+            .map(|i| (primary + i) % self.nodes)
+            .find(|&n| self.alive[n as usize])
+            .unwrap_or(primary)
+    }
+
     /// Resolve a batch of object-0 keys through the compiled artifact,
     /// seeding the hint cache the subsequent per-op `lookup_start` calls
     /// consume. (The artifact models object 0's MICA geometry, whose
@@ -692,18 +979,26 @@ impl LiveResolver {
 
 impl DsCallbacks for LiveResolver {
     fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
-        if let Some(hint) = self.hint_cache.remove(&(obj.0, key)) {
+        // Lease-aware routing: target the first live replica of the
+        // key's chain. Every replica mirrors the same packed layout, so
+        // a primary's hint geometry is valid on its backups verbatim —
+        // only the node differs.
+        let node = self.live_owner(key);
+        if let Some(mut hint) = self.hint_cache.remove(&(obj.0, key)) {
+            hint.node = node;
             return Some(hint); // resolved by the PJRT executable
         }
-        let nodes = self.nodes;
         match &mut self.objs[obj.0 as usize] {
-            ObjResolver::Mica(c) => Some(c.lookup_start(key)),
+            ObjResolver::Mica(c) => {
+                let mut hint = c.lookup_start(key);
+                hint.node = node;
+                Some(hint)
+            }
             // Cached-inner-level traversal: a warm route answers with one
             // leaf read; a cold (or invalidated) one declines, and the
             // lookup starts with the RPC re-traversal that warms it.
-            ObjResolver::BTree(b) => b.start(owner_of(key, nodes), key),
+            ObjResolver::BTree(b) => b.start(node, key),
             ObjResolver::Hop(g) => {
-                let node = owner_of(key, nodes);
                 let home = fnv1a64(key) & g.mask;
                 Some(LookupHint {
                     node,
@@ -717,15 +1012,16 @@ impl DsCallbacks for LiveResolver {
         }
     }
     fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
-        let nodes = self.nodes;
+        let node = self.live_owner(key);
         match (&mut self.objs[obj.0 as usize], view) {
             (ObjResolver::Mica(c), ReadView::Bucket(b)) => c.lookup_end_bucket(key, b),
             (ObjResolver::Mica(c), ReadView::Item(i)) => c.lookup_end_item(key, *i),
             // Fence check, pending-address binding, and stale-route
             // narrowing all live in the shared resolver (read → RPC →
-            // done, never read → read).
+            // done, never read → read). The route cache consulted is the
+            // lease-routed node's — the one the read was issued to.
             (ObjResolver::BTree(b), ReadView::Leaf(leaf)) => {
-                b.end_read(owner_of(key, nodes), key, leaf.as_ref())
+                b.end_read(node, key, leaf.as_ref())
             }
             (ObjResolver::Hop(g), ReadView::Neighborhood(nv)) => {
                 match HopscotchTable::find_in_view(nv, key) {
@@ -774,7 +1070,24 @@ impl DsCallbacks for LiveResolver {
         }
     }
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
-        owner_of(key, self.nodes)
+        self.live_owner(key)
+    }
+    /// The live replica chain of `(obj, key)`: the placement chain
+    /// filtered through this client's lease table, so the commit phase
+    /// never ships a backup apply to a node it believes dead. With the
+    /// whole chain expired the hash primary stands in (its posts fail
+    /// fast), mirroring [`Self::live_owner`]'s fallback.
+    fn replicas(&self, _obj: ObjectId, key: u64) -> Vec<u32> {
+        let primary = owner_of(key, self.nodes);
+        let live: Vec<u32> = (0..self.replication)
+            .map(|i| (primary + i) % self.nodes)
+            .filter(|&n| self.alive[n as usize])
+            .collect();
+        if live.is_empty() {
+            vec![primary]
+        } else {
+            live
+        }
     }
     fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
         match &self.objs[obj.0 as usize] {
@@ -842,6 +1155,8 @@ impl ClientSeed {
             resolver: LiveResolver {
                 objs,
                 nodes,
+                replication: self.place.replication(),
+                alive: vec![true; nodes as usize],
                 engine,
                 mask0: self.cat.objects[0].as_mica().map(|c| c.buckets - 1),
                 hint_cache: HashMap::new(),
@@ -920,11 +1235,16 @@ fn parse_view_at(place: &Placement, offset: u64, bytes: &[u8]) -> ReadView {
     }
 }
 
-fn decode_reply(b: &[u8]) -> RpcResponse {
-    // An empty reply means the server event loop dropped the slot unserved
-    // (shutdown raced a posted request) — fail loudly, don't hang.
-    assert!(b.len() > RPC_HEADER_BYTES as usize, "server event loop gone");
-    decode_response(&b[RPC_HEADER_BYTES as usize..]).expect("malformed response")
+/// Decode a ring reply. `None` for an **empty** reply: the server event
+/// loop dropped the slot unserved — the node crashed (fault injection)
+/// or shut down — and the loopback ring completes the slot empty, the
+/// analog of a flushed work request on a torn-down QP. Callers treat it
+/// as the failure-detector signal and expire the node's lease.
+fn decode_reply(b: &[u8]) -> Option<RpcResponse> {
+    if b.len() <= RPC_HEADER_BYTES as usize {
+        return None;
+    }
+    Some(decode_response(&b[RPC_HEADER_BYTES as usize..]).expect("malformed response"))
 }
 
 /// A live client: executes lookups and transactions over the fabric,
@@ -1002,10 +1322,26 @@ impl LiveClient {
         })
     }
 
-    /// Blocking RPC (post + wait on the same slot).
+    /// Blocking RPC (post + wait on the same slot). A dead node's empty
+    /// completion expires its lease and answers
+    /// [`RpcResult::PrimaryFenced`] — the same refusal an explicitly
+    /// fenced node sends — so callers see one failover signal; an
+    /// observed fencing refusal expires the lease too (invariant L1:
+    /// never write through an expired lease).
     fn send_rpc(&mut self, node: u32, req: &RpcRequest) -> RpcResponse {
         let tok = self.post_req(node, req, 0);
-        self.conns[node as usize].take_reply(tok, decode_reply)
+        match self.conns[node as usize].take_reply(tok, decode_reply) {
+            Some(resp) => {
+                if resp.result == RpcResult::PrimaryFenced {
+                    self.resolver.alive[node as usize] = false;
+                }
+                resp
+            }
+            None => {
+                self.resolver.alive[node as usize] = false;
+                RpcResponse::inline(RpcResult::PrimaryFenced)
+            }
+        }
     }
 
     fn serve_read(&mut self, obj: ObjectId, key: u64, node: u32, addr: RemoteAddr, len: u32) -> ReadView {
@@ -1176,15 +1512,38 @@ impl LiveClient {
                 }
             };
             let (tok, p) = inflight.remove(at);
-            let resp = self.conns[p.node as usize].take_reply(tok, decode_reply);
-            let input = if p.as_read {
-                LkInput::Read(item_read_view(p.req.key, resp))
-            } else {
-                LkInput::Rpc(resp)
-            };
-            let mut sm = sms[p.idx].take().expect("machine parked on rpc");
-            if !self.drive(p.idx, &mut sm, Some(input), &mut rpcq, &mut results) {
-                sms[p.idx] = Some(sm);
+            match self.conns[p.node as usize].take_reply(tok, decode_reply) {
+                Some(resp) => {
+                    let input = if p.as_read {
+                        LkInput::Read(item_read_view(p.req.key, resp))
+                    } else {
+                        LkInput::Rpc(resp)
+                    };
+                    let mut sm = sms[p.idx].take().expect("machine parked on rpc");
+                    if !self.drive(p.idx, &mut sm, Some(input), &mut rpcq, &mut results) {
+                        sms[p.idx] = Some(sm);
+                    }
+                }
+                None => {
+                    // The node died under this lookup: expire its lease
+                    // and restart the machine from scratch — the fresh
+                    // `lookup_start` routes to the next live replica of
+                    // the key's chain. Terminates: each restart needs a
+                    // live-believed node, and every empty completion
+                    // expires one.
+                    self.resolver.alive[p.node as usize] = false;
+                    assert!(
+                        self.resolver.live_owner(p.req.key) != p.node,
+                        "no live replica left for {:?} key {}",
+                        p.req.obj,
+                        p.req.key
+                    );
+                    let mut sm = LookupSm::new(p.req.obj, p.req.key);
+                    sms[p.idx] = None;
+                    if !self.drive(p.idx, &mut sm, None, &mut rpcq, &mut results) {
+                        sms[p.idx] = Some(sm);
+                    }
+                }
             }
         }
 
@@ -1238,9 +1597,84 @@ impl LiveClient {
             "unknown catalog object {obj:?} ({} hosted)",
             self.place.objects()
         );
-        let node = self.place.node_of(key);
+        let node = self.resolver.live_owner(key);
         let req = RpcRequest { obj, key, op, tx_id: 0, value };
         self.send_rpc(node, &req).result
+    }
+
+    /// Expire this client's lease on `node`: lookups and transactions
+    /// route to the next live replica in each key's chain until
+    /// [`Self::renew_lease`]. Tests use this to model the lease timeout
+    /// deterministically; in production the same transition happens
+    /// implicitly when the client observes [`RpcResult::PrimaryFenced`]
+    /// or an empty ring completion from a dead lane.
+    pub fn expire_lease(&mut self, node: u32) {
+        self.resolver.alive[node as usize] = false;
+    }
+
+    /// Re-admit `node` to this client's routing after recovery
+    /// ([`LiveCluster::recover_node`]) — the lease renewal half of
+    /// failback.
+    pub fn renew_lease(&mut self, node: u32) {
+        self.resolver.alive[node as usize] = true;
+    }
+
+    /// Does this client still hold a live lease on `node`?
+    pub fn lease_alive(&self, node: u32) -> bool {
+        self.resolver.alive[node as usize]
+    }
+
+    /// Warm this client's whole B-link route cache for `obj` in one
+    /// [`RpcOp::RoutingSnapshot`] round trip per node — the bulk-install
+    /// alternative to learning leaf routes one fence miss at a time. A
+    /// cold client calls it before its first lookup (which then goes
+    /// one-sided); a client that outlived a crash calls it again after
+    /// [`Self::renew_lease`], because a rebuilt tree's leaves need not
+    /// land at their old offsets. Dead lanes are skipped. Returns the
+    /// number of leaf routes installed.
+    pub fn warm_routes(&mut self, obj: ObjectId) -> usize {
+        let geo = *self.place.geo(obj);
+        assert!(
+            geo.kind == ObjectKind::BTree,
+            "warm_routes targets a B-link object; {obj:?} is {:?}",
+            geo.kind
+        );
+        let mut installed = 0usize;
+        for node in 0..self.nodes {
+            if !self.resolver.alive[node as usize] {
+                continue;
+            }
+            let req = RpcRequest { obj, key: 0, op: RpcOp::RoutingSnapshot, tx_id: 0, value: None };
+            let hdr = self.req_header(0);
+            let mut payload = Vec::new();
+            hdr.encode_into(&mut payload);
+            encode_request_into(&req, &mut payload);
+            // Message path, not a ring slot: the snapshot grows with the
+            // tree, so the reply must not be bounded by slot capacity.
+            let Some(reply) = self.fabric.rpc(self.node_id, node, payload) else { continue };
+            if reply.len() <= RPC_HEADER_BYTES as usize {
+                continue; // killed lane dropped the request unserved
+            }
+            let resp = decode_response(&reply[RPC_HEADER_BYTES as usize..])
+                .expect("malformed routing-snapshot reply");
+            let RpcResult::Value { value: Some(bytes), .. } = resp.result else { continue };
+            let pairs = decode_routing_snapshot(&bytes).expect("malformed snapshot payload");
+            let snapshot: Vec<(u64, RemoteAddr)> = pairs
+                .into_iter()
+                .map(|(low, off)| {
+                    // Tree-local leaf offsets rebase to the node's packed
+                    // region, exactly like the route-repair path does for
+                    // addresses learned from RPC replies.
+                    (low, RemoteAddr { region: DATA_REGION, offset: geo.base + off })
+                })
+                .collect();
+            installed += snapshot.len();
+            let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize] else {
+                unreachable!("kind checked above")
+            };
+            b.install(node, snapshot);
+        }
+        installed
     }
 
     /// Run one Storm transaction to completion over the fabric — the
@@ -1372,20 +1806,56 @@ impl LiveClient {
                     0
                 });
             let f = inflight.remove(at);
-            let (hdr, resp) = self.conns[f.node as usize].take_reply(f.tok, |b| {
-                assert!(b.len() > RPC_HEADER_BYTES as usize, "server event loop gone");
+            let reply = self.conns[f.node as usize].take_reply(f.tok, |b| {
+                if b.len() <= RPC_HEADER_BYTES as usize {
+                    // Empty completion: the serving lane dropped the
+                    // envelope because the node is killed (or shut down).
+                    return None;
+                }
                 let hdr = RpcHeader::decode(b).expect("malformed reply header");
-                (hdr, decode_response(&b[RPC_HEADER_BYTES as usize..]).expect("malformed response"))
+                let resp =
+                    decode_response(&b[RPC_HEADER_BYTES as usize..]).expect("malformed response");
+                Some((hdr, resp))
             });
-            // Demultiplex by the in-band cookie the server echoed; the
-            // slot-token bookkeeping must agree with it.
-            let (slot, tag) = cookie_slot_tag(hdr.cookie);
-            debug_assert_eq!((slot, tag), (f.slot, f.tag), "reply cookie mismatch");
-            let input = if f.as_read {
-                TxInput::Read(item_read_view(f.key, resp))
-            } else {
-                TxInput::Rpc(resp)
+            let input = match reply {
+                Some((hdr, resp)) => {
+                    // Demultiplex by the in-band cookie the server echoed;
+                    // the slot-token bookkeeping must agree with it.
+                    let (slot, tag) = cookie_slot_tag(hdr.cookie);
+                    debug_assert_eq!((slot, tag), (f.slot, f.tag), "reply cookie mismatch");
+                    if resp.result == RpcResult::PrimaryFenced {
+                        // A fenced primary refused the write: expire its
+                        // lease so retries route to the backup (lease
+                        // invariant L1 — never write through an expired
+                        // lease again).
+                        self.resolver.alive[f.node as usize] = false;
+                    }
+                    if f.as_read {
+                        TxInput::Read(item_read_view(f.key, resp))
+                    } else {
+                        TxInput::Rpc(resp)
+                    }
+                }
+                None => {
+                    // Dead node mid-transaction. Expire the lease, then
+                    // synthesize the *conservative* input: a read becomes
+                    // a locked item view (forces a validation abort — a
+                    // phantom absence could wrongly commit), an RPC
+                    // becomes PrimaryFenced (typed abort, retried by the
+                    // caller against the promoted backup).
+                    self.resolver.alive[f.node as usize] = false;
+                    if f.as_read {
+                        TxInput::Read(ReadView::Item(Some(ItemView {
+                            key: f.key,
+                            version: 0,
+                            locked: true,
+                        })))
+                    } else {
+                        TxInput::Rpc(RpcResponse::inline(RpcResult::PrimaryFenced))
+                    }
+                }
             };
+            let (slot, tag) = (f.slot, f.tag);
             let step = {
                 let tx = slots[slot].as_mut().expect("completion for an inactive tx slot");
                 tx.engine.complete(&mut self.resolver, tag, input)
@@ -1727,6 +2197,113 @@ mod tests {
         let c = cluster();
         let client = c.client(0, None);
         assert_eq!(client.tx_window(), TX_WINDOW);
+        c.shutdown();
+    }
+
+    /// PR 6 tentpole core: a committed write is durable on every replica
+    /// of its chain *before* the commit reports, so a client whose lease
+    /// on the primary expires reads its own write from the backup.
+    #[test]
+    fn replicated_commit_fails_over_to_backup() {
+        let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+        let cat = CatalogConfig::single(cfg).with_replication(2);
+        let c = LiveCluster::start_catalog(3, cat);
+        c.load(1..=100, |_| vec![7u8; 32]);
+        let mut client = c.client(0, None);
+        let out =
+            client.run_tx(vec![], vec![TxItem::update(ObjectId(0), 7).with_value(vec![9u8; 32])]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        let primary = owner_of(7, 3);
+        let at_primary = client.lookup_batch(&[7]);
+        assert_eq!((at_primary[0].node, at_primary[0].version), (primary, 2));
+        // Lease timeout on the primary: the same lookup must route to the
+        // next replica in the chain and still see the committed version —
+        // the backup apply was acked inside the commit volley, not
+        // replicated lazily.
+        client.expire_lease(primary);
+        let at_backup = client.lookup_batch(&[7]);
+        assert_eq!((at_backup[0].node, at_backup[0].version), ((primary + 1) % 3, 2));
+        assert!(at_backup[0].found && !at_backup[0].locked);
+        c.shutdown();
+    }
+
+    /// Fencing revokes write authority: the fenced primary answers
+    /// write-class opcodes with the typed `PrimaryFenced` (counted per
+    /// reason), the observing client expires its lease, and the retry
+    /// commits on the promoted backup.
+    #[test]
+    fn fenced_primary_refuses_and_lease_failover_commits() {
+        use crate::dataplane::tx::AbortReason;
+        let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+        let cat = CatalogConfig::single(cfg).with_replication(2);
+        let c = LiveCluster::start_catalog(3, cat);
+        c.load(1..=100, |_| vec![7u8; 32]);
+        let primary = owner_of(7, 3);
+        c.fence_node(primary);
+        let mut client = c.client(0, None);
+        let out =
+            client.run_tx(vec![], vec![TxItem::update(ObjectId(0), 7).with_value(vec![1u8; 32])]);
+        assert!(
+            matches!(out, TxOutcome::Aborted(AbortReason::PrimaryFenced)),
+            "a fenced primary must refuse with the typed abort, got {out:?}"
+        );
+        assert_eq!(client.abort_counts().primary_fenced, 1);
+        assert!(!client.lease_alive(primary), "observing PrimaryFenced expires the lease");
+        // The retry routes to the backup and commits there.
+        let out =
+            client.run_tx(vec![], vec![TxItem::update(ObjectId(0), 7).with_value(vec![2u8; 32])]);
+        assert!(matches!(out, TxOutcome::Committed { .. }), "failover retry must commit: {out:?}");
+        let res = client.lookup_batch(&[7]);
+        assert_eq!((res[0].node, res[0].version), ((primary + 1) % 3, 2));
+        c.shutdown();
+    }
+
+    /// A killed lane completes posted slots empty instead of hanging the
+    /// client: the RPC surfaces as the synthesized `PrimaryFenced`, the
+    /// lease expires, and the retry is served by the backup replica.
+    #[test]
+    fn killed_node_expires_lease_via_empty_completion() {
+        let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+        let cat = CatalogConfig::single(cfg).with_replication(2);
+        let c = LiveCluster::start_catalog(3, cat);
+        c.load(1..=50, |_| vec![5u8; 32]);
+        let primary = owner_of(9, 3);
+        c.kill_node(primary);
+        let mut client = c.client(0, None);
+        assert_eq!(
+            client.ds_rpc(ObjectId(0), 9, RpcOp::Read, None),
+            RpcResult::PrimaryFenced,
+            "a dead lane must fail fast as a typed refusal, not hang"
+        );
+        assert!(!client.lease_alive(primary));
+        assert!(
+            matches!(client.ds_rpc(ObjectId(0), 9, RpcOp::Read, None), RpcResult::Value { .. }),
+            "the retry must be served by the backup"
+        );
+        c.shutdown();
+    }
+
+    /// Satellite 2: one `RoutingSnapshot` round trip per node makes a
+    /// cold client's very first tree lookups pure one-sided — no per-key
+    /// RPC warm-up traffic at all.
+    #[test]
+    fn routing_snapshot_warms_cold_btree_clients() {
+        use crate::ds::btree::BTreeConfig;
+        let cat = CatalogConfig::heterogeneous(vec![ObjectConfig::BTree(BTreeConfig {
+            max_leaves: 1 << 10,
+        })]);
+        let c = LiveCluster::start_catalog(3, cat);
+        c.load_rows((1..=300u64).map(|k| (ObjectId(0), k)), |_, k| k.to_le_bytes().to_vec());
+        let mut client = c.client(0, None);
+        let installed = client.warm_routes(ObjectId(0));
+        assert!(installed > 0, "a populated tree must export leaf routes");
+        let keys: Vec<u64> = (1..=300).collect();
+        let res = client.lookup_batch_obj(ObjectId(0), &keys);
+        assert!(res.iter().all(|r| r.found));
+        assert!(
+            res.iter().all(|r| (r.reads, r.rpcs) == (1, 0)),
+            "bulk-warmed routes must serve one-read lookups with zero RPC fallbacks"
+        );
         c.shutdown();
     }
 

@@ -45,12 +45,43 @@ enum LocalObj {
     Rpc,
 }
 
-/// Client-side state: one kind-dispatched resolver per catalog object.
+/// Client-side state: one kind-dispatched resolver per catalog object,
+/// plus the client's view of per-node **leases**. A lease here is purely
+/// logical (no wall clock — everything stays deterministic): the client
+/// holds each node's lease until it observes the node failed or fenced,
+/// expires it via [`LocalClient::expire_lease`], and from then on routes
+/// that node's keys to the next live replica — the client-observed
+/// **promotion** of a backup. A recovered node re-admits via
+/// [`LocalClient::renew_lease`].
 pub struct LocalClient {
     objs: Vec<LocalObj>,
     kinds: Vec<ObjectKind>,
     nodes: u32,
     rpc_only: bool,
+    replication: u32,
+    alive: Vec<bool>,
+}
+
+impl LocalClient {
+    /// Expire a node's lease: writes (and RPC-routed reads) for keys it
+    /// primaries re-route to the next live replica. One-sided read hints
+    /// are unaffected (the reference driver's resolvers address node
+    /// memory directly) — failover tests drive the RPC-only client,
+    /// where every action routes through [`DsCallbacks::owner`].
+    pub fn expire_lease(&mut self, node: u32) {
+        self.alive[node as usize] = false;
+    }
+
+    /// Re-admit a recovered node (its lease is considered re-granted).
+    pub fn renew_lease(&mut self, node: u32) {
+        self.alive[node as usize] = true;
+    }
+
+    /// The key's replica chain (primary first), ignoring liveness.
+    fn chain(&self, key: u64) -> impl Iterator<Item = u32> + '_ {
+        let primary = crate::ds::mica::owner_of(key, self.nodes);
+        (0..self.replication).map(move |i| (primary + i) % self.nodes)
+    }
 }
 
 impl DsCallbacks for LocalClient {
@@ -86,8 +117,27 @@ impl DsCallbacks for LocalClient {
             LocalObj::Rpc => {}
         }
     }
+    /// The first replica whose lease this client still holds — the
+    /// primary in steady state, the promoted backup after an expiry.
+    /// Falls back to the hash owner when every replica's lease expired
+    /// (the request then surfaces a typed refusal instead of spinning —
+    /// bounded unavailability).
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
-        crate::ds::mica::owner_of(key, self.nodes)
+        self.chain(key)
+            .find(|&nd| self.alive[nd as usize])
+            .unwrap_or_else(|| crate::ds::mica::owner_of(key, self.nodes))
+    }
+    /// The live replica set (lease-expired nodes filtered), serving
+    /// primary first — what the commit phase replicates across. Degraded
+    /// replication while a replica is down is the protocol's choice: the
+    /// commit must not block on a dead backup.
+    fn replicas(&self, _obj: ObjectId, key: u64) -> Vec<u32> {
+        let live: Vec<u32> = self.chain(key).filter(|&nd| self.alive[nd as usize]).collect();
+        if live.is_empty() {
+            vec![crate::ds::mica::owner_of(key, self.nodes)]
+        } else {
+            live
+        }
     }
     fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
         self.kinds[obj.0 as usize]
@@ -102,6 +152,11 @@ pub struct LocalCluster {
     pub nodes: Vec<Catalog>,
     cat: CatalogConfig,
     next_tx: u64,
+    /// Per-node fence flags: a fenced node refuses every write-class
+    /// opcode with [`RpcResult::PrimaryFenced`] (lease revoked during
+    /// failover, or restarted and not yet recovered) while still serving
+    /// reads.
+    fenced: Vec<bool>,
 }
 
 impl LocalCluster {
@@ -126,7 +181,82 @@ impl LocalCluster {
         let nodes = (0..n)
             .map(|_| Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M)))
             .collect();
-        LocalCluster { nodes, cat, next_tx: 1 }
+        LocalCluster { nodes, cat, next_tx: 1, fenced: vec![false; n as usize] }
+    }
+
+    /// Effective replication factor (the schema's, clamped to the
+    /// cluster size).
+    pub fn replication(&self) -> u32 {
+        self.cat.replication.max(1).min(self.nodes.len() as u32)
+    }
+
+    /// The replica chain of a key: hash owner (primary) first, then its
+    /// ring successors — the reference mirror of `Placement::replicas`.
+    pub fn replicas_of(&self, key: u64) -> Vec<u32> {
+        let n = self.nodes.len() as u32;
+        let primary = crate::ds::mica::owner_of(key, n);
+        (0..self.replication()).map(|i| (primary + i) % n).collect()
+    }
+
+    /// Revoke a node's write authority: every write-class RPC it serves
+    /// from now on answers [`RpcResult::PrimaryFenced`]. Reads (and
+    /// `Unlock`) keep serving.
+    pub fn fence_node(&mut self, node: u32) {
+        self.fenced[node as usize] = true;
+    }
+
+    /// Restore a node's write authority (after recovery).
+    pub fn unfence_node(&mut self, node: u32) {
+        self.fenced[node as usize] = false;
+    }
+
+    /// Crash a node (storage lost, node fenced) and rebuild its tables
+    /// from its peers' replicas: for every object, pull each survivor's
+    /// items, keep the keys whose replica chain includes the node, dedup
+    /// across survivors by highest version, and install in key order —
+    /// MICA versions are preserved exactly (the rebuilt table is
+    /// byte-identical per item to the freshest surviving replica), tree
+    /// and hopscotch objects rebuild value-preserving. The node stays
+    /// fenced; [`LocalCluster::recover_node`] is the full restart.
+    pub fn rebuild_node(&mut self, node: u32) {
+        self.fenced[node as usize] = true;
+        self.nodes[node as usize] = Catalog::new(&self.cat, RegionMode::Virtual(PageSize::Huge2M));
+        let n = self.nodes.len() as u32;
+        for o in 0..self.cat.len() {
+            let obj = ObjectId(o as u32);
+            let mut best: std::collections::HashMap<u64, (u32, Option<Vec<u8>>)> =
+                std::collections::HashMap::new();
+            for peer in 0..n {
+                if peer == node {
+                    continue;
+                }
+                for (key, version, value) in self.nodes[peer as usize].items(obj) {
+                    if !self.replicas_of(key).contains(&node) {
+                        continue;
+                    }
+                    match best.get(&key) {
+                        Some((v, _)) if *v >= version => {}
+                        _ => {
+                            best.insert(key, (version, value));
+                        }
+                    }
+                }
+            }
+            let mut keys: Vec<u64> = best.keys().copied().collect();
+            keys.sort_unstable();
+            for key in keys {
+                let (version, value) = best.remove(&key).expect("key collected above");
+                self.nodes[node as usize].install(obj, key, version, value.as_deref());
+            }
+        }
+    }
+
+    /// Full restart: rebuild the node's tables from its peers, then
+    /// lift the fence — the node is a (backup) replica again. Clients
+    /// re-admit it with [`LocalClient::renew_lease`].
+    pub fn recover_node(&mut self, node: u32) {
+        self.rebuild_node(node);
+        self.fenced[node as usize] = false;
     }
 
     /// Build a client (resolver set) for this cluster.
@@ -165,7 +295,14 @@ impl LocalCluster {
             })
             .collect();
         let kinds = self.cat.objects.iter().map(|c| c.kind()).collect();
-        LocalClient { objs, kinds, nodes: n, rpc_only: false }
+        LocalClient {
+            objs,
+            kinds,
+            nodes: n,
+            rpc_only: false,
+            replication: self.replication(),
+            alive: vec![true; n as usize],
+        }
     }
 
     /// RPC-only client (Storm's RPC configuration / baselines).
@@ -182,12 +319,13 @@ impl LocalCluster {
         id
     }
 
-    /// Populate an object with keys (direct inserts on owner shards).
+    /// Populate an object with keys (direct inserts on every node of
+    /// each key's replica chain — the owner alone at replication 1).
     pub fn load(&mut self, obj: ObjectId, keys: impl Iterator<Item = u64>) {
-        let n = self.nodes.len() as u32;
         for key in keys {
-            let owner = crate::ds::mica::owner_of(key, n) as usize;
-            self.nodes[owner].insert(obj, key, None);
+            for node in self.replicas_of(key) {
+                self.nodes[node as usize].insert(obj, key, None);
+            }
         }
     }
 
@@ -222,8 +360,13 @@ impl LocalCluster {
     }
 
     /// Serve an RPC on the owner node (the catalog's `rpc_handler`,
-    /// dispatched by the request's object id).
+    /// dispatched by the request's object id). A fenced node refuses the
+    /// write-class opcodes before they reach storage — a stale lease
+    /// holder can never commit through a deposed primary (invariant L2).
     pub fn serve_rpc(&mut self, node: u32, req: &RpcRequest) -> RpcResponse {
+        if self.fenced[node as usize] && req.op.is_write_class() {
+            return RpcResponse::inline(RpcResult::PrimaryFenced);
+        }
         self.nodes[node as usize].serve_rpc(req)
     }
 
@@ -537,5 +680,133 @@ mod tests {
         // 1 execute read + 1 validation read; 1 lock RPC + 1 commit RPC.
         assert_eq!(tx.reads_issued, 2);
         assert_eq!(tx.rpcs_issued, 2);
+    }
+
+    fn replicated_cluster(nodes: u32) -> LocalCluster {
+        let cat = CatalogConfig::new(vec![MicaConfig {
+            buckets: 1 << 8,
+            width: 2,
+            value_len: 32,
+            store_values: true,
+        }])
+        .with_replication(2);
+        LocalCluster::new_hetero(nodes, cat)
+    }
+
+    #[test]
+    fn replicated_commit_applies_on_backup_before_unlock() {
+        let mut c = replicated_cluster(3);
+        c.load(KV, 1..=60);
+        let mut client = c.rpc_only_client();
+        for key in 1..=60u64 {
+            let out = c.run_tx(
+                &mut client,
+                vec![],
+                vec![TxItem::update(KV, key).with_value(vec![0xAB; 32])],
+            );
+            assert!(matches!(out, TxOutcome::Committed { .. }), "key {key}");
+        }
+        // Every replica of every key carries the committed version and
+        // value — the backup saw the write before the lock released.
+        for key in 1..=60u64 {
+            for node in c.replicas_of(key) {
+                let (res, _) = c.nodes[node as usize].table(KV).get(key);
+                match res {
+                    RpcResult::Value { version, value, .. } => {
+                        assert_eq!(version, 2, "key {key} node {node}");
+                        assert_eq!(value.as_deref(), Some(&[0xAB; 32][..]));
+                    }
+                    other => panic!("key {key} missing on replica {node}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fenced_primary_refuses_and_expired_lease_promotes_backup() {
+        let mut c = replicated_cluster(2);
+        c.load(KV, 1..=40);
+        let mut client = c.rpc_only_client();
+        let key = (1..=40u64).find(|&k| c.replicas_of(k)[0] == 0).expect("a key primaried on 0");
+        let backup = c.replicas_of(key)[1];
+        assert_eq!(backup, 1);
+        // Fence the primary: the write must abort with the typed reason.
+        c.fence_node(0);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::update(KV, key)]);
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::PrimaryFenced));
+        // The client expires the lease; the retry routes to the backup
+        // (client-observed promotion) and commits there alone.
+        client.expire_lease(0);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::update(KV, key)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        match c.nodes[backup as usize].table(KV).get(key).0 {
+            RpcResult::Value { version, locked, .. } => {
+                assert_eq!(version, 2, "promoted backup applied the write");
+                assert!(!locked);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The fenced node still serves reads (fencing revokes write
+        // authority, not data) but keeps its stale version.
+        assert!(matches!(
+            c.serve_rpc(0, &RpcRequest { obj: KV, key, op: RpcOp::Read, tx_id: 0, value: None })
+                .result,
+            RpcResult::Value { version: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn recovery_rebuilds_tables_identical_to_survivors() {
+        let mut c = replicated_cluster(3);
+        c.load(KV, 1..=120);
+        let mut client = c.rpc_only_client();
+        // Mutate: updates bump versions, deletes remove, inserts add.
+        for key in (1..=120u64).step_by(3) {
+            let out = c.run_tx(
+                &mut client,
+                vec![],
+                vec![TxItem::update(KV, key).with_value(vec![0xCD; 32])],
+            );
+            assert!(matches!(out, TxOutcome::Committed { .. }));
+        }
+        for key in (2..=120u64).step_by(7) {
+            let out = c.run_tx(&mut client, vec![], vec![TxItem::delete(KV, key)]);
+            assert!(matches!(out, TxOutcome::Committed { .. }));
+        }
+        for key in 200..=230u64 {
+            let out = c.run_tx(&mut client, vec![], vec![TxItem::insert(KV, key)]);
+            assert!(matches!(out, TxOutcome::Committed { .. }));
+        }
+        // Crash node 1 and rebuild it from its peers.
+        c.recover_node(1);
+        // Its table must hold exactly the keys whose replica chain
+        // includes it, each byte-identical (key, version, value) to the
+        // surviving replica.
+        let mut rebuilt = c.nodes[1].table(KV).items();
+        rebuilt.sort_by_key(|&(k, _, _)| k);
+        for (key, version, value) in &rebuilt {
+            let (key, version) = (*key, *version);
+            assert!(c.replicas_of(key).contains(&1), "key {key} does not belong on node 1");
+            let peer = *c.replicas_of(key).iter().find(|&&n| n != 1).expect("a surviving peer");
+            match c.nodes[peer as usize].table(KV).get(key).0 {
+                RpcResult::Value { version: pv, value: pval, .. } => {
+                    assert_eq!(version, pv, "key {key}: version differs from survivor");
+                    assert_eq!(value.as_deref(), pval.as_deref(), "key {key}: value differs");
+                }
+                other => panic!("survivor {peer} lost key {key}: {other:?}"),
+            }
+        }
+        // And nothing it should hold is missing: count both directions.
+        let expect: Vec<u64> = (1..=120u64)
+            .chain(200..=230)
+            .filter(|&k| !((2..=120).contains(&k) && (k - 2) % 7 == 0))
+            .filter(|&k| c.replicas_of(k).contains(&1))
+            .collect();
+        assert_eq!(rebuilt.len(), expect.len(), "rebuilt key census");
+        // A recovered node serves writes again.
+        let key = expect[0];
+        client.renew_lease(1);
+        let out = c.run_tx(&mut client, vec![], vec![TxItem::update(KV, key)]);
+        assert!(matches!(out, TxOutcome::Committed { .. }));
     }
 }

@@ -40,9 +40,59 @@
 //!   behind an **adaptive window** ([`live::TxWindow`]); opcodes a
 //!   backend cannot serve answer with the typed
 //!   [`crate::ds::api::RpcResult::Unsupported`] instead of panicking a
-//!   server lane.
+//!   server lane. The live driver also carries the fault machinery:
+//!   per-node kill/stall/fence hooks, lease-tracking clients, and
+//!   crash recovery that rebuilds a restarted node from its peers.
 //! * [`local`] — the reference in-process driver over per-node catalogs
 //!   (the semantic baseline the simulator and live driver must match).
+//!
+//! # Replication, leases, and recovery
+//!
+//! Every catalog object may declare a replication factor
+//! ([`crate::ds::catalog::CatalogConfig::with_replication`]); the
+//! placement map then resolves each `(ObjectId, key)` to a **chain** of
+//! nodes ([`crate::ds::catalog::Placement::replicas`]) — head is the
+//! primary, the rest are backups. The write path stays write-based RPC
+//! end to end:
+//!
+//! * **Replication rides the commit volley.** After validation, the
+//!   transaction engine emits `ReplicaUpsert`/`ReplicaDelete` posts for
+//!   every backup (`replicas[1..]`) *in the same doorbell group* as the
+//!   primary's commit writes, and the unlock step is withheld until
+//!   every replica ack returns. Backups apply committed images with the
+//!   primary's exact version trajectory, so a replica region is
+//!   byte-identical to its primary's (same bucket offsets — replica
+//!   tables are identically sized — same versions, same payloads).
+//!
+//! * **Leases are client-observed, not clocked.** A client holds a
+//!   logical lease per node; it expires the lease when the node answers
+//!   a write-class request with
+//!   [`crate::ds::api::RpcResult::PrimaryFenced`] or stops completing
+//!   requests at all. The invariants: (L1) a client never routes a
+//!   write through an expired lease — it fails over to the next alive
+//!   node in the chain; (L2) a fenced node refuses every write-class
+//!   request (reads still serve — they are harmless on a consistent
+//!   replica); (L3) a backup accepts direct writes only after a client
+//!   has observed the primary's lease expire, so two nodes never accept
+//!   writes for the same key under one client's view; (L4) a backup
+//!   that refuses replication is treated as failed and must run
+//!   recovery before rejoining its chains.
+//!
+//! * **Recovery is reads-over-the-fabric.** A restarted node comes back
+//!   fenced with zeroed tables; recovery harvests every object it
+//!   participates in from the surviving chain members via bulk
+//!   one-sided reads (plus `ChainScan` RPCs for rows only the peer
+//!   knows), installs rows in ascending `(object, key)` order with
+//!   their replicated versions, re-warms B-link route snapshots
+//!   (`RoutingSnapshot`), and only then unfences. Clients renew the
+//!   lease and fail back.
+//!
+//! * **The staleness window is documented, not hidden.** Until a client
+//!   *observes* a failure (a fenced write or an empty completion), its
+//!   one-sided reads may target a dead node's zeroed region and report
+//!   phantom absence. The window closes at the first write-class
+//!   failure on that node; committed data is never lost because commits
+//!   are acked by every replica before unlock.
 
 pub mod live;
 pub mod local;

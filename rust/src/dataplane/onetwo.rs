@@ -50,6 +50,15 @@ pub trait DsCallbacks {
     fn lookup_end_rpc(&mut self, obj: ObjectId, key: u64, node: u32, resp: &RpcResponse);
     /// Owner node of a key.
     fn owner(&self, obj: ObjectId, key: u64) -> u32;
+    /// Replica set of `(obj, key)`: the serving primary first, then the
+    /// backups the commit phase ships backup-apply RPCs to. The default
+    /// is the unreplicated dataplane — the owner alone, so the
+    /// transaction engine's replicate phase is a no-op. Lease-aware
+    /// resolvers return the *live* replicas (expired nodes filtered),
+    /// which is how a promoted backup takes over writes.
+    fn replicas(&self, obj: ObjectId, key: u64) -> Vec<u32> {
+        vec![self.owner(obj, key)]
+    }
     /// Backend kind of an object — the transaction engine routes its
     /// lock/validate/commit actions per item on it (MICA: item locks +
     /// item-header validation reads; BTree: leaf locks + leaf-header

@@ -11,6 +11,7 @@
 //! here is used verbatim by the live loopback path and for size accounting
 //! by the simulator.
 
+use crate::dataplane::tx::AbortReason;
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest};
 
 /// Bytes of the Storm RPC header prepended to every message.
@@ -93,6 +94,10 @@ pub fn encode_request_into(req: &RpcRequest, out: &mut Vec<u8>) {
         RpcOp::Unlock => 3,
         RpcOp::Insert => 4,
         RpcOp::Delete => 5,
+        RpcOp::ReplicaUpsert => 6,
+        RpcOp::ReplicaDelete => 7,
+        RpcOp::RoutingSnapshot => 8,
+        RpcOp::ChainScan => 9,
     });
     out.extend_from_slice(&[0u8; 3]); // pad
     out.extend_from_slice(&req.key.to_le_bytes());
@@ -141,6 +146,10 @@ pub fn decode_request(b: &[u8]) -> Option<RpcRequest> {
         3 => RpcOp::Unlock,
         4 => RpcOp::Insert,
         5 => RpcOp::Delete,
+        6 => RpcOp::ReplicaUpsert,
+        7 => RpcOp::ReplicaDelete,
+        8 => RpcOp::RoutingSnapshot,
+        9 => RpcOp::ChainScan,
         _ => return None,
     };
     let key = u64::from_le_bytes(b[8..16].try_into().ok()?);
@@ -171,6 +180,7 @@ pub fn encode_response_into(resp: &crate::ds::api::RpcResponse, out: &mut Vec<u8
             RpcResult::Ok => (3, 0, 0, 0, 0, None),
             RpcResult::Full => (4, 0, 0, 0, 0, None),
             RpcResult::Unsupported => (5, 0, 0, 0, 0, None),
+            RpcResult::PrimaryFenced => (6, 0, 0, 0, 0, None),
         };
     out.push(tag);
     out.push(locked); // foreign-lock bit of a served Value (OCC validation)
@@ -234,6 +244,7 @@ pub fn decode_response(b: &[u8]) -> Option<crate::ds::api::RpcResponse> {
         3 => RpcResult::Ok,
         4 => RpcResult::Full,
         5 => RpcResult::Unsupported,
+        6 => RpcResult::PrimaryFenced,
         _ => return None,
     };
     Some(RpcResponse { result, hops })
@@ -252,6 +263,124 @@ pub fn request_wire_bytes(req: &RpcRequest) -> u32 {
 /// body, so it is counted here too.
 pub fn response_wire_bytes(value_len: u32) -> u32 {
     RPC_HEADER_BYTES + RPC_RESP_BODY_BYTES + 4 + value_len
+}
+
+/// Wire code of an [`AbortReason`] — carried in failover/abort telemetry
+/// frames (per-class abort counters ship between report producers and
+/// consumers as `(code, count)` pairs).
+pub fn encode_abort_reason(reason: AbortReason) -> u8 {
+    match reason {
+        AbortReason::LockConflict => 0,
+        AbortReason::ValidationVersion => 1,
+        AbortReason::ValidationLocked => 2,
+        AbortReason::ValidationMoved => 3,
+        AbortReason::Unsupported => 4,
+        AbortReason::PrimaryFenced => 5,
+    }
+}
+
+/// Decode an [`AbortReason`] wire code; `None` on an unknown code.
+pub fn decode_abort_reason(code: u8) -> Option<AbortReason> {
+    Some(match code {
+        0 => AbortReason::LockConflict,
+        1 => AbortReason::ValidationVersion,
+        2 => AbortReason::ValidationLocked,
+        3 => AbortReason::ValidationMoved,
+        4 => AbortReason::Unsupported,
+        5 => AbortReason::PrimaryFenced,
+        _ => return None,
+    })
+}
+
+/// Every [`AbortReason`] variant, in wire-code order (telemetry tables
+/// and the codec round-trip tests iterate this).
+pub const ABORT_REASONS: [AbortReason; 6] = [
+    AbortReason::LockConflict,
+    AbortReason::ValidationVersion,
+    AbortReason::ValidationLocked,
+    AbortReason::ValidationMoved,
+    AbortReason::Unsupported,
+    AbortReason::PrimaryFenced,
+];
+
+/// Encode a B-link routing snapshot — `(low key, leaf offset)` pairs —
+/// into a `RoutingSnapshot` reply's value bytes (16 bytes per leaf). The
+/// offsets are relative to whatever region the reply's `addr` names;
+/// the live server rebases them to the packed data region before
+/// encoding, so a client can install them directly.
+pub fn encode_routing_snapshot(entries: &[(u64, u64)]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(entries.len() * 16);
+    for &(low, offset) in entries {
+        b.extend_from_slice(&low.to_le_bytes());
+        b.extend_from_slice(&offset.to_le_bytes());
+    }
+    b
+}
+
+/// Encode a MICA chain scan — `(key, version, value)` triples — into a
+/// `ChainScan` reply's value bytes: `key` (8 B), `version` (4 B), value
+/// length (4 B, `u32::MAX` marks a metadata-only item), value bytes.
+pub fn encode_chain_items(items: &[(u64, u32, Option<Vec<u8>>)]) -> Vec<u8> {
+    let mut b = Vec::new();
+    for (key, version, value) in items {
+        b.extend_from_slice(&key.to_le_bytes());
+        b.extend_from_slice(&version.to_le_bytes());
+        match value {
+            Some(v) => {
+                b.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                b.extend_from_slice(v);
+            }
+            None => b.extend_from_slice(&u32::MAX.to_le_bytes()),
+        }
+    }
+    b
+}
+
+/// Decode a `ChainScan` reply's value bytes. `None` on truncation.
+pub fn decode_chain_items(b: &[u8]) -> Option<Vec<(u64, u32, Option<Vec<u8>>)>> {
+    let mut items = Vec::new();
+    let mut at = 0usize;
+    while at < b.len() {
+        if b.len() < at + 16 {
+            return None;
+        }
+        let key = u64::from_le_bytes(b[at..at + 8].try_into().ok()?);
+        let version = u32::from_le_bytes(b[at + 8..at + 12].try_into().ok()?);
+        let vlen = u32::from_le_bytes(b[at + 12..at + 16].try_into().ok()?);
+        at += 16;
+        let value = if vlen == u32::MAX {
+            None
+        } else {
+            let vlen = vlen as usize;
+            if b.len() < at + vlen {
+                return None;
+            }
+            let v = b[at..at + vlen].to_vec();
+            at += vlen;
+            Some(v)
+        };
+        items.push((key, version, value));
+    }
+    Some(items)
+}
+
+/// Decode a `RoutingSnapshot` reply's value bytes back into
+/// `(low key, leaf offset)` pairs. `None` on a malformed (non-16-byte
+/// aligned) payload.
+pub fn decode_routing_snapshot(b: &[u8]) -> Option<Vec<(u64, u64)>> {
+    if b.len() % 16 != 0 {
+        return None;
+    }
+    Some(
+        b.chunks_exact(16)
+            .map(|c| {
+                (
+                    u64::from_le_bytes(c[0..8].try_into().unwrap()),
+                    u64::from_le_bytes(c[8..16].try_into().unwrap()),
+                )
+            })
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -343,10 +472,56 @@ mod tests {
             RpcOp::Unlock,
             RpcOp::Insert,
             RpcOp::Delete,
+            RpcOp::ReplicaUpsert,
+            RpcOp::ReplicaDelete,
+            RpcOp::RoutingSnapshot,
+            RpcOp::ChainScan,
         ] {
             let req = RpcRequest { obj: ObjectId(1), key: 2, op, tx_id: 3, value: None };
             assert_eq!(decode_request(&encode_request(&req)).unwrap().op, op);
         }
+    }
+
+    #[test]
+    fn abort_reason_codec_roundtrips_every_variant() {
+        // Exhaustive: ABORT_REASONS must cover the enum (a new variant
+        // added without a wire code fails the encode match at compile
+        // time; one added without a row here fails the count below).
+        for (code, &reason) in ABORT_REASONS.iter().enumerate() {
+            assert_eq!(encode_abort_reason(reason) as usize, code);
+            assert_eq!(decode_abort_reason(code as u8), Some(reason));
+        }
+        assert_eq!(decode_abort_reason(ABORT_REASONS.len() as u8), None);
+        assert_eq!(decode_abort_reason(u8::MAX), None);
+        assert_eq!(
+            encode_abort_reason(AbortReason::PrimaryFenced),
+            5,
+            "the failover abort reason has a stable wire code"
+        );
+    }
+
+    #[test]
+    fn chain_items_payload_roundtrips() {
+        let items: Vec<(u64, u32, Option<Vec<u8>>)> = vec![
+            (7, 3, Some(vec![1, 2, 3, 4])),
+            (9, 1, None),
+            (u64::MAX, u32::MAX - 1, Some(vec![])),
+        ];
+        let bytes = encode_chain_items(&items);
+        assert_eq!(decode_chain_items(&bytes), Some(items));
+        assert_eq!(decode_chain_items(&[]), Some(vec![]));
+        assert_eq!(decode_chain_items(&bytes[..bytes.len() - 1]), None, "truncation rejected");
+    }
+
+    #[test]
+    fn routing_snapshot_payload_roundtrips() {
+        let entries: Vec<(u64, u64)> =
+            (0..37).map(|i| (i * 1000, 4096 + i * 512)).collect();
+        let bytes = encode_routing_snapshot(&entries);
+        assert_eq!(bytes.len(), entries.len() * 16);
+        assert_eq!(decode_routing_snapshot(&bytes), Some(entries));
+        assert_eq!(decode_routing_snapshot(&[]), Some(vec![]));
+        assert_eq!(decode_routing_snapshot(&[1, 2, 3]), None, "ragged payload rejected");
     }
 
     #[test]
@@ -368,6 +543,7 @@ mod tests {
             RpcResponse::inline(RpcResult::Ok),
             RpcResponse::inline(RpcResult::Full),
             RpcResponse::inline(RpcResult::Unsupported),
+            RpcResponse::inline(RpcResult::PrimaryFenced),
         ];
         for r in variants {
             assert_eq!(decode_response(&encode_response(&r)), Some(r));

@@ -11,7 +11,15 @@
 //!    a foreign lock, or a moved item aborts. Items also present in the
 //!    write set are skipped (our own lock pins their version), as are
 //!    items that were absent (no address to validate).
-//! 3. **Commit** — write-set items are applied and unlocked with
+//! 3. **Replicate** (replication factor > 1) — every locked write ships
+//!    a backup-apply RPC ([`RpcOp::ReplicaUpsert`] / `ReplicaDelete`) to
+//!    each backup in its replica set, all as one extra doorbell group,
+//!    and the acks drain **before** the commit volley posts: a committed
+//!    write is on every live backup by the time its item lock releases.
+//!    A backup answering [`RpcResult::PrimaryFenced`] aborts the
+//!    transaction with [`AbortReason::PrimaryFenced`]. See
+//!    [`crate::dataplane`] docs for the protocol and lease invariants.
+//! 4. **Commit** — write-set items are applied and unlocked with
 //!    write-based RPCs (updates, inserts, deletes).
 //!
 //! **Per-item backend kind.** Transactions are no longer MICA-only: the
@@ -87,10 +95,16 @@ pub const VALIDATE_READ_BYTES: u32 = crate::ds::mica::ITEM_HEADER;
 pub const LEAF_VALIDATE_BYTES: u32 = crate::ds::btree::LEAF_HEADER_BYTES;
 
 /// Tag bit marking execute-phase lock-read actions (write-set item `j`
-/// posts with tag `LOCK_TAG | j`). All tags stay below `2 * LOCK_TAG`,
-/// leaving the upper 15 bits of a `u32` free for drivers that pack the
+/// posts with tag `LOCK_TAG | j`). All tags stay below `2 * REPL_TAG`,
+/// leaving the upper 14 bits of a `u32` free for drivers that pack the
 /// tag into a wire correlation cookie.
 pub const LOCK_TAG: u32 = 1 << 16;
+
+/// Tag bit marking replicate-phase backup-apply RPCs (the `p`-th
+/// replication post carries tag `REPL_TAG | p`). Disjoint from both the
+/// plain item-index tags and the [`LOCK_TAG`] range, so drivers demux
+/// all three through one cookie space.
+pub const REPL_TAG: u32 = 1 << 17;
 
 /// Kind of write-set operation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -195,6 +209,12 @@ pub enum AbortReason {
     /// aborts cleanly (releasing any locks it holds) instead of
     /// panicking mid-schedule.
     Unsupported,
+    /// A node this transaction must write through answered
+    /// [`RpcResult::PrimaryFenced`]: its write authority is revoked
+    /// (lease fenced during failover, or a restarted node that has not
+    /// finished recovery). The engine aborts cleanly; the driver expires
+    /// the node's lease and the retry routes to the promoted backup.
+    PrimaryFenced,
 }
 
 /// Final transaction outcome.
@@ -276,6 +296,13 @@ struct ReadMeta {
 enum Phase {
     Execute,
     Validate,
+    /// Ship every locked write to its backups (one extra doorbell group
+    /// in the commit volley) and drain the acks **before** the primary
+    /// commit RPCs post — the primary's `UpdateUnlock` applies and
+    /// unlocks atomically, so a committed write is on every live backup
+    /// by the time its item lock releases. Skipped entirely at
+    /// replication factor 1.
+    Replicate,
     Commit,
     Abort(AbortReason),
     Done,
@@ -427,6 +454,11 @@ impl TxEngine {
                         RpcResult::Unsupported => {
                             self.fail.get_or_insert(AbortReason::Unsupported);
                         }
+                        // The target's write authority is revoked (lease
+                        // fenced / unrecovered): nothing was locked there.
+                        RpcResult::PrimaryFenced => {
+                            self.fail.get_or_insert(AbortReason::PrimaryFenced);
+                        }
                         // Ok/Full can never answer a LockRead — keep the
                         // loud failure for genuine protocol violations.
                         other => panic!("unexpected lock-read result {other:?}"),
@@ -492,6 +524,31 @@ impl TxEngine {
                     }
                 }
             }
+            Phase::Replicate => {
+                debug_assert!(tag & REPL_TAG != 0, "replicate completions carry REPL_TAG");
+                let resp = match input {
+                    TxInput::Rpc(r) => r,
+                    TxInput::Read(_) => panic!("replication acks are RPCs"),
+                };
+                if self.fail.is_none() {
+                    match resp.result {
+                        // NotFound answers a ReplicaDelete of an item the
+                        // backup never saw — consistent with the primary's
+                        // own NotFound delete result.
+                        RpcResult::Ok | RpcResult::NotFound => {}
+                        RpcResult::PrimaryFenced => {
+                            self.fail = Some(AbortReason::PrimaryFenced);
+                        }
+                        RpcResult::Unsupported => self.fail = Some(AbortReason::Unsupported),
+                        // Any other refusal (a locked or full backup slot)
+                        // means the backup diverged from the primary's
+                        // apply path; abort — the lease layer treats a
+                        // backup that refuses replication as failed
+                        // (invariant L4 in `dataplane/mod.rs`).
+                        _ => self.fail = Some(AbortReason::LockConflict),
+                    }
+                }
+            }
             Phase::Commit => {
                 let j = tag as usize;
                 let resp = match input {
@@ -536,6 +593,14 @@ impl TxEngine {
                     }
                 }
                 Phase::Validate => {
+                    self.phase = Phase::Replicate;
+                    let posts = self.replicate_posts(cb);
+                    if !posts.is_empty() {
+                        self.outstanding = posts.len() as u32;
+                        return TxStep::Issue(posts);
+                    }
+                }
+                Phase::Replicate => {
                     self.phase = Phase::Commit;
                     let posts = self.commit_posts(cb);
                     if !posts.is_empty() {
@@ -575,6 +640,48 @@ impl TxEngine {
             };
             posts.push(self.read_post(i as u32, obj, key, meta.node, meta.addr.unwrap(), len));
         }
+        posts
+    }
+
+    /// All backup-apply RPCs, one batch (one per representative write
+    /// item per backup replica) — the commit volley's extra doorbell
+    /// group. Update items replicate only when their lock is held (an
+    /// unlocked representative means the lock-read answered NotFound, so
+    /// the primary's `UpdateUnlock` will apply nothing — a backup apply
+    /// would diverge). Insert/Delete items replicate unconditionally,
+    /// mirroring their unconditional primary commit op; the rare primary
+    /// refusal a backup accepted (`Full`, a foreign-locked delete) is a
+    /// per-item divergence the lease layer charges to the *primary*
+    /// result in `write_results` (see `dataplane/mod.rs`).
+    fn replicate_posts(&mut self, cb: &mut impl DsCallbacks) -> Vec<TxPost> {
+        let mut posts = Vec::new();
+        for j in 0..self.write_set.len() {
+            if self.commit_rep[j] != j {
+                continue;
+            }
+            let (obj, key, kind) =
+                (self.write_set[j].obj, self.write_set[j].key, self.write_set[j].kind);
+            if kind == WriteKind::Update
+                && !self
+                    .locks_held
+                    .iter()
+                    .any(|&l| self.write_set[l].obj == obj && self.write_set[l].key == key)
+            {
+                continue;
+            }
+            let op = match kind {
+                WriteKind::Update | WriteKind::Insert => RpcOp::ReplicaUpsert,
+                WriteKind::Delete => RpcOp::ReplicaDelete,
+            };
+            let replicas = cb.replicas(obj, key);
+            for &node in replicas.iter().skip(1) {
+                let value = self.write_set[j].value.clone();
+                let req = RpcRequest { obj, key, op, tx_id: self.tx_id, value };
+                let tag = REPL_TAG | posts.len() as u32;
+                posts.push(self.rpc_post(tag, node, req));
+            }
+        }
+        debug_assert!(posts.len() < LOCK_TAG as usize, "replication posts exceed the tag space");
         posts
     }
 
@@ -1117,5 +1224,154 @@ mod tests {
         let out =
             finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
         assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationMoved));
+    }
+
+    /// [`MockCb`] with a 2-node replica set: node 0 primary, node 1
+    /// backup for every key.
+    struct ReplCb;
+
+    impl DsCallbacks for ReplCb {
+        fn lookup_start(&mut self, obj: ObjectId, key: u64) -> Option<LookupHint> {
+            MockCb.lookup_start(obj, key)
+        }
+        fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
+            MockCb.lookup_end_read(obj, key, view)
+        }
+        fn lookup_end_rpc(&mut self, _obj: ObjectId, _key: u64, _node: u32, _resp: &RpcResponse) {}
+        fn owner(&self, _obj: ObjectId, _key: u64) -> u32 {
+            0
+        }
+        fn replicas(&self, _obj: ObjectId, _key: u64) -> Vec<u32> {
+            vec![0, 1]
+        }
+    }
+
+    fn ok_rpc() -> TxInput {
+        TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))
+    }
+
+    #[test]
+    fn replicate_phase_ships_backup_applies_before_commit() {
+        let mut cb = ReplCb;
+        let mut tx = TxEngine::begin(
+            30,
+            vec![],
+            vec![
+                TxItem::update(KV, 5).with_value(vec![7u8; 8]),
+                TxItem::delete(KV, 6),
+            ],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 1, "only the update lock-reads; deletes lock nothing");
+        // Lock acked: the replication volley goes out first, to the
+        // backup only, and the primary commit volley waits on its acks.
+        let repls = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(repls.len(), 2, "one backup apply per write item");
+        for (p, post) in repls.iter().enumerate() {
+            assert_eq!(post.tag, REPL_TAG | p as u32);
+            match &post.op {
+                TxOp::Rpc { node, req } => {
+                    assert_eq!(*node, 1, "replication targets the backup, not the primary");
+                    match req.key {
+                        5 => {
+                            assert_eq!(req.op, RpcOp::ReplicaUpsert);
+                            assert_eq!(req.value.as_deref(), Some(&[7u8; 8][..]));
+                        }
+                        6 => assert_eq!(req.op, RpcOp::ReplicaDelete),
+                        other => panic!("unexpected replicated key {other}"),
+                    }
+                }
+                other => panic!("expected RPC, got {other:?}"),
+            }
+        }
+        assert!(issued(tx.complete(&mut cb, REPL_TAG, ok_rpc())).is_empty());
+        // NotFound answers the backup delete of a never-replicated key —
+        // consistent, not an abort.
+        let commits = issued(tx.complete(
+            &mut cb,
+            REPL_TAG | 1,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::NotFound)),
+        ));
+        assert_eq!(commits.len(), 2, "primary commit volley posts only after repl acks");
+        assert!(issued(tx.complete(&mut cb, 0, ok_rpc())).is_empty());
+        let out = finished(tx.complete(&mut cb, 1, ok_rpc()));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert_eq!(tx.rpcs_issued, 5, "1 lock + 2 replications + 2 commits");
+    }
+
+    #[test]
+    fn unreplicated_update_skips_backup_apply() {
+        // Lock-read answered NotFound: the primary will apply nothing,
+        // so no backup apply may ship (it would insert and diverge).
+        let mut cb = ReplCb;
+        let mut tx = TxEngine::begin(31, vec![], vec![TxItem::update(KV, 5)]);
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 1);
+        let commits = issued(tx.complete(
+            &mut cb,
+            LOCK_TAG,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::NotFound)),
+        ));
+        assert_eq!(commits.len(), 1, "straight to the primary commit op");
+        assert_eq!(commits[0].tag, 0, "a commit tag, not a REPL_TAG");
+        let out = finished(tx.complete(
+            &mut cb,
+            0,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::NotFound)),
+        ));
+        assert_eq!(
+            out,
+            TxOutcome::Committed { write_results: vec![RpcResult::NotFound] },
+            "primary surfaces NotFound per item"
+        );
+    }
+
+    #[test]
+    fn fenced_backup_aborts_and_releases_locks() {
+        let mut cb = ReplCb;
+        let mut tx = TxEngine::begin(32, vec![], vec![TxItem::update(KV, 5)]);
+        assert_eq!(issued(tx.start(&mut cb)).len(), 1);
+        let repls = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(repls.len(), 1);
+        let unlocks = issued(tx.complete(
+            &mut cb,
+            REPL_TAG,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::PrimaryFenced)),
+        ));
+        assert_eq!(unlocks.len(), 1, "the held primary lock is released");
+        match &unlocks[0].op {
+            TxOp::Rpc { req, .. } => assert_eq!(req.op, RpcOp::Unlock),
+            other => panic!("expected unlock, got {other:?}"),
+        }
+        let out = finished(tx.complete(&mut cb, 0, ok_rpc()));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::PrimaryFenced));
+    }
+
+    #[test]
+    fn fenced_primary_aborts_at_lock_read() {
+        let mut cb = ReplCb;
+        let mut tx = TxEngine::begin(33, vec![], vec![TxItem::update(KV, 5)]);
+        assert_eq!(issued(tx.start(&mut cb)).len(), 1);
+        let out = finished(tx.complete(
+            &mut cb,
+            LOCK_TAG,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::PrimaryFenced)),
+        ));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::PrimaryFenced));
+    }
+
+    #[test]
+    fn replication_factor_one_has_no_replicate_phase() {
+        // MockCb keeps the default single-owner replica set: the engine
+        // must post commits directly after the locks, no extra volley.
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(34, vec![], vec![TxItem::update(KV, 5)]);
+        assert_eq!(issued(tx.start(&mut cb)).len(), 1);
+        let commits = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(commits.len(), 1);
+        assert_eq!(commits[0].tag, 0);
+        let out = finished(tx.complete(&mut cb, 0, ok_rpc()));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        assert_eq!(tx.rpcs_issued, 2, "1 lock + 1 commit, nothing replicated");
     }
 }

@@ -56,6 +56,49 @@ pub enum RpcOp {
     Insert,
     /// Delete an item.
     Delete,
+    /// Apply a committed upsert on a **backup** replica: insert the item
+    /// if absent, otherwise overwrite the value and bump the version —
+    /// the exact version trajectory the primary's `UpdateUnlock`/`Insert`
+    /// took, so replicas stay byte-identical. Sent by the commit phase's
+    /// replication volley; never takes or checks OCC locks (the
+    /// primary's item lock, held across the volley, orders replication
+    /// per key).
+    ReplicaUpsert,
+    /// Apply a committed delete on a backup replica.
+    ReplicaDelete,
+    /// Bulk-read a B-link tree's routing table: the reply value carries
+    /// every leaf's `(low key, offset)` pair so a cold client warms its
+    /// whole route cache in one round trip (also used by recovery to
+    /// re-warm after failover).
+    RoutingSnapshot,
+    /// Bulk-read a MICA shard's overflow-chain items — the one part of a
+    /// table a one-sided read of the bucket array cannot see. The crash
+    /// recovery path pairs this with bulk bucket reads to rebuild a
+    /// restarted node's tables from a survivor (the one-two-sided scheme
+    /// applied to recovery: one-sided where the layout allows, one RPC
+    /// for the pointer-chased tail).
+    ChainScan,
+}
+
+impl RpcOp {
+    /// True for the opcodes that mutate state or acquire write
+    /// authority — the set a fenced (deposed or unrecovered) node
+    /// refuses with [`RpcResult::PrimaryFenced`]. `Unlock` stays
+    /// servable on a fenced node: releasing a lock installs nothing, and
+    /// refusing it would strand the locks of transactions aborted by the
+    /// fencing itself. Reads and the recovery bulk-read opcodes also
+    /// stay servable — fencing revokes write authority, not data.
+    pub fn is_write_class(self) -> bool {
+        matches!(
+            self,
+            RpcOp::LockRead
+                | RpcOp::UpdateUnlock
+                | RpcOp::Insert
+                | RpcOp::Delete
+                | RpcOp::ReplicaUpsert
+                | RpcOp::ReplicaDelete
+        )
+    }
 }
 
 /// An RPC request as framed into the write-with-immediate payload.
@@ -104,6 +147,13 @@ pub enum RpcResult {
     /// object id no catalog entry answers to. A typed dispatch error:
     /// servers return it instead of panicking on garbage frames.
     Unsupported,
+    /// The serving node's write authority is revoked: its lease was
+    /// fenced (failover in progress) or it never recovered after a
+    /// restart. Write-class opcodes are refused with this result so a
+    /// stale lease holder can never commit through a deposed primary;
+    /// clients translate it into `AbortReason::PrimaryFenced`, expire
+    /// the node's lease, and retry against the next replica.
+    PrimaryFenced,
 }
 
 /// An RPC response, including the serving cost the simulator charges.

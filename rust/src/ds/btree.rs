@@ -550,6 +550,18 @@ impl RemoteBTree {
         out
     }
 
+    /// Every live `(key, value)` pair, ascending by key. Crash recovery
+    /// reads a survivor's replica through this and reinserts value-
+    /// preserving copies into the rebuilt tree (leaf versions restart —
+    /// the tree's OCC state is per-leaf, not per-item, so a rebuilt
+    /// node's leaf headers legitimately differ from the survivor's).
+    pub fn items(&self) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> =
+            self.leaves.iter().flat_map(|l| l.view.entries.iter().copied()).collect();
+        out.sort_by_key(|&(k, _)| k);
+        out
+    }
+
     /// The routing table a client would cache: (low fence -> leaf addr)
     /// for every leaf. Clients rebuild it via an RPC when stale.
     pub fn routing_snapshot(&self) -> Vec<(u64, RemoteAddr)> {

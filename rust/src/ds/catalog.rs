@@ -36,6 +36,7 @@
 //! **home shard** (`object id mod shards`) — per-object shard policy on
 //! top of the same lane routing.
 
+use crate::dataplane::rpc::{encode_chain_items, encode_routing_snapshot};
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::btree::{BTreeConfig, RemoteBTree, LEAF_BYTES};
 use crate::ds::hopscotch::{HopscotchConfig, HopscotchTable};
@@ -139,6 +140,12 @@ impl From<MicaConfig> for ObjectConfig {
 pub struct CatalogConfig {
     /// One entry per object.
     pub objects: Vec<ObjectConfig>,
+    /// Replication factor shared by every object: each key lives on its
+    /// hash owner (the primary) plus `replication - 1` backup nodes.
+    /// 1 (the default) is the pre-replication dataplane — no backups,
+    /// no replication volley in the commit phase. [`Placement::new`]
+    /// clamps the factor to the cluster size.
+    pub replication: u32,
 }
 
 impl CatalogConfig {
@@ -151,12 +158,20 @@ impl CatalogConfig {
     /// Schema over arbitrary backend kinds.
     pub fn heterogeneous(objects: Vec<ObjectConfig>) -> Self {
         assert!(!objects.is_empty(), "catalog needs at least one object");
-        CatalogConfig { objects }
+        CatalogConfig { objects, replication: 1 }
     }
 
     /// Single-object schema (the pre-catalog live cluster shape).
     pub fn single(cfg: MicaConfig) -> Self {
         Self::new(vec![cfg])
+    }
+
+    /// The same schema with primary-backup replication factor `r`
+    /// (clamped to at least 1; [`Placement::new`] further clamps it to
+    /// the cluster size — a 2-node cluster can hold at most 2 copies).
+    pub fn with_replication(mut self, r: u32) -> Self {
+        self.replication = r.max(1);
+        self
     }
 
     /// Number of objects.
@@ -382,6 +397,48 @@ impl Catalog {
         }
     }
 
+    /// Version-preserving insert for crash recovery, dispatched by
+    /// backend kind. MICA items keep the version the survivor's replica
+    /// carried (what makes a rebuilt table byte-identical to its peer);
+    /// B-link and hopscotch objects are value-preserving only — their
+    /// OCC state is per-leaf / absent, so `version` is ignored and the
+    /// rebuilt wire images legitimately differ (documented in
+    /// `dataplane/mod.rs`'s recovery sequence).
+    pub fn install(
+        &mut self,
+        obj: ObjectId,
+        key: u64,
+        version: u32,
+        value: Option<&[u8]>,
+    ) -> RpcResult {
+        let Catalog { backends, alloc, regions } = self;
+        match &mut backends[obj.0 as usize] {
+            Backend::Mica(t) => t.install(key, version, value, alloc, regions),
+            Backend::BTree(t) => t.try_insert(key, value_u64(key, value)),
+            Backend::Hopscotch(t) => t.insert(key, value),
+            Backend::Absent => RpcResult::Unsupported,
+        }
+    }
+
+    /// Every live `(key, version, value)` triple an object holds on this
+    /// shard — what a recovering peer pulls (via bulk one-sided reads
+    /// plus [`RpcOp::ChainScan`] on the live path; directly here for the
+    /// reference driver). B-link values are the stored u64 payload in
+    /// little-endian bytes; B-link/hopscotch versions are reported but
+    /// not restorable (see [`Catalog::install`]).
+    pub fn items(&self, obj: ObjectId) -> Vec<(u64, u32, Option<Vec<u8>>)> {
+        match &self.backends[obj.0 as usize] {
+            Backend::Mica(t) => t.items(),
+            Backend::BTree(t) => t
+                .items()
+                .into_iter()
+                .map(|(k, v)| (k, 0, Some(v.to_le_bytes().to_vec())))
+                .collect(),
+            Backend::Hopscotch(t) => t.items(),
+            Backend::Absent => Vec::new(),
+        }
+    }
+
     /// The owner-side `rpc_handler`, dispatched by the request's object
     /// id and the backend's kind. Unknown object ids, objects homed on a
     /// different shard, and opcodes a kind cannot serve all answer with
@@ -418,16 +475,35 @@ impl Catalog {
                     req.value.as_deref(),
                 )),
                 RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
-                RpcOp::Insert => RpcResponse::inline(table.insert(
+                // `insert` on an existing key overwrites the value and
+                // bumps the version without touching the lock word — the
+                // exact trajectory the primary's UpdateUnlock took — so
+                // the backup-apply opcode shares the handler.
+                RpcOp::Insert | RpcOp::ReplicaUpsert => RpcResponse::inline(table.insert(
                     req.key,
                     req.value.as_deref(),
                     alloc,
                     regions,
                 )),
-                RpcOp::Delete => {
-                    let (result, hops) = table.delete(req.key, alloc);
+                RpcOp::Delete | RpcOp::ReplicaDelete => {
+                    let (result, hops) = table.delete(req.key, req.tx_id, alloc);
                     RpcResponse { result, hops }
                 }
+                // Recovery bulk-read of this shard's overflow-chain items
+                // (the part of the table bucket-array reads cannot see).
+                // `version` carries the item count; the addr is the
+                // shard's bucket region so the requester can attribute
+                // the reply.
+                RpcOp::ChainScan => {
+                    let items: Vec<_> = table.chain_items().collect();
+                    RpcResponse::inline(RpcResult::Value {
+                        version: items.len() as u32,
+                        addr: crate::mem::RemoteAddr { region: table.bucket_region, offset: 0 },
+                        value: Some(encode_chain_items(&items)),
+                        locked: false,
+                    })
+                }
+                RpcOp::RoutingSnapshot => RpcResponse::inline(RpcResult::Unsupported),
             },
             Backend::BTree(tree) => {
                 // The full transactional opcode set at leaf granularity
@@ -444,10 +520,31 @@ impl Catalog {
                         value_u64(req.key, req.value.as_deref()),
                     ),
                     RpcOp::Unlock => tree.unlock(req.key, req.tx_id),
-                    RpcOp::Insert => {
+                    // A backup tree is never leaf-locked (replica applies
+                    // carry no OCC state), so the plain leaf ops apply
+                    // the committed image directly.
+                    RpcOp::Insert | RpcOp::ReplicaUpsert => {
                         tree.try_insert(req.key, value_u64(req.key, req.value.as_deref()))
                     }
-                    RpcOp::Delete => tree.try_delete(req.key, req.tx_id),
+                    RpcOp::Delete | RpcOp::ReplicaDelete => tree.try_delete(req.key, req.tx_id),
+                    // One round trip warms a cold client's whole route
+                    // cache: every leaf's (low fence, packed offset) pair
+                    // in the reply value, `version` = leaf count.
+                    RpcOp::RoutingSnapshot => {
+                        let snap = tree.routing_snapshot();
+                        let entries: Vec<(u64, u64)> =
+                            snap.iter().map(|&(low, addr)| (low, addr.offset)).collect();
+                        return RpcResponse {
+                            result: RpcResult::Value {
+                                version: snap.len() as u32,
+                                addr: crate::mem::RemoteAddr { region: tree.region, offset: 0 },
+                                value: Some(encode_routing_snapshot(&entries)),
+                                locked: false,
+                            },
+                            hops,
+                        };
+                    }
+                    RpcOp::ChainScan => RpcResult::Unsupported,
                 };
                 RpcResponse { result, hops }
             }
@@ -464,8 +561,12 @@ impl Catalog {
                     }),
                     None => RpcResponse::inline(RpcResult::NotFound),
                 },
-                RpcOp::Insert => RpcResponse::inline(table.insert(req.key, req.value.as_deref())),
-                RpcOp::Delete => RpcResponse::inline(table.delete(req.key)),
+                RpcOp::Insert | RpcOp::ReplicaUpsert => {
+                    RpcResponse::inline(table.insert(req.key, req.value.as_deref()))
+                }
+                RpcOp::Delete | RpcOp::ReplicaDelete => {
+                    RpcResponse::inline(table.delete(req.key))
+                }
                 _ => RpcResponse::inline(RpcResult::Unsupported),
             },
             Backend::Absent => RpcResponse::inline(RpcResult::Unsupported),
@@ -527,6 +628,7 @@ pub struct PlacementRef {
 pub struct Placement {
     nodes: u32,
     shards: u32,
+    replication: u32,
     geo: Vec<TableGeo>,
     region_len: u64,
 }
@@ -585,7 +687,8 @@ impl Placement {
                 },
             })
             .collect();
-        Placement { nodes, shards, geo, region_len }
+        let replication = cfg.replication.clamp(1, nodes);
+        Placement { nodes, shards, replication, geo, region_len }
     }
 
     /// Nodes in the cluster.
@@ -613,9 +716,29 @@ impl Placement {
         self.region_len
     }
 
+    /// Effective replication factor (clamped to the cluster size).
+    pub fn replication(&self) -> u32 {
+        self.replication
+    }
+
     /// Owner node of a key (hash-partitioned, shared by all objects).
     pub fn node_of(&self, key: u64) -> u32 {
         owner_of(key, self.nodes)
+    }
+
+    /// Replica set of `(obj, key)`: the hash owner (primary) followed by
+    /// the next `replication - 1` nodes of the ring (chained placement —
+    /// a node's backups spread over its successors, so losing one node
+    /// degrades every survivor's load evenly instead of doubling one
+    /// peer's). Pure arithmetic like [`Placement::place`], so clients,
+    /// primaries and backups all derive the same set with no directory
+    /// service. The geometry is shared by every object, but the resolver
+    /// is keyed per object (and bounds-checks the id) so a future
+    /// per-object factor stays a local change.
+    pub fn replicas(&self, obj: ObjectId, key: u64) -> Vec<u32> {
+        debug_assert!((obj.0 as usize) < self.geo.len(), "unknown object {obj:?}");
+        let primary = self.node_of(key);
+        (0..self.replication).map(|i| (primary + i) % self.nodes).collect()
     }
 
     /// Server shard owning `(obj, key)` on its owner node: the bucket
@@ -974,5 +1097,122 @@ mod tests {
             }
         }
         assert_eq!(full, 1, "2-leaf tree must hit capacity");
+    }
+
+    #[test]
+    fn replicas_chain_from_the_primary() {
+        let place = Placement::new(&hetero().with_replication(2), 3, 4);
+        assert_eq!(place.replication(), 2);
+        for obj in [ObjectId(0), ObjectId(1), ObjectId(2)] {
+            for key in 1..=200u64 {
+                let reps = place.replicas(obj, key);
+                assert_eq!(reps.len(), 2);
+                assert_eq!(reps[0], place.node_of(key), "primary leads the set");
+                assert_eq!(reps[1], (place.node_of(key) + 1) % 3, "backup is the successor");
+                assert!(reps.iter().all(|&n| n < place.nodes()));
+            }
+        }
+    }
+
+    #[test]
+    fn replication_clamps_to_cluster_size() {
+        // More copies than nodes: clamp to the cluster size.
+        let place = Placement::new(&hetero().with_replication(5), 2, 4);
+        assert_eq!(place.replication(), 2);
+        assert_eq!(place.replicas(ObjectId(0), 7).len(), 2);
+        // Zero is nonsense; the builder floors it at one copy.
+        let place = Placement::new(&hetero().with_replication(0), 3, 4);
+        assert_eq!(place.replication(), 1);
+        // The default is the pre-replication dataplane: primary only.
+        let place = Placement::new(&hetero(), 3, 4);
+        assert_eq!(place.replication(), 1);
+        assert_eq!(place.replicas(ObjectId(0), 7), vec![place.node_of(7)]);
+    }
+
+    #[test]
+    fn replica_ops_apply_committed_images() {
+        let cat = CatalogConfig::new(vec![cfg(16, 2)]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        let req = |op, tx_id, value: Option<&[u8]>| RpcRequest {
+            obj: ObjectId(0),
+            key: 9,
+            op,
+            tx_id,
+            value: value.map(|v| v.to_vec()),
+        };
+        // Backup apply needs no lock-owner token (tx 0 is fine): the
+        // primary's held item lock orders the stream per key.
+        assert_eq!(
+            c.serve_rpc(&req(RpcOp::ReplicaUpsert, 0, Some(b"v1"))).result,
+            RpcResult::Ok
+        );
+        match c.serve_rpc(&req(RpcOp::Read, 0, None)).result {
+            RpcResult::Value { version, .. } => assert_eq!(version, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Re-apply bumps the version exactly like the primary's
+        // UpdateUnlock did — replicas track the primary's trajectory.
+        assert_eq!(
+            c.serve_rpc(&req(RpcOp::ReplicaUpsert, 0, Some(b"v2"))).result,
+            RpcResult::Ok
+        );
+        match c.serve_rpc(&req(RpcOp::Read, 0, None)).result {
+            RpcResult::Value { version, .. } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(c.serve_rpc(&req(RpcOp::ReplicaDelete, 0, None)).result, RpcResult::Ok);
+        assert_eq!(c.serve_rpc(&req(RpcOp::Read, 0, None)).result, RpcResult::NotFound);
+    }
+
+    #[test]
+    fn recovery_opcodes_serve_bulk_payloads() {
+        use crate::dataplane::rpc::{decode_chain_items, decode_routing_snapshot};
+        // A width-1 table chains most of its population: ChainScan must
+        // return every chained item.
+        let cat = CatalogConfig::new(vec![cfg(8, 1)]);
+        let mut c = Catalog::new(&cat, RegionMode::Virtual(PageSize::Huge2M));
+        for key in 1..=40u64 {
+            assert_eq!(c.insert(ObjectId(0), key, Some(b"x")), RpcResult::Ok);
+        }
+        let req = |obj, op| RpcRequest { obj, key: 0, op, tx_id: 0, value: None };
+        let resp = c.serve_rpc(&req(ObjectId(0), RpcOp::ChainScan));
+        let RpcResult::Value { version, value: Some(bytes), .. } = resp.result else {
+            panic!("chain scan must return a payload");
+        };
+        let items = decode_chain_items(&bytes).expect("well-formed chain payload");
+        assert_eq!(items.len(), version as usize);
+        assert!(!items.is_empty(), "oversubscribed table must have chained items");
+        assert!(items.iter().all(|&(k, v, _)| (1..=40).contains(&k) && v == 1));
+        // The tree serves its whole routing table in one reply.
+        let mut c = Catalog::new(&hetero(), RegionMode::Virtual(PageSize::Huge2M));
+        for key in 1..=100u64 {
+            assert_eq!(c.insert(ObjectId(1), key, None), RpcResult::Ok);
+        }
+        let resp = c.serve_rpc(&req(ObjectId(1), RpcOp::RoutingSnapshot));
+        let RpcResult::Value { version, value: Some(bytes), .. } = resp.result else {
+            panic!("routing snapshot must return a payload");
+        };
+        let pairs = decode_routing_snapshot(&bytes).expect("well-formed snapshot");
+        let want: Vec<(u64, u64)> = c
+            .btree(ObjectId(1))
+            .routing_snapshot()
+            .iter()
+            .map(|&(low, addr)| (low, addr.offset))
+            .collect();
+        assert_eq!(pairs, want);
+        assert_eq!(version as usize, want.len());
+        // Kinds that cannot serve a recovery opcode answer typed errors.
+        assert_eq!(
+            c.serve_rpc(&req(ObjectId(0), RpcOp::RoutingSnapshot)).result,
+            RpcResult::Unsupported
+        );
+        assert_eq!(
+            c.serve_rpc(&req(ObjectId(1), RpcOp::ChainScan)).result,
+            RpcResult::Unsupported
+        );
+        assert_eq!(
+            c.serve_rpc(&req(ObjectId(2), RpcOp::ChainScan)).result,
+            RpcResult::Unsupported
+        );
     }
 }

@@ -214,6 +214,19 @@ impl HopscotchTable {
         out
     }
 
+    /// Every live `(key, version, value)` triple, in slot order. Crash
+    /// recovery reads a survivor's replica through this and reinserts
+    /// value-preserving copies (slot positions and versions may drift —
+    /// hopscotch displacement is insertion-order dependent and the kind
+    /// carries no OCC state a transaction could validate against).
+    pub fn items(&self) -> Vec<(u64, Version, Option<Vec<u8>>)> {
+        self.slots
+            .iter()
+            .filter(|s| s.key != 0)
+            .map(|s| (s.key, s.version, s.value.clone()))
+            .collect()
+    }
+
     /// The stored value payload of `key`, if present.
     pub fn value_of(&self, key: u64) -> Option<&[u8]> {
         let (slot, _) = self.find(key)?;

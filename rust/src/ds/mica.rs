@@ -386,14 +386,22 @@ impl MicaTable {
     }
 
     /// Delete a key. Chain nodes are unlinked and their memory freed.
+    /// A slot locked by a *foreign* transaction is refused with a typed
+    /// `LockConflict` instead of being yanked out from under the lock
+    /// holder (the holder's own `tx_id` — or `0` for non-transactional
+    /// deletes of unlocked slots — proceeds).
     pub fn delete(
         &mut self,
         key: u64,
+        tx_id: u64,
         alloc: &mut ContiguousAllocator,
     ) -> (RpcResult, u32) {
         let bucket = self.bucket_index(key);
         for i in self.slot_range(bucket) {
             if self.slots[i].key == key {
+                if self.slots[i].lock_tx != 0 && self.slots[i].lock_tx != tx_id {
+                    return (RpcResult::LockConflict, 0);
+                }
                 self.slots[i] = Slot::default();
                 self.count -= 1;
                 return (RpcResult::Ok, 0);
@@ -404,6 +412,10 @@ impl MicaTable {
         let mut hops = 1;
         while cur != NIL {
             if self.chains[cur as usize].slot.key == key {
+                let lock = self.chains[cur as usize].slot.lock_tx;
+                if lock != 0 && lock != tx_id {
+                    return (RpcResult::LockConflict, hops);
+                }
                 let next = self.chains[cur as usize].next;
                 if prev == NIL {
                     self.chain_heads[bucket as usize] = next;
@@ -423,6 +435,51 @@ impl MicaTable {
             hops += 1;
         }
         (RpcResult::NotFound, hops)
+    }
+
+    /// Install an item with an explicit version (the crash-recovery path:
+    /// a restarted node rebuilds its tables from a peer's replica and must
+    /// preserve the replica's exact `(key, version, value)` images, not
+    /// restart versions at 1). The installed slot is unlocked.
+    pub fn install(
+        &mut self,
+        key: u64,
+        version: Version,
+        value: Option<&[u8]>,
+        alloc: &mut ContiguousAllocator,
+        regions: &mut RegionTable,
+    ) -> RpcResult {
+        let res = self.insert(key, value, alloc, regions);
+        if res == RpcResult::Ok {
+            if let Some((slot, _)) = self.find_mut(key) {
+                slot.version = version;
+                slot.lock_tx = 0;
+            }
+        }
+        res
+    }
+
+    /// Every stored `(key, version, value)` triple, inline slots first,
+    /// then chained items. Recovery enumerates a survivor's shard with
+    /// this (the reference driver directly; the live driver reads the
+    /// inline slots one-sided and fetches only the chain tail via
+    /// `RpcOp::ChainScan`), and replica-equality checks compare the
+    /// triples.
+    pub fn items(&self) -> Vec<(u64, Version, Option<Vec<u8>>)> {
+        let inline = self.slots.iter().filter(|s| s.key != 0).map(|s| {
+            (s.key, s.version, s.value.clone().map(|b| b.to_vec()))
+        });
+        inline.chain(self.chain_items()).collect()
+    }
+
+    /// The chained (non-inline) `(key, version, value)` triples only —
+    /// the items a one-sided read of the bucket array cannot see. Served
+    /// to recovering peers via `RpcOp::ChainScan`.
+    pub fn chain_items(&self) -> impl Iterator<Item = (u64, Version, Option<Vec<u8>>)> + '_ {
+        self.chains
+            .iter()
+            .filter(|n| n.slot.key != 0)
+            .map(|n| (n.slot.key, n.slot.version, n.slot.value.clone().map(|b| b.to_vec())))
     }
 
     fn chain_len(&self, bucket: u64) -> u32 {
@@ -565,6 +622,31 @@ pub fn parse_bucket_view(bytes: &[u8], width: u32, item_size: u32) -> Option<Buc
         slots.push((iv.key, iv.version, iv.locked));
     }
     Some(BucketView { slots, has_chain })
+}
+
+/// Parse every occupied slot of a bucket read into `(key, version,
+/// value)` triples — the recovery path's harvest of a survivor's bucket
+/// array pulled by bulk one-sided reads. Values come back zero-padded to
+/// the table's `value_len` (the wire image stores no length), which is
+/// why recovery is byte-identical only for fixed-size values; chained
+/// items are invisible here and arrive via [`RpcOp::ChainScan`].
+///
+/// [`RpcOp::ChainScan`]: crate::ds::api::RpcOp::ChainScan
+pub fn parse_bucket_items(
+    bytes: &[u8],
+    width: u32,
+    item_size: u32,
+) -> Option<Vec<(u64, Version, Vec<u8>)>> {
+    let mut items = Vec::new();
+    for i in 0..width {
+        let off = (i * item_size) as usize;
+        let slot = bytes.get(off..off + item_size as usize)?;
+        let iv = parse_item_view(slot)?;
+        if iv.key != 0 {
+            items.push((iv.key, iv.version, slot[ITEM_HEADER as usize..].to_vec()));
+        }
+    }
+    Some(items)
 }
 
 impl MicaTable {
@@ -885,12 +967,53 @@ mod tests {
         for k in 1..=3u64 {
             t.insert(k, None, &mut a, &mut r);
         }
-        assert_eq!(t.delete(2, &mut a).0, RpcResult::Ok); // chained
+        assert_eq!(t.delete(2, 0, &mut a).0, RpcResult::Ok); // chained
         assert_eq!(t.get(2).0, RpcResult::NotFound);
-        assert_eq!(t.delete(1, &mut a).0, RpcResult::Ok); // inline
+        assert_eq!(t.delete(1, 0, &mut a).0, RpcResult::Ok); // inline
         assert_eq!(t.len(), 1);
         assert!(matches!(t.get(3).0, RpcResult::Value { .. }));
-        assert_eq!(t.delete(99, &mut a).0, RpcResult::NotFound);
+        assert_eq!(t.delete(99, 0, &mut a).0, RpcResult::NotFound);
+    }
+
+    #[test]
+    fn delete_refuses_foreign_locked_slots() {
+        // Regression (PR 5 follow-up): a delete must not yank a slot
+        // another transaction holds the write lock on — inline or chained.
+        let (mut t, mut a, mut r) = setup(1, 1);
+        t.insert(1, None, &mut a, &mut r); // inline
+        t.insert(2, None, &mut a, &mut r); // chained
+        assert!(matches!(t.lock_read(1, 100).0, RpcResult::Value { .. }));
+        assert!(matches!(t.lock_read(2, 100).0, RpcResult::Value { .. }));
+        assert_eq!(t.delete(1, 200, &mut a).0, RpcResult::LockConflict);
+        assert_eq!(t.delete(2, 200, &mut a).0, RpcResult::LockConflict);
+        assert_eq!(t.len(), 2, "refused deletes free nothing");
+        // The lock holder itself may delete; so may tx 0 once unlocked.
+        assert_eq!(t.delete(1, 100, &mut a).0, RpcResult::Ok);
+        t.unlock(2, 100);
+        assert_eq!(t.delete(2, 0, &mut a).0, RpcResult::Ok);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn install_preserves_versions_and_items_enumerates() {
+        let (mut t, mut a, mut r) = setup(1, 1);
+        t.insert(1, None, &mut a, &mut r); // inline
+        t.insert(2, None, &mut a, &mut r); // chained
+        t.insert(2, None, &mut a, &mut r); // bump chained to version 2
+        let mut items = t.items();
+        items.sort_by_key(|&(k, _, _)| k);
+        assert_eq!(
+            items.iter().map(|&(k, v, _)| (k, v)).collect::<Vec<_>>(),
+            vec![(1, 1), (2, 2)]
+        );
+        assert_eq!(t.chain_items().count(), 1, "only key 2 overflowed");
+        // Recovery rebuild into a fresh shard: versions must carry over.
+        let (mut fresh, mut a2, mut r2) = setup(1, 1);
+        for (k, v, val) in items {
+            assert_eq!(fresh.install(k, v, val.as_deref(), &mut a2, &mut r2), RpcResult::Ok);
+        }
+        assert!(matches!(fresh.get(1).0, RpcResult::Value { version: 1, .. }));
+        assert!(matches!(fresh.get(2).0, RpcResult::Value { version: 2, .. }));
     }
 
     #[test]
@@ -911,7 +1034,7 @@ mod tests {
         assert_eq!(t.item_view(addr1).unwrap().key, 1);
         assert_eq!(t.item_view(addr2).unwrap().key, 2);
         // Delete 2: its address no longer resolves.
-        t.delete(2, &mut a);
+        t.delete(2, 0, &mut a);
         assert!(t.item_view(addr2).is_none() || t.item_view(addr2).unwrap().key != 2);
     }
 

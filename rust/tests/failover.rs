@@ -1,0 +1,412 @@
+//! Failover battery (PR 6): kill / stall / fence a live node under a
+//! TATP transaction stream and pin down the replication contract —
+//! **zero committed writes lost**, bounded unavailability (one typed
+//! `PrimaryFenced` burst, then service resumes on the promoted backups),
+//! crash recovery rebuilding a node's tables from its peers with
+//! replica-identical per-key wire images, and lease failback restoring
+//! the original primary. Faults are flipped between client operations
+//! (nothing in flight), so every scenario is deterministic; see
+//! `storm::dataplane` docs for the protocol and lease invariants.
+
+use std::collections::HashMap;
+
+use storm::cluster::AbortCounts;
+use storm::dataplane::live::{LiveClient, LiveCluster};
+use storm::dataplane::tx::{stamped_value, AbortReason, TxItem, TxOutcome, WriteKind};
+use storm::ds::api::{ObjectId, RpcOp, RpcResult};
+use storm::ds::catalog::{CatalogConfig, ObjectConfig, ObjectKind};
+use storm::ds::mica::{bucket_of, owner_of, parse_bucket_items, MicaConfig};
+use storm::mem::MrKey;
+use storm::sim::Pcg64;
+use storm::workload::tatp::{self, TatpPopulation, TatpWorkload, SUBSCRIBER};
+
+const NODES: u32 = 3;
+const VICTIM: u32 = 1;
+const SUBS: u64 = 300;
+const VALUE_LEN: u32 = 32;
+
+/// The mirrored data region every node registers (region 0).
+const DATA_REGION: MrKey = MrKey(0);
+
+fn replicated_tatp_cluster() -> LiveCluster {
+    let cat = tatp::live_catalog(SUBS, VALUE_LEN).with_replication(2);
+    let c = LiveCluster::start_catalog(NODES, cat);
+    c.load_rows(TatpPopulation::new(SUBS).rows(7), |o, k| stamped_value(o, k, VALUE_LEN));
+    c
+}
+
+/// Smallest key ≥ 1 whose replica chain is headed by `node`.
+fn key_owned_by(node: u32) -> u64 {
+    (1..).find(|&k| owner_of(k, NODES) == node).expect("hash covers every node")
+}
+
+/// Fold one committed transaction's write set into the expected-state
+/// map: an acked upsert makes the row present, an acked delete absent,
+/// refused writes (NotFound updates of unpopulated rows, Full inserts)
+/// change nothing.
+fn apply_commit(
+    present: &mut HashMap<(u32, u64), bool>,
+    writes: &[TxItem],
+    results: &[RpcResult],
+) {
+    for (item, res) in writes.iter().zip(results) {
+        if *res != RpcResult::Ok {
+            continue;
+        }
+        present.insert((item.obj.0, item.key), item.kind != WriteKind::Delete);
+    }
+}
+
+/// Run one transaction with bounded retries: every attempt's abort is
+/// tallied under `class`, and the transaction must resolve (commit, or
+/// abort for a non-failover reason) within the retry budget — that bound
+/// IS the unavailability guarantee.
+fn run_bounded(
+    client: &mut LiveClient,
+    sets: &(Vec<TxItem>, Vec<TxItem>),
+    class: &str,
+    tallies: &mut HashMap<String, AbortCounts>,
+) -> TxOutcome {
+    const RETRIES: usize = 4;
+    for _ in 0..RETRIES {
+        let out = client.run_tx(sets.0.clone(), sets.1.clone());
+        match out {
+            TxOutcome::Aborted(reason) => {
+                tallies.entry(class.to_string()).or_default().record(reason);
+                if reason == AbortReason::PrimaryFenced {
+                    continue; // lease expired on observation; retry re-routes
+                }
+                return out;
+            }
+            TxOutcome::Committed { .. } => return out,
+        }
+    }
+    panic!("transaction still fenced after {RETRIES} attempts — unbounded unavailability");
+}
+
+/// Drive `txs` sequential TATP transactions, folding commits into the
+/// expected-state map and aborts into the per-class tallies. Returns the
+/// commit count.
+fn run_phase(
+    client: &mut LiveClient,
+    w: &TatpWorkload,
+    rng: &mut Pcg64,
+    txs: usize,
+    present: &mut HashMap<(u32, u64), bool>,
+    tallies: &mut HashMap<String, AbortCounts>,
+) -> u64 {
+    let mut commits = 0u64;
+    for _ in 0..txs {
+        let tx = w.next_tx(rng);
+        let class = format!("tatp/{:?}", tx.kind);
+        let sets = tx.sets(VALUE_LEN);
+        if let TxOutcome::Committed { write_results } = run_bounded(client, &sets, &class, tallies)
+        {
+            apply_commit(present, &sets.1, &write_results);
+            commits += 1;
+        }
+    }
+    commits
+}
+
+/// The acceptance scenario: kill a node mid-TATP. Committed writes must
+/// all survive (readable from the primary chain *and* from the backups),
+/// unavailability is one deterministic `PrimaryFenced` abort before the
+/// lease expires, recovery rebuilds the victim's rows replica-identical
+/// to the survivors', and the per-class abort counters show the failover
+/// window concentrated in the write classes.
+#[test]
+fn kill_mid_tatp_loses_no_committed_writes() {
+    let c = replicated_tatp_cluster();
+    let place = c.placement();
+    let w = TatpWorkload::new(SUBS);
+    let mut rng = Pcg64::seeded(0xFA11);
+    let mut client = c.client(0, None);
+    let mut present: HashMap<(u32, u64), bool> = HashMap::new();
+    for (obj, key) in TatpPopulation::new(SUBS).rows(7) {
+        present.insert((obj.0, key), true);
+    }
+    let mut tallies: HashMap<String, AbortCounts> = HashMap::new();
+
+    // Phase A: healthy cluster.
+    let commits_a = run_phase(&mut client, &w, &mut rng, 120, &mut present, &mut tallies);
+    assert!(commits_a > 100, "healthy phase must mostly commit ({commits_a})");
+
+    // Crash the victim, then model the lease timeout deterministically:
+    // one doomed write discovers the crash (synthesized `PrimaryFenced`
+    // from the dead lane's empty completion) and expires the lease.
+    c.kill_node(VICTIM);
+    let doomed = key_owned_by(VICTIM);
+    let probe = (
+        Vec::new(),
+        vec![TxItem::update(SUBSCRIBER, doomed)
+            .with_value(stamped_value(SUBSCRIBER, doomed, VALUE_LEN))],
+    );
+    let out = run_bounded(&mut client, &probe, "tatp/UpdateLocation", &mut tallies);
+    match out {
+        TxOutcome::Committed { ref write_results } => {
+            apply_commit(&mut present, &probe.1, write_results);
+        }
+        ref other => panic!("post-expiry retry must commit on the backup, got {other:?}"),
+    }
+    assert!(!client.lease_alive(VICTIM), "the failed write must expire the lease");
+    assert_eq!(client.abort_counts().primary_fenced, 1, "exactly one fenced abort");
+
+    // Phase B: degraded cluster — every transaction still resolves, and
+    // no further failover aborts occur (the lease already expired).
+    let commits_b = run_phase(&mut client, &w, &mut rng, 150, &mut present, &mut tallies);
+    assert!(commits_b > 120, "degraded phase must keep committing ({commits_b})");
+    assert_eq!(
+        client.abort_counts().primary_fenced,
+        1,
+        "one fenced burst is the whole unavailability window"
+    );
+
+    // Recover the victim from its peers and fail back.
+    c.recover_node(VICTIM);
+    client.renew_lease(VICTIM);
+    let commits_c = run_phase(&mut client, &w, &mut rng, 60, &mut present, &mut tallies);
+    assert!(commits_c > 50, "recovered cluster must commit cleanly ({commits_c})");
+    assert_eq!(client.abort_counts().primary_fenced, 1, "failback adds no fenced aborts");
+
+    // Zero lost committed writes: every tracked row matches on the
+    // primary chain (fresh reader) AND on the backups (reader with the
+    // victim's lease expired, forcing chain-second routing).
+    let mut primary_reader = c.client(2, None);
+    let mut backup_reader = c.client(2, None);
+    backup_reader.expire_lease(VICTIM);
+    let mut by_obj: HashMap<u32, (Vec<u64>, Vec<u64>)> = HashMap::new();
+    for (&(o, k), &p) in &present {
+        let slot = by_obj.entry(o).or_default();
+        if p {
+            slot.0.push(k);
+        } else {
+            slot.1.push(k);
+        }
+    }
+    for (&o, (there, gone)) in &by_obj {
+        for reader in [&mut primary_reader, &mut backup_reader] {
+            let res = reader.lookup_batch_obj(ObjectId(o), there);
+            for (k, r) in there.iter().zip(&res) {
+                assert!(r.found && !r.locked, "committed row ({o}, {k}) lost: {r:?}");
+            }
+            let res = reader.lookup_batch_obj(ObjectId(o), gone);
+            for (k, r) in gone.iter().zip(&res) {
+                assert!(!r.found, "committed delete ({o}, {k}) resurrected");
+            }
+        }
+    }
+
+    // Replica-identical recovery: for every present row whose chain
+    // includes the victim, the victim's inline wire image (key, version,
+    // value bytes) equals the surviving replica's.
+    let fabric = c.fabric();
+    let mut compared = 0usize;
+    for (&(o, k), &p) in &present {
+        let obj = ObjectId(o);
+        let chain = place.replicas(obj, k);
+        if !p || !chain.contains(&VICTIM) {
+            continue;
+        }
+        let peer = *chain.iter().find(|&&n| n != VICTIM).expect("replication 2 has a peer");
+        let geo = *place.geo(obj);
+        let off = geo.base + bucket_of(k, geo.mask) * geo.bucket_bytes as u64;
+        let find = |node: u32| {
+            let mut bucket = vec![0u8; geo.bucket_bytes as usize];
+            fabric.read_into(node, DATA_REGION, off, &mut bucket);
+            parse_bucket_items(&bucket, geo.width, geo.item_size)
+                .expect("well-formed mirrored bucket")
+                .into_iter()
+                .find(|(key, _, _)| *key == k)
+        };
+        // Chained rows live off-region (RPC-read path) — the inline
+        // sweep compares every inline row on both replicas.
+        if let (Some(mine), Some(theirs)) = (find(VICTIM), find(peer)) {
+            assert_eq!(mine, theirs, "obj {o} key {k}: rebuilt image diverges from replica");
+            compared += 1;
+        }
+    }
+    assert!(compared > 100, "the sweep must compare a real population ({compared})");
+
+    // The failover window is visible in the per-class tallies: fenced
+    // aborts concentrated in a write class, reported in the bench JSON
+    // shape.
+    let mut served = c.shutdown();
+    served.record_aborts(&client.abort_counts());
+    for (class, counts) in &tallies {
+        served.record_class_aborts(class, counts);
+    }
+    assert_eq!(served.aborts.primary_fenced, 1);
+    let fenced_class = served.class_aborts("tatp/UpdateLocation").expect("probe class recorded");
+    assert_eq!(fenced_class.primary_fenced, 1);
+    let class_fenced: u64 = served.class_aborts.iter().map(|(_, c)| c.primary_fenced).sum();
+    assert_eq!(class_fenced, served.aborts.primary_fenced, "class tallies must roll up");
+    assert!(served.class_json().contains("\"primary_fenced\": 1"));
+}
+
+/// Crash recovery is byte-exact: with a quiesced population, the
+/// victim's rebuilt data region — every table's mirrored wire array — is
+/// byte-identical to what it served before the crash (install replays
+/// the survivors' insertion order), after the kill provably wiped it.
+#[test]
+fn recovery_rebuilds_byte_identical_region() {
+    let c = replicated_tatp_cluster();
+    let len = c.placement().region_len() as usize;
+    let fabric = c.fabric();
+    let mut before = vec![0u8; len];
+    fabric.read_into(VICTIM, DATA_REGION, 0, &mut before);
+    assert!(before.iter().any(|&b| b != 0), "population must mirror real bytes");
+
+    c.kill_node(VICTIM);
+    let mut wiped = vec![0u8; len];
+    fabric.read_into(VICTIM, DATA_REGION, 0, &mut wiped);
+    assert!(wiped.iter().all(|&b| b == 0), "a crash loses volatile memory");
+
+    c.recover_node(VICTIM);
+    let mut after = vec![0u8; len];
+    fabric.read_into(VICTIM, DATA_REGION, 0, &mut after);
+    assert_eq!(before, after, "rebuilt region must be byte-identical to the pre-crash image");
+
+    // And the rebuilt node serves: a fresh client reads a victim-owned
+    // row one-sided from the recovered region.
+    let mut client = c.client(0, None);
+    let sub = (1..=SUBS).find(|&s| owner_of(s, NODES) == VICTIM).expect("victim owns rows");
+    let res = client.lookup_batch_obj(SUBSCRIBER, &[sub]);
+    assert!(res[0].found && res[0].node == VICTIM);
+    c.shutdown();
+}
+
+/// A stalled lane delays requests without dropping them: the client's
+/// RPC blocks while the fault holds and completes — served, lease
+/// intact — once the lane resumes. Stall models a GC/scheduling hiccup,
+/// not a crash.
+#[test]
+fn stalled_lane_delays_but_serves() {
+    let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg).with_replication(2));
+    c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
+    let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
+    c.stall_node(VICTIM);
+    let seed = c.client_seed(0);
+    let handle = std::thread::spawn(move || {
+        let mut client = seed.build(None);
+        let res = client.ds_rpc(ObjectId(0), key, RpcOp::Read, None);
+        (res, client.lease_alive(VICTIM))
+    });
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    c.resume_node(VICTIM);
+    let (res, lease) = handle.join().unwrap();
+    assert!(matches!(res, RpcResult::Value { .. }), "stalled request must be served: {res:?}");
+    assert!(lease, "a stall is not a failure — the lease survives");
+    c.shutdown();
+}
+
+/// Fencing revokes write authority only: reads keep serving (one-sided
+/// and RPC), write-class opcodes answer the typed refusal, and restoring
+/// authority + renewing the lease resumes writes through the node.
+#[test]
+fn fenced_node_serves_reads_until_unfenced() {
+    let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg));
+    c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
+    let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
+    c.fence_node(VICTIM);
+    let mut client = c.client(0, None);
+    // Reads are unaffected: the one-sided path never touches the server,
+    // and read-class RPCs stay served.
+    assert!(client.lookup_batch(&[key])[0].found);
+    assert!(matches!(client.ds_rpc(ObjectId(0), key, RpcOp::Read, None), RpcResult::Value { .. }));
+    // Writes are refused with the typed result, expiring the lease.
+    let fresh = (101..).find(|&k| owner_of(k, NODES) == VICTIM).unwrap();
+    let val = stamped_value(ObjectId(0), fresh, 32);
+    assert_eq!(
+        client.ds_rpc(ObjectId(0), fresh, RpcOp::Insert, Some(val.clone())),
+        RpcResult::PrimaryFenced
+    );
+    assert!(!client.lease_alive(VICTIM));
+    // Authority restored: unfence + lease renewal resumes writes.
+    c.unfence_node(VICTIM);
+    client.renew_lease(VICTIM);
+    assert_eq!(client.ds_rpc(ObjectId(0), fresh, RpcOp::Insert, Some(val)), RpcResult::Ok);
+    assert!(client.lookup_batch(&[fresh])[0].found);
+    c.shutdown();
+}
+
+/// Failback: a row written while its primary was dead (committed on the
+/// promoted backup) survives recovery, and the next commit runs through
+/// the original primary again with replication restored — both replicas
+/// end at the same version.
+#[test]
+fn replication_resumes_after_failback() {
+    let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
+    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg).with_replication(2));
+    c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
+    let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
+    let backup = (VICTIM + 1) % NODES;
+    let mut client = c.client(0, None);
+
+    c.kill_node(VICTIM);
+    // Discover the crash (empty completion expires the lease), then
+    // commit on the promoted backup.
+    assert_eq!(client.ds_rpc(ObjectId(0), key, RpcOp::Read, None), RpcResult::PrimaryFenced);
+    let out = client
+        .run_tx(vec![], vec![TxItem::update(ObjectId(0), key).with_value(vec![0xD0; 32])]);
+    assert!(matches!(out, TxOutcome::Committed { .. }), "degraded commit: {out:?}");
+
+    c.recover_node(VICTIM);
+    client.renew_lease(VICTIM);
+    // Failback commit: primary again, backup applied in the same volley.
+    let out = client
+        .run_tx(vec![], vec![TxItem::update(ObjectId(0), key).with_value(vec![0xD1; 32])]);
+    assert!(matches!(out, TxOutcome::Committed { .. }), "failback commit: {out:?}");
+
+    // Both replicas converged: the primary-path read and the forced
+    // backup-path read see the same (found, version).
+    let at_primary = client.lookup_batch(&[key]);
+    assert_eq!((at_primary[0].node, at_primary[0].version), (VICTIM, 3));
+    let mut via_backup = c.client(2, None);
+    via_backup.expire_lease(VICTIM);
+    let at_backup = via_backup.lookup_batch(&[key]);
+    assert_eq!((at_backup[0].node, at_backup[0].version), (backup, 3));
+    c.shutdown();
+}
+
+/// Satellite 2 (recovery half): after a tree-hosting node crashes and
+/// rebuilds, survivors re-warm their leaf routes with one bulk
+/// `RoutingSnapshot` per node — the rebuilt tree's leaves need not sit
+/// at their old offsets — and lookups are one-sided again on every node.
+#[test]
+fn btree_routes_rewarm_after_recovery() {
+    use storm::ds::btree::BTreeConfig;
+    let cat = CatalogConfig::heterogeneous(vec![ObjectConfig::BTree(BTreeConfig {
+        max_leaves: 1 << 10,
+    })])
+    .with_replication(2);
+    let c = LiveCluster::start_catalog(NODES, cat);
+    assert_eq!(c.placement().geo(ObjectId(0)).kind, ObjectKind::BTree);
+    c.load_rows((1..=240u64).map(|k| (ObjectId(0), k)), |o, k| stamped_value(o, k, 32));
+    let keys: Vec<u64> = (1..=240).collect();
+    let mut client = c.client(0, None);
+    client.warm_routes(ObjectId(0));
+    let warm = client.lookup_batch_obj(ObjectId(0), &keys);
+    assert!(warm.iter().all(|r| r.found && (r.reads, r.rpcs) == (1, 0)));
+
+    c.kill_node(VICTIM);
+    // Observe the crash; lookups fail over to each key's backup replica.
+    assert_eq!(
+        client.ds_rpc(ObjectId(0), key_owned_by(VICTIM), RpcOp::Read, None),
+        RpcResult::PrimaryFenced
+    );
+    let degraded = client.lookup_batch_obj(ObjectId(0), &keys);
+    assert!(degraded.iter().all(|r| r.found), "backup trees must cover every key");
+
+    c.recover_node(VICTIM);
+    client.renew_lease(VICTIM);
+    // Re-warm: the rebuilt tree's routes install in one round trip per
+    // node, and every lookup — victim-owned keys included — is one
+    // leaf read again.
+    assert!(client.warm_routes(ObjectId(0)) > 0);
+    let rewarmed = client.lookup_batch_obj(ObjectId(0), &keys);
+    assert!(rewarmed.iter().all(|r| r.found && (r.reads, r.rpcs) == (1, 0)));
+    c.shutdown();
+}

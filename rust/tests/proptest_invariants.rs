@@ -783,3 +783,72 @@ fn prop_topology_ids_unique() {
         assert_eq!(seen.len(), expect);
     }
 }
+
+// --- Replication: committed histories replay identically on replicas -----
+
+/// Primary-backup replication must be a pure function of the committed
+/// history: after a random stream of insert/update/delete transactions
+/// (some aborting), every key the stream touched serves the same
+/// `(presence, version, value)` from its primary and from its backup —
+/// aborted attempts leave no replica-visible residue, and the backup's
+/// version trajectory tracks the primary's exactly.
+#[test]
+fn prop_replicated_commit_history_identical_on_primary_and_backup() {
+    use std::collections::BTreeSet;
+
+    use storm::dataplane::live::LiveCluster;
+    use storm::dataplane::tx::stamped_value;
+    use storm::ds::catalog::CatalogConfig;
+
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(seed, 11);
+        let cfg = MicaConfig { buckets: 1 << 9, width: 2, value_len: 32, store_values: true };
+        let c = LiveCluster::start_catalog(3, CatalogConfig::single(cfg).with_replication(2));
+        c.load(1..=100, |k| stamped_value(KV, k, 32));
+        let mut client = c.client(0, None);
+        let mut touched: BTreeSet<u64> = (1..=100).collect();
+        for _ in 0..250 {
+            let k = rng.gen_range(140) + 1;
+            touched.insert(k);
+            let write = match rng.gen_range(10) {
+                0..=1 => TxItem::insert(KV, k).with_value(vec![seed as u8 ^ k as u8; 32]),
+                2 => TxItem::delete(KV, k),
+                _ => TxItem::update(KV, k).with_value(vec![(k as u8).wrapping_mul(3); 32]),
+            };
+            // Half the transactions carry a read-set item so a slice of
+            // the stream aborts in validation — aborts must not leak to
+            // either replica.
+            let reads = if rng.gen_bool(0.5) {
+                vec![TxItem::read(KV, rng.gen_range(100) + 1)]
+            } else {
+                Vec::new()
+            };
+            client.run_tx(reads, vec![write]);
+        }
+        // Serve every touched key from both ends of its chain: a read
+        // routed at the primary, then — lease expired — at the backup.
+        let place = c.placement();
+        let mut reader = c.client(1, None);
+        for &k in &touched {
+            let chain = place.replicas(KV, k);
+            assert_eq!(chain.len(), 2, "seed {seed}");
+            let at_primary = reader.ds_rpc(KV, k, RpcOp::Read, None);
+            reader.expire_lease(chain[0]);
+            let at_backup = reader.ds_rpc(KV, k, RpcOp::Read, None);
+            reader.renew_lease(chain[0]);
+            match (at_primary, at_backup) {
+                (
+                    RpcResult::Value { version: vp, value: valp, locked: lp, .. },
+                    RpcResult::Value { version: vb, value: valb, locked: lb, .. },
+                ) => {
+                    assert_eq!(vp, vb, "seed {seed} key {k}: replica versions diverged");
+                    assert_eq!(valp, valb, "seed {seed} key {k}: replica values diverged");
+                    assert!(!lp && !lb, "seed {seed} key {k}: lock leaked to a replica");
+                }
+                (RpcResult::NotFound, RpcResult::NotFound) => {}
+                (p, b) => panic!("seed {seed} key {k}: primary {p:?} vs backup {b:?}"),
+            }
+        }
+        c.shutdown();
+    }
+}

@@ -332,6 +332,43 @@ fn abort_reason_counters_tally_every_reason() {
     assert!(served.aborts.json().contains("\"validation_moved\": 1"));
 }
 
+/// Regression (PR 5 follow-up): a delete aimed at a slot another live
+/// transaction holds the write lock on is refused with a typed
+/// `LockConflict` on the dataplane path — raw RPC and transactional
+/// delete alike — and the row survives untouched until the holder
+/// commits. (The old behavior silently freed the slot out from under
+/// the lock holder.)
+#[test]
+fn delete_of_foreign_locked_slot_returns_lock_conflict() {
+    let cat = CatalogConfig::heterogeneous(vec![ObjectConfig::Mica(mica_cfg(false))]);
+    let mut cluster = LocalCluster::new_hetero(1, cat);
+    cluster.load(MICA, 1..=10);
+    let mut a = cluster.client(false);
+    // A locks key 4 and parks before commit.
+    let mut tx_a = TxEngine::begin(500, vec![], vec![TxItem::update(MICA, 4)]);
+    let lock_posts = posts_of(tx_a.start(&mut a));
+    let commit_posts = posts_of(cluster.serve_tx_post(&mut a, &mut tx_a, &lock_posts[0]));
+    // A raw (non-transactional) delete is refused, not silently applied.
+    let resp = cluster.serve_rpc(
+        0,
+        &RpcRequest { obj: MICA, key: 4, op: RpcOp::Delete, tx_id: 0, value: None },
+    );
+    assert_eq!(resp.result, RpcResult::LockConflict, "foreign-locked slot must refuse deletes");
+    // A transactional delete from another client aborts typed as well.
+    let mut b = cluster.client(false);
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::delete(MICA, 4)]);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::LockConflict));
+    // The row survived and still belongs to A, which commits cleanly...
+    let out_a = cluster.run_tx_posts(&mut a, &mut tx_a, commit_posts);
+    assert!(matches!(out_a, TxOutcome::Committed { .. }));
+    let res = cluster.run_lookup(&mut a, MICA, 4);
+    assert!(res.found && !res.locked && res.version == 2, "locked row must survive: {res:?}");
+    // ...after which the same delete goes through.
+    let out = cluster.run_tx(&mut b, vec![], vec![TxItem::delete(MICA, 4)]);
+    assert!(matches!(out, TxOutcome::Committed { .. }), "post-commit delete: {out:?}");
+    assert!(!cluster.run_lookup(&mut b, MICA, 4).found, "delete must apply once unlocked");
+}
+
 /// Heterogeneous TATP live: with CALL_FORWARDING on a B-link tree, all
 /// seven transaction kinds — including the tree-writing insert/delete
 /// classes — commit through the windowed scheduler, and no table keeps
