@@ -46,6 +46,13 @@ const TATP_SUBSCRIBERS: u64 = 2_000;
 const TATP_TXS: usize = 4_000;
 const TATP_VALUE_LEN: u32 = 32;
 
+/// Server-thread × client-thread scaling matrix (the PR 7 deliverable):
+/// each point runs a fresh cluster with `start_catalog_sharded(_, _, s)`
+/// reactor threads per node and `c` client threads.
+const SCALE_SERVERS: [u32; 4] = [1, 2, 4, 8];
+const SCALE_CLIENTS: [u32; 3] = [1, 2, 4];
+const SCALE_TXS: usize = 1_000;
+
 fn value_of(k: u64) -> Vec<u8> {
     let mut v = vec![0u8; 112];
     v[..8].copy_from_slice(&k.to_le_bytes());
@@ -441,6 +448,157 @@ fn failover_pass(ntables: usize) -> CatalogRun {
     CatalogRun { clients: 1, rate, commits, aborts, per_table: per, served }
 }
 
+// --- scaling matrix (shared-nothing shard reactors, PR 7) ----------------
+
+/// One point of the server-thread × client-thread scaling curve.
+struct ScalePoint {
+    servers: u32,
+    clients: u32,
+    lookup_ops: f64,
+    tx_rate: f64,
+    abort_rate: f64,
+    imbalance: f64,
+    forwarded: u64,
+}
+
+impl ScalePoint {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"server_threads\": {}, \"client_threads\": {}, ",
+                "\"lookup_ops_per_s\": {:.0}, \"committed_tx_per_s\": {:.0}, ",
+                "\"abort_rate\": {:.4}, \"lane_imbalance\": {:.3}, \"forwarded\": {}}}"
+            ),
+            self.servers,
+            self.clients,
+            self.lookup_ops,
+            self.tx_rate,
+            self.abort_rate,
+            self.imbalance,
+            self.forwarded,
+        )
+    }
+}
+
+/// Measure one scaling point: a fresh single-object TATP-scale cluster
+/// with `servers` shard-reactor threads per node, driven by `clients`
+/// client threads — first a pipelined lookup sweep of every loaded key,
+/// then the flattened TATP mix through the windowed scheduler (mixes
+/// pre-generated outside the clock; the rate counts commits).
+fn scaling_point(servers: u32, clients: u32) -> ScalePoint {
+    let cluster = LiveCluster::start_catalog_sharded(
+        NODES,
+        CatalogConfig::single(MicaConfig {
+            buckets: 1 << 13,
+            width: 2,
+            value_len: TATP_VALUE_LEN,
+            store_values: true,
+        }),
+        servers,
+    );
+    let keys: Vec<u64> = TatpPopulation::new(TATP_SUBSCRIBERS).flat_rows(7).collect();
+    cluster.load(keys.iter().copied(), |k| {
+        let mut v = vec![0u8; TATP_VALUE_LEN as usize];
+        v[..8].copy_from_slice(&k.to_le_bytes());
+        v
+    });
+
+    // Lookup sweep (one warm + one timed pass per client thread).
+    let mut handles = Vec::new();
+    for id in 0..clients {
+        let seed = cluster.client_seed(id % NODES);
+        let keys = keys.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            for chunk in keys.chunks(BATCH) {
+                assert!(client.lookup_batch(chunk).iter().all(|r| r.found));
+            }
+            let t0 = Instant::now();
+            for chunk in keys.chunks(BATCH) {
+                let r = client.lookup_batch(chunk);
+                assert_eq!(r.len(), chunk.len());
+            }
+            (keys.len() as u64, t0.elapsed().as_secs_f64())
+        }));
+    }
+    let mut lookup_ops = 0.0;
+    for h in handles {
+        let (n, secs) = h.join().unwrap();
+        lookup_ops += n as f64 / secs;
+    }
+
+    // Flattened TATP through the windowed scheduler.
+    let mixes: Vec<_> = (0..clients)
+        .map(|id| {
+            let workload = TatpWorkload::new(TATP_SUBSCRIBERS);
+            let mut rng = Pcg64::seeded(0x5CA1E + id as u64);
+            (0..SCALE_TXS)
+                .map(|_| workload.next_tx(&mut rng).flatten(TATP_VALUE_LEN))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for (id, txs) in mixes.into_iter().enumerate() {
+        let seed = cluster.client_seed(id as u32 % NODES);
+        handles.push(std::thread::spawn(move || {
+            let mut client = seed.build(None);
+            let (mut commits, mut aborts) = (0u64, 0u64);
+            for out in client.run_tx_batch(txs) {
+                match out {
+                    TxOutcome::Committed { .. } => commits += 1,
+                    TxOutcome::Aborted(_) => aborts += 1,
+                }
+            }
+            (commits, aborts)
+        }));
+    }
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for h in handles {
+        let (c, a) = h.join().unwrap();
+        commits += c;
+        aborts += a;
+    }
+    let tx_rate = commits as f64 / t0.elapsed().as_secs_f64();
+    let served = cluster.shutdown();
+    ScalePoint {
+        servers,
+        clients,
+        lookup_ops,
+        tx_rate,
+        abort_rate: if commits + aborts == 0 {
+            0.0
+        } else {
+            aborts as f64 / (commits + aborts) as f64
+        },
+        imbalance: served.imbalance(),
+        forwarded: served.total_forwarded(),
+    }
+}
+
+/// Run the full scaling matrix, printing one row per point.
+fn scaling_rows() -> Vec<ScalePoint> {
+    println!("# scaling matrix: server threads x client threads, fresh cluster per point");
+    let mut points = Vec::new();
+    for &s in &SCALE_SERVERS {
+        for &c in &SCALE_CLIENTS {
+            let p = scaling_point(s, c);
+            println!(
+                "scaling s={s} c={c}  lookup {:>12.0} ops/s  tatp {:>10.0} commit/s  (abort {:.4}, imb {:.2}, fwd {})",
+                p.lookup_ops, p.tx_rate, p.abort_rate, p.imbalance, p.forwarded
+            );
+            points.push(p);
+        }
+    }
+    points
+}
+
+/// The `"scaling"` JSON array for `BENCH_live.json`.
+fn scaling_json(points: &[ScalePoint]) -> String {
+    let rows: Vec<String> = points.iter().map(|p| format!("    {}", p.json())).collect();
+    format!("[\n{}\n  ]", rows.join(",\n"))
+}
+
 // --- mixed-backend lookups (heterogeneous catalog, PR 4) -----------------
 
 const MIXED_KEYS: u64 = 6_000;
@@ -621,6 +779,27 @@ fn run_series(name: &'static str, cfg: MicaConfig) -> Series {
 }
 
 fn main() {
+    // Scaling-only mode (`scripts/bench.sh scaling`): just the server ×
+    // client thread matrix, emitted as the same `scaling` rows the full
+    // artifact carries.
+    if std::env::var("BENCH_SCALING_ONLY").is_ok() {
+        let out =
+            std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
+        let points = scaling_rows();
+        let json = format!(
+            concat!(
+                "{{\n  \"bench\": \"live_throughput_scaling\",\n",
+                "  \"nodes\": {},\n  \"subscribers\": {},\n  \"scaling\": {}\n}}\n"
+            ),
+            NODES,
+            TATP_SUBSCRIBERS,
+            scaling_json(&points),
+        );
+        std::fs::write(&out, &json).expect("write bench json");
+        println!("wrote {out}");
+        return;
+    }
+
     // Inline-dominated geometry: lookups resolve with one one-sided read
     // (doorbell batching + zero-copy parse are the win).
     let inline = run_series(
@@ -796,6 +975,10 @@ fn main() {
     );
     println!("  class aborts: {}", failover.served.class_json());
 
+    // Scaling matrix: 1→8 shard-reactor threads per node × 1→4 client
+    // threads, fresh cluster per point (the shared-nothing deliverable).
+    let scale_points = scaling_rows();
+
     // Mixed-backend lookups: one object of each kind on one cluster —
     // the heterogeneous catalog's measured trade-off (fine-grained MICA
     // bucket reads vs B-link cached-route leaf reads vs FaRM-style 1 KB
@@ -889,6 +1072,7 @@ fn main() {
         "  \"tatp_failover\": {},\n",
         failover.json_row(&TATP_TABLES, "subscribers", TATP_SUBSCRIBERS)
     ));
+    json.push_str(&format!("  \"scaling\": {},\n", scaling_json(&scale_points)));
     json.push_str(&format!(
         concat!(
             "  \"mixed_backend\": {{\"keys\": {k}, ",

@@ -96,6 +96,12 @@ impl AbortCounts {
 pub struct LiveServed {
     /// Requests served, indexed `[node][lane]`.
     pub per_lane: Vec<Vec<u64>>,
+    /// Envelopes each shard reactor forwarded to a sibling shard of its
+    /// node over the cross-shard SPSC rings, indexed `[node][lane]`.
+    /// Forwarding is the slow path (misrouted lane-0 control traffic);
+    /// a forwarded count rivaling the served count means clients are
+    /// not posting to owning lanes.
+    pub forwarded: Vec<Vec<u64>>,
     /// Final adaptive transaction windows of the run's clients, one entry
     /// per client that reported via [`LiveServed::record_tx_window`]
     /// (empty when the run had no transactional clients). The live
@@ -158,6 +164,11 @@ impl LiveServed {
         self.per_lane.iter().map(|lanes| lanes.iter().sum()).collect()
     }
 
+    /// Cluster-wide cross-shard forwards (see [`LiveServed::forwarded`]).
+    pub fn total_forwarded(&self) -> u64 {
+        self.forwarded.iter().flatten().sum()
+    }
+
     /// Cluster-wide total.
     pub fn total(&self) -> u64 {
         self.per_lane.iter().flatten().sum()
@@ -180,7 +191,8 @@ impl std::fmt::Display for LiveServed {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         for (node, lanes) in self.per_lane.iter().enumerate() {
             let total: u64 = lanes.iter().sum();
-            write!(f, "node {node}: {total} served, lanes {lanes:?}")?;
+            let fwd: u64 = self.forwarded.get(node).map(|l| l.iter().sum()).unwrap_or(0);
+            write!(f, "node {node}: {total} served, {fwd} forwarded, lanes {lanes:?}")?;
             if node + 1 < self.per_lane.len() {
                 writeln!(f)?;
             }

@@ -41,10 +41,25 @@
 //!   leaf granularity, so a transaction may read a MICA table and write
 //!   through a tree in one atomic step; only hopscotch objects stay
 //!   outside the transactional opcode set (admission-checked);
-//! * each server node is split into up to [`SERVER_SHARDS`] shards, every
-//!   shard owning one bucket range of *every* table behind its own lock
-//!   with its own receive lane and event loop; per-lane `served` counters
-//!   surface shard imbalance at shutdown;
+//! * the server side is **shared-nothing**: each node splits into up to
+//!   [`SERVER_SHARDS`] shards, and every shard is its own pinned OS
+//!   thread ([`crate::fabric::affinity`]) running a single-threaded
+//!   reactor that **owns its [`Catalog`] slice outright** — no `Mutex`
+//!   or `RwLock` anywhere on the steady-state request path (a CI grep
+//!   gate enforces it). Each reactor drains its own lock-free receive
+//!   lane; clients post ring slots directly to the owning shard's lane
+//!   (the lane index *is* [`Placement::shard_of`]), so the common case
+//!   never crosses threads. Traffic that arrives on the wrong lane —
+//!   lane-0 control messages like [`RpcOp::ChainScan`] or
+//!   `RoutingSnapshot` aimed at another shard's objects — is *forwarded*
+//!   over bounded lock-free SPSC rings to the owning reactor instead of
+//!   locking its state. Control-plane mutations (population, crash
+//!   wipes, recovery installs) run as closures shipped to the owning
+//!   reactor over a job channel ([`LiveCluster::with_shard`]), so even
+//!   fault injection never takes a lock on shard state. Idle reactors
+//!   **park** (bounded spin, then [`crate::fabric::loopback::Waker`])
+//!   instead of burning a core; per-shard `served`/`forwarded` counters
+//!   merge at shutdown into the imbalance report;
 //! * `lookup_start` address resolution runs through the **AOT-compiled
 //!   XLA artifacts via PJRT** ([`crate::runtime::Engine`]) in batches —
 //!   python never executes, only its compiled output does;
@@ -62,10 +77,11 @@
 //!   [`crate::dataplane`] docs for the protocol and lease invariants.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::cluster::report::{AbortCounts, LiveServed};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
@@ -76,7 +92,10 @@ use crate::ds::mica::{
     fnv1a64, owner_of, parse_bucket_items, parse_bucket_view, parse_item_view, ItemView,
     MicaClient, MicaConfig,
 };
-use crate::fabric::loopback::{LoopbackFabric, RingConn, RpcEnvelope, SlotToken};
+use crate::fabric::affinity;
+use crate::fabric::loopback::{
+    LaneRx, LoopbackFabric, RingConn, RpcEnvelope, SlotToken, SpscRing, Waker,
+};
 use crate::mem::{MrKey, PageSize, RegionMode, RemoteAddr};
 use crate::runtime::Engine;
 
@@ -192,33 +211,39 @@ impl TxWindow {
     }
 }
 
-/// All server shards of one node: each shard is a [`Catalog`] slice
-/// holding one bucket range of every table, behind its own lock. Global
-/// bucket `g` of object `o` lives on shard `g / local_buckets(o)` at
-/// local bucket `g % local_buckets(o)`; both counts are powers of two,
-/// so the shard table's own hash-derived bucket index *is* that local
-/// bucket, and the node-global mirror offset is
-/// `base(o) + (shard * local_buckets + local) * bucket_bytes(o)`.
-struct NodeShards {
-    shards: Vec<Mutex<Catalog>>,
-    place: Placement,
-}
+/// Capacity of each cross-shard forwarding ring. Forwarded traffic is
+/// sparse (lane-0 control messages whose object lives on another shard;
+/// clients post data-path slots directly to the owning lane), so this
+/// never fills in practice — and a full ring backpressures the
+/// forwarding reactor rather than dropping.
+const FWD_RING: usize = 256;
 
-impl NodeShards {
-    fn new(cat: &CatalogConfig, place: &Placement) -> Self {
-        let shards = (0..place.shards())
-            .map(|s| {
-                Mutex::new(Catalog::for_shard(
-                    cat,
-                    s,
-                    place.shards(),
-                    RegionMode::Virtual(PageSize::Huge2M),
-                    16,
-                ))
-            })
-            .collect();
-        NodeShards { shards, place: place.clone() }
-    }
+/// Bounded spin before an idle shard reactor parks, and the park bound
+/// (defense-in-depth on top of the waker protocol — see
+/// [`crate::fabric::loopback::Waker`]).
+const IDLE_SPINS: u32 = 256;
+const IDLE_PARK: Duration = Duration::from_micros(200);
+
+/// A control-plane closure executed by a shard reactor against the
+/// [`Catalog`] slice it owns — how population, crash wipes and recovery
+/// installs mutate shard state without any lock on it. Shard layout
+/// recap: global bucket `g` of object `o` lives on shard
+/// `g / local_buckets(o)` at local bucket `g % local_buckets(o)`; both
+/// counts are powers of two, so the shard table's own hash-derived
+/// bucket index *is* that local bucket, and the node-global mirror
+/// offset is `base(o) + (shard * local_buckets + local) *
+/// bucket_bytes(o)`.
+type ShardJob = Box<dyn FnOnce(&mut Catalog) + Send>;
+
+/// The cluster handle's control-plane channel to one shard reactor.
+/// `mpsc` + atomics: pushing a job never touches the data path's
+/// synchronization.
+struct ShardCtl {
+    jobs: mpsc::Sender<ShardJob>,
+    /// Jobs sent but not yet drained (the reactor's pre-park check).
+    pending: Arc<AtomicUsize>,
+    /// The reactor's waker (jobs must wake a parked shard).
+    waker: Arc<Waker>,
 }
 
 /// Per-node fault-injection and fencing switches, shared by every server
@@ -242,15 +267,17 @@ struct NodeCtl {
     stalled: AtomicBool,
 }
 
-/// A running live cluster: per-shard server threads + shared fabric.
+/// A running live cluster: one pinned reactor thread per (node, shard),
+/// each owning its catalog slice outright, plus the shared fabric.
 pub struct LiveCluster {
     fabric: LoopbackFabric,
     cat: CatalogConfig,
     place: Placement,
     nodes: u32,
-    states: Vec<Arc<NodeShards>>,
     ctls: Vec<Arc<NodeCtl>>,
-    servers: Vec<Vec<JoinHandle<u64>>>,
+    /// Per (node, shard) control-plane job channels.
+    shard_ctls: Vec<Vec<ShardCtl>>,
+    servers: Vec<Vec<JoinHandle<(u64, u64)>>>,
 }
 
 impl LiveCluster {
@@ -260,39 +287,128 @@ impl LiveCluster {
         Self::start_catalog(nodes, CatalogConfig::single(cfg))
     }
 
-    /// Start `nodes` nodes, each hosting the full catalog: one server
-    /// event loop per bucket-range shard, every table's bucket array
-    /// mirrored at its packed offset into the node's single loopback
-    /// region.
+    /// Start `nodes` nodes, each hosting the full catalog, with up to
+    /// [`SERVER_SHARDS`] reactor threads per node.
     pub fn start_catalog(nodes: u32, cat: CatalogConfig) -> Self {
+        Self::start_catalog_sharded(nodes, cat, SERVER_SHARDS)
+    }
+
+    /// Start `nodes` nodes with an explicit shard-thread ceiling — the
+    /// scaling-curve knob (1 → one reactor thread per node, N → up to N).
+    /// Every shard is its own pinned OS thread owning one bucket range of
+    /// every table; every table's bucket array is mirrored at its packed
+    /// offset into the node's single loopback region.
+    pub fn start_catalog_sharded(nodes: u32, cat: CatalogConfig, max_shards: u32) -> Self {
         for c in &cat.objects {
             if let Some(m) = c.as_mica() {
                 assert!(m.store_values, "live mode carries real bytes");
             }
         }
-        let shards = cat.shard_count(SERVER_SHARDS);
+        let shards = cat.shard_count(max_shards);
         let place = Placement::new(&cat, nodes, shards);
         let region_len = place.region_len() as usize;
         let (fabric, rxs) = LoopbackFabric::new_sharded(nodes, &[region_len], shards);
-        let mut states = Vec::new();
         let mut ctls = Vec::new();
+        let mut shard_ctls = Vec::new();
         let mut servers = Vec::new();
         for (node, lane_rxs) in rxs.into_iter().enumerate() {
-            let ns = Arc::new(NodeShards::new(&cat, &place));
-            states.push(ns.clone());
             let ctl = Arc::new(NodeCtl::default());
             ctls.push(ctl.clone());
-            let mut handles = Vec::new();
-            for rx in lane_rxs {
-                let ns = ns.clone();
-                let fab = fabric.clone();
-                let ctl = ctl.clone();
-                handles
-                    .push(std::thread::spawn(move || serve_node(node as u32, rx, ns, fab, ctl)));
+            // One waker per shard, installed on the lane before the
+            // reactor starts so no producer can miss it.
+            let wakers: Vec<Arc<Waker>> =
+                (0..shards).map(|_| Arc::new(Waker::new())).collect();
+            for (sid, w) in wakers.iter().enumerate() {
+                fabric.set_lane_waker(node as u32, sid as u32, w.clone());
             }
+            // Cross-shard forwarding matrix: `fwd[from][to]` is the SPSC
+            // ring shard `from` pushes into and shard `to` drains (the
+            // diagonal is never used — local traffic serves in place).
+            let fwd: Vec<Vec<Arc<SpscRing<RpcEnvelope>>>> = (0..shards)
+                .map(|_| (0..shards).map(|_| Arc::new(SpscRing::new(FWD_RING))).collect())
+                .collect();
+            let mut node_ctls = Vec::new();
+            let mut handles = Vec::new();
+            for (sid, rx) in lane_rxs.into_iter().enumerate() {
+                let (jobs_tx, jobs_rx) = mpsc::channel::<ShardJob>();
+                let pending = Arc::new(AtomicUsize::new(0));
+                node_ctls.push(ShardCtl {
+                    jobs: jobs_tx,
+                    pending: pending.clone(),
+                    waker: wakers[sid].clone(),
+                });
+                let reactor = ShardReactor {
+                    node: node as u32,
+                    sid: sid as u32,
+                    shards,
+                    rx,
+                    cat: Catalog::for_shard(
+                        &cat,
+                        sid as u32,
+                        shards,
+                        RegionMode::Virtual(PageSize::Huge2M),
+                        16,
+                    ),
+                    place: place.clone(),
+                    fabric: fabric.clone(),
+                    ctl: ctl.clone(),
+                    waker: wakers[sid].clone(),
+                    inbox: (0..shards as usize)
+                        .filter(|&f| f != sid)
+                        .map(|f| fwd[f][sid].clone())
+                        .collect(),
+                    outbox: (0..shards as usize)
+                        .map(|t| (fwd[sid][t].clone(), wakers[t].clone()))
+                        .collect(),
+                    jobs: jobs_rx,
+                    jobs_pending: pending,
+                    served: 0,
+                    forwarded: 0,
+                };
+                let core = node * shards as usize + sid;
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("storm-srv-{node}.{sid}"))
+                        .spawn(move || {
+                            affinity::pin_to_core(core);
+                            reactor.run()
+                        })
+                        .expect("spawn shard reactor"),
+                );
+            }
+            shard_ctls.push(node_ctls);
             servers.push(handles);
         }
-        LiveCluster { fabric, cat, place, nodes, states, ctls, servers }
+        LiveCluster { fabric, cat, place, nodes, ctls, shard_ctls, servers }
+    }
+
+    /// Run `f` against the catalog slice owned by `(node, shard)`'s
+    /// reactor and block for its result — the control plane's substitute
+    /// for locking shard state. The closure executes *on the reactor
+    /// thread*, interleaved with request service, so it observes (and
+    /// mutates) a quiescent slice.
+    pub fn with_shard<R: Send + 'static>(
+        &self,
+        node: u32,
+        sid: u32,
+        f: impl FnOnce(&mut Catalog) -> R + Send + 'static,
+    ) -> R {
+        let (tx, rx) = mpsc::channel();
+        self.shard_job(node, sid, move |cat| {
+            let _ = tx.send(f(cat));
+        });
+        rx.recv().expect("shard reactor alive")
+    }
+
+    /// Fire-and-forget [`Self::with_shard`]: ship `f` to the owning
+    /// reactor without waiting for it to run.
+    pub fn shard_job(&self, node: u32, sid: u32, f: impl FnOnce(&mut Catalog) + Send + 'static) {
+        let sc = &self.shard_ctls[node as usize][sid as usize];
+        // Count before sending: the reactor's pre-park check must see
+        // the pending job no later than the channel does.
+        sc.pending.fetch_add(1, Ordering::AcqRel);
+        sc.jobs.send(Box::new(f)).expect("shard reactor alive");
+        sc.waker.wake();
     }
 
     /// Fabric handle for clients.
@@ -339,42 +455,30 @@ impl LiveCluster {
             // Chain-replicated population: the row lands on its primary
             // and every backup of its placement-derived replica set, so
             // a failover finds the data already on the promoted node.
+            // Each insert runs on the owning shard's reactor thread
+            // (there is no other way to touch its catalog slice) and
+            // mirrors there, preserving the row-by-row contract: a
+            // refusal stops the population with nothing after it
+            // attempted.
             for owner in self.place.replicas(obj, key) {
-                let ns = &self.states[owner as usize];
                 let sid = self.place.shard_of(obj, key);
-                let mut g = ns.shards[sid as usize].lock().unwrap();
-                let res = g.insert(obj, key, Some(&v));
+                let geo = *self.place.geo(obj);
+                let base_bucket = self.place.base_bucket(obj, sid);
+                let fabric = self.fabric.clone();
+                let val = v.clone();
+                let res = self.with_shard(owner, sid, move |cat| {
+                    let res = cat.insert(obj, key, Some(&val));
+                    if res == RpcResult::Ok {
+                        mirror_row_at(&fabric, owner, &geo, base_bucket, cat, obj, key);
+                    }
+                    res
+                });
                 if res != RpcResult::Ok {
                     return Err(PopulateError { obj, key, result: res });
                 }
-                self.mirror_row(owner, obj, key, &mut g);
             }
         }
         Ok(())
-    }
-
-    /// Mirror the bytes the last mutation of `(obj, key)` in `g` dirtied
-    /// into `owner`'s packed data region, kind-dispatched: MICA mirrors
-    /// the key's bucket image, tree and hopscotch objects their own
-    /// dirty journals.
-    fn mirror_row(&self, owner: u32, obj: ObjectId, key: u64, g: &mut Catalog) {
-        let geo = *self.place.geo(obj);
-        match geo.kind {
-            ObjectKind::Mica => {
-                let sid = self.place.shard_of(obj, key);
-                let local = g.table(obj).bucket_index_of(key);
-                let global = self.place.base_bucket(obj, sid) + local;
-                let image = g.table(obj).bucket_image(local);
-                self.fabric.write(
-                    owner,
-                    DATA_REGION,
-                    geo.base + global * geo.bucket_bytes as u64,
-                    &image,
-                );
-            }
-            ObjectKind::BTree => mirror_btree_dirty(&self.fabric, owner, &geo, g, obj),
-            ObjectKind::Hopscotch => mirror_hop_dirty(&self.fabric, owner, &geo, g, obj),
-        }
     }
 
     /// Crash `node`: its lanes drop every queued and future request
@@ -390,18 +494,19 @@ impl LiveCluster {
         let ctl = &self.ctls[node as usize];
         ctl.fenced.store(true, Ordering::Release);
         ctl.killed.store(true, Ordering::Release);
-        // Wipe storage after the switches flip; the per-shard locks
-        // order the wipe against any request already mid-service.
-        let ns = &self.states[node as usize];
-        for sid in 0..self.place.shards() {
-            let mut g = ns.shards[sid as usize].lock().unwrap();
-            *g = Catalog::for_shard(
-                &self.cat,
-                sid,
-                self.place.shards(),
-                RegionMode::Virtual(PageSize::Huge2M),
-                16,
-            );
+        // Wipe storage after the switches flip. The wipe runs as a job
+        // on each shard's own reactor thread, which orders it after any
+        // request already mid-service (jobs and requests interleave on
+        // one single-threaded loop) — the ownership analog of the old
+        // per-shard lock handoff. Reactors drain jobs even while
+        // "killed": a dead node's thread is still our executor for
+        // crash bookkeeping.
+        let shards = self.place.shards();
+        for sid in 0..shards {
+            let cfg = self.cat.clone();
+            self.with_shard(node, sid, move |c| {
+                *c = Catalog::for_shard(&cfg, sid, shards, RegionMode::Virtual(PageSize::Huge2M), 16);
+            });
         }
         self.fabric.write(node, DATA_REGION, 0, &vec![0u8; self.place.region_len() as usize]);
     }
@@ -495,7 +600,7 @@ impl LiveCluster {
                             let req = RpcRequest {
                                 obj,
                                 // ChainScan's key field selects the shard
-                                // (see `handle_request`).
+                                // (see `ShardReactor::route_of`).
                                 key: sid as u64,
                                 op: RpcOp::ChainScan,
                                 tx_id: 0,
@@ -528,9 +633,11 @@ impl LiveCluster {
                         }
                     }
                     ObjectKind::BTree | ObjectKind::Hopscotch => {
+                        // Home-shard harvest runs on the peer shard's own
+                        // reactor thread (its slice is owned, not shared).
                         let sid = self.place.shard_of(obj, 0); // home shard
-                        let g = self.states[peer as usize].shards[sid as usize].lock().unwrap();
-                        for (key, version, value) in g.items(obj) {
+                        let items = self.with_shard(peer, sid, move |cat| cat.items(obj));
+                        for (key, version, value) in items {
                             absorb(obj, key, version, value);
                         }
                     }
@@ -543,14 +650,20 @@ impl LiveCluster {
         // chain layout, hence byte-identical MICA wire images.
         let mut rows: Vec<((u32, u64), (u32, Option<Vec<u8>>))> = best.into_iter().collect();
         rows.sort_unstable_by_key(|&((o, k), _)| (o, k));
-        let ns = &self.states[node as usize];
         for ((o, key), (version, value)) in rows {
             let obj = ObjectId(o);
             let sid = self.place.shard_of(obj, key);
-            let mut g = ns.shards[sid as usize].lock().unwrap();
-            let res = g.install(obj, key, version, value.as_deref());
+            let geo = *self.place.geo(obj);
+            let base_bucket = self.place.base_bucket(obj, sid);
+            let fabric = self.fabric.clone();
+            let res = self.with_shard(node, sid, move |cat| {
+                let res = cat.install(obj, key, version, value.as_deref());
+                if res == RpcResult::Ok {
+                    mirror_row_at(&fabric, node, &geo, base_bucket, cat, obj, key);
+                }
+                res
+            });
             assert_eq!(res, RpcResult::Ok, "recovery install refused: {obj:?} key {key}");
-            self.mirror_row(node, obj, key, &mut g);
         }
         ctl.fenced.store(false, Ordering::Release);
     }
@@ -588,20 +701,34 @@ impl LiveCluster {
         }
     }
 
-    /// Stop the servers (poison message per shard event loop) and return
-    /// the per-lane counts of RPCs served (shard imbalance report).
+    /// Stop the servers (poison message per shard reactor) and return
+    /// the per-shard counts of RPCs served and envelopes forwarded
+    /// cross-shard (the imbalance report). Exiting reactors drop their
+    /// receive lanes, which drains queued envelopes — posted slots
+    /// complete empty, so straggler clients fail fast instead of
+    /// hanging.
     pub fn shutdown(self) -> LiveServed {
         for node in 0..self.nodes {
             for lane in 0..self.fabric.lanes(node) {
                 self.fabric.send_raw_lane(u32::MAX, node, lane, Vec::new());
             }
         }
+        let mut per_lane = Vec::new();
+        let mut forwarded = Vec::new();
+        for handles in self.servers {
+            let mut served_row = Vec::new();
+            let mut fwd_row = Vec::new();
+            for h in handles {
+                let (served, fwd) = h.join().unwrap();
+                served_row.push(served);
+                fwd_row.push(fwd);
+            }
+            per_lane.push(served_row);
+            forwarded.push(fwd_row);
+        }
         LiveServed {
-            per_lane: self
-                .servers
-                .into_iter()
-                .map(|handles| handles.into_iter().map(|h| h.join().unwrap()).collect())
-                .collect(),
+            per_lane,
+            forwarded,
             tx_windows: Vec::new(),
             aborts: AbortCounts::default(),
             class_aborts: Vec::new(),
@@ -623,56 +750,227 @@ fn reply_header(node: u32, req: &RpcHeader) -> RpcHeader {
     }
 }
 
-/// Per-shard server event loop: drains one receive lane, executes the
-/// `rpc_handler` callbacks against the owning shard catalog, mirrors
-/// dirtied bytes, and writes the reply into the ring slot. Returns the
-/// number of RPCs served.
-fn serve_node(
+/// One shard's single-threaded reactor: a pinned OS thread that owns
+/// its [`Catalog`] slice outright and serves its own receive lane. No
+/// lock guards any of this state — the thread *is* the synchronization.
+/// Work sources, drained in priority order each iteration:
+///
+/// 1. control-plane jobs (population / wipe / recovery closures) from
+///    the cluster handle's channel — always drained, even while the
+///    node is "killed" or stalled, because crash bookkeeping executes
+///    *as* jobs;
+/// 2. the cross-shard inbox: envelopes other reactors of this node
+///    forwarded because this shard owns the addressed object
+///    ([`SpscRing`] per peer shard, lock-free);
+/// 3. the shard's own receive lane (slots posted by clients straight to
+///    the owning lane, plus lane-local control messages).
+///
+/// Idle, the reactor spins briefly then parks on its [`Waker`]
+/// (producers wake it after publishing) — an idle shard costs ~nothing,
+/// so the scaling curve measures work, not spin waste.
+struct ShardReactor {
     node: u32,
-    rx: Receiver<RpcEnvelope>,
-    shards: Arc<NodeShards>,
+    sid: u32,
+    shards: u32,
+    rx: LaneRx,
+    /// This shard's slice of every table — exclusively owned.
+    cat: Catalog,
+    place: Placement,
     fabric: LoopbackFabric,
     ctl: Arc<NodeCtl>,
-) -> u64 {
-    let mut served = 0u64;
-    while let Ok(env) = rx.recv() {
+    waker: Arc<Waker>,
+    /// Forwarding rings this shard consumes (one per peer shard).
+    inbox: Vec<Arc<SpscRing<RpcEnvelope>>>,
+    /// Forwarding rings this shard produces into, with the target's
+    /// waker (indexed by target shard id; own entry unused).
+    outbox: Vec<(Arc<SpscRing<RpcEnvelope>>, Arc<Waker>)>,
+    jobs: mpsc::Receiver<ShardJob>,
+    jobs_pending: Arc<AtomicUsize>,
+    served: u64,
+    forwarded: u64,
+}
+
+impl ShardReactor {
+    /// Reactor loop; returns `(served, forwarded)` counters at shutdown.
+    fn run(mut self) -> (u64, u64) {
+        self.waker.register_current();
+        loop {
+            self.drain_jobs();
+            let mut progressed = false;
+            for i in 0..self.inbox.len() {
+                while let Some(env) = self.inbox[i].pop() {
+                    progressed = true;
+                    // Forwarded envelopes are already routed: the sender
+                    // proved this shard owns the addressed object.
+                    if !self.process(env, true) {
+                        return (self.served, self.forwarded);
+                    }
+                }
+            }
+            if let Some(env) = self.rx.try_recv() {
+                progressed = true;
+                if !self.process(env, false) {
+                    return (self.served, self.forwarded);
+                }
+            }
+            if progressed {
+                continue;
+            }
+            // Idle: bounded spin, then announce sleep, re-check every
+            // source (the waker protocol's lost-wakeup guard), park.
+            let mut spins = 0u32;
+            loop {
+                if self.has_work() {
+                    break;
+                }
+                if spins < IDLE_SPINS {
+                    spins += 1;
+                    std::hint::spin_loop();
+                    continue;
+                }
+                self.waker.begin_sleep();
+                if self.has_work() {
+                    self.waker.end_sleep();
+                    break;
+                }
+                std::thread::park_timeout(IDLE_PARK);
+                self.waker.end_sleep();
+                spins = 0;
+            }
+        }
+    }
+
+    /// Anything queued on any work source? (Pre-park re-check.)
+    fn has_work(&mut self) -> bool {
+        self.jobs_pending.load(Ordering::Acquire) > 0
+            || self.inbox.iter().any(|r| !r.is_empty())
+            || self.rx.has_pending()
+    }
+
+    /// Execute every queued control-plane job against the owned slice.
+    /// Runs unconditionally — killed and stalled nodes still execute
+    /// jobs (kill wipes and recovery installs arrive this way).
+    fn drain_jobs(&mut self) {
+        while let Ok(job) = self.jobs.try_recv() {
+            self.jobs_pending.fetch_sub(1, Ordering::AcqRel);
+            job(&mut self.cat);
+        }
+    }
+
+    /// Which shard owns `req`? `None` means "serve locally" (unknown
+    /// object ids answer the typed [`RpcResult::Unsupported`] wherever
+    /// they land).
+    fn route_of(&self, req: &RpcRequest) -> Option<u32> {
+        if (req.obj.0 as usize) >= self.place.objects() {
+            return None;
+        }
+        if req.op == RpcOp::ChainScan {
+            // ChainScan addresses a *shard*, not a key: its key field
+            // selects which shard's overflow chains to scan (hash
+            // placement cannot be inverted to aim a real key at a
+            // chosen shard).
+            return Some((req.key % self.shards as u64) as u32);
+        }
+        Some(self.place.shard_of(req.obj, req.key))
+    }
+
+    /// Hand an envelope to the owning shard's forwarding ring and wake
+    /// it. A full ring backpressures: forwarded traffic is sparse
+    /// serialized control-plane flow (clients post data-path slots
+    /// directly to the owning lane), so [`FWD_RING`] never fills in
+    /// practice; if it ever does, we keep draining our own jobs while
+    /// retrying so a kill/recover can't deadlock against the backoff.
+    fn forward(&mut self, target: u32, env: RpcEnvelope) {
+        self.forwarded += 1;
+        let mut env = env;
+        loop {
+            match self.outbox[target as usize].0.push(env) {
+                Ok(()) => {
+                    self.outbox[target as usize].1.wake();
+                    return;
+                }
+                Err(back) => {
+                    env = back;
+                    self.outbox[target as usize].1.wake();
+                    self.drain_jobs();
+                    std::thread::park_timeout(Duration::from_micros(10));
+                }
+            }
+        }
+    }
+
+    /// Serve (or route) one envelope. Returns `false` on the shutdown
+    /// poison. `routed` marks envelopes that already traversed the
+    /// forwarding matrix — they are served here unconditionally.
+    fn process(&mut self, env: RpcEnvelope, routed: bool) -> bool {
         // Shutdown poison (an empty message) outranks every fault
         // switch: a stalled or crashed node must still join at shutdown.
         if matches!(&env, RpcEnvelope::Message { payload, .. } if payload.is_empty()) {
-            break;
+            return false;
         }
-        // Stalled lane (GC pause / partition model): the request waits —
+        // Stalled shard (GC pause / partition model): the request waits —
         // its ring slot stays posted — until resumed or the node dies.
-        while ctl.stalled.load(Ordering::Acquire) && !ctl.killed.load(Ordering::Acquire) {
-            std::thread::yield_now();
+        // Parked, not spinning (the resume flip is rare); jobs still
+        // drain so the control plane can kill a stalled node.
+        while self.ctl.stalled.load(Ordering::Acquire) && !self.ctl.killed.load(Ordering::Acquire)
+        {
+            self.drain_jobs();
+            std::thread::park_timeout(Duration::from_micros(50));
         }
-        if ctl.killed.load(Ordering::Acquire) {
+        if self.ctl.killed.load(Ordering::Acquire) {
             // Crashed node: drop the envelope unserved. A ring slot
             // completes empty — the loopback analog of a flushed work
             // request on a torn-down QP — so the client observes the
             // crash instead of hanging; a message's reply channel just
-            // closes. The lane itself stays parked on its receive
-            // channel, ready for `recover_node` to revive the node.
-            continue;
+            // closes. The reactor itself keeps running (it executes the
+            // wipe and recovery jobs), ready for `recover_node` to
+            // revive the node.
+            return true;
         }
         match env {
-            RpcEnvelope::Message { payload, reply, .. } => {
-                let Some(hdr) = RpcHeader::decode(&payload) else { continue };
+            RpcEnvelope::Message { from, payload, reply } => {
+                let Some(hdr) = RpcHeader::decode(&payload) else { return true };
                 let Some(req) = decode_request(&payload[RPC_HEADER_BYTES as usize..]) else {
-                    continue;
+                    return true;
                 };
-                let resp = handle_request(node, &shards, &fabric, &ctl, &req);
-                served += 1;
+                if !routed {
+                    if let Some(target) = self.route_of(&req) {
+                        if target != self.sid {
+                            self.forward(target, RpcEnvelope::Message { from, payload, reply });
+                            return true;
+                        }
+                    }
+                }
+                let resp = self.handle(&req);
+                self.served += 1;
                 if let Some(reply) = reply {
                     let mut out = Vec::with_capacity(
                         (RPC_HEADER_BYTES + RPC_RESP_BODY_BYTES + 4) as usize,
                     );
-                    reply_header(node, &hdr).encode_into(&mut out);
+                    reply_header(self.node, &hdr).encode_into(&mut out);
                     encode_response_into(&resp, &mut out);
                     let _ = reply.send(out);
                 }
             }
             RpcEnvelope::Slot(slot) => {
+                if !routed {
+                    // Routing peek: the object id and key sit at fixed
+                    // wire offsets, so steering needs no serve — the NIC
+                    // analogy is switching on the immediate/header.
+                    let target = slot.peek(|reqb| {
+                        if RpcHeader::decode(reqb).is_none() {
+                            return None;
+                        }
+                        decode_request(&reqb[RPC_HEADER_BYTES as usize..])
+                            .and_then(|req| self.route_of(&req))
+                    });
+                    if let Some(target) = target {
+                        if target != self.sid {
+                            self.forward(target, RpcEnvelope::Slot(slot));
+                            return true;
+                        }
+                    }
+                }
                 // The write-with-immediate value duplicates the header's
                 // correlation cookie (the paper raises the receive
                 // completion with it); both must agree.
@@ -692,18 +990,18 @@ fn serve_node(
                         Some(req.obj),
                         "object id must be peekable at its fixed wire offset"
                     );
-                    let resp = handle_request(node, &shards, &fabric, &ctl, &req);
-                    reply_header(node, &hdr).encode_into(out);
+                    let resp = self.handle(&req);
+                    reply_header(self.node, &hdr).encode_into(out);
                     encode_response_into(&resp, out);
                     ok = true;
                 });
                 if ok {
-                    served += 1;
+                    self.served += 1;
                 }
             }
         }
+        true
     }
-    served
 }
 
 /// A population-path insert the storage refused (e.g. the typed
@@ -760,125 +1058,159 @@ fn mirror_hop_dirty(
     }
 }
 
-/// Execute one request against its owning shard catalog (dispatched by
-/// the request's object id and the backend's kind), mirror exactly what
-/// the op dirtied at the object's packed offset, and translate
-/// backend-local addresses to the node-global mirrored region.
-fn handle_request(
-    node: u32,
-    ns: &NodeShards,
+/// Mirror one freshly inserted/installed row of any object kind into the
+/// node's packed data region — the population and recovery paths'
+/// post-write hook, executed on the owning shard's reactor thread (for
+/// MICA the caller passes the shard's base-bucket offset; trees and
+/// hopscotch objects are home-sharded at base 0).
+fn mirror_row_at(
     fabric: &LoopbackFabric,
-    ctl: &NodeCtl,
-    req: &RpcRequest,
-) -> RpcResponse {
-    let place = &ns.place;
-    if (req.obj.0 as usize) >= place.objects() {
-        // The wire accepts any u32 object id; an unknown one must not
-        // panic the shard's event loop (that would hang every client
-        // routed to this lane). Typed dispatch error.
-        return RpcResponse::inline(RpcResult::Unsupported);
-    }
-    if ctl.fenced.load(Ordering::Acquire) && req.op.is_write_class() {
-        // Write authority revoked (deposed primary / unrecovered
-        // restart): refuse before touching storage, so a stale lease
-        // holder can never commit through this node. Reads, `Unlock`
-        // and the recovery bulk-read opcodes keep serving — fencing
-        // revokes authority, not data.
-        return RpcResponse::inline(RpcResult::PrimaryFenced);
-    }
-    // ChainScan addresses a *shard*, not a key: its key field selects
-    // which shard's overflow chains to scan (hash placement cannot be
-    // inverted to aim a real key at a chosen shard).
-    let sid = if req.op == RpcOp::ChainScan {
-        (req.key % place.shards() as u64) as u32
-    } else {
-        place.shard_of(req.obj, req.key)
-    };
-    let mut g = ns.shards[sid as usize].lock().unwrap();
-    let mut resp = g.serve_rpc(req);
-    let geo = *place.geo(req.obj);
+    node: u32,
+    geo: &TableGeo,
+    shard_base_bucket: u64,
+    cat: &mut Catalog,
+    obj: ObjectId,
+    key: u64,
+) {
     match geo.kind {
         ObjectKind::Mica => {
             let bb = geo.bucket_bytes as u64;
-            let shard_base = geo.base + place.base_bucket(req.obj, sid) * bb;
-            // Mirror only what the op actually dirtied: plain reads never
-            // touch state, and mutating ops that found nothing to change
-            // (NotFound, a lost lock race, a full table, a dispatch
-            // error) leave the image as-is. A successful LockRead *does*
-            // dirty state — the lock bit must be visible to other
-            // clients' one-sided validation reads.
-            let dirty = match (req.op, &resp.result) {
-                (RpcOp::Read, _) => false,
-                (_, RpcResult::NotFound)
-                | (_, RpcResult::LockConflict)
-                | (_, RpcResult::Full)
-                | (_, RpcResult::Unsupported) => false,
-                _ => true,
-            };
-            if dirty {
-                let table = g.table(req.obj);
-                // Lock/unlock/update mutate one existing item in place:
-                // mirror just that slot's bytes (header + value) instead
-                // of the whole bucket image. Structural ops
-                // (insert/delete) can move slots or flip the chain flag,
-                // and chained items have no inline slot — those fall back
-                // to the full bucket image.
-                let slot_local =
-                    matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock);
-                match if slot_local { table.dirty_slot_image(req.key) } else { None } {
-                    Some((off, image)) => {
-                        fabric.write(node, DATA_REGION, shard_base + off, &image)
-                    }
-                    None => {
-                        let local = table.bucket_index_of(req.key);
-                        let image = table.bucket_image(local);
-                        fabric.write(node, DATA_REGION, shard_base + local * bb, &image);
-                    }
-                }
-            }
-            // Shard tables address their bucket array from offset 0 in a
-            // private per-table region; clients read the node-global
-            // packed mirror, so rebase inline item addresses. Chain
-            // addresses keep their private region keys — those are always
-            // >= the object count (see [`Catalog`]), so they can never be
-            // mistaken for the data region and clients fall back to an
-            // RPC read for them.
-            if let RpcResult::Value { addr, .. } = &mut resp.result {
-                if addr.region == g.table(req.obj).bucket_region {
-                    *addr = RemoteAddr { region: DATA_REGION, offset: shard_base + addr.offset };
-                }
-            }
+            let table = cat.table(obj);
+            let local = table.bucket_index_of(key);
+            let image = table.bucket_image(local);
+            fabric.write(
+                node,
+                DATA_REGION,
+                geo.base + (shard_base_bucket + local) * bb,
+                &image,
+            );
         }
-        ObjectKind::BTree => {
-            // The whole tree lives on this (home) shard, so leaf indices
-            // are node-global already. Mirroring is driven by the tree's
-            // own dirty journal, not by the result code: an op can
-            // mutate the wire image while answering NotFound (an
-            // UpdateUnlock whose entry a same-volley delete already
-            // removed still clears the leaf lock word), and a stale
-            // mirrored lock word would wedge every other client's
-            // one-sided leaf-header validation on ValidationLocked.
-            // Refused ops push nothing, so this is a no-op for them.
-            mirror_btree_dirty(fabric, node, &geo, &mut g, req.obj);
-            if let RpcResult::Value { addr, .. } = &mut resp.result {
-                if addr.region == g.btree(req.obj).region {
-                    *addr = RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
-                }
-            }
-        }
-        ObjectKind::Hopscotch => {
-            if matches!(req.op, RpcOp::Insert | RpcOp::Delete) && resp.result == RpcResult::Ok
-            {
-                mirror_hop_dirty(fabric, node, &geo, &mut g, req.obj);
-            }
-            if let RpcResult::Value { addr, .. } = &mut resp.result {
-                if addr.region == g.hopscotch(req.obj).region {
-                    *addr = RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
-                }
-            }
-        }
+        ObjectKind::BTree => mirror_btree_dirty(fabric, node, geo, cat, obj),
+        ObjectKind::Hopscotch => mirror_hop_dirty(fabric, node, geo, cat, obj),
     }
-    resp
+}
+
+impl ShardReactor {
+    /// Execute one request against this shard's exclusively-owned
+    /// catalog slice (dispatched by the request's object id and the
+    /// backend's kind), mirror exactly what the op dirtied at the
+    /// object's packed offset, and translate backend-local addresses to
+    /// the node-global mirrored region. Routing already happened
+    /// ([`Self::route_of`]): every request arriving here is this
+    /// shard's to serve.
+    fn handle(&mut self, req: &RpcRequest) -> RpcResponse {
+        if (req.obj.0 as usize) >= self.place.objects() {
+            // The wire accepts any u32 object id; an unknown one must not
+            // panic the shard's event loop (that would hang every client
+            // routed to this lane). Typed dispatch error.
+            return RpcResponse::inline(RpcResult::Unsupported);
+        }
+        if self.ctl.fenced.load(Ordering::Acquire) && req.op.is_write_class() {
+            // Write authority revoked (deposed primary / unrecovered
+            // restart): refuse before touching storage, so a stale lease
+            // holder can never commit through this node. Reads, `Unlock`
+            // and the recovery bulk-read opcodes keep serving — fencing
+            // revokes authority, not data.
+            return RpcResponse::inline(RpcResult::PrimaryFenced);
+        }
+        let sid = self.sid;
+        let mut resp = self.cat.serve_rpc(req);
+        let geo = *self.place.geo(req.obj);
+        match geo.kind {
+            ObjectKind::Mica => {
+                let bb = geo.bucket_bytes as u64;
+                let shard_base = geo.base + self.place.base_bucket(req.obj, sid) * bb;
+                // Mirror only what the op actually dirtied: plain reads
+                // never touch state, and mutating ops that found nothing
+                // to change (NotFound, a lost lock race, a full table, a
+                // dispatch error) leave the image as-is. A successful
+                // LockRead *does* dirty state — the lock bit must be
+                // visible to other clients' one-sided validation reads.
+                let dirty = match (req.op, &resp.result) {
+                    (RpcOp::Read, _) => false,
+                    (_, RpcResult::NotFound)
+                    | (_, RpcResult::LockConflict)
+                    | (_, RpcResult::Full)
+                    | (_, RpcResult::Unsupported) => false,
+                    _ => true,
+                };
+                if dirty {
+                    let table = self.cat.table(req.obj);
+                    // Lock/unlock/update mutate one existing item in
+                    // place: mirror just that slot's bytes (header +
+                    // value) instead of the whole bucket image.
+                    // Structural ops (insert/delete) can move slots or
+                    // flip the chain flag, and chained items have no
+                    // inline slot — those fall back to the full bucket
+                    // image.
+                    let slot_local =
+                        matches!(req.op, RpcOp::LockRead | RpcOp::UpdateUnlock | RpcOp::Unlock);
+                    match if slot_local { table.dirty_slot_image(req.key) } else { None } {
+                        Some((off, image)) => {
+                            self.fabric.write(self.node, DATA_REGION, shard_base + off, &image)
+                        }
+                        None => {
+                            let local = table.bucket_index_of(req.key);
+                            let image = table.bucket_image(local);
+                            self.fabric.write(
+                                self.node,
+                                DATA_REGION,
+                                shard_base + local * bb,
+                                &image,
+                            );
+                        }
+                    }
+                }
+                // Shard tables address their bucket array from offset 0
+                // in a private per-table region; clients read the
+                // node-global packed mirror, so rebase inline item
+                // addresses. Chain addresses keep their private region
+                // keys — those are always >= the object count (see
+                // [`Catalog`]), so they can never be mistaken for the
+                // data region and clients fall back to an RPC read for
+                // them.
+                if let RpcResult::Value { addr, .. } = &mut resp.result {
+                    if addr.region == self.cat.table(req.obj).bucket_region {
+                        *addr =
+                            RemoteAddr { region: DATA_REGION, offset: shard_base + addr.offset };
+                    }
+                }
+            }
+            ObjectKind::BTree => {
+                // The whole tree lives on this (home) shard, so leaf
+                // indices are node-global already. Mirroring is driven by
+                // the tree's own dirty journal, not by the result code:
+                // an op can mutate the wire image while answering
+                // NotFound (an UpdateUnlock whose entry a same-volley
+                // delete already removed still clears the leaf lock
+                // word), and a stale mirrored lock word would wedge every
+                // other client's one-sided leaf-header validation on
+                // ValidationLocked. Refused ops push nothing, so this is
+                // a no-op for them.
+                mirror_btree_dirty(&self.fabric, self.node, &geo, &mut self.cat, req.obj);
+                if let RpcResult::Value { addr, .. } = &mut resp.result {
+                    if addr.region == self.cat.btree(req.obj).region {
+                        *addr =
+                            RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
+                    }
+                }
+            }
+            ObjectKind::Hopscotch => {
+                if matches!(req.op, RpcOp::Insert | RpcOp::Delete)
+                    && resp.result == RpcResult::Ok
+                {
+                    mirror_hop_dirty(&self.fabric, self.node, &geo, &mut self.cat, req.obj);
+                }
+                if let RpcResult::Value { addr, .. } = &mut resp.result {
+                    if addr.region == self.cat.hopscotch(req.obj).region {
+                        *addr =
+                            RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
+                    }
+                }
+            }
+        }
+        resp
+    }
 }
 
 /// Pure-arithmetic geometry of one hopscotch object (no client state:
@@ -1164,6 +1496,7 @@ impl ClientSeed {
             place: self.place,
             conns,
             readbuf: Vec::new(),
+            batchbuf: Vec::new(),
             // Unique per built client (not per node id): tx ids are lock
             // owner tokens, so two clients must never share a stream.
             next_tx: (CLIENT_UID.fetch_add(1, Ordering::Relaxed) + 1) << 32 | 1,
@@ -1260,6 +1593,9 @@ pub struct LiveClient {
     conns: Vec<RingConn>,
     /// Reusable scratch buffer for single one-sided reads.
     readbuf: Vec<u8>,
+    /// Reusable scratch for doorbell-batched `read_batch` volleys —
+    /// client-owned so the steady state allocates nothing per read.
+    batchbuf: Vec<u8>,
     next_tx: u64,
     seq: u16,
     /// Adaptive transaction window state.
@@ -1298,8 +1634,11 @@ impl LiveClient {
     /// Frame a request straight into a free ring slot and post it to the
     /// owning shard's lane (derived from the request's object id and
     /// key), carrying `cookie` as both the header's correlation field and
-    /// the ring's write-with-immediate value. Blocks while the ring is
-    /// full.
+    /// the ring's write-with-immediate value. Panics when the ring is
+    /// full — callers bound their outstanding window below
+    /// [`RING_SLOTS`], and only this thread frees slots (single-owner
+    /// connection), so a full ring here is a window-accounting bug, not
+    /// backpressure.
     fn post_req(&mut self, node: u32, req: &RpcRequest, cookie: u32) -> SlotToken {
         let hdr = self.req_header(cookie);
         let lane = self.place.shard_of(req.obj, req.key);
@@ -1470,8 +1809,10 @@ impl LiveClient {
 
         // Phase 2: doorbell-batched reads — one region acquisition per
         // node batch (spanning tables: they share the packed region);
-        // views parse zero-copy from the mirrored bytes.
+        // views parse from the client-owned reusable scratch, so the
+        // steady state allocates nothing per read.
         let fabric = self.fabric.clone();
+        let mut scratch = std::mem::take(&mut self.batchbuf);
         for node in 0..self.nodes as usize {
             let list = std::mem::take(&mut reads[node]);
             if list.is_empty() {
@@ -1479,7 +1820,7 @@ impl LiveClient {
             }
             let reqs: Vec<(u64, u32)> = list.iter().map(|&(_, off, len)| (off, len)).collect();
             let mut views: Vec<ReadView> = Vec::with_capacity(list.len());
-            fabric.read_batch(node as u32, DATA_REGION, &reqs, |i, bytes| {
+            fabric.read_batch(node as u32, DATA_REGION, &reqs, &mut scratch, |i, bytes| {
                 views.push(parse_view_at(&self.place, reqs[i].0, bytes));
             });
             for (&(idx, _, _), view) in list.iter().zip(views) {
@@ -1489,6 +1830,7 @@ impl LiveClient {
                 }
             }
         }
+        self.batchbuf = scratch;
 
         // Phase 3: pipelined RPC drain — keep a window outstanding, advance
         // whichever machine completes first.
@@ -1744,8 +2086,10 @@ impl LiveClient {
         let mut rpcq: VecDeque<QueuedRpc> = VecDeque::new();
         let mut inflight: Vec<InflightRpc> = Vec::new();
         // Reusable per-node read-partition scratch for pump_tx (the
-        // steady-state loop should not allocate per engine step).
+        // steady-state loop should not allocate per engine step), plus
+        // the client-owned byte scratch its doorbell batches read into.
         let mut reads: Vec<Vec<(u32, u64, u32)>> = vec![Vec::new(); self.nodes as usize];
+        let mut scratch = std::mem::take(&mut self.batchbuf);
 
         loop {
             // Admit transactions while the adaptive window has room.
@@ -1761,7 +2105,7 @@ impl LiveClient {
                 });
                 slots[slot] = Some(ActiveTx { engine, idx });
                 live += 1;
-                self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads);
+                self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads, &mut scratch);
             }
             if live == 0 {
                 break;
@@ -1860,8 +2204,9 @@ impl LiveClient {
                 let tx = slots[slot].as_mut().expect("completion for an inactive tx slot");
                 tx.engine.complete(&mut self.resolver, tag, input)
             };
-            self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads);
+            self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads, &mut scratch);
         }
+        self.batchbuf = scratch;
         assert!(rpcq.is_empty() && inflight.is_empty(), "I/O left behind by finished txs");
         outcomes.into_iter().map(|o| o.expect("every transaction resolves")).collect()
     }
@@ -1883,6 +2228,7 @@ impl LiveClient {
         outcomes: &mut [Option<TxOutcome>],
         rpcq: &mut VecDeque<QueuedRpc>,
         reads: &mut [Vec<(u32, u64, u32)>],
+        scratch: &mut Vec<u8>,
     ) {
         let fabric = self.fabric.clone();
         loop {
@@ -1944,7 +2290,7 @@ impl LiveClient {
                 let reqs: Vec<(u64, u32)> =
                     reads[node].iter().map(|&(_, off, len)| (off, len)).collect();
                 let mut views: Vec<ReadView> = Vec::with_capacity(reads[node].len());
-                fabric.read_batch(node as u32, DATA_REGION, &reqs, |i, bytes| {
+                fabric.read_batch(node as u32, DATA_REGION, &reqs, scratch, |i, bytes| {
                     views.push(parse_view_at(&self.place, reqs[i].0, bytes));
                 });
                 for (&(tag, _, _), view) in reads[node].iter().zip(views) {

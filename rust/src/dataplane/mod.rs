@@ -46,6 +46,27 @@
 //! * [`local`] — the reference in-process driver over per-node catalogs
 //!   (the semantic baseline the simulator and live driver must match).
 //!
+//! # Threading (PR 7): shared-nothing shards
+//!
+//! The live driver is **shared-nothing**: each shard of each node is
+//! its own pinned OS thread running a single-threaded reactor that owns
+//! its [`crate::ds::catalog::Catalog`] slice outright. There is no
+//! `Mutex` or `RwLock` on the steady-state request path — a CI grep
+//! gate (`scripts/check_lockfree.sh`) enforces it over `live.rs` and
+//! the loopback transport. Clients are plain threads, each holding its
+//! own per-(node, shard) ring lanes, resolver, and route/hint caches;
+//! a request posts directly to the owning shard's receive lane (the
+//! lane index *is* [`crate::ds::catalog::Placement::shard_of`]), so the
+//! common case never crosses reactor threads. Misrouted control
+//! messages forward over bounded lock-free SPSC rings to the owning
+//! reactor; control-plane mutations (population, crash wipes, recovery
+//! installs) ship as closures over per-shard job channels
+//! ([`live::LiveCluster::with_shard`]) and execute *on* the owning
+//! reactor — fault injection obeys shard ownership too. Idle reactors
+//! spin briefly, then park until a doorbell. The scaling deliverable —
+//! server-threads × client-threads throughput — is the `scaling` matrix
+//! in `BENCH_live.json` (`scripts/bench.sh scaling`).
+//!
 //! # Replication, leases, and recovery
 //!
 //! Every catalog object may declare a replication factor

@@ -266,6 +266,13 @@ impl Catalog {
     /// slice of every MICA object, the whole backend for tree/hopscotch
     /// objects homed here (`object id mod shards`), and an [`Backend::
     /// Absent`] placeholder for ones homed elsewhere.
+    ///
+    /// On the live driver (PR 7) each such slice is **exclusively owned
+    /// by one pinned shard-reactor thread** — the `Catalog` moves into
+    /// the reactor at spawn and is never shared, so none of its methods
+    /// take locks. Off-thread access goes through the reactor's job
+    /// channel ([`crate::dataplane::live::LiveCluster::with_shard`]),
+    /// which runs closures *on* the owning thread.
     pub fn for_shard(
         cfg: &CatalogConfig,
         shard: u32,

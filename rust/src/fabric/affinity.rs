@@ -1,0 +1,75 @@
+//! Thread-to-core pinning for shard reactors.
+//!
+//! The shared-nothing dataplane wants each shard reactor on its own
+//! core: no migration-induced cache churn, no two reactors time-slicing
+//! one CPU while another sits idle. The container image carries no
+//! `libc` crate, so on Linux we issue the raw `sched_setaffinity`
+//! syscall directly; everywhere else (or if the sandbox denies the
+//! call) pinning degrades to a no-op and the reactor runs wherever the
+//! scheduler puts it — correctness never depends on placement.
+
+/// Best-effort pin of the calling thread to `core` (modulo the
+/// machine's CPU count — callers pass a dense shard index). Returns
+/// `true` when the kernel accepted the mask.
+pub fn pin_to_core(core: usize) -> bool {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    set_affinity_mask(1u64 << ((core % cpus) % 64))
+}
+
+/// Number of CPUs visible to this process (the scaling curve's natural
+/// ceiling).
+pub fn online_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn set_affinity_mask(mask: u64) -> bool {
+    // sched_setaffinity(pid=0 /* calling thread */, len=8, &mask)
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret,
+            in("rdi") 0i64,
+            in("rsi") 8usize,
+            in("rdx") &mask as *const u64,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn set_affinity_mask(mask: u64) -> bool {
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 122i64, // sched_setaffinity
+            inlateout("x0") 0i64 => ret,
+            in("x1") 8usize,
+            in("x2") &mask as *const u64,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn set_affinity_mask(_mask: u64) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // Must not crash whether or not the platform/sandbox allows it.
+        let _ = pin_to_core(0);
+        assert!(online_cpus() >= 1);
+    }
+}

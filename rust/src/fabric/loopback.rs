@@ -1,82 +1,265 @@
 //! Live in-process fabric: RDMA-like primitives over shared memory +
-//! threads.
+//! threads, **lock-free on the steady-state data path**.
 //!
-//! Used by the end-to-end examples: the same Storm dataplane logic that the
-//! simulator drives (sans-io transaction engine, MICA table, callback API)
-//! runs here against *real* memory and *real* threads, in wall-clock time,
-//! with the PJRT batch-hash engine on the lookup path.
+//! Used by the live dataplane: the same Storm protocol logic the
+//! simulator drives (sans-io transaction engine, MICA table, callback
+//! API) runs here against *real* memory and *real* threads, in
+//! wall-clock time.
 //!
 //! Semantics mirror the verbs we model:
+//!
 //! * `read` / `read_into` / `read_batch` — one-sided: no code runs on the
 //!   remote node's event loop, just a direct memory copy (an RDMA READ
-//!   against registered memory). `read_batch` is the doorbell-batched
-//!   variant: one region acquisition covers a whole group of reads, the
-//!   way one doorbell ring posts a chain of work requests.
+//!   against registered memory). Region bytes are `AtomicU8`s accessed
+//!   with `Relaxed` per-byte loads/stores: remote reads may observe
+//!   **torn** images while an owner is mirroring — exactly the fidelity
+//!   real RDMA gives — without undefined behavior; OCC version
+//!   validation is the dataplane's correctness mechanism, not read
+//!   atomicity. `read_batch` is the doorbell-batched variant: one pass
+//!   copies every request of a group into a caller-owned scratch buffer
+//!   (no allocation on the steady state), the way one doorbell ring
+//!   posts a chain of work requests.
 //! * ring RPCs ([`RingConn`]) — write-with-immediate style messaging into
 //!   **preallocated ring-buffer slots**: `post` frames the request
 //!   directly into a reusable slot buffer (no per-call allocation), the
-//!   remote event loop runs the handler and writes the reply into the
-//!   same slot's reply buffer, and the caller harvests it with
-//!   `poll`/`take_reply`. A client keeps a *window* of outstanding
-//!   requests this way; a full ring blocks the poster (RC backpressure,
-//!   not UD drops).
+//!   remote reactor runs the handler and writes the reply into the same
+//!   slot's reply buffer, and the caller harvests it with
+//!   `poll`/`take_reply`. Each slot is a lock-free stage machine
+//!   (`FREE → POSTED → SERVING → DONE`): exactly one side owns the
+//!   buffers at every stage, handoff is a single atomic transition, and
+//!   completion unparks the posting thread. A [`RingConn`] is
+//!   **single-owner** (`&mut self` to post/harvest) — the per-thread QP
+//!   of the paper; clients that want more parallelism open more
+//!   connections, one per thread.
+//! * receive **lanes** ([`LaneRx`]) — each endpoint exposes one receive
+//!   lane per server shard, drained by exactly one reactor thread.
+//!   Inbound slot traffic arrives over bounded **lock-free SPSC rings**
+//!   ([`SpscRing`]), one per (connection, lane) pair, registered at
+//!   connect time; the reactor round-robins over its rings with plain
+//!   atomic loads. One-shot messages (`rpc`, `send_raw`, shutdown
+//!   poison) travel a mutexed control queue — that is the documented
+//!   control plane, never the data path.
+//! * idle shards **park** instead of spinning: a [`Waker`] per lane
+//!   carries the reactor's thread handle; producers wake it after
+//!   publishing work, and the reactor re-checks every source after
+//!   announcing sleep (plus a short `park_timeout` bound as
+//!   defense-in-depth), so no wakeup is ever lost.
 //! * `rpc` — legacy blocking convenience over a one-shot channel (tests,
-//!   control paths). The dataplane hot path uses ring slots.
-//!
-//! Each endpoint exposes one receive queue per *lane*; the live cluster
-//! runs one server loop per lane so bucket-range shards drain their own
-//! queues in parallel (the paper's per-thread QP + CQ layout).
+//!   control paths, replies of unbounded size). The dataplane hot path
+//!   uses ring slots.
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, OnceLock}; // Mutex: control-plane queues only (see module doc)
+use std::thread::Thread;
+use std::time::Duration;
 
 use crate::mem::MrKey;
 
-/// A registered memory region on a loopback node.
+/// Bounded lock-free single-producer single-consumer ring. The transport
+/// primitive of the shared-nothing dataplane: one producer thread
+/// `push`es, one consumer thread `pop`s, nobody locks.
+///
+/// Capacity rounds up to a power of two. `push` fails (returning the
+/// value) when the ring is full — bounded backpressure, not drops.
+///
+/// # Safety contract
+///
+/// The ring itself is `Sync`, but the lock-freedom argument requires the
+/// single-producer / single-consumer discipline: at most one thread ever
+/// calls `push`, at most one thread ever calls `pop`. Slot `i & mask` is
+/// owned by the producer from the moment `head` has passed it until the
+/// matching `tail` store publishes it, and by the consumer from that
+/// publication until its `head` store returns it — the two `Release` /
+/// `Acquire` pairs on `tail` and `head` carry the handoff.
+pub struct SpscRing<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    mask: usize,
+    /// Consumer cursor: next index to pop.
+    head: AtomicUsize,
+    /// Producer cursor: next index to fill.
+    tail: AtomicUsize,
+}
+
+// SAFETY: slot access is mediated by the head/tail cursors with
+// Release/Acquire ordering under the SPSC discipline documented above.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// Ring with room for at least `capacity` items.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[UnsafeCell<Option<T>>]> =
+            (0..cap).map(|_| UnsafeCell::new(None)).collect();
+        SpscRing { slots, mask: cap - 1, head: AtomicUsize::new(0), tail: AtomicUsize::new(0) }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: enqueue `v`, or hand it back when the ring is full.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.slots.len() {
+            return Err(v);
+        }
+        // SAFETY: `head` has advanced past this slot (checked above), so
+        // the consumer is done with it; we are the only producer.
+        unsafe { *self.slots[tail & self.mask].get() = Some(v) };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: dequeue the oldest item, if any.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        // SAFETY: `tail` has been published past this slot (checked
+        // above), so the producer's write is visible; we are the only
+        // consumer.
+        let v = unsafe { (*self.slots[head & self.mask].get()).take() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        v
+    }
+
+    /// True when nothing is queued (either side may ask).
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire) == self.tail.load(Ordering::Acquire)
+    }
+}
+
+/// Park/unpark rendezvous for one reactor thread: producers `wake` after
+/// publishing work, the reactor announces sleep, re-checks its sources,
+/// and parks. The `SeqCst` store/fence pairing makes the classic
+/// lost-wakeup race impossible: either the producer observes `asleep`
+/// and unparks (an unpark before the park charges a token the park
+/// consumes immediately), or the reactor's post-announce re-check
+/// observes the freshly published work. Reactors additionally park with
+/// a short timeout as defense-in-depth.
+pub struct Waker {
+    asleep: AtomicBool,
+    thread: OnceLock<Thread>,
+}
+
+impl Waker {
+    /// New waker; the reactor registers its thread with
+    /// [`Self::register_current`] before first use.
+    pub fn new() -> Self {
+        Waker { asleep: AtomicBool::new(false), thread: OnceLock::new() }
+    }
+
+    /// Bind this waker to the calling thread (the reactor).
+    pub fn register_current(&self) {
+        let _ = self.thread.set(std::thread::current());
+    }
+
+    /// Producer side: unpark the reactor if it announced sleep. Call
+    /// *after* publishing work (the fence orders the publication before
+    /// the `asleep` read).
+    pub fn wake(&self) {
+        fence(Ordering::SeqCst);
+        if self.asleep.load(Ordering::SeqCst) {
+            if let Some(t) = self.thread.get() {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Reactor side: announce intent to sleep. Follow with a re-check of
+    /// every work source, then [`std::thread::park_timeout`], then
+    /// [`Self::end_sleep`].
+    pub fn begin_sleep(&self) {
+        self.asleep.store(true, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+    }
+
+    /// Reactor side: done sleeping.
+    pub fn end_sleep(&self) {
+        self.asleep.store(false, Ordering::SeqCst);
+    }
+}
+
+impl Default for Waker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A registered memory region on a loopback node: a flat byte array of
+/// `AtomicU8`s. All access is `Relaxed` per byte — one-sided reads racing
+/// an owner's mirror writes may observe torn images (RDMA fidelity, and
+/// deliberately UB-free); the dataplane's OCC version protocol is what
+/// makes reads correct, not byte-level atomicity.
 #[derive(Clone)]
 pub struct LoopbackRegion {
-    bytes: Arc<RwLock<Vec<u8>>>,
+    bytes: Arc<Vec<AtomicU8>>,
 }
 
 impl LoopbackRegion {
     /// Region of `len` zero bytes.
     pub fn new(len: usize) -> Self {
-        LoopbackRegion { bytes: Arc::new(RwLock::new(vec![0; len])) }
+        LoopbackRegion { bytes: Arc::new((0..len).map(|_| AtomicU8::new(0)).collect()) }
     }
 
     /// One-sided read (no remote CPU). Allocates; prefer [`Self::read_into`]
     /// on hot paths.
     pub fn read(&self, offset: usize, len: usize) -> Vec<u8> {
-        let g = self.bytes.read().unwrap();
-        g[offset..offset + len].to_vec()
+        let mut out = vec![0u8; len];
+        self.read_into(offset, &mut out);
+        out
     }
 
     /// One-sided read into a caller-provided buffer (no allocation).
     pub fn read_into(&self, offset: usize, out: &mut [u8]) {
-        let g = self.bytes.read().unwrap();
-        out.copy_from_slice(&g[offset..offset + out.len()]);
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = self.bytes[offset + i].load(Ordering::Relaxed);
+        }
     }
 
-    /// Doorbell-batched one-sided reads: a single region acquisition
-    /// serves every `(offset, len)` request; `f(i, bytes)` observes the
-    /// bytes of request `i` in place (zero copy).
-    pub fn read_many(&self, reqs: &[(u64, u32)], mut f: impl FnMut(usize, &[u8])) {
-        let g = self.bytes.read().unwrap();
-        for (i, &(offset, len)) in reqs.iter().enumerate() {
-            let offset = offset as usize;
-            f(i, &g[offset..offset + len as usize]);
+    /// Doorbell-batched one-sided reads: every `(offset, len)` request is
+    /// copied into `scratch` in one pass (resized, never reallocated on
+    /// the steady state once warm), then `f(i, bytes)` observes request
+    /// `i`'s bytes in place — zero per-request allocation.
+    pub fn read_many(
+        &self,
+        reqs: &[(u64, u32)],
+        scratch: &mut Vec<u8>,
+        mut f: impl FnMut(usize, &[u8]),
+    ) {
+        let total: usize = reqs.iter().map(|&(_, len)| len as usize).sum();
+        scratch.clear();
+        scratch.resize(total, 0);
+        let mut at = 0usize;
+        for &(offset, len) in reqs {
+            self.read_into(offset as usize, &mut scratch[at..at + len as usize]);
+            at += len as usize;
+        }
+        let mut at = 0usize;
+        for (i, &(_, len)) in reqs.iter().enumerate() {
+            f(i, &scratch[at..at + len as usize]);
+            at += len as usize;
         }
     }
 
     /// One-sided write (no remote CPU).
     pub fn write(&self, offset: usize, data: &[u8]) {
-        let mut g = self.bytes.write().unwrap();
-        g[offset..offset + data.len()].copy_from_slice(data);
+        for (i, &b) in data.iter().enumerate() {
+            self.bytes[offset + i].store(b, Ordering::Relaxed);
+        }
     }
 
     /// Region length.
     pub fn len(&self) -> usize {
-        self.bytes.read().unwrap().len()
+        self.bytes.len()
     }
 
     /// True when zero-length.
@@ -85,22 +268,21 @@ impl LoopbackRegion {
     }
 }
 
-/// Where a ring slot is in its post → serve → harvest cycle.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum SlotStage {
-    /// Owned by the client, available for the next `post`.
-    Free,
-    /// Request framed into `req`, awaiting the remote handler.
-    Posted,
-    /// Reply written into `resp`, awaiting `take_reply`.
-    Done,
-}
+/// Slot stage machine: who owns the request/reply buffers right now.
+/// `FREE` — the posting client; `POSTED` — nobody mutates (published
+/// request in flight); `SERVING` — exactly one completer (the winner of
+/// the `POSTED → SERVING` CAS); `DONE` — the client again.
+const STAGE_FREE: u8 = 0;
+const STAGE_POSTED: u8 = 1;
+const STAGE_SERVING: u8 = 2;
+const STAGE_DONE: u8 = 3;
 
-struct SlotInner {
-    stage: SlotStage,
+/// The reusable buffers of one ring slot. Plain (non-atomic) fields:
+/// ownership transfers with the slot's stage word.
+struct SlotBufs {
     /// Request bytes, framed in place by the poster.
     req: Vec<u8>,
-    /// Reply bytes, written in place by the server.
+    /// Reply bytes, written in place by the completer.
     resp: Vec<u8>,
     /// 32-bit immediate attached by the poster (`rdma_write_with_imm`'s
     /// immediate value): carries the poster's correlation cookie to the
@@ -110,30 +292,52 @@ struct SlotInner {
 
 /// One preallocated ring-buffer slot of a [`RingConn`]: the request and
 /// reply buffers are reused across RPCs, so steady-state messaging does
-/// not allocate.
+/// not allocate — and the post → serve → harvest handoff is a lock-free
+/// atomic stage machine.
 pub struct RingSlot {
     /// Sender node id (constant for the connection).
     from: u32,
-    inner: Mutex<SlotInner>,
-    done: Condvar,
+    /// `STAGE_*` word; every transition into `SERVING` is an exclusive
+    /// CAS, so at most one party ever completes a posted slot.
+    stage: AtomicU8,
+    bufs: UnsafeCell<SlotBufs>,
+    /// The posting thread, unparked on completion. Captured at connect
+    /// time; if the connection later migrates threads, completion still
+    /// lands — the poster's wait loop re-checks on a short park timeout.
+    waiter: Thread,
 }
 
+// SAFETY: `bufs` is accessed only by the party the `stage` word assigns
+// ownership to (see the STAGE_* docs); stage transitions use
+// Release/Acquire (and CAS for the contended POSTED → SERVING edge), so
+// buffer writes are visible to the next owner.
+unsafe impl Send for RingSlot {}
+unsafe impl Sync for RingSlot {}
+
 impl RingSlot {
+    /// Complete a posted-but-unserved slot with an **empty** reply. Used
+    /// by both teardown paths (a dropped server handle, a client that
+    /// observed the lane close under its posted request); the CAS makes
+    /// the completion exclusive against a racing server.
     fn complete_empty(&self) {
-        let mut g = self.inner.lock().unwrap();
-        if g.stage == SlotStage::Posted {
-            g.resp.clear();
-            g.stage = SlotStage::Done;
-            drop(g);
-            self.done.notify_all();
+        if self
+            .stage
+            .compare_exchange(STAGE_POSTED, STAGE_SERVING, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            // SAFETY: the CAS won SERVING — we are the sole owner.
+            unsafe { (*self.bufs.get()).resp.clear() };
+            self.stage.store(STAGE_DONE, Ordering::Release);
+            self.waiter.unpark();
         }
     }
 }
 
 /// The server's owning handle to one posted ring slot. Dropping it
-/// unserved (e.g. an event loop exiting with requests still queued)
-/// completes the slot with an **empty reply**, so the posting client
-/// observes a decode failure instead of blocking forever on the slot.
+/// unserved (e.g. a reactor exiting with requests still queued, or a
+/// crashed node dropping envelopes) completes the slot with an **empty
+/// reply**, so the posting client observes a decode failure instead of
+/// blocking forever on the slot.
 pub struct SlotHandle(Arc<RingSlot>);
 
 impl SlotHandle {
@@ -144,29 +348,41 @@ impl SlotHandle {
 
     /// Immediate value the poster attached (see [`RingConn::post_imm`]).
     pub fn imm(&self) -> u32 {
-        self.0.inner.lock().unwrap().imm
+        // SAFETY: holding the handle means the slot is POSTED (or
+        // SERVING under us); the poster published `bufs` before the
+        // envelope and will not touch them again until DONE.
+        unsafe { (*self.0.bufs.get()).imm }
+    }
+
+    /// Observe the posted request bytes without serving — the receive
+    /// path's routing peek (e.g. steering a slot to its owning shard by
+    /// the object id at its fixed wire offset). Must not be called from
+    /// inside [`Self::serve`]'s closure.
+    pub fn peek<R>(&self, f: impl FnOnce(&[u8]) -> R) -> R {
+        // SAFETY: as in `imm` — the poster is hands-off while POSTED.
+        f(unsafe { &(*self.0.bufs.get()).req })
     }
 
     /// Run `f(request_bytes, reply_buffer)` and complete the slot. The
     /// reply buffer is cleared first; `f` frames the response directly
-    /// into it. The slot's buffers are swapped out for the duration of
-    /// `f` (no allocation), so the poster's `poll` calls stay cheap while
-    /// the handler runs.
+    /// into it (no allocation once warm). A no-op if the slot was
+    /// already completed (a teardown path won the CAS first).
     pub fn serve(&self, f: impl FnOnce(&[u8], &mut Vec<u8>)) {
         let slot = &*self.0;
-        let (req, mut resp) = {
-            let mut g = slot.inner.lock().unwrap();
-            (std::mem::take(&mut g.req), std::mem::take(&mut g.resp))
-        };
-        resp.clear();
-        f(&req, &mut resp);
+        if slot
+            .stage
+            .compare_exchange(STAGE_POSTED, STAGE_SERVING, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
         {
-            let mut g = slot.inner.lock().unwrap();
-            g.req = req;
-            g.resp = resp;
-            g.stage = SlotStage::Done;
+            return;
         }
-        slot.done.notify_all();
+        // SAFETY: the CAS won SERVING — exclusive buffer ownership.
+        let bufs = unsafe { &mut *slot.bufs.get() };
+        bufs.resp.clear();
+        let SlotBufs { req, resp, .. } = bufs;
+        f(req, resp);
+        slot.stage.store(STAGE_DONE, Ordering::Release);
+        slot.waiter.unpark();
     }
 }
 
@@ -181,16 +397,35 @@ impl Drop for SlotHandle {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SlotToken(usize);
 
+/// How long a poster spins on a completion before parking, and the park
+/// bound that covers waiter-thread staleness (see [`RingSlot::waiter`]).
+const WAIT_SPINS: u32 = 256;
+const WAIT_PARK: Duration = Duration::from_millis(1);
+
+/// One registered producer ring on a receive lane, plus the lane handle
+/// for open-checks and wakeups.
+struct LaneProducer {
+    lane: Arc<Lane>,
+    ring: Arc<SpscRing<RpcEnvelope>>,
+}
+
 /// A client's ring-buffer connection to one server node: a fixed window
 /// of reusable request/reply slots (the paper's preallocated per-sender
-/// ring at the receiver). Clone-free; share behind an `Arc` if several
-/// threads must post on the same ring.
+/// ring at the receiver), posted over per-lane SPSC rings.
+///
+/// **Single-owner**: posting and harvesting take `&mut self`. Slots are
+/// freed only by [`Self::take_reply`] on the owning thread, so a `post`
+/// on a full ring could never unblock — it panics instead; schedulers
+/// that interleave posting with harvesting use [`Self::try_post_imm`]
+/// and retry after a harvest.
 pub struct RingConn {
-    fabric: LoopbackFabric,
-    node: u32,
     slots: Vec<Arc<RingSlot>>,
-    free: Mutex<Vec<usize>>,
-    freed: Condvar,
+    /// Free slot indices (plain — single owner).
+    free: Vec<usize>,
+    /// Lane each outstanding slot was posted on (closed-lane reclaim).
+    lane_of: Vec<u32>,
+    /// One producer ring per receive lane of the target node.
+    lanes: Vec<LaneProducer>,
 }
 
 impl RingConn {
@@ -200,99 +435,125 @@ impl RingConn {
     }
 
     /// Post a request on `lane`, framing it directly into a free slot's
-    /// request buffer via `fill`. **Blocks while the ring is full** (every
-    /// slot outstanding) until `take_reply` frees one — backpressure, not
-    /// drops. Returns a token to poll/harvest the reply with.
-    pub fn post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
+    /// request buffer via `fill`. **Panics when the ring is full** —
+    /// slots free only via [`Self::take_reply`] on this same thread, so
+    /// blocking could never succeed. Keep the posting window below the
+    /// ring size, or use [`Self::try_post`].
+    pub fn post(&mut self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
         self.post_imm(lane, 0, fill)
     }
 
     /// [`Self::post`] with a 32-bit immediate: the write-with-immediate
     /// value the responder observes alongside the slot (correlation
     /// cookies for multiplexed posters).
-    pub fn post_imm(&self, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
-        let idx = {
-            let mut free = self.free.lock().unwrap();
-            loop {
-                if let Some(i) = free.pop() {
-                    break i;
-                }
-                free = self.freed.wait(free).unwrap();
-            }
-        };
+    pub fn post_imm(&mut self, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) -> SlotToken {
+        let idx = self
+            .free
+            .pop()
+            .expect("ring full: slots free only via take_reply on this thread; bound the window");
         self.submit(idx, lane, imm, fill);
         SlotToken(idx)
     }
 
     /// Non-blocking [`Self::post`]: `None` when the ring is full.
-    pub fn try_post(&self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> Option<SlotToken> {
+    pub fn try_post(&mut self, lane: u32, fill: impl FnOnce(&mut Vec<u8>)) -> Option<SlotToken> {
         self.try_post_imm(lane, 0, fill)
     }
 
     /// Non-blocking [`Self::post_imm`]: `None` when the ring is full.
-    /// Posters that must never block (a scheduler that also harvests the
-    /// replies on the same thread would deadlock a full ring) queue on
+    /// Posters that also harvest replies on the same thread queue on
     /// `None` and retry after harvesting.
     pub fn try_post_imm(
-        &self,
+        &mut self,
         lane: u32,
         imm: u32,
         fill: impl FnOnce(&mut Vec<u8>),
     ) -> Option<SlotToken> {
-        let idx = self.free.lock().unwrap().pop()?;
+        let idx = self.free.pop()?;
         self.submit(idx, lane, imm, fill);
         Some(SlotToken(idx))
     }
 
-    fn submit(&self, idx: usize, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) {
+    fn submit(&mut self, idx: usize, lane: u32, imm: u32, fill: impl FnOnce(&mut Vec<u8>)) {
         let slot = &self.slots[idx];
         {
-            let mut g = slot.inner.lock().unwrap();
-            g.req.clear();
-            fill(&mut g.req);
-            g.imm = imm;
-            g.stage = SlotStage::Posted;
+            // SAFETY: the slot came off the free list, so its stage is
+            // FREE and this (single-owner) thread owns the buffers.
+            let bufs = unsafe { &mut *slot.bufs.get() };
+            bufs.req.clear();
+            fill(&mut bufs.req);
+            bufs.imm = imm;
         }
-        self.fabric.endpoints[self.node as usize].lanes[lane as usize]
-            .send(RpcEnvelope::Slot(SlotHandle(slot.clone())))
-            .expect("loopback endpoint event loop gone");
+        self.lane_of[idx] = lane;
+        // Publish: buffer writes happen-before the POSTED store, which
+        // happens-before the SPSC push the consumer Acquire-loads.
+        slot.stage.store(STAGE_POSTED, Ordering::Release);
+        let lp = &self.lanes[lane as usize];
+        if !lp.lane.open.load(Ordering::SeqCst) {
+            // Lane torn down (server gone): complete client-side with an
+            // empty reply so the poster observes a decode failure — the
+            // flushed-work-request analog — instead of hanging.
+            slot.complete_empty();
+            return;
+        }
+        if lp.ring.push(RpcEnvelope::Slot(SlotHandle(slot.clone()))).is_err() {
+            // Unreachable by construction: the producer ring holds at
+            // least `window` envelopes and at most `window` slots are
+            // outstanding. A dropped envelope still self-completes the
+            // slot empty, so a bug degrades to a failed RPC, not a hang.
+            debug_assert!(false, "producer ring overflow despite window bound");
+        }
+        lp.lane.wake();
     }
 
     /// Has the reply for `tok` arrived? (Non-blocking completion poll.)
     pub fn poll(&self, tok: SlotToken) -> bool {
-        self.slots[tok.0].inner.lock().unwrap().stage == SlotStage::Done
+        self.slots[tok.0].stage.load(Ordering::Acquire) == STAGE_DONE
     }
 
     /// Block until the reply for `tok` has arrived (does not free the
-    /// slot; follow with [`Self::take_reply`]).
+    /// slot; follow with [`Self::take_reply`]). Bounded spin, then
+    /// park — the completer unparks this thread.
     pub fn wait(&self, tok: SlotToken) {
         let slot = &self.slots[tok.0];
-        let mut g = slot.inner.lock().unwrap();
-        while g.stage != SlotStage::Done {
-            g = slot.done.wait(g).unwrap();
+        let mut spins = 0u32;
+        loop {
+            if slot.stage.load(Ordering::Acquire) == STAGE_DONE {
+                return;
+            }
+            if spins < WAIT_SPINS {
+                spins += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            // The serving lane may have closed after our post's open
+            // check (teardown race): its drained rings will never serve
+            // this slot, so reclaim it ourselves. The CAS in
+            // `complete_empty` is exclusive against a racing server.
+            let lp = &self.lanes[self.lane_of[tok.0] as usize];
+            if !lp.lane.open.load(Ordering::SeqCst) {
+                slot.complete_empty();
+                continue;
+            }
+            std::thread::park_timeout(WAIT_PARK);
         }
     }
 
     /// Wait for the reply to `tok`, observe its bytes in place via `f`,
     /// and return the slot to the free ring.
-    pub fn take_reply<R>(&self, tok: SlotToken, f: impl FnOnce(&[u8]) -> R) -> R {
+    pub fn take_reply<R>(&mut self, tok: SlotToken, f: impl FnOnce(&[u8]) -> R) -> R {
+        self.wait(tok);
         let slot = &self.slots[tok.0];
-        let r = {
-            let mut g = slot.inner.lock().unwrap();
-            while g.stage != SlotStage::Done {
-                g = slot.done.wait(g).unwrap();
-            }
-            let r = f(&g.resp);
-            g.stage = SlotStage::Free;
-            r
-        };
-        self.free.lock().unwrap().push(tok.0);
-        self.freed.notify_one();
+        // SAFETY: stage is DONE (Acquire-observed in `wait`), so buffer
+        // ownership is back with this (single-owner) thread.
+        let r = f(unsafe { &(*slot.bufs.get()).resp });
+        slot.stage.store(STAGE_FREE, Ordering::Relaxed);
+        self.free.push(tok.0);
         r
     }
 }
 
-/// An inbound message on a node's receive queue.
+/// An inbound message on a node's receive lane.
 pub enum RpcEnvelope {
     /// One-shot message (legacy `rpc`, control traffic). `reply` is `None`
     /// for fire-and-forget sends — no throwaway channel is allocated.
@@ -309,10 +570,166 @@ pub enum RpcEnvelope {
     Slot(SlotHandle),
 }
 
+/// The shared half of one receive lane. Steady-state traffic flows
+/// through the registered SPSC rings and touches only atomics; the
+/// mutexed registry and control queue are documented control-plane
+/// paths (connect, one-shot messages, teardown).
+struct Lane {
+    /// Registered producer rings. Locked on connect and on a consumer
+    /// snapshot refresh only.
+    rings: Mutex<Vec<Arc<SpscRing<RpcEnvelope>>>>, // control-plane: connect registration
+    /// Bumped per registration; [`LaneRx`] refreshes its snapshot on
+    /// change (a plain atomic load on the steady state).
+    version: AtomicU64,
+    /// One-shot control messages (`rpc`, `send_raw`, shutdown poison).
+    ctl: Mutex<VecDeque<RpcEnvelope>>, // control-plane: one-shot message queue
+    /// Cheap emptiness probe for `ctl` (steady state never locks it).
+    ctl_len: AtomicUsize,
+    /// Cleared when the lane's receiver is dropped: posters observe a
+    /// dead lane and fail fast instead of queueing into the void.
+    open: AtomicBool,
+    /// The draining reactor's waker, installed at cluster start.
+    waker: OnceLock<Arc<Waker>>,
+}
+
+impl Lane {
+    fn new() -> Self {
+        Lane {
+            rings: Mutex::new(Vec::new()), // control-plane: connect registration
+            version: AtomicU64::new(0),
+            ctl: Mutex::new(VecDeque::new()), // control-plane: one-shot message queue
+            ctl_len: AtomicUsize::new(0),
+            open: AtomicBool::new(true),
+            waker: OnceLock::new(),
+        }
+    }
+
+    fn wake(&self) {
+        if let Some(w) = self.waker.get() {
+            w.wake();
+        }
+    }
+
+    /// Register a new producer ring (a connection opening). Control
+    /// plane: locks the registry, bumps the version consumers watch.
+    fn register(&self, capacity: usize) -> Arc<SpscRing<RpcEnvelope>> {
+        let ring = Arc::new(SpscRing::new(capacity));
+        self.rings.lock().unwrap().push(ring.clone()); // control-plane: connect registration
+        self.version.fetch_add(1, Ordering::Release);
+        ring
+    }
+
+    /// Enqueue a one-shot message; `false` when the lane is closed. The
+    /// open-check happens under the queue lock, so a message either
+    /// lands before the teardown drain (and is drained, dropping its
+    /// reply sender) or observes the lane closed — never stranded.
+    fn send_ctl(&self, env: RpcEnvelope) -> bool {
+        {
+            let mut q = self.ctl.lock().unwrap(); // control-plane: one-shot message queue
+            if !self.open.load(Ordering::SeqCst) {
+                return false;
+            }
+            q.push_back(env);
+            self.ctl_len.fetch_add(1, Ordering::Release);
+        }
+        self.wake();
+        true
+    }
+}
+
+/// The consumer half of one receive lane, owned by exactly one reactor
+/// thread. `try_recv` drains control messages first, then round-robins
+/// over the registered producer rings — all plain atomic operations on
+/// the steady state. Dropping the receiver closes the lane and drains
+/// every queued envelope (slots complete empty), the torn-down-QP
+/// analog.
+pub struct LaneRx {
+    lane: Arc<Lane>,
+    rings: Vec<Arc<SpscRing<RpcEnvelope>>>,
+    seen_version: u64,
+    next: usize,
+}
+
+impl LaneRx {
+    fn refresh(&mut self) {
+        let v = self.lane.version.load(Ordering::Acquire);
+        if v != self.seen_version {
+            self.rings = self.lane.rings.lock().unwrap().clone(); // control-plane: snapshot refresh on connect
+            self.seen_version = v;
+        }
+    }
+
+    /// Dequeue the next inbound envelope, if any (non-blocking).
+    pub fn try_recv(&mut self) -> Option<RpcEnvelope> {
+        self.refresh();
+        if self.lane.ctl_len.load(Ordering::Acquire) > 0 {
+            let env = self.lane.ctl.lock().unwrap().pop_front(); // control-plane: one-shot message queue
+            if let Some(env) = env {
+                self.lane.ctl_len.fetch_sub(1, Ordering::Release);
+                return Some(env);
+            }
+        }
+        let n = self.rings.len();
+        if n == 0 {
+            return None;
+        }
+        for k in 0..n {
+            let i = (self.next + k) % n;
+            if let Some(env) = self.rings[i].pop() {
+                self.next = (i + 1) % n;
+                return Some(env);
+            }
+        }
+        None
+    }
+
+    /// Is anything queued? (The reactor's pre-park re-check.)
+    pub fn has_pending(&mut self) -> bool {
+        self.refresh();
+        self.lane.ctl_len.load(Ordering::Acquire) > 0
+            || self.rings.iter().any(|r| !r.is_empty())
+    }
+
+    /// Polling receive with a deadline — test and example servers; real
+    /// reactors use [`Self::try_recv`] with their own idle parking.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<RpcEnvelope> {
+        let start = std::time::Instant::now();
+        loop {
+            if let Some(env) = self.try_recv() {
+                return Some(env);
+            }
+            if start.elapsed() >= timeout {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+impl Drop for LaneRx {
+    fn drop(&mut self) {
+        // Close first: producers that subsequently check `open` fail
+        // fast (`send_ctl` checks under the queue lock; slot posters
+        // self-complete via the wait loop's reclaim path).
+        self.lane.open.store(false, Ordering::SeqCst);
+        {
+            let mut q = self.lane.ctl.lock().unwrap(); // control-plane: teardown drain
+            self.lane.ctl_len.store(0, Ordering::Release);
+            // Dropping envelopes drops reply senders (rpc callers see a
+            // closed channel) and completes slot handles empty.
+            q.clear();
+        }
+        let rings = self.lane.rings.lock().unwrap().clone(); // control-plane: teardown drain
+        for r in &rings {
+            while r.pop().is_some() {}
+        }
+    }
+}
+
 struct EndpointShared {
     regions: Vec<LoopbackRegion>,
-    /// One receive queue per lane (per-shard server loop).
-    lanes: Vec<SyncSender<RpcEnvelope>>,
+    /// One receive lane per server shard.
+    lanes: Vec<Arc<Lane>>,
 }
 
 /// Handle to all nodes (what a "connected QP mesh" gives you).
@@ -324,39 +741,48 @@ pub struct LoopbackFabric {
 impl LoopbackFabric {
     /// Build a fabric of `nodes` endpoints, each with the given region
     /// sizes registered and a single receive lane. Returns the fabric
-    /// handle plus, per node, the RPC receive queue its event loop drains.
-    pub fn new(nodes: u32, region_sizes: &[usize]) -> (Self, Vec<Receiver<RpcEnvelope>>) {
+    /// handle plus, per node, the receive lane its reactor drains.
+    pub fn new(nodes: u32, region_sizes: &[usize]) -> (Self, Vec<LaneRx>) {
         let (fabric, rxs) = Self::new_sharded(nodes, region_sizes, 1);
         (fabric, rxs.into_iter().map(|mut lanes| lanes.remove(0)).collect())
     }
 
-    /// Build a fabric whose endpoints each expose `lanes` receive queues,
-    /// so a node can run one server loop per bucket-range shard. Returns
-    /// per node the per-lane receivers.
+    /// Build a fabric whose endpoints each expose `lanes` receive lanes,
+    /// so a node can run one reactor per shard. Returns per node the
+    /// per-lane receivers.
     pub fn new_sharded(
         nodes: u32,
         region_sizes: &[usize],
         lanes: u32,
-    ) -> (Self, Vec<Vec<Receiver<RpcEnvelope>>>) {
+    ) -> (Self, Vec<Vec<LaneRx>>) {
         assert!(lanes >= 1, "at least one receive lane per endpoint");
         let mut shared = Vec::new();
         let mut rxs = Vec::new();
         for _ in 0..nodes {
             let regions: Vec<LoopbackRegion> =
                 region_sizes.iter().map(|&l| LoopbackRegion::new(l)).collect();
-            // Bounded like a receive queue: senders block when the RQ is
-            // full (RC write-with-imm backpressure, not UD drops).
-            let mut txs = Vec::new();
+            let mut node_lanes = Vec::new();
             let mut node_rxs = Vec::new();
             for _ in 0..lanes {
-                let (tx, rx) = sync_channel(4096);
-                txs.push(tx);
-                node_rxs.push(rx);
+                let lane = Arc::new(Lane::new());
+                node_rxs.push(LaneRx {
+                    lane: lane.clone(),
+                    rings: Vec::new(),
+                    seen_version: 0,
+                    next: 0,
+                });
+                node_lanes.push(lane);
             }
-            shared.push(EndpointShared { regions, lanes: txs });
+            shared.push(EndpointShared { regions, lanes: node_lanes });
             rxs.push(node_rxs);
         }
         (LoopbackFabric { endpoints: Arc::new(shared) }, rxs)
+    }
+
+    /// Install the reactor waker for `(node, lane)` — producers use it
+    /// to unpark the draining thread after publishing work.
+    pub fn set_lane_waker(&self, node: u32, lane: u32, waker: Arc<Waker>) {
+        let _ = self.endpoints[node as usize].lanes[lane as usize].waker.set(waker);
     }
 
     /// One-sided read of `(region, offset, len)` on `node`. Allocates;
@@ -372,17 +798,20 @@ impl LoopbackFabric {
             .read_into(offset as usize, out);
     }
 
-    /// Doorbell-batched one-sided reads of `region` on `node`: one region
-    /// acquisition serves all `(offset, len)` requests; `f(i, bytes)` sees
-    /// request `i`'s bytes in place.
+    /// Doorbell-batched one-sided reads of `region` on `node`: one pass
+    /// copies all `(offset, len)` requests into the caller-owned
+    /// `scratch`; `f(i, bytes)` sees request `i`'s bytes in place. The
+    /// caller reuses `scratch` across batches, so the steady state does
+    /// not allocate.
     pub fn read_batch(
         &self,
         node: u32,
         region: MrKey,
         reqs: &[(u64, u32)],
+        scratch: &mut Vec<u8>,
         f: impl FnMut(usize, &[u8]),
     ) {
-        self.endpoints[node as usize].regions[region.0 as usize].read_many(reqs, f);
+        self.endpoints[node as usize].regions[region.0 as usize].read_many(reqs, scratch, f);
     }
 
     /// One-sided write to `(region, offset)` on `node`.
@@ -392,57 +821,65 @@ impl LoopbackFabric {
 
     /// Open a ring-buffer connection from `from` to `node`: `window`
     /// preallocated slots whose request/reply buffers reserve `slot_bytes`
-    /// each, so steady-state RPC framing never allocates.
+    /// each, so steady-state RPC framing never allocates. Registers one
+    /// producer ring on every lane of `node`; the returned connection is
+    /// single-owner (`&mut` to post/harvest) and binds its completion
+    /// wakeups to the calling thread — build it on the thread that will
+    /// use it.
     pub fn connect(&self, from: u32, node: u32, window: usize, slot_bytes: usize) -> RingConn {
         assert!(window >= 1, "ring needs at least one slot");
-        let slots = (0..window)
+        let waiter = std::thread::current();
+        let slots: Vec<Arc<RingSlot>> = (0..window)
             .map(|_| {
                 Arc::new(RingSlot {
                     from,
-                    inner: Mutex::new(SlotInner {
-                        stage: SlotStage::Free,
+                    stage: AtomicU8::new(STAGE_FREE),
+                    bufs: UnsafeCell::new(SlotBufs {
                         req: Vec::with_capacity(slot_bytes),
                         resp: Vec::with_capacity(slot_bytes),
                         imm: 0,
                     }),
-                    done: Condvar::new(),
+                    waiter: waiter.clone(),
                 })
             })
             .collect();
-        RingConn {
-            fabric: self.clone(),
-            node,
-            slots,
-            free: Mutex::new((0..window).collect()),
-            freed: Condvar::new(),
-        }
+        let lanes = self.endpoints[node as usize]
+            .lanes
+            .iter()
+            .map(|lane| LaneProducer { lane: lane.clone(), ring: lane.register(window) })
+            .collect();
+        RingConn { slots, free: (0..window).collect(), lane_of: vec![0; window], lanes }
     }
 
     /// Blocking one-shot RPC to `node` (lane 0): delivers `payload`,
     /// blocks for the handler's reply. Returns `None` when the remote
-    /// event loop is gone. Allocates a channel per call — tests and
-    /// control paths only; the dataplane uses [`RingConn`].
+    /// reactor is gone. Allocates a channel per call — tests and control
+    /// paths only; the dataplane uses [`RingConn`].
     pub fn rpc(&self, from: u32, node: u32, payload: Vec<u8>) -> Option<Vec<u8>> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        self.endpoints[node as usize].lanes[0]
-            .send(RpcEnvelope::Message { from, payload, reply: Some(reply_tx) })
-            .ok()?;
+        let sent = self.endpoints[node as usize].lanes[0].send_ctl(RpcEnvelope::Message {
+            from,
+            payload,
+            reply: Some(reply_tx),
+        });
+        if !sent {
+            return None;
+        }
         reply_rx.recv().ok()
     }
 
-    /// Fire-and-forget message to lane 0 of a node's RPC queue (control
-    /// messages; no reply channel is allocated).
+    /// Fire-and-forget message to lane 0 of a node's receive queue
+    /// (control messages; no reply channel is allocated).
     pub fn send_raw(&self, from: u32, node: u32, payload: Vec<u8>) {
         self.send_raw_lane(from, node, 0, payload);
     }
 
-    /// Fire-and-forget message to a specific lane of a node's RPC queue.
+    /// Fire-and-forget message to a specific lane of a node's receive
+    /// queue.
     pub fn send_raw_lane(&self, from: u32, node: u32, lane: u32, payload: Vec<u8>) {
-        let _ = self.endpoints[node as usize].lanes[lane as usize].send(RpcEnvelope::Message {
-            from,
-            payload,
-            reply: None,
-        });
+        let _ = self.endpoints[node as usize].lanes[lane as usize].send_ctl(
+            RpcEnvelope::Message { from, payload, reply: None },
+        );
     }
 
     /// Direct handle to a node's region (loading data in place).
@@ -466,6 +903,9 @@ mod tests {
     use super::*;
     use std::thread;
 
+    /// Generous deadline for test servers draining a lane.
+    const TICK: Duration = Duration::from_secs(5);
+
     #[test]
     fn one_sided_read_write_roundtrip() {
         let (fabric, _rxs) = LoopbackFabric::new(2, &[4096]);
@@ -485,27 +925,48 @@ mod tests {
     }
 
     #[test]
-    fn read_batch_serves_all_requests_in_place() {
+    fn read_batch_serves_all_requests_from_reused_scratch() {
         let (fabric, _rxs) = LoopbackFabric::new(1, &[256]);
         fabric.write(0, MrKey(0), 0, b"aa");
         fabric.write(0, MrKey(0), 10, b"bbb");
         fabric.write(0, MrKey(0), 20, b"c");
         let reqs = [(0u64, 2u32), (10, 3), (20, 1)];
+        let mut scratch = Vec::new();
         let mut seen: Vec<Vec<u8>> = Vec::new();
-        fabric.read_batch(0, MrKey(0), &reqs, |i, bytes| {
+        fabric.read_batch(0, MrKey(0), &reqs, &mut scratch, |i, bytes| {
             assert_eq!(i, seen.len());
             seen.push(bytes.to_vec());
         });
         assert_eq!(seen, vec![b"aa".to_vec(), b"bbb".to_vec(), b"c".to_vec()]);
+        // The scratch holds the batch and is reused without reallocation
+        // by an equal-or-smaller follow-up batch.
+        let cap = scratch.capacity();
+        assert!(cap >= 6);
+        fabric.read_batch(0, MrKey(0), &reqs, &mut scratch, |_, _| {});
+        assert_eq!(scratch.capacity(), cap, "steady-state batch reads must not reallocate");
+    }
+
+    #[test]
+    fn spsc_ring_preserves_fifo_order() {
+        let ring: SpscRing<u32> = SpscRing::new(8);
+        assert!(ring.is_empty());
+        for i in 0..8 {
+            ring.push(i).unwrap();
+        }
+        assert!(ring.push(99).is_err(), "9th push into an 8-ring must refuse");
+        for i in 0..8 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert_eq!(ring.pop(), None);
     }
 
     #[test]
     fn rpc_roundtrip_through_handler() {
         let (fabric, mut rxs) = LoopbackFabric::new(2, &[64]);
-        let rx = rxs.remove(1);
+        let mut rx = rxs.remove(1);
         let h = thread::spawn(move || {
             // Serve exactly one request, echo reversed.
-            match rx.recv().unwrap() {
+            match rx.recv_timeout(TICK).expect("request arrives") {
                 RpcEnvelope::Message { payload, reply, .. } => {
                     let mut out = payload.clone();
                     out.reverse();
@@ -522,11 +983,11 @@ mod tests {
     #[test]
     fn concurrent_rpcs_all_answered() {
         let (fabric, mut rxs) = LoopbackFabric::new(2, &[64]);
-        let rx = rxs.remove(1);
+        let mut rx = rxs.remove(1);
         let server = thread::spawn(move || {
             let mut served = 0;
             while served < 64 {
-                match rx.recv().unwrap() {
+                match rx.recv_timeout(TICK).expect("request arrives") {
                     RpcEnvelope::Message { payload, reply, .. } => {
                         reply.unwrap().send(payload).unwrap();
                     }
@@ -549,18 +1010,18 @@ mod tests {
     #[test]
     fn rpc_to_dead_node_returns_none() {
         let (fabric, rxs) = LoopbackFabric::new(2, &[64]);
-        drop(rxs); // no event loops
+        drop(rxs); // no reactors: lanes closed
         assert_eq!(fabric.rpc(0, 1, vec![1]), None);
     }
 
     #[test]
     fn ring_window_of_outstanding_rpcs_completes() {
         let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
-        let rx = rxs.remove(1).remove(0);
+        let mut rx = rxs.remove(1).remove(0);
         let server = thread::spawn(move || {
             let mut served = 0;
             while served < 8 {
-                match rx.recv().unwrap() {
+                match rx.recv_timeout(TICK).expect("slot arrives") {
                     RpcEnvelope::Slot(slot) => {
                         assert_eq!(slot.from(), 0);
                         slot.serve(|req, out| {
@@ -573,7 +1034,7 @@ mod tests {
                 served += 1;
             }
         });
-        let conn = fabric.connect(0, 1, 8, 64);
+        let mut conn = fabric.connect(0, 1, 8, 64);
         // Fill the whole window before harvesting anything.
         let toks: Vec<SlotToken> =
             (0..8u8).map(|i| conn.post(0, |buf| buf.extend_from_slice(&[i, i + 1]))).collect();
@@ -588,11 +1049,11 @@ mod tests {
     #[test]
     fn ring_immediate_travels_with_the_slot() {
         let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
-        let rx = rxs.remove(1).remove(0);
+        let mut rx = rxs.remove(1).remove(0);
         let server = thread::spawn(move || {
             let mut imms = Vec::new();
             for _ in 0..3 {
-                match rx.recv().unwrap() {
+                match rx.recv_timeout(TICK).expect("slot arrives") {
                     RpcEnvelope::Slot(slot) => {
                         imms.push(slot.imm());
                         slot.serve(|req, out| out.extend_from_slice(req));
@@ -602,7 +1063,7 @@ mod tests {
             }
             imms
         });
-        let conn = fabric.connect(0, 1, 4, 64);
+        let mut conn = fabric.connect(0, 1, 4, 64);
         let toks: Vec<SlotToken> = [0xA0u32, 0xB1, 0xC2]
             .iter()
             .map(|&imm| conn.post_imm(0, imm, |b| b.push(imm as u8)))
@@ -613,8 +1074,8 @@ mod tests {
         assert_eq!(server.join().unwrap(), vec![0xA0, 0xB1, 0xC2]);
         // Plain post carries immediate 0.
         let (fabric2, mut rxs2) = LoopbackFabric::new_sharded(2, &[64], 1);
-        let rx2 = rxs2.remove(1).remove(0);
-        let h = thread::spawn(move || match rx2.recv().unwrap() {
+        let mut rx2 = rxs2.remove(1).remove(0);
+        let h = thread::spawn(move || match rx2.recv_timeout(TICK).expect("slot arrives") {
             RpcEnvelope::Slot(slot) => {
                 let imm = slot.imm();
                 slot.serve(|_, out| out.push(1));
@@ -622,38 +1083,60 @@ mod tests {
             }
             RpcEnvelope::Message { .. } => panic!("expected slot"),
         });
-        let conn2 = fabric2.connect(0, 1, 1, 64);
+        let mut conn2 = fabric2.connect(0, 1, 1, 64);
         let tok = conn2.post(0, |b| b.push(9));
         conn2.take_reply(tok, |_| ());
         assert_eq!(h.join().unwrap(), 0);
     }
 
     #[test]
+    fn slot_request_is_peekable_before_serving() {
+        let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
+        let mut rx = rxs.remove(1).remove(0);
+        let server = thread::spawn(move || match rx.recv_timeout(TICK).expect("slot arrives") {
+            RpcEnvelope::Slot(slot) => {
+                // Routing peek: observe the request without serving it.
+                let first = slot.peek(|req| req[0]);
+                slot.serve(|req, out| out.extend_from_slice(req));
+                first
+            }
+            RpcEnvelope::Message { .. } => panic!("expected slot"),
+        });
+        let mut conn = fabric.connect(0, 1, 1, 64);
+        let tok = conn.post(0, |b| b.extend_from_slice(&[42, 7]));
+        conn.take_reply(tok, |b| assert_eq!(b, &[42, 7][..]));
+        assert_eq!(server.join().unwrap(), 42);
+    }
+
+    #[test]
     fn dropped_server_completes_slot_with_empty_reply() {
         let (fabric, rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
-        let conn = fabric.connect(0, 1, 2, 64);
+        let mut conn = fabric.connect(0, 1, 2, 64);
         let tok = conn.post(0, |b| b.extend_from_slice(b"hi"));
-        // Server loops exit with the request still queued: the envelope's
-        // slot handle is dropped unserved.
+        // The reactor exits with the request still queued: the teardown
+        // drain drops the envelope's slot handle unserved.
         drop(rxs);
         let reply_len = conn.take_reply(tok, |b| b.len());
         assert_eq!(reply_len, 0, "unserved slot must complete empty, not hang");
+        // Posts after teardown fail fast the same way.
+        let tok = conn.post(0, |b| b.extend_from_slice(b"again"));
+        assert_eq!(conn.take_reply(tok, |b| b.len()), 0);
     }
 
     #[test]
     fn ring_slot_buffers_are_reused_without_reallocation() {
         let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
-        let rx = rxs.remove(1).remove(0);
+        let mut rx = rxs.remove(1).remove(0);
         let server = thread::spawn(move || {
             for _ in 0..16 {
-                match rx.recv().unwrap() {
+                match rx.recv_timeout(TICK).expect("slot arrives") {
                     RpcEnvelope::Slot(slot) => slot.serve(|req, out| out.extend_from_slice(req)),
                     RpcEnvelope::Message { .. } => panic!("expected slot"),
                 }
             }
         });
         // Window of 1: the same slot serves every request.
-        let conn = fabric.connect(0, 1, 1, 128);
+        let mut conn = fabric.connect(0, 1, 1, 128);
         for round in 0..16u8 {
             let tok = conn.post(0, |buf| {
                 assert!(buf.capacity() >= 128, "slot buffer must stay preallocated");

@@ -5,9 +5,13 @@
 //! [`loopback`] is a *live* in-process fabric over shared memory and
 //! threads used by the end-to-end examples — same dataplane code, real
 //! wall-clock time, with ring-buffer RPC slots (zero-allocation framing,
-//! windowed outstanding requests, per-shard receive lanes), doorbell
-//! batched one-sided reads, and the PJRT batch engine on the hot path.
+//! windowed outstanding requests, lock-free per-shard receive lanes with
+//! parking reactors), doorbell batched one-sided reads into caller-owned
+//! scratch, and the PJRT batch engine on the hot path. [`affinity`]
+//! pins shard reactor threads to cores (best-effort raw syscall, no-op
+//! where unsupported).
 
+pub mod affinity;
 pub mod loopback;
 pub mod params;
 

@@ -7,6 +7,11 @@
 //! the original primary. Faults are flipped between client operations
 //! (nothing in flight), so every scenario is deterministic; see
 //! `storm::dataplane` docs for the protocol and lease invariants.
+//!
+//! Since PR 7 every cluster here runs on the shared-nothing driver with
+//! **≥ 2 pinned shard-reactor threads per node** ([`shards_per_node`]),
+//! so kill wipes, recovery installs, stalls, and fencing all cross real
+//! thread boundaries (per-shard job channels, not locks).
 
 use std::collections::HashMap;
 
@@ -28,9 +33,30 @@ const VALUE_LEN: u32 = 32;
 /// The mirrored data region every node registers (region 0).
 const DATA_REGION: MrKey = MrKey(0);
 
+/// Shard-reactor threads per node for every cluster in this battery.
+/// The replication contract must hold on the multi-threaded driver, so
+/// the floor is 2 (a single-reactor run would not exercise cross-thread
+/// fault injection at all); `STORM_TEST_SHARDS` raises it.
+fn shards_per_node() -> u32 {
+    let shards = std::env::var("STORM_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    assert!(shards >= 2, "failover battery requires >= 2 shard threads per node");
+    shards
+}
+
+/// Start a live cluster on the multi-threaded driver and verify the
+/// catalog really split: each node runs >= 2 independent shard reactors.
+fn start(cat: CatalogConfig) -> LiveCluster {
+    let c = LiveCluster::start_catalog_sharded(NODES, cat, shards_per_node());
+    assert!(c.placement().shards() >= 2, "catalog must split across >= 2 shard threads");
+    c
+}
+
 fn replicated_tatp_cluster() -> LiveCluster {
     let cat = tatp::live_catalog(SUBS, VALUE_LEN).with_replication(2);
-    let c = LiveCluster::start_catalog(NODES, cat);
+    let c = start(cat);
     c.load_rows(TatpPopulation::new(SUBS).rows(7), |o, k| stamped_value(o, k, VALUE_LEN));
     c
 }
@@ -283,7 +309,7 @@ fn recovery_rebuilds_byte_identical_region() {
 #[test]
 fn stalled_lane_delays_but_serves() {
     let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
-    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg).with_replication(2));
+    let c = start(CatalogConfig::single(cfg).with_replication(2));
     c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
     let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
     c.stall_node(VICTIM);
@@ -307,7 +333,7 @@ fn stalled_lane_delays_but_serves() {
 #[test]
 fn fenced_node_serves_reads_until_unfenced() {
     let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
-    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg));
+    let c = start(CatalogConfig::single(cfg));
     c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
     let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
     c.fence_node(VICTIM);
@@ -339,7 +365,7 @@ fn fenced_node_serves_reads_until_unfenced() {
 #[test]
 fn replication_resumes_after_failback() {
     let cfg = MicaConfig { buckets: 1 << 10, width: 2, value_len: 32, store_values: true };
-    let c = LiveCluster::start_catalog(NODES, CatalogConfig::single(cfg).with_replication(2));
+    let c = start(CatalogConfig::single(cfg).with_replication(2));
     c.load(1..=100, |k| stamped_value(ObjectId(0), k, 32));
     let key = (1..=100).find(|&k| owner_of(k, NODES) == VICTIM).expect("victim owns keys");
     let backup = (VICTIM + 1) % NODES;
@@ -382,7 +408,7 @@ fn btree_routes_rewarm_after_recovery() {
         max_leaves: 1 << 10,
     })])
     .with_replication(2);
-    let c = LiveCluster::start_catalog(NODES, cat);
+    let c = start(cat);
     assert_eq!(c.placement().geo(ObjectId(0)).kind, ObjectKind::BTree);
     c.load_rows((1..=240u64).map(|k| (ObjectId(0), k)), |o, k| stamped_value(o, k, 32));
     let keys: Vec<u64> = (1..=240).collect();

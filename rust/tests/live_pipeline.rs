@@ -4,7 +4,6 @@
 //! (clean outcomes only, no stale locks after drain), and the ring's
 //! blocking (not dropping) backpressure behavior.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use storm::dataplane::live::{LiveCluster, LOOKUP_WINDOW, RING_SLOTS, TX_WINDOW};
@@ -189,9 +188,9 @@ fn tx_batch_pipelines_through_chained_keys() {
 }
 
 #[test]
-fn full_ring_blocks_until_slot_freed() {
+fn full_ring_refuses_then_accepts_after_harvest() {
     let (fabric, mut rxs) = LoopbackFabric::new_sharded(2, &[64], 1);
-    let conn = Arc::new(fabric.connect(0, 1, 2, 64));
+    let mut conn = fabric.connect(0, 1, 2, 64);
     assert_eq!(conn.window(), 2);
     assert!(RING_SLOTS > LOOKUP_WINDOW, "pipeline window must fit in the ring");
 
@@ -200,24 +199,11 @@ fn full_ring_blocks_until_slot_freed() {
     let t2 = conn.post(0, |b| b.extend_from_slice(b"two"));
     assert!(conn.try_post(0, |b| b.extend_from_slice(b"overflow")).is_none());
 
-    // A blocking post parks until take_reply frees a slot.
-    let (posted_tx, posted_rx) = std::sync::mpsc::channel();
-    let c2 = conn.clone();
-    let poster = std::thread::spawn(move || {
-        let t3 = c2.post(0, |b| b.extend_from_slice(b"three"));
-        posted_tx.send(()).unwrap();
-        c2.take_reply(t3, |b| b.to_vec())
-    });
-    assert!(
-        posted_rx.recv_timeout(Duration::from_millis(100)).is_err(),
-        "post on a full ring must block"
-    );
-
-    // Echo server: serves the two queued requests, then the unblocked one.
-    let rx = rxs.remove(1).remove(0);
+    // Echo server for the queued requests plus the retried one.
+    let mut rx = rxs.remove(1).remove(0);
     let server = std::thread::spawn(move || {
         for _ in 0..3 {
-            match rx.recv().unwrap() {
+            match rx.recv_timeout(Duration::from_secs(5)).expect("slot arrives") {
                 RpcEnvelope::Slot(slot) => slot.serve(|req, out| out.extend_from_slice(req)),
                 RpcEnvelope::Message { .. } => panic!("expected ring slot"),
             }
@@ -225,8 +211,13 @@ fn full_ring_blocks_until_slot_freed() {
     });
 
     assert_eq!(conn.take_reply(t1, |b| b.to_vec()), b"one".to_vec());
+    // Harvesting freed a slot, so the retried post goes through — the
+    // single-owner backpressure contract: a connection is owned by one
+    // thread, which retries after harvesting instead of blocking (a post
+    // that blocked here could never be unblocked, since only this thread
+    // frees slots).
+    let t3 = conn.try_post(0, |b| b.extend_from_slice(b"three")).expect("harvest frees a slot");
     assert_eq!(conn.take_reply(t2, |b| b.to_vec()), b"two".to_vec());
-    posted_rx.recv_timeout(Duration::from_secs(5)).expect("blocked post must resume");
-    assert_eq!(poster.join().unwrap(), b"three".to_vec());
+    assert_eq!(conn.take_reply(t3, |b| b.to_vec()), b"three".to_vec());
     server.join().unwrap();
 }

@@ -7,6 +7,14 @@
 //! reference driver, where the race can be parked deterministically),
 //! per-`AbortReason` counters forced through every reason, and the
 //! hopscotch slot-value round trip over the live mirror.
+//!
+//! Since PR 7 every live cluster here runs on the shared-nothing driver
+//! with **≥ 2 pinned shard-reactor threads per node** ([`live`]): mixed
+//! MICA+BTree transactions routinely span shard threads (the tree's
+//! home shard vs the row's bucket shard), so the OCC protocol is
+//! exercised across real thread boundaries. The `LocalCluster` tests
+//! stay on the single-threaded reference driver on purpose — that is
+//! where races park deterministically.
 
 use std::collections::HashMap;
 
@@ -46,13 +54,27 @@ fn value_of(obj: ObjectId, k: u64) -> Vec<u8> {
     stamped_value(obj, k, VALUE_LEN)
 }
 
+/// Start a live cluster on the multi-threaded driver: ≥ 2 pinned
+/// shard-reactor threads per node (the floor this battery asserts;
+/// `STORM_TEST_SHARDS` raises it).
+fn live(nodes: u32, cat: CatalogConfig) -> LiveCluster {
+    let shards = std::env::var("STORM_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    assert!(shards >= 2, "hetero battery requires >= 2 shard threads per node");
+    let c = LiveCluster::start_catalog_sharded(nodes, cat, shards);
+    assert!(c.placement().shards() >= 2, "catalog must split across >= 2 shard threads");
+    c
+}
+
 /// The acceptance-path test: a transaction spanning a MICA table and a
 /// BTree object commits live under `run_tx_batch`, in both directions,
 /// with the write visible to other clients and exactly one leaf-version
 /// bump per committed tree write.
 #[test]
 fn mixed_tx_spans_mica_and_btree_live() {
-    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    let c = live(3, mixed_catalog());
     for obj in [MICA, TREE] {
         c.load_rows((1..=200u64).map(|k| (obj, k)), value_of);
     }
@@ -118,7 +140,7 @@ fn mixed_tx_spans_mica_and_btree_live() {
 /// its leaf version by exactly N (lock/unlock traffic bumps nothing).
 #[test]
 fn leaf_version_bumps_equal_commit_count() {
-    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    let c = live(2, mixed_catalog());
     for obj in [MICA, TREE] {
         c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
     }
@@ -143,7 +165,7 @@ fn leaf_version_bumps_equal_commit_count() {
 /// lock word is clear and the version equals commits exactly.
 #[test]
 fn no_stale_leaf_locks_after_aborts() {
-    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    let c = live(2, mixed_catalog());
     for obj in [MICA, TREE] {
         c.load_rows((1..=20u64).map(|k| (obj, k)), value_of);
     }
@@ -376,7 +398,7 @@ fn delete_of_foreign_locked_slot_returns_lock_conflict() {
 #[test]
 fn tatp_with_btree_call_forwarding_commits_live() {
     let subscribers = 400u64;
-    let c = LiveCluster::start_catalog(3, tatp::live_catalog_btree_cf(subscribers, VALUE_LEN));
+    let c = live(3, tatp::live_catalog_btree_cf(subscribers, VALUE_LEN));
     c.load_rows(TatpPopulation::new(subscribers).rows(7), |o, k| stamped_value(o, k, VALUE_LEN));
     let w = TatpWorkload::new(subscribers);
     let mut rng = Pcg64::seeded(13);
@@ -436,7 +458,7 @@ fn hopscotch_slot_values_round_trip_live() {
         ObjectConfig::Hopscotch(HopscotchConfig { slots: 1 << 10, h: 8, item_size: 128 }),
     ]);
     let hop = ObjectId(1);
-    let c = LiveCluster::start_catalog(2, cat);
+    let c = live(2, cat);
     c.load_rows((1..=100u64).map(|k| (hop, k)), value_of);
     let geo = *c.placement().geo(hop);
     let fabric = c.fabric();

@@ -4,18 +4,31 @@
 # Rows: pipelined-vs-sequential lookups, single-key tx commits, the
 # flattened TATP compat mix, the catalog-native runs — four-table
 # TATP (no key flattening) and SmallBank — with per-table commit/abort
-# counters and the adaptive per-client transaction windows, and the
+# counters and the adaptive per-client transaction windows, the
 # mixed-backend per-kind lookup rows ("mixed_backend": MICA bucket reads
 # vs B-link cached-route leaf reads (cold + warm) vs FaRM-style 1 KB
-# hopscotch neighborhood reads, plus the interleaved all-kinds row).
+# hopscotch neighborhood reads, plus the interleaved all-kinds row), and
+# the "scaling" matrix (1→8 shard-reactor threads per node × 1→4 client
+# threads — the shared-nothing scaling curve).
 #
 # Usage: scripts/bench.sh [output.json]
+#        scripts/bench.sh scaling [output.json]   # scaling matrix only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+mode="full"
+if [[ "${1:-}" == "scaling" ]]; then
+  mode="scaling"
+  shift
+fi
+
 out="${1:-${BENCH_OUT:-BENCH_live.json}}"
 
-BENCH_OUT="$out" cargo bench --bench live_throughput
+if [[ "$mode" == "scaling" ]]; then
+  BENCH_OUT="$out" BENCH_SCALING_ONLY=1 cargo bench --bench live_throughput
+else
+  BENCH_OUT="$out" cargo bench --bench live_throughput
+fi
 
 echo "--- $out ---"
 cat "$out"

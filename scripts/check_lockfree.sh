@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Lock-free steady-state gate (PR 7): the live dataplane's request path —
+# shard reactors in dataplane/live.rs and the ring/lane transport in
+# fabric/loopback.rs — must never acquire a Mutex or RwLock. Documented
+# control-plane paths (job channels, lane teardown, reply plumbing for
+# lane-0 control messages) are allowed, but every such line must say so:
+# any line mentioning Mutex/RwLock in the gated files must either be a
+# comment or carry a `control-plane` marker comment on the same line.
+#
+# Usage: scripts/check_lockfree.sh   (exits non-zero on violation)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+gated=(
+  rust/src/dataplane/live.rs
+  rust/src/fabric/loopback.rs
+)
+
+fail=0
+for f in "${gated[@]}"; do
+  # Lines that mention a lock type...
+  hits=$(grep -nE 'Mutex|RwLock' "$f" || true)
+  [[ -z "$hits" ]] && continue
+  # ...are fine when they are comments or carry the control-plane marker.
+  bad=$(printf '%s\n' "$hits" | grep -vE '^[0-9]+:\s*//' | grep -v 'control-plane' || true)
+  if [[ -n "$bad" ]]; then
+    echo "LOCK ON STEADY-STATE PATH in $f:" >&2
+    printf '%s\n' "$bad" >&2
+    fail=1
+  fi
+done
+
+if [[ "$fail" -ne 0 ]]; then
+  echo "" >&2
+  echo "Mutex/RwLock found outside documented control-plane paths." >&2
+  echo "Either remove the lock or mark the line with a '// control-plane: ...' comment" >&2
+  echo "explaining why it never runs on the request path." >&2
+  exit 1
+fi
+echo "lock-free steady-state gate: OK (${gated[*]})"
