@@ -16,22 +16,32 @@
 //! tracks commit throughput across a fault and the `primary_fenced`
 //! abort counters the failover produces.
 //!
+//! PR 8 adds the observability rows: `latency` (Table-5-style
+//! p50/p99/p999 per opcode × backend kind × tx phase, merged across
+//! every live run) and `throughput_series` (epoch-synced 10 ms windowed
+//! commit counts for the native TATP run and the failover drill — the
+//! fenced window shows up as a dip in the failover series).
+//!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
-//! `scripts/bench.sh`.
+//! `scripts/bench.sh`; `scripts/check_bench_schema.sh` validates the
+//! artifact's required keys in CI.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
-use storm::cluster::{AbortCounts, LiveServed};
-use storm::dataplane::live::{LiveClient, LiveCluster, SERVER_SHARDS, TX_WINDOW};
+use storm::cluster::report::throughput_series_json;
+use storm::cluster::{AbortCounts, ClientLatency, LiveServed};
+use storm::dataplane::live::{
+    LiveClient, LiveCluster, SERIES_WINDOW_NS, SERVER_SHARDS, TX_WINDOW,
+};
 use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
 use storm::ds::api::ObjectId;
 use storm::ds::btree::BTreeConfig;
 use storm::ds::catalog::{CatalogConfig, ObjectConfig, Placement};
 use storm::ds::hopscotch::HopscotchConfig;
 use storm::ds::mica::MicaConfig;
-use storm::sim::Pcg64;
+use storm::sim::{Pcg64, WindowSeries};
 use storm::workload::kv::KvWorkload;
 use storm::workload::smallbank::{self, SmallBankPopulation, SmallBankWorkload};
 use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
@@ -238,6 +248,11 @@ struct CatalogRun {
     /// Per object: committed / aborted transactions touching that table.
     per_table: Vec<(u64, u64)>,
     served: LiveServed,
+    /// Latency histograms merged across the run's clients.
+    lat: ClientLatency,
+    /// Epoch-synced windowed commit counts merged across the run's
+    /// clients (all share the cluster epoch, so windows line up).
+    series: WindowSeries,
 }
 
 impl CatalogRun {
@@ -319,7 +334,16 @@ fn catalog_pass(
                     }
                 }
             }
-            (commits, aborts, per, client.tx_window() as u32, client.abort_counts(), tallies)
+            (
+                commits,
+                aborts,
+                per,
+                client.tx_window() as u32,
+                client.abort_counts(),
+                tallies,
+                client.latency().clone(),
+                client.series().clone(),
+            )
         }));
     }
     let mut commits = 0u64;
@@ -328,8 +352,10 @@ fn catalog_pass(
     let mut windows = Vec::new();
     let mut reasons = AbortCounts::default();
     let mut class_tallies: Vec<(String, AbortCounts)> = Vec::new();
+    let mut lat = ClientLatency::default();
+    let mut series = WindowSeries::new(SERIES_WINDOW_NS, WindowSeries::DEFAULT_WINDOWS);
     for h in handles {
-        let (c, a, per, win, counts, tallies) = h.join().unwrap();
+        let (c, a, per, win, counts, tallies, client_lat, client_series) = h.join().unwrap();
         commits += c;
         aborts += a;
         for (acc, p) in per_table.iter_mut().zip(per) {
@@ -339,6 +365,8 @@ fn catalog_pass(
         windows.push(win);
         reasons.merge(&counts);
         class_tallies.extend(tallies);
+        lat.merge(&client_lat);
+        series.merge(&client_series);
     }
     let rate = commits as f64 / t0.elapsed().as_secs_f64();
     let mut served = cluster.shutdown();
@@ -352,7 +380,8 @@ fn catalog_pass(
     for (class, tally) in &class_tallies {
         served.record_class_aborts(class, tally);
     }
-    CatalogRun { clients: CLIENTS as usize, rate, commits, aborts, per_table, served }
+    let clients = CLIENTS as usize;
+    CatalogRun { clients, rate, commits, aborts, per_table, served, lat, series }
 }
 
 /// One windowed chunk of the failover drill: runs `n` fresh TATP
@@ -437,6 +466,8 @@ fn failover_pass(ntables: usize) -> CatalogRun {
         aborts += a;
     }
     let rate = commits as f64 / t0.elapsed().as_secs_f64();
+    let lat = client.latency().clone();
+    let series = client.series().clone();
     let mut served = cluster.shutdown();
     served.record_tx_window(client.tx_window() as u32);
     served.record_aborts(&client.abort_counts());
@@ -445,7 +476,7 @@ fn failover_pass(ntables: usize) -> CatalogRun {
     for (class, tally) in &class_tallies {
         served.record_class_aborts(class, tally);
     }
-    CatalogRun { clients: 1, rate, commits, aborts, per_table: per, served }
+    CatalogRun { clients: 1, rate, commits, aborts, per_table: per, served, lat, series }
 }
 
 // --- scaling matrix (shared-nothing shard reactors, PR 7) ----------------
@@ -699,7 +730,7 @@ fn mixed_kind_pass(
 
 /// The mixed-backend benchmark: per-kind lookup rows (+ a cold-route
 /// B-link row and an interleaved all-kinds doorbell row).
-fn mixed_backend_rows() -> (KindRow, KindRow, KindRow, KindRow, f64) {
+fn mixed_backend_rows() -> (KindRow, KindRow, KindRow, KindRow, f64, ClientLatency) {
     let cat = mixed_catalog();
     let place = Placement::new(&cat, NODES, cat.shard_count(SERVER_SHARDS));
     let (mica_bytes, tree_bytes, hop_geo) = (
@@ -740,9 +771,12 @@ fn mixed_backend_rows() -> (KindRow, KindRow, KindRow, KindRow, f64) {
         client.lookup_batch_items(chunk);
     }
     let mixed_ops = items.len() as f64 / t0.elapsed().as_secs_f64();
+    // The interleaved pass exercises every backend kind from one client,
+    // so its latency histograms populate all three per-kind rows.
+    let lat = client.latency().clone();
 
     cluster.shutdown();
-    (mica, tree_cold, tree_warm, hop, mixed_ops)
+    (mica, tree_cold, tree_warm, hop, mixed_ops, lat)
 }
 
 fn per_table_json(names: &[&str], per: &[(u64, u64)]) -> String {
@@ -983,7 +1017,8 @@ fn main() {
     // the heterogeneous catalog's measured trade-off (fine-grained MICA
     // bucket reads vs B-link cached-route leaf reads vs FaRM-style 1 KB
     // hopscotch neighborhood reads), uniform keys via workload/kv.
-    let (mx_mica, mx_tree_cold, mx_tree_warm, mx_hop, mx_mixed_ops) = mixed_backend_rows();
+    let (mx_mica, mx_tree_cold, mx_tree_warm, mx_hop, mx_mixed_ops, mx_lat) =
+        mixed_backend_rows();
     println!("# mixed-backend lookups: {MIXED_KEYS} uniform keys, 1 client");
     println!(
         "mixed mica        {:>12.0} ops/s   ({} B reads, {} rpcs)",
@@ -1071,6 +1106,32 @@ fn main() {
     json.push_str(&format!(
         "  \"tatp_failover\": {},\n",
         failover.json_row(&TATP_TABLES, "subscribers", TATP_SUBSCRIBERS)
+    ));
+    // Table-5-style latency rows: opcode × backend kind × tx phase,
+    // merged across every live run in the artifact.
+    let mut merged_lat = native.lat.clone();
+    merged_lat.merge(&hetero.lat);
+    merged_lat.merge(&sb.lat);
+    merged_lat.merge(&failover.lat);
+    merged_lat.merge(&mx_lat);
+    println!("# latency (merged across runs): {} samples", merged_lat.total_samples());
+    for (op, kind, phase, h) in merged_lat.rows() {
+        if h.count() == 0 {
+            continue;
+        }
+        println!(
+            "latency {op:<7} {kind:<9} {phase:<16} p50 {:>8} ns  p99 {:>8} ns  p999 {:>9} ns",
+            h.p50(),
+            h.p99(),
+            h.p999()
+        );
+    }
+    json.push_str(&format!("  \"latency\": {},\n", merged_lat.json()));
+    json.push_str(&format!(
+        "  \"throughput_series\": {{\"window_ms\": {}, \"tatp_native\": {}, \"failover\": {}}},\n",
+        SERIES_WINDOW_NS / 1_000_000,
+        throughput_series_json(&native.series),
+        throughput_series_json(&failover.series),
     ));
     json.push_str(&format!("  \"scaling\": {},\n", scaling_json(&scale_points)));
     json.push_str(&format!(

@@ -14,5 +14,5 @@ pub mod report;
 pub mod world;
 
 pub use config::{HostParams, SimConfig, StormMode, SystemKind, WorkloadKind};
-pub use report::{AbortCounts, LiveServed, RunReport};
+pub use report::{AbortCounts, ClientLatency, LaneGauges, LiveServed, RunReport};
 pub use world::World;

@@ -1,7 +1,40 @@
 //! Run summaries: simulator reports (consumed by the figure harnesses and
 //! the CLI) and live-cluster service counters.
+//!
+//! # Observability
+//!
+//! The live dataplane measures itself at two sites, and this module owns
+//! the containers both report into:
+//!
+//! * **Client side** — each `LiveClient` owns a fixed set of
+//!   [`ClientLatency`] histograms (allocated once at client build, never
+//!   on the hot path) plus a [`crate::sim::stats::WindowSeries`]
+//!   throughput meter over epoch-synced ~10 ms windows. Timestamps are
+//!   taken per *doorbell batch*, not per item — one monotonic clock pair
+//!   brackets the posted volley and the measured duration is recorded
+//!   once per op it covered — so instrumentation adds no allocation and
+//!   amortizes the clock reads the same way the doorbell amortizes
+//!   posts. Latency is recorded along three axes: opcode (one-sided
+//!   `read` / whole `lookup` / `tx_rpc`), backend kind (MICA, B-link,
+//!   hopscotch), and transaction phase
+//!   ([`crate::dataplane::tx::PHASE_LABELS`]). Per-client instances
+//!   merge into one [`ClientLatency`] / series at report time.
+//!
+//! * **Server side** — each shard reactor keeps [`LaneGauges`]: how
+//!   many envelopes a drain burst found waiting (queue depth sampled at
+//!   drain), how often the reactor parked and was woken, and the
+//!   deepest control-job backlog it drained. The gauges ride back
+//!   through `LiveCluster::shutdown` into [`LiveServed::gauges`], so
+//!   reactor idling and lane imbalance are diagnosable, not just
+//!   countable.
+//!
+//! `scripts/bench.sh` emits the merged client view as `latency` rows
+//! (p50/p99/p999/mean/max per opcode × kind × phase) and
+//! `throughput_series` rows in `BENCH_live.json`;
+//! `scripts/check_bench_schema.sh` gates the emit shape in CI.
 
-use crate::dataplane::tx::{AbortReason, TxOutcome};
+use crate::dataplane::tx::{AbortReason, TxOutcome, PHASE_LABELS};
+use crate::sim::stats::{Histogram, WindowSeries};
 use crate::sim::Nanos;
 
 /// Per-[`AbortReason`] abort tallies of a transactional run. An abort
@@ -88,6 +121,143 @@ impl AbortCounts {
     }
 }
 
+/// Backend-kind axis labels for latency rows, in the index order
+/// [`ClientLatency`] uses (`mica`, `btree`, `hopscotch`).
+pub const KIND_LABELS: [&str; 3] = ["mica", "btree", "hopscotch"];
+
+/// The fixed latency-histogram set a live client owns: one distribution
+/// per opcode × backend kind for the lookup path and one per transaction
+/// phase for the RPC path. All histograms are allocated here, once, at
+/// client build — recording on the hot path touches preallocated buckets
+/// only (see the module-level Observability notes).
+#[derive(Clone, Debug, Default)]
+pub struct ClientLatency {
+    /// One-sided doorbell-read latency per backend kind
+    /// (indexed by [`KIND_LABELS`]).
+    pub read: [Histogram; 3],
+    /// Whole-lookup latency (start machine through drained completion,
+    /// RPC fallback legs included) per backend kind.
+    pub lookup: [Histogram; 3],
+    /// Transaction phase-volley latency (first post of the phase through
+    /// the completion that drains it), indexed by [`PHASE_LABELS`].
+    pub tx_phase: [Histogram; 4],
+}
+
+impl ClientLatency {
+    /// Merge another client's histograms into this one (report-time
+    /// roll-up across a run's clients).
+    pub fn merge(&mut self, other: &ClientLatency) {
+        for (a, b) in self.read.iter_mut().zip(other.read.iter()) {
+            a.merge(b);
+        }
+        for (a, b) in self.lookup.iter_mut().zip(other.lookup.iter()) {
+            a.merge(b);
+        }
+        for (a, b) in self.tx_phase.iter_mut().zip(other.tx_phase.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Total recorded samples across every histogram.
+    pub fn total_samples(&self) -> u64 {
+        let sum = |hs: &[Histogram]| hs.iter().map(Histogram::count).sum::<u64>();
+        sum(&self.read) + sum(&self.lookup) + sum(&self.tx_phase)
+    }
+
+    /// Every row of the fixed latency schema as
+    /// `(opcode, kind, phase, histogram)`. Rows with zero samples are
+    /// included — the schema is stable regardless of workload mix.
+    pub fn rows(&self) -> Vec<(&'static str, &'static str, &'static str, &Histogram)> {
+        let mut out =
+            Vec::with_capacity(self.read.len() + self.lookup.len() + self.tx_phase.len());
+        for (i, h) in self.read.iter().enumerate() {
+            out.push(("read", KIND_LABELS[i], "-", h));
+        }
+        for (i, h) in self.lookup.iter().enumerate() {
+            out.push(("lookup", KIND_LABELS[i], "-", h));
+        }
+        for (i, h) in self.tx_phase.iter().enumerate() {
+            out.push(("tx_rpc", "all", PHASE_LABELS[i], h));
+        }
+        out
+    }
+
+    /// The Table-5-style JSON array benches embed under the `latency`
+    /// key: one row per opcode × kind × phase with p50/p99/p999/mean/max
+    /// (nanoseconds) and the sample count.
+    pub fn json(&self) -> String {
+        let rows: Vec<String> = self
+            .rows()
+            .iter()
+            .map(|(op, kind, phase, h)| {
+                format!(
+                    concat!(
+                        "{{\"op\": \"{}\", \"kind\": \"{}\", \"phase\": \"{}\", ",
+                        "\"count\": {}, \"p50_ns\": {}, \"p99_ns\": {}, ",
+                        "\"p999_ns\": {}, \"mean_ns\": {:.1}, \"max_ns\": {}}}"
+                    ),
+                    op,
+                    kind,
+                    phase,
+                    h.count(),
+                    h.p50(),
+                    h.p99(),
+                    h.p999(),
+                    h.mean(),
+                    h.max(),
+                )
+            })
+            .collect();
+        format!("[{}]", rows.join(", "))
+    }
+}
+
+/// The JSON array benches embed under the `throughput_series` key: one
+/// row per elapsed window with its start offset and completion count.
+pub fn throughput_series_json(series: &WindowSeries) -> String {
+    let window_ms = series.window_ns() / 1_000_000;
+    let rows: Vec<String> = series
+        .windows()
+        .iter()
+        .enumerate()
+        .map(|(i, &ops)| format!("{{\"t_ms\": {}, \"ops\": {}}}", i as u64 * window_ms, ops))
+        .collect();
+    format!("[{}]", rows.join(", "))
+}
+
+/// Per-reactor idle/backlog gauges, sampled on the reactor's own thread
+/// (no shared counters on the request path) and returned through
+/// `LiveCluster::shutdown` into [`LiveServed::gauges`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneGauges {
+    /// Drain bursts that found at least one envelope waiting (each is
+    /// one queue-depth sample).
+    pub drains: u64,
+    /// Sum of sampled queue depths (envelopes found per drain burst);
+    /// `depth_sum / drains` is the mean backlog a burst cleared.
+    pub depth_sum: u64,
+    /// Deepest single drain burst observed.
+    pub depth_max: u64,
+    /// Times the reactor exhausted its idle spins and parked.
+    pub parks: u64,
+    /// Times a parked reactor was woken by a doorbell (parks that ended
+    /// with work waiting rather than by timeout).
+    pub wakes: u64,
+    /// Deepest control-job backlog a single `drain_jobs` pass cleared.
+    pub jobs_max: u64,
+}
+
+impl LaneGauges {
+    /// Mean envelopes cleared per drain burst (0 when never drained).
+    pub fn mean_depth(&self) -> f64 {
+        if self.drains == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.drains as f64
+        }
+    }
+}
+
 /// Per-lane RPC service counts from a live cluster run:
 /// `per_lane[node][lane]` is the number of requests the given bucket-range
 /// shard's event loop served. Returned by `LiveCluster::shutdown` so shard
@@ -119,6 +289,10 @@ pub struct LiveServed {
     /// aborted; these say *which workload shape* did — a failover window
     /// shows up as `primary_fenced` concentrated in the write classes.
     pub class_aborts: Vec<(String, AbortCounts)>,
+    /// Per-reactor idle/backlog gauges, indexed `[node][lane]` like
+    /// [`LiveServed::per_lane`]. Empty for drivers that predate the
+    /// gauges (the simulator's `RunReport` path).
+    pub gauges: Vec<Vec<LaneGauges>>,
 }
 
 impl LiveServed {
@@ -172,6 +346,17 @@ impl LiveServed {
     /// Cluster-wide total.
     pub fn total(&self) -> u64 {
         self.per_lane.iter().flatten().sum()
+    }
+
+    /// Cluster-wide reactor parks (see [`LaneGauges::parks`]).
+    pub fn total_parks(&self) -> u64 {
+        self.gauges.iter().flatten().map(|g| g.parks).sum()
+    }
+
+    /// Cluster-wide queue-depth samples taken at drain (see
+    /// [`LaneGauges::drains`]); zero means the gauges never ran.
+    pub fn total_drains(&self) -> u64 {
+        self.gauges.iter().flatten().map(|g| g.drains).sum()
     }
 
     /// Busiest-lane to mean-lane ratio across all lanes (1.0 = perfectly

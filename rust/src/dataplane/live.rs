@@ -81,9 +81,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::cluster::report::{AbortCounts, LiveServed};
+use crate::cluster::report::{AbortCounts, ClientLatency, LaneGauges, LiveServed};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::btree::{parse_leaf_header, parse_leaf_view, BTreeRouteResolver};
 use crate::ds::catalog::{Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement, TableGeo};
@@ -98,6 +98,7 @@ use crate::fabric::loopback::{
 };
 use crate::mem::{MrKey, PageSize, RegionMode, RemoteAddr};
 use crate::runtime::Engine;
+use crate::sim::stats::WindowSeries;
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
 use super::rpc::{
@@ -132,6 +133,11 @@ pub const TX_WINDOW: usize = 8;
 /// is safe — the scheduler posts with `try_post` and queues on a full
 /// ring — but past this point extra engines only add abort pressure.
 pub const TX_WINDOW_MAX: usize = 32;
+
+/// Throughput-series window grain: each client buckets completions into
+/// ~10 ms windows measured from the cluster epoch, so per-client series
+/// merge window-for-window into the run's `throughput_series` rows.
+pub const SERIES_WINDOW_NS: u64 = 10_000_000;
 
 /// Correlation-cookie layout for scheduled transactions: the low bits are
 /// the engine's action tag (which stays below `2 * tx::REPL_TAG`, i.e.
@@ -277,7 +283,10 @@ pub struct LiveCluster {
     ctls: Vec<Arc<NodeCtl>>,
     /// Per (node, shard) control-plane job channels.
     shard_ctls: Vec<Vec<ShardCtl>>,
-    servers: Vec<Vec<JoinHandle<(u64, u64)>>>,
+    servers: Vec<Vec<JoinHandle<(u64, u64, LaneGauges)>>>,
+    /// Monotonic epoch every client of this cluster syncs its
+    /// throughput-series windows to.
+    epoch: Instant,
 }
 
 impl LiveCluster {
@@ -364,6 +373,7 @@ impl LiveCluster {
                     jobs_pending: pending,
                     served: 0,
                     forwarded: 0,
+                    gauges: LaneGauges::default(),
                 };
                 let core = node * shards as usize + sid;
                 handles.push(
@@ -379,7 +389,8 @@ impl LiveCluster {
             shard_ctls.push(node_ctls);
             servers.push(handles);
         }
-        LiveCluster { fabric, cat, place, nodes, ctls, shard_ctls, servers }
+        let epoch = Instant::now();
+        LiveCluster { fabric, cat, place, nodes, ctls, shard_ctls, servers, epoch }
     }
 
     /// Run `f` against the catalog slice owned by `(node, shard)`'s
@@ -698,6 +709,7 @@ impl LiveCluster {
             cat: self.cat.clone(),
             place: self.place.clone(),
             node_id,
+            epoch: self.epoch,
         }
     }
 
@@ -715,16 +727,20 @@ impl LiveCluster {
         }
         let mut per_lane = Vec::new();
         let mut forwarded = Vec::new();
+        let mut gauges = Vec::new();
         for handles in self.servers {
             let mut served_row = Vec::new();
             let mut fwd_row = Vec::new();
+            let mut gauge_row = Vec::new();
             for h in handles {
-                let (served, fwd) = h.join().unwrap();
+                let (served, fwd, lane_gauges) = h.join().unwrap();
                 served_row.push(served);
                 fwd_row.push(fwd);
+                gauge_row.push(lane_gauges);
             }
             per_lane.push(served_row);
             forwarded.push(fwd_row);
+            gauges.push(gauge_row);
         }
         LiveServed {
             per_lane,
@@ -732,6 +748,7 @@ impl LiveCluster {
             tx_windows: Vec::new(),
             aborts: AbortCounts::default(),
             class_aborts: Vec::new(),
+            gauges,
         }
     }
 }
@@ -788,32 +805,40 @@ struct ShardReactor {
     jobs_pending: Arc<AtomicUsize>,
     served: u64,
     forwarded: u64,
+    /// Idle/backlog gauges, updated only on this thread (no shared
+    /// counters on the request path) and returned at shutdown.
+    gauges: LaneGauges,
 }
 
 impl ShardReactor {
-    /// Reactor loop; returns `(served, forwarded)` counters at shutdown.
-    fn run(mut self) -> (u64, u64) {
+    /// Reactor loop; returns `(served, forwarded, gauges)` at shutdown.
+    fn run(mut self) -> (u64, u64, LaneGauges) {
         self.waker.register_current();
         loop {
             self.drain_jobs();
-            let mut progressed = false;
+            // One outer iteration is one drain burst; the envelopes it
+            // finds waiting are the lane's queue depth sampled at drain.
+            let mut burst = 0u64;
             for i in 0..self.inbox.len() {
                 while let Some(env) = self.inbox[i].pop() {
-                    progressed = true;
+                    burst += 1;
                     // Forwarded envelopes are already routed: the sender
                     // proved this shard owns the addressed object.
                     if !self.process(env, true) {
-                        return (self.served, self.forwarded);
+                        self.sample_burst(burst);
+                        return (self.served, self.forwarded, self.gauges);
                     }
                 }
             }
             if let Some(env) = self.rx.try_recv() {
-                progressed = true;
+                burst += 1;
                 if !self.process(env, false) {
-                    return (self.served, self.forwarded);
+                    self.sample_burst(burst);
+                    return (self.served, self.forwarded, self.gauges);
                 }
             }
-            if progressed {
+            if burst > 0 {
+                self.sample_burst(burst);
                 continue;
             }
             // Idle: bounded spin, then announce sleep, re-check every
@@ -835,9 +860,26 @@ impl ShardReactor {
                 }
                 std::thread::park_timeout(IDLE_PARK);
                 self.waker.end_sleep();
+                self.gauges.parks += 1;
+                if self.has_work() {
+                    // Work arrived while parked: a doorbell (or a race
+                    // the timeout happened to cover) ended this park.
+                    self.gauges.wakes += 1;
+                }
                 spins = 0;
             }
         }
+    }
+
+    /// Record one drain burst's envelope count as a queue-depth sample.
+    #[inline]
+    fn sample_burst(&mut self, burst: u64) {
+        if burst == 0 {
+            return;
+        }
+        self.gauges.drains += 1;
+        self.gauges.depth_sum += burst;
+        self.gauges.depth_max = self.gauges.depth_max.max(burst);
     }
 
     /// Anything queued on any work source? (Pre-park re-check.)
@@ -851,10 +893,13 @@ impl ShardReactor {
     /// Runs unconditionally — killed and stalled nodes still execute
     /// jobs (kill wipes and recovery installs arrive this way).
     fn drain_jobs(&mut self) {
+        let mut depth = 0u64;
         while let Ok(job) = self.jobs.try_recv() {
             self.jobs_pending.fetch_sub(1, Ordering::AcqRel);
             job(&mut self.cat);
+            depth += 1;
         }
+        self.gauges.jobs_max = self.gauges.jobs_max.max(depth);
     }
 
     /// Which shard owns `req`? `None` means "serve locally" (unknown
@@ -1436,6 +1481,8 @@ pub struct ClientSeed {
     cat: CatalogConfig,
     place: Placement,
     node_id: u32,
+    /// Cluster-wide epoch the client's throughput-series windows sync to.
+    epoch: Instant,
 }
 
 impl ClientSeed {
@@ -1503,6 +1550,11 @@ impl ClientSeed {
             seq: 0,
             tx_win: TxWindow::new(),
             aborts: AbortCounts::default(),
+            // Every observability container is fully allocated here:
+            // recording on the hot path only bumps preallocated buckets.
+            lat: ClientLatency::default(),
+            series: WindowSeries::new(SERIES_WINDOW_NS, WindowSeries::DEFAULT_WINDOWS),
+            epoch: self.epoch,
         }
     }
 }
@@ -1522,6 +1574,17 @@ struct PendingRpc {
 
 fn read_rpc_request(obj: ObjectId, key: u64) -> RpcRequest {
     RpcRequest { obj, key, op: RpcOp::Read, tx_id: 0, value: None }
+}
+
+/// Index of a backend kind on the latency axis — must match
+/// [`crate::cluster::report::KIND_LABELS`].
+#[inline]
+fn kind_idx(kind: ObjectKind) -> usize {
+    match kind {
+        ObjectKind::Mica => 0,
+        ObjectKind::BTree => 1,
+        ObjectKind::Hopscotch => 2,
+    }
 }
 
 /// Convert an RPC response standing in for an unmirrored item read back
@@ -1602,6 +1665,15 @@ pub struct LiveClient {
     tx_win: TxWindow,
     /// Per-reason abort tallies of this client's transactions.
     aborts: AbortCounts,
+    /// Latency histograms (opcode × backend kind × tx phase), allocated
+    /// once at build; see the [`crate::cluster::report`] Observability
+    /// docs.
+    lat: ClientLatency,
+    /// Epoch-synced windowed completion counts (throughput time series).
+    series: WindowSeries,
+    /// The cluster epoch [`LiveClient::series`] windows are measured
+    /// from (shared by every client of the run, so series merge).
+    epoch: Instant,
 }
 
 impl LiveClient {
@@ -1609,6 +1681,25 @@ impl LiveClient {
     /// (reportable via [`LiveServed::record_tx_window`]).
     pub fn tx_window(&self) -> usize {
         self.tx_win.current()
+    }
+
+    /// This client's latency histograms (merge per run with
+    /// [`ClientLatency::merge`]).
+    pub fn latency(&self) -> &ClientLatency {
+        &self.lat
+    }
+
+    /// This client's windowed throughput series (merge per run with
+    /// [`WindowSeries::merge`] — every client of a cluster shares the
+    /// epoch, so windows line up).
+    pub fn series(&self) -> &WindowSeries {
+        &self.series
+    }
+
+    /// Nanoseconds since the cluster epoch (the series time axis).
+    #[inline]
+    fn epoch_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
     }
 
     /// Per-[`crate::dataplane::tx::AbortReason`] tallies of every
@@ -1778,6 +1869,9 @@ impl LiveClient {
                 self.place.objects()
             );
         }
+        // One clock read brackets the whole batch (amortized per
+        // doorbell, like the posts themselves).
+        let batch_start = Instant::now();
         let mut results: Vec<Option<LkResult>> = vec![None; items.len()];
         let mut sms: Vec<Option<LookupSm>> = Vec::with_capacity(items.len());
         let mut reads: Vec<Vec<(usize, u64, u32)>> = vec![Vec::new(); self.nodes as usize];
@@ -1820,9 +1914,17 @@ impl LiveClient {
             }
             let reqs: Vec<(u64, u32)> = list.iter().map(|&(_, off, len)| (off, len)).collect();
             let mut views: Vec<ReadView> = Vec::with_capacity(list.len());
+            let read_start = Instant::now();
             fabric.read_batch(node as u32, DATA_REGION, &reqs, &mut scratch, |i, bytes| {
                 views.push(parse_view_at(&self.place, reqs[i].0, bytes));
             });
+            // One timestamp pair per doorbell group; the measured volley
+            // duration is recorded once per read it carried, per kind.
+            let read_ns = read_start.elapsed().as_nanos() as u64;
+            for &(idx, _, _) in &list {
+                let kind = self.resolver.backend_kind(items[idx].0);
+                self.lat.read[kind_idx(kind)].record(read_ns);
+            }
             for (&(idx, _, _), view) in list.iter().zip(views) {
                 let mut sm = sms[idx].take().expect("machine parked on read");
                 if !self.drive(idx, &mut sm, Some(LkInput::Read(view)), &mut rpcq, &mut results) {
@@ -1889,6 +1991,17 @@ impl LiveClient {
             }
         }
 
+        // Whole-lookup latency (RPC fallback legs included): one clock
+        // pair for the batch, recorded per item by backend kind; the
+        // series counts the batch's completions in its epoch window.
+        if !items.is_empty() {
+            let batch_ns = batch_start.elapsed().as_nanos() as u64;
+            for &(obj, _) in items {
+                let kind = self.resolver.backend_kind(obj);
+                self.lat.lookup[kind_idx(kind)].record(batch_ns);
+            }
+            self.series.record_n_at(self.epoch_ns(), items.len() as u64);
+        }
         results.into_iter().map(|r| r.expect("every lookup resolves")).collect()
     }
 
@@ -2098,12 +2211,13 @@ impl LiveClient {
                 let tx_id = self.next_tx;
                 self.next_tx += 1;
                 let mut engine = TxEngine::begin(tx_id, read_set, write_set);
+                let phase_start = Instant::now();
                 let step = engine.start(&mut self.resolver);
                 let slot = free_slots.pop().unwrap_or_else(|| {
                     slots.push(None);
                     slots.len() - 1
                 });
-                slots[slot] = Some(ActiveTx { engine, idx });
+                slots[slot] = Some(ActiveTx { engine, idx, phase: 0, phase_start });
                 live += 1;
                 self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads, &mut scratch);
             }
@@ -2202,7 +2316,9 @@ impl LiveClient {
             let (slot, tag) = (f.slot, f.tag);
             let step = {
                 let tx = slots[slot].as_mut().expect("completion for an inactive tx slot");
-                tx.engine.complete(&mut self.resolver, tag, input)
+                let step = tx.engine.complete(&mut self.resolver, tag, input);
+                note_tx_phase(&mut self.lat, tx);
+                step
             };
             self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads, &mut scratch);
         }
@@ -2234,7 +2350,10 @@ impl LiveClient {
         loop {
             let posts = match step {
                 TxStep::Done(outcome) => {
-                    let tx = slots[slot].take().expect("finished tx was active");
+                    let mut tx = slots[slot].take().expect("finished tx was active");
+                    // Close out the final phase's timer (a no-op when the
+                    // harvest path already recorded it).
+                    note_tx_phase(&mut self.lat, &mut tx);
                     // Single-transaction batches (run_tx) exercise no
                     // concurrency, so their outcomes say nothing about
                     // how wide the window can safely be — don't let a
@@ -2243,6 +2362,12 @@ impl LiveClient {
                         self.tx_win.on_outcome(matches!(outcome, TxOutcome::Committed { .. }));
                     }
                     self.aborts.record_outcome(&outcome);
+                    if matches!(outcome, TxOutcome::Committed { .. }) {
+                        // The throughput series counts commits: a fenced
+                        // window shows up as a dip, an abort storm as a
+                        // flat-line with the abort counters climbing.
+                        self.series.record_at(self.epoch_ns());
+                    }
                     outcomes[tx.idx] = Some(outcome);
                     free_slots.push(slot);
                     *live -= 1;
@@ -2290,14 +2415,23 @@ impl LiveClient {
                 let reqs: Vec<(u64, u32)> =
                     reads[node].iter().map(|&(_, off, len)| (off, len)).collect();
                 let mut views: Vec<ReadView> = Vec::with_capacity(reads[node].len());
+                let read_start = Instant::now();
                 fabric.read_batch(node as u32, DATA_REGION, &reqs, scratch, |i, bytes| {
                     views.push(parse_view_at(&self.place, reqs[i].0, bytes));
                 });
+                // Amortized per doorbell group: one clock pair, recorded
+                // once per read it carried, by the read's backend kind.
+                let read_ns = read_start.elapsed().as_nanos() as u64;
+                for &(_, off, _) in reads[node].iter() {
+                    let kind = self.place.geo(self.place.object_at(off)).kind;
+                    self.lat.read[kind_idx(kind)].record(read_ns);
+                }
                 for (&(tag, _, _), view) in reads[node].iter().zip(views) {
                     match tx.engine.complete(&mut self.resolver, tag, TxInput::Read(view)) {
                         TxStep::Issue(mut more) => next_posts.append(&mut more),
                         d @ TxStep::Done(_) => done = Some(d),
                     }
+                    note_tx_phase(&mut self.lat, tx);
                 }
                 // Drain in place: the scratch keeps its capacity for the
                 // next step.
@@ -2313,6 +2447,40 @@ struct ActiveTx {
     engine: TxEngine,
     /// Index into the caller's batch (outcome routing).
     idx: usize,
+    /// Phase whose volley is currently being timed (index into
+    /// [`crate::dataplane::tx::PHASE_LABELS`]; [`TX_PHASE_DONE`] once the
+    /// final phase has been recorded).
+    phase: usize,
+    /// Clock at the timed phase's first post.
+    phase_start: Instant,
+}
+
+/// Sentinel for [`ActiveTx::phase`]: the engine finished and its last
+/// phase has already been recorded.
+const TX_PHASE_DONE: usize = usize::MAX;
+
+/// Observe the engine's phase after a completion: when the volley that
+/// was being timed has drained (the engine moved on — or finished), its
+/// elapsed time is recorded into the owning client's phase histogram and
+/// the timer re-arms on the new phase. One clock pair per phase volley,
+/// not per action.
+#[inline]
+fn note_tx_phase(lat: &mut ClientLatency, tx: &mut ActiveTx) {
+    if tx.phase == TX_PHASE_DONE {
+        return;
+    }
+    match tx.engine.phase_index() {
+        Some(p) if p == tx.phase => {}
+        Some(p) => {
+            lat.tx_phase[tx.phase].record(tx.phase_start.elapsed().as_nanos() as u64);
+            tx.phase = p;
+            tx.phase_start = Instant::now();
+        }
+        None => {
+            lat.tx_phase[tx.phase].record(tx.phase_start.elapsed().as_nanos() as u64);
+            tx.phase = TX_PHASE_DONE;
+        }
+    }
 }
 
 /// An RPC action of a scheduled transaction awaiting a free ring slot.

@@ -114,6 +114,41 @@
 //!   phantom absence. The window closes at the first write-class
 //!   failure on that node; committed data is never lost because commits
 //!   are acked by every replica before unlock.
+//!
+//! # Observability (PR 8)
+//!
+//! The live dataplane measures itself without perturbing the paths it
+//! measures:
+//!
+//! * **Client side, amortized per doorbell.** Each [`live::LiveClient`]
+//!   owns a fixed [`crate::cluster::report::ClientLatency`] — log-bucketed
+//!   histograms per opcode × backend kind (one-sided reads, whole
+//!   lookups) and per transaction phase (execute-lock, validate,
+//!   commit+replicate, unlock — [`tx::PHASE_LABELS`], attributed via
+//!   [`tx::TxEngine::phase_index`]) — plus an epoch-synced
+//!   [`crate::sim::WindowSeries`] counting commits and lookup
+//!   completions in 10 ms windows ([`live::SERIES_WINDOW_NS`]). One
+//!   `Instant` pair brackets a whole doorbell volley and is recorded
+//!   once per operation it carried, so the steady state adds two clock
+//!   reads per volley and **zero allocation** (the PR 7 scratch
+//!   discipline): every histogram bucket and series window is
+//!   preallocated at client build.
+//!
+//! * **Server side, reactor-local.** Each shard reactor accumulates
+//!   [`crate::cluster::report::LaneGauges`] — queue depth sampled at
+//!   every drain burst, park/wake counts, control-job backlog — in plain
+//!   fields on its own thread (no shared counters, the lock-free gate
+//!   stays intact) and returns them through its join handle;
+//!   [`live::LiveCluster::shutdown`] surfaces them as
+//!   [`crate::cluster::report::LiveServed::gauges`], indexed
+//!   `[node][lane]`.
+//!
+//! * **Reporting.** `scripts/bench.sh` merges the per-client histograms
+//!   and series into `BENCH_live.json` as the `latency` (Table-5-style
+//!   p50/p99/p999/mean/max rows) and `throughput_series` keys — a
+//!   failover drill's fenced window reads as a dip in the series —
+//!   and `scripts/check_bench_schema.sh` gates the artifact's shape
+//!   in CI.
 
 pub mod live;
 pub mod local;

@@ -106,6 +106,13 @@ pub const LOCK_TAG: u32 = 1 << 16;
 /// all three through one cookie space.
 pub const REPL_TAG: u32 = 1 << 17;
 
+/// Phase-axis labels for latency attribution, in
+/// [`TxEngine::phase_index`] order. The engine's internal `Replicate`
+/// and `Commit` phases share one label (replication rides the commit
+/// volley), and the abort path's lock-release volley is the `unlock`
+/// distribution.
+pub const PHASE_LABELS: [&str; 4] = ["execute_lock", "validate", "commit_replicate", "unlock"];
+
 /// Kind of write-set operation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WriteKind {
@@ -425,6 +432,20 @@ impl TxEngine {
         }
         self.outstanding = posts.len() as u32;
         TxStep::Issue(posts)
+    }
+
+    /// Index into [`PHASE_LABELS`] of the volley currently in flight
+    /// (`None` once the transaction reaches `Done`). Drivers read this
+    /// around [`TxEngine::complete`] to attribute a drained volley's
+    /// latency to the phase that issued it.
+    pub fn phase_index(&self) -> Option<usize> {
+        match self.phase {
+            Phase::Execute => Some(0),
+            Phase::Validate => Some(1),
+            Phase::Replicate | Phase::Commit => Some(2),
+            Phase::Abort(_) => Some(3),
+            Phase::Done => None,
+        }
     }
 
     /// Feed the completion of the action posted with `tag`. Completions

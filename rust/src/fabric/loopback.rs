@@ -690,18 +690,36 @@ impl LaneRx {
             || self.rings.iter().any(|r| !r.is_empty())
     }
 
-    /// Polling receive with a deadline — test and example servers; real
+    /// Blocking receive with a deadline — test and example servers; real
     /// reactors use [`Self::try_recv`] with their own idle parking.
+    ///
+    /// Parks on the lane's [`Waker`] instead of sleep-polling: producers
+    /// ring the doorbell after publishing, so wake latency is bounded by
+    /// the doorbell, not a sleep quantum, and an idle wait burns no
+    /// scheduler ticks. The waker is installed lazily and bound to the
+    /// calling thread — a `LaneRx` has exactly one consumer, so the
+    /// caller *is* this lane's reactor.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<RpcEnvelope> {
-        let start = std::time::Instant::now();
+        let waker = self.lane.waker.get_or_init(|| Arc::new(Waker::new())).clone();
+        waker.register_current();
+        let deadline = std::time::Instant::now() + timeout;
         loop {
             if let Some(env) = self.try_recv() {
                 return Some(env);
             }
-            if start.elapsed() >= timeout {
+            let now = std::time::Instant::now();
+            if now >= deadline {
                 return None;
             }
-            std::thread::sleep(Duration::from_micros(50));
+            // Waker protocol: announce sleep, re-check the sources (the
+            // lost-wakeup guard), park until doorbell or deadline.
+            waker.begin_sleep();
+            if self.has_pending() {
+                waker.end_sleep();
+                continue;
+            }
+            std::thread::park_timeout(deadline - now);
+            waker.end_sleep();
         }
     }
 }

@@ -15,7 +15,7 @@ pub mod stats;
 
 pub use heap::{EventQueue, ScheduledEvent};
 pub use rng::{Pcg64, Zipf};
-pub use stats::{Histogram, MeterWindow, RateMeter};
+pub use stats::{Histogram, MeterWindow, RateMeter, WindowSeries};
 
 /// Simulated time in nanoseconds since simulation start.
 pub type Nanos = u64;

@@ -35,7 +35,9 @@ impl Histogram {
         }
         let shift = tier as u32 - SUB_BITS;
         let sub = ((v >> shift) as usize) & (SUB - 1);
-        tier * SUB + sub
+        // Saturate into the top bucket: even u64::MAX must land inside
+        // the array rather than index past it.
+        (tier * SUB + sub).min(64 * SUB - 1)
     }
 
     #[inline]
@@ -111,6 +113,10 @@ impl Histogram {
     /// p99 shorthand.
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
+    }
+    /// p999 shorthand (the paper's tail axis).
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
     }
 
     /// Merge another histogram into this one.
@@ -214,6 +220,77 @@ impl RateMeter {
     }
 }
 
+/// Fixed-capacity windowed throughput series: completions bucketed into
+/// consecutive windows of `window_ns` nanoseconds since a shared epoch.
+///
+/// Every slot is preallocated at construction, so `record_at` never
+/// allocates — the live clients' hot-path rule. Elapsed times past the
+/// last window saturate into it rather than growing the series, and
+/// [`WindowSeries::windows`] returns only the active prefix (through the
+/// highest window touched) so an over-provisioned capacity does not show
+/// up as trailing zero rows.
+#[derive(Clone, Debug)]
+pub struct WindowSeries {
+    window_ns: u64,
+    ops: Vec<u64>,
+    /// Length of the active prefix: highest window index touched + 1.
+    active: usize,
+}
+
+impl WindowSeries {
+    /// Default capacity: 4096 windows (~40 s of run at the 10 ms grain).
+    pub const DEFAULT_WINDOWS: usize = 4096;
+
+    /// Series of `capacity` windows, each `window_ns` long.
+    pub fn new(window_ns: u64, capacity: usize) -> Self {
+        assert!(window_ns > 0 && capacity > 0);
+        WindowSeries { window_ns, ops: vec![0; capacity], active: 0 }
+    }
+
+    /// Window length in nanoseconds.
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns
+    }
+
+    /// Record one completion at `elapsed_ns` since the epoch.
+    #[inline]
+    pub fn record_at(&mut self, elapsed_ns: u64) {
+        self.record_n_at(elapsed_ns, 1);
+    }
+
+    /// Record `n` completions at `elapsed_ns` since the epoch.
+    #[inline]
+    pub fn record_n_at(&mut self, elapsed_ns: u64, n: u64) {
+        let idx = ((elapsed_ns / self.window_ns) as usize).min(self.ops.len() - 1);
+        self.ops[idx] += n;
+        if idx + 1 > self.active {
+            self.active = idx + 1;
+        }
+    }
+
+    /// Per-window completion counts, trimmed to the active prefix.
+    pub fn windows(&self) -> &[u64] {
+        &self.ops[..self.active]
+    }
+
+    /// Total completions across every window.
+    pub fn total(&self) -> u64 {
+        self.ops[..self.active].iter().sum()
+    }
+
+    /// Merge another series (same window length and epoch) into this one.
+    pub fn merge(&mut self, other: &WindowSeries) {
+        assert_eq!(self.window_ns, other.window_ns, "window grain mismatch");
+        for (i, &n) in other.ops[..other.active].iter().enumerate() {
+            let idx = i.min(self.ops.len() - 1);
+            self.ops[idx] += n;
+            if idx + 1 > self.active {
+                self.active = idx + 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,5 +367,81 @@ mod tests {
         let q = h.quantile(0.5);
         let rel = (q as f64 - v as f64).abs() / v as f64;
         assert!(rel < 0.04, "rel err {rel}");
+    }
+
+    #[test]
+    fn histogram_p999_tracks_tail() {
+        let mut h = Histogram::new();
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(1_000_000); // 1% outlier: above the p999 rank
+        let p999 = h.p999();
+        assert!(p999 >= 900_000, "p999={p999} should sit in the tail");
+        assert!(h.p50() <= 110, "p50={} should stay in the body", h.p50());
+    }
+
+    #[test]
+    fn histogram_saturates_at_top_bucket() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX); // must not panic or index out of bounds
+        h.record(u64::MAX - 1);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        // quantile clamps to the observed range even for saturated values
+        assert!(h.quantile(1.0) <= u64::MAX);
+        assert!(h.quantile(0.5) >= u64::MAX - 1);
+    }
+
+    #[test]
+    fn histogram_empty_quantiles_do_not_panic() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.999), 0);
+        assert_eq!(h.p999(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn histogram_merge_with_empty_preserves_min_max() {
+        let mut a = Histogram::new();
+        a.record(42);
+        a.record(7);
+        let empty = Histogram::new();
+        a.merge(&empty);
+        assert_eq!(a.min(), 7);
+        assert_eq!(a.max(), 42);
+        assert_eq!(a.count(), 2);
+
+        let mut b = Histogram::new();
+        b.merge(&a); // merging into an empty histogram adopts the range
+        assert_eq!(b.min(), 7);
+        assert_eq!(b.max(), 42);
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn window_series_buckets_and_merges() {
+        let mut a = WindowSeries::new(10_000_000, 16); // 10 ms windows
+        a.record_at(0);
+        a.record_at(9_999_999); // still window 0
+        a.record_at(10_000_000); // window 1
+        a.record_n_at(25_000_000, 3); // window 2
+        assert_eq!(a.windows(), &[2, 1, 3]);
+        assert_eq!(a.total(), 6);
+
+        let mut b = WindowSeries::new(10_000_000, 16);
+        b.record_at(15_000_000); // window 1
+        a.merge(&b);
+        assert_eq!(a.windows(), &[2, 2, 3]);
+    }
+
+    #[test]
+    fn window_series_saturates_past_capacity() {
+        let mut s = WindowSeries::new(1_000, 4);
+        s.record_at(1_000_000); // far past the last window: saturate, no growth
+        assert_eq!(s.windows().len(), 4);
+        assert_eq!(s.windows()[3], 1);
+        assert_eq!(s.total(), 1);
     }
 }

@@ -254,10 +254,26 @@ fn kill_mid_tatp_loses_no_committed_writes() {
     }
     assert!(compared > 100, "the sweep must compare a real population ({compared})");
 
+    // PR 8: the instrumentation rode the whole drill. Every attempted
+    // transaction entered execute-lock, every commit crossed the
+    // commit+replicate volley, and the epoch-synced series counted
+    // exactly the commits — so the fenced window reads as a dip, never
+    // as missing data.
+    let commits = commits_a + commits_b + commits_c + 1; // + the probe
+    let lat = client.latency();
+    assert!(lat.tx_phase[0].count() >= commits, "execute_lock must cover every attempt");
+    assert!(lat.tx_phase[2].count() >= commits, "commit_replicate must cover every commit");
+    assert!(lat.tx_phase[2].p999() >= lat.tx_phase[2].p50(), "phase quantiles inverted");
+    assert_eq!(client.series().total(), commits, "throughput series must count the commits");
+    assert!(!client.series().windows().is_empty(), "the drill spans at least one window");
+
     // The failover window is visible in the per-class tallies: fenced
     // aborts concentrated in a write class, reported in the bench JSON
     // shape.
     let mut served = c.shutdown();
+    // Every shard reactor returned its gauges alongside the counters.
+    assert_eq!(served.gauges.len(), served.per_lane.len());
+    assert!(served.total_drains() > 0, "reactor gauges must have sampled the drill");
     served.record_aborts(&client.abort_counts());
     for (class, counts) in &tallies {
         served.record_class_aborts(class, counts);

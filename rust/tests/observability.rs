@@ -1,0 +1,153 @@
+//! Live tests for the PR 8 observability layer: per-kind latency
+//! histograms filled by batch lookups, per-phase transaction histograms
+//! that account for every attempted transaction, the epoch-synced
+//! windowed throughput series, and the per-reactor lane gauges the
+//! shutdown report carries.
+
+use std::time::Instant;
+
+use storm::cluster::report::KIND_LABELS;
+use storm::dataplane::live::{LiveCluster, SERIES_WINDOW_NS};
+use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome, PHASE_LABELS};
+use storm::ds::api::ObjectId;
+use storm::ds::btree::BTreeConfig;
+use storm::ds::catalog::{CatalogConfig, ObjectConfig};
+use storm::ds::hopscotch::HopscotchConfig;
+use storm::ds::mica::MicaConfig;
+
+const MICA: ObjectId = ObjectId(0);
+const TREE: ObjectId = ObjectId(1);
+const HOP: ObjectId = ObjectId(2);
+const KEYS: u64 = 64;
+const VALUE_LEN: u32 = 32;
+
+/// One object of each backend kind on the same cluster, so a single
+/// interleaved batch exercises all three per-kind histogram rows.
+fn mixed_catalog() -> CatalogConfig {
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(MicaConfig {
+            buckets: 1 << 8,
+            width: 2,
+            value_len: VALUE_LEN,
+            store_values: true,
+        }),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 1 << 8 }),
+        ObjectConfig::Hopscotch(HopscotchConfig {
+            slots: (KEYS * 4).next_power_of_two(),
+            h: 8,
+            item_size: 128,
+        }),
+    ])
+}
+
+#[test]
+fn mixed_lookups_fill_every_per_kind_histogram() {
+    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_obj(obj, 1..=KEYS, |k| stamped_value(obj, k, VALUE_LEN));
+    }
+    let mut client = c.client(0, None);
+    let items: Vec<(ObjectId, u64)> =
+        (1..=KEYS).flat_map(|k| [(MICA, k), (TREE, k), (HOP, k)]).collect();
+    let res = client.lookup_batch_items(&items);
+    assert!(res.iter().all(|r| r.found));
+
+    let lat = client.latency();
+    for (k, label) in KIND_LABELS.iter().enumerate() {
+        assert!(lat.lookup[k].count() > 0, "lookup histogram for {label} stayed empty");
+        assert!(lat.read[k].count() > 0, "read histogram for {label} stayed empty");
+        assert!(lat.lookup[k].max() >= lat.lookup[k].p50(), "{label} quantiles inverted");
+    }
+    // Every item of the batch lands exactly one lookup sample, and the
+    // throughput series counted the same completions.
+    let lookups: u64 = (0..KIND_LABELS.len()).map(|k| lat.lookup[k].count()).sum();
+    assert_eq!(lookups, items.len() as u64, "one lookup sample per batch item");
+    assert_eq!(client.series().total(), items.len() as u64, "series total != completions");
+    assert!(!client.series().windows().is_empty(), "series never opened a window");
+    // No transactions ran, so the phase histograms must stay empty.
+    assert!(lat.tx_phase.iter().all(|h| h.count() == 0));
+    c.shutdown();
+}
+
+#[test]
+fn tx_phase_histograms_account_for_every_transaction() {
+    let t0 = Instant::now();
+    let c = LiveCluster::start_catalog(3, mixed_catalog());
+    for obj in [MICA, TREE] {
+        c.load_obj(obj, 1..=KEYS, |k| stamped_value(obj, k, VALUE_LEN));
+    }
+    let mut client = c.client(0, None);
+    // Disjoint read+write transactions: every one commits, and every one
+    // must traverse execute-lock → validate → commit+replicate.
+    let txs: Vec<_> = (1..=KEYS)
+        .map(|k| {
+            (
+                vec![TxItem::read(TREE, k)],
+                vec![TxItem::update(MICA, k).with_value(stamped_value(MICA, k, VALUE_LEN))],
+            )
+        })
+        .collect();
+    let attempted = txs.len() as u64;
+    let outs = client.run_tx_batch(txs);
+    let commits = outs.iter().filter(|o| matches!(o, TxOutcome::Committed { .. })).count() as u64;
+    assert_eq!(commits, attempted, "disjoint txs must all commit");
+
+    let lat = client.latency();
+    // execute_lock is entered by every attempted transaction exactly once.
+    assert_eq!(lat.tx_phase[0].count(), attempted, "execute_lock != attempted txs");
+    // Every commit passes through validate and commit+replicate; nothing
+    // aborted, so the unlock volley histogram stays empty.
+    assert_eq!(lat.tx_phase[1].count(), commits, "validate != commits");
+    assert_eq!(lat.tx_phase[2].count(), commits, "commit_replicate != commits");
+    assert_eq!(lat.tx_phase[3].count(), 0, "clean run must not record unlock volleys");
+    let samples: u64 = lat.tx_phase.iter().map(|h| h.count()).sum();
+    assert!(samples >= attempted + commits, "phase samples under-count the run");
+    assert_eq!(lat.tx_phase.len(), PHASE_LABELS.len());
+
+    // The commit series is epoch-synced: it counted exactly the commits,
+    // and its window count is bounded by the wall clock since the cluster
+    // epoch (which started after `t0`).
+    let series = client.series();
+    assert_eq!(series.total(), commits, "series must count commits");
+    let elapsed_windows = t0.elapsed().as_nanos() as u64 / SERIES_WINDOW_NS + 1;
+    let got = series.windows().len() as u64;
+    assert!(got >= 1, "at least the first window must be active");
+    assert!(got <= elapsed_windows, "window count {got} exceeds wall clock {elapsed_windows}");
+    c.shutdown();
+}
+
+#[test]
+fn reactor_gauges_ride_the_shutdown_report() {
+    let nodes = 3u32;
+    let c = LiveCluster::start_catalog(nodes, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_obj(obj, 1..=KEYS, |k| stamped_value(obj, k, VALUE_LEN));
+    }
+    let mut client = c.client(0, None);
+    let items: Vec<(ObjectId, u64)> =
+        (1..=KEYS).flat_map(|k| [(MICA, k), (TREE, k), (HOP, k)]).collect();
+    for _ in 0..4 {
+        assert!(client.lookup_batch_items(&items).iter().all(|r| r.found));
+    }
+    let served = c.shutdown();
+    // One gauge row per node, shaped exactly like the per-lane counters.
+    assert_eq!(served.gauges.len(), served.per_lane.len());
+    for (g, p) in served.gauges.iter().zip(&served.per_lane) {
+        assert_eq!(g.len(), p.len(), "gauge lanes != reactor lanes");
+    }
+    assert!(served.total_drains() > 0, "no reactor ever sampled a burst");
+    // Every lane that served requests drained at least one burst, and a
+    // drained burst holds at least one request by construction.
+    for (node, (g_row, p_row)) in served.gauges.iter().zip(&served.per_lane).enumerate() {
+        for (lane, (g, &p)) in g_row.iter().zip(p_row).enumerate() {
+            if p > 0 {
+                assert!(g.drains > 0, "node {node} lane {lane} served {p} but never drained");
+                assert!(g.depth_sum >= g.drains, "burst depth below one per drain");
+                assert!(g.depth_max >= 1, "drained lane with zero max depth");
+                assert!(g.mean_depth() >= 1.0);
+            }
+        }
+    }
+    // The idle reactors between client volleys parked at least once.
+    assert!(served.total_parks() > 0, "reactors never parked while idle");
+}

@@ -133,6 +133,18 @@ fn mixed_tx_spans_mica_and_btree_live() {
     let odds: Vec<u64> = (1..=64).filter(|k| k % 2 == 1).collect();
     let mica_res = other.lookup_batch_obj(MICA, &odds);
     assert!(mica_res.iter().all(|r| r.found && r.version == 2 && !r.locked));
+    // PR 8: the mixed run filled both backends' read histograms (bucket
+    // reads and leaf reads attribute to their own kind), every phase up
+    // to commit+replicate has samples, and the series counted the 200
+    // warm-up lookups plus the 64 commits.
+    let lat = client.latency();
+    assert!(lat.read[0].count() > 0, "mica read histogram stayed empty");
+    assert!(lat.read[1].count() > 0, "btree read histogram stayed empty");
+    assert!(lat.lookup[1].count() >= 200, "tree warm-up lookups unrecorded");
+    for phase in 0..3 {
+        assert!(lat.tx_phase[phase].count() >= 64, "tx phase {phase} under-counts the run");
+    }
+    assert_eq!(client.series().total(), 200 + 64, "series != lookups + commits");
     c.shutdown();
 }
 

@@ -7,9 +7,13 @@
 # counters and the adaptive per-client transaction windows, the
 # mixed-backend per-kind lookup rows ("mixed_backend": MICA bucket reads
 # vs B-link cached-route leaf reads (cold + warm) vs FaRM-style 1 KB
-# hopscotch neighborhood reads, plus the interleaved all-kinds row), and
-# the "scaling" matrix (1→8 shard-reactor threads per node × 1→4 client
-# threads — the shared-nothing scaling curve).
+# hopscotch neighborhood reads, plus the interleaved all-kinds row), the
+# "scaling" matrix (1→8 shard-reactor threads per node × 1→4 client
+# threads — the shared-nothing scaling curve), and the PR 8 observability
+# rows: "latency" (p50/p99/p999/mean/max per opcode × backend kind × tx
+# phase, merged across the runs) and "throughput_series" (epoch-synced
+# 10 ms windowed commit counts for the native TATP run and the failover
+# drill). scripts/check_bench_schema.sh validates the shape in CI.
 #
 # Usage: scripts/bench.sh [output.json]
 #        scripts/bench.sh scaling [output.json]   # scaling matrix only

@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# Bench-artifact schema gate (PR 8): BENCH_live.json is the perf
+# trajectory later PRs diff against, so its shape is a contract. This
+# validates the observability rows the full artifact must carry:
+#
+#   scaling            — the shared-nothing thread matrix (PR 7)
+#   latency            — p50/p99/p999 rows keyed op × kind × phase
+#   throughput_series  — epoch-synced windowed commit counts
+#   abort_reasons      — per-reason tallies inside the catalog rows
+#
+# Usage: scripts/check_bench_schema.sh [BENCH_live.json]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+artifact="${1:-BENCH_live.json}"
+if [[ ! -f "$artifact" ]]; then
+  echo "bench schema gate: $artifact not found (run scripts/bench.sh first)" >&2
+  exit 1
+fi
+
+python3 - "$artifact" <<'PY'
+import json
+import sys
+
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+
+errors = []
+
+
+def need(cond, msg):
+    if not cond:
+        errors.append(msg)
+
+
+for key in ("scaling", "latency", "throughput_series"):
+    need(key in doc, f"missing top-level key: {key}")
+
+# scaling: non-empty list of thread-matrix points.
+scaling = doc.get("scaling", [])
+need(isinstance(scaling, list) and scaling, "scaling must be a non-empty list")
+for row in scaling if isinstance(scaling, list) else []:
+    for k in ("server_threads", "client_threads", "committed_tx_per_s"):
+        need(k in row, f"scaling row missing {k}: {row}")
+
+# latency: op × kind × phase rows with full quantile columns.
+latency = doc.get("latency", [])
+need(isinstance(latency, list) and latency, "latency must be a non-empty list")
+cols = ("op", "kind", "phase", "count", "p50_ns", "p99_ns", "p999_ns", "mean_ns", "max_ns")
+ops = set()
+for row in latency if isinstance(latency, list) else []:
+    for k in cols:
+        need(k in row, f"latency row missing {k}: {row}")
+    ops.add(row.get("op"))
+for op in ("read", "lookup", "tx_rpc"):
+    need(op in ops, f"latency rows missing opcode {op}")
+sampled = [r for r in latency if isinstance(r, dict) and r.get("count", 0) > 0]
+need(sampled, "every latency row is empty — instrumentation never ran")
+for row in sampled:
+    need(
+        row["p50_ns"] <= row["p99_ns"] <= row["p999_ns"] <= row["max_ns"],
+        f"latency quantiles out of order: {row}",
+    )
+
+# throughput_series: window width plus at least the native + failover runs.
+series = doc.get("throughput_series", {})
+need(isinstance(series, dict), "throughput_series must be an object")
+if isinstance(series, dict):
+    need(series.get("window_ms", 0) > 0, "throughput_series.window_ms must be > 0")
+    for run in ("tatp_native", "failover"):
+        rows = series.get(run)
+        need(isinstance(rows, list) and rows, f"throughput_series.{run} must be non-empty")
+        for point in rows or []:
+            for k in ("t_ms", "ops"):
+                need(k in point, f"throughput_series.{run} point missing {k}: {point}")
+        total = sum(p.get("ops", 0) for p in rows or [])
+        need(total > 0, f"throughput_series.{run} counted zero commits")
+
+# abort_reasons: each catalog-native row carries the per-reason tallies.
+for run in ("tatp_native", "tatp_failover"):
+    row = doc.get(run, {})
+    need(isinstance(row, dict) and "abort_reasons" in row, f"{run} missing abort_reasons")
+
+if errors:
+    print(f"bench schema gate FAILED for {path}:", file=sys.stderr)
+    for e in errors:
+        print(f"  - {e}", file=sys.stderr)
+    sys.exit(1)
+
+print(f"bench schema gate: OK ({path}: "
+      f"{len(scaling)} scaling rows, {len(latency)} latency rows, "
+      f"{len(sampled)} with samples)")
+PY
