@@ -22,6 +22,12 @@
 //! commit counts for the native TATP run and the failover drill — the
 //! fenced window shows up as a dip in the failover series).
 //!
+//! PR 9 adds `connection_scaling`: the simulator-backed adaptive-transport
+//! sweep (per-machine Mops vs the RC connection working set over three
+//! decades of QP counts × two NIC generations × {static-RC, static-UD,
+//! adaptive RC→UD, RC qp_share ∈ {2,4}}), with the NIC-cache and
+//! transport-controller telemetry per row.
+//!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
 //! `scripts/bench.sh`; `scripts/check_bench_schema.sh` validates the
@@ -30,6 +36,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use storm::bench::{connection_scaling, BenchOpts, ConnScalePoint};
 use storm::cluster::report::throughput_series_json;
 use storm::cluster::{AbortCounts, ClientLatency, LiveServed};
 use storm::dataplane::live::{
@@ -630,6 +637,13 @@ fn scaling_json(points: &[ScalePoint]) -> String {
     format!("[\n{}\n  ]", rows.join(",\n"))
 }
 
+/// The `"connection_scaling"` JSON array: the simulator-backed adaptive
+/// transport sweep (PR 9 tentpole bench).
+fn connection_scaling_json(points: &[ConnScalePoint]) -> String {
+    let rows: Vec<String> = points.iter().map(|p| format!("    {}", p.json())).collect();
+    format!("[\n{}\n  ]", rows.join(",\n"))
+}
+
 // --- mixed-backend lookups (heterogeneous catalog, PR 4) -----------------
 
 const MIXED_KEYS: u64 = 6_000;
@@ -1134,6 +1148,11 @@ fn main() {
         throughput_series_json(&failover.series),
     ));
     json.push_str(&format!("  \"scaling\": {},\n", scaling_json(&scale_points)));
+    let conn_points = connection_scaling(BenchOpts { quick: true, threads: 4 });
+    json.push_str(&format!(
+        "  \"connection_scaling\": {},\n",
+        connection_scaling_json(&conn_points)
+    ));
     json.push_str(&format!(
         concat!(
             "  \"mixed_backend\": {{\"keys\": {k}, ",

@@ -159,6 +159,132 @@ pub fn fig7(opts: BenchOpts) -> Vec<RunReport> {
     out
 }
 
+/// One point of the connection-scaling sweep: a transport variant at one
+/// active-QP working-set size on one NIC generation.
+#[derive(Clone, Debug)]
+pub struct ConnScalePoint {
+    /// NIC generation label (`cx4` / `cx5`).
+    pub nic: &'static str,
+    /// Transport variant (`static_rc` / `static_ud` / `adaptive` /
+    /// `rc_qp_share`).
+    pub variant: &'static str,
+    /// Threads multiplexed per RC connection (1 for unshared variants).
+    pub qp_share: u32,
+    /// Cluster size the clients fan out to.
+    pub fanout_nodes: u32,
+    /// Fig. 7 connection multiplier at this point.
+    pub conn_multiplier: u32,
+    /// RC connections a client machine holds (the swept axis).
+    pub conns_per_machine: u64,
+    /// The run.
+    pub report: RunReport,
+}
+
+impl ConnScalePoint {
+    /// JSON row for `BENCH_live.json`'s `connection_scaling` array.
+    pub fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"nic\": \"{}\", \"variant\": \"{}\", \"qp_share\": {}, ",
+                "\"fanout_nodes\": {}, \"conn_multiplier\": {}, ",
+                "\"conns_per_machine\": {}, \"per_machine_mops\": {:.4}, ",
+                "\"nic_hit_rate\": {:.4}, \"active_qps\": {}, ",
+                "\"nic_evictions\": {}, \"demotions\": {}, \"promotions\": {}, ",
+                "\"ud_destinations\": {}}}"
+            ),
+            self.nic,
+            self.variant,
+            self.qp_share,
+            self.fanout_nodes,
+            self.conn_multiplier,
+            self.conns_per_machine,
+            self.report.per_machine_mops,
+            self.report.nic_hit_rate,
+            self.report.active_qps,
+            self.report.nic_evictions,
+            self.report.demotions,
+            self.report.promotions,
+            self.report.ud_destinations,
+        )
+    }
+}
+
+/// The connection-scaling sweep (the adaptive-transport tentpole bench):
+/// per-machine throughput vs the RC connection working set, swept over
+/// three-plus decades of active-QP counts (rack scale → emulated hundreds
+/// of nodes, Fig. 7 style: `fanout_nodes` × `conn_multiplier`), across
+/// two NIC generations and four transport variants — static RC (the
+/// seed), static UD (the eRPC position), the adaptive RC→UD controller,
+/// and RC with QP multiplexing (`qp_share` ∈ {2, 4}).
+pub fn connection_scaling(opts: BenchOpts) -> Vec<ConnScalePoint> {
+    use crate::nic::NicGen;
+    use crate::transport::topology::Topology;
+    use crate::transport::TransportPolicy;
+
+    // The swept axis: (cluster fan-out, Fig. 7 multiplier). With 4 client
+    // threads the unshared RC connection count per machine runs 24 →
+    // 32640 — a bit over three decades.
+    const POINTS: [(u32, u32); 5] = [(4, 1), (16, 2), (64, 4), (256, 8), (256, 16)];
+    const VARIANTS: [(&str, TransportPolicy, u32); 5] = [
+        ("static_rc", TransportPolicy::StaticRc, 1),
+        ("static_ud", TransportPolicy::StaticUd, 1),
+        ("adaptive", TransportPolicy::Adaptive, 1),
+        ("rc_qp_share", TransportPolicy::StaticRc, 2),
+        ("rc_qp_share", TransportPolicy::StaticRc, 4),
+    ];
+    let mut out = Vec::new();
+    for (gen, nic_name) in [(NicGen::Cx4, "cx4"), (NicGen::Cx5, "cx5")] {
+        for (variant, policy, share) in VARIANTS {
+            for (fanout, mult) in POINTS {
+                let mut o = opts;
+                o.threads = 4;
+                let mut cfg = storm_cfg(StormMode::Perfect, 2, &o);
+                cfg.nic = gen;
+                cfg.fanout_nodes = fanout;
+                cfg.conn_multiplier = mult;
+                cfg.transport = policy;
+                cfg.qp_share = share;
+                // Small per-node tables and short windows: the sweep's
+                // cost is dominated by cluster construction at 256 nodes.
+                cfg.keys_per_node = 1_000;
+                cfg.warmup = 100 * MICRO;
+                cfg.measure = 400 * MICRO;
+                let topo = Topology {
+                    nodes: cfg.total_nodes(),
+                    threads: cfg.threads,
+                    conn_multiplier: mult,
+                    qp_share: share,
+                };
+                let report = World::new(cfg).run();
+                out.push(ConnScalePoint {
+                    nic: nic_name,
+                    variant,
+                    qp_share: share,
+                    fanout_nodes: fanout,
+                    conn_multiplier: mult,
+                    conns_per_machine: topo.rc_conns_per_machine(),
+                    report,
+                });
+            }
+        }
+    }
+    println!("# connection scaling: throughput vs RC connection working set");
+    for p in &out {
+        println!(
+            "conn_scale nic={} variant={:<11} share={} conns={:>6}  {:>7.3} Mops  hit {:.3}  demote {}  promote {}",
+            p.nic,
+            p.variant,
+            p.qp_share,
+            p.conns_per_machine,
+            p.report.per_machine_mops,
+            p.report.nic_hit_rate,
+            p.report.demotions,
+            p.report.promotions,
+        );
+    }
+    out
+}
+
 /// Table 5: unloaded round-trip latencies on CX4 IB and CX4 RoCE.
 pub fn table5(opts: BenchOpts) -> Vec<RunReport> {
     let mut out = Vec::new();

@@ -11,5 +11,6 @@ pub mod figures;
 
 pub use fig1::{fig1, breakeven, Fig1Point};
 pub use figures::{
-    ablations, fig4, fig5, fig6, fig7, physseg, table5, BenchOpts,
+    ablations, connection_scaling, fig4, fig5, fig6, fig7, physseg, table5, BenchOpts,
+    ConnScalePoint,
 };

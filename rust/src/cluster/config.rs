@@ -9,6 +9,7 @@ use crate::fabric::FabricKind;
 use crate::mem::PageSize;
 use crate::nic::NicGen;
 use crate::sim::{Nanos, MICRO, MILLI};
+use crate::transport::TransportPolicy;
 
 /// Which dataplane design is under test.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -102,6 +103,11 @@ pub struct HostParams {
     pub farm_qp_lock: u32,
     /// FaRM ablation: threads per shared QP group.
     pub farm_qp_group: u32,
+    /// QP multiplexing: serialization cost per post on a shared RC send
+    /// queue (uncontended CAS + doorbell-record update). Cheaper than
+    /// `farm_qp_lock` because Storm's sharing groups sibling threads on
+    /// the same core complex.
+    pub qp_share_lock: u32,
     /// UD receive pool depth per machine (NIC RQ limit).
     pub recv_pool_capacity: u32,
     /// UD retransmission timeout.
@@ -126,6 +132,7 @@ impl Default for HostParams {
             lite_kernel_completion: 350,
             farm_qp_lock: 120,
             farm_qp_group: 4,
+            qp_share_lock: 60,
             recv_pool_capacity: 8192,
             rto: 300 * MICRO,
         }
@@ -169,6 +176,27 @@ pub struct SimConfig {
     pub seed: u64,
     /// Fig. 7 emulation: parallel connections + buffers multiplier.
     pub conn_multiplier: u32,
+    /// Rack scale-out: total cluster size including server-only nodes.
+    /// `0` disables fan-out (cluster size is `nodes`). When `> nodes`,
+    /// the first `nodes` machines run clients while all `fanout_nodes`
+    /// serve data, so each client NIC talks to hundreds of destinations
+    /// and RC state pressure materializes without simulating hundreds of
+    /// full client machines.
+    pub fanout_nodes: u32,
+    /// Per-destination transport selection (Storm systems only; the
+    /// baselines keep their hard-wired transports).
+    pub transport: TransportPolicy,
+    /// Threads sharing one RC connection per (pair, channel); 1 = the
+    /// paper's private sibling-pair QPs.
+    pub qp_share: u32,
+    /// Override the NIC SRAM state-cache capacity in bytes (None = the
+    /// generation's default). Used to force state-cache pressure in
+    /// deterministic degradation tests.
+    pub nic_cache_override: Option<u64>,
+    /// Per-object placement: range-partition the TATP CALL_FORWARDING
+    /// table by subscriber id instead of hashing per row (PR 3 follow-up;
+    /// exercises non-uniform routing in the scale-out sweep).
+    pub tatp_cf_range: bool,
     /// Ablation: carry Storm RPCs over two-sided send/recv instead of
     /// `rdma_write_with_imm` (paper §5.2 argues write-imm is superior).
     pub rpc_via_sendrecv: bool,
@@ -208,6 +236,11 @@ impl SimConfig {
             measure: 2 * MILLI,
             seed: 0x5701_2019,
             conn_multiplier: 1,
+            fanout_nodes: 0,
+            transport: TransportPolicy::StaticRc,
+            qp_share: 1,
+            nic_cache_override: None,
+            tatp_cf_range: false,
             rpc_via_sendrecv: false,
             tatp_cf_btree: false,
             replication: 1,
@@ -221,9 +254,15 @@ impl SimConfig {
         (target as u64).max(2).next_power_of_two()
     }
 
-    /// Total keyspace for the KV workload.
+    /// Cluster size including fan-out server-only nodes.
+    pub fn total_nodes(&self) -> u32 {
+        self.nodes.max(self.fanout_nodes)
+    }
+
+    /// Total keyspace for the KV workload (spread over the full cluster,
+    /// including fan-out nodes).
     pub fn total_keys(&self) -> u64 {
-        self.keys_per_node * self.nodes as u64
+        self.keys_per_node * self.total_nodes() as u64
     }
 }
 
@@ -250,5 +289,16 @@ mod tests {
         assert_eq!(cfg.fabric, FabricKind::IbEdr);
         assert_eq!(cfg.nic, NicGen::Cx4);
         assert_eq!(cfg.total_keys(), 16 * 60_000);
+        assert_eq!(cfg.transport, TransportPolicy::StaticRc);
+        assert_eq!(cfg.qp_share, 1);
+    }
+
+    #[test]
+    fn fanout_extends_cluster_and_keyspace() {
+        let mut cfg = SimConfig::new(SystemKind::Storm(StormMode::Perfect), 4);
+        assert_eq!(cfg.total_nodes(), 4);
+        cfg.fanout_nodes = 64;
+        assert_eq!(cfg.total_nodes(), 64);
+        assert_eq!(cfg.total_keys(), 64 * cfg.keys_per_node);
     }
 }

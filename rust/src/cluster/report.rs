@@ -418,6 +418,17 @@ pub struct RunReport {
     pub ud_drops: u64,
     /// UD retransmissions.
     pub retransmits: u64,
+    /// Peak active-QP estimate across machines (NIC two-epoch tracker).
+    pub active_qps: u32,
+    /// NIC state-cache capacity evictions, summed across machines.
+    pub nic_evictions: u64,
+    /// Adaptive transport: RC→UD demotions, summed across client nodes.
+    pub demotions: u64,
+    /// Adaptive transport: UD→RC promotions, summed across client nodes.
+    pub promotions: u64,
+    /// Destinations still served over UD at the end of the run, summed
+    /// across client nodes.
+    pub ud_destinations: u32,
     /// Events processed (simulator perf accounting).
     pub events: u64,
     /// Wall-clock the simulation took (ns, host time).

@@ -628,6 +628,32 @@ pub struct PlacementRef {
     pub offset: u64,
 }
 
+/// Per-object node-placement policy (which node owns a key's primary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Hash-partition per row (`owner_of` — the default everywhere).
+    Hash,
+    /// Range-partition: `node = (key / span) % nodes`. All keys sharing a
+    /// `key / span` quotient land on one node — e.g. with CALL_FORWARDING's
+    /// 12-keys-per-subscriber encoding, `span = 12 * subscribers_per_node`
+    /// co-locates each subscriber's forwarding rows and walks the cluster
+    /// in contiguous subscriber ranges.
+    Range {
+        /// Keys per contiguous range assigned to one node.
+        span: u64,
+    },
+}
+
+impl PlacementPolicy {
+    /// Owner node of `key` under this policy.
+    pub fn node_of(&self, key: u64, nodes: u32) -> u32 {
+        match *self {
+            PlacementPolicy::Hash => owner_of(key, nodes),
+            PlacementPolicy::Range { span } => ((key / span.max(1)) % nodes as u64) as u32,
+        }
+    }
+}
+
 /// Cluster-wide placement map: routes `(ObjectId, key)` to
 /// `(node, shard, packed offset)` with pure arithmetic — no per-key
 /// state, so every client and server derives identical routing.
@@ -637,6 +663,7 @@ pub struct Placement {
     shards: u32,
     replication: u32,
     geo: Vec<TableGeo>,
+    policies: Vec<PlacementPolicy>,
     region_len: u64,
 }
 
@@ -695,7 +722,22 @@ impl Placement {
             })
             .collect();
         let replication = cfg.replication.clamp(1, nodes);
-        Placement { nodes, shards, replication, geo, region_len }
+        let policies = vec![PlacementPolicy::Hash; cfg.objects.len()];
+        Placement { nodes, shards, replication, geo, policies, region_len }
+    }
+
+    /// Override one object's node-placement policy (builder style). The
+    /// offset/shard arithmetic is untouched — only which node owns each
+    /// key changes — so clients and servers that share the policy table
+    /// still derive identical routing.
+    pub fn with_policy(mut self, obj: ObjectId, policy: PlacementPolicy) -> Self {
+        self.policies[obj.0 as usize] = policy;
+        self
+    }
+
+    /// The node-placement policy of `obj`.
+    pub fn policy(&self, obj: ObjectId) -> PlacementPolicy {
+        self.policies[obj.0 as usize]
     }
 
     /// Nodes in the cluster.
@@ -729,8 +771,15 @@ impl Placement {
     }
 
     /// Owner node of a key (hash-partitioned, shared by all objects).
+    /// Objects with a non-hash [`PlacementPolicy`] must route through
+    /// [`Placement::node_of_obj`] instead.
     pub fn node_of(&self, key: u64) -> u32 {
         owner_of(key, self.nodes)
+    }
+
+    /// Owner node of `(obj, key)` under the object's placement policy.
+    pub fn node_of_obj(&self, obj: ObjectId, key: u64) -> u32 {
+        self.policies[obj.0 as usize].node_of(key, self.nodes)
     }
 
     /// Replica set of `(obj, key)`: the hash owner (primary) followed by
@@ -744,7 +793,7 @@ impl Placement {
     /// per-object factor stays a local change.
     pub fn replicas(&self, obj: ObjectId, key: u64) -> Vec<u32> {
         debug_assert!((obj.0 as usize) < self.geo.len(), "unknown object {obj:?}");
-        let primary = self.node_of(key);
+        let primary = self.node_of_obj(obj, key);
         (0..self.replication).map(|i| (primary + i) % self.nodes).collect()
     }
 
@@ -773,7 +822,7 @@ impl Placement {
     /// arithmetic).
     pub fn place(&self, obj: ObjectId, key: u64) -> PlacementRef {
         let g = self.geo(obj);
-        let node = self.node_of(key);
+        let node = self.node_of_obj(obj, key);
         match g.kind {
             ObjectKind::Mica => {
                 let bucket = bucket_of(key, g.mask);
@@ -877,6 +926,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn range_policy_partitions_by_key_range() {
+        let cat = CatalogConfig::new(vec![cfg(64, 2), cfg(64, 2)]);
+        let place =
+            Placement::new(&cat, 4, 4).with_policy(ObjectId(1), PlacementPolicy::Range { span: 12 });
+        for key in 0..480u64 {
+            // Object 0 keeps hash placement.
+            assert_eq!(place.place(ObjectId(0), key).node, place.node_of(key));
+            // Object 1: contiguous runs of 12 keys share a node, walking
+            // the ring.
+            let r = place.place(ObjectId(1), key);
+            assert_eq!(r.node, ((key / 12) % 4) as u32);
+            assert_eq!(r.node, place.node_of_obj(ObjectId(1), key));
+            // Replica chains start at the policy owner.
+            assert_eq!(place.replicas(ObjectId(1), key)[0], r.node);
+            // Offset/shard arithmetic is untouched by the policy.
+            assert_eq!(r.offset, place.place(ObjectId(1), key).offset);
+            assert_eq!(r.shard, place.shard_of(ObjectId(1), key));
+        }
+        // All 12 CALL_FORWARDING-style rows of one "subscriber" co-locate.
+        let s = 17u64;
+        let nodes: std::collections::HashSet<u32> =
+            (0..12).map(|i| place.place(ObjectId(1), s * 12 + i).node).collect();
+        assert_eq!(nodes.len(), 1);
     }
 
     #[test]

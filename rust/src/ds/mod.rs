@@ -48,6 +48,7 @@ pub use api::{
 pub use btree::{BTreeConfig, RemoteBTree};
 pub use catalog::{
     buckets_for, Backend, Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement,
+    PlacementPolicy,
 };
 pub use hopscotch::{HopscotchConfig, HopscotchTable};
 pub use mica::{BucketView, MicaClient, MicaConfig, MicaTable};

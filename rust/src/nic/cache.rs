@@ -78,6 +78,7 @@ pub struct NicCache {
     tail: u32, // least recent
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl NicCache {
@@ -93,6 +94,7 @@ impl NicCache {
             tail: NIL,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -138,6 +140,7 @@ impl NicCache {
         self.map.remove(&node.key.pack());
         self.used -= node.size as u64;
         self.free.push(idx);
+        self.evictions += 1;
     }
 
     fn alloc_node(&mut self, key: EntryKey, size: u32) -> u32 {
@@ -211,6 +214,12 @@ impl NicCache {
         self.misses
     }
 
+    /// Capacity evictions since creation/reset — the direct signal that
+    /// the transport-state working set has outgrown the SRAM.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
     /// Hit rate in `[0, 1]` (1.0 when unused).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
@@ -226,6 +235,7 @@ impl NicCache {
     pub fn reset_counters(&mut self) {
         self.hits = 0;
         self.misses = 0;
+        self.evictions = 0;
     }
 }
 
@@ -305,6 +315,17 @@ mod tests {
         assert!(!c.access(EntryKey::Mpt(7), 64));
         assert!(!c.access(EntryKey::Wqe(7), 64));
         assert_eq!(c.entries(), 4);
+    }
+
+    #[test]
+    fn evictions_counted() {
+        let mut c = NicCache::new(64 * 4);
+        for i in 0..10u64 {
+            c.access(EntryKey::Qp(i), 64);
+        }
+        assert_eq!(c.evictions(), 6);
+        c.reset_counters();
+        assert_eq!(c.evictions(), 0);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Adaptive per-destination transport selection (RC → UD degradation).
+//!
+//! The paper's Fig. 7 shows one-sided RC holding up to thousands of
+//! connections — but past the NIC's SRAM state cache the per-QP context
+//! starts thrashing and throughput collapses toward the Fig. 1 cliff. The
+//! classic escape hatch is the eRPC/FaSST position: drop to UD datagrams,
+//! whose connection state is O(threads) instead of O(cluster), and pay for
+//! it in CPU (receive-pool reposts, software congestion control and
+//! retransmission, per-frame header handling).
+//!
+//! `Transport` makes that trade *per destination* at runtime instead of
+//! globally at configuration time. Each client node runs one controller
+//! that watches the modeled NIC cache (cumulative hit/miss counters plus a
+//! per-packet "cold" signal: the send missed its QP context or hot send
+//! slot) in fixed 50 µs epochs:
+//!
+//! * **Demote** — when an epoch's cache hit-rate falls below [`LOW_HIT`]
+//!   and a destination's sends were mostly cold for [`HYSTERESIS_EPOCHS`]
+//!   consecutive epochs (with at least [`MIN_SAMPLES`] sends accumulated
+//!   over the streak), its RC connections are abandoned and traffic is
+//!   redirected to the thread's UD QP. Coldest destinations go first, at
+//!   most [`MAX_DEMOTIONS_PER_EPOCH`] per epoch, so one bad epoch cannot
+//!   flip the whole fan-out.
+//! * **Promote** — when the cache re-warms (hit-rate above [`HIGH_HIT`]
+//!   for [`HYSTERESIS_EPOCHS`] epochs), the busiest demoted destination is
+//!   returned to RC, one per epoch. Demotion itself relieves the cache, so
+//!   the controller often settles *between* the two thresholds; after
+//!   [`PROBE_EPOCHS`] of stable (≥ [`LOW_HIT`]) behaviour it promotes one
+//!   destination as a probe — the only way a re-warmed cache is ever
+//!   rediscovered from inside the hysteresis band.
+//! * **No flapping** — every transition starts a per-destination cooldown
+//!   that doubles with each subsequent transition (exponential backoff,
+//!   capped), so the total transition count is bounded regardless of how
+//!   adversarial the load is.
+//!
+//! The controller is deliberately independent of the NIC model types: the
+//! world feeds it plain counters, and tests can drive it synthetically.
+
+/// Transport selection policy for a simulation run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportPolicy {
+    /// Always RC (the seed behaviour for Storm-family systems).
+    StaticRc,
+    /// Always UD (every remote op pays the datagram CPU costs).
+    StaticUd,
+    /// Per-destination RC with degradation to UD under NIC-cache pressure.
+    Adaptive,
+}
+
+/// The path a particular send should take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathChoice {
+    /// Reliable-connected QP (one-sided reads + RC sends).
+    Rc,
+    /// Unreliable datagram QP (software CC + retransmission + recv pool).
+    Ud,
+}
+
+/// Controller epoch length. Matches the NIC model's active-QP window so
+/// hit-rate deltas line up with what `Nic::active_qps` reports.
+pub const EPOCH_NS: u64 = 50_000;
+/// Epoch hit-rate below which demotion is considered.
+pub const LOW_HIT: f64 = 0.70;
+/// Epoch hit-rate above which promotion is considered.
+pub const HIGH_HIT: f64 = 0.90;
+/// Consecutive qualifying epochs required before a transition.
+pub const HYSTERESIS_EPOCHS: u32 = 2;
+/// Minimum sends accumulated over a destination's current cold streak
+/// before it may be demoted. Accumulating across epochs (rather than
+/// requiring the floor within a single epoch) matters at rack scale: a
+/// 256-way fan-out spreads an epoch's traffic so thin that no single
+/// destination sees many sends, yet the cold evidence is just as real.
+pub const MIN_SAMPLES: u32 = 8;
+/// Fraction of a destination's sends that must be cold in an epoch.
+pub const COLD_RATE: f64 = 0.5;
+/// Cap on demotions per epoch (coldest first).
+pub const MAX_DEMOTIONS_PER_EPOCH: usize = 4;
+/// Cooldown after a transition, in epochs; doubles per transition (capped).
+pub const COOLDOWN_BASE_EPOCHS: u64 = 4;
+/// Consecutive stable (hit-rate ≥ [`LOW_HIT`]) epochs after which one
+/// demoted destination is probed back onto RC even though the cache never
+/// crossed [`HIGH_HIT`]. Probing is what discovers re-warm from inside the
+/// hysteresis band; flapping stays bounded because each transition doubles
+/// the per-destination cooldown.
+pub const PROBE_EPOCHS: u32 = 16;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct DestState {
+    /// Currently demoted to UD?
+    demoted: bool,
+    /// Sends this epoch.
+    sends: u32,
+    /// Cold sends (QP context / send-slot miss) this epoch.
+    cold: u32,
+    /// Consecutive epochs the destination qualified as cold.
+    cold_epochs: u32,
+    /// Sends accumulated over the current cold streak (sample floor).
+    streak_sends: u32,
+    /// Consecutive re-warm epochs (demoted destinations only).
+    warm_epochs: u32,
+    /// Lifetime transitions, drives exponential cooldown.
+    transitions: u32,
+    /// Epoch index before which no further transition is allowed.
+    cooldown_until: u64,
+}
+
+/// Per-client-node adaptive transport controller.
+#[derive(Clone, Debug)]
+pub struct Transport {
+    policy: TransportPolicy,
+    dests: Vec<DestState>,
+    epoch: u64,
+    prev_hits: u64,
+    prev_misses: u64,
+    /// Consecutive epochs with hit-rate ≥ [`LOW_HIT`] (drives probing).
+    stable_epochs: u32,
+    demotions: u64,
+    promotions: u64,
+}
+
+impl Transport {
+    /// Controller for one client node talking to `dests` destinations.
+    pub fn new(policy: TransportPolicy, dests: u32) -> Self {
+        Transport {
+            policy,
+            dests: vec![DestState::default(); dests as usize],
+            epoch: 0,
+            prev_hits: 0,
+            prev_misses: 0,
+            stable_epochs: 0,
+            demotions: 0,
+            promotions: 0,
+        }
+    }
+
+    /// Path for the next send to `dest`.
+    pub fn choose(&self, dest: u32) -> PathChoice {
+        match self.policy {
+            TransportPolicy::StaticRc => PathChoice::Rc,
+            TransportPolicy::StaticUd => PathChoice::Ud,
+            TransportPolicy::Adaptive => {
+                if self.dests[dest as usize].demoted {
+                    PathChoice::Ud
+                } else {
+                    PathChoice::Rc
+                }
+            }
+        }
+    }
+
+    /// Record an outbound request. `cold` means the NIC paid a QP-context
+    /// or hot-slot miss for it; `cache_hits`/`cache_misses` are the NIC
+    /// cache's *cumulative* counters, from which the controller derives
+    /// per-epoch deltas. Rolls the epoch lazily off the packet clock.
+    pub fn on_tx(&mut self, now: u64, dest: u32, cold: bool, cache_hits: u64, cache_misses: u64) {
+        if self.policy != TransportPolicy::Adaptive {
+            return;
+        }
+        let idx = now / EPOCH_NS;
+        if idx > self.epoch {
+            self.roll_epoch(idx, cache_hits, cache_misses);
+        }
+        let d = &mut self.dests[dest as usize];
+        d.sends += 1;
+        if cold {
+            d.cold += 1;
+        }
+    }
+
+    /// Finalize the current epoch against cumulative cache counters and
+    /// apply demotion/promotion decisions. Public so the controller can be
+    /// driven synthetically in tests.
+    pub fn roll_epoch(&mut self, next_epoch: u64, cache_hits: u64, cache_misses: u64) {
+        let dh = cache_hits.saturating_sub(self.prev_hits);
+        let dm = cache_misses.saturating_sub(self.prev_misses);
+        self.prev_hits = cache_hits;
+        self.prev_misses = cache_misses;
+        let hit_rate = if dh + dm == 0 { 1.0 } else { dh as f64 / (dh + dm) as f64 };
+
+        // Update per-destination streaks.
+        for d in self.dests.iter_mut() {
+            if !d.demoted {
+                let was_cold = d.sends > 0 && d.cold as f64 >= COLD_RATE * d.sends as f64;
+                if was_cold {
+                    d.cold_epochs += 1;
+                    d.streak_sends = d.streak_sends.saturating_add(d.sends);
+                } else if d.sends > 0 {
+                    d.cold_epochs = 0;
+                    d.streak_sends = 0;
+                }
+            } else if hit_rate >= LOW_HIT {
+                d.warm_epochs += 1;
+            } else {
+                d.warm_epochs = 0;
+            }
+        }
+        if hit_rate >= LOW_HIT {
+            self.stable_epochs += 1;
+        } else {
+            self.stable_epochs = 0;
+        }
+
+        if hit_rate < LOW_HIT {
+            self.demote_coldest();
+        } else if hit_rate >= HIGH_HIT {
+            self.promote_busiest();
+        } else if self.stable_epochs >= PROBE_EPOCHS {
+            // Stuck in the hysteresis band: demotion relieved the cache
+            // enough that neither threshold fires. Probe one destination
+            // back onto RC to test whether the cache can absorb it.
+            self.promote_busiest();
+            self.stable_epochs = 0;
+        }
+
+        for d in self.dests.iter_mut() {
+            d.sends = 0;
+            d.cold = 0;
+        }
+        self.epoch = next_epoch;
+    }
+
+    fn demote_coldest(&mut self) {
+        let epoch = self.epoch;
+        let mut cands: Vec<(u32, usize)> = Vec::new();
+        for (i, d) in self.dests.iter().enumerate() {
+            if !d.demoted
+                && d.cold_epochs >= HYSTERESIS_EPOCHS
+                && d.streak_sends >= MIN_SAMPLES
+                && d.cooldown_until <= epoch
+            {
+                cands.push((d.cold, i));
+            }
+        }
+        // Coldest (most cold sends this epoch) first; index breaks ties
+        // deterministically.
+        cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for &(_, i) in cands.iter().take(MAX_DEMOTIONS_PER_EPOCH) {
+            let d = &mut self.dests[i];
+            d.demoted = true;
+            d.cold_epochs = 0;
+            d.streak_sends = 0;
+            d.warm_epochs = 0;
+            d.transitions += 1;
+            d.cooldown_until = epoch + (COOLDOWN_BASE_EPOCHS << (d.transitions.min(6) as u64));
+            self.demotions += 1;
+        }
+    }
+
+    fn promote_busiest(&mut self) {
+        let epoch = self.epoch;
+        let mut best: Option<(u32, usize)> = None;
+        for (i, d) in self.dests.iter().enumerate() {
+            if d.demoted && d.warm_epochs >= HYSTERESIS_EPOCHS && d.cooldown_until <= epoch {
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => d.sends > s,
+                };
+                if better {
+                    best = Some((d.sends, i));
+                }
+            }
+        }
+        if let Some((_, i)) = best {
+            let d = &mut self.dests[i];
+            d.demoted = false;
+            d.cold_epochs = 0;
+            d.streak_sends = 0;
+            d.warm_epochs = 0;
+            d.transitions += 1;
+            d.cooldown_until = epoch + (COOLDOWN_BASE_EPOCHS << (d.transitions.min(6) as u64));
+            self.promotions += 1;
+        }
+    }
+
+    /// Lifetime RC→UD demotions on this node.
+    pub fn demotions(&self) -> u64 {
+        self.demotions
+    }
+
+    /// Lifetime UD→RC promotions on this node.
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Destinations currently served over UD.
+    pub fn ud_destinations(&self) -> u32 {
+        self.dests.iter().filter(|d| d.demoted).count() as u32
+    }
+
+    /// The policy this controller runs.
+    pub fn policy(&self) -> TransportPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive one epoch: `sends` packets to each dest in `cold_dests`
+    /// flagged cold, then roll with the given cumulative counters.
+    fn drive_epoch(
+        t: &mut Transport,
+        epoch: &mut u64,
+        cold_dests: &[u32],
+        warm_dests: &[u32],
+        hits: &mut u64,
+        misses: &mut u64,
+        cache_cold: bool,
+    ) {
+        for &d in cold_dests {
+            for _ in 0..MIN_SAMPLES {
+                t.on_tx(*epoch * EPOCH_NS, d, true, *hits, *misses);
+            }
+        }
+        for &d in warm_dests {
+            for _ in 0..MIN_SAMPLES {
+                t.on_tx(*epoch * EPOCH_NS, d, false, *hits, *misses);
+            }
+        }
+        if cache_cold {
+            *misses += 600;
+            *hits += 400; // 40% hit rate — well under LOW_HIT
+        } else {
+            *hits += 1000; // ~100% — above HIGH_HIT
+        }
+        *epoch += 1;
+        t.roll_epoch(*epoch, *hits, *misses);
+    }
+
+    #[test]
+    fn static_policies_never_transition() {
+        for policy in [TransportPolicy::StaticRc, TransportPolicy::StaticUd] {
+            let mut t = Transport::new(policy, 8);
+            for e in 0..20u64 {
+                t.on_tx(e * EPOCH_NS, 3, true, 0, e * 100);
+            }
+            assert_eq!(t.demotions() + t.promotions(), 0);
+            let want = if policy == TransportPolicy::StaticUd {
+                PathChoice::Ud
+            } else {
+                PathChoice::Rc
+            };
+            assert_eq!(t.choose(3), want);
+        }
+    }
+
+    #[test]
+    fn cold_epochs_demote_then_rewarm_promotes() {
+        let mut t = Transport::new(TransportPolicy::Adaptive, 4);
+        let (mut epoch, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        // Dest 2 thrashes while the cache is cold.
+        for _ in 0..4 {
+            drive_epoch(&mut t, &mut epoch, &[2], &[0, 1], &mut hits, &mut misses, true);
+        }
+        assert_eq!(t.choose(2), PathChoice::Ud, "cold dest demoted");
+        assert_eq!(t.choose(0), PathChoice::Rc, "warm dest untouched");
+        assert_eq!(t.demotions(), 1);
+        assert_eq!(t.ud_destinations(), 1);
+        // Cache re-warms: after cooldown + hysteresis, dest 2 comes back.
+        for _ in 0..40 {
+            drive_epoch(&mut t, &mut epoch, &[], &[0, 1, 2], &mut hits, &mut misses, false);
+        }
+        assert_eq!(t.choose(2), PathChoice::Rc, "re-warmed dest promoted");
+        assert_eq!(t.promotions(), 1);
+        assert_eq!(t.ud_destinations(), 0);
+    }
+
+    #[test]
+    fn probe_promotes_from_inside_the_hysteresis_band() {
+        let mut t = Transport::new(TransportPolicy::Adaptive, 4);
+        let (mut epoch, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        // Demote dest 3 while the cache is cold...
+        for _ in 0..4 {
+            drive_epoch(&mut t, &mut epoch, &[3], &[0, 1], &mut hits, &mut misses, true);
+        }
+        assert_eq!(t.choose(3), PathChoice::Ud);
+        // ...then hold the hit-rate between LOW_HIT and HIGH_HIT: the
+        // immediate-promotion path never qualifies, but the probe must
+        // eventually return dest 3 to RC.
+        for _ in 0..(PROBE_EPOCHS * 3) {
+            for d in [0u32, 1] {
+                for _ in 0..MIN_SAMPLES {
+                    t.on_tx(epoch * EPOCH_NS, d, false, hits, misses);
+                }
+            }
+            hits += 800;
+            misses += 200; // 80% — inside the hysteresis band
+            epoch += 1;
+            t.roll_epoch(epoch, hits, misses);
+        }
+        assert_eq!(t.choose(3), PathChoice::Rc, "probe must rediscover re-warm");
+        assert!(t.promotions() >= 1);
+    }
+
+    #[test]
+    fn transitions_are_bounded_under_oscillation() {
+        let mut t = Transport::new(TransportPolicy::Adaptive, 2);
+        let (mut epoch, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        // Adversarial load: alternate cold and warm phases forever.
+        for phase in 0..200 {
+            let cold = phase % 2 == 0;
+            for _ in 0..3 {
+                let (c, w): (&[u32], &[u32]) = if cold { (&[1], &[0]) } else { (&[], &[0, 1]) };
+                drive_epoch(&mut t, &mut epoch, c, w, &mut hits, &mut misses, cold);
+            }
+        }
+        // Exponential cooldown keeps the flap count tiny relative to the
+        // 600 epochs simulated.
+        assert!(
+            t.demotions() + t.promotions() <= 16,
+            "flapping: {} transitions",
+            t.demotions() + t.promotions()
+        );
+    }
+
+    #[test]
+    fn demotions_capped_per_epoch_and_coldest_first() {
+        let mut t = Transport::new(TransportPolicy::Adaptive, 16);
+        let (mut epoch, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        let all: Vec<u32> = (0..16).collect();
+        for _ in 0..HYSTERESIS_EPOCHS {
+            drive_epoch(&mut t, &mut epoch, &all, &[], &mut hits, &mut misses, true);
+        }
+        assert_eq!(t.demotions() as usize, MAX_DEMOTIONS_PER_EPOCH);
+    }
+
+    #[test]
+    fn warm_destination_never_demoted() {
+        let mut t = Transport::new(TransportPolicy::Adaptive, 4);
+        let (mut epoch, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        // Cache is cold overall but dest 0's sends all hit.
+        for _ in 0..10 {
+            drive_epoch(&mut t, &mut epoch, &[], &[0], &mut hits, &mut misses, true);
+        }
+        assert_eq!(t.choose(0), PathChoice::Rc);
+        assert_eq!(t.demotions(), 0);
+    }
+}

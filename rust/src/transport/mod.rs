@@ -1,4 +1,5 @@
-//! Transport layer: queue pairs, connection topology, congestion control.
+//! Transport layer: queue pairs, topology, congestion control, and the
+//! adaptive per-destination path decision.
 //!
 //! Storm's design principle #2 is *leverage RC connections*: one RC
 //! connection per **sibling thread pair** and per data path (remote reads
@@ -7,16 +8,31 @@
 //! eRPC baseline) gets one QP per thread but needs software congestion
 //! control, software retransmission, and receive-queue management.
 //!
-//! This module owns the *identity and policy* side: connection id algebra
-//! ([`topology`]), software congestion control ([`cc`]), and UD receive
-//! pools/retransmission ([`ud`]). The *timing* side (what each verb costs
-//! at each NIC) lives in [`crate::nic`]; the event flow lives in
-//! [`crate::cluster`].
+//! That static dichotomy is where the seed stopped. This module now owns
+//! the *choice* as well, per destination and at runtime:
+//!
+//! * [`topology`] — the connection-id algebra: sibling-pair RC mesh,
+//!   Fig. 7 `conn_multiplier` striping, and `qp_share` multiplexing where
+//!   groups of sibling threads share one RC connection per (pair, channel)
+//!   to shrink the NIC's QP working set (RDMAvisor's thesis).
+//! * [`adaptive`] — the per-destination degradation state machine. Each
+//!   client node watches the modeled NIC cache in 50 µs epochs and demotes
+//!   cold/thrashing destinations from RC to UD (paying the [`ud`] receive
+//!   pool and [`cc`] software-CC costs), promoting them back on re-warm,
+//!   with exponential per-destination cooldown so transitions are bounded.
+//! * [`cc`] / [`ud`] — the costs the demoted path pays: software
+//!   congestion control, receive-pool reposts, and timeout retransmission.
+//!   These are shared by the eRPC baseline and the adaptive path.
+//!
+//! The *timing* side (what each verb costs at each NIC) lives in
+//! [`crate::nic`]; the event flow lives in [`crate::cluster`].
 
+pub mod adaptive;
 pub mod cc;
 pub mod topology;
 pub mod ud;
 
+pub use adaptive::{PathChoice, Transport, TransportPolicy};
 pub use cc::AppCc;
 pub use topology::{Channel, ConnId, Topology};
 pub use ud::{RecvPool, RetransmitState};

@@ -1,4 +1,4 @@
-//! Connection topology: Storm's sibling-pair RC mesh and UD QPs.
+//! Connection topology: Storm's sibling-pair RC mesh, UD QPs, and QP sharing.
 //!
 //! Global connection ids are deterministic functions of the endpoints so
 //! both NICs charge their caches against the same id, and tests can reason
@@ -8,8 +8,14 @@
 //! channel) gets `k` parallel connections and senders stripe across them,
 //! inflating the NIC's QP working set exactly the way the paper's emulation
 //! does.
-
-
+//!
+//! `qp_share` goes the other way (RDMAvisor's thesis): groups of `s`
+//! sibling threads share one RC connection per (pair, channel), shrinking
+//! the QP working set by `s` at the price of a software lock on the shared
+//! send queue. Sharing and striping compose: ids are derived from the
+//! *thread group* (`thread / qp_share`), so the algebra stays collision-free
+//! across (pair, group, channel, lane) and both endpoints of a sibling pair
+//! still derive the same id.
 
 /// Global connection (QP) identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -35,29 +41,42 @@ pub struct Topology {
     /// Parallel connections per (pair, thread, channel) — 1 normally, >1
     /// when emulating a larger cluster (Fig. 7).
     pub conn_multiplier: u32,
+    /// Threads sharing one RC connection per (pair, channel) — 1 normally
+    /// (every sibling pair gets its own QP), >1 to multiplex.
+    pub qp_share: u32,
 }
 
 impl Topology {
     /// Standard topology.
     pub fn new(nodes: u32, threads: u32) -> Self {
-        Topology { nodes, threads, conn_multiplier: 1 }
+        Topology { nodes, threads, conn_multiplier: 1, qp_share: 1 }
     }
 
     /// Topology emulating `virtual_nodes` on `nodes` physical machines.
     pub fn emulated(nodes: u32, threads: u32, virtual_nodes: u32) -> Self {
         assert!(virtual_nodes >= nodes && virtual_nodes % nodes == 0);
-        Topology { nodes, threads, conn_multiplier: virtual_nodes / nodes }
+        Topology { nodes, threads, conn_multiplier: virtual_nodes / nodes, qp_share: 1 }
+    }
+
+    /// Thread groups per machine under QP sharing (ceiling division so a
+    /// ragged last group still gets a connection).
+    pub fn thread_groups(&self) -> u32 {
+        let s = self.qp_share.max(1);
+        (self.threads + s - 1) / s
     }
 
     /// RC connection between sibling threads `thread` of `a` and `b`, on
-    /// `channel`, stripe `lane < conn_multiplier`.
+    /// `channel`, stripe `lane < conn_multiplier`. With `qp_share > 1` the
+    /// id is derived from the thread *group*, so all threads in a group map
+    /// to the same shared connection.
     pub fn rc_conn(&self, a: u32, b: u32, thread: u32, channel: Channel, lane: u32) -> ConnId {
         assert!(a != b, "no self-connections");
         assert!(thread < self.threads && lane < self.conn_multiplier);
         let (lo, hi) = if a < b { (a, b) } else { (b, a) };
         let n = self.nodes as u64;
         let pair = lo as u64 * n + hi as u64;
-        let id = ((pair * self.threads as u64 + thread as u64) * 2 + channel as u64)
+        let group = (thread / self.qp_share.max(1)) as u64;
+        let id = ((pair * self.thread_groups() as u64 + group) * 2 + channel as u64)
             * self.conn_multiplier as u64
             + lane as u64;
         ConnId(id)
@@ -70,9 +89,9 @@ impl Topology {
     }
 
     /// RC connections terminating at each machine: the paper's `2·m·t`
-    /// (× multiplier when emulating).
+    /// (× multiplier when emulating, ÷ share factor when multiplexing).
     pub fn rc_conns_per_machine(&self) -> u64 {
-        2 * (self.nodes as u64 - 1) * self.threads as u64 * self.conn_multiplier as u64
+        2 * (self.nodes as u64 - 1) * self.thread_groups() as u64 * self.conn_multiplier as u64
     }
 
     /// Bytes of QP context a NIC must cache when all its connections are
@@ -160,5 +179,42 @@ mod tests {
         let t = Topology::emulated(32, 10, 128);
         assert_eq!(t.conn_multiplier, 4);
         assert_eq!(t.rc_conns_per_machine(), 2 * 31 * 10 * 4);
+    }
+
+    #[test]
+    fn qp_share_collapses_sibling_threads() {
+        let mut t = Topology::new(8, 8);
+        t.qp_share = 4;
+        assert_eq!(t.thread_groups(), 2);
+        // Threads 0..3 share one connection, 4..7 share another.
+        let a = t.rc_conn(1, 2, 0, Channel::ReadPath, 0);
+        assert_eq!(a, t.rc_conn(1, 2, 3, Channel::ReadPath, 0));
+        let b = t.rc_conn(1, 2, 4, Channel::ReadPath, 0);
+        assert_eq!(b, t.rc_conn(1, 2, 7, Channel::ReadPath, 0));
+        assert_ne!(a, b);
+        // Connection count shrinks by the share factor.
+        assert_eq!(t.rc_conns_per_machine(), 2 * 7 * 2);
+    }
+
+    #[test]
+    fn qp_share_ragged_group_still_connected() {
+        let mut t = Topology::new(4, 5);
+        t.qp_share = 2;
+        assert_eq!(t.thread_groups(), 3);
+        // Thread 4 is alone in the last group but still has a valid id.
+        let lone = t.rc_conn(0, 1, 4, Channel::RpcPath, 0);
+        assert_ne!(lone, t.rc_conn(0, 1, 3, Channel::RpcPath, 0));
+    }
+
+    #[test]
+    fn qp_share_one_matches_unshared_algebra() {
+        let base = Topology::new(6, 4);
+        let mut shared = Topology::new(6, 4);
+        shared.qp_share = 1;
+        for th in 0..4 {
+            for ch in [Channel::ReadPath, Channel::RpcPath] {
+                assert_eq!(base.rc_conn(0, 3, th, ch, 0), shared.rc_conn(0, 3, th, ch, 0));
+            }
+        }
     }
 }

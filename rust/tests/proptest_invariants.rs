@@ -760,7 +760,7 @@ fn prop_topology_ids_unique() {
         let nodes = 2 + rng.gen_range(30) as u32;
         let threads = 1 + rng.gen_range(8) as u32;
         let mult = 1 + rng.gen_range(4) as u32;
-        let topo = Topology { nodes, threads, conn_multiplier: mult };
+        let topo = Topology { nodes, threads, conn_multiplier: mult, qp_share: 1 };
         let mut seen = std::collections::HashSet::new();
         for a in 0..nodes {
             for b in (a + 1)..nodes {
@@ -781,6 +781,59 @@ fn prop_topology_ids_unique() {
             * 2
             * mult as usize;
         assert_eq!(seen.len(), expect);
+    }
+}
+
+/// With QP multiplexing (`qp_share > 1`), the extended ConnId algebra must
+/// stay collision-free across `(pair, thread group, channel, lane)` —
+/// threads inside one sharing group collapse onto the same id (that is the
+/// point), distinct groups/pairs/channels/lanes never collide, sibling
+/// pairs map `(a, b)` and `(b, a)` onto the same connection, and every RC
+/// id stays disjoint from every UD QP id.
+#[test]
+fn prop_topology_qp_share_ids_unique_and_symmetric() {
+    let mut rng = Pcg64::new(7, 10);
+    for _ in 0..30 {
+        let nodes = 2 + rng.gen_range(24) as u32;
+        let threads = 1 + rng.gen_range(8) as u32;
+        let mult = 1 + rng.gen_range(4) as u32;
+        let share = 1 + rng.gen_range(threads as u64) as u32;
+        let topo = Topology { nodes, threads, conn_multiplier: mult, qp_share: share };
+        let groups = topo.thread_groups();
+        let mut seen = std::collections::HashMap::new();
+        for a in 0..nodes {
+            for b in (a + 1)..nodes {
+                for th in 0..threads {
+                    for ch in [Channel::ReadPath, Channel::RpcPath] {
+                        for lane in 0..mult {
+                            let id = topo.rc_conn(a, b, th, ch, lane);
+                            // Sibling symmetry: both endpoints name the
+                            // same connection.
+                            assert_eq!(id, topo.rc_conn(b, a, th, ch, lane));
+                            // Threads of one group share; everything else
+                            // is distinct.
+                            let key = (a, b, th / share, ch as u8, lane);
+                            if let Some(prev) = seen.insert(key, id) {
+                                assert_eq!(prev, id, "group must share one conn");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let distinct: std::collections::HashSet<_> = seen.values().copied().collect();
+        let expect = (nodes as usize * (nodes as usize - 1) / 2)
+            * groups as usize
+            * 2
+            * mult as usize;
+        assert_eq!(distinct.len(), expect, "collision across groups");
+        assert_eq!(seen.len(), expect, "every (pair,group,ch,lane) seen once per thread set");
+        // RC ids never collide with UD QP ids (top-bit namespace).
+        for n in 0..nodes {
+            for t in 0..threads {
+                assert!(!distinct.contains(&topo.ud_qp(n, t)));
+            }
+        }
     }
 }
 

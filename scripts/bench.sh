@@ -13,7 +13,13 @@
 # rows: "latency" (p50/p99/p999/mean/max per opcode × backend kind × tx
 # phase, merged across the runs) and "throughput_series" (epoch-synced
 # 10 ms windowed commit counts for the native TATP run and the failover
-# drill). scripts/check_bench_schema.sh validates the shape in CI.
+# drill). PR 9 adds "connection_scaling": the simulator-backed adaptive
+# transport sweep — per-machine Mops vs the RC connection working set
+# (three decades of QP counts) × NIC generation (CX4/CX5) × transport
+# variant {static_rc, static_ud, adaptive, rc_qp_share∈{2,4}}, each row
+# carrying the NIC-cache telemetry (active_qps, nic_evictions) and the
+# transport-controller counters (demotions, promotions, ud_destinations).
+# scripts/check_bench_schema.sh validates the shape in CI.
 #
 # Usage: scripts/bench.sh [output.json]
 #        scripts/bench.sh scaling [output.json]   # scaling matrix only

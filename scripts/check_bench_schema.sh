@@ -7,6 +7,10 @@
 #   latency            — p50/p99/p999 rows keyed op × kind × phase
 #   throughput_series  — epoch-synced windowed commit counts
 #   abort_reasons      — per-reason tallies inside the catalog rows
+#   connection_scaling — the adaptive-transport sweep (PR 9): ≥2 NIC
+#                        generations, all four transport variants, and a
+#                        monotone ≥3-decade conns_per_machine axis within
+#                        each (nic, variant, qp_share) series
 #
 # Usage: scripts/check_bench_schema.sh [BENCH_live.json]
 set -euo pipefail
@@ -82,6 +86,37 @@ for run in ("tatp_native", "tatp_failover"):
     row = doc.get(run, {})
     need(isinstance(row, dict) and "abort_reasons" in row, f"{run} missing abort_reasons")
 
+# connection_scaling: the PR 9 adaptive-transport sweep.
+conn = doc.get("connection_scaling", [])
+need(isinstance(conn, list) and conn, "connection_scaling must be a non-empty list")
+conn_cols = (
+    "nic", "variant", "qp_share", "fanout_nodes", "conn_multiplier",
+    "conns_per_machine", "per_machine_mops", "nic_hit_rate", "active_qps",
+    "nic_evictions", "demotions", "promotions", "ud_destinations",
+)
+series_axis = {}
+for row in conn if isinstance(conn, list) else []:
+    for k in conn_cols:
+        need(k in row, f"connection_scaling row missing {k}: {row}")
+    if all(k in row for k in ("nic", "variant", "qp_share", "conns_per_machine")):
+        key = (row["nic"], row["variant"], row["qp_share"])
+        series_axis.setdefault(key, []).append(row["conns_per_machine"])
+if isinstance(conn, list) and conn:
+    nics = {r.get("nic") for r in conn}
+    need(len(nics) >= 2, f"connection_scaling needs >= 2 NIC generations, got {sorted(nics)}")
+    variants = {r.get("variant") for r in conn}
+    for v in ("static_rc", "static_ud", "adaptive", "rc_qp_share"):
+        need(v in variants, f"connection_scaling missing transport variant {v}")
+    for key, axis in series_axis.items():
+        need(
+            all(a < b for a, b in zip(axis, axis[1:])),
+            f"connection_scaling axis not strictly increasing for {key}: {axis}",
+        )
+        need(
+            min(axis) > 0 and max(axis) / min(axis) >= 1000,
+            f"connection_scaling axis spans < 3 decades for {key}: {axis}",
+        )
+
 if errors:
     print(f"bench schema gate FAILED for {path}:", file=sys.stderr)
     for e in errors:
@@ -90,5 +125,5 @@ if errors:
 
 print(f"bench schema gate: OK ({path}: "
       f"{len(scaling)} scaling rows, {len(latency)} latency rows, "
-      f"{len(sampled)} with samples)")
+      f"{len(sampled)} with samples, {len(conn)} connection_scaling rows)")
 PY
