@@ -28,6 +28,15 @@
 //! adaptive RC→UD, RC qp_share ∈ {2,4}}), with the NIC-cache and
 //! transport-controller telemetry per row.
 //!
+//! PR 10 adds the data-structure-zoo rows from one cluster hosting all
+//! four catalog kinds: `zoo_point` (point-lookup ops/s per backend plus
+//! hopscotch OCC commit/abort tallies — hopscotch items commit inside
+//! transactions since PR 10), `ycsb_e` (YCSB Workload E: per-scan-length
+//! fence-chain scan latency/throughput with a 5% insert trickle
+//! splitting leaves under the scanners), and `queue` (the §5.5
+//! client-cached queue: enqueue/dequeue RPC rates, one-sided peek rate,
+//! and the RPC-fallback counters, including the stale-empty case).
+//!
 //! Emits a machine-readable `BENCH_live.json` (override the path with
 //! `BENCH_OUT`) so successive PRs accumulate a perf trajectory; run via
 //! `scripts/bench.sh`; `scripts/check_bench_schema.sh` validates the
@@ -43,15 +52,18 @@ use storm::dataplane::live::{
     LiveClient, LiveCluster, SERIES_WINDOW_NS, SERVER_SHARDS, TX_WINDOW,
 };
 use storm::dataplane::tx::{stamped_value, TxItem, TxOutcome};
-use storm::ds::api::ObjectId;
+use storm::ds::api::{ObjectId, RpcOp, RpcResult};
 use storm::ds::btree::BTreeConfig;
 use storm::ds::catalog::{CatalogConfig, ObjectConfig, Placement};
 use storm::ds::hopscotch::HopscotchConfig;
 use storm::ds::mica::MicaConfig;
-use storm::sim::{Pcg64, WindowSeries};
+use storm::ds::queue::QueueConfig;
+use storm::runtime::Engine;
+use storm::sim::{Histogram, Pcg64, WindowSeries};
 use storm::workload::kv::KvWorkload;
 use storm::workload::smallbank::{self, SmallBankPopulation, SmallBankWorkload};
 use storm::workload::tatp::{self, TatpPopulation, TatpWorkload};
+use storm::workload::ycsb::{YcsbEWorkload, YcsbOp};
 
 const NODES: u32 = 4;
 const KEYS: u64 = 10_000;
@@ -793,6 +805,299 @@ fn mixed_backend_rows() -> (KindRow, KindRow, KindRow, KindRow, f64, ClientLaten
     (mica, tree_cold, tree_warm, hop, mixed_ops, lat)
 }
 
+// --- data-structure zoo (PR 10): YCSB-E scans, live queue, hop OCC -------
+
+/// The queue object of the zoo catalog (fourth kind, after the mixed
+/// trio).
+const ZOO_QUEUE: ObjectId = ObjectId(3);
+/// Ring capacity of the zoo queue (cells).
+const ZOO_QUEUE_CAP: u64 = 1 << 10;
+/// Fixed scan lengths of the per-length YCSB-E buckets.
+const ZOO_SCAN_LENS: [u64; 3] = [10, 50, 100];
+/// YCSB-E operations per scan-length bucket (~5% of them inserts).
+const ZOO_OPS_PER_LEN: usize = 400;
+/// Hopscotch transactions of the zoo tx pass.
+const ZOO_TXS: u64 = 512;
+/// Enqueue/peek/dequeue ops per queue round (ring wraps across rounds).
+const ZOO_QUEUE_PER_ROUND: u64 = 1_000;
+const ZOO_QUEUE_ROUNDS: u64 = 4;
+
+/// The mixed trio plus a queue: one object of **every** catalog kind on
+/// one cluster — the PR 10 acceptance matrix (point, scan, and queue
+/// ops across MICA, B-link, and hopscotch, with hopscotch committing
+/// inside transactions).
+fn zoo_catalog() -> CatalogConfig {
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(MicaConfig {
+            buckets: 1 << 13,
+            width: 2,
+            value_len: 112,
+            store_values: true,
+        }),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 1 << 11 }),
+        ObjectConfig::Hopscotch(HopscotchConfig {
+            slots: (MIXED_KEYS * 2).next_power_of_two(),
+            h: 8,
+            item_size: 128,
+        }),
+        ObjectConfig::Queue(QueueConfig { capacity: ZOO_QUEUE_CAP, cell_bytes: 16 }),
+    ])
+}
+
+/// One per-scan-length YCSB-E row.
+struct ScanLenRow {
+    scan_len: u64,
+    scans: u64,
+    inserts: u64,
+    ops: f64,
+    keys_per_s: f64,
+    p50_ns: u64,
+    p99_ns: u64,
+    max_ns: u64,
+}
+
+impl ScanLenRow {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"scan_len\": {}, \"scans\": {}, \"inserts\": {}, ",
+                "\"ops_per_s\": {:.0}, \"keys_per_s\": {:.0}, ",
+                "\"p50_ns\": {}, \"p99_ns\": {}, \"max_ns\": {}}}"
+            ),
+            self.scan_len,
+            self.scans,
+            self.inserts,
+            self.ops,
+            self.keys_per_s,
+            self.p50_ns,
+            self.p99_ns,
+            self.max_ns
+        )
+    }
+}
+
+/// The live-queue throughput row.
+struct QueueRow {
+    enq: u64,
+    deq: u64,
+    peeks: u64,
+    enq_per_s: f64,
+    deq_per_s: f64,
+    peek_per_s: f64,
+    peek_rpc_fallbacks: u64,
+    stale_empty_rpc: u64,
+}
+
+impl QueueRow {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"capacity\": {}, \"enqueues\": {}, \"dequeues\": {}, \"peeks\": {}, ",
+                "\"enq_per_s\": {:.0}, \"deq_per_s\": {:.0}, \"peek_per_s\": {:.0}, ",
+                "\"peek_rpc_fallbacks\": {}, \"stale_empty_rpc\": {}}}"
+            ),
+            ZOO_QUEUE_CAP,
+            self.enq,
+            self.deq,
+            self.peeks,
+            self.enq_per_s,
+            self.deq_per_s,
+            self.peek_per_s,
+            self.peek_rpc_fallbacks,
+            self.stale_empty_rpc
+        )
+    }
+}
+
+/// Point-lookup ops/s per backend + the hopscotch OCC tallies of the
+/// zoo run (the "all three backends present" gate row).
+struct ZooPoint {
+    mica_ops: f64,
+    btree_ops: f64,
+    hop_ops: f64,
+    tx_commits: u64,
+    tx_aborts: u64,
+    artifact_validations: u64,
+}
+
+impl ZooPoint {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"mica_ops\": {:.0}, \"btree_ops\": {:.0}, \"hopscotch_ops\": {:.0}, ",
+                "\"hopscotch_tx_commits\": {}, \"hopscotch_tx_aborts\": {}, ",
+                "\"artifact_validations\": {}}}"
+            ),
+            self.mica_ops,
+            self.btree_ops,
+            self.hop_ops,
+            self.tx_commits,
+            self.tx_aborts,
+            self.artifact_validations
+        )
+    }
+}
+
+/// One cluster, every kind: point lookups on all three lookup backends,
+/// hopscotch transactions (slot-granularity OCC, PR 10), per-length
+/// YCSB-E fence-chain scans with a 5% insert trickle splitting leaves
+/// under the scanners, and the §5.5 client-cached queue.
+fn zoo_rows() -> (ZooPoint, Vec<ScanLenRow>, QueueRow, ClientLatency) {
+    let cat = zoo_catalog();
+    let place = Placement::new(&cat, NODES, cat.shard_count(SERVER_SHARDS));
+    let (mica_bytes, tree_bytes, hop_geo) = (
+        place.geo(MIXED_MICA).bucket_bytes,
+        place.geo(MIXED_TREE).bucket_bytes,
+        *place.geo(MIXED_HOP),
+    );
+    let cluster = LiveCluster::start_catalog(NODES, cat);
+    for obj in [MIXED_MICA, MIXED_TREE, MIXED_HOP] {
+        cluster.load_rows((1..=MIXED_KEYS).map(|k| (obj, k)), |obj, k| {
+            stamped_value(obj, k, 112)
+        });
+    }
+    let keys = mixed_keystream(0x200);
+
+    // Point lookups: one warm measured pass per lookup backend.
+    let mica = mixed_kind_pass(&cluster, MIXED_MICA, &keys, mica_bytes, 1);
+    let tree = mixed_kind_pass(&cluster, MIXED_TREE, &keys, tree_bytes, 1);
+    let hop =
+        mixed_kind_pass(&cluster, MIXED_HOP, &keys, hop_geo.width * hop_geo.item_size, 1);
+
+    // Hopscotch OCC: read one slot, update another, per transaction.
+    // `Engine::load` is infallible on the reference backend and only
+    // fails on a PJRT build without compiled artifacts — in which case
+    // the scalar validation path runs and the gauge stays 0.
+    let mut txc = cluster.client(0, Engine::load("artifacts").ok());
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for i in 0..ZOO_TXS {
+        let read_key = i % MIXED_KEYS + 1;
+        let write_key = (i + 7) % MIXED_KEYS + 1;
+        let out = txc.run_tx(
+            vec![TxItem::read(MIXED_HOP, read_key)],
+            vec![TxItem::update(MIXED_HOP, write_key)
+                .with_value(stamped_value(MIXED_HOP, write_key, 112))],
+        );
+        match out {
+            TxOutcome::Committed { .. } => commits += 1,
+            _ => aborts += 1,
+        }
+    }
+    assert!(commits > 0, "no hopscotch transaction committed");
+    let point = ZooPoint {
+        mica_ops: mica.ops,
+        btree_ops: tree.ops,
+        hop_ops: hop.ops,
+        tx_commits: commits,
+        tx_aborts: aborts,
+        artifact_validations: txc.artifact_validations(),
+    };
+    let mut lat = txc.latency().clone();
+
+    // YCSB-E per scan length: uniform scan starts, 5% fresh-key inserts
+    // splitting the tree's high leaves while later scans run.
+    let mut sc = cluster.client(0, None);
+    sc.warm_routes(MIXED_TREE);
+    let mut scan_rows = Vec::new();
+    for (bucket, &len) in ZOO_SCAN_LENS.iter().enumerate() {
+        let mut w = YcsbEWorkload::uniform(MIXED_KEYS, len)
+            .for_client(bucket as u64, ZOO_SCAN_LENS.len() as u64);
+        let mut rng = Pcg64::seeded(0xE5CA + bucket as u64);
+        let mut h = Histogram::default();
+        let (mut scans, mut inserts, mut keys_seen) = (0u64, 0u64, 0u64);
+        let t0 = Instant::now();
+        for _ in 0..ZOO_OPS_PER_LEN {
+            match w.next_op(&mut rng) {
+                YcsbOp::Scan { low, .. } => {
+                    // Clamp the start so the range lies inside the loaded
+                    // contiguous keyspace (fresh insert keys sit beyond
+                    // it): the expected hit count is exactly `len`.
+                    let (low, high) = YcsbOp::scan_bounds(low.min(MIXED_KEYS - len + 1), len);
+                    let t = Instant::now();
+                    let got = sc.lookup_range(MIXED_TREE, low, high);
+                    h.record(t.elapsed().as_nanos() as u64);
+                    assert_eq!(got.len() as u64, len, "scan [{low}, {high}] incomplete");
+                    assert!(got.windows(2).all(|p| p[0].0 < p[1].0), "scan out of order");
+                    scans += 1;
+                    keys_seen += got.len() as u64;
+                }
+                YcsbOp::Insert { key } => {
+                    let r = sc.ds_rpc(
+                        MIXED_TREE,
+                        key,
+                        RpcOp::Insert,
+                        Some(stamped_value(MIXED_TREE, key, 112)),
+                    );
+                    assert!(matches!(r, RpcResult::Ok), "ycsb insert refused: {r:?}");
+                    inserts += 1;
+                }
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        scan_rows.push(ScanLenRow {
+            scan_len: len,
+            scans,
+            inserts,
+            ops: (scans + inserts) as f64 / secs,
+            keys_per_s: keys_seen as f64 / secs,
+            p50_ns: h.p50(),
+            p99_ns: h.p99(),
+            max_ns: h.max(),
+        });
+    }
+    lat.merge(sc.latency());
+
+    // Live queue: enqueue / peek / dequeue phases per round; the ring
+    // wraps across rounds, FIFO asserted on every pop. Peeks ride the
+    // one-sided cached-head fast path; fallbacks are counted.
+    let mut qc = cluster.client(0, None);
+    let (mut enq_s, mut peek_s, mut deq_s) = (0f64, 0f64, 0f64);
+    let mut expected = 0u64;
+    for round in 0..ZOO_QUEUE_ROUNDS {
+        let base = round * ZOO_QUEUE_PER_ROUND;
+        let t = Instant::now();
+        for v in base..base + ZOO_QUEUE_PER_ROUND {
+            let r = qc.queue_push(ZOO_QUEUE, v);
+            assert!(matches!(r, RpcResult::Ok), "enqueue refused: {r:?}");
+        }
+        enq_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        for _ in 0..ZOO_QUEUE_PER_ROUND {
+            let front = qc.queue_peek(ZOO_QUEUE).expect("peek refused");
+            assert_eq!(front, Some(base), "peek saw a non-front element");
+        }
+        peek_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        for _ in 0..ZOO_QUEUE_PER_ROUND {
+            let got = qc.queue_pop(ZOO_QUEUE).expect("dequeue refused");
+            assert_eq!(got, Some(expected), "FIFO violated");
+            expected += 1;
+        }
+        deq_s += t.elapsed().as_secs_f64();
+    }
+    // A fresh client still holding the default empty pointer cache must
+    // detect the drained-but-used ring via the cell seq stamp (the PR 10
+    // stale-empty `validate_peek` fix) and resolve Empty over RPC.
+    let mut stale = cluster.client(1, None);
+    assert_eq!(stale.queue_peek(ZOO_QUEUE), Ok(None));
+    let n = ZOO_QUEUE_ROUNDS * ZOO_QUEUE_PER_ROUND;
+    let queue = QueueRow {
+        enq: n,
+        deq: n,
+        peeks: n,
+        enq_per_s: n as f64 / enq_s,
+        deq_per_s: n as f64 / deq_s,
+        peek_per_s: n as f64 / peek_s,
+        peek_rpc_fallbacks: qc.peek_rpc_fallbacks(),
+        stale_empty_rpc: stale.peek_rpc_fallbacks(),
+    };
+    assert_eq!(queue.stale_empty_rpc, 1, "stale-empty peek skipped the RPC fallback");
+    lat.merge(qc.latency());
+
+    cluster.shutdown();
+    (point, scan_rows, queue, lat)
+}
+
 fn per_table_json(names: &[&str], per: &[(u64, u64)]) -> String {
     names
         .iter()
@@ -1052,6 +1357,31 @@ fn main() {
     );
     println!("mixed interleave  {mx_mixed_ops:>12.0} ops/s   (all kinds, shared doorbells)");
 
+    // Data-structure zoo (PR 10): one cluster hosting all four kinds —
+    // point lookups per backend, hopscotch OCC transactions, per-length
+    // YCSB-E fence-chain scans, and the client-cached live queue.
+    let (zoo, ycsb_rows, queue_row, zoo_lat) = zoo_rows();
+    println!("# zoo: point/scan/queue on one four-kind cluster, 1 client");
+    println!(
+        "zoo point mica {:>12.0} ops/s  btree {:>12.0} ops/s  hopscotch {:>12.0} ops/s",
+        zoo.mica_ops, zoo.btree_ops, zoo.hop_ops
+    );
+    println!(
+        "zoo hopscotch tx  {} commits, {} aborts  ({} artifact validations)",
+        zoo.tx_commits, zoo.tx_aborts, zoo.artifact_validations
+    );
+    for r in &ycsb_rows {
+        println!(
+            "ycsb_e len {:>3}  {:>9.0} scans/s  {:>11.0} keys/s  p50 {:>8} ns  p99 {:>8} ns",
+            r.scan_len, r.ops, r.keys_per_s, r.p50_ns, r.p99_ns
+        );
+    }
+    println!(
+        "queue enq {:>10.0}/s  deq {:>10.0}/s  peek {:>10.0}/s  ({} peek RPC fallbacks)",
+        queue_row.enq_per_s, queue_row.deq_per_s, queue_row.peek_per_s,
+        queue_row.peek_rpc_fallbacks
+    );
+
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_live.json".to_string());
     let mut json = format!(
         concat!(
@@ -1128,6 +1458,7 @@ fn main() {
     merged_lat.merge(&sb.lat);
     merged_lat.merge(&failover.lat);
     merged_lat.merge(&mx_lat);
+    merged_lat.merge(&zoo_lat);
     println!("# latency (merged across runs): {} samples", merged_lat.total_samples());
     for (op, kind, phase, h) in merged_lat.rows() {
         if h.count() == 0 {
@@ -1153,6 +1484,10 @@ fn main() {
         "  \"connection_scaling\": {},\n",
         connection_scaling_json(&conn_points)
     ));
+    json.push_str(&format!("  \"zoo_point\": {},\n", zoo.json()));
+    let ycsb_json: Vec<String> = ycsb_rows.iter().map(|r| format!("    {}", r.json())).collect();
+    json.push_str(&format!("  \"ycsb_e\": [\n{}\n  ],\n", ycsb_json.join(",\n")));
+    json.push_str(&format!("  \"queue\": {},\n", queue_row.json()));
     json.push_str(&format!(
         concat!(
             "  \"mixed_backend\": {{\"keys\": {k}, ",

@@ -122,8 +122,8 @@ impl AbortCounts {
 }
 
 /// Backend-kind axis labels for latency rows, in the index order
-/// [`ClientLatency`] uses (`mica`, `btree`, `hopscotch`).
-pub const KIND_LABELS: [&str; 3] = ["mica", "btree", "hopscotch"];
+/// [`ClientLatency`] uses (`mica`, `btree`, `hopscotch`, `queue`).
+pub const KIND_LABELS: [&str; 4] = ["mica", "btree", "hopscotch", "queue"];
 
 /// The fixed latency-histogram set a live client owns: one distribution
 /// per opcode × backend kind for the lookup path and one per transaction
@@ -133,11 +133,11 @@ pub const KIND_LABELS: [&str; 3] = ["mica", "btree", "hopscotch"];
 #[derive(Clone, Debug, Default)]
 pub struct ClientLatency {
     /// One-sided doorbell-read latency per backend kind
-    /// (indexed by [`KIND_LABELS`]).
-    pub read: [Histogram; 3],
+    /// (indexed by [`KIND_LABELS`]; the `queue` row times peek reads).
+    pub read: [Histogram; 4],
     /// Whole-lookup latency (start machine through drained completion,
     /// RPC fallback legs included) per backend kind.
-    pub lookup: [Histogram; 3],
+    pub lookup: [Histogram; 4],
     /// Transaction phase-volley latency (first post of the phase through
     /// the completion that drains it), indexed by [`PHASE_LABELS`].
     pub tx_phase: [Histogram; 4],

@@ -704,7 +704,7 @@ impl World {
                         ObjectConfig::BTree(_) => {
                             SimObj::BTree(BTreeRouteResolver::new(total_nodes, LEAF_BYTES))
                         }
-                        ObjectConfig::Hopscotch(_) => {
+                        ObjectConfig::Hopscotch(_) | ObjectConfig::Queue(_) => {
                             panic!("the simulator's catalogs host MICA/BTree objects")
                         }
                     })

@@ -7,12 +7,16 @@
 //! dataplane**: every node hosts a storage [`Catalog`] of independent
 //! objects that need not be MICA tables — B-link trees resolve through
 //! client-cached leaf routes (one doorbell leaf read, RPC re-traversal +
-//! route repair on a fence miss) and hopscotch objects through one
-//! `H × item_size` neighborhood read (the FaRM-style coarse read) — and
+//! route repair on a fence miss) plus fence-chain **range scans**
+//! ([`LiveClient::lookup_range`], PR 10), hopscotch objects through one
+//! `H × item_size` neighborhood read (the FaRM-style coarse read), and
+//! queue objects (PR 10, paper §5.5) through client-cached head/tail
+//! pointers — one-sided front-cell peeks with seq validation, owner RPCs
+//! ([`RpcOp::Enqueue`] / [`RpcOp::Dequeue`]) for mutation — and
 //! the cluster-wide [`Placement`] map routes `(ObjectId, key)` to
 //! `(node, shard, packed offset)` by backend kind (MICA objects shard by
-//! bucket range across every lane; tree/hopscotch objects live whole on
-//! a per-object home shard) —
+//! bucket range across every lane; tree/hopscotch/queue objects live
+//! whole on a per-object home shard) —
 //!
 //! * all of a node's tables share **one registered data region** (paper
 //!   principle #3: one MPT entry, per-table base offsets via
@@ -39,8 +43,11 @@
 //!   validate (one-sided leaf-header reads in the same per-node
 //!   `read_batch` doorbell volley as MICA item headers) and commit at
 //!   leaf granularity, so a transaction may read a MICA table and write
-//!   through a tree in one atomic step; only hopscotch objects stay
-//!   outside the transactional opcode set (admission-checked);
+//!   through a tree in one atomic step; since PR 10 hopscotch items join
+//!   at slot granularity (their slot headers share the MICA item-header
+//!   wire layout, so their validation reads ride the same volley), and
+//!   only queue objects stay outside the transactional opcode set
+//!   (admission-checked);
 //! * the server side is **shared-nothing**: each node splits into up to
 //!   [`SERVER_SHARDS`] shards, and every shard is its own pinned OS
 //!   thread ([`crate::fabric::affinity`]) running a single-threaded
@@ -76,7 +83,7 @@
 //!   fence per node) drives the failover test battery; see
 //!   [`crate::dataplane`] docs for the protocol and lease invariants.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -85,12 +92,16 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::report::{AbortCounts, ClientLatency, LaneGauges, LiveServed};
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
-use crate::ds::btree::{parse_leaf_header, parse_leaf_view, BTreeRouteResolver};
+use crate::ds::btree::{parse_leaf_header, parse_leaf_view, BTreeRouteResolver, LeafView};
 use crate::ds::catalog::{Catalog, CatalogConfig, ObjectConfig, ObjectKind, Placement, TableGeo};
 use crate::ds::hopscotch::{parse_neighborhood_view, HopscotchTable};
 use crate::ds::mica::{
     fnv1a64, owner_of, parse_bucket_items, parse_bucket_view, parse_item_view, ItemView,
     MicaClient, MicaConfig,
+};
+use crate::ds::queue::{
+    decode_queue_reply, parse_cell_view, PeekOutcome, QueueClientCache, RemoteQueue,
+    QUEUE_CELL_HEADER,
 };
 use crate::fabric::affinity;
 use crate::fabric::loopback::{
@@ -575,7 +586,15 @@ impl LiveCluster {
         // maximum version (a peer that saw a later commit wins).
         let mut best: HashMap<(u32, u64), (u32, Option<Vec<u8>>)> = HashMap::new();
         let mut absorb = |obj: ObjectId, key: u64, version: u32, value: Option<Vec<u8>>| {
-            if !self.place.replicas(obj, key).contains(&node) {
+            // Queue rows are keyed by sequence number, but the whole
+            // queue routes under the object's fixed key (clients push,
+            // pop and peek at `replicas(obj, obj.0)`), so ownership is
+            // judged by the routing key, not the row key.
+            let route_key = match self.place.geo(obj).kind {
+                ObjectKind::Queue => obj.0 as u64,
+                _ => key,
+            };
+            if !self.place.replicas(obj, route_key).contains(&node) {
                 return; // placement assigns this row elsewhere
             }
             match best.entry((obj.0, key)) {
@@ -643,9 +662,12 @@ impl LiveCluster {
                             }
                         }
                     }
-                    ObjectKind::BTree | ObjectKind::Hopscotch => {
+                    ObjectKind::BTree | ObjectKind::Hopscotch | ObjectKind::Queue => {
                         // Home-shard harvest runs on the peer shard's own
                         // reactor thread (its slice is owned, not shared).
+                        // Queue rows come back as `(seq, 0, value)`, and
+                        // the sorted install below replays them in seq
+                        // order — FIFO survives the rebuild.
                         let sid = self.place.shard_of(obj, 0); // home shard
                         let items = self.with_shard(peer, sid, move |cat| cat.items(obj));
                         for (key, version, value) in items {
@@ -1103,6 +1125,27 @@ fn mirror_hop_dirty(
     }
 }
 
+/// Mirror the wire cells the last queue mutation dirtied into the packed
+/// data region (wire cell `c` at `base + c * cell_bytes`; cell 0 is the
+/// head/tail header, ring slot `s` lives at wire cell `1 + s`). Flushing
+/// the header *after* the ring cell would be unsound the other way
+/// around — [`RemoteQueue`] journals the ring cell first, and the writes
+/// below replay in journal order, so a one-sided peeker never sees a
+/// head/tail window advertising a cell that is not yet mirrored.
+fn mirror_queue_dirty(
+    fabric: &LoopbackFabric,
+    node: u32,
+    geo: &TableGeo,
+    cat: &mut Catalog,
+    obj: ObjectId,
+) {
+    let stride = geo.bucket_bytes as u64;
+    for c in cat.queue_mut(obj).take_dirty() {
+        let image = cat.queue(obj).cell_image(c);
+        fabric.write(node, DATA_REGION, geo.base + c * stride, &image);
+    }
+}
+
 /// Mirror one freshly inserted/installed row of any object kind into the
 /// node's packed data region — the population and recovery paths'
 /// post-write hook, executed on the owning shard's reactor thread (for
@@ -1132,6 +1175,7 @@ fn mirror_row_at(
         }
         ObjectKind::BTree => mirror_btree_dirty(fabric, node, geo, cat, obj),
         ObjectKind::Hopscotch => mirror_hop_dirty(fabric, node, geo, cat, obj),
+        ObjectKind::Queue => mirror_queue_dirty(fabric, node, geo, cat, obj),
     }
 }
 
@@ -1241,13 +1285,27 @@ impl ShardReactor {
                 }
             }
             ObjectKind::Hopscotch => {
-                if matches!(req.op, RpcOp::Insert | RpcOp::Delete)
-                    && resp.result == RpcResult::Ok
-                {
-                    mirror_hop_dirty(&self.fabric, self.node, &geo, &mut self.cat, req.obj);
-                }
+                // Journal-driven like the tree: since PR 10 the OCC
+                // opcodes (lock-read / update-unlock / unlock) mutate
+                // slot lock words and versions that other clients'
+                // one-sided validation reads must see, and displacement
+                // during insert dirties several slots at once. Refused
+                // ops push nothing into the journal.
+                mirror_hop_dirty(&self.fabric, self.node, &geo, &mut self.cat, req.obj);
                 if let RpcResult::Value { addr, .. } = &mut resp.result {
                     if addr.region == self.cat.hopscotch(req.obj).region {
+                        *addr =
+                            RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
+                    }
+                }
+            }
+            ObjectKind::Queue => {
+                // Journal-driven: an enqueue dirties the header wire
+                // cell plus one ring cell, a dequeue just the header;
+                // refused ops (Full, NotFound on empty) push nothing.
+                mirror_queue_dirty(&self.fabric, self.node, &geo, &mut self.cat, req.obj);
+                if let RpcResult::Value { addr, .. } = &mut resp.result {
+                    if addr.region == self.cat.queue(req.obj).region {
                         *addr =
                             RemoteAddr { region: DATA_REGION, offset: geo.base + addr.offset };
                     }
@@ -1278,6 +1336,24 @@ enum ObjResolver {
     BTree(BTreeRouteResolver),
     /// Hopscotch: one `H * item_size` neighborhood read, always.
     Hop(HopGeo),
+    /// Queue: client-cached head/tail (paper §5.5). Peeks go one-sided
+    /// against the cached front cell; mutations are owner RPCs whose
+    /// replies piggyback fresh pointers. Not a lookup backend — plain
+    /// key lookups decline to the RPC path.
+    Queue(QueueGeo),
+}
+
+/// Geometry + client pointer cache of one queue object.
+struct QueueGeo {
+    base: u64,
+    /// Capacity mask (`capacity - 1`; capacity is a power of two).
+    mask: u64,
+    cell_bytes: u32,
+    /// Cached head/tail pointers, refreshed from every RPC reply that
+    /// carries them. Staleness is safe by construction: a stale peek is
+    /// caught by the cell's seq stamp and falls back to one RPC
+    /// ([`RemoteQueue::validate_peek`]).
+    cache: QueueClientCache,
 }
 
 /// Client-side resolver: one kind-dispatched resolver per catalog object
@@ -1386,6 +1462,11 @@ impl DsCallbacks for LiveResolver {
                     len: g.h * g.item_size,
                 })
             }
+            // A queue has no per-key addresses; a generic lookup on one
+            // declines to the RPC path (the owner's `Read` handler is a
+            // peek). The dedicated peek fast path lives in
+            // [`LiveClient::queue_peek`].
+            ObjResolver::Queue(_) => None,
         }
     }
     fn lookup_end_read(&mut self, obj: ObjectId, key: u64, view: &ReadView) -> LookupOutcome {
@@ -1418,7 +1499,11 @@ impl DsCallbacks for LiveResolver {
                                 region: DATA_REGION,
                                 offset: g.base + slot * g.item_size as u64,
                             },
-                            locked: false,
+                            // The slot's wire lock bit (PR 10): a
+                            // transaction's execute-phase read must see a
+                            // foreign slot lock to abort early instead of
+                            // discovering it at validation.
+                            locked: nv.locked[off as usize],
                         }
                     }
                     // Hopscotch invariant: absence in the neighborhood is
@@ -1442,8 +1527,10 @@ impl DsCallbacks for LiveResolver {
             // leaf's wire image — its fence keys install the fresh route,
             // so the next lookup in this range is one-sided again.
             ObjResolver::BTree(b) => b.end_rpc(node, resp),
-            // Hopscotch lookups are stateless (the home slot is a hash).
-            ObjResolver::Hop(_) => {}
+            // Hopscotch lookups are stateless (the home slot is a hash);
+            // queue RPC replies refresh pointers in the *client* (the
+            // send path sees every reply, including non-lookup ones).
+            ObjResolver::Hop(_) | ObjResolver::Queue(_) => {}
         }
     }
     fn owner(&self, _obj: ObjectId, key: u64) -> u32 {
@@ -1471,6 +1558,7 @@ impl DsCallbacks for LiveResolver {
             ObjResolver::Mica(_) => ObjectKind::Mica,
             ObjResolver::BTree(_) => ObjectKind::BTree,
             ObjResolver::Hop(_) => ObjectKind::Hopscotch,
+            ObjResolver::Queue(_) => ObjectKind::Queue,
         }
     }
 }
@@ -1514,6 +1602,12 @@ impl ClientSeed {
                         h: geo.width,
                         item_size: geo.item_size,
                     }),
+                    ObjectConfig::Queue(_) => ObjResolver::Queue(QueueGeo {
+                        base: geo.base,
+                        mask: geo.mask,
+                        cell_bytes: geo.item_size,
+                        cache: QueueClientCache::default(),
+                    }),
                 }
             })
             .collect();
@@ -1555,7 +1649,34 @@ impl ClientSeed {
             lat: ClientLatency::default(),
             series: WindowSeries::new(SERIES_WINDOW_NS, WindowSeries::DEFAULT_WINDOWS),
             epoch: self.epoch,
+            val: ValBatch::default(),
+            peek_rpcs: 0,
         }
+    }
+}
+
+/// Batched inputs for the PJRT `validate_batch` artifact: structure-of-
+/// arrays matching [`crate::runtime::Engine::validate`]'s signature, one
+/// row per item-granularity OCC validation read (MICA and hopscotch —
+/// B-link leaf headers validate fences too and stay on the scalar path).
+#[derive(Default)]
+struct ValBatch {
+    expect_keys: Vec<u64>,
+    observed_keys: Vec<u64>,
+    expect_versions: Vec<u64>,
+    observed_versions: Vec<u64>,
+    locked: Vec<u64>,
+    /// Validation reads cross-checked through the artifact so far.
+    checked: u64,
+}
+
+impl ValBatch {
+    fn clear(&mut self) {
+        self.expect_keys.clear();
+        self.observed_keys.clear();
+        self.expect_versions.clear();
+        self.observed_versions.clear();
+        self.locked.clear();
     }
 }
 
@@ -1584,6 +1705,7 @@ fn kind_idx(kind: ObjectKind) -> usize {
         ObjectKind::Mica => 0,
         ObjectKind::BTree => 1,
         ObjectKind::Hopscotch => 2,
+        ObjectKind::Queue => 3,
     }
 }
 
@@ -1626,7 +1748,22 @@ fn parse_view_at(place: &Placement, offset: u64, bytes: &[u8]) -> ReadView {
             }
         }
         ObjectKind::Hopscotch => {
-            ReadView::Neighborhood(parse_neighborhood_view(bytes, geo.item_size))
+            // Two read granularities: the full `H × item_size`
+            // neighborhood (lookups) vs one bare 16-byte slot header
+            // (transaction validation reads, PR 10) — slot headers share
+            // the MICA item-header wire layout byte for byte.
+            if bytes.len() as u32 == geo.width * geo.item_size {
+                ReadView::Neighborhood(parse_neighborhood_view(bytes, geo.item_size))
+            } else {
+                ReadView::Item(parse_item_view(bytes).filter(|v| v.key != 0))
+            }
+        }
+        ObjectKind::Queue => {
+            // Queue cells are not lookup views: the peek fast path reads
+            // and parses them itself ([`LiveClient::queue_peek`]), and
+            // queues never enter a transaction's read set. A generic
+            // lookup read landing here is a miss by construction.
+            ReadView::Item(None)
         }
     }
 }
@@ -1669,6 +1806,17 @@ pub struct LiveClient {
     /// once at build; see the [`crate::cluster::report`] Observability
     /// docs.
     lat: ClientLatency,
+    /// Accumulator threading OCC validation reads through the compiled
+    /// PJRT `validate_batch` artifact (PR 10): every item-granularity
+    /// validation read whose expectation the engine exposes is
+    /// cross-checked in [`crate::runtime::BATCH`]-sized volleys against
+    /// the scalar decision the transaction engine already made. Inactive
+    /// (always empty) when the client was built without an engine.
+    val: ValBatch,
+    /// Queue peeks that missed the one-sided fast path and fell back to
+    /// an owner RPC (stale cached head: ring wrap, concurrent dequeue,
+    /// or the stale-empty case). Gauge for the §5.5 cache hit rate.
+    peek_rpcs: u64,
     /// Epoch-synced windowed completion counts (throughput time series).
     series: WindowSeries,
     /// The cluster epoch [`LiveClient::series`] windows are measured
@@ -1708,6 +1856,85 @@ impl LiveClient {
     /// when the reasons are visible).
     pub fn abort_counts(&self) -> AbortCounts {
         self.aborts
+    }
+
+    /// OCC validation reads this client has cross-checked through the
+    /// compiled `validate_batch` artifact (always 0 for clients built
+    /// without a PJRT engine). Observability gauge: proves the artifact
+    /// path is live on a run, not just compiled.
+    pub fn artifact_validations(&self) -> u64 {
+        self.val.checked
+    }
+
+    /// Queue peeks that fell back to an owner RPC (vs. the one-sided
+    /// cached-head fast path); total peeks = the queue row of the
+    /// read-latency histogram. Together they give the §5.5 hit rate.
+    pub fn peek_rpc_fallbacks(&self) -> u64 {
+        self.peek_rpcs
+    }
+
+    /// Accumulate one item-granularity validation read for the artifact
+    /// cross-check; flushes a full [`crate::runtime::BATCH`] volley
+    /// inline. No-op without an engine or for non-item views (leaf
+    /// headers validate fences, which the artifact does not model).
+    fn note_validation_read(&mut self, expect_key: u64, expect_version: u32, view: &ReadView) {
+        if self.resolver.engine.is_none() {
+            return;
+        }
+        let ReadView::Item(obs) = view else { return };
+        let (ok, ov, ol) = match obs {
+            Some(v) => (v.key, v.version as u64, v.locked as u64),
+            // A vanished item fails validation; feed the artifact the
+            // zeroed row the wire would carry so it reaches the same
+            // verdict.
+            None => (0, 0, 0),
+        };
+        self.val.expect_keys.push(expect_key);
+        self.val.observed_keys.push(ok);
+        self.val.expect_versions.push(expect_version as u64);
+        self.val.observed_versions.push(ov);
+        self.val.locked.push(ol);
+        if self.val.expect_keys.len() >= crate::runtime::BATCH {
+            self.flush_artifact_validations();
+        }
+    }
+
+    /// Run the accumulated validation rows through the artifact in
+    /// [`crate::runtime::BATCH`]-sized chunks and check every verdict
+    /// against the scalar rule the transaction engine applied.
+    fn flush_artifact_validations(&mut self) {
+        let n = self.val.expect_keys.len();
+        if n == 0 {
+            return;
+        }
+        let Some(engine) = &self.resolver.engine else {
+            self.val.clear();
+            return;
+        };
+        for start in (0..n).step_by(crate::runtime::BATCH) {
+            let end = (start + crate::runtime::BATCH).min(n);
+            let verdicts = engine
+                .validate(
+                    &self.val.expect_keys[start..end],
+                    &self.val.observed_keys[start..end],
+                    &self.val.expect_versions[start..end],
+                    &self.val.observed_versions[start..end],
+                    &self.val.locked[start..end],
+                )
+                .expect("PJRT validate_batch");
+            for (i, verdict) in verdicts.iter().enumerate() {
+                let j = start + i;
+                debug_assert_eq!(
+                    *verdict,
+                    self.val.expect_keys[j] == self.val.observed_keys[j]
+                        && self.val.expect_versions[j] == self.val.observed_versions[j]
+                        && self.val.locked[j] == 0,
+                    "artifact and scalar validation must agree"
+                );
+            }
+            self.val.checked += (end - start) as u64;
+        }
+        self.val.clear();
     }
 
     fn req_header(&mut self, cookie: u32) -> RpcHeader {
@@ -2035,8 +2262,11 @@ impl LiveClient {
     /// Issue one typed data-structure RPC to the owner of `(obj, key)` —
     /// the write-based half of the dataplane without a transaction
     /// engine around it. This is how live clients mutate tree and
-    /// hopscotch objects (which live outside the transactional opcode
-    /// set): the request travels the ring, dispatches through
+    /// hopscotch objects outside a transaction (both kinds also serve
+    /// the OCC opcodes since PR 5/10; queues use the dedicated
+    /// [`LiveClient::queue_push`]-family wrappers instead so replies
+    /// re-sync the pointer cache): the request travels the ring,
+    /// dispatches through
     /// [`Catalog::serve_rpc`] by object id and kind, and the owner
     /// mirrors whatever the op dirtied. Opcodes the backend cannot serve
     /// come back as the typed [`RpcResult::Unsupported`].
@@ -2055,6 +2285,264 @@ impl LiveClient {
         let node = self.resolver.live_owner(key);
         let req = RpcRequest { obj, key, op, tx_id: 0, value };
         self.send_rpc(node, &req).result
+    }
+
+    /// The fixed routing key every client uses for ops on queue `obj`.
+    /// Placement hash-routes requests by key and a queue lives whole on
+    /// one replica chain, so all clients must agree on a single key per
+    /// object — the object id is the natural choice.
+    fn queue_key(&self, obj: ObjectId) -> u64 {
+        let kind = self.place.geo(obj).kind;
+        assert!(kind == ObjectKind::Queue, "queue op targets a queue object; {obj:?} is {kind:?}");
+        obj.0 as u64
+    }
+
+    /// Install the `(head, tail)` pair a queue RPC reply piggybacked
+    /// into this client's pointer cache and return the element the
+    /// reply carried (if any). Every reply that already cost a round
+    /// trip re-syncs the cache for free (paper §5.5).
+    fn queue_absorb(&mut self, obj: ObjectId, result: &RpcResult) -> Option<u64> {
+        let RpcResult::Value { value: Some(bytes), .. } = result else { return None };
+        let (elem, head, tail) = decode_queue_reply(bytes).expect("malformed queue reply");
+        let ObjResolver::Queue(g) = &mut self.resolver.objs[obj.0 as usize] else {
+            unreachable!("kind checked by queue_key")
+        };
+        g.cache.install(head, tail);
+        elem
+    }
+
+    /// This client's cached `(head, tail)` queue pointers (test and
+    /// diagnostics visibility into the §5.5 cache).
+    pub fn queue_cached_pointers(&self, obj: ObjectId) -> (u64, u64) {
+        let ObjResolver::Queue(g) = &self.resolver.objs[obj.0 as usize] else {
+            panic!("{obj:?} is not a queue object")
+        };
+        (g.cache.head, g.cache.tail)
+    }
+
+    /// Enqueue `value` through the queue's owner (`Enqueue` is
+    /// write-class: a fenced primary refuses it with `PrimaryFenced`).
+    /// Returns `Ok`, `Full` from a ring at capacity, or the typed
+    /// refusal; the ack's fresh pointers land in the client cache.
+    pub fn queue_push(&mut self, obj: ObjectId, value: u64) -> RpcResult {
+        let key = self.queue_key(obj);
+        let node = self.resolver.live_owner(key);
+        let req = RpcRequest {
+            obj,
+            key,
+            op: RpcOp::Enqueue,
+            tx_id: 0,
+            value: Some(value.to_le_bytes().to_vec()),
+        };
+        let result = self.send_rpc(node, &req).result;
+        self.queue_absorb(obj, &result);
+        match result {
+            RpcResult::Value { .. } => RpcResult::Ok,
+            other => other,
+        }
+    }
+
+    /// Pop the front element through the queue's owner (`Dequeue`,
+    /// write-class). `Ok(None)` on an empty queue; `Err` carries a
+    /// typed refusal (a fenced or dead primary). The reply's pointers
+    /// re-sync the client cache.
+    pub fn queue_pop(&mut self, obj: ObjectId) -> Result<Option<u64>, RpcResult> {
+        let key = self.queue_key(obj);
+        let node = self.resolver.live_owner(key);
+        let req = RpcRequest { obj, key, op: RpcOp::Dequeue, tx_id: 0, value: None };
+        let resp = self.send_rpc(node, &req);
+        match resp.result {
+            RpcResult::Value { .. } => Ok(self.queue_absorb(obj, &resp.result)),
+            RpcResult::NotFound => Ok(None),
+            other => Err(other),
+        }
+    }
+
+    /// Front element without popping. Fast path (paper §5.5): one
+    /// one-sided 16-byte read of the cell the cached head points at,
+    /// validated against the cell's seq stamp — a hit costs no RPC and
+    /// no server CPU. A stale cache (ring wrap, moved head, or the
+    /// stale-empty case the PR 10 `validate_peek` fix covers) falls
+    /// back to one owner RPC, which also refreshes the cached pointers.
+    pub fn queue_peek(&mut self, obj: ObjectId) -> Result<Option<u64>, RpcResult> {
+        let key = self.queue_key(obj);
+        let node = self.resolver.live_owner(key);
+        let (cache, cell_off) = {
+            let ObjResolver::Queue(g) = &self.resolver.objs[obj.0 as usize] else {
+                unreachable!("kind checked by queue_key")
+            };
+            let slot = g.cache.head & g.mask;
+            (g.cache, g.base + (1 + slot) * g.cell_bytes as u64)
+        };
+        let read_start = Instant::now();
+        self.readbuf.resize(QUEUE_CELL_HEADER as usize, 0);
+        self.fabric.read_into(node, DATA_REGION, cell_off, &mut self.readbuf);
+        let cell = parse_cell_view(&self.readbuf).expect("malformed queue cell image");
+        self.lat.read[kind_idx(ObjectKind::Queue)].record(read_start.elapsed().as_nanos() as u64);
+        match RemoteQueue::validate_peek(&cache, cell) {
+            PeekOutcome::Front(v) => Ok(Some(v)),
+            PeekOutcome::Empty => Ok(None),
+            PeekOutcome::NeedRpc => {
+                self.peek_rpcs += 1;
+                let resp = self.send_rpc(node, &read_rpc_request(obj, key));
+                match resp.result {
+                    RpcResult::Value { .. } => Ok(self.queue_absorb(obj, &resp.result)),
+                    RpcResult::NotFound => Ok(None),
+                    other => Err(other),
+                }
+            }
+        }
+    }
+
+    /// B-link range scan (PR 10): every `(key, value)` pair with
+    /// `low <= key <= high`, ascending. Keys hash-route across nodes,
+    /// so every live node's tree holds a slice of the range — each is
+    /// walked by **one-sided fence-chain hops**: read the leaf the
+    /// cached route covers, check the cursor against its fence keys,
+    /// hop to `leaf.high`. All chains advance in lockstep rounds and
+    /// each round's leaf reads go out doorbell-batched per node. A read
+    /// that lands on a moved/split leaf triggers the bounded repair
+    /// ladder: one RPC re-traversal (whose reply both answers the hop
+    /// and repairs the route), then — when even that cannot name a
+    /// covering leaf, e.g. a cursor key absent at a split boundary —
+    /// one `RoutingSnapshot` refresh ([`Self::warm_routes`]). Replicated
+    /// clusters see each key on several nodes; the sorted merge dedups.
+    pub fn lookup_range(&mut self, obj: ObjectId, low: u64, high: u64) -> Vec<(u64, u64)> {
+        let geo = *self.place.geo(obj);
+        assert!(
+            geo.kind == ObjectKind::BTree,
+            "lookup_range targets a B-link object; {obj:?} is {:?}",
+            geo.kind
+        );
+        let mut out: BTreeMap<u64, u64> = BTreeMap::new();
+        if low > high {
+            return Vec::new();
+        }
+        // One cursor per live node's fence chain.
+        let mut cursors: Vec<(u32, u64)> = (0..self.nodes)
+            .filter(|&n| self.resolver.alive[n as usize])
+            .map(|n| (n, low))
+            .collect();
+        let fabric = self.fabric.clone();
+        let mut scratch = std::mem::take(&mut self.batchbuf);
+        while !cursors.is_empty() {
+            // Phase 1: resolve every chain's cursor to a leaf route.
+            // Cold or stale routes go through the repair ladder to the
+            // leaf view directly; warm ones join the doorbell batch.
+            let mut reads: Vec<(u32, u64, u64, u32)> = Vec::new(); // (node, cursor, off, len)
+            let mut leaves: Vec<(u32, u64, LeafView)> = Vec::new();
+            for &(node, cursor) in &cursors {
+                let hint = {
+                    let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize] else {
+                        unreachable!("kind checked above")
+                    };
+                    b.start(node, cursor)
+                };
+                match hint {
+                    Some(h) => reads.push((node, cursor, h.addr.offset, h.len)),
+                    None => {
+                        if let Some(v) = self.scan_repair(obj, node, cursor) {
+                            leaves.push((node, cursor, v));
+                        }
+                    }
+                }
+            }
+            // Phase 2: this round's warm-route leaf reads, one doorbell
+            // volley per owner node (chains of different nodes share
+            // the round, like a lookup batch's first reads).
+            for node in 0..self.nodes {
+                let batch: Vec<&(u32, u64, u64, u32)> =
+                    reads.iter().filter(|r| r.0 == node).collect();
+                if batch.is_empty() {
+                    continue;
+                }
+                let reqs: Vec<(u64, u32)> = batch.iter().map(|r| (r.2, r.3)).collect();
+                let mut views: Vec<Option<LeafView>> = Vec::with_capacity(reqs.len());
+                let read_start = Instant::now();
+                fabric.read_batch(node, DATA_REGION, &reqs, &mut scratch, |_, bytes| {
+                    views.push(parse_leaf_view(bytes));
+                });
+                let read_ns = read_start.elapsed().as_nanos() as u64;
+                for _ in &reqs {
+                    self.lat.read[kind_idx(ObjectKind::BTree)].record(read_ns);
+                }
+                for (&&(n, cursor, _, _), view) in batch.iter().zip(views) {
+                    // Feed the shared resolver: a fence hit clears the
+                    // pending entry, a miss invalidates the stale route.
+                    let outcome = {
+                        let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize]
+                        else {
+                            unreachable!("kind checked above")
+                        };
+                        b.end_read(n, cursor, view.as_ref())
+                    };
+                    match outcome {
+                        LookupOutcome::Hit { .. } | LookupOutcome::Absent => {
+                            let v = view.expect("fence-validated read has a leaf");
+                            leaves.push((n, cursor, v));
+                        }
+                        LookupOutcome::NeedRpc => {
+                            if let Some(v) = self.scan_repair(obj, n, cursor) {
+                                leaves.push((n, cursor, v));
+                            }
+                        }
+                    }
+                }
+            }
+            // Phase 3: collect in-range entries, hop each chain to its
+            // leaf's high fence.
+            cursors.clear();
+            for (node, _, leaf) in leaves {
+                for &(k, v) in &leaf.entries {
+                    if k >= low && k <= high {
+                        out.insert(k, v);
+                    }
+                }
+                if leaf.high != u64::MAX && leaf.high <= high {
+                    cursors.push((node, leaf.high));
+                }
+            }
+        }
+        self.batchbuf = scratch;
+        out.into_iter().collect()
+    }
+
+    /// The scan's bounded repair ladder for one `(node, cursor)` hop
+    /// with no usable route: an RPC re-traversal first (its reply
+    /// carries the covering leaf image and installs the fresh route);
+    /// when the cursor key is absent there (`NotFound` carries no leaf
+    /// image — e.g. a fence key deleted after a split), one
+    /// `RoutingSnapshot` refresh names the covering leaf by route and a
+    /// single one-sided read fetches it. `None` only when the node's
+    /// tree cannot cover the cursor at all (dead node / empty tree).
+    fn scan_repair(&mut self, obj: ObjectId, node: u32, cursor: u64) -> Option<LeafView> {
+        let resp = self.send_rpc(node, &read_rpc_request(obj, cursor));
+        {
+            let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize] else {
+                unreachable!("scan_repair serves lookup_range's B-link object")
+            };
+            b.end_rpc(node, &resp);
+        }
+        if let RpcResult::Value { value: Some(bytes), .. } = &resp.result {
+            return parse_leaf_view(bytes);
+        }
+        // Absent cursor key: re-warm this object's routes (one snapshot
+        // round trip) and read the covering leaf one-sided.
+        self.warm_routes(obj);
+        let hint = {
+            let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize] else {
+                unreachable!("scan_repair serves lookup_range's B-link object")
+            };
+            b.start(node, cursor)
+        }?;
+        self.readbuf.resize(hint.len as usize, 0);
+        self.fabric.read_into(node, DATA_REGION, hint.addr.offset, &mut self.readbuf);
+        let view = parse_leaf_view(&self.readbuf);
+        let ObjResolver::BTree(b) = &mut self.resolver.objs[obj.0 as usize] else {
+            unreachable!("scan_repair serves lookup_range's B-link object")
+        };
+        b.end_read(node, cursor, view.as_ref());
+        view
     }
 
     /// Expire this client's lease on `node`: lookups and transactions
@@ -2169,17 +2657,19 @@ impl LiveClient {
                     self.place.objects()
                 );
                 // MICA backends join transactions at item granularity,
-                // B-link trees at leaf granularity (PR 5); hopscotch
-                // objects serve only the lookup path. Reject those at
-                // admission — a kind mismatch discovered mid-schedule
-                // would otherwise surface as an engine panic with other
-                // transactions' locks still held.
+                // B-link trees at leaf granularity (PR 5), hopscotch
+                // tables at slot granularity (PR 10). Queue objects have
+                // no per-key OCC word — their opcode set is
+                // Enqueue/Dequeue only — so reject them at admission: a
+                // kind mismatch discovered mid-schedule would otherwise
+                // surface as an engine panic with other transactions'
+                // locks still held.
                 assert!(
                     matches!(
                         self.place.geo(item.obj).kind,
-                        ObjectKind::Mica | ObjectKind::BTree
+                        ObjectKind::Mica | ObjectKind::BTree | ObjectKind::Hopscotch
                     ),
-                    "transactions require MICA- or BTree-backed objects; {:?} (key {}) is {:?}",
+                    "transactions require MICA-, BTree- or hopscotch-backed objects; {:?} (key {}) is {:?}",
                     item.obj,
                     item.key,
                     self.place.geo(item.obj).kind
@@ -2316,6 +2806,15 @@ impl LiveClient {
             let (slot, tag) = (f.slot, f.tag);
             let step = {
                 let tx = slots[slot].as_mut().expect("completion for an inactive tx slot");
+                // Chain-item validation reads arrive as RPC stand-ins;
+                // cross-check them through the artifact too.
+                if f.as_read && tx.engine.phase_index() == Some(1) {
+                    if let (Some((ek, ev)), TxInput::Read(view)) =
+                        (tx.engine.read_expectation(tag as usize), &input)
+                    {
+                        self.note_validation_read(ek, ev, view);
+                    }
+                }
                 let step = tx.engine.complete(&mut self.resolver, tag, input);
                 note_tx_phase(&mut self.lat, tx);
                 step
@@ -2323,6 +2822,10 @@ impl LiveClient {
             self.pump_tx(slot, step, &mut slots, &mut free_slots, &mut live, &mut outcomes, &mut rpcq, &mut reads, &mut scratch);
         }
         self.batchbuf = scratch;
+        // Drain any partial artifact volley before handing back: the
+        // cross-check gauge must cover every validation read the batch
+        // issued, not just full BATCH multiples.
+        self.flush_artifact_validations();
         assert!(rpcq.is_empty() && inflight.is_empty(), "I/O left behind by finished txs");
         outcomes.into_iter().map(|o| o.expect("every transaction resolves")).collect()
     }
@@ -2427,6 +2930,14 @@ impl LiveClient {
                     self.lat.read[kind_idx(kind)].record(read_ns);
                 }
                 for (&(tag, _, _), view) in reads[node].iter().zip(views) {
+                    // Validate-volley reads (PHASE_LABELS[1]) also flow
+                    // through the compiled `validate_batch` artifact as
+                    // a batched cross-check of the scalar decision.
+                    if tx.engine.phase_index() == Some(1) {
+                        if let Some((ek, ev)) = tx.engine.read_expectation(tag as usize) {
+                            self.note_validation_read(ek, ev, &view);
+                        }
+                    }
                     match tx.engine.complete(&mut self.resolver, tag, TxInput::Read(view)) {
                         TxStep::Issue(mut more) => next_posts.append(&mut more),
                         d @ TxStep::Done(_) => done = Some(d),

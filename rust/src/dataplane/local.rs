@@ -12,9 +12,12 @@
 //! ([`LocalCluster::new_hetero`]): B-link objects resolve through the
 //! shared [`BTreeRouteResolver`] (cached-route leaf reads, RPC
 //! re-traversal + repair on fence miss) and join transactions at leaf
-//! granularity; hopscotch objects resolve via owner RPCs and stay
-//! outside the transactional opcode set (a write-set item naming one
-//! aborts with the typed `Unsupported`).
+//! granularity; hopscotch objects resolve via owner RPCs and — since
+//! PR 10 — join transactions at slot (item) granularity: a lock-read
+//! pins the slot against displacement and validation reads its 16-byte
+//! slot header one-sided. Queue objects are the RPC-only kind now
+//! (`Enqueue`/`Dequeue` through the owner; a tx write-set item naming
+//! one aborts with the typed `Unsupported`).
 //!
 //! The batched engine contract is driven here with a window of one:
 //! emitted [`TxPost`]s queue up and are served strictly in order
@@ -27,7 +30,7 @@ use std::collections::VecDeque;
 use crate::ds::api::{LookupHint, LookupOutcome, ObjectId, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::btree::{BTreeRouteResolver, LEAF_BYTES};
 use crate::ds::catalog::{Backend, Catalog, CatalogConfig, ObjectConfig, ObjectKind};
-use crate::ds::mica::{MicaClient, MicaConfig};
+use crate::ds::mica::{parse_item_view, MicaClient, MicaConfig};
 use crate::mem::{PageSize, RegionMode, RemoteAddr};
 
 use super::onetwo::{DsCallbacks, LkAction, LkInput, LkResult, LookupSm, ReadView};
@@ -39,9 +42,10 @@ enum LocalObj {
     Mica(MicaClient),
     /// B-link tree: the shared cached-route resolver.
     BTree(BTreeRouteResolver),
-    /// Hopscotch: the reference driver resolves these via owner RPCs
-    /// (the live path's arithmetic neighborhood reads need the packed
-    /// mirror, which the fabric-less driver does not build).
+    /// Hopscotch and queue: the reference driver resolves these via
+    /// owner RPCs (the live path's arithmetic neighborhood reads and
+    /// cached queue pointers need the packed mirror, which the
+    /// fabric-less driver does not build).
     Rpc,
 }
 
@@ -290,7 +294,7 @@ impl LocalCluster {
                     ObjectConfig::BTree(_) => {
                         LocalObj::BTree(BTreeRouteResolver::new(n, LEAF_BYTES))
                     }
-                    ObjectConfig::Hopscotch(_) => LocalObj::Rpc,
+                    ObjectConfig::Hopscotch(_) | ObjectConfig::Queue(_) => LocalObj::Rpc,
                 }
             })
             .collect();
@@ -350,7 +354,18 @@ impl LocalCluster {
                     ReadView::Item(table.item_view(addr))
                 }
             }
-            // The reference driver's hopscotch resolver is RPC-only: no
+            // Hopscotch lookups are RPC-only here, but OCC validation
+            // still reads the 16-byte slot header one-sided at the
+            // address the lock-read reply cached.
+            Backend::Hopscotch(table) => {
+                let slot = addr.offset / table.item_size() as u64;
+                if addr.region == table.region && slot < table.slot_count() {
+                    ReadView::Item(parse_item_view(&table.slot_image(slot)))
+                } else {
+                    ReadView::Item(None)
+                }
+            }
+            // Queue resolvers are RPC-only in the reference driver: no
             // resolver ever issues a one-sided read against one.
             other => panic!(
                 "one-sided read against a {} backend in the reference driver",

@@ -27,22 +27,39 @@
 //! * [`live`] — the live composition over the loopback fabric, a
 //!   genuine **heterogeneous multi-object dataplane**: every node hosts
 //!   a storage catalog ([`crate::ds::catalog`]) of independent objects —
-//!   MICA tables, B-link trees, hopscotch tables — packed into one
-//!   registered region, and the cluster-wide placement map routes
-//!   `(ObjectId, key)` to `(node, shard, offset)` by backend kind (MICA
-//!   shards by bucket range across every lane; tree/hopscotch objects
-//!   live whole on a per-object home shard). Lookups dispatch per kind —
-//!   fine-grained bucket reads, client-cached-route leaf reads with RPC
-//!   re-traversal + route repair on a split, one-shot `H × item_size`
-//!   neighborhood reads — and a `read_batch` doorbell group may span
-//!   kinds ([`live::LiveClient::lookup_batch_items`]). Transactions mix
-//!   MICA objects freely (four-table TATP and SmallBank run natively)
-//!   behind an **adaptive window** ([`live::TxWindow`]); opcodes a
-//!   backend cannot serve answer with the typed
-//!   [`crate::ds::api::RpcResult::Unsupported`] instead of panicking a
-//!   server lane. The live driver also carries the fault machinery:
-//!   per-node kill/stall/fence hooks, lease-tracking clients, and
-//!   crash recovery that rebuilds a restarted node from its peers.
+//!   MICA tables, B-link trees, hopscotch tables, FIFO queues — packed
+//!   into one registered region, and the cluster-wide placement map
+//!   routes `(ObjectId, key)` to `(node, shard, offset)` by backend kind
+//!   (MICA shards by bucket range across every lane; tree, hopscotch and
+//!   queue objects live whole on a per-object home shard). Lookups
+//!   dispatch per kind — fine-grained bucket reads, client-cached-route
+//!   leaf reads with RPC re-traversal + route repair on a split,
+//!   one-shot `H × item_size` neighborhood reads — and a `read_batch`
+//!   doorbell group may span kinds
+//!   ([`live::LiveClient::lookup_batch_items`]). Transactions mix MICA,
+//!   B-link, and (PR 10) hopscotch objects freely (four-table TATP and
+//!   SmallBank run natively) behind an **adaptive window**
+//!   ([`live::TxWindow`]); opcodes a backend cannot serve answer with
+//!   the typed [`crate::ds::api::RpcResult::Unsupported`] instead of
+//!   panicking a server lane. The live driver also carries the fault
+//!   machinery: per-node kill/stall/fence hooks, lease-tracking clients,
+//!   and crash recovery that rebuilds a restarted node from its peers.
+//!
+//!   PR 10 finishes the access-pattern matrix on this driver. **Range
+//!   scans**: [`live::LiveClient::lookup_range`] walks each node's
+//!   B-link fence chain by one-sided next-leaf hops — per round, every
+//!   chain's leaf read joins one doorbell batch per owner node, fence
+//!   keys validate each leaf against its cursor, and a stale or split
+//!   route falls back through a bounded repair ladder (one RPC
+//!   re-traversal, then one `RoutingSnapshot` refresh) before the hop
+//!   continues one-sided. **Queues**: `Enqueue`/`Dequeue` are
+//!   write-class RPCs on the owner, while
+//!   [`live::LiveClient::queue_peek`] serves from the client-cached
+//!   `(head, tail)` pair (paper §5.5) by one seq-validated 16-byte
+//!   one-sided read of the front cell; every RPC reply piggybacks fresh
+//!   pointers, and a stale cache — ring wrap, moved head, or the
+//!   stale-empty case — pays exactly one fallback RPC (counted by
+//!   [`live::LiveClient::peek_rpc_fallbacks`]).
 //! * [`local`] — the reference in-process driver over per-node catalogs
 //!   (the semantic baseline the simulator and live driver must match).
 //!

@@ -98,6 +98,8 @@ pub fn encode_request_into(req: &RpcRequest, out: &mut Vec<u8>) {
         RpcOp::ReplicaDelete => 7,
         RpcOp::RoutingSnapshot => 8,
         RpcOp::ChainScan => 9,
+        RpcOp::Enqueue => 10,
+        RpcOp::Dequeue => 11,
     });
     out.extend_from_slice(&[0u8; 3]); // pad
     out.extend_from_slice(&req.key.to_le_bytes());
@@ -150,6 +152,8 @@ pub fn decode_request(b: &[u8]) -> Option<RpcRequest> {
         7 => RpcOp::ReplicaDelete,
         8 => RpcOp::RoutingSnapshot,
         9 => RpcOp::ChainScan,
+        10 => RpcOp::Enqueue,
+        11 => RpcOp::Dequeue,
         _ => return None,
     };
     let key = u64::from_le_bytes(b[8..16].try_into().ok()?);
@@ -476,6 +480,8 @@ mod tests {
             RpcOp::ReplicaDelete,
             RpcOp::RoutingSnapshot,
             RpcOp::ChainScan,
+            RpcOp::Enqueue,
+            RpcOp::Dequeue,
         ] {
             let req = RpcRequest { obj: ObjectId(1), key: 2, op, tx_id: 3, value: None };
             assert_eq!(decode_request(&encode_request(&req)).unwrap().op, op);

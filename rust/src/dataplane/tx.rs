@@ -39,19 +39,28 @@
 //!   version. Both kinds' validation reads share the same per-node
 //!   doorbell `read_batch` volley — a transaction spanning a MICA table
 //!   and a tree validates in one round.
-//! * Hopscotch objects stay outside the opcode set; drivers reject them
-//!   at admission and a server answering [`RpcResult::Unsupported`]
-//!   aborts cleanly ([`AbortReason::Unsupported`]).
+//! * Hopscotch items lock, validate and commit at **item** (slot)
+//!   granularity since PR 10: slot headers share the MICA item-header
+//!   layout byte for byte, so their validation reads are the same
+//!   [`VALIDATE_READ_BYTES`]-byte item-header reads and need no new
+//!   parse arm. A foreign slot lock pins the slot against hopscotch
+//!   displacement (see [`crate::ds::hopscotch`]).
+//! * Queue objects stay outside the opcode set; drivers reject them at
+//!   admission and a server answering [`RpcResult::Unsupported`] aborts
+//!   cleanly ([`AbortReason::Unsupported`]).
 //!
 //! Commit-phase `Insert`/`Delete` items acquire no execution-phase lock,
-//! so their server result is a typed **per-item** outcome inside a
-//! `Committed` transaction (`write_results[j]`), never an abort: `Full`
-//! from a MICA table at capacity — and, for tree items, `LockConflict`
-//! when a concurrent transaction's leaf lock froze the target leaf's
-//! membership. Callers that need those structural writes applied must
-//! inspect `write_results` and retry the refused item (promoting the
-//! refusal to a commit-phase abort needs post-validation failure
-//! handling — a ROADMAP follow-up).
+//! so most of their server results are typed **per-item** outcomes
+//! inside a `Committed` transaction (`write_results[j]`): `Full` from a
+//! table at capacity, `NotFound` from a delete of an absent key.
+//! **`LockConflict` is the exception** (PR 10, carried from PR 5): a
+//! structural insert/delete refused because a concurrent transaction's
+//! lock froze the target's membership is a serialization failure, not a
+//! capacity fact — the engine promotes it to a post-validation abort
+//! ([`AbortReason::LockConflict`]), releasing any still-held locks, so
+//! callers retry the whole transaction instead of silently committing a
+//! partial write set. Updates already applied by the same commit volley
+//! are re-applied on retry (upsert semantics make the retry idempotent).
 //!
 //! The engine is sans-io and **batched**: every phase emits *all* of its
 //! independent actions at once as tagged [`TxPost`]s — the execute-phase
@@ -576,6 +585,20 @@ impl TxEngine {
                     TxInput::Rpc(r) => r,
                     TxInput::Read(_) => panic!("unexpected read in commit"),
                 };
+                // An UpdateUnlock that reached the server released our
+                // lock whatever it answered — drop it from the held set
+                // so a post-commit abort does not re-unlock it.
+                if self.write_set[j].kind == WriteKind::Update {
+                    self.locks_held.retain(|&l| self.commit_rep[l] != j);
+                }
+                // Structural (Insert/Delete) LockConflict refusals are
+                // serialization failures, not per-item facts: promote to
+                // a post-validation abort once the volley drains.
+                if matches!(self.write_set[j].kind, WriteKind::Insert | WriteKind::Delete)
+                    && resp.result == RpcResult::LockConflict
+                {
+                    self.fail.get_or_insert(AbortReason::LockConflict);
+                }
                 self.write_results[j] = Some(resp.result);
             }
             Phase::Abort(_) => {
@@ -777,6 +800,21 @@ impl TxEngine {
 
     fn in_write_set(&self, item: &TxItem) -> bool {
         self.write_set.iter().any(|w| w.obj == item.obj && w.key == item.key)
+    }
+
+    /// The validation expectation of read-set item `i` — the key and the
+    /// version the execute phase observed — when item `i` validates at
+    /// all (found, addressed, and not pinned by our own write set).
+    /// Drivers feed these through the runtime engine's batched
+    /// `validate` kernel as a cross-check of the scalar validation path
+    /// (PR 10 threads the PJRT `validate_batch` artifact into the live
+    /// scheduler; see [`crate::runtime`]).
+    pub fn read_expectation(&self, i: usize) -> Option<(u64, Version)> {
+        let meta = (*self.read_meta.get(i)?)?;
+        if !meta.found || meta.addr.is_none() || self.in_write_set(&self.read_set[i]) {
+            return None;
+        }
+        Some((self.read_set[i].key, meta.version))
     }
 
     fn check_validation(
@@ -1078,11 +1116,92 @@ mod tests {
         assert_eq!(out, TxOutcome::Committed { write_results: vec![] });
     }
 
+    #[test]
+    fn commit_phase_structural_lock_conflict_promotes_to_abort() {
+        // Regression (PR 10, carried from PR 5): a commit-phase Insert
+        // refused by a concurrent transaction's lock must abort the
+        // transaction, not ride as a per-item result inside Committed.
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            40,
+            vec![],
+            vec![TxItem::update(KV, 5), TxItem::insert(KV, 6)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 1, "only the update lock-reads; inserts lock nothing");
+        let commits = issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1)));
+        assert_eq!(commits.len(), 2);
+        // The update commits (its UpdateUnlock released our lock), then
+        // the insert is refused by a foreign lock on the target.
+        assert!(issued(tx.complete(&mut cb, 0, ok_rpc())).is_empty());
+        let out = finished(tx.complete(
+            &mut cb,
+            1,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::LockConflict)),
+        ));
+        // No unlock volley follows: the UpdateUnlock already released
+        // the only lock we held, so the abort completes immediately.
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::LockConflict));
+    }
+
+    #[test]
+    fn commit_phase_full_and_notfound_stay_per_item_results() {
+        // Capacity facts are not serialization failures: Full (and a
+        // delete's NotFound) still surface per item inside Committed.
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            41,
+            vec![],
+            vec![TxItem::insert(KV, 5), TxItem::delete(KV, 6)],
+        );
+        let commits = issued(tx.start(&mut cb));
+        assert_eq!(commits.len(), 2, "structural writes go straight to commit");
+        assert!(issued(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Full))))
+            .is_empty());
+        let out = finished(tx.complete(
+            &mut cb,
+            1,
+            TxInput::Rpc(RpcResponse::inline(RpcResult::NotFound)),
+        ));
+        assert_eq!(
+            out,
+            TxOutcome::Committed {
+                write_results: vec![RpcResult::Full, RpcResult::NotFound]
+            }
+        );
+    }
+
+    #[test]
+    fn read_expectations_mirror_the_validation_set() {
+        let mut cb = MockCb;
+        let mut tx = TxEngine::begin(
+            42,
+            vec![TxItem::read(KV, 7), TxItem::read(KV, 8), TxItem::read(KV, 9)],
+            vec![TxItem::update(KV, 9)],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 4);
+        assert_eq!(tx.read_expectation(0), None, "unresolved reads expect nothing");
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        assert!(issued(tx.complete(&mut cb, 0, item_read(7, 2, false))).is_empty());
+        assert!(issued(tx.complete(&mut cb, 1, TxInput::Read(ReadView::Item(None)))).is_empty());
+        let validates = issued(tx.complete(&mut cb, 2, item_read(9, 5, true)));
+        assert_eq!(validates.len(), 1, "absent and own-write-set items skip validation");
+        // The expectations mirror exactly the items that validate.
+        assert_eq!(tx.read_expectation(0), Some((7, 2)));
+        assert_eq!(tx.read_expectation(1), None, "absent item has no expectation");
+        assert_eq!(tx.read_expectation(2), None, "own write-set item is pinned");
+        assert_eq!(tx.read_expectation(3), None, "out of range");
+    }
+
     /// Mixed-kind mock: object 0 is MICA (as in [`MockCb`]), object 1 is
-    /// a B-link tree whose every key lives in a leaf at `key * 1024`.
+    /// a B-link tree whose every key lives in a leaf at `key * 1024`,
+    /// object 2 is a hopscotch table (slot headers share the MICA item
+    /// layout, so its reads complete as `ReadView::Item` too).
     struct HeteroCb;
 
     const TREE: ObjectId = ObjectId(1);
+    const HOP: ObjectId = ObjectId(2);
 
     fn leaf_addr_of(key: u64) -> RemoteAddr {
         RemoteAddr { region: MrKey(0), offset: key * 1024 }
@@ -1122,6 +1241,8 @@ mod tests {
         fn backend_kind(&self, obj: ObjectId) -> ObjectKind {
             if obj == TREE {
                 ObjectKind::BTree
+            } else if obj == HOP {
+                ObjectKind::Hopscotch
             } else {
                 ObjectKind::Mica
             }
@@ -1233,6 +1354,49 @@ mod tests {
         let out =
             finished(tx.complete(&mut cb, 0, TxInput::Rpc(RpcResponse::inline(RpcResult::Ok))));
         assert!(matches!(out, TxOutcome::Committed { .. }));
+    }
+
+    #[test]
+    fn hopscotch_items_join_the_tx_opcode_set() {
+        // PR 10: a transaction reading and updating hopscotch items runs
+        // the full OCC cycle — lock-read, item-header validation read
+        // (slot headers parse as ItemView), UpdateUnlock commit.
+        let mut cb = HeteroCb;
+        let mut tx = TxEngine::begin(
+            26,
+            vec![TxItem::read(HOP, 3)],
+            vec![TxItem::update(HOP, 9).with_value(vec![5u8; 8])],
+        );
+        let posts = issued(tx.start(&mut cb));
+        assert_eq!(posts.len(), 2, "one lookup + one lock-read");
+        assert!(posts.iter().any(is_lock_read));
+        assert!(issued(tx.complete(&mut cb, LOCK_TAG, value_resp(1))).is_empty());
+        let validates = issued(tx.complete(&mut cb, 0, item_read(3, 4, false)));
+        assert_eq!(validates.len(), 1);
+        match &validates[0].op {
+            TxOp::Read { len, .. } => assert_eq!(
+                *len,
+                VALIDATE_READ_BYTES,
+                "hopscotch slot headers validate as item headers"
+            ),
+            other => panic!("validation must be a read, got {other:?}"),
+        }
+        let commits = issued(tx.complete(&mut cb, 0, item_read(3, 4, false)));
+        assert_eq!(commits.len(), 1);
+        match &commits[0].op {
+            TxOp::Rpc { req, .. } => assert_eq!(req.op, RpcOp::UpdateUnlock),
+            other => panic!("expected commit RPC, got {other:?}"),
+        }
+        let out = finished(tx.complete(&mut cb, 0, ok_rpc()));
+        assert!(matches!(out, TxOutcome::Committed { .. }));
+        // A foreign slot lock observed at validation aborts, same as the
+        // other kinds.
+        let mut tx = TxEngine::begin(27, vec![TxItem::read(HOP, 3)], vec![]);
+        assert_eq!(issued(tx.start(&mut cb)).len(), 1);
+        let validates = issued(tx.complete(&mut cb, 0, item_read(3, 4, false)));
+        assert_eq!(validates.len(), 1);
+        let out = finished(tx.complete(&mut cb, 0, item_read(3, 4, true)));
+        assert_eq!(out, TxOutcome::Aborted(AbortReason::ValidationLocked));
     }
 
     #[test]

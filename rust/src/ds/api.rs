@@ -66,6 +66,14 @@ pub enum RpcOp {
     ReplicaUpsert,
     /// Apply a committed delete on a backup replica.
     ReplicaDelete,
+    /// Append to a queue object (paper §5.5). `key` is ignored; the
+    /// element rides in the first 8 value bytes. The reply carries the
+    /// fresh `(head, tail)` pair so the client re-syncs its cached
+    /// pointers on every enqueue it pays a round trip for anyway.
+    Enqueue,
+    /// Pop the front of a queue object. The reply carries the element
+    /// plus the fresh `(head, tail)` pair; `NotFound` when empty.
+    Dequeue,
     /// Bulk-read a B-link tree's routing table: the reply value carries
     /// every leaf's `(low key, offset)` pair so a cold client warms its
     /// whole route cache in one round trip (also used by recovery to
@@ -97,6 +105,8 @@ impl RpcOp {
                 | RpcOp::Delete
                 | RpcOp::ReplicaUpsert
                 | RpcOp::ReplicaDelete
+                | RpcOp::Enqueue
+                | RpcOp::Dequeue
         )
     }
 }

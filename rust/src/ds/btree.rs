@@ -22,10 +22,12 @@
 //! naming the owning transaction — so:
 //!
 //! * a write-set item locks the *leaf* covering its key
-//!   ([`RemoteBTree::lock_read`]); concurrent inserts and deletes into a
-//!   locked leaf are refused with `LockConflict`, which freezes the
-//!   leaf's membership (no split can relocate keys out from under a
-//!   held lock);
+//!   ([`RemoteBTree::lock_read`]); *foreign* inserts and deletes into a
+//!   locked leaf are refused with `LockConflict`, so no concurrent split
+//!   can relocate keys out from under a held lock. The holder's own
+//!   insert proceeds — and may split the held leaf, with the lock word
+//!   and per-key holds partitioned across the halves by the new fence
+//!   ([`RemoteBTree::try_insert_tx`]);
 //! * a read-set item validates with a one-sided
 //!   [`LEAF_HEADER_BYTES`]-byte read of its cached leaf address
 //!   ([`parse_leaf_header`]): fences that no longer cover the key mean a
@@ -413,17 +415,32 @@ impl RemoteBTree {
         }
     }
 
+    /// Insert (owner side; reached via RPC), non-transactional: behaves
+    /// like [`try_insert_tx`](Self::try_insert_tx) with `tx_id` 0, so any
+    /// write-locked leaf refuses it.
+    pub fn try_insert(&mut self, key: u64, value: u64) -> RpcResult {
+        self.try_insert_tx(key, value, 0)
+    }
+
     /// Insert (owner side; reached via RPC). `Full` when the leaf array
     /// is at capacity and the insert would split — nothing is mutated in
     /// that case, so callers can propagate the typed error. Inserts into
-    /// a write-locked leaf are refused with `LockConflict` — **including
-    /// the lock holder's own** — so a held leaf can never split and its
-    /// membership is frozen for the lock's lifetime (what makes
-    /// leaf-version validation and update-after-lock sound).
-    pub fn try_insert(&mut self, key: u64, value: u64) -> RpcResult {
+    /// a leaf write-locked by a *different* transaction are refused with
+    /// `LockConflict`: membership is frozen for foreign writers, so no
+    /// concurrent split can relocate keys out from under a held lock.
+    /// The lock **holder's own** insert proceeds (PR 10 — refusing it
+    /// wedged any transaction inserting into its own locked range); if
+    /// the insert overflows the leaf, the split carries the lock word
+    /// and partitions the per-key holds across the two halves by the new
+    /// fence, so the holder's commit volley still finds — and releases —
+    /// every hold it took. (A concurrent reader of the split leaf sees
+    /// changed fences/version and aborts via validation, exactly as for
+    /// an unlocked split.)
+    pub fn try_insert_tx(&mut self, key: u64, value: u64, tx_id: u64) -> RpcResult {
         self.dirty.clear();
         let l = self.descend(key) as usize;
-        if self.leaves[l].view.lock_tx != 0 {
+        let lock = self.leaves[l].view.lock_tx;
+        if lock != 0 && (tx_id == 0 || lock != tx_id) {
             return RpcResult::LockConflict;
         }
         let must_split = self.leaves[l].view.entries.len() >= LEAF_CAP
@@ -457,27 +474,36 @@ impl RemoteBTree {
     }
 
     fn split_leaf(&mut self, l: u32) {
-        let (mid_key, right_view) = {
-            let leaf = &mut self.leaves[l as usize].view;
-            // Inserts into a locked leaf are refused, so a splitting leaf
-            // is always unlocked and membership never moves under a lock.
-            debug_assert_eq!(leaf.lock_tx, 0, "a locked leaf must never split");
-            let mid = leaf.entries.len() / 2;
-            let right_entries = leaf.entries.split_off(mid);
+        let (mid_key, right_view, right_locked) = {
+            let leaf = &mut self.leaves[l as usize];
+            let mid = leaf.view.entries.len() / 2;
+            let right_entries = leaf.view.entries.split_off(mid);
             let mid_key = right_entries[0].0;
+            // Only the lock holder's own insert can split a locked leaf
+            // (foreign inserts are refused), so any lock word here is the
+            // splitting transaction's: each per-key hold follows its key
+            // across the new fence, and each half keeps the lock word only
+            // while it still carries holds.
+            let lock_tx = leaf.view.lock_tx;
+            let right_locked: Vec<u64> =
+                leaf.locked_keys.iter().copied().filter(|&k| k >= mid_key).collect();
+            leaf.locked_keys.retain(|&k| k < mid_key);
+            if leaf.locked_keys.is_empty() {
+                leaf.view.lock_tx = 0;
+            }
             let right = LeafView {
                 low: mid_key,
-                high: leaf.high,
+                high: leaf.view.high,
                 version: 1,
-                lock_tx: 0,
+                lock_tx: if right_locked.is_empty() { 0 } else { lock_tx },
                 entries: right_entries,
             };
-            leaf.high = mid_key;
-            leaf.version += 1;
-            (mid_key, right)
+            leaf.view.high = mid_key;
+            leaf.view.version += 1;
+            (mid_key, right, right_locked)
         };
         let new_leaf = self.leaves.len() as u32;
-        self.leaves.push(Leaf { view: right_view, locked_keys: Vec::new() });
+        self.leaves.push(Leaf { view: right_view, locked_keys: right_locked });
         self.dirty.push(new_leaf);
         self.insert_sep(mid_key, NodeId::Leaf(l), NodeId::Leaf(new_leaf));
     }
@@ -560,6 +586,33 @@ impl RemoteBTree {
             self.leaves.iter().flat_map(|l| l.view.entries.iter().copied()).collect();
         out.sort_by_key(|&(k, _)| k);
         out
+    }
+
+    /// Range scan (owner side): every `(key, value)` pair with
+    /// `low <= key <= high`, ascending. One descent finds the first
+    /// covering leaf; the rest of the scan hops the **fence chain** —
+    /// each leaf's high fence is the next leaf's low fence — exactly the
+    /// traversal a client performs remotely with one-sided leaf reads
+    /// ([`BTreeRouteResolver`] routes, `LiveClient::lookup_range`
+    /// drives). `u64::MAX` terminates the chain.
+    pub fn scan(&self, low: u64, high: u64) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        if high < low {
+            return out;
+        }
+        let mut l = self.descend(low);
+        loop {
+            let view = &self.leaves[l as usize].view;
+            for &(k, v) in &view.entries {
+                if k >= low && k <= high {
+                    out.push((k, v));
+                }
+            }
+            if view.high == u64::MAX || view.high > high {
+                return out;
+            }
+            l = self.descend(view.high);
+        }
     }
 
     /// The routing table a client would cache: (low fence -> leaf addr)
@@ -1103,18 +1156,98 @@ mod tests {
             t.insert(k, k);
         }
         assert!(matches!(t.lock_read(5, 77), RpcResult::Value { .. }));
-        // Membership frozen: inserts (even the holder's own) and foreign
-        // deletes are refused, so no split can relocate a locked key.
+        // Membership frozen for foreigners: non-tx and foreign-tx inserts
+        // and deletes are refused, so no concurrent split can relocate a
+        // locked key.
         assert_eq!(t.try_insert(500, 500), RpcResult::LockConflict);
+        assert_eq!(t.try_insert_tx(500, 500, 99), RpcResult::LockConflict);
         assert_eq!(t.try_delete(4, 0), RpcResult::LockConflict);
         assert_eq!(t.try_delete(4, 99), RpcResult::LockConflict);
-        // The holder itself may delete within its lock.
+        // The holder itself may delete — and insert — within its lock.
         assert_eq!(t.try_delete(4, 77), RpcResult::Ok);
         assert_eq!(t.get(4), None);
+        assert_eq!(t.try_insert_tx(600, 600, 77), RpcResult::Ok);
+        assert_eq!(t.get(600), Some(600));
         assert_eq!(t.update_unlock(5, 77, 50), RpcResult::Ok);
         // Unlocked again: plain inserts and deletes work.
         assert_eq!(t.try_insert(500, 500), RpcResult::Ok);
         assert_eq!(t.try_delete(500, 0), RpcResult::Ok);
+    }
+
+    #[test]
+    fn holder_insert_may_split_its_own_locked_leaf() {
+        // PR 10 regression: a transaction that locked keys on a leaf and
+        // then inserts enough of its own keys to overflow it used to be
+        // refused (`LockConflict` even for the holder), wedging the tx
+        // class. Now the holder's insert splits the leaf, the lock word
+        // and per-key holds follow their keys across the fence, and the
+        // commit volley still releases every hold.
+        let mut t = mk();
+        for k in (1..=LEAF_CAP as u64).map(|i| i * 10) {
+            t.insert(k, k);
+        }
+        assert_eq!(t.leaf_count(), 1, "test wants one full leaf");
+        // Lock two keys that will land on OPPOSITE sides of the split.
+        assert!(matches!(t.lock_read(10, 7), RpcResult::Value { .. }));
+        assert!(matches!(t.lock_read(160, 7), RpcResult::Value { .. }));
+        // The holder's own insert overflows the leaf and splits it.
+        assert_eq!(t.try_insert_tx(5, 5, 7), RpcResult::Ok);
+        assert!(t.leaf_count() > 1, "insert must have split the held leaf");
+        // Both halves kept the holder's lock word (each carries a hold).
+        let left = t.leaf_view(t.leaf_addr(10)).unwrap();
+        let right = t.leaf_view(t.leaf_addr(160)).unwrap();
+        assert_ne!(
+            t.leaf_addr(10),
+            t.leaf_addr(160),
+            "locked keys must straddle the split for this test to bite"
+        );
+        assert_eq!(left.lock_tx, 7, "left half kept the hold for key 10");
+        assert_eq!(right.lock_tx, 7, "right half kept the hold for key 160");
+        // Still locked against foreigners on both halves.
+        assert_eq!(t.lock_read(10, 8), RpcResult::LockConflict);
+        assert_eq!(t.lock_read(160, 8), RpcResult::LockConflict);
+        // The holder's commit volley finds and releases every hold.
+        assert_eq!(t.update_unlock(10, 7, 11), RpcResult::Ok);
+        assert_eq!(t.update_unlock(160, 7, 161), RpcResult::Ok);
+        assert_eq!(t.leaf_view(t.leaf_addr(10)).unwrap().lock_tx, 0);
+        assert_eq!(t.leaf_view(t.leaf_addr(160)).unwrap().lock_tx, 0);
+        assert_eq!((t.get(10), t.get(160), t.get(5)), (Some(11), Some(161), Some(5)));
+        // A split whose holds all land on one side unlocks the other.
+        let mut t2 = mk();
+        for k in (1..=LEAF_CAP as u64).map(|i| i * 10) {
+            t2.insert(k, k);
+        }
+        assert!(matches!(t2.lock_read(10, 9), RpcResult::Value { .. }));
+        assert_eq!(t2.try_insert_tx(5, 5, 9), RpcResult::Ok);
+        assert_eq!(t2.leaf_view(t2.leaf_addr(10)).unwrap().lock_tx, 9);
+        assert_eq!(
+            t2.leaf_view(t2.leaf_addr(160)).unwrap().lock_tx,
+            0,
+            "the hold-free half must not stay locked"
+        );
+        assert_eq!(t2.try_insert(165, 165), RpcResult::Ok, "unlocked half serves foreign inserts");
+    }
+
+    #[test]
+    fn scan_walks_the_fence_chain() {
+        let mut t = mk();
+        for k in (1..=500u64).rev() {
+            t.insert(k, k * 2);
+        }
+        assert!(t.leaf_count() > 4, "scan must cross several leaves");
+        // Inclusive range across many leaves, equal to the sorted
+        // point-lookup set.
+        let got = t.scan(37, 411);
+        let want: Vec<(u64, u64)> = (37..=411).map(|k| (k, k * 2)).collect();
+        assert_eq!(got, want);
+        // Edges: single key, empty range, inverted range, open tail.
+        assert_eq!(t.scan(42, 42), vec![(42, 84)]);
+        assert_eq!(t.scan(501, 900), vec![]);
+        assert_eq!(t.scan(9, 3), vec![]);
+        assert_eq!(t.scan(498, u64::MAX).len(), 3);
+        assert_eq!(t.scan(0, u64::MAX).len(), 500, "full scan sees every key");
+        // The scan result is exactly items() when unbounded.
+        assert_eq!(t.scan(0, u64::MAX), t.items());
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //!
 //! * [`ObjectKind`] / [`ObjectConfig`] — the per-object schema entry:
 //!   a MICA table ([`MicaConfig`]), a client-cached B-link tree
-//!   ([`BTreeConfig`], paper §5.5), or a FaRM-style hopscotch table
-//!   ([`HopscotchConfig`], paper §6.1). Object `o` is `ObjectId(o)` (ids
-//!   are dense so servers and clients index backends by id, no hashing).
+//!   ([`BTreeConfig`], paper §5.5), a FaRM-style hopscotch table
+//!   ([`HopscotchConfig`], paper §6.1), or a FIFO ring queue
+//!   ([`crate::ds::queue::QueueConfig`], paper §5.5). Object `o` is
+//!   `ObjectId(o)` (ids are dense so servers and clients index backends
+//!   by id, no hashing).
 //! * [`Catalog`] — one node's (or one server shard's) storage: an
 //!   independent [`Backend`] per object plus the shared chain allocator
 //!   and region registry, with the owner-side `rpc_handler` dispatched
@@ -31,16 +33,17 @@
 //!
 //! Keys are partitioned across nodes by the shared hash owner function
 //! (the same for every object). Within a node, MICA objects shard by
-//! bucket range across every server lane; tree and hopscotch objects are
-//! not range-sliceable the same way, so each lives whole on a single
-//! **home shard** (`object id mod shards`) — per-object shard policy on
-//! top of the same lane routing.
+//! bucket range across every server lane; tree, hopscotch and queue
+//! objects are not range-sliceable the same way, so each lives whole on
+//! a single **home shard** (`object id mod shards`) — per-object shard
+//! policy on top of the same lane routing.
 
 use crate::dataplane::rpc::{encode_chain_items, encode_routing_snapshot};
 use crate::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResponse, RpcResult};
 use crate::ds::btree::{BTreeConfig, RemoteBTree, LEAF_BYTES};
 use crate::ds::hopscotch::{HopscotchConfig, HopscotchTable};
 use crate::ds::mica::{bucket_of, fnv1a64, owner_of, MicaConfig, MicaTable};
+use crate::ds::queue::{encode_queue_reply, QueueConfig, RemoteQueue};
 use crate::mem::{pack_offsets, ContiguousAllocator, MrKey, RegionMode, RegionTable};
 
 /// Packed tables are aligned to this boundary within the shared region
@@ -66,9 +69,17 @@ pub enum ObjectKind {
     /// (leaf version+lock header word; see [`crate::ds::btree`]).
     BTree,
     /// Hopscotch table: one `H * item_size` neighborhood read per lookup
-    /// (the FaRM baseline's coarse read). Read/Insert/Delete only — the
-    /// one kind still outside the transactional opcode set.
+    /// (the FaRM baseline's coarse read). Serves the full transactional
+    /// opcode set at item granularity since PR 10 (slot version+lock
+    /// header word sharing the MICA item-header layout; see
+    /// [`crate::ds::hopscotch`]).
     Hopscotch,
+    /// FIFO ring queue (paper §5.5): header cell + seq-stamped ring
+    /// cells in the packed region, mutated only through `Enqueue`/
+    /// `Dequeue` RPCs; clients cache the `(head, tail)` pointers and
+    /// peek the front with a single one-sided cell read. Outside the
+    /// transactional opcode set — the queue has no per-item OCC state.
+    Queue,
 }
 
 /// Per-object schema entry: kind + geometry.
@@ -80,6 +91,8 @@ pub enum ObjectConfig {
     BTree(BTreeConfig),
     /// A FaRM-style hopscotch table.
     Hopscotch(HopscotchConfig),
+    /// A client-cached FIFO ring queue.
+    Queue(QueueConfig),
 }
 
 impl ObjectConfig {
@@ -89,16 +102,19 @@ impl ObjectConfig {
             ObjectConfig::Mica(_) => ObjectKind::Mica,
             ObjectConfig::BTree(_) => ObjectKind::BTree,
             ObjectConfig::Hopscotch(_) => ObjectKind::Hopscotch,
+            ObjectConfig::Queue(_) => ObjectKind::Queue,
         }
     }
 
-    /// Wire bytes of the object's mirrored array (bucket / leaf / slot
-    /// array — the range [`Placement`] packs into the node data region).
+    /// Wire bytes of the object's mirrored array (bucket / leaf / slot /
+    /// cell array — the range [`Placement`] packs into the node data
+    /// region).
     pub fn table_len(&self) -> u64 {
         match self {
             ObjectConfig::Mica(c) => c.buckets * c.bucket_bytes() as u64,
             ObjectConfig::BTree(c) => c.table_len(),
             ObjectConfig::Hopscotch(c) => c.table_len(),
+            ObjectConfig::Queue(c) => c.table_len(),
         }
     }
 
@@ -118,12 +134,15 @@ impl ObjectConfig {
 
     /// Largest value payload an RPC reply for this object carries (ring
     /// slots must hold it): MICA replies carry the stored value, B-link
-    /// replies the covering leaf image, hopscotch replies no payload.
+    /// replies the covering leaf image, hopscotch replies no payload,
+    /// queue replies the popped element plus the fresh `(head, tail)`
+    /// pointer pair.
     pub fn rpc_value_capacity(&self) -> u32 {
         match self {
             ObjectConfig::Mica(c) => c.value_len,
             ObjectConfig::BTree(_) => LEAF_BYTES,
             ObjectConfig::Hopscotch(_) => 0,
+            ObjectConfig::Queue(_) => 24,
         }
     }
 }
@@ -214,8 +233,10 @@ pub enum Backend {
     BTree(RemoteBTree),
     /// The whole hopscotch table (home shard only).
     Hopscotch(HopscotchTable),
-    /// A tree/hopscotch object homed on a *different* shard of this
-    /// node; requests that reach this shard answer `Unsupported`.
+    /// The whole FIFO ring queue (home shard only).
+    Queue(RemoteQueue),
+    /// A tree/hopscotch/queue object homed on a *different* shard of
+    /// this node; requests that reach this shard answer `Unsupported`.
     Absent,
 }
 
@@ -226,6 +247,7 @@ impl Backend {
             Backend::Mica(_) => "Mica",
             Backend::BTree(_) => "BTree",
             Backend::Hopscotch(_) => "Hopscotch",
+            Backend::Queue(_) => "Queue",
             Backend::Absent => "Absent",
         }
     }
@@ -311,6 +333,11 @@ impl Catalog {
                         let r = t.region;
                         (Backend::Hopscotch(t), r)
                     }
+                    ObjectConfig::Queue(c) if home == shard => {
+                        let q = RemoteQueue::from_config(c, &mut regions, mode);
+                        let r = q.region;
+                        (Backend::Queue(q), r)
+                    }
                     // Homed on another shard: burn the region key (the
                     // registry rejects empty regions, so one placeholder
                     // byte) so chain regions stay >= the object count on
@@ -387,19 +414,37 @@ impl Catalog {
         }
     }
 
+    /// An object's queue; panics for other kinds.
+    pub fn queue(&self, obj: ObjectId) -> &RemoteQueue {
+        match &self.backends[obj.0 as usize] {
+            Backend::Queue(q) => q,
+            other => panic!("object {obj:?} is {}, not a queue", other.kind_name()),
+        }
+    }
+
+    /// An object's queue, mutably.
+    pub fn queue_mut(&mut self, obj: ObjectId) -> &mut RemoteQueue {
+        match &mut self.backends[obj.0 as usize] {
+            Backend::Queue(q) => q,
+            other => panic!("object {obj:?} is {}, not a queue", other.kind_name()),
+        }
+    }
+
     /// Direct insert into an object (population loading), dispatched by
     /// backend kind. B-link trees store the value's first 8 bytes as the
     /// u64 payload (the key itself when no value is given); hopscotch
-    /// stores key + version only. Returns the backend's typed result —
-    /// notably [`RpcResult::Full`] from a hopscotch neighborhood or a
-    /// B-link leaf array at capacity, which population paths must
-    /// propagate rather than drop.
+    /// stores key + version only; queues enqueue the first 8 value bytes
+    /// (the key when no value is given). Returns the backend's typed
+    /// result — notably [`RpcResult::Full`] from a hopscotch
+    /// neighborhood, a B-link leaf array at capacity, or a full ring,
+    /// which population paths must propagate rather than drop.
     pub fn insert(&mut self, obj: ObjectId, key: u64, value: Option<&[u8]>) -> RpcResult {
         let Catalog { backends, alloc, regions } = self;
         match &mut backends[obj.0 as usize] {
             Backend::Mica(t) => t.insert(key, value, alloc, regions),
             Backend::BTree(t) => t.try_insert(key, value_u64(key, value)),
             Backend::Hopscotch(t) => t.insert(key, value),
+            Backend::Queue(q) => q.enqueue(value_u64(key, value)),
             Backend::Absent => RpcResult::Unsupported,
         }
     }
@@ -423,6 +468,7 @@ impl Catalog {
             Backend::Mica(t) => t.install(key, version, value, alloc, regions),
             Backend::BTree(t) => t.try_insert(key, value_u64(key, value)),
             Backend::Hopscotch(t) => t.insert(key, value),
+            Backend::Queue(q) => q.enqueue(value_u64(key, value)),
             Backend::Absent => RpcResult::Unsupported,
         }
     }
@@ -442,6 +488,13 @@ impl Catalog {
                 .map(|(k, v)| (k, 0, Some(v.to_le_bytes().to_vec())))
                 .collect(),
             Backend::Hopscotch(t) => t.items(),
+            // Queue "keys" are the FIFO sequence numbers — re-enqueuing
+            // the values in seq order rebuilds the same queue.
+            Backend::Queue(q) => q
+                .items()
+                .into_iter()
+                .map(|(seq, v)| (seq, 0, Some(v.to_le_bytes().to_vec())))
+                .collect(),
             Backend::Absent => Vec::new(),
         }
     }
@@ -510,7 +563,9 @@ impl Catalog {
                         locked: false,
                     })
                 }
-                RpcOp::RoutingSnapshot => RpcResponse::inline(RpcResult::Unsupported),
+                RpcOp::RoutingSnapshot | RpcOp::Enqueue | RpcOp::Dequeue => {
+                    RpcResponse::inline(RpcResult::Unsupported)
+                }
             },
             Backend::BTree(tree) => {
                 // The full transactional opcode set at leaf granularity
@@ -529,10 +584,14 @@ impl Catalog {
                     RpcOp::Unlock => tree.unlock(req.key, req.tx_id),
                     // A backup tree is never leaf-locked (replica applies
                     // carry no OCC state), so the plain leaf ops apply
-                    // the committed image directly.
-                    RpcOp::Insert | RpcOp::ReplicaUpsert => {
-                        tree.try_insert(req.key, value_u64(req.key, req.value.as_deref()))
-                    }
+                    // the committed image directly. The tx id rides
+                    // along so a commit-phase insert may split a leaf
+                    // its own transaction holds locked.
+                    RpcOp::Insert | RpcOp::ReplicaUpsert => tree.try_insert_tx(
+                        req.key,
+                        value_u64(req.key, req.value.as_deref()),
+                        req.tx_id,
+                    ),
                     RpcOp::Delete | RpcOp::ReplicaDelete => tree.try_delete(req.key, req.tx_id),
                     // One round trip warms a cold client's whole route
                     // cache: every leaf's (low fence, packed offset) pair
@@ -551,29 +610,95 @@ impl Catalog {
                             hops,
                         };
                     }
-                    RpcOp::ChainScan => RpcResult::Unsupported,
+                    RpcOp::ChainScan | RpcOp::Enqueue | RpcOp::Dequeue => {
+                        RpcResult::Unsupported
+                    }
                 };
                 RpcResponse { result, hops }
             }
+            // The full transactional opcode set at item granularity
+            // (PR 10): slot version+lock header word, foreign locks pin
+            // the slot against displacement.
             Backend::Hopscotch(table) => match req.op {
-                RpcOp::Read => match table.find(req.key) {
-                    Some((slot, version)) => RpcResponse::inline(RpcResult::Value {
+                RpcOp::Read => match table.entry(req.key) {
+                    Some((slot, version, locked)) => RpcResponse::inline(RpcResult::Value {
                         version,
-                        addr: crate::mem::RemoteAddr {
-                            region: table.region,
-                            offset: slot * table.item_size() as u64,
-                        },
+                        addr: table.slot_addr(slot),
                         value: None,
-                        locked: false,
+                        locked,
                     }),
                     None => RpcResponse::inline(RpcResult::NotFound),
                 },
+                RpcOp::LockRead => RpcResponse::inline(table.lock_read(req.key, req.tx_id)),
+                RpcOp::UpdateUnlock => RpcResponse::inline(table.update_unlock(
+                    req.key,
+                    req.tx_id,
+                    req.value.as_deref(),
+                )),
+                RpcOp::Unlock => RpcResponse::inline(table.unlock(req.key, req.tx_id)),
                 RpcOp::Insert | RpcOp::ReplicaUpsert => {
                     RpcResponse::inline(table.insert(req.key, req.value.as_deref()))
                 }
                 RpcOp::Delete | RpcOp::ReplicaDelete => {
-                    RpcResponse::inline(table.delete(req.key))
+                    RpcResponse::inline(table.delete(req.key, req.tx_id))
                 }
+                _ => RpcResponse::inline(RpcResult::Unsupported),
+            },
+            // Queue ops (paper §5.5): every reply that costs a round
+            // trip carries the fresh `(head, tail)` pair so the client
+            // re-syncs its cached pointers for free.
+            Backend::Queue(q) => match req.op {
+                // Read = peek: the front element without popping it
+                // (the RPC fallback when the client's cached pointers
+                // went stale; the fast path is a one-sided cell read).
+                RpcOp::Read => match q.peek() {
+                    Some(v) => {
+                        let (head, tail) = q.pointers();
+                        RpcResponse::inline(RpcResult::Value {
+                            version: 0,
+                            addr: q.cell_addr(head),
+                            value: Some(encode_queue_reply(Some(v), head, tail)),
+                            locked: false,
+                        })
+                    }
+                    None => RpcResponse::inline(RpcResult::NotFound),
+                },
+                RpcOp::Enqueue => {
+                    let elem = value_u64(req.key, req.value.as_deref());
+                    match q.enqueue(elem) {
+                        RpcResult::Ok => {
+                            let (head, tail) = q.pointers();
+                            RpcResponse::inline(RpcResult::Value {
+                                version: 0,
+                                addr: crate::mem::RemoteAddr { region: q.region, offset: 0 },
+                                value: Some(encode_queue_reply(None, head, tail)),
+                                locked: false,
+                            })
+                        }
+                        other => RpcResponse::inline(other),
+                    }
+                }
+                RpcOp::Dequeue => match q.dequeue() {
+                    Some(v) => {
+                        let (head, tail) = q.pointers();
+                        RpcResponse::inline(RpcResult::Value {
+                            version: 0,
+                            addr: crate::mem::RemoteAddr { region: q.region, offset: 0 },
+                            value: Some(encode_queue_reply(Some(v), head, tail)),
+                            locked: false,
+                        })
+                    }
+                    None => RpcResponse::inline(RpcResult::NotFound),
+                },
+                // Population/recovery loading reuses the enqueue path;
+                // a backup applies a committed pop via ReplicaDelete.
+                RpcOp::Insert | RpcOp::ReplicaUpsert => {
+                    RpcResponse::inline(q.enqueue(value_u64(req.key, req.value.as_deref())))
+                }
+                RpcOp::ReplicaDelete => RpcResponse::inline(match q.dequeue() {
+                    Some(_) => RpcResult::Ok,
+                    None => RpcResult::NotFound,
+                }),
                 _ => RpcResponse::inline(RpcResult::Unsupported),
             },
             Backend::Absent => RpcResponse::inline(RpcResult::Unsupported),
@@ -581,7 +706,8 @@ impl Catalog {
     }
 }
 
-/// A B-link tree value payload: the first 8 value bytes, else the key.
+/// A B-link tree / queue value payload: the first 8 value bytes, else
+/// the key.
 fn value_u64(key: u64, value: Option<&[u8]>) -> u64 {
     match value {
         Some(v) if v.len() >= 8 => u64::from_le_bytes(v[0..8].try_into().expect("8 bytes")),
@@ -719,6 +845,17 @@ impl Placement {
                     item_size: c.item_size,
                     home_shard: o as u32 % shards,
                 },
+                ObjectConfig::Queue(c) => TableGeo {
+                    kind: ObjectKind::Queue,
+                    base,
+                    len,
+                    mask: c.capacity - 1,
+                    local_buckets: c.capacity + 1,
+                    bucket_bytes: c.cell_bytes,
+                    width: 0,
+                    item_size: c.cell_bytes,
+                    home_shard: o as u32 % shards,
+                },
             })
             .collect();
         let replication = cfg.replication.clamp(1, nodes);
@@ -798,13 +935,13 @@ impl Placement {
     }
 
     /// Server shard owning `(obj, key)` on its owner node: the bucket
-    /// range's shard for MICA objects, the object's home shard for tree
-    /// and hopscotch objects.
+    /// range's shard for MICA objects, the object's home shard for tree,
+    /// hopscotch and queue objects.
     pub fn shard_of(&self, obj: ObjectId, key: u64) -> u32 {
         let g = self.geo(obj);
         match g.kind {
             ObjectKind::Mica => (bucket_of(key, g.mask) / g.local_buckets) as u32,
-            ObjectKind::BTree | ObjectKind::Hopscotch => g.home_shard,
+            ObjectKind::BTree | ObjectKind::Hopscotch | ObjectKind::Queue => g.home_shard,
         }
     }
 
@@ -838,6 +975,12 @@ impl Placement {
                 offset: g.base + (fnv1a64(key) & g.mask) * g.bucket_bytes as u64,
             },
             ObjectKind::BTree => {
+                PlacementRef { node, shard: g.home_shard, offset: g.base }
+            }
+            // Queue: the header cell (head/tail pointers) — which ring
+            // cell to read one-sidedly is client-cache state, not
+            // arithmetic (the cached head picks the cell).
+            ObjectKind::Queue => {
                 PlacementRef { node, shard: g.home_shard, offset: g.base }
             }
         }
@@ -874,6 +1017,7 @@ mod tests {
             ObjectConfig::Mica(cfg(64, 2)),
             ObjectConfig::BTree(BTreeConfig { max_leaves: 32 }),
             ObjectConfig::Hopscotch(HopscotchConfig { slots: 128, h: 8, item_size: 128 }),
+            ObjectConfig::Queue(QueueConfig { capacity: 64, cell_bytes: 64 }),
         ])
     }
 
@@ -957,14 +1101,16 @@ mod tests {
     #[test]
     fn heterogeneous_placement_routes_by_kind() {
         let place = Placement::new(&hetero(), 3, 4);
-        let (mica, tree, hop) = (ObjectId(0), ObjectId(1), ObjectId(2));
+        let (mica, tree, hop, queue) = (ObjectId(0), ObjectId(1), ObjectId(2), ObjectId(3));
         assert_eq!(place.geo(mica).kind, ObjectKind::Mica);
         assert_eq!(place.geo(tree).kind, ObjectKind::BTree);
         assert_eq!(place.geo(hop).kind, ObjectKind::Hopscotch);
+        assert_eq!(place.geo(queue).kind, ObjectKind::Queue);
         for key in 1..=300u64 {
-            // Tree and hopscotch keys go to the object's home shard on the
-            // key's owner node; offsets stay inside the object's range.
-            for obj in [tree, hop] {
+            // Tree, hopscotch and queue keys go to the object's home
+            // shard on the key's owner node; offsets stay inside the
+            // object's range.
+            for obj in [tree, hop, queue] {
                 let r = place.place(obj, key);
                 assert_eq!(r.node, place.node_of(key));
                 assert_eq!(r.shard, place.geo(obj).home_shard);
@@ -987,7 +1133,7 @@ mod tests {
         let cat = hetero();
         let place = Placement::new(&cat, 2, 8);
         let mut prev_end = 0u64;
-        for o in 0..3u32 {
+        for o in 0..4u32 {
             let g = place.geo(ObjectId(o));
             assert_eq!(g.base % TABLE_ALIGN, 0);
             assert!(g.base >= prev_end, "objects must not overlap");
@@ -1042,25 +1188,26 @@ mod tests {
     #[test]
     fn heterogeneous_serve_rpc_dispatches_and_rejects_by_kind() {
         let mut c = Catalog::new(&hetero(), RegionMode::Virtual(PageSize::Huge2M));
-        let (mica, tree, hop) = (ObjectId(0), ObjectId(1), ObjectId(2));
-        for obj in [mica, tree, hop] {
+        let (mica, tree, hop, queue) = (ObjectId(0), ObjectId(1), ObjectId(2), ObjectId(3));
+        for obj in [mica, tree, hop, queue] {
             assert_eq!(c.insert(obj, 9, Some(&9u64.to_le_bytes())), RpcResult::Ok);
         }
         let req = |obj, op| RpcRequest { obj, key: 9, op, tx_id: 7, value: None };
-        // Reads work on every kind.
-        for obj in [mica, tree, hop] {
+        // Reads work on every kind (the queue's Read is a peek).
+        for obj in [mica, tree, hop, queue] {
             assert!(
                 matches!(c.serve_rpc(&req(obj, RpcOp::Read)).result, RpcResult::Value { .. }),
                 "read must serve on {obj:?}"
             );
         }
-        // The transactional opcodes exist on MICA (item locks) and — since
-        // PR 5 — on B-link trees (leaf locks); hopscotch stays outside.
+        // The transactional opcodes exist on MICA (item locks), B-link
+        // trees (leaf locks, PR 5) and — since PR 10 — hopscotch tables
+        // (slot locks); the queue stays outside the tx opcode set.
         for op in [RpcOp::LockRead, RpcOp::UpdateUnlock, RpcOp::Unlock] {
             assert_eq!(
-                c.serve_rpc(&req(hop, op)).result,
+                c.serve_rpc(&req(queue, op)).result,
                 RpcResult::Unsupported,
-                "{op:?} on {hop:?} must be a typed dispatch error"
+                "{op:?} on {queue:?} must be a typed dispatch error"
             );
         }
         assert!(
@@ -1069,9 +1216,31 @@ mod tests {
         );
         assert_eq!(c.serve_rpc(&req(tree, RpcOp::UpdateUnlock)).result, RpcResult::Ok);
         assert_eq!(c.serve_rpc(&req(tree, RpcOp::Unlock)).result, RpcResult::Ok);
-        // Delete now serves on both non-MICA kinds.
+        assert!(
+            matches!(c.serve_rpc(&req(hop, RpcOp::LockRead)).result, RpcResult::Value { .. }),
+            "slot-OCC lock-read must serve on hopscotch"
+        );
+        // The locked bit is visible through a plain RPC read while held.
+        assert!(matches!(
+            c.serve_rpc(&req(hop, RpcOp::Read)).result,
+            RpcResult::Value { locked: true, .. }
+        ));
+        assert_eq!(c.serve_rpc(&req(hop, RpcOp::UpdateUnlock)).result, RpcResult::Ok);
+        assert_eq!(c.serve_rpc(&req(hop, RpcOp::Unlock)).result, RpcResult::Ok);
+        // Delete serves on every keyed kind.
         assert_eq!(c.serve_rpc(&req(hop, RpcOp::Delete)).result, RpcResult::Ok);
         assert_eq!(c.serve_rpc(&req(tree, RpcOp::Delete)).result, RpcResult::Ok);
+        assert_eq!(c.serve_rpc(&req(queue, RpcOp::Delete)).result, RpcResult::Unsupported);
+        // Queue-only opcodes answer typed errors on the keyed kinds.
+        for obj in [mica, tree] {
+            for op in [RpcOp::Enqueue, RpcOp::Dequeue] {
+                assert_eq!(
+                    c.serve_rpc(&req(obj, op)).result,
+                    RpcResult::Unsupported,
+                    "{op:?} on {obj:?} must be a typed dispatch error"
+                );
+            }
+        }
         // Unknown object id: typed error, no panic.
         assert_eq!(
             c.serve_rpc(&req(ObjectId(777), RpcOp::Read)).result,
@@ -1080,15 +1249,66 @@ mod tests {
     }
 
     #[test]
+    fn queue_rpc_round_trips_elements_and_pointers() {
+        use crate::ds::queue::decode_queue_reply;
+        let mut c = Catalog::new(&hetero(), RegionMode::Virtual(PageSize::Huge2M));
+        let q = ObjectId(3);
+        let req = |op, value: Option<u64>| RpcRequest {
+            obj: q,
+            key: 0,
+            op,
+            tx_id: 0,
+            value: value.map(|v| v.to_le_bytes().to_vec()),
+        };
+        // Enqueue replies carry the fresh pointers.
+        for (i, elem) in [11u64, 22, 33].iter().enumerate() {
+            let resp = c.serve_rpc(&req(RpcOp::Enqueue, Some(*elem)));
+            let RpcResult::Value { value: Some(bytes), .. } = resp.result else {
+                panic!("enqueue must return a pointer payload");
+            };
+            let (popped, head, tail) = decode_queue_reply(&bytes).expect("well-formed");
+            assert_eq!(popped, None);
+            assert_eq!((head, tail), (0, i as u64 + 1));
+        }
+        // Read = peek: front element without popping.
+        let resp = c.serve_rpc(&req(RpcOp::Read, None));
+        let RpcResult::Value { value: Some(bytes), .. } = resp.result else {
+            panic!("peek must return a payload");
+        };
+        assert_eq!(decode_queue_reply(&bytes), Some((Some(11), 0, 3)));
+        // Dequeue pops FIFO and re-syncs the pointers.
+        for (i, want) in [11u64, 22, 33].iter().enumerate() {
+            let resp = c.serve_rpc(&req(RpcOp::Dequeue, None));
+            let RpcResult::Value { value: Some(bytes), .. } = resp.result else {
+                panic!("dequeue must return a payload");
+            };
+            assert_eq!(decode_queue_reply(&bytes), Some((Some(*want), i as u64 + 1, 3)));
+        }
+        // Empty queue: typed NotFound on both peek and dequeue.
+        assert_eq!(c.serve_rpc(&req(RpcOp::Read, None)).result, RpcResult::NotFound);
+        assert_eq!(c.serve_rpc(&req(RpcOp::Dequeue, None)).result, RpcResult::NotFound);
+        // A full ring refuses with the typed Full.
+        for i in 0..64u64 {
+            assert!(matches!(
+                c.serve_rpc(&req(RpcOp::Enqueue, Some(i))).result,
+                RpcResult::Value { .. }
+            ));
+        }
+        assert_eq!(c.serve_rpc(&req(RpcOp::Enqueue, Some(99))).result, RpcResult::Full);
+    }
+
+    #[test]
     fn absent_backends_answer_unsupported_and_keep_region_keys_dense() {
         // 4 shards: the tree (object 1) homes on shard 1, the hopscotch
-        // (object 2) on shard 2. Every other shard holds placeholders.
+        // (object 2) on shard 2, the queue (object 3) on shard 3. Every
+        // other shard holds placeholders.
         let cat = hetero();
         for shard in 0..4u32 {
             let mut c = Catalog::for_shard(&cat, shard, 4, RegionMode::Virtual(PageSize::Huge2M), 4);
-            assert_eq!(c.objects(), 3);
+            assert_eq!(c.objects(), 4);
             let tree_here = shard == 1;
             let hop_here = shard == 2;
+            let queue_here = shard == 3;
             assert_eq!(
                 matches!(c.backend(ObjectId(1)), Backend::BTree(_)),
                 tree_here,
@@ -1099,6 +1319,11 @@ mod tests {
                 hop_here,
                 "shard {shard}"
             );
+            assert_eq!(
+                matches!(c.backend(ObjectId(3)), Backend::Queue(_)),
+                queue_here,
+                "shard {shard}"
+            );
             let read =
                 |obj| RpcRequest { obj, key: 5, op: RpcOp::Read, tx_id: 0, value: None };
             if !tree_here {
@@ -1106,6 +1331,9 @@ mod tests {
             }
             if !hop_here {
                 assert_eq!(c.serve_rpc(&read(ObjectId(2))).result, RpcResult::Unsupported);
+            }
+            if !queue_here {
+                assert_eq!(c.serve_rpc(&read(ObjectId(3))).result, RpcResult::Unsupported);
             }
         }
     }
@@ -1185,7 +1413,7 @@ mod tests {
     fn replicas_chain_from_the_primary() {
         let place = Placement::new(&hetero().with_replication(2), 3, 4);
         assert_eq!(place.replication(), 2);
-        for obj in [ObjectId(0), ObjectId(1), ObjectId(2)] {
+        for obj in [ObjectId(0), ObjectId(1), ObjectId(2), ObjectId(3)] {
             for key in 1..=200u64 {
                 let reps = place.replicas(obj, key);
                 assert_eq!(reps.len(), 2);

@@ -29,11 +29,23 @@
 //! this table, versus Storm's fine-grained single-bucket reads — the
 //! trade-off Fig. 5 quantifies (and the live mixed-backend benchmark now
 //! measures).
+//!
+//! Since PR 10 hopscotch items carry **OCC state** like MICA items do:
+//! each slot holds a lock word ([`HopscotchTable::lock_read`] /
+//! [`update_unlock`](HopscotchTable::update_unlock) /
+//! [`unlock`](HopscotchTable::unlock)), and the slot header's flag bytes
+//! (12..16, the same layout as a MICA item header) publish the lock bit
+//! so a 16-byte one-sided read of the canonical slot answers commit-phase
+//! validation — parseable by [`crate::ds::mica::parse_item_view`]. A
+//! locked slot is pinned: its address sits in some transaction's read
+//! set, so inserts refuse to displace it, deletes and foreign updates
+//! refuse to touch it, and in-place value updates of it conflict — all
+//! with the typed [`RpcResult::LockConflict`].
 
 use crate::mem::{MrKey, RegionTable, RemoteAddr};
 
 use super::api::{RpcResult, Version};
-use super::mica::fnv1a64;
+use super::mica::{fnv1a64, FLAG_LOCKED};
 
 /// Geometry of a catalog-hosted hopscotch object.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,6 +90,7 @@ pub fn slot_value(slot_bytes: &[u8]) -> &[u8] {
 struct Slot {
     key: u64, // 0 = empty
     version: Version,
+    lock_tx: u64, // 0 = unlocked
     /// Value payload (capped at `item_size - SLOT_HEADER` wire bytes).
     value: Option<Box<[u8]>>,
 }
@@ -101,22 +114,29 @@ pub struct HopscotchTable {
 pub struct NeighborhoodView {
     /// (key, version) for the H slots starting at the home bucket.
     pub slots: Vec<(u64, Version)>,
+    /// Per-slot lock bits (parallel to `slots`), from the flag bytes of
+    /// each slot header — OCC lookups report them so a read of a locked
+    /// item aborts validation exactly like a MICA bucket read would.
+    pub locked: Vec<bool>,
 }
 
 /// Parse the contiguous bytes of a neighborhood read into per-slot
-/// (key, version) pairs: each `item_size` chunk carries key(8) +
-/// version(4) at its head (the rest is value payload / padding).
+/// (key, version) pairs plus lock bits: each `item_size` chunk carries
+/// key(8) + version(4) + flags(4) at its head (the rest is value
+/// payload / padding).
 pub fn parse_neighborhood_view(bytes: &[u8], item_size: u32) -> NeighborhoodView {
-    let slots = bytes
-        .chunks_exact(item_size as usize)
-        .map(|c| {
-            (
-                u64::from_le_bytes(c[0..8].try_into().expect("8-byte key")),
-                u32::from_le_bytes(c[8..12].try_into().expect("4-byte version")),
-            )
-        })
-        .collect();
-    NeighborhoodView { slots }
+    let mut slots = Vec::new();
+    let mut locked = Vec::new();
+    for c in bytes.chunks_exact(item_size as usize) {
+        slots.push((
+            u64::from_le_bytes(c[0..8].try_into().expect("8-byte key")),
+            u32::from_le_bytes(c[8..12].try_into().expect("4-byte version")),
+        ));
+        locked.push(
+            u32::from_le_bytes(c[12..16].try_into().expect("4-byte flags")) & FLAG_LOCKED != 0,
+        );
+    }
+    NeighborhoodView { slots, locked }
 }
 
 impl HopscotchTable {
@@ -206,6 +226,8 @@ impl HopscotchTable {
         let mut out = vec![0u8; self.item_size as usize];
         out[0..8].copy_from_slice(&s.key.to_le_bytes());
         out[8..12].copy_from_slice(&s.version.to_le_bytes());
+        let flags = if s.lock_tx != 0 { FLAG_LOCKED } else { 0 };
+        out[12..16].copy_from_slice(&flags.to_le_bytes());
         if let Some(v) = &s.value {
             let cap = out.len() - SLOT_HEADER as usize;
             let n = v.len().min(cap);
@@ -243,18 +265,36 @@ impl HopscotchTable {
     /// What the one-sided neighborhood read returns.
     pub fn neighborhood_view(&self, key: u64) -> NeighborhoodView {
         let base = self.home(key);
-        let slots = (0..self.h as u64)
-            .map(|off| {
-                let s = &self.slots[self.idx(base, off)];
-                (s.key, s.version)
-            })
-            .collect();
-        NeighborhoodView { slots }
+        let mut slots = Vec::with_capacity(self.h as usize);
+        let mut locked = Vec::with_capacity(self.h as usize);
+        for off in 0..self.h as u64 {
+            let s = &self.slots[self.idx(base, off)];
+            slots.push((s.key, s.version));
+            locked.push(s.lock_tx != 0);
+        }
+        NeighborhoodView { slots, locked }
     }
 
     /// Client-side check of a neighborhood read (FaRM `lookup_end`).
     pub fn find_in_view(view: &NeighborhoodView, key: u64) -> Option<Version> {
         view.slots.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Like [`find_in_view`](Self::find_in_view), but also reports the
+    /// slot's lock bit — the OCC lookup path needs it to flag a read of
+    /// a write-locked item for validation.
+    pub fn find_in_view_entry(view: &NeighborhoodView, key: u64) -> Option<(Version, bool)> {
+        view.slots
+            .iter()
+            .position(|&(k, _)| k == key)
+            .map(|i| (view.slots[i].1, view.locked.get(i).copied().unwrap_or(false)))
+    }
+
+    /// Address of slot `i`'s wire image (clients cache the canonical
+    /// slot address at lookup time and aim their 16-byte validation
+    /// reads here).
+    pub fn slot_addr(&self, i: u64) -> RemoteAddr {
+        RemoteAddr { region: self.region, offset: i * self.item_size as u64 }
     }
 
     /// Insert with an optional value payload (serialized into the slot
@@ -267,10 +307,15 @@ impl HopscotchTable {
         self.dirty.clear();
         let stored: Option<Box<[u8]>> = value.map(|v| v.into());
         let base = self.home(key);
-        // Update in place.
+        // Update in place. A write-locked slot belongs to some
+        // transaction's commit volley: a non-tx overwrite would race the
+        // lock holder, so it conflicts instead.
         for off in 0..self.h as u64 {
             let i = self.idx(base, off);
             if self.slots[i].key == key {
+                if self.slots[i].lock_tx != 0 {
+                    return RpcResult::LockConflict;
+                }
                 self.slots[i].version = self.slots[i].version.wrapping_add(1);
                 self.slots[i].value = stored;
                 self.dirty.push(i as u64);
@@ -307,6 +352,12 @@ impl HopscotchTable {
                 if cand_key == 0 {
                     continue;
                 }
+                // A locked slot is pinned at its address — the lock
+                // holder's validation read will aim exactly there — so
+                // the displacement chain must route around it.
+                if self.slots[cand_idx].lock_tx != 0 {
+                    continue;
+                }
                 let cand_home = self.home(cand_key);
                 // Distance from candidate's home to the free slot (cyclic).
                 let free_abs = (base + free_off) & self.mask;
@@ -334,9 +385,70 @@ impl HopscotchTable {
             self.dirty.push(from_idx as u64);
         }
         let i = self.idx(base, free_off);
-        self.slots[i] = Slot { key, version: 1, value: stored };
+        self.slots[i] = Slot { key, version: 1, lock_tx: 0, value: stored };
         self.dirty.push(i as u64);
         self.count += 1;
+        RpcResult::Ok
+    }
+
+    /// OCC execute phase: read the current version and acquire the slot's
+    /// write lock for `tx_id` (the `LockRead` opcode). Fails with
+    /// `LockConflict` when a *different* transaction holds the lock;
+    /// re-locking by the holder is idempotent.
+    pub fn lock_read(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        assert!(tx_id != 0, "tx_id 0 means unlocked");
+        self.dirty.clear();
+        let (i, _) = match self.find(key) {
+            Some(f) => f,
+            None => return RpcResult::NotFound,
+        };
+        let s = &mut self.slots[i as usize];
+        if s.lock_tx != 0 && s.lock_tx != tx_id {
+            return RpcResult::LockConflict;
+        }
+        s.lock_tx = tx_id;
+        self.dirty.push(i);
+        RpcResult::Value {
+            version: self.slots[i as usize].version,
+            addr: self.slot_addr(i),
+            value: None,
+            locked: false, // the lock is ours
+        }
+    }
+
+    /// OCC commit phase: install the new value, bump the version, release
+    /// the lock (the `UpdateUnlock` opcode). Only the lock holder may
+    /// commit.
+    pub fn update_unlock(&mut self, key: u64, tx_id: u64, value: Option<&[u8]>) -> RpcResult {
+        self.dirty.clear();
+        let (i, _) = match self.find(key) {
+            Some(f) => f,
+            None => return RpcResult::NotFound,
+        };
+        let s = &mut self.slots[i as usize];
+        if s.lock_tx != tx_id {
+            return RpcResult::LockConflict;
+        }
+        s.version = s.version.wrapping_add(1);
+        s.value = value.map(|v| v.into());
+        s.lock_tx = 0;
+        self.dirty.push(i);
+        RpcResult::Ok
+    }
+
+    /// OCC abort path: release `tx_id`'s lock without updating (the
+    /// `Unlock` opcode). Lenient like the MICA unlock — an absent key or
+    /// a lock some other transaction holds is left untouched, `Ok`
+    /// either way, so abort volleys never cascade failures.
+    pub fn unlock(&mut self, key: u64, tx_id: u64) -> RpcResult {
+        self.dirty.clear();
+        if let Some((i, _)) = self.find(key) {
+            let s = &mut self.slots[i as usize];
+            if s.lock_tx == tx_id {
+                s.lock_tx = 0;
+                self.dirty.push(i);
+            }
+        }
         RpcResult::Ok
     }
 
@@ -359,13 +471,26 @@ impl HopscotchTable {
         self.find(key).map(|(_, v)| v)
     }
 
-    /// Delete a key.
-    pub fn delete(&mut self, key: u64) -> RpcResult {
+    /// Server-side find with the lock bit: `(slot, version, locked)` —
+    /// the catalog's RPC read path reports the foreign-lock bit off this
+    /// so an RPC-read item can still answer OCC validation.
+    pub fn entry(&self, key: u64) -> Option<(u64, Version, bool)> {
+        self.find(key).map(|(i, v)| (i, v, self.slots[i as usize].lock_tx != 0))
+    }
+
+    /// Delete a key. A slot locked by a *foreign* transaction is pinned
+    /// (its version word backs that transaction's validation), so the
+    /// delete conflicts; the lock holder itself (`tx_id` matches) may
+    /// delete, which also discharges the lock.
+    pub fn delete(&mut self, key: u64, tx_id: u64) -> RpcResult {
         self.dirty.clear();
         let base = self.home(key);
         for off in 0..self.h as u64 {
             let i = self.idx(base, off);
             if self.slots[i].key == key {
+                if self.slots[i].lock_tx != 0 && self.slots[i].lock_tx != tx_id {
+                    return RpcResult::LockConflict;
+                }
                 self.slots[i] = Slot::default();
                 self.dirty.push(i as u64);
                 self.count -= 1;
@@ -462,9 +587,91 @@ mod tests {
         t.insert(9, None);
         t.insert(9, None);
         assert_eq!(t.get(9), Some(2));
-        assert_eq!(t.delete(9), RpcResult::Ok);
+        assert_eq!(t.delete(9, 0), RpcResult::Ok);
         assert_eq!(t.get(9), None);
-        assert_eq!(t.delete(9), RpcResult::NotFound);
+        assert_eq!(t.delete(9, 0), RpcResult::NotFound);
+    }
+
+    #[test]
+    fn occ_lock_cycle_bumps_version_and_publishes_lock_bit() {
+        let mut t = mk(64, 8);
+        t.insert(9, Some(&b"before"[..]));
+        let (slot, v0) = t.find(9).unwrap();
+        // LockRead returns the version and the canonical slot address.
+        match t.lock_read(9, 77) {
+            RpcResult::Value { version, addr, locked, .. } => {
+                assert_eq!(version, v0);
+                assert_eq!(addr, t.slot_addr(slot));
+                assert!(!locked, "a granted lock is ours, not foreign");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The lock bit reaches the wire image and the neighborhood view.
+        let img = t.slot_image(slot);
+        let iv = crate::ds::mica::parse_item_view(&img[..SLOT_HEADER as usize]).unwrap();
+        assert!(iv.locked, "slot header must publish the lock");
+        assert_eq!(
+            HopscotchTable::find_in_view_entry(&t.neighborhood_view(9), 9),
+            Some((v0, true))
+        );
+        // Foreign lockers, updaters, deleters and displacers conflict.
+        assert_eq!(t.lock_read(9, 88), RpcResult::LockConflict);
+        assert_eq!(t.update_unlock(9, 88, None), RpcResult::LockConflict);
+        assert_eq!(t.delete(9, 88), RpcResult::LockConflict);
+        assert_eq!(t.insert(9, Some(&b"smash"[..])), RpcResult::LockConflict);
+        assert_eq!(t.value_of(9), Some(&b"before"[..]));
+        // Re-lock by the holder is idempotent; commit installs + unlocks.
+        assert!(matches!(t.lock_read(9, 77), RpcResult::Value { .. }));
+        assert_eq!(t.update_unlock(9, 77, Some(&b"after"[..])), RpcResult::Ok);
+        assert_eq!(t.get(9), Some(v0 + 1));
+        assert_eq!(t.value_of(9), Some(&b"after"[..]));
+        let iv = crate::ds::mica::parse_item_view(&t.slot_image(slot)[..16]).unwrap();
+        assert!(!iv.locked, "commit releases the lock on the wire");
+    }
+
+    #[test]
+    fn unlock_is_lenient_and_holder_may_delete() {
+        let mut t = mk(64, 8);
+        t.insert(5, None);
+        assert!(matches!(t.lock_read(5, 3), RpcResult::Value { .. }));
+        // A foreign unlock is a no-op, not an error.
+        assert_eq!(t.unlock(5, 99), RpcResult::Ok);
+        assert_eq!(t.lock_read(5, 4), RpcResult::LockConflict, "still held");
+        // The holder's abort releases it; absent keys unlock cleanly too.
+        assert_eq!(t.unlock(5, 3), RpcResult::Ok);
+        assert_eq!(t.unlock(12345, 3), RpcResult::Ok);
+        assert!(matches!(t.lock_read(5, 4), RpcResult::Value { .. }));
+        assert_eq!(t.delete(5, 4), RpcResult::Ok, "holder may delete its lock");
+        assert_eq!(t.lock_read(5, 4), RpcResult::NotFound);
+    }
+
+    #[test]
+    fn displacement_routes_around_locked_slots() {
+        // Fill a small table, lock every present key, then keep
+        // inserting: no insert may ever move a locked slot (its address
+        // is pinned by the holder's validation read).
+        let mut t = mk(64, 4);
+        let mut present = Vec::new();
+        for k in 1..=400u64 {
+            if t.insert(k, None) == RpcResult::Ok {
+                present.push(k);
+            }
+            if t.occupancy() > 0.6 {
+                break;
+            }
+        }
+        let mut pinned = Vec::new();
+        for &k in &present {
+            let (slot, v) = t.find(k).unwrap();
+            assert!(matches!(t.lock_read(k, 1000 + k), RpcResult::Value { .. }));
+            pinned.push((k, slot, v));
+        }
+        for k in 500..=900u64 {
+            let _ = t.insert(k, None); // Ok or Full, never a moved pin
+        }
+        for (k, slot, v) in pinned {
+            assert_eq!(t.find(k), Some((slot, v)), "locked slot {slot} moved");
+        }
     }
 
     #[test]
@@ -579,7 +786,7 @@ mod tests {
         assert_eq!(t.insert(3, Some(&big[..])), RpcResult::Ok);
         let (slot3, _) = t.find(3).unwrap();
         assert_eq!(t.slot_image(slot3).len() as u32, t.item_size());
-        t.delete(42);
+        t.delete(42, 0);
         assert_eq!(t.value_of(42), None, "deleted key keeps no payload");
     }
 

@@ -21,19 +21,33 @@
 //! [`hopscotch`] — the FaRM-style neighborhood table (one large read
 //! covers the whole neighborhood — both the Lockfree_FaRM baseline and
 //! a first-class catalog object, with value payloads in the slots'
-//! reserved bytes); [`queue`] — cached head/tail pointers.
+//! reserved bytes; since PR 10 each slot carries an OCC version+lock
+//! word, so hopscotch items join the transactional opcode set);
+//! [`queue`] — the paper's §5.5 FIFO ring as a first-class catalog
+//! object: enqueue/dequeue are write-based RPCs, but clients cache the
+//! `(head, tail)` pointer pair (re-synced free on every RPC reply) and
+//! `peek` is a single seq-validated one-sided read of the front cell
+//! with RPC fallback when the cache went stale.
+//!
+//! # The four-kind zoo (PR 10)
 //!
 //! [`catalog`] sits above the individual backends and is
 //! **heterogeneous**: a node hosts *many* objects (paper §4 — TATP's
 //! four tables are four Storm objects) of *any* kind
-//! ([`catalog::ObjectKind`]: `Mica` | `BTree` | `Hopscotch`), all packed
-//! into one registered region per node. The catalog's
+//! ([`catalog::ObjectKind`]: `Mica` | `BTree` | `Hopscotch` | `Queue`),
+//! all packed into one registered region per node. The catalog's
 //! [`catalog::Placement`] map routes `(ObjectId, key)` to
 //! `(node, shard, packed offset)` by backend kind so lookup hints
 //! resolve without extra round trips, and [`catalog::Catalog::serve_rpc`]
 //! dispatches the owner-side handler by object id *and* kind — opcodes a
 //! kind cannot serve answer with the typed [`RpcResult::Unsupported`]
-//! instead of panicking the server loop.
+//! instead of panicking the server loop. The access-pattern matrix is
+//! real in every cell the kinds support: point lookups on all three
+//! lookup backends, range scans on B-link trees
+//! ([`crate::dataplane::live::LiveClient::lookup_range`] hops the fence
+//! chain one-sided), FIFO push/pop/peek on queues, and OCC transactions
+//! over MICA rows, tree leaves, and hopscotch slots alike — queues stay
+//! outside transactions (admission rejects them with a typed error).
 
 pub mod api;
 pub mod btree;
@@ -52,3 +66,4 @@ pub use catalog::{
 };
 pub use hopscotch::{HopscotchConfig, HopscotchTable};
 pub use mica::{BucketView, MicaClient, MicaConfig, MicaTable};
+pub use queue::{QueueClientCache, QueueConfig, RemoteQueue};

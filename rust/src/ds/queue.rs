@@ -1,14 +1,50 @@
 //! Remote FIFO queue (paper §5.5: "for queues the head and tail pointers
-//! may be cached on the client side").
+//! may be cached on the client side") — a **catalog object** since PR 10:
+//! the queue lives in the packed node data region as a fourth
+//! [`crate::ds::catalog::ObjectKind`], served by the `Enqueue`/`Dequeue`
+//! RPC opcodes with its dirty cells mirrored through the shard reactors.
 //!
 //! Layout: a ring of fixed-size cells in one region, plus a header cell
-//! holding (head, tail). A client caches the header; `enqueue`/`dequeue`
-//! are RPCs (they mutate), but `peek` can be a one-sided read using the
-//! cached head — validated by the cell's embedded sequence number, with
-//! RPC fallback when the cached pointer went stale (same one-two-sided
-//! pattern as the hash table).
+//! at offset 0 holding (head, tail). A client caches the header; `enqueue`
+//! and `dequeue` are write-based RPCs (they mutate, and a fenced primary
+//! refuses them like any write-class opcode), but `peek` can be a
+//! one-sided read of the front cell using the cached head — validated by
+//! the cell's embedded sequence number, with RPC fallback when the cached
+//! pointer went stale (the same one-two-sided pattern as the hash table).
+//! Every mutating RPC reply carries the fresh `(head, tail)` pair in its
+//! value payload, so a client's cache re-syncs for free on every
+//! round trip it pays for anyway.
+//!
+//! Cells serialize to fixed `cell_bytes`-byte wire images
+//! ([`RemoteQueue::cell_image`] / [`parse_cell_view`]): seq(8) + value(8)
+//! at the head of each cell, and head(8) + tail(8) in the header cell
+//! ([`RemoteQueue::header_image`] / [`parse_queue_pointers`]) — so the
+//! live catalog can mirror cell `i` at `base + i * cell_bytes`, exactly
+//! like a MICA bucket array.
 
+use crate::ds::api::RpcResult;
 use crate::mem::{MrKey, RegionTable, RemoteAddr};
+
+/// Wire bytes a one-sided peek (or header) read fetches: the cell's
+/// seq(8) + value(8), or the header's head(8) + tail(8).
+pub const QUEUE_CELL_HEADER: u32 = 16;
+
+/// Geometry of a catalog-hosted queue object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueConfig {
+    /// Ring capacity in cells (power of two).
+    pub capacity: u64,
+    /// Bytes per wire cell (>= [`QUEUE_CELL_HEADER`]).
+    pub cell_bytes: u32,
+}
+
+impl QueueConfig {
+    /// Wire bytes of the mirrored ring **including the header cell** at
+    /// offset 0 (cell for ring slot `s` sits at `(1 + s) * cell_bytes`).
+    pub fn table_len(&self) -> u64 {
+        (self.capacity + 1) * self.cell_bytes as u64
+    }
+}
 
 /// A queue cell as returned by a one-sided read.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +64,10 @@ pub struct RemoteQueue {
     /// Region holding header + cells.
     pub region: MrKey,
     cell_bytes: u32,
+    /// Wire-cell indices dirtied by the last mutating op (0 = the header
+    /// cell, `1 + slot` = ring slot `slot`); live mirror journal,
+    /// cleared at the start of every mutation.
+    dirty: Vec<u64>,
 }
 
 /// Client-side cached pointers.
@@ -39,6 +79,14 @@ pub struct QueueClientCache {
     pub tail: u64,
 }
 
+impl QueueClientCache {
+    /// Re-sync from the `(head, tail)` pair an RPC reply carried.
+    pub fn install(&mut self, head: u64, tail: u64) {
+        self.head = head;
+        self.tail = tail;
+    }
+}
+
 /// Outcome of a client peek attempt via one-sided read.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PeekOutcome {
@@ -46,7 +94,7 @@ pub enum PeekOutcome {
     Front(u64),
     /// Cached head is stale or queue state unknown: fall back to RPC.
     NeedRpc,
-    /// Queue empty per the cached view (still worth an RPC to confirm).
+    /// Queue empty — and the cell image agrees with the cached view.
     Empty,
 }
 
@@ -59,6 +107,7 @@ impl RemoteQueue {
         mode: crate::mem::RegionMode,
     ) -> Self {
         assert!(capacity.is_power_of_two());
+        assert!(cell_bytes >= QUEUE_CELL_HEADER);
         let region = regions.register((capacity + 1) * cell_bytes as u64, mode);
         RemoteQueue {
             cells: vec![CellView { seq: 0, value: 0 }; capacity as usize],
@@ -67,7 +116,17 @@ impl RemoteQueue {
             tail: 0,
             region,
             cell_bytes,
+            dirty: vec![0],
         }
+    }
+
+    /// Queue from a catalog object config.
+    pub fn from_config(
+        cfg: &QueueConfig,
+        regions: &mut RegionTable,
+        mode: crate::mem::RegionMode,
+    ) -> Self {
+        Self::new(cfg.capacity, cfg.cell_bytes, regions, mode)
     }
 
     /// Elements queued.
@@ -80,26 +139,62 @@ impl RemoteQueue {
         self.head == self.tail
     }
 
-    /// Enqueue (owner-side; reached via RPC). Returns false when full.
-    pub fn enqueue(&mut self, value: u64) -> bool {
+    /// Ring capacity in cells.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes per wire cell.
+    pub fn cell_bytes(&self) -> u32 {
+        self.cell_bytes
+    }
+
+    /// Drain the wire cells dirtied by the last mutating op (the live
+    /// server mirrors their images into the packed data region; index 0
+    /// is the header cell).
+    pub fn take_dirty(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Enqueue (owner-side; reached via the `Enqueue` RPC). `Full` when
+    /// the ring has no free cell — nothing is mutated in that case.
+    pub fn enqueue(&mut self, value: u64) -> RpcResult {
+        self.dirty.clear();
         if self.len() == self.capacity {
-            return false;
+            return RpcResult::Full;
         }
         let slot = (self.tail % self.capacity) as usize;
         self.cells[slot] = CellView { seq: self.tail + 1, value };
         self.tail += 1;
-        true
+        // Ring cell before header: a live mirror replaying the journal
+        // in order never advertises (via head/tail) a cell whose seq
+        // stamp is not yet visible to one-sided peeks.
+        self.dirty.push(1 + slot as u64);
+        self.dirty.push(0);
+        RpcResult::Ok
     }
 
-    /// Dequeue (owner-side; reached via RPC).
+    /// Dequeue (owner-side; reached via the `Dequeue` RPC). The dequeued
+    /// cell's image is untouched (its seq already proves staleness to
+    /// one-sided peeks — only the header moves).
     pub fn dequeue(&mut self) -> Option<u64> {
+        self.dirty.clear();
         if self.is_empty() {
             return None;
         }
         let slot = (self.head % self.capacity) as usize;
         let v = self.cells[slot].value;
         self.head += 1;
+        self.dirty.push(0);
         Some(v)
+    }
+
+    /// Front element without dequeuing (the owner-side `Read` handler).
+    pub fn peek(&self) -> Option<u64> {
+        if self.is_empty() {
+            return None;
+        }
+        Some(self.cells[(self.head % self.capacity) as usize].value)
     }
 
     /// Current (head, tail) — what an RPC reply or header read reports.
@@ -118,10 +213,51 @@ impl RemoteQueue {
         self.cells[(seq % self.capacity) as usize]
     }
 
+    /// Serialize wire cell `i` (0 = header, `1 + slot` = ring slot) to
+    /// its `cell_bytes`-byte image.
+    pub fn cell_image(&self, i: u64) -> Vec<u8> {
+        if i == 0 {
+            return self.header_image();
+        }
+        let c = &self.cells[(i - 1) as usize];
+        let mut out = vec![0u8; self.cell_bytes as usize];
+        out[0..8].copy_from_slice(&c.seq.to_le_bytes());
+        out[8..16].copy_from_slice(&c.value.to_le_bytes());
+        out
+    }
+
+    /// Serialize the header cell: head(8) + tail(8), zero-padded.
+    pub fn header_image(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.cell_bytes as usize];
+        out[0..8].copy_from_slice(&self.head.to_le_bytes());
+        out[8..16].copy_from_slice(&self.tail.to_le_bytes());
+        out
+    }
+
+    /// Every queued `(seq, element)` pair in FIFO order — what crash
+    /// recovery pulls from a survivor. A rebuilt queue re-enqueues the
+    /// elements in order; the absolute head/tail sequences restart (like
+    /// B-link leaf versions, the pointer values are node-local state),
+    /// which stale client caches detect via the usual seq validation.
+    pub fn items(&self) -> Vec<(u64, u64)> {
+        (self.head..self.tail).map(|seq| (seq, self.cell_view(seq).value)).collect()
+    }
+
     /// Client-side peek validation: does the cell image match the cached
     /// head (seq == head+1 means the element at `head` is still there)?
+    ///
+    /// The cell image is consulted **even when the cache claims
+    /// emptiness**: a cell seq newer than the cached head proves an
+    /// enqueue landed since the cache was taken, so the client must fall
+    /// back to RPC rather than answer `Empty` from a stale view (the
+    /// PR 10 stale-peek fix).
     pub fn validate_peek(cache: &QueueClientCache, cell: CellView) -> PeekOutcome {
         if cache.head == cache.tail {
+            // Cache says empty — but the cell disagrees if it carries a
+            // seq a fresh enqueue (or a wrapped later one) would stamp.
+            if cell.seq > cache.head {
+                return PeekOutcome::NeedRpc;
+            }
             return PeekOutcome::Empty;
         }
         if cell.seq == cache.head + 1 {
@@ -130,6 +266,57 @@ impl RemoteQueue {
             // Overwritten (wrapped) or not yet written: cache is stale.
             PeekOutcome::NeedRpc
         }
+    }
+}
+
+/// Parse a cell wire image (a one-sided peek read). `None` on truncation.
+pub fn parse_cell_view(bytes: &[u8]) -> Option<CellView> {
+    if bytes.len() < QUEUE_CELL_HEADER as usize {
+        return None;
+    }
+    Some(CellView {
+        seq: u64::from_le_bytes(bytes[0..8].try_into().ok()?),
+        value: u64::from_le_bytes(bytes[8..16].try_into().ok()?),
+    })
+}
+
+/// Parse the header cell's `(head, tail)` pair. `None` on truncation.
+pub fn parse_queue_pointers(bytes: &[u8]) -> Option<(u64, u64)> {
+    if bytes.len() < QUEUE_CELL_HEADER as usize {
+        return None;
+    }
+    Some((
+        u64::from_le_bytes(bytes[0..8].try_into().ok()?),
+        u64::from_le_bytes(bytes[8..16].try_into().ok()?),
+    ))
+}
+
+/// Encode an RPC reply payload carrying the queue pointers (enqueue
+/// acks) or an element plus the pointers (dequeue / peek replies).
+pub fn encode_queue_reply(value: Option<u64>, head: u64, tail: u64) -> Vec<u8> {
+    let mut b = Vec::with_capacity(24);
+    if let Some(v) = value {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&head.to_le_bytes());
+    b.extend_from_slice(&tail.to_le_bytes());
+    b
+}
+
+/// Decode a queue RPC reply payload: `(element, head, tail)` for 24-byte
+/// dequeue/peek replies, `(None, head, tail)` for 16-byte enqueue acks.
+pub fn decode_queue_reply(bytes: &[u8]) -> Option<(Option<u64>, u64, u64)> {
+    match bytes.len() {
+        16 => {
+            let (h, t) = parse_queue_pointers(bytes)?;
+            Some((None, h, t))
+        }
+        24 => Some((
+            Some(u64::from_le_bytes(bytes[0..8].try_into().ok()?)),
+            u64::from_le_bytes(bytes[8..16].try_into().ok()?),
+            u64::from_le_bytes(bytes[16..24].try_into().ok()?),
+        )),
+        _ => None,
     }
 }
 
@@ -147,11 +334,13 @@ mod tests {
     fn fifo_order() {
         let mut q = mk(8);
         for v in 1..=5u64 {
-            assert!(q.enqueue(v));
+            assert_eq!(q.enqueue(v), RpcResult::Ok);
         }
         for v in 1..=5u64 {
+            assert_eq!(q.peek(), Some(v));
             assert_eq!(q.dequeue(), Some(v));
         }
+        assert_eq!(q.peek(), None);
         assert_eq!(q.dequeue(), None);
     }
 
@@ -159,11 +348,11 @@ mod tests {
     fn full_queue_rejects() {
         let mut q = mk(4);
         for v in 0..4 {
-            assert!(q.enqueue(v));
+            assert_eq!(q.enqueue(v), RpcResult::Ok);
         }
-        assert!(!q.enqueue(99));
+        assert_eq!(q.enqueue(99), RpcResult::Full);
         q.dequeue();
-        assert!(q.enqueue(99));
+        assert_eq!(q.enqueue(99), RpcResult::Ok);
     }
 
     #[test]
@@ -202,15 +391,87 @@ mod tests {
     }
 
     #[test]
+    fn stale_empty_cache_falls_back_to_rpc() {
+        // Regression (PR 10): a client holding an empty view must consult
+        // the cell image — a seq of head+1 proves an enqueue landed, so
+        // the peek needs the RPC fallback, not a phantom `Empty`.
+        let mut q = mk(4);
+        let cache = QueueClientCache { head: 0, tail: 0 }; // taken while empty
+        assert_eq!(q.enqueue(77), RpcResult::Ok); // another client enqueues
+        let cell = q.cell_view(cache.head);
+        assert_eq!(cell.seq, cache.head + 1, "the cell contradicts cached emptiness");
+        assert_eq!(RemoteQueue::validate_peek(&cache, cell), PeekOutcome::NeedRpc);
+        // Same after the ring wraps past the stale empty view.
+        let mut q = mk(4);
+        let cache = QueueClientCache { head: 4, tail: 4 };
+        for v in 0..8u64 {
+            q.enqueue(v);
+            q.dequeue();
+        }
+        assert_eq!(q.enqueue(9), RpcResult::Ok);
+        assert_eq!(
+            RemoteQueue::validate_peek(&cache, q.cell_view(cache.head)),
+            PeekOutcome::NeedRpc,
+            "wrapped seq must also contradict cached emptiness"
+        );
+        // A genuinely empty queue still answers Empty (seq 0 cell).
+        let q2 = mk(4);
+        let cache = QueueClientCache { head: 0, tail: 0 };
+        assert_eq!(RemoteQueue::validate_peek(&cache, q2.cell_view(0)), PeekOutcome::Empty);
+    }
+
+    #[test]
     fn wraparound_preserves_fifo() {
         let mut q = mk(4);
         for round in 0..10u64 {
             for i in 0..3 {
-                assert!(q.enqueue(round * 10 + i));
+                assert_eq!(q.enqueue(round * 10 + i), RpcResult::Ok);
             }
             for i in 0..3 {
                 assert_eq!(q.dequeue(), Some(round * 10 + i));
             }
         }
+    }
+
+    #[test]
+    fn cell_images_round_trip_and_dirty_journal_covers_mutations() {
+        let mut q = mk(8);
+        assert_eq!(q.take_dirty(), vec![0], "construction dirties the header");
+        assert_eq!(q.enqueue(42), RpcResult::Ok);
+        let d = q.take_dirty();
+        assert!(d.contains(&0), "enqueue moves the header");
+        assert!(d.contains(&1), "enqueue writes ring slot 0 (wire cell 1)");
+        // The header image carries the pointers; the cell image the seq.
+        assert_eq!(parse_queue_pointers(&q.header_image()), Some((0, 1)));
+        let cell = parse_cell_view(&q.cell_image(1)).unwrap();
+        assert_eq!(cell, CellView { seq: 1, value: 42 });
+        assert_eq!(q.dequeue(), Some(42));
+        assert_eq!(q.take_dirty(), vec![0], "dequeue only moves the header");
+        assert_eq!(parse_queue_pointers(&q.header_image()), Some((1, 1)));
+        // Truncated images are rejected.
+        assert_eq!(parse_cell_view(&[1, 2, 3]), None);
+        assert_eq!(parse_queue_pointers(&[1, 2, 3]), None);
+    }
+
+    #[test]
+    fn items_snapshot_queued_elements_in_order() {
+        let mut q = mk(8);
+        for v in [5u64, 6, 7] {
+            q.enqueue(v);
+        }
+        q.dequeue();
+        assert_eq!(q.items(), vec![(1, 6), (2, 7)]);
+        let cfg = QueueConfig { capacity: 8, cell_bytes: 64 };
+        assert_eq!(cfg.table_len(), 9 * 64);
+    }
+
+    #[test]
+    fn reply_payload_codec_round_trips() {
+        assert_eq!(decode_queue_reply(&encode_queue_reply(None, 3, 9)), Some((None, 3, 9)));
+        assert_eq!(
+            decode_queue_reply(&encode_queue_reply(Some(42), 3, 9)),
+            Some((Some(42), 3, 9))
+        );
+        assert_eq!(decode_queue_reply(&[0u8; 7]), None, "ragged payload rejected");
     }
 }

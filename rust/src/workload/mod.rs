@@ -10,11 +10,17 @@
 //!   types over three catalog objects with a hot-account skew; much
 //!   write-heavier than TATP, stressing the lock/commit volleys and the
 //!   abort path.
+//! * [`ycsb`] — YCSB Workload E: 95% short range scans / 5% inserts,
+//!   the scan-shaped stress for the B-link fence-chain walk
+//!   (`LiveClient::lookup_range`), with inserts splitting leaves under
+//!   the racing scanners.
 
 pub mod kv;
 pub mod smallbank;
 pub mod tatp;
+pub mod ycsb;
 
 pub use kv::KvWorkload;
 pub use smallbank::{SmallBankKind, SmallBankPopulation, SmallBankTx, SmallBankWorkload};
 pub use tatp::{TatpKind, TatpPopulation, TatpTx, TatpWorkload};
+pub use ycsb::{YcsbEWorkload, YcsbOp};

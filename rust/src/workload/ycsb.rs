@@ -1,0 +1,160 @@
+//! YCSB-style scan workload (Workload E of Cooper et al., SoCC '10).
+//!
+//! Workload E is the scan-shaped member of the YCSB core suite: 95%
+//! short range scans / 5% inserts of fresh records. It is the natural
+//! stress for the B-link fence-chain scan path (PR 10) — every scan
+//! walks one-sided next-leaf hops, and the insert trickle keeps leaves
+//! splitting underneath the walkers, exercising the fence-validated
+//! repair path rather than a frozen tree.
+//!
+//! Scan start keys are sampled uniformly (or Zipfian-skewed for
+//! contention studies) over the loaded keyspace; scan lengths are
+//! uniform in `1..=max_scan_len` per the YCSB default. Insert keys grow
+//! monotonically past the loaded keyspace, strided by client id so
+//! concurrent clients never collide.
+
+use crate::sim::{Pcg64, Zipf};
+
+/// One YCSB-E operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YcsbOp {
+    /// Range scan of `len` keys starting at `low` (inclusive); the
+    /// matching `lookup_range` bound is [`YcsbOp::scan_bounds`].
+    Scan { low: u64, len: u64 },
+    /// Insert a fresh record (key beyond the loaded keyspace).
+    Insert { key: u64 },
+}
+
+impl YcsbOp {
+    /// Inclusive `(low, high)` bounds a `Scan` op covers.
+    pub fn scan_bounds(low: u64, len: u64) -> (u64, u64) {
+        (low, low + len.max(1) - 1)
+    }
+}
+
+/// Workload-E sampler state (one per client thread).
+#[derive(Clone, Debug)]
+pub struct YcsbEWorkload {
+    /// Keys loaded before the run (scan starts sample `1..=total_keys`).
+    pub total_keys: u64,
+    /// Scan lengths are uniform in `1..=max_scan_len` (YCSB default).
+    pub max_scan_len: u64,
+    /// Fraction of operations that are inserts (YCSB-E: 0.05).
+    pub insert_fraction: f64,
+    /// Next fresh insert key for this client.
+    next_insert: u64,
+    /// Insert-key stride (number of concurrent clients).
+    stride: u64,
+    /// Optional Zipfian skew on scan start keys (None = uniform).
+    zipf: Option<Zipf>,
+}
+
+impl YcsbEWorkload {
+    /// Standard Workload E: uniform scan starts, 95/5 scan/insert mix.
+    pub fn uniform(total_keys: u64, max_scan_len: u64) -> Self {
+        YcsbEWorkload {
+            total_keys,
+            max_scan_len: max_scan_len.max(1),
+            insert_fraction: 0.05,
+            next_insert: total_keys + 1,
+            stride: 1,
+            zipf: None,
+        }
+    }
+
+    /// Zipfian-skewed scan starts (hot-range contention variant).
+    pub fn zipfian(total_keys: u64, max_scan_len: u64, theta: f64) -> Self {
+        YcsbEWorkload {
+            zipf: Some(Zipf::new(total_keys, theta)),
+            ..Self::uniform(total_keys, max_scan_len)
+        }
+    }
+
+    /// Stride this client's insert keys so `clients` concurrent samplers
+    /// produce disjoint fresh keys (client ids `0..clients`).
+    pub fn for_client(mut self, client: u64, clients: u64) -> Self {
+        let clients = clients.max(1);
+        self.next_insert = self.total_keys + 1 + client;
+        self.stride = clients;
+        self
+    }
+
+    /// Sample the next operation.
+    pub fn next_op(&mut self, rng: &mut Pcg64) -> YcsbOp {
+        if rng.gen_bool(self.insert_fraction) {
+            let key = self.next_insert;
+            self.next_insert += self.stride;
+            return YcsbOp::Insert { key };
+        }
+        let low = match &self.zipf {
+            Some(z) => z.sample(rng) + 1,
+            None => rng.gen_range(self.total_keys) + 1,
+        };
+        YcsbOp::Scan { low, len: rng.gen_range(self.max_scan_len) + 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_scan_heavy_and_in_range() {
+        let mut w = YcsbEWorkload::uniform(10_000, 100);
+        let mut rng = Pcg64::seeded(1);
+        let (mut scans, mut inserts) = (0u64, 0u64);
+        for _ in 0..20_000 {
+            match w.next_op(&mut rng) {
+                YcsbOp::Scan { low, len } => {
+                    assert!((1..=10_000).contains(&low), "scan low {low}");
+                    assert!((1..=100).contains(&len), "scan len {len}");
+                    scans += 1;
+                }
+                YcsbOp::Insert { key } => {
+                    assert!(key > 10_000, "insert key {key} inside loaded keyspace");
+                    inserts += 1;
+                }
+            }
+        }
+        // 5% insert fraction: expect roughly 1000 of 20k, generously bounded.
+        assert!(scans > 17_000, "scans {scans}");
+        assert!((400..2_000).contains(&inserts), "inserts {inserts}");
+    }
+
+    #[test]
+    fn client_strides_never_collide() {
+        let mut seen = std::collections::HashSet::new();
+        for client in 0..4u64 {
+            let mut w = YcsbEWorkload::uniform(1_000, 10).for_client(client, 4);
+            w.insert_fraction = 1.0; // force inserts
+            let mut rng = Pcg64::seeded(10 + client);
+            for _ in 0..500 {
+                let YcsbOp::Insert { key } = w.next_op(&mut rng) else { unreachable!() };
+                assert!(seen.insert(key), "duplicate insert key {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_bounds_are_inclusive() {
+        assert_eq!(YcsbOp::scan_bounds(7, 10), (7, 16));
+        assert_eq!(YcsbOp::scan_bounds(7, 1), (7, 7));
+        assert_eq!(YcsbOp::scan_bounds(7, 0), (7, 7));
+    }
+
+    #[test]
+    fn zipf_skews_scan_starts() {
+        let mut w = YcsbEWorkload::zipfian(100_000, 10, 0.99);
+        w.insert_fraction = 0.0;
+        let mut rng = Pcg64::seeded(4);
+        let mut head = 0;
+        for _ in 0..20_000 {
+            if let YcsbOp::Scan { low, .. } = w.next_op(&mut rng) {
+                if low <= 1_000 {
+                    head += 1;
+                }
+            }
+        }
+        assert!(head > 5_000, "zipf head {head}");
+    }
+}

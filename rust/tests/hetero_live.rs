@@ -17,6 +17,7 @@ use storm::ds::btree::BTreeConfig;
 use storm::ds::catalog::{CatalogConfig, ObjectConfig, ObjectKind};
 use storm::ds::hopscotch::HopscotchConfig;
 use storm::ds::mica::MicaConfig;
+use storm::ds::queue::QueueConfig;
 
 const MICA: ObjectId = ObjectId(0);
 const TREE: ObjectId = ObjectId(1);
@@ -234,12 +235,12 @@ fn wrong_opcode_per_kind_is_a_typed_error_per_opcode() {
         c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
     }
     let mut client = c.client(0, None);
-    // Hopscotch is the one kind outside the transactional opcode set
-    // (B-link trees serve it at leaf granularity since PR 5); and the
-    // non-transactional `ds_rpc` path carries lock-owner token 0, which
-    // every kind must refuse for lock opcodes — an UpdateUnlock with
-    // owner 0 would otherwise bypass the lock check (tx_hetero.rs
-    // exercises the real leaf-lock path through the engine).
+    // Every lookup kind serves the OCC opcodes now (MICA item locks,
+    // B-link leaf locks since PR 5, hopscotch slot locks since PR 10) —
+    // but the non-transactional `ds_rpc` path carries lock-owner token
+    // 0, which every kind must refuse for lock opcodes: an UpdateUnlock
+    // with owner 0 would otherwise bypass the lock check (tx_hetero.rs
+    // exercises the real lock paths through the engine).
     let unsupported: &[(ObjectId, RpcOp)] = &[
         (HOP, RpcOp::LockRead),
         (HOP, RpcOp::UpdateUnlock),
@@ -343,8 +344,7 @@ fn garbage_frames_never_panic_the_server() {
 }
 
 /// Transactions in a mixed catalog: MICA items commit exactly as in a
-/// homogeneous catalog; naming a non-transactional backend is rejected
-/// at admission (clean caller error, no locks in flight).
+/// homogeneous catalog, and the other kinds' rows are untouched.
 #[test]
 fn transactions_stay_mica_scoped_in_mixed_catalogs() {
     let c = LiveCluster::start_catalog(2, mixed_catalog());
@@ -366,13 +366,59 @@ fn transactions_stay_mica_scoped_in_mixed_catalogs() {
     c.shutdown();
 }
 
+/// PR 10: hopscotch items join the transactional opcode set at slot
+/// granularity — a hopscotch-only transaction commits live (version
+/// bump visible to one-sided readers, lock bit clear afterwards), and a
+/// cross-kind transaction spans MICA + hopscotch items in one OCC
+/// volley.
 #[test]
-#[should_panic(expected = "transactions require MICA- or BTree-backed objects")]
-fn transactions_on_hopscotch_objects_are_rejected_at_admission() {
-    let c = LiveCluster::start_catalog(1, mixed_catalog());
-    c.load_rows((1..=10u64).map(|k| (HOP, k)), value_of);
+fn transactions_commit_on_hopscotch_objects() {
+    let c = LiveCluster::start_catalog(2, mixed_catalog());
+    for obj in [MICA, TREE, HOP] {
+        c.load_rows((1..=50u64).map(|k| (obj, k)), value_of);
+    }
     let mut client = c.client(0, None);
-    let _ = client.run_tx(vec![], vec![TxItem::update(HOP, 5)]);
+    let out = client.run_tx(
+        vec![TxItem::read(HOP, 7)],
+        vec![TxItem::update(HOP, 8).with_value(value_of(HOP, 8))],
+    );
+    assert!(matches!(out, TxOutcome::Committed { .. }), "hopscotch tx must commit: {out:?}");
+    let res = client.lookup_batch_obj(HOP, &[8]);
+    assert!(res[0].found);
+    assert_eq!(res[0].version, 2, "commit must bump the slot version");
+    assert!(!res[0].locked, "commit must release the slot lock");
+    // Cross-kind: MICA and hopscotch write-set items in one transaction.
+    let out = client.run_tx(
+        vec![TxItem::read(MICA, 9)],
+        vec![
+            TxItem::update(HOP, 10).with_value(value_of(HOP, 10)),
+            TxItem::update(MICA, 10).with_value(value_of(MICA, 10)),
+        ],
+    );
+    assert!(matches!(out, TxOutcome::Committed { .. }), "cross-kind tx must commit: {out:?}");
+    assert_eq!(client.lookup_batch_obj(HOP, &[10])[0].version, 2);
+    assert_eq!(client.lookup_batch_obj(MICA, &[10])[0].version, 2);
+    c.shutdown();
+}
+
+/// Queues are the one kind left outside the transactional opcode set:
+/// naming one in a tx item set is rejected at admission (clean caller
+/// error, no locks in flight).
+#[test]
+#[should_panic(expected = "transactions require MICA-, BTree- or hopscotch-backed objects")]
+fn transactions_on_queue_objects_are_rejected_at_admission() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(MicaConfig {
+            buckets: 1 << 8,
+            width: 2,
+            value_len: VALUE_LEN,
+            store_values: true,
+        }),
+        ObjectConfig::Queue(QueueConfig { capacity: 16, cell_bytes: 16 }),
+    ]);
+    let c = LiveCluster::start_catalog(1, cat);
+    let mut client = c.client(0, None);
+    let _ = client.run_tx(vec![], vec![TxItem::update(ObjectId(1), 5)]);
 }
 
 /// RPC-only callback stub: every lookup goes through the owner.

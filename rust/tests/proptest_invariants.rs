@@ -127,7 +127,7 @@ fn prop_hopscotch_neighborhood_invariant() {
             } else {
                 let i = rng.gen_index(present.len());
                 let key = present.swap_remove(i);
-                assert_eq!(t.delete(key), RpcResult::Ok, "seed {seed}");
+                assert_eq!(t.delete(key, 0), RpcResult::Ok, "seed {seed}");
             }
             // Invariant: every present key findable in ONE neighborhood read.
             for &k in present.iter().take(16) {

@@ -1,0 +1,152 @@
+//! Live RemoteQueue battery (PR 10): the §5.5 client-cached queue over
+//! real shard reactors.
+//!
+//! Covers FIFO order across interleaved producers on different nodes,
+//! ring-wrap staleness forcing the seq-validated peek off its one-sided
+//! fast path (and the RPC reply re-syncing the cache so the next peek
+//! is a hit again), the stale-empty-cache regression the PR 10
+//! `validate_peek` fix closes, and a fenced primary refusing the
+//! write-class queue opcodes with a typed `PrimaryFenced` while
+//! one-sided peeks keep serving.
+
+use storm::dataplane::live::LiveCluster;
+use storm::ds::api::{ObjectId, RpcResult};
+use storm::ds::catalog::{CatalogConfig, ObjectConfig};
+use storm::ds::mica::{owner_of, MicaConfig};
+use storm::ds::queue::QueueConfig;
+
+const Q: ObjectId = ObjectId(1);
+
+/// One small MICA table (object 0) plus the queue under test.
+fn queue_catalog(capacity: u64) -> CatalogConfig {
+    let mica = MicaConfig { buckets: 1 << 8, width: 2, value_len: 32, store_values: true };
+    CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica),
+        ObjectConfig::Queue(QueueConfig { capacity, cell_bytes: 16 }),
+    ])
+}
+
+/// Two producers on different nodes alternate synchronous enqueues; a
+/// third client drains the queue and must see the exact arrival order.
+/// The consumer's first peek lands on a stale-empty cache (it never
+/// talked to the queue), so it must fall back to one RPC rather than
+/// trust its zeroed pointers.
+#[test]
+fn fifo_holds_across_interleaved_producers() {
+    const PAIRS: u64 = 24;
+    let c = LiveCluster::start_catalog(2, queue_catalog(128));
+    let mut a = c.client(0, None);
+    let mut b = c.client(1, None);
+    for i in 0..PAIRS {
+        assert_eq!(a.queue_push(Q, 1000 + i), RpcResult::Ok, "producer a push {i}");
+        assert_eq!(b.queue_push(Q, 2000 + i), RpcResult::Ok, "producer b push {i}");
+    }
+    let mut consumer = c.client(0, None);
+    // Fresh client: its cache claims empty, the front cell's seq stamp
+    // says otherwise — one RPC fallback, then the true front.
+    assert_eq!(consumer.queue_peek(Q), Ok(Some(1000)), "stale-empty peek must see the front");
+    assert_eq!(consumer.peek_rpc_fallbacks(), 1, "fresh cache must cost exactly one RPC");
+    // Each push above completed before the next began, so the global
+    // arrival order is fully determined: a_i, b_i, a_{i+1}, ...
+    for i in 0..PAIRS {
+        assert_eq!(consumer.queue_pop(Q), Ok(Some(1000 + i)), "pair {i}: producer a out of order");
+        assert_eq!(consumer.queue_pop(Q), Ok(Some(2000 + i)), "pair {i}: producer b out of order");
+    }
+    assert_eq!(consumer.queue_pop(Q), Ok(None), "drained queue must report empty");
+    c.shutdown();
+}
+
+/// Ring wrap invalidates a bystander's cached head: the slot it points
+/// at has been overwritten by a later lap, so the seq check must route
+/// the peek through the RPC fallback — whose reply re-syncs the cache,
+/// making the immediately following peek a one-sided hit again.
+#[test]
+fn wrap_staleness_forces_rpc_fallback_then_resyncs() {
+    let c = LiveCluster::start_catalog(2, queue_catalog(8));
+    let mut a = c.client(0, None);
+    for i in 0..8u64 {
+        assert_eq!(a.queue_push(Q, 100 + i), RpcResult::Ok, "fill push {i}");
+    }
+    assert_eq!(a.queue_push(Q, 999), RpcResult::Full, "ring at capacity must refuse");
+    // a's cache is fresh from its own acks: peeks stay one-sided.
+    assert_eq!(a.queue_peek(Q), Ok(Some(100)));
+    assert_eq!(a.peek_rpc_fallbacks(), 0, "fresh cache must not fall back");
+    // Another client turns the ring past a's cached head: five pops,
+    // five pushes — slot 0 now carries a second-lap element.
+    let mut b = c.client(1, None);
+    for i in 0..5u64 {
+        assert_eq!(b.queue_pop(Q), Ok(Some(100 + i)), "pop {i}");
+        assert_eq!(b.queue_push(Q, 108 + i), RpcResult::Ok, "wrap push {i}");
+    }
+    // a's cached head points at an overwritten slot: seq mismatch, one
+    // RPC fallback, correct front, cache re-synced.
+    assert_eq!(a.queue_peek(Q), Ok(Some(105)), "wrapped peek must see the live front");
+    assert_eq!(a.peek_rpc_fallbacks(), 1, "wrap staleness costs exactly one RPC");
+    assert_eq!(a.queue_peek(Q), Ok(Some(105)), "re-synced peek");
+    assert_eq!(a.peek_rpc_fallbacks(), 1, "re-synced cache must be a one-sided hit");
+    // Drain through the wrap: FIFO across both laps.
+    for want in (105..=107).chain(108..=112) {
+        assert_eq!(a.queue_pop(Q), Ok(Some(want)), "wrap drain");
+    }
+    assert_eq!(a.queue_pop(Q), Ok(None));
+    assert_eq!(a.queue_peek(Q), Ok(None), "fresh empty cache agrees with the cells");
+    assert_eq!(a.peek_rpc_fallbacks(), 1, "post-drain peek must stay one-sided");
+    c.shutdown();
+}
+
+/// The stale-empty regression (PR 10 `validate_peek` fix), both ways:
+/// a fresh cache over a non-empty queue must not report empty, and a
+/// fresh cache over a *drained* queue — whose cells still carry old seq
+/// stamps — must confirm emptiness through the RPC fallback rather
+/// than trust a zeroed cache that merely happens to be right.
+#[test]
+fn stale_empty_cache_never_lies() {
+    let c = LiveCluster::start_catalog(2, queue_catalog(16));
+    let mut a = c.client(0, None);
+    for v in [7u64, 8, 9] {
+        assert_eq!(a.queue_push(Q, v), RpcResult::Ok);
+    }
+    // Fresh cache, non-empty queue: the old code returned Ok(None) here.
+    let mut b = c.client(1, None);
+    assert_eq!(b.queue_peek(Q), Ok(Some(7)), "stale-empty cache must not hide the front");
+    assert_eq!(b.peek_rpc_fallbacks(), 1);
+    for want in [7u64, 8, 9] {
+        assert_eq!(b.queue_pop(Q), Ok(Some(want)));
+    }
+    assert_eq!(b.queue_peek(Q), Ok(None), "fresh drained cache is a fast-path empty");
+    assert_eq!(b.peek_rpc_fallbacks(), 1, "no extra fallback after the pops re-synced");
+    // A brand-new client over the drained queue: its zeroed cache and
+    // the front cell's leftover seq stamp disagree, so emptiness must
+    // be confirmed by RPC, not assumed.
+    let mut fresh = c.client(0, None);
+    assert_eq!(fresh.queue_peek(Q), Ok(None), "drained queue is empty");
+    assert_eq!(fresh.peek_rpc_fallbacks(), 1, "leftover seq stamps must force the RPC check");
+    c.shutdown();
+}
+
+/// Enqueue and dequeue are write-class: a fenced primary refuses both
+/// with a typed `PrimaryFenced` (nothing is applied), while the
+/// one-sided peek fast path keeps serving reads. Unfencing restores
+/// writes with the ring intact.
+#[test]
+fn fenced_primary_refuses_queue_writes() {
+    let c = LiveCluster::start_catalog(2, queue_catalog(16));
+    let owner = owner_of(Q.0 as u64, 2);
+    let mut client = c.client(0, None);
+    assert_eq!(client.queue_push(Q, 41), RpcResult::Ok);
+    assert_eq!(client.queue_push(Q, 42), RpcResult::Ok);
+    c.fence_node(owner);
+    assert_eq!(client.queue_push(Q, 43), RpcResult::PrimaryFenced, "fenced enqueue must refuse");
+    assert_eq!(client.queue_pop(Q), Err(RpcResult::PrimaryFenced), "fenced dequeue must refuse");
+    // Reads survive the fence: the peek is a one-sided read against a
+    // cache still fresh from the pre-fence acks.
+    assert_eq!(client.queue_peek(Q), Ok(Some(41)), "one-sided peek must outlive the fence");
+    assert_eq!(client.peek_rpc_fallbacks(), 0);
+    c.unfence_node(owner);
+    assert_eq!(client.queue_push(Q, 43), RpcResult::Ok, "unfenced enqueue");
+    for want in [41u64, 42, 43] {
+        assert_eq!(client.queue_pop(Q), Ok(Some(want)), "ring intact across the fence");
+    }
+    assert_eq!(client.queue_pop(Q), Ok(None));
+    c.shutdown();
+}

@@ -8,6 +8,13 @@
 //! per-`AbortReason` counters forced through every reason, and the
 //! hopscotch slot-value round trip over the live mirror.
 //!
+//! PR 10 adds the structural-conflict regressions: the lock holder's
+//! *own* insert splitting its write-locked leaf (refused pre-PR 10,
+//! wedging the tx class) and a commit-phase structural `LockConflict`
+//! promoted to a typed post-validation abort instead of riding along
+//! inside `Committed` — both parked step-by-step on the reference
+//! driver where the interleavings are deterministic.
+//!
 //! Since PR 7 every live cluster here runs on the shared-nothing driver
 //! with **≥ 2 pinned shard-reactor threads per node** ([`live`]): mixed
 //! MICA+BTree transactions routinely span shard threads (the tree's
@@ -22,7 +29,7 @@ use storm::cluster::AbortCounts;
 use storm::dataplane::live::LiveCluster;
 use storm::dataplane::local::LocalCluster;
 use storm::dataplane::tx::{
-    stamped_value, AbortReason, TxEngine, TxItem, TxOutcome, TxPost, TxStep,
+    stamped_value, AbortReason, TxEngine, TxItem, TxOp, TxOutcome, TxPost, TxStep,
 };
 use storm::ds::api::{ObjectId, RpcOp, RpcRequest, RpcResult};
 use storm::ds::btree::BTreeConfig;
@@ -286,6 +293,117 @@ fn split_race_aborts_with_validation_moved() {
         vec![TxItem::update(MICA, 5)],
     );
     assert!(matches!(retry, TxOutcome::Committed { .. }), "retry after Moved must commit");
+}
+
+/// Regression (PR 10): a transaction whose *own* structural insert
+/// overflows a leaf it already write-locked must split and commit.
+/// Pre-PR 10 `try_insert_tx` refused even the holder with
+/// `LockConflict`, wedging any transaction that inserts into its own
+/// locked range. Driven post-by-post on the reference driver: the
+/// insert is served while the execute-phase lock is still held, then
+/// the commit volley's `UpdateUnlock` must find — and release — the
+/// hold on whichever half of the split carries its key.
+#[test]
+fn holder_insert_splits_its_own_locked_leaf_and_commits() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(false)),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 64 }),
+    ]);
+    let mut cluster = LocalCluster::new_hetero(1, cat);
+    // Exactly LEAF_CAP (16) keys: one full leaf, so the transaction's
+    // insert of a 17th key cannot land without splitting the leaf its
+    // update already write-locked.
+    cluster.load(TREE, 1..=16u64);
+    cluster.load(MICA, 1..=4);
+    let mut client = cluster.client(false);
+
+    let mut engine = TxEngine::begin(
+        900,
+        vec![],
+        vec![TxItem::insert(TREE, 100), TxItem::update(TREE, 8)],
+    );
+    let lock_posts = posts_of(engine.start(&mut client));
+    assert_eq!(lock_posts.len(), 1, "only the update lock-reads; inserts lock nothing");
+    let commit_posts = posts_of(cluster.serve_tx_post(&mut client, &mut engine, &lock_posts[0]));
+    assert_eq!(commit_posts.len(), 2, "insert + update-unlock commit volley");
+    // Serve the structural insert first, while the leaf is still
+    // write-locked by this very transaction.
+    let insert_pos = commit_posts
+        .iter()
+        .position(|p| matches!(&p.op, TxOp::Rpc { req, .. } if req.op == RpcOp::Insert))
+        .expect("commit volley carries the structural insert");
+    match cluster.serve_tx_post(&mut client, &mut engine, &commit_posts[insert_pos]) {
+        TxStep::Issue(more) => assert!(more.is_empty(), "unexpected follow-ups: {more:?}"),
+        TxStep::Done(o) => panic!("engine finished with the unlock still in flight: {o:?}"),
+    }
+    // Mid-split, pre-unlock: the hold on key 8 followed its key across
+    // the new fence (its half still shows locked) and the inserted key
+    // is already served from the other half.
+    assert!(cluster.run_lookup(&mut client, TREE, 8).locked, "split dropped the holder's lock");
+    assert!(cluster.run_lookup(&mut client, TREE, 100).found, "split lost the inserted key");
+    // The remaining UpdateUnlock finds and releases the hold.
+    let out = match cluster.serve_tx_post(&mut client, &mut engine, &commit_posts[1 - insert_pos]) {
+        TxStep::Done(o) => o,
+        TxStep::Issue(p) => panic!("commit volley must drain, got {p:?}"),
+    };
+    assert!(matches!(out, TxOutcome::Committed { .. }), "holder split must commit: {out:?}");
+    // No key lost and no lock left on either half of the split.
+    for k in (1..=16u64).chain([100]) {
+        let res = cluster.run_lookup(&mut client, TREE, k);
+        assert!(res.found, "key {k} lost in the holder split");
+        assert!(!res.locked, "stale lock on key {k} after the holder's commit");
+    }
+    // The split leaves serve follow-up transactions — nothing wedged.
+    let retry = cluster.run_tx(
+        &mut client,
+        vec![],
+        vec![TxItem::insert(TREE, 101), TxItem::update(TREE, 12)],
+    );
+    assert!(matches!(retry, TxOutcome::Committed { .. }), "split leaf wedged: {retry:?}");
+}
+
+/// Regression (PR 10): a *foreign* structural refusal discovered in the
+/// commit volley — B's insert aimed at a leaf A still holds — aborts
+/// B's whole transaction with a typed, retryable `LockConflict`
+/// instead of surfacing as a per-item result inside `Committed`, and
+/// leaves nothing wedged: B's MICA lock is gone, the refused insert
+/// never lands, A commits untouched, and B's verbatim retry succeeds.
+#[test]
+fn commit_phase_structural_conflict_promotes_to_post_validation_abort() {
+    let cat = CatalogConfig::heterogeneous(vec![
+        ObjectConfig::Mica(mica_cfg(false)),
+        ObjectConfig::BTree(BTreeConfig { max_leaves: 64 }),
+    ]);
+    let mut cluster = LocalCluster::new_hetero(1, cat);
+    cluster.load(TREE, 1..=10u64);
+    cluster.load(MICA, 1..=10);
+    // A write-locks key 5's leaf and parks before its commit volley.
+    let mut a = cluster.client(false);
+    let mut tx_a = TxEngine::begin(910, vec![], vec![TxItem::update(TREE, 5)]);
+    let lock_posts = posts_of(tx_a.start(&mut a));
+    let commit_posts = posts_of(cluster.serve_tx_post(&mut a, &mut tx_a, &lock_posts[0]));
+    // B pairs a MICA update with a structural tree insert aimed at A's
+    // locked leaf (key 11 descends into the same single leaf). The
+    // insert's LockConflict arrives post-validation, in the commit
+    // volley, and must abort the transaction as a whole.
+    let mut b = cluster.client(false);
+    let out =
+        cluster.run_tx(&mut b, vec![], vec![TxItem::update(MICA, 2), TxItem::insert(TREE, 11)]);
+    assert_eq!(out, TxOutcome::Aborted(AbortReason::LockConflict));
+    // Nothing wedged by the abort: the MICA lock is released (whether
+    // its UpdateUnlock drained before or after the refusal) and the
+    // refused insert did not land.
+    assert!(!cluster.run_lookup(&mut b, MICA, 2).locked, "aborted tx leaked its MICA lock");
+    assert!(!cluster.run_lookup(&mut b, TREE, 11).found, "refused insert must not land");
+    // A's parked commit drains cleanly and unlocks the leaf...
+    let out_a = cluster.run_tx_posts(&mut a, &mut tx_a, commit_posts);
+    assert!(matches!(out_a, TxOutcome::Committed { .. }), "holder must commit: {out_a:?}");
+    assert!(!cluster.run_lookup(&mut b, TREE, 5).locked, "A's commit must unlock the leaf");
+    // ...after which B's verbatim retry commits: the abort was retryable.
+    let retry =
+        cluster.run_tx(&mut b, vec![], vec![TxItem::update(MICA, 2), TxItem::insert(TREE, 11)]);
+    assert!(matches!(retry, TxOutcome::Committed { .. }), "retry must commit: {retry:?}");
+    assert!(cluster.run_lookup(&mut b, TREE, 11).found, "retried insert must land");
 }
 
 /// Per-reason abort counters: force every `AbortReason` at least once on

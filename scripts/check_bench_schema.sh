@@ -11,6 +11,11 @@
 #                        generations, all four transport variants, and a
 #                        monotone ≥3-decade conns_per_machine axis within
 #                        each (nic, variant, qp_share) series
+#   zoo_point          — the four-kind cluster (PR 10): point-lookup rates
+#                        for all three lookup backends plus hopscotch OCC
+#                        commits inside transactions
+#   ycsb_e             — per-scan-length YCSB-E rows with latency columns
+#   queue              — §5.5 client-cached queue rates + peek fallbacks
 #
 # Usage: scripts/check_bench_schema.sh [BENCH_live.json]
 set -euo pipefail
@@ -117,6 +122,45 @@ if isinstance(conn, list) and conn:
             f"connection_scaling axis spans < 3 decades for {key}: {axis}",
         )
 
+# zoo_point (PR 10): all three lookup backends present, and hopscotch
+# transactions actually committed (the tx-matrix acceptance row).
+zoo = doc.get("zoo_point", {})
+need(isinstance(zoo, dict) and zoo, "zoo_point must be a non-empty object")
+if isinstance(zoo, dict):
+    for k in ("mica_ops", "btree_ops", "hopscotch_ops"):
+        need(zoo.get(k, 0) > 0, f"zoo_point backend missing or idle: {k}")
+    need("hopscotch_tx_commits" in zoo, "zoo_point missing hopscotch_tx_commits")
+    need(zoo.get("hopscotch_tx_commits", 0) > 0, "no hopscotch transaction committed")
+
+# ycsb_e (PR 10): per-scan-length rows, each with the latency columns.
+ycsb = doc.get("ycsb_e", [])
+need(isinstance(ycsb, list) and ycsb, "ycsb_e must be a non-empty list")
+ycsb_cols = ("scan_len", "scans", "inserts", "ops_per_s", "keys_per_s",
+             "p50_ns", "p99_ns", "max_ns")
+lens = set()
+for row in ycsb if isinstance(ycsb, list) else []:
+    for k in ycsb_cols:
+        need(k in row, f"ycsb_e row missing {k}: {row}")
+    need(row.get("scans", 0) > 0, f"ycsb_e row ran no scans: {row}")
+    if row.get("scans", 0) > 0:
+        need(
+            0 < row.get("p50_ns", 0) <= row.get("p99_ns", 0) <= row.get("max_ns", 0),
+            f"ycsb_e latency columns out of order: {row}",
+        )
+    lens.add(row.get("scan_len"))
+need(len(lens) >= 2, f"ycsb_e needs >= 2 distinct scan lengths, got {sorted(lens)}")
+
+# queue (PR 10): enqueue/dequeue/peek rates plus the fallback counters.
+queue = doc.get("queue", {})
+need(isinstance(queue, dict) and queue, "queue must be a non-empty object")
+if isinstance(queue, dict):
+    for k in ("capacity", "enqueues", "dequeues", "peeks",
+              "enq_per_s", "deq_per_s", "peek_per_s",
+              "peek_rpc_fallbacks", "stale_empty_rpc"):
+        need(k in queue, f"queue row missing {k}")
+    for k in ("enqueues", "dequeues", "peeks"):
+        need(queue.get(k, 0) > 0, f"queue ran no {k}")
+
 if errors:
     print(f"bench schema gate FAILED for {path}:", file=sys.stderr)
     for e in errors:
@@ -125,5 +169,6 @@ if errors:
 
 print(f"bench schema gate: OK ({path}: "
       f"{len(scaling)} scaling rows, {len(latency)} latency rows, "
-      f"{len(sampled)} with samples, {len(conn)} connection_scaling rows)")
+      f"{len(sampled)} with samples, {len(conn)} connection_scaling rows, "
+      f"{len(ycsb)} ycsb_e rows)")
 PY
